@@ -1,0 +1,88 @@
+//! Partition explorer: inspect what Operation Partitioning's static
+//! analysis finds for TPC-W or RUBiS — read/write sets, pairwise
+//! conflicts, the optimized partitioning array and the classification —
+//! and compare the scalar scorer against the AOT Pallas artifact.
+//!
+//! ```sh
+//! cargo run --release --example partition_explorer -- --workload tpcw
+//! ```
+
+use elia::analysis::elim::EliminationTensor;
+use elia::analysis::score::{cost, BatchScorer, ScalarScorer};
+use elia::harness::experiments::Workload;
+use elia::runtime::CostEvaluator;
+use elia::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let workload = match args.get_or("workload", "tpcw") {
+        "rubis" => Workload::Rubis,
+        _ => Workload::Tpcw,
+    };
+    let app = workload.analyzed();
+
+    println!("== {} analysis ==", workload.name());
+    println!("{} transactions, {} tables\n", app.spec.txns.len(), app.spec.schema.ntables());
+
+    println!("-- read/write sets --");
+    for (tpl, rw) in app.spec.txns.iter().zip(&app.rwsets) {
+        println!("  {:<22} {} read entries, {} write entries", tpl.name, rw.reads.len(), rw.writes.len());
+    }
+
+    let tensor = EliminationTensor::build(&app.spec.txns, &app.matrix);
+    println!("\n-- conflict structure --");
+    println!("  {} conflicting transaction pairs", tensor.conflict_pairs());
+    println!("  {} connected components", tensor.components().len());
+
+    println!("\n-- optimized partitioning (Algorithm 1) --");
+    println!("  residual cost: {:.1} (exact search: {})", app.partitioning.cost, app.partitioning.exact);
+    for (t, tpl) in app.spec.txns.iter().enumerate() {
+        let choice = app.partitioning.choice[t]
+            .map(|k| tpl.params[k].clone())
+            .unwrap_or_else(|| "-".into());
+        let routing: Vec<&str> = app.classification.routing_params[t]
+            .iter()
+            .map(|&k| tpl.params[k].as_str())
+            .collect();
+        println!(
+            "  {:<22} {:<12} partition by {:<8} route by {:?}",
+            tpl.name,
+            format!("{:?}", app.class(t)),
+            choice,
+            routing
+        );
+    }
+
+    // Cross-check the scalar scorer against the AOT artifact.
+    println!("\n-- scorer cross-check (scalar vs PJRT/Pallas artifact) --");
+    let assign = app.partitioning.choice.clone();
+    let scalar = cost(&tensor, &assign);
+    println!("  scalar cost(P*) = {scalar:.3}");
+    match CostEvaluator::try_default() {
+        Some(eval) => {
+            let accel = eval.score(&tensor, &[assign.clone()])[0];
+            println!("  artifact cost(P*) = {accel:.3} (platform {})", eval.platform());
+            assert!((scalar - accel).abs() < 1e-3, "scorers disagree!");
+            // Micro-parity on random assignments.
+            let mut rng = elia::util::Rng::new(1);
+            let batch: Vec<Vec<Option<usize>>> = (0..64)
+                .map(|_| {
+                    tensor
+                        .kdims
+                        .iter()
+                        .map(|&k| if k == 0 { None } else { Some(rng.range(0, k)) })
+                        .collect()
+                })
+                .collect();
+            let s = ScalarScorer.score(&tensor, &batch);
+            let a = eval.score(&tensor, &batch);
+            let max_err = s
+                .iter()
+                .zip(&a)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f64, f64::max);
+            println!("  64 random assignments: max |scalar - artifact| = {max_err:.2e}");
+        }
+        None => println!("  artifact not built; run `make artifacts` first"),
+    }
+}

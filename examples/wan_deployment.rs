@@ -1,0 +1,45 @@
+//! WAN deployment study (simulated): reproduce the paper's RQ2 story for
+//! one configuration from your terminal — centralized vs read-only vs
+//! Eliá at N geo-distributed sites, with Table 2 latencies.
+//!
+//! ```sh
+//! cargo run --release --example wan_deployment -- --sites 5 --workload rubis
+//! ```
+
+use elia::harness::experiments::{fig4, table3, ExpScale, Workload};
+use elia::harness::report;
+use elia::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let sites: usize = args.get_parse("sites", 5);
+    let workload = match args.get_or("workload", "tpcw") {
+        "rubis" => Workload::Rubis,
+        _ => Workload::Tpcw,
+    };
+    let scale = if args.has("full") { ExpScale::full() } else { ExpScale::quick() };
+
+    println!("== light-load latency (Table 3 shape), {} ==", workload.name());
+    let rows = table3(workload, &scale);
+    let cen = rows.iter().find(|(l, _)| l == "centralized").map(|(_, v)| *v).unwrap();
+    let data: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(l, ms)| {
+            vec![
+                l.clone(),
+                format!("{ms:.0}ms"),
+                if l == "centralized" { "-".into() } else { format!("{:.1}x", cen / ms) },
+            ]
+        })
+        .collect();
+    println!("{}", report::table(&["config", "latency", "speedup"], &data));
+
+    println!("\n== load curves at {sites} sites (Figure 4 shape) ==");
+    let curves = fig4(workload, sites, &scale);
+    println!("{}", report::curves_table(&curves));
+    for c in &curves {
+        if let Some(p) = c.peak(5000.0) {
+            println!("  {}: sustains {:.0} ops/s", c.label, p.throughput);
+        }
+    }
+}

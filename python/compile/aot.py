@@ -1,0 +1,54 @@
+"""AOT export: lower the L2 graph (with its L1 Pallas kernel) to HLO text.
+
+HLO *text* — not serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out ../artifacts/partition_cost.hlo.txt]
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import example_args, partition_cost_model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_path: str) -> int:
+    lowered = jax.jit(partition_cost_model).lower(*example_args())
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default=os.path.join(
+            os.path.dirname(__file__), "..", "..", "artifacts", "partition_cost.hlo.txt"
+        ),
+    )
+    args = ap.parse_args()
+    n = export(args.out)
+    print(f"wrote {n} chars to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

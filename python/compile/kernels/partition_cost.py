@@ -1,0 +1,92 @@
+"""L1 — the partition-cost Pallas kernel.
+
+The hot spot of Operation Partitioning is scoring batches of candidate
+partitioning arrays against the conflict structure (Algorithm 1's cost
+function, evaluated for every point of the exhaustive search). We recast
+it as a quadratic form so the contraction runs on the MXU:
+
+    C = cand.reshape(B, T*K)                       # one-hot rows
+    W[t*K+k, t'*K+k'] = cw[t,t'] * elim[t,t',k,k'] # "covered weight"
+    q[b]    = C[b] @ W @ C[b]^T                    # eliminated weight
+    cost[b] = sum(cw) - q[b]
+
+The kernel computes ``q`` tiled over the batch dimension: each grid step
+loads a ``[BB, TK]`` candidate block and the full ``[TK, TK]`` W matrix
+into VMEM, performs one ``[BB,TK] @ [TK,TK]`` matmul (MXU) and a
+row-reduction (VPU).
+
+TPU sizing (DESIGN.md §Hardware-Adaptation): at the AOT shapes
+``B=256, T=32, K=8`` → ``TK=256, BB=128``; per-step VMEM =
+C-block 128·256·4 = 128 KiB + W 256·256·4 = 256 KiB + out 0.5 KiB
+≈ 385 KiB, far under the ~16 MiB budget; W stays resident across both
+grid steps. The matmul is 128×256×256 — MXU-shaped (multiples of the
+128×128 systolic tile).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the artifact runs on
+the Rust CPU client. Real-TPU numbers are estimated, not measured.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile. 128 keeps the MXU busy and two buffers under VMEM budget.
+DEFAULT_BLOCK_B = 128
+
+
+def _qform_kernel(c_ref, w_ref, o_ref):
+    """o[b] = sum_j (C @ W)[b, j] * C[b, j] for one batch tile."""
+    c = c_ref[...]  # [BB, TK]
+    w = w_ref[...]  # [TK, TK]
+    cw = jnp.dot(c, w, preferred_element_type=jnp.float32)  # MXU
+    o_ref[...] = jnp.sum(cw * c, axis=-1)  # VPU row-reduce
+
+
+def _quadratic_form(c, w, *, block_b):
+    """q[b] = C[b] @ W @ C[b]^T via a batch-tiled Pallas kernel."""
+    bdim, tk = c.shape
+    assert w.shape == (tk, tk), (c.shape, w.shape)
+    # Pad the batch up to a multiple of the tile.
+    pad = (-bdim) % block_b
+    if pad:
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+    padded_b = c.shape[0]
+    grid = (padded_b // block_b,)
+    q = pl.pallas_call(
+        _qform_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, tk), lambda i: (i, 0)),  # stream C tiles
+            pl.BlockSpec((tk, tk), lambda i: (0, 0)),  # W resident
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded_b,), jnp.float32),
+        interpret=True,  # CPU-PJRT compatible lowering (see module docstring)
+    )(c, w)
+    return q[:bdim]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def partition_cost(cand, cw, elim, *, block_b=DEFAULT_BLOCK_B):
+    """Batched Algorithm-1 cost via the Pallas quadratic-form kernel.
+
+    Args:
+      cand: f32[B, T, K] one-hot candidate partitioning arrays.
+      cw:   f32[T, T] conflict-weight matrix (upper triangle).
+      elim: f32[T, T, K, K] coverage bits.
+      block_b: batch tile size (static).
+
+    Returns:
+      f32[B] costs, identical to ``ref.partition_cost_ref``.
+    """
+    b, t, k = cand.shape
+    tk = t * k
+    c = cand.reshape(b, tk)
+    # W[t*K+k, t'*K+k'] = cw[t,t'] * elim[t,t',k,k']
+    w = (cw[:, :, None, None] * elim).transpose(0, 2, 1, 3).reshape(tk, tk)
+    total = jnp.sum(cw)
+    q = _quadratic_form(c, w, block_b=min(block_b, max(b, 1)))
+    return total - q

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the partition-cost kernel.
+
+This is the CORE correctness signal for L1: ``partition_cost`` (the Pallas
+kernel) must match this einsum formulation bit-for-bit on integer-valued
+weights and to float tolerance otherwise.
+
+Semantics (Algorithm 1, cost function): for a batch of candidate
+operation-partitioning arrays encoded one-hot,
+
+    covered[b,t,t'] = sum_{k,k'} cand[b,t,k] * cand[b,t',k'] * elim[t,t',k,k']
+    cost[b]         = sum_{t,t'} cw[t,t'] * (1 - covered[b,t,t'])
+
+``cw[t,t'] = conflict[t,t'] * (weight(t) + weight(t'))`` is populated only
+on the upper triangle by the Rust exporter, so each unordered conflict is
+counted exactly once.
+"""
+
+import jax.numpy as jnp
+
+
+def partition_cost_ref(cand, cw, elim):
+    """Reference implementation.
+
+    Args:
+      cand: f32[B, T, K] one-hot (rows may be all-zero = "no parameter").
+      cw:   f32[T, T] conflict-weight matrix (upper triangle).
+      elim: f32[T, T, K, K] coverage bits.
+
+    Returns:
+      f32[B] costs.
+    """
+    covered = jnp.einsum("btk,bsl,tskl->bts", cand, cand, elim)
+    return jnp.sum(cw[None, :, :] * (1.0 - covered), axis=(1, 2))

@@ -1,0 +1,48 @@
+"""L2 — the JAX compute graph AOT-compiled for the Rust coordinator.
+
+This paper's "model" is not a neural network: the dense computation the
+coordinator needs at analysis time is batched partition-cost scoring
+(Algorithm 1's optimization phase). The graph wraps the L1 Pallas kernel
+(`kernels.partition_cost`) at fixed padded shapes and is lowered once by
+`aot.py` to HLO text that `rust/src/runtime` loads via PJRT.
+
+Shape contract (must match `rust/src/runtime/mod.rs` constants):
+
+    B = 256   candidate batch
+    T = 32    max transactions (padded)
+    K = 8     max parameters per transaction (padded)
+
+    partition_cost_model : (cand f32[B,T,K], cw f32[T,T], elim f32[T,T,K,K])
+                           -> (cost f32[B],)
+
+Padding rows/planes are all-zero and contribute exactly 0 to the cost, so
+the Rust side can embed any application with T ≤ 32, K ≤ 8.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.partition_cost import partition_cost
+
+# The AOT shape contract. Keep in sync with rust/src/runtime/mod.rs.
+AOT_B = 256
+AOT_T = 32
+AOT_K = 8
+
+
+def partition_cost_model(cand, cw, elim):
+    """The exported computation (1-tuple result, see aot.py)."""
+    assert cand.shape == (AOT_B, AOT_T, AOT_K), cand.shape
+    assert cw.shape == (AOT_T, AOT_T), cw.shape
+    assert elim.shape == (AOT_T, AOT_T, AOT_K, AOT_K), elim.shape
+    return (partition_cost(cand, cw, elim),)
+
+
+def example_args():
+    """ShapeDtypeStructs for lowering."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((AOT_B, AOT_T, AOT_K), jnp.float32),
+        jax.ShapeDtypeStruct((AOT_T, AOT_T), jnp.float32),
+        jax.ShapeDtypeStruct((AOT_T, AOT_T, AOT_K, AOT_K), jnp.float32),
+    )

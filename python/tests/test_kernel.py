@@ -1,0 +1,133 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and random one-hot structures; costs are
+integer-valued when weights are integers, so most comparisons are exact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.partition_cost import partition_cost
+from compile.kernels.ref import partition_cost_ref
+
+
+def make_instance(rng, b, t, k, *, int_weights=True, hole_prob=0.2):
+    """Random (cand, cw, elim) instance with valid structure."""
+    # One-hot candidates with some all-zero rows ("no parameter").
+    cand = np.zeros((b, t, k), np.float32)
+    for bi in range(b):
+        for ti in range(t):
+            if rng.random() > hole_prob:
+                cand[bi, ti, rng.integers(k)] = 1.0
+    # Upper-triangular conflict weights.
+    cw = np.zeros((t, t), np.float32)
+    for i in range(t):
+        for j in range(i, t):
+            if rng.random() < 0.5:
+                cw[i, j] = (
+                    float(rng.integers(1, 10)) if int_weights else float(rng.random() * 10)
+                )
+    elim = (rng.random((t, t, k, k)) < 0.3).astype(np.float32)
+    return jnp.asarray(cand), jnp.asarray(cw), jnp.asarray(elim)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    t=st.integers(1, 8),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+    block=st.sampled_from([2, 8, 128]),
+)
+def test_kernel_matches_ref_random_shapes(b, t, k, seed, block):
+    rng = np.random.default_rng(seed)
+    cand, cw, elim = make_instance(rng, b, t, k)
+    got = partition_cost(cand, cw, elim, block_b=block)
+    want = partition_cost_ref(cand, cw, elim)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_integer_weights_are_exact(seed):
+    rng = np.random.default_rng(seed)
+    cand, cw, elim = make_instance(rng, 16, 6, 3, int_weights=True)
+    got = np.asarray(partition_cost(cand, cw, elim, block_b=8))
+    want = np.asarray(partition_cost_ref(cand, cw, elim))
+    # All values are small integer sums: must match exactly.
+    assert np.array_equal(got, want)
+    assert np.allclose(got, np.round(got))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_float_weights_close(seed):
+    rng = np.random.default_rng(seed)
+    cand, cw, elim = make_instance(rng, 8, 5, 3, int_weights=False)
+    got = partition_cost(cand, cw, elim, block_b=8)
+    want = partition_cost_ref(cand, cw, elim)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_no_conflicts_costs_zero():
+    cand = jnp.zeros((4, 3, 2), jnp.float32)
+    cw = jnp.zeros((3, 3), jnp.float32)
+    elim = jnp.zeros((3, 3, 2, 2), jnp.float32)
+    out = np.asarray(partition_cost(cand, cw, elim))
+    assert np.array_equal(out, np.zeros(4, np.float32))
+
+
+def test_full_elimination_costs_zero():
+    # Everything conflicts but every choice eliminates: cost 0.
+    b, t, k = 5, 4, 2
+    rng = np.random.default_rng(0)
+    cand = np.zeros((b, t, k), np.float32)
+    for bi in range(b):
+        for ti in range(t):
+            cand[bi, ti, rng.integers(k)] = 1.0
+    cw = np.triu(np.ones((t, t), np.float32))
+    elim = np.ones((t, t, k, k), np.float32)
+    out = np.asarray(partition_cost(jnp.asarray(cand), jnp.asarray(cw), jnp.asarray(elim)))
+    np.testing.assert_allclose(out, 0.0, atol=1e-6)
+
+
+def test_no_choice_pays_full_weight():
+    # All-zero candidates: nothing covered, cost = sum(cw).
+    b, t, k = 3, 4, 2
+    cand = jnp.zeros((b, t, k), jnp.float32)
+    cw = jnp.triu(jnp.ones((t, t), jnp.float32) * 2.0)
+    elim = jnp.ones((t, t, k, k), jnp.float32)
+    out = np.asarray(partition_cost(cand, cw, elim))
+    np.testing.assert_allclose(out, float(np.sum(np.triu(np.ones((t, t)) * 2.0))))
+
+
+def test_paper_cart_example():
+    # createCart(sid) / doCart(sid, iid, q): partitioning both on sid
+    # eliminates all three conflicts; doCart on iid leaves the cross pair.
+    t, k = 2, 3
+    cw = np.zeros((t, t), np.float32)
+    cw[0, 0] = 2.0  # create-create, w=1+1
+    cw[0, 1] = 3.0  # create-doCart, w=1+2
+    cw[1, 1] = 4.0  # doCart-doCart, w=2+2
+    elim = np.zeros((t, t, k, k), np.float32)
+    elim[0, 0, 0, 0] = 1.0  # (sid, sid)
+    elim[0, 1, 0, 0] = 1.0  # create.sid vs doCart.sid (param 0)
+    elim[1, 1, 0, 0] = 1.0  # doCart self: sid=sid'
+    elim[1, 1, 1, 1] = 1.0  # doCart self also covered by iid=iid'
+    cand = np.zeros((3, t, k), np.float32)
+    cand[0, 0, 0] = cand[0, 1, 0] = 1.0  # both sid  -> cost 0
+    cand[1, 0, 0] = cand[1, 1, 1] = 1.0  # doCart=iid -> pays 3.0
+    # candidate 2: no params at all     -> pays 9.0
+    out = np.asarray(partition_cost(jnp.asarray(cand), jnp.asarray(cw), jnp.asarray(elim)))
+    np.testing.assert_allclose(out, [0.0, 3.0, 9.0])
+
+
+@pytest.mark.parametrize("block", [1, 3, 64, 128, 256])
+def test_block_size_invariance(block):
+    rng = np.random.default_rng(7)
+    cand, cw, elim = make_instance(rng, 37, 6, 4)
+    base = np.asarray(partition_cost(cand, cw, elim, block_b=128))
+    got = np.asarray(partition_cost(cand, cw, elim, block_b=block))
+    np.testing.assert_allclose(got, base, rtol=1e-6)

@@ -1,0 +1,58 @@
+"""L2 correctness: the AOT-shaped model graph vs the oracle, and the
+padding contract the Rust runtime relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import partition_cost_ref
+from compile.model import AOT_B, AOT_K, AOT_T, example_args, partition_cost_model
+
+
+def embed(cand_small, cw_small, elim_small):
+    """Embed a small instance into the padded AOT shapes."""
+    b, t, k = cand_small.shape
+    cand = np.zeros((AOT_B, AOT_T, AOT_K), np.float32)
+    cand[:b, :t, :k] = cand_small
+    cw = np.zeros((AOT_T, AOT_T), np.float32)
+    cw[:t, :t] = cw_small
+    elim = np.zeros((AOT_T, AOT_T, AOT_K, AOT_K), np.float32)
+    elim[:t, :t, :k, :k] = elim_small
+    return jnp.asarray(cand), jnp.asarray(cw), jnp.asarray(elim)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_model_matches_ref_at_aot_shapes(seed):
+    rng = np.random.default_rng(seed)
+    from tests.test_kernel import make_instance
+
+    small = make_instance(rng, 32, 10, 4)
+    cand, cw, elim = embed(*(np.asarray(x) for x in small))
+    (got,) = partition_cost_model(cand, cw, elim)
+    want = partition_cost_ref(cand, cw, elim)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-5)
+
+
+def test_padding_contributes_zero():
+    # A tiny instance embedded in padding must cost exactly what the
+    # unpadded oracle says.
+    rng = np.random.default_rng(3)
+    from tests.test_kernel import make_instance
+
+    small = make_instance(rng, 8, 3, 2)
+    want_small = np.asarray(partition_cost_ref(*small))
+    cand, cw, elim = embed(*(np.asarray(x) for x in small))
+    (got,) = partition_cost_model(cand, cw, elim)
+    np.testing.assert_allclose(np.asarray(got)[:8], want_small, rtol=1e-6, atol=1e-6)
+    # Padded batch rows (all-zero candidates) each pay the full conflict
+    # weight (nothing covered).
+    np.testing.assert_allclose(np.asarray(got)[8:], float(np.sum(np.asarray(cw))), rtol=1e-6)
+
+
+def test_example_args_match_contract():
+    a, b, c = example_args()
+    assert a.shape == (AOT_B, AOT_T, AOT_K)
+    assert b.shape == (AOT_T, AOT_T)
+    assert c.shape == (AOT_T, AOT_T, AOT_K, AOT_K)
+    assert all(x.dtype == jnp.float32 for x in (a, b, c))

@@ -1,0 +1,136 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. MAP misrouting — cost of clients not knowing the partitioning.
+//! 2. RUBiS co-location — how the runtime local/global split of the
+//!    double-key scheme drives performance (paper §3.1's multi-parameter
+//!    partitioning is only useful when keys actually co-locate).
+//! 3. strict-reads extraction — the sound over-approximation of read
+//!    sets (WHERE columns included) vs the paper's projection-only rule,
+//!    and its effect on classification.
+//! 4. weight-aware partitioning — Algorithm 1's weighted cost vs
+//!    uniform weights (weight(t) = 1).
+
+use elia::analysis::rwsets::ExtractOptions;
+use elia::analysis::partition::PartitionOptions;
+use elia::harness::report;
+use elia::simnet::clients::ClientsConfig;
+use elia::simnet::latency::Topology;
+use elia::util::VTime;
+use elia::workload::analyzed::AnalyzedApp;
+use elia::workload::generator::ServiceModel;
+use elia::workload::spec::AppSpec;
+use elia::workload::{micro, rubis};
+use elia::conveyor::{ConveyorConfig, ConveyorSim};
+
+fn run_micro(misroute: f64) -> (f64, f64) {
+    let app = micro::analyzed();
+    let cfg = ConveyorConfig {
+        service: ServiceModel::fixed(5.0),
+        misroute_prob: misroute,
+        warmup: VTime::from_secs(2),
+        horizon: VTime::from_secs(10),
+        ..Default::default()
+    };
+    let r = ConveyorSim::new(
+        &app,
+        Topology::wan(3),
+        ClientsConfig { n: 128, think_ms: 100.0, seed: 9, ..Default::default() },
+        cfg,
+        Box::new(micro::MicroGenerator::new(&app, 0.8)),
+        |_| {},
+    )
+    .run();
+    (r.throughput(), r.mean_latency_ms())
+}
+
+fn run_rubis_colocate(p: f64) -> (f64, f64, f64) {
+    let app = rubis::analyzed();
+    let mut gen = rubis::RubisGenerator::new(&app, rubis::RubisScale::default());
+    gen.colocate_prob = p;
+    let cfg = ConveyorConfig {
+        warmup: VTime::from_secs(2),
+        horizon: VTime::from_secs(10),
+        ..Default::default()
+    };
+    let r = ConveyorSim::new(
+        &app,
+        Topology::wan(3),
+        ClientsConfig { n: 512, think_ms: 1000.0, seed: 9, ..Default::default() },
+        cfg,
+        Box::new(gen),
+        |_| {},
+    )
+    .run();
+    let global_frac = r.metrics.global_latency.count() as f64
+        / (r.metrics.global_latency.count() + r.metrics.local_latency.count()).max(1) as f64;
+    (r.throughput(), r.mean_latency_ms(), global_frac)
+}
+
+fn main() {
+    println!("=== Ablation 1: MAP redirects (misrouted clients) ===");
+    let rows: Vec<Vec<String>> = [0.0, 0.1, 0.3, 0.5]
+        .iter()
+        .map(|&p| {
+            let (tput, lat) = run_micro(p);
+            vec![format!("{:.0}%", p * 100.0), format!("{tput:.0}"), format!("{lat:.1}")]
+        })
+        .collect();
+    println!("{}", report::table(&["misroute", "ops/s", "mean ms"], &rows));
+
+    println!("=== Ablation 2: RUBiS double-key co-location probability ===");
+    let rows: Vec<Vec<String>> = [0.0, 0.4, 0.8, 1.0]
+        .iter()
+        .map(|&p| {
+            let (tput, lat, gf) = run_rubis_colocate(p);
+            vec![
+                format!("{:.0}%", p * 100.0),
+                format!("{tput:.0}"),
+                format!("{lat:.1}"),
+                format!("{:.1}%", gf * 100.0),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(&["co-located", "ops/s", "mean ms", "runtime global"], &rows)
+    );
+
+    println!("=== Ablation 3: strict-reads extraction vs paper rule ===");
+    for (label, strict) in [("paper (projection only)", false), ("strict (incl. WHERE cols)", true)] {
+        let spec = AppSpec {
+            name: "tpcw".into(),
+            schema: elia::workload::tpcw::full_schema(),
+            txns: elia::workload::tpcw::templates(),
+        };
+        let app = AnalyzedApp::analyze_with(
+            spec,
+            &PartitionOptions::default(),
+            ExtractOptions { strict_reads: strict },
+        );
+        let (l, g, c, lg, _, _) = app.table1_row();
+        println!("  {label:<28} TPC-W classes: L={l} G={g} C={c} L/G={lg}");
+    }
+
+    println!("\n=== Ablation 4: weighted vs uniform Algorithm-1 cost ===");
+    for (label, uniform) in [("frequency weights", false), ("uniform weights", true)] {
+        let mut txns = elia::workload::rubis::templates();
+        if uniform {
+            for t in &mut txns {
+                t.weight = 1.0;
+            }
+        }
+        let spec = AppSpec { name: "rubis".into(), schema: elia::workload::rubis::schema(), txns };
+        let app = AnalyzedApp::analyze(spec);
+        println!(
+            "  {label:<22} residual cost = {:.1}  exact={} (choice: {:?})",
+            app.partitioning.cost,
+            app.partitioning.exact,
+            app.partitioning
+                .choice
+                .iter()
+                .take(6)
+                .map(|c| c.map(|k| k as i64).unwrap_or(-1))
+                .collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Figure 3 — LAN scalability of Eliá vs MySQL-Cluster-style data
+//! partitioning: peak throughput (2000 ms SLA) and latency-at-peak as a
+//! function of server count, for TPC-W (3a) and RUBiS (3b).
+//!
+//! Expected shape (paper §7.1): the data-partitioning baseline stops
+//! improving around 4 servers (TPC-W) while Eliá keeps scaling and peaks
+//! several times higher; the gap is largest on the write-heavy TPC-W mix.
+
+use elia::harness::experiments::{fig3, ExpScale, Workload};
+use elia::harness::report;
+
+fn main() {
+    let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
+    let scale = if quick { ExpScale::quick() } else { ExpScale::full() };
+    let servers: Vec<usize> =
+        if quick { vec![1, 2, 4] } else { vec![1, 2, 4, 6, 8, 10, 12, 14] };
+
+    for workload in [Workload::Tpcw, Workload::Rubis] {
+        let t0 = std::time::Instant::now();
+        println!("\n=== Figure 3 ({}) — LAN peak throughput vs servers ===", workload.name());
+        let rows = fig3(workload, &servers, &scale);
+        let table_rows: Vec<(String, usize, Option<elia::harness::LoadPoint>)> = rows
+            .iter()
+            .map(|(sys, n, curve)| (sys.clone(), *n, curve.peak(2000.0).cloned()))
+            .collect();
+        println!("{}", report::scalability_table(&table_rows, 2000.0));
+
+        // Headline ratios (paper: up to 4.2x throughput, 58.6x latency for
+        // TPC-W; 1.4x / 35.7x for RUBiS).
+        let best = |sys: &str| {
+            rows.iter()
+                .filter(|(s, _, _)| s == sys)
+                .filter_map(|(_, _, c)| c.peak(2000.0))
+                .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+                .cloned()
+        };
+        if let (Some(e), Some(m)) = (best("elia"), best("mysql-cluster")) {
+            println!(
+                "headline: elia peak {:.0} ops/s vs cluster {:.0} ops/s  ({:.1}x tput, {:.1}x latency at peak)",
+                e.throughput,
+                m.throughput,
+                e.throughput / m.throughput,
+                m.mean_latency_ms / e.mean_latency_ms,
+            );
+        }
+        println!("[fig3 {} took {:.1}s]", workload.name(), t0.elapsed().as_secs_f64());
+    }
+}

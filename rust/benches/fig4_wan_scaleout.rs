@@ -1,0 +1,33 @@
+//! Figure 4 — WAN (geo-distributed) scale-out: throughput/latency curves
+//! for Eliá vs the centralized and read-only baselines, TPC-W (4a) and
+//! RUBiS (4b), at 2..5 sites.
+//!
+//! Expected shape (paper §7.2): the centralized server saturates at low
+//! throughput and WAN latency; read-only replicas help reads; Eliá cuts
+//! latency by another large factor and lifts maximum throughput ~2-3x
+//! over read-only at five sites.
+
+use elia::harness::experiments::{fig4, ExpScale, Workload};
+use elia::harness::report;
+
+fn main() {
+    let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
+    let scale = if quick { ExpScale::quick() } else { ExpScale::full() };
+    let sites: Vec<usize> = if quick { vec![3] } else { vec![2, 3, 5] };
+
+    for workload in [Workload::Tpcw, Workload::Rubis] {
+        for &n in &sites {
+            let t0 = std::time::Instant::now();
+            println!("\n=== Figure 4 ({}, {n} sites) — WAN throughput/latency ===", workload.name());
+            let curves = fig4(workload, n, &scale);
+            println!("{}", report::curves_table(&curves));
+            // Max sustained throughput per system (5s latency bound).
+            for c in &curves {
+                if let Some(p) = c.peak(5000.0) {
+                    println!("  {}: max {:.0} ops/s @ {:.0} ms", c.label, p.throughput, p.mean_latency_ms);
+                }
+            }
+            println!("[fig4 {} n={n} took {:.1}s]", workload.name(), t0.elapsed().as_secs_f64());
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Figure 5 — microbenchmark: throughput/latency curves for local-op
+//! ratios 0%..90% on a 3-site WAN deployment with 5 ms operations.
+//!
+//! Expected shape (paper §7.3): saturation moves out strongly with the
+//! local ratio (paper: knee ~600 ops/s at 30% local vs ~5477 ops/s at
+//! 90%).
+
+use elia::harness::experiments::{fig5, ExpScale};
+use elia::harness::report;
+
+fn main() {
+    let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
+    let scale = if quick { ExpScale::quick() } else { ExpScale::full() };
+    let ratios: Vec<f64> = if quick {
+        vec![0.3, 0.9]
+    } else {
+        vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+    };
+    let t0 = std::time::Instant::now();
+    println!("\n=== Figure 5 — Eliá with different local operation ratios (WAN, 3 servers) ===");
+    let curves = fig5(&ratios, &scale);
+    println!("{}", report::curves_table(&curves));
+    for c in &curves {
+        if let Some(p) = c.peak(5000.0) {
+            println!("  {}: saturation ~{:.0} ops/s", c.label, p.throughput);
+        }
+    }
+    for c in &curves {
+        println!("\n{}", report::ascii_curve(c, 60, 10));
+    }
+    println!("[fig5 took {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,46 @@
+//! Figure 6 — microbenchmark latency decomposition: mean latency of
+//! local vs global operations across local-op ratios, under light load
+//! (6a) and heavy load (6b).
+//!
+//! Expected shape (paper §7.3): local latency is 2-4x below global at
+//! every ratio; under light load the overall mean flattens beyond ~70%
+//! local, under heavy load it keeps falling past that point.
+
+use elia::harness::experiments::{fig6, ExpScale};
+use elia::harness::report;
+
+fn main() {
+    let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
+    let scale = if quick { ExpScale::quick() } else { ExpScale::full() };
+    let ratios: Vec<f64> = if quick {
+        vec![0.3, 0.7]
+    } else {
+        vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+    };
+    let t0 = std::time::Instant::now();
+    for (label, clients) in [("6a: light load", 32), ("6b: heavy load", 512)] {
+        println!("\n=== Figure {label} — latency vs local ratio (WAN, 3 servers) ===");
+        let rows = fig6(&ratios, clients, &scale);
+        let data: Vec<Vec<String>> = rows
+            .iter()
+            .map(|(r, overall, local, global)| {
+                vec![
+                    format!("{:.0}%", r * 100.0),
+                    format!("{overall:.1}"),
+                    format!("{local:.1}"),
+                    format!("{global:.1}"),
+                    if local.is_nan() || global.is_nan() {
+                        "-".into()
+                    } else {
+                        format!("{:.2}x", global / local)
+                    },
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            report::table(&["local ratio", "overall ms", "local ms", "global ms", "g/l"], &data)
+        );
+    }
+    println!("[fig6 took {:.1}s]", t0.elapsed().as_secs_f64());
+}

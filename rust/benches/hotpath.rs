@@ -1,0 +1,158 @@
+//! Hot-path micro-benchmarks (§Perf): per-component cost of the paths
+//! that bound end-to-end performance. Hand-rolled timing (criterion is
+//! unavailable offline): median of repeated batches.
+
+use elia::catalog::{Schema, TableSchema, ValueType};
+use elia::db::{Bindings, Db, Value};
+use elia::simnet::events::EventQueue;
+use elia::sqlir::parse_statement;
+use elia::util::{Rng, VTime};
+use std::time::Instant;
+
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
+    // Warm up, then take the median of 5 batches.
+    for _ in 0..(iters / 10).max(1) {
+        f();
+    }
+    let mut samples = Vec::new();
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let per_op = samples[2];
+    println!(
+        "{name:<46} {:>12.0} ns/op {:>14.0} ops/s",
+        per_op * 1e9,
+        1.0 / per_op
+    );
+    per_op
+}
+
+fn main() {
+    println!("=== hotpath micro-benchmarks ===");
+
+    // --- DB engine: point read / point update / insert ---
+    let schema = Schema::new(vec![TableSchema::new(
+        "T",
+        &[("K", ValueType::Int), ("V", ValueType::Int), ("S", ValueType::Str)],
+        &["K"],
+    )]);
+    let db = Db::new(schema);
+    let ins = parse_statement("INSERT INTO T (K, V, S) VALUES (?k, 0, 'x')").unwrap();
+    for k in 0..10_000i64 {
+        let b: Bindings = [("k".to_string(), Value::Int(k))].into_iter().collect();
+        db.exec_auto(&ins, &b).unwrap();
+    }
+    let sel = parse_statement("SELECT V FROM T WHERE K = ?k").unwrap();
+    let upd = parse_statement("UPDATE T SET V = V + 1 WHERE K = ?k").unwrap();
+    let mut rng = Rng::new(7);
+
+    bench("db: point SELECT (serializable txn)", 50_000, || {
+        let b: Bindings =
+            [("k".to_string(), Value::Int(rng.range(0, 10_000) as i64))].into_iter().collect();
+        db.exec_auto(&sel, &b).unwrap();
+    });
+    bench("db: point UPDATE (serializable txn)", 50_000, || {
+        let b: Bindings =
+            [("k".to_string(), Value::Int(rng.range(0, 10_000) as i64))].into_iter().collect();
+        db.exec_auto(&upd, &b).unwrap();
+    });
+    bench("db: full txn w/ state-update extraction", 20_000, || {
+        let b: Bindings =
+            [("k".to_string(), Value::Int(rng.range(0, 10_000) as i64))].into_iter().collect();
+        let mut t = db.begin();
+        t.exec(&upd, &b).unwrap();
+        let u = t.commit().unwrap();
+        assert_eq!(u.len(), 1);
+    });
+
+    // --- apply_update (replication path) ---
+    let upd_k0: Bindings = [("k".to_string(), Value::Int(0))].into_iter().collect();
+    let mut t = db.begin();
+    t.exec(&upd, &upd_k0).unwrap();
+    let update = t.commit().unwrap();
+    bench("db: apply_update (1 record)", 50_000, || {
+        db.apply_update(&update).unwrap();
+    });
+
+    // --- lock manager ---
+    let lm = elia::db::LockManager::default();
+    let mut txn_id = 1u64;
+    bench("lockmgr: acquire+release X", 100_000, || {
+        use elia::db::lockmgr::{LockMode, LockTarget};
+        use elia::db::Key;
+        txn_id += 1;
+        lm.acquire(txn_id, LockTarget::Row(0, Key::single(Value::Int((txn_id % 512) as i64))), LockMode::X)
+            .unwrap();
+        lm.release_all(txn_id);
+    });
+
+    // --- simnet event loop ---
+    bench("simnet: schedule+pop event", 200_000, || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..8 {
+            q.schedule(VTime::from_micros(i), i as u32);
+        }
+        while q.pop().is_some() {}
+    });
+
+    // --- analysis: scalar cost scoring ---
+    let app = elia::workload::tpcw::analyzed();
+    let tensor = elia::analysis::elim::EliminationTensor::build(&app.spec.txns, &app.matrix);
+    let assign: Vec<Option<usize>> = app.partitioning.choice.clone();
+    bench("analysis: scalar cost(P) on TPC-W tensor", 100_000, || {
+        let c = elia::analysis::score::cost(&tensor, &assign);
+        assert!(c >= 0.0);
+    });
+
+    // --- routing ---
+    let op = elia::workload::spec::Operation {
+        txn: app.spec.txn_index("doCart").unwrap(),
+        args: [("sid".to_string(), Value::Int(42))].into_iter().collect(),
+    };
+    bench("router: route(op) TPC-W doCart", 200_000, || {
+        let r = app.route(&op, 8);
+        assert!(!matches!(r, elia::workload::analyzed::Route::Any));
+    });
+
+    // --- PJRT artifact scoring (if built) ---
+    if let Some(eval) = elia::runtime::CostEvaluator::try_default() {
+        use elia::analysis::score::BatchScorer;
+        let batch: Vec<Vec<Option<usize>>> = (0..256).map(|_| assign.clone()).collect();
+        let t0 = Instant::now();
+        let mut n = 0;
+        while t0.elapsed().as_secs_f64() < 2.0 {
+            let v = eval.score(&tensor, &batch);
+            assert_eq!(v.len(), 256);
+            n += 1;
+        }
+        let per_exec = t0.elapsed().as_secs_f64() / n as f64;
+        println!(
+            "{:<46} {:>12.0} ns/cand {:>12.0} cand/s  ({:.2} ms/batch-of-256)",
+            "pjrt: artifact batch scoring",
+            per_exec / 256.0 * 1e9,
+            256.0 / per_exec,
+            per_exec * 1e3,
+        );
+    } else {
+        println!("pjrt: artifact not built (run `make artifacts`) — skipped");
+    }
+
+    // --- end-to-end simulated throughput per wall second ---
+    {
+        use elia::harness::experiments::{fig6, ExpScale};
+        let t0 = Instant::now();
+        let rows = fig6(&[0.5], 64, &ExpScale::quick());
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<46} {:>10.2} s wall (rows={})",
+            "sim: fig6 quick point (8s virtual)",
+            wall,
+            rows.len()
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Table 3 — WAN request latency under light load, per configuration:
+//! centralized, Eliá-{2,3,5}, read-only-{2,3,5}; improvement factors are
+//! reported relative to the centralized case, as in the paper.
+//!
+//! Expected shape: Eliá-5 sits near intra-site latency (tens of ms) while
+//! the centralized server queues into the second range; Eliá's factor
+//! exceeds the read-only baseline's at every size.
+
+use elia::harness::experiments::{table3, ExpScale, Workload};
+use elia::harness::report;
+
+fn main() {
+    let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
+    let scale = if quick { ExpScale::quick() } else { ExpScale::full() };
+    for workload in [Workload::Tpcw, Workload::Rubis] {
+        let t0 = std::time::Instant::now();
+        println!("\n=== Table 3 ({}) — WAN light-load latency ===", workload.name());
+        let rows = table3(workload, &scale);
+        let centralized = rows
+            .iter()
+            .find(|(l, _)| l == "centralized")
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN);
+        let data: Vec<Vec<String>> = rows
+            .iter()
+            .map(|(label, ms)| {
+                vec![
+                    label.clone(),
+                    format!("{ms:.0}ms"),
+                    if label == "centralized" {
+                        "-".into()
+                    } else {
+                        format!("({:.1}x)", centralized / ms)
+                    },
+                ]
+            })
+            .collect();
+        println!("{}", report::table(&["configuration", "latency", "vs centralized"], &data));
+        println!("[table3 {} took {:.1}s]", workload.name(), t0.elapsed().as_secs_f64());
+    }
+}

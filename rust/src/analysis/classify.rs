@@ -1,0 +1,396 @@
+//! Operation classification (paper §3.2): commutative, local, global —
+//! plus the RUBiS-style *local/global* class whose locality is decided at
+//! run time from multiple partitioning parameters (paper §3.1, "Multiple
+//! partitioning parameters").
+
+use super::conflict::{ConflictMatrix, SDnf};
+use super::partition::Partitioning;
+use crate::workload::spec::TxnTemplate;
+
+/// Classification of one transaction type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OpClass {
+    /// No conflicts with any operation: executable anywhere, immediately.
+    Commutative,
+    /// Partitioned; executable at its server without coordination.
+    Local,
+    /// Requires Conveyor Belt coordination (token) before execution.
+    Global,
+    /// Local iff all routing parameters map to the same server, global
+    /// otherwise (the paper's double-key scheme used for RUBiS).
+    LocalGlobal,
+}
+
+/// The classification result for an application.
+#[derive(Debug, Clone)]
+pub struct Classification {
+    pub classes: Vec<OpClass>,
+    /// Parameters (indices into each template's param list) consulted by
+    /// the deterministic routing function. Empty for commutative
+    /// operations (any server may execute them); one entry for plain
+    /// local/global; several for LocalGlobal.
+    pub routing_params: Vec<Vec<usize>>,
+}
+
+impl Classification {
+    pub fn count(&self, class: &OpClass) -> usize {
+        self.classes.iter().filter(|c| *c == class).count()
+    }
+
+    /// Force a transaction to Global regardless of the computed class.
+    ///
+    /// This is always *sound* (global is the most conservative class: the
+    /// operation executes under the token, totally ordered against every
+    /// other global). The paper uses it implicitly for multi-partition
+    /// searches — "global operations include a global search for items"
+    /// (§6, RUBiS) — which our refined classifier would otherwise keep
+    /// local-at-any-replica; forcing them global reproduces the paper's
+    /// operation frequencies.
+    pub fn force_global(&mut self, txn: usize) {
+        self.classes[txn] = OpClass::Global;
+    }
+
+    /// Table 1 row: (local, global, commutative, local/global).
+    pub fn summary(&self) -> (usize, usize, usize, usize) {
+        (
+            self.count(&OpClass::Local),
+            self.count(&OpClass::Global),
+            self.count(&OpClass::Commutative),
+            self.count(&OpClass::LocalGlobal),
+        )
+    }
+}
+
+/// Classify all transactions given the optimized partitioning.
+///
+/// A transaction `t` is **local** iff (paper §3.2):
+/// 1. no write of `t` conflicts with a write of an operation in a
+///    different partition (`ww` covered), and
+/// 2. no operation in a different partition reads from `t` (`wr[t][·]`
+///    covered).
+///
+/// `t` *reading from* remote operations (`wr[·][t]`) does **not** break
+/// locality — that is the add-to-cart / order example of Figure 1.
+///
+/// Coverage is computed as a fixpoint over *routing sets*: each clause of
+/// a locality-breaking condition must be covered by some pair of routing
+/// parameters `(k0 ∈ routing(t), k1 ∈ routing(t'))`. Whenever coverage
+/// needs a parameter not yet in a routing set, the parameter is added and
+/// the fixpoint re-runs — this grows single-key transactions into the
+/// double-key (LocalGlobal) scheme exactly when the conflict structure
+/// demands it. Clauses no parameter pair can cover make the transaction
+/// Global.
+pub fn classify(
+    templates: &[TxnTemplate],
+    matrix: &ConflictMatrix,
+    partitioning: &Partitioning,
+) -> Classification {
+    let n = templates.len();
+
+    // Routing sets start from the optimizer's primary choice.
+    let mut routing: Vec<Vec<usize>> =
+        (0..n).map(|t| partitioning.choice[t].into_iter().collect()).collect();
+    let mut uncoverable = vec![false; n];
+
+    // Locality-breaking conditions of t: (condition with side0 = t, t').
+    let conds: Vec<Vec<(&SDnf, usize)>> = (0..n)
+        .map(|t| {
+            let mut v = Vec::new();
+            for t2 in 0..n {
+                if !matrix.ww[t][t2].is_false() {
+                    v.push((&matrix.ww[t][t2], t2));
+                }
+                // A reader that declared weak reads does not constrain its
+                // writers' locality (paper: global searches observe their
+                // server's prefix of the replicated state).
+                if !matrix.wr[t][t2].is_false() && !templates[t2].weak_reads {
+                    v.push((&matrix.wr[t][t2], t2));
+                }
+            }
+            v
+        })
+        .collect();
+
+    loop {
+        let mut changed = false;
+        for t in 0..n {
+            for (cond, t2) in &conds[t] {
+                for clause in &cond.0 {
+                    let covered = routing[t].iter().any(|&k0| {
+                        routing[*t2].iter().any(|&k1| {
+                            clause.covered_by(&templates[t].params[k0], &templates[*t2].params[k1])
+                        })
+                    });
+                    if covered {
+                        continue;
+                    }
+                    // Search for any covering parameter pair.
+                    let pair = (0..templates[t].params.len()).find_map(|k0| {
+                        (0..templates[*t2].params.len())
+                            .find(|&k1| {
+                                clause.covered_by(
+                                    &templates[t].params[k0],
+                                    &templates[*t2].params[k1],
+                                )
+                            })
+                            .map(|k1| (k0, k1))
+                    });
+                    match pair {
+                        Some((k0, k1)) => {
+                            if !routing[t].contains(&k0) {
+                                routing[t].push(k0);
+                                changed = true;
+                            }
+                            if !routing[*t2].contains(&k1) {
+                                routing[*t2].push(k1);
+                                changed = true;
+                            }
+                        }
+                        None => {
+                            if !uncoverable[t] {
+                                uncoverable[t] = true;
+                                changed = true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let mut classes = Vec::with_capacity(n);
+    let mut routing_out = Vec::with_capacity(n);
+    for t in 0..n {
+        if !matrix.has_any_conflict(t) {
+            classes.push(OpClass::Commutative);
+            routing_out.push(Vec::new());
+            continue;
+        }
+        if uncoverable[t] {
+            classes.push(OpClass::Global);
+            // Globals are still partitioned (paper §3.2: they may read
+            // from local operations of their partition).
+            routing_out.push(partitioning.choice[t].into_iter().collect());
+            continue;
+        }
+        let mut r = routing[t].clone();
+        r.sort_unstable();
+        if r.len() > 1 {
+            classes.push(OpClass::LocalGlobal);
+        } else {
+            classes.push(OpClass::Local);
+        }
+        routing_out.push(r);
+    }
+
+    Classification { classes, routing_params: routing_out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::elim::EliminationTensor;
+    use crate::analysis::partition::{optimize, PartitionOptions};
+    use crate::analysis::rwsets::{extract_rwsets, ExtractOptions};
+    use crate::catalog::{Schema, TableSchema, ValueType};
+
+    fn run(templates: Vec<TxnTemplate>, schema: Schema) -> Classification {
+        let rws: Vec<_> = templates
+            .iter()
+            .map(|t| extract_rwsets(t, &schema, ExtractOptions::default()))
+            .collect();
+        let matrix = ConflictMatrix::detect(&rws);
+        let tensor = EliminationTensor::build(&templates, &matrix);
+        let p = optimize(&tensor, &PartitionOptions::default());
+        classify(&templates, &matrix, &p)
+    }
+
+    /// The paper's Figure 1 online-store example: create / add / order.
+    fn store_schema() -> Schema {
+        Schema::new(vec![
+            TableSchema::new(
+                "CARTS",
+                &[("CID", ValueType::Int), ("ITEM", ValueType::Int), ("QTY", ValueType::Int)],
+                &["CID", "ITEM"],
+            ),
+            TableSchema::new(
+                "STOCK",
+                &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int)],
+                &["ITEM"],
+            ),
+            TableSchema::new(
+                "CONFIG",
+                &[("K", ValueType::Int), ("V", ValueType::Str)],
+                &["K"],
+            ),
+        ])
+    }
+
+    fn store_templates() -> Vec<TxnTemplate> {
+        vec![
+            // create cart c
+            TxnTemplate::new(
+                "create",
+                &["c"],
+                &[("i", "INSERT INTO CARTS (CID, ITEM, QTY) VALUES (?c, 0, 0)")],
+                1.0,
+            ),
+            // add a items of type t to cart c, if stock suffices (reads STOCK.LEVEL)
+            TxnTemplate::new(
+                "add",
+                &["c", "t", "a"],
+                &[
+                    ("check", "SELECT LEVEL FROM STOCK WHERE ITEM = ?t"),
+                    ("upd", "UPDATE CARTS SET QTY = QTY + ?a WHERE CID = ?c AND ITEM = ?t"),
+                ],
+                1.0,
+            ),
+            // order cart c: decrement stock of everything in the cart
+            TxnTemplate::new(
+                "order",
+                &["c"],
+                &[
+                    ("read", "SELECT ITEM, QTY FROM CARTS WHERE CID = ?c"),
+                    ("dec", "UPDATE STOCK SET LEVEL = LEVEL - ?q WHERE ITEM = ?derived_item"),
+                ],
+                1.0,
+            ),
+            // read immutable configuration
+            TxnTemplate::new(
+                "config",
+                &["k"],
+                &[("g", "SELECT V FROM CONFIG WHERE K = ?k")],
+                1.0,
+            ),
+        ]
+    }
+
+    #[test]
+    fn figure1_classification() {
+        let cls = run(store_templates(), store_schema());
+        // order: global (WW on STOCK across carts; add reads-from order).
+        assert_eq!(cls.classes[2], OpClass::Global, "order must be global");
+        // create: local (conflicts only on CARTS keyed by cart id).
+        assert_eq!(cls.classes[0], OpClass::Local, "create must be local");
+        // add: local — its CARTS writes are cart-keyed; its read of STOCK
+        // (reads-from order) does not break locality.
+        assert_eq!(cls.classes[1], OpClass::Local, "add must be local");
+        // config: commutative (reads immutable CONFIG nobody writes).
+        assert_eq!(cls.classes[3], OpClass::Commutative);
+    }
+
+    #[test]
+    fn read_only_on_written_table_is_not_commutative() {
+        // A pure reader of STOCK conflicts (reads-from) with order, so it
+        // is not commutative; but nothing reads from it and it writes
+        // nothing, so it is local.
+        let mut templates = store_templates();
+        templates.push(TxnTemplate::new(
+            "viewStock",
+            &["t"],
+            &[("g", "SELECT LEVEL FROM STOCK WHERE ITEM = ?t")],
+            1.0,
+        ));
+        let cls = run(templates, store_schema());
+        assert_eq!(cls.classes[4], OpClass::Local);
+    }
+
+    #[test]
+    fn double_key_yields_local_global() {
+        // RUBiS-style: bid(u, i) writes rows keyed by user in USERS and by
+        // item in ITEMS; conflicts need u-routing for one and i-routing
+        // for the other -> LocalGlobal on {u, i}.
+        let schema = Schema::new(vec![
+            TableSchema::new(
+                "USERS",
+                &[("UID", ValueType::Int), ("NBIDS", ValueType::Int)],
+                &["UID"],
+            ),
+            TableSchema::new(
+                "ITEMS",
+                &[("IID", ValueType::Int), ("MAXBID", ValueType::Int)],
+                &["IID"],
+            ),
+        ]);
+        let bid = TxnTemplate::new(
+            "bid",
+            &["u", "i", "amt"],
+            &[
+                ("bu", "UPDATE USERS SET NBIDS = NBIDS + 1 WHERE UID = ?u"),
+                ("bi", "UPDATE ITEMS SET MAXBID = ?amt WHERE IID = ?i"),
+            ],
+            1.0,
+        );
+        let view_user = TxnTemplate::new(
+            "viewUser",
+            &["u"],
+            &[("q", "SELECT NBIDS FROM USERS WHERE UID = ?u")],
+            1.0,
+        );
+        let view_item = TxnTemplate::new(
+            "viewItem",
+            &["i"],
+            &[("q", "SELECT MAXBID FROM ITEMS WHERE IID = ?i")],
+            1.0,
+        );
+        let cls = run(vec![bid, view_user, view_item], schema);
+        assert_eq!(cls.classes[0], OpClass::LocalGlobal);
+        assert_eq!(cls.routing_params[0].len(), 2);
+        assert_eq!(cls.classes[1], OpClass::Local);
+        assert_eq!(cls.classes[2], OpClass::Local);
+    }
+
+    #[test]
+    fn unpartitionable_writer_is_global() {
+        // A scan-update with no parameters conflicts with everything on
+        // the table and can never be covered.
+        let schema = store_schema();
+        let mut templates = store_templates();
+        templates.push(TxnTemplate::new(
+            "restockAll",
+            &[],
+            &[("u", "UPDATE STOCK SET LEVEL = 100")],
+            1.0,
+        ));
+        let cls = run(templates, schema);
+        assert_eq!(cls.classes[4], OpClass::Global);
+        // add stays local: its own writes are still cart-keyed, and it
+        // only *reads* what restockAll writes.
+        assert_eq!(cls.classes[1], OpClass::Local, "add stays local");
+        // order is global anyway (WW with restockAll AND with other orders).
+        assert_eq!(cls.classes[2], OpClass::Global);
+    }
+
+    #[test]
+    fn summary_counts() {
+        let cls = run(store_templates(), store_schema());
+        let (l, g, c, lg) = cls.summary();
+        assert_eq!((l, g, c, lg), (2, 1, 1, 0));
+    }
+
+    #[test]
+    fn commutative_write_only_logging() {
+        // A write-only table nobody reads: inserts self-conflict on key,
+        // but partitioned by the id they become local; if we add a reader
+        // they stay local... the paper calls *logging* commutative when
+        // its writes are never read. Our conservative analysis still sees
+        // insert-insert self WW, so it lands Local (covered by id), which
+        // is the sound refinement: it never needs the token.
+        let schema = Schema::new(vec![TableSchema::new(
+            "LOG",
+            &[("ID", ValueType::Int), ("MSG", ValueType::Str)],
+            &["ID"],
+        )]);
+        let log = TxnTemplate::new(
+            "log",
+            &["id"],
+            &[("i", "INSERT INTO LOG (ID, MSG) VALUES (?id, 'x')")],
+            1.0,
+        );
+        let cls = run(vec![log], schema);
+        assert_eq!(cls.classes[0], OpClass::Local);
+    }
+}

@@ -1,0 +1,487 @@
+//! Pairwise conflict detection — the first phase of Algorithm 1.
+//!
+//! For every ordered pair of transactions `(t, t')` we build, per conflict
+//! kind, a condition in DNF over *sided* atoms that the input parameters
+//! of the two transactions must satisfy for operations of `t` and `t'` to
+//! conflict on the same row(s). Side 0 refers to `t`'s parameters, side 1
+//! to `t'`'s (the paper's `sid` vs `sid'` priming).
+
+use super::rwsets::{AccessEntry, AttrId, Dnf, Rhs, RwSets};
+use crate::sqlir::{CmpOp, Literal};
+
+/// Conflict kinds, ordered pair semantics:
+/// * `WW` — a write of `t` and a write of `t'` overlap,
+/// * `WR` — a write of `t` overlaps a read of `t'` (i.e. *`t'` reads from
+///   `t`* in the paper's terminology).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConflictKind {
+    WW,
+    WR,
+}
+
+/// The RHS of a sided atom.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SidedRhs {
+    /// Parameter `name` of the transaction on `side` (0 = t, 1 = t').
+    Param { side: u8, name: String },
+    Const(Literal),
+    Opaque,
+}
+
+/// `attr op rhs` with side-tagged parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SidedAtom {
+    pub attr: AttrId,
+    pub op: CmpOp,
+    pub rhs: SidedRhs,
+}
+
+/// Conjunction of sided atoms.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SClause(pub Vec<SidedAtom>);
+
+impl SClause {
+    /// A clause is *covered* by the partitioning parameter choice
+    /// `(k0, k1)` if it contains equality atoms binding the same attribute
+    /// to parameter `k0` of side 0 and `k1` of side 1 — then the shared
+    /// deterministic routing function sends both conflicting operations to
+    /// the same server and the conflict is local (paper §3.1, the
+    /// `(k = A ∧ k' = A ∧ …)` clause-removal rule).
+    pub fn covered_by(&self, k0: &str, k1: &str) -> bool {
+        self.0.iter().any(|a| {
+            a.op == CmpOp::Eq
+                && matches!(&a.rhs, SidedRhs::Param { side: 0, name } if name == k0)
+                && self.0.iter().any(|b| {
+                    b.attr == a.attr
+                        && b.op == CmpOp::Eq
+                        && matches!(&b.rhs, SidedRhs::Param { side: 1, name } if name == k1)
+                })
+        })
+    }
+
+    /// Conservative satisfiability: detect contradictions between
+    /// *constant* constraints on the same attribute. Parameters and
+    /// opaque values never contradict (they can take any value).
+    pub fn satisfiable(&self) -> bool {
+        // Group constant constraints per attribute.
+        let mut attrs: Vec<AttrId> = self.0.iter().map(|a| a.attr).collect();
+        attrs.sort_unstable();
+        attrs.dedup();
+        for attr in attrs {
+            let consts: Vec<(&CmpOp, &Literal)> = self
+                .0
+                .iter()
+                .filter(|a| a.attr == attr)
+                .filter_map(|a| match &a.rhs {
+                    SidedRhs::Const(l) => Some((&a.op, l)),
+                    _ => None,
+                })
+                .collect();
+            if consts.is_empty() {
+                continue;
+            }
+            if !consts_satisfiable(&consts) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+fn lit_f64(l: &Literal) -> Option<f64> {
+    match l {
+        Literal::Int(i) => Some(*i as f64),
+        Literal::Float(x) => Some(*x),
+        _ => None,
+    }
+}
+
+fn lit_eq(a: &Literal, b: &Literal) -> bool {
+    match (a, b) {
+        (Literal::Str(x), Literal::Str(y)) => x == y,
+        _ => match (lit_f64(a), lit_f64(b)) {
+            (Some(x), Some(y)) => x == y,
+            _ => false,
+        },
+    }
+}
+
+fn consts_satisfiable(consts: &[(&CmpOp, &Literal)]) -> bool {
+    // Equalities must all agree.
+    let eqs: Vec<&Literal> = consts
+        .iter()
+        .filter(|(op, _)| **op == CmpOp::Eq)
+        .map(|(_, l)| *l)
+        .collect();
+    for w in eqs.windows(2) {
+        if !lit_eq(w[0], w[1]) {
+            return false;
+        }
+    }
+    // Numeric range reasoning.
+    let mut lo = f64::NEG_INFINITY;
+    let mut lo_strict = false;
+    let mut hi = f64::INFINITY;
+    let mut hi_strict = false;
+    for (op, l) in consts {
+        let Some(x) = lit_f64(l) else { continue };
+        match op {
+            CmpOp::Gt => {
+                if x >= lo {
+                    lo = x;
+                    lo_strict = true;
+                }
+            }
+            CmpOp::Ge => {
+                if x > lo {
+                    lo = x;
+                    lo_strict = false;
+                }
+            }
+            CmpOp::Lt => {
+                if x <= hi {
+                    hi = x;
+                    hi_strict = true;
+                }
+            }
+            CmpOp::Le => {
+                if x < hi {
+                    hi = x;
+                    hi_strict = false;
+                }
+            }
+            _ => {}
+        }
+    }
+    if lo > hi || (lo == hi && (lo_strict || hi_strict)) {
+        return false;
+    }
+    // Equality must sit inside the range and not hit a disequality.
+    if let Some(eq) = eqs.first() {
+        if let Some(x) = lit_f64(eq) {
+            if x < lo || x > hi || (x == lo && lo_strict) || (x == hi && hi_strict) {
+                return false;
+            }
+        }
+        for (op, l) in consts {
+            if **op == CmpOp::Ne && lit_eq(eq, l) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Disjunction of sided clauses. Empty = no conflict possible.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SDnf(pub Vec<SClause>);
+
+impl SDnf {
+    pub fn is_false(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn or_with(&mut self, other: SDnf) {
+        self.0.extend(other.0);
+    }
+
+    /// Whether any clause survives the coverage rule for `(k0, k1)`.
+    pub fn uncovered(&self, k0: Option<&str>, k1: Option<&str>) -> bool {
+        match (k0, k1) {
+            (Some(k0), Some(k1)) => self.0.iter().any(|c| !c.covered_by(k0, k1)),
+            _ => !self.0.is_empty(),
+        }
+    }
+}
+
+fn side_atoms(cond: &Dnf, side: u8) -> Vec<SClause> {
+    cond.0
+        .iter()
+        .map(|clause| {
+            SClause(
+                clause
+                    .0
+                    .iter()
+                    .map(|a| SidedAtom {
+                        attr: a.attr,
+                        op: a.op,
+                        rhs: match &a.rhs {
+                            Rhs::Param(p) => SidedRhs::Param { side, name: p.clone() },
+                            Rhs::Const(l) => SidedRhs::Const(l.clone()),
+                            Rhs::Opaque => SidedRhs::Opaque,
+                        },
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+/// Conjoin two entry conditions (side 0 and side 1), keeping only
+/// satisfiable clauses.
+fn pair_condition(e0: &AccessEntry, e1: &AccessEntry) -> SDnf {
+    let c0 = side_atoms(&e0.cond, 0);
+    let c1 = side_atoms(&e1.cond, 1);
+    let mut out = Vec::new();
+    for a in &c0 {
+        for b in &c1 {
+            let mut atoms = a.0.clone();
+            atoms.extend(b.0.iter().cloned());
+            let clause = SClause(atoms);
+            if clause.satisfiable() {
+                out.push(clause);
+            }
+        }
+    }
+    SDnf(out)
+}
+
+fn attrs_intersect(a: &[AttrId], b: &[AttrId]) -> bool {
+    a.iter().any(|x| b.contains(x))
+}
+
+/// The full pairwise conflict structure of an application.
+#[derive(Debug, Clone)]
+pub struct ConflictMatrix {
+    pub n: usize,
+    /// `ww[t][t']`: write-write condition.
+    pub ww: Vec<Vec<SDnf>>,
+    /// `wr[t][t']`: `t` writes what `t'` reads (`t'` reads-from `t`).
+    pub wr: Vec<Vec<SDnf>>,
+}
+
+impl ConflictMatrix {
+    /// Run conflict detection over per-transaction read/write sets.
+    pub fn detect(rwsets: &[RwSets]) -> ConflictMatrix {
+        let n = rwsets.len();
+        let mut ww = vec![vec![SDnf::default(); n]; n];
+        let mut wr = vec![vec![SDnf::default(); n]; n];
+        for t in 0..n {
+            for t2 in 0..n {
+                // Write-write (computed for ordered pairs; symmetric by
+                // construction up to side swap).
+                for w0 in &rwsets[t].writes {
+                    for w1 in &rwsets[t2].writes {
+                        if attrs_intersect(&w0.attrs, &w1.attrs) {
+                            ww[t][t2].or_with(pair_condition(w0, w1));
+                        }
+                    }
+                }
+                // t writes, t' reads.
+                for w0 in &rwsets[t].writes {
+                    for r1 in &rwsets[t2].reads {
+                        if attrs_intersect(&w0.attrs, &r1.attrs) {
+                            wr[t][t2].or_with(pair_condition(w0, r1));
+                        }
+                    }
+                }
+            }
+        }
+        ConflictMatrix { n, ww, wr }
+    }
+
+    /// The symmetric "any conflict" condition of the unordered pair, used
+    /// by Algorithm 1's cost function: `ww(t,t') ∨ wr(t,t') ∨ wr(t',t)`
+    /// with all conditions normalized to side 0 = `t`.
+    pub fn combined(&self, t: usize, t2: usize) -> SDnf {
+        let mut out = self.ww[t][t2].clone();
+        out.or_with(self.wr[t][t2].clone());
+        // wr[t2][t] has side 0 = t2; swap sides to normalize.
+        let mut swapped = self.wr[t2][t].clone();
+        for clause in &mut swapped.0 {
+            for atom in &mut clause.0 {
+                if let SidedRhs::Param { side, .. } = &mut atom.rhs {
+                    *side = 1 - *side;
+                }
+            }
+        }
+        out.or_with(swapped);
+        out
+    }
+
+    /// Does `t` conflict with anything (including itself)?
+    pub fn has_any_conflict(&self, t: usize) -> bool {
+        (0..self.n).any(|t2| {
+            !self.ww[t][t2].is_false()
+                || !self.wr[t][t2].is_false()
+                || !self.wr[t2][t].is_false()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rwsets::{extract_rwsets, ExtractOptions};
+    use crate::catalog::{Schema, TableSchema, ValueType};
+    use crate::workload::spec::TxnTemplate;
+
+    fn schema() -> Schema {
+        Schema::new(vec![
+            TableSchema::new(
+                "SC",
+                &[("ID", ValueType::Int), ("I_ID", ValueType::Int), ("QTY", ValueType::Int)],
+                &["ID", "I_ID"],
+            ),
+            TableSchema::new(
+                "LOG",
+                &[("ID", ValueType::Int), ("MSG", ValueType::Str)],
+                &["ID"],
+            ),
+        ])
+    }
+
+    fn rw(templates: &[TxnTemplate]) -> Vec<crate::analysis::rwsets::RwSets> {
+        templates
+            .iter()
+            .map(|t| extract_rwsets(t, &schema(), ExtractOptions::default()))
+            .collect()
+    }
+
+    #[test]
+    fn paper_example_createcart_docart_ww_conflict() {
+        // createCart INSERTs a row (writes all columns incl. QTY); doCart
+        // UPDATEs QTY. The WW condition must require SC.ID = sid (side 0)
+        // and SC.ID = sid' (side 1) in the same clause — i.e. covered by
+        // partitioning both on sid.
+        let create = TxnTemplate::new(
+            "createCart",
+            &["sid"],
+            &[("ins", "INSERT INTO SC (ID, I_ID, QTY) VALUES (?sid, 0, 0)")],
+            1.0,
+        );
+        let docart = TxnTemplate::new(
+            "doCart",
+            &["sid", "iid", "q"],
+            &[("upd", "UPDATE SC SET QTY = ?q WHERE ID = ?sid AND I_ID = ?iid")],
+            1.0,
+        );
+        let m = ConflictMatrix::detect(&rw(&[create, docart]));
+        let cond = &m.ww[0][1];
+        assert!(!cond.is_false(), "expected WW conflict");
+        // Covered when both partition on sid.
+        assert!(!cond.uncovered(Some("sid"), Some("sid")));
+        // Not covered when doCart partitions on iid (createCart has no such
+        // binding on I_ID... actually createCart binds I_ID = 0, a const).
+        assert!(cond.uncovered(Some("sid"), Some("iid")));
+    }
+
+    #[test]
+    fn disjoint_tables_no_conflict() {
+        let a = TxnTemplate::new(
+            "cart",
+            &["sid"],
+            &[("u", "UPDATE SC SET QTY = 1 WHERE ID = ?sid")],
+            1.0,
+        );
+        let b = TxnTemplate::new(
+            "log",
+            &["id"],
+            &[("i", "INSERT INTO LOG (ID, MSG) VALUES (?id, 'x')")],
+            1.0,
+        );
+        let m = ConflictMatrix::detect(&rw(&[a, b]));
+        assert!(m.ww[0][1].is_false());
+        assert!(m.wr[0][1].is_false());
+        assert!(m.wr[1][0].is_false());
+        // But LOG inserts self-conflict (two inserts may share a key).
+        assert!(!m.ww[1][1].is_false());
+    }
+
+    #[test]
+    fn wr_direction_is_ordered() {
+        let writer = TxnTemplate::new(
+            "w",
+            &["sid"],
+            &[("u", "UPDATE SC SET QTY = 1 WHERE ID = ?sid")],
+            1.0,
+        );
+        let reader = TxnTemplate::new(
+            "r",
+            &["sid"],
+            &[("q", "SELECT QTY FROM SC WHERE ID = ?sid")],
+            1.0,
+        );
+        let m = ConflictMatrix::detect(&rw(&[writer, reader]));
+        assert!(!m.wr[0][1].is_false(), "writer->reader WR expected");
+        assert!(m.wr[1][0].is_false(), "reader never written-from");
+    }
+
+    #[test]
+    fn constant_contradiction_prunes_clause() {
+        // Writers to disjoint constant key ranges cannot conflict.
+        let a = TxnTemplate::new("a", &[], &[("u", "UPDATE SC SET QTY = 1 WHERE ID = 1 AND I_ID = 1")], 1.0);
+        let b = TxnTemplate::new("b", &[], &[("u", "UPDATE SC SET QTY = 2 WHERE ID = 2 AND I_ID = 1")], 1.0);
+        let m = ConflictMatrix::detect(&rw(&[a, b]));
+        assert!(m.ww[0][1].is_false(), "ID=1 vs ID=2 cannot overlap");
+    }
+
+    #[test]
+    fn range_contradiction_prunes_clause() {
+        let a = TxnTemplate::new("a", &[], &[("u", "UPDATE SC SET QTY = 1 WHERE ID < 5 AND I_ID = 1")], 1.0);
+        let b = TxnTemplate::new("b", &[], &[("u", "UPDATE SC SET QTY = 2 WHERE ID > 10 AND I_ID = 1")], 1.0);
+        let m = ConflictMatrix::detect(&rw(&[a, b]));
+        assert!(m.ww[0][1].is_false());
+        let c = TxnTemplate::new("c", &[], &[("u", "UPDATE SC SET QTY = 2 WHERE ID >= 3 AND I_ID = 1")], 1.0);
+        let a2 = TxnTemplate::new("a", &[], &[("u", "UPDATE SC SET QTY = 1 WHERE ID < 5 AND I_ID = 1")], 1.0);
+        let m = ConflictMatrix::detect(&rw(&[a2, c]));
+        assert!(!m.ww[0][1].is_false(), "ID in [3,5) overlaps");
+    }
+
+    #[test]
+    fn param_vs_const_stays_satisfiable() {
+        // ID = ?sid vs ID = 7 is satisfiable (sid could be 7).
+        let a = TxnTemplate::new(
+            "a",
+            &["sid"],
+            &[("u", "UPDATE SC SET QTY = 1 WHERE ID = ?sid AND I_ID = 0")],
+            1.0,
+        );
+        let b = TxnTemplate::new("b", &[], &[("u", "UPDATE SC SET QTY = 2 WHERE ID = 7 AND I_ID = 0")], 1.0);
+        let m = ConflictMatrix::detect(&rw(&[a, b]));
+        assert!(!m.ww[0][1].is_false());
+        // And it can never be covered (b has no parameters).
+        assert!(m.ww[0][1].uncovered(Some("sid"), None));
+    }
+
+    #[test]
+    fn combined_normalizes_sides() {
+        let writer = TxnTemplate::new(
+            "w",
+            &["wid"],
+            &[("u", "UPDATE SC SET QTY = 1 WHERE ID = ?wid")],
+            1.0,
+        );
+        let reader = TxnTemplate::new(
+            "r",
+            &["rid"],
+            &[("q", "SELECT QTY FROM SC WHERE ID = ?rid")],
+            1.0,
+        );
+        let m = ConflictMatrix::detect(&rw(&[writer, reader]));
+        // combined(reader, writer) must contain the wr(writer, reader)
+        // condition with sides swapped: side0 params named rid.
+        let c = m.combined(1, 0);
+        assert!(!c.is_false());
+        assert!(!c.uncovered(Some("rid"), Some("wid")));
+    }
+
+    #[test]
+    fn coverage_requires_same_attribute() {
+        // t binds SC.ID = a; t' binds SC.I_ID = b — different attributes,
+        // equality of routing does not make the conflict local.
+        let clause = SClause(vec![
+            SidedAtom {
+                attr: AttrId { table: 0, col: 0 },
+                op: CmpOp::Eq,
+                rhs: SidedRhs::Param { side: 0, name: "a".into() },
+            },
+            SidedAtom {
+                attr: AttrId { table: 0, col: 1 },
+                op: CmpOp::Eq,
+                rhs: SidedRhs::Param { side: 1, name: "b".into() },
+            },
+        ]);
+        assert!(!clause.covered_by("a", "b"));
+    }
+}

@@ -1,0 +1,241 @@
+//! The elimination tensor: a dense encoding of "which partitioning
+//! parameter choices make which conflicts local".
+//!
+//! `elim[t][t'][k][k'] = 1` iff *every* satisfiable clause of the
+//! combined conflict condition between `t` and `t'` is covered when `t`
+//! partitions on its `k`-th parameter and `t'` on its `k'`-th. The
+//! Algorithm 1 cost of a partitioning array `P` is then the pure tensor
+//! contraction implemented both by [`super::score`] (scalar reference)
+//! and by the AOT-compiled Pallas kernel (batched, via
+//! [`crate::runtime::CostEvaluator`]).
+//!
+//! Only the upper triangle `t <= t'` is populated, so summing over all
+//! ordered pairs counts each unordered conflict exactly once.
+
+use super::conflict::ConflictMatrix;
+use crate::workload::spec::TxnTemplate;
+
+#[derive(Debug, Clone)]
+pub struct EliminationTensor {
+    /// Number of transactions.
+    pub n: usize,
+    /// Number of candidate partitioning parameters per transaction.
+    pub kdims: Vec<usize>,
+    /// max(kdims, 1) — the padded K dimension.
+    pub kmax: usize,
+    /// `conflict[t][t']` (t <= t' only): an unavoidable conflict exists.
+    pub conflict: Vec<Vec<bool>>,
+    /// `w2[t][t'] = weight(t) + weight(t')` (t <= t' only).
+    pub w2: Vec<Vec<f64>>,
+    /// Flattened `[n][n][kmax][kmax]` coverage bits.
+    elim: Vec<bool>,
+}
+
+impl EliminationTensor {
+    fn idx(&self, t: usize, t2: usize, k: usize, k2: usize) -> usize {
+        ((t * self.n + t2) * self.kmax + k) * self.kmax + k2
+    }
+
+    /// Is the `(t, t')` conflict eliminated when `P[t]=k`, `P[t']=k'`?
+    /// (`t <= t'` expected; symmetric access is normalized by the caller.)
+    pub fn eliminated(&self, t: usize, t2: usize, k: usize, k2: usize) -> bool {
+        self.elim[self.idx(t, t2, k, k2)]
+    }
+
+    /// Build the tensor from templates and the conflict matrix.
+    pub fn build(templates: &[TxnTemplate], matrix: &ConflictMatrix) -> Self {
+        let n = templates.len();
+        assert_eq!(n, matrix.n);
+        let kdims: Vec<usize> = templates.iter().map(|t| t.params.len()).collect();
+        let kmax = kdims.iter().copied().max().unwrap_or(0).max(1);
+        let mut tensor = EliminationTensor {
+            n,
+            kdims: kdims.clone(),
+            kmax,
+            conflict: vec![vec![false; n]; n],
+            w2: vec![vec![0.0; n]; n],
+            elim: vec![false; n * n * kmax * kmax],
+        };
+        for t in 0..n {
+            for t2 in t..n {
+                let combined = matrix.combined(t, t2);
+                if combined.is_false() {
+                    continue;
+                }
+                tensor.conflict[t][t2] = true;
+                tensor.w2[t][t2] = templates[t].weight + templates[t2].weight;
+                for k in 0..kdims[t] {
+                    for k2 in 0..kdims[t2] {
+                        let covered = !combined
+                            .uncovered(Some(&templates[t].params[k]), Some(&templates[t2].params[k2]));
+                        let i = tensor.idx(t, t2, k, k2);
+                        tensor.elim[i] = covered;
+                    }
+                }
+            }
+        }
+        tensor
+    }
+
+    /// Total number of conflicting (unordered) pairs.
+    pub fn conflict_pairs(&self) -> usize {
+        self.conflict.iter().flatten().filter(|&&c| c).count()
+    }
+
+    /// Export the dense f32 buffers the AOT kernel consumes:
+    /// `(cw[t*n+t2] = conflict*w2, elim[(t,t2,k,k2)])`, both padded to
+    /// `(t_pad, t_pad, k_pad, k_pad)`.
+    pub fn to_f32(&self, t_pad: usize, k_pad: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(t_pad >= self.n && k_pad >= self.kmax, "padding too small");
+        let mut cw = vec![0f32; t_pad * t_pad];
+        let mut elim = vec![0f32; t_pad * t_pad * k_pad * k_pad];
+        for t in 0..self.n {
+            for t2 in t..self.n {
+                if !self.conflict[t][t2] {
+                    continue;
+                }
+                cw[t * t_pad + t2] = self.w2[t][t2] as f32;
+                for k in 0..self.kmax {
+                    for k2 in 0..self.kmax {
+                        if self.eliminated(t, t2, k, k2) {
+                            let i = ((t * t_pad + t2) * k_pad + k) * k_pad + k2;
+                            elim[i] = 1.0;
+                        }
+                    }
+                }
+            }
+        }
+        (cw, elim)
+    }
+
+    /// Connected components of the conflict graph (transactions linked by
+    /// a conflict). Partitioning parameters can be optimized per component.
+    pub fn components(&self) -> Vec<Vec<usize>> {
+        let mut comp = vec![usize::MAX; self.n];
+        let mut next = 0;
+        for start in 0..self.n {
+            if comp[start] != usize::MAX {
+                continue;
+            }
+            let mut stack = vec![start];
+            comp[start] = next;
+            while let Some(t) = stack.pop() {
+                for t2 in 0..self.n {
+                    let linked = if t <= t2 { self.conflict[t][t2] } else { self.conflict[t2][t] };
+                    if linked && comp[t2] == usize::MAX {
+                        comp[t2] = next;
+                        stack.push(t2);
+                    }
+                }
+            }
+            next += 1;
+        }
+        let mut out = vec![Vec::new(); next];
+        for (t, &c) in comp.iter().enumerate() {
+            out[c].push(t);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rwsets::{extract_rwsets, ExtractOptions};
+    use crate::catalog::{Schema, TableSchema, ValueType};
+
+    fn schema() -> Schema {
+        Schema::new(vec![
+            TableSchema::new(
+                "SC",
+                &[("ID", ValueType::Int), ("I_ID", ValueType::Int), ("QTY", ValueType::Int)],
+                &["ID", "I_ID"],
+            ),
+            TableSchema::new("LOG", &[("ID", ValueType::Int), ("M", ValueType::Str)], &["ID"]),
+        ])
+    }
+
+    fn cart_app() -> Vec<TxnTemplate> {
+        vec![
+            TxnTemplate::new(
+                "createCart",
+                &["sid"],
+                &[("i", "INSERT INTO SC (ID, I_ID, QTY) VALUES (?sid, 0, 0)")],
+                1.0,
+            ),
+            TxnTemplate::new(
+                "doCart",
+                &["sid", "iid", "q"],
+                &[("u", "UPDATE SC SET QTY = ?q WHERE ID = ?sid AND I_ID = ?iid")],
+                2.0,
+            ),
+            TxnTemplate::new(
+                "audit",
+                &["lid"],
+                &[("i", "INSERT INTO LOG (ID, M) VALUES (?lid, 'x')")],
+                0.5,
+            ),
+        ]
+    }
+
+    fn tensor(templates: &[TxnTemplate]) -> EliminationTensor {
+        let rws: Vec<_> = templates
+            .iter()
+            .map(|t| extract_rwsets(t, &schema(), ExtractOptions::default()))
+            .collect();
+        let m = ConflictMatrix::detect(&rws);
+        EliminationTensor::build(templates, &m)
+    }
+
+    #[test]
+    fn cart_pair_elimination_on_sid() {
+        let templates = cart_app();
+        let t = tensor(&templates);
+        assert!(t.conflict[0][1]);
+        // createCart param 0 = sid, doCart param 0 = sid: eliminated.
+        assert!(t.eliminated(0, 1, 0, 0));
+        // doCart partitioned on iid (param 1): not eliminated.
+        assert!(!t.eliminated(0, 1, 0, 1));
+        // Weight of the pair is 1.0 + 2.0.
+        assert!((t.w2[0][1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn self_conflicts_on_diagonal() {
+        let templates = cart_app();
+        let t = tensor(&templates);
+        // createCart self-conflict (two inserts may share sid), eliminated
+        // when both route on sid.
+        assert!(t.conflict[0][0]);
+        assert!(t.eliminated(0, 0, 0, 0));
+        // audit (LOG insert) self-conflicts, eliminated on lid.
+        assert!(t.conflict[2][2]);
+        assert!(t.eliminated(2, 2, 0, 0));
+    }
+
+    #[test]
+    fn components_split_disjoint_tables() {
+        let templates = cart_app();
+        let t = tensor(&templates);
+        let comps = t.components();
+        assert_eq!(comps.len(), 2);
+        assert!(comps.iter().any(|c| c == &vec![0, 1]));
+        assert!(comps.iter().any(|c| c == &vec![2]));
+    }
+
+    #[test]
+    fn f32_export_pads_and_matches() {
+        let templates = cart_app();
+        let t = tensor(&templates);
+        let (cw, elim) = t.to_f32(8, 4);
+        assert_eq!(cw.len(), 64);
+        assert_eq!(elim.len(), 8 * 8 * 4 * 4);
+        // cw[0][1] = 3.0
+        assert_eq!(cw[1], 3.0);
+        // Lower triangle empty.
+        assert_eq!(cw[8], 0.0);
+        // elim(0,1,0,0) set.
+        let i = ((0 * 8 + 1) * 4 + 0) * 4 + 0;
+        assert_eq!(elim[i], 1.0);
+    }
+}

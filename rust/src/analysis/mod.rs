@@ -1,0 +1,31 @@
+//! Operation Partitioning — the paper's §3: static extraction of read and
+//! write sets, pairwise conflict detection (Algorithm 1), partitioning
+//! optimization, and operation classification into commutative / local /
+//! global (plus RUBiS-style runtime-conditional local/global).
+//!
+//! Pipeline:
+//!
+//! ```text
+//! AppSpec ──rwsets──▶ RwSets per txn
+//!         ──conflict──▶ ConflictMatrix (per-pair DNF conditions, by kind)
+//!         ──elim──▶ EliminationTensor  elim[t,t',k,k']
+//!         ──partition──▶ Partitioning  P[t] = param index (cost-minimal)
+//!         ──classify──▶ Classification {C, L, G, L/G} + routing spec
+//! ```
+//!
+//! The candidate scoring inside `partition` can run on the scalar Rust
+//! scorer ([`score`]) or on the AOT-compiled JAX/Pallas artifact via
+//! [`crate::runtime::CostEvaluator`]; both compute the identical cost.
+
+pub mod classify;
+pub mod conflict;
+pub mod elim;
+pub mod partition;
+pub mod rwsets;
+pub mod score;
+
+pub use classify::{classify, Classification, OpClass};
+pub use conflict::{ConflictKind, ConflictMatrix};
+pub use elim::EliminationTensor;
+pub use partition::{optimize, PartitionOptions, Partitioning};
+pub use rwsets::{extract_rwsets, AccessEntry, AttrId, Atom, Clause, Dnf, Rhs, RwSets};

@@ -1,0 +1,401 @@
+//! Read/write-set extraction from transaction templates (paper §3.1).
+//!
+//! Each SQL statement of a template yields one entry `e = ⟨A, C⟩`:
+//! `A` = accessed attributes, `C` = the selection condition, normalized
+//! to disjunctive normal form. Extraction is *pessimistic*: every
+//! statement of the template is included regardless of execution path.
+
+use crate::catalog::Schema;
+use crate::sqlir::{CmpOp, Literal, Pred, Scalar, SelectItem, Stmt};
+use crate::workload::spec::TxnTemplate;
+
+/// A table attribute `(table id, column id)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AttrId {
+    pub table: usize,
+    pub col: usize,
+}
+
+/// The right-hand side of an atomic condition, as the analysis sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Rhs {
+    /// A transaction *input* parameter (candidate partitioning parameter).
+    Param(String),
+    /// A compile-time constant.
+    Const(Literal),
+    /// Anything the analysis cannot reason about: derived values bound at
+    /// run time, column references, arithmetic. Conservatively treated as
+    /// "could be any value".
+    Opaque,
+}
+
+/// An atomic condition `attr op rhs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Atom {
+    pub attr: AttrId,
+    pub op: CmpOp,
+    pub rhs: Rhs,
+}
+
+/// A conjunction of atoms. An empty clause is `true`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Clause(pub Vec<Atom>);
+
+/// A disjunction of clauses. An empty DNF is `false`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Dnf(pub Vec<Clause>);
+
+impl Dnf {
+    pub fn false_() -> Dnf {
+        Dnf(Vec::new())
+    }
+
+    pub fn true_() -> Dnf {
+        Dnf(vec![Clause::default()])
+    }
+
+    pub fn is_false(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Distribute a conjunction of two DNFs.
+    pub fn and(&self, other: &Dnf) -> Dnf {
+        let mut out = Vec::with_capacity(self.0.len() * other.0.len());
+        for a in &self.0 {
+            for b in &other.0 {
+                let mut atoms = a.0.clone();
+                atoms.extend(b.0.iter().cloned());
+                out.push(Clause(atoms));
+            }
+        }
+        Dnf(out)
+    }
+
+    pub fn or(&self, other: &Dnf) -> Dnf {
+        let mut out = self.0.clone();
+        out.extend(other.0.iter().cloned());
+        Dnf(out)
+    }
+}
+
+/// One read- or write-set entry `⟨A, C⟩`.
+#[derive(Debug, Clone)]
+pub struct AccessEntry {
+    pub attrs: Vec<AttrId>,
+    pub cond: Dnf,
+    /// Statement name (diagnostics).
+    pub stmt: String,
+}
+
+/// The read and write sets of one transaction template.
+#[derive(Debug, Clone, Default)]
+pub struct RwSets {
+    pub reads: Vec<AccessEntry>,
+    pub writes: Vec<AccessEntry>,
+}
+
+/// Extraction options.
+#[derive(Debug, Clone, Copy)]
+pub struct ExtractOptions {
+    /// Paper-faithful mode (`false`): SELECT read attributes are the
+    /// *projected* columns only ("read and returned as output", §3.1).
+    /// Strict mode (`true`) additionally includes WHERE columns of
+    /// SELECTs and columns read by UPDATE SET arithmetic — a sound
+    /// over-approximation used by the ablation bench.
+    pub strict_reads: bool,
+}
+
+impl Default for ExtractOptions {
+    fn default() -> Self {
+        ExtractOptions { strict_reads: false }
+    }
+}
+
+/// Classify a scalar RHS given the template's input parameters.
+fn rhs_of(scalar: &Scalar, input_params: &[String]) -> Rhs {
+    match scalar {
+        Scalar::Lit(l) => Rhs::Const(l.clone()),
+        Scalar::Param(p) => {
+            if input_params.iter().any(|ip| ip == p) {
+                Rhs::Param(p.clone())
+            } else {
+                Rhs::Opaque
+            }
+        }
+        _ => Rhs::Opaque,
+    }
+}
+
+/// Normalize a WHERE predicate to DNF over analysis atoms.
+fn pred_to_dnf(pred: &Pred, table: usize, schema: &Schema, input_params: &[String]) -> Dnf {
+    match pred {
+        Pred::True => Dnf::true_(),
+        Pred::Cmp { col, op, rhs } => {
+            let ts = schema.table(table);
+            match ts.col_index(col) {
+                Some(ci) => {
+                    let atom = Atom {
+                        attr: AttrId { table, col: ci },
+                        op: *op,
+                        rhs: rhs_of(rhs, input_params),
+                    };
+                    Dnf(vec![Clause(vec![atom])])
+                }
+                // Unknown column: treat the atom as unconstrained (true).
+                None => Dnf::true_(),
+            }
+        }
+        Pred::And(ps) => {
+            let mut acc = Dnf::true_();
+            for p in ps {
+                acc = acc.and(&pred_to_dnf(p, table, schema, input_params));
+            }
+            acc
+        }
+        Pred::Or(ps) => {
+            let mut acc = Dnf::false_();
+            for p in ps {
+                acc = acc.or(&pred_to_dnf(p, table, schema, input_params));
+            }
+            acc
+        }
+    }
+}
+
+/// Extract the read and write sets of a template (paper §3.1).
+pub fn extract_rwsets(tpl: &TxnTemplate, schema: &Schema, opts: ExtractOptions) -> RwSets {
+    let mut rw = RwSets::default();
+    for (sname, stmt) in &tpl.stmts {
+        let table = match schema.table_id(stmt.table()) {
+            Some(t) => t,
+            None => panic!("template {}: unknown table {}", tpl.name, stmt.table()),
+        };
+        let ts = schema.table(table);
+        match stmt {
+            Stmt::Select(s) => {
+                let mut attrs: Vec<AttrId> = if s.items.is_empty() {
+                    (0..ts.ncols()).map(|col| AttrId { table, col }).collect()
+                } else {
+                    s.items
+                        .iter()
+                        .filter_map(|i| match i {
+                            SelectItem::Count => None,
+                            other => other
+                                .referenced_col()
+                                .and_then(|c| ts.col_index(c))
+                                .map(|col| AttrId { table, col }),
+                        })
+                        .collect()
+                };
+                // COUNT(*) reads row existence: model it as reading the PK.
+                if s.items.iter().any(|i| matches!(i, SelectItem::Count)) {
+                    for pkc in ts.pk_indices() {
+                        attrs.push(AttrId { table, col: pkc });
+                    }
+                }
+                if opts.strict_reads {
+                    let mut cols = Vec::new();
+                    s.where_.referenced_cols(&mut cols);
+                    for c in cols {
+                        if let Some(col) = ts.col_index(c) {
+                            attrs.push(AttrId { table, col });
+                        }
+                    }
+                }
+                attrs.sort_unstable();
+                attrs.dedup();
+                let cond = pred_to_dnf(&s.where_, table, schema, &tpl.params);
+                rw.reads.push(AccessEntry { attrs, cond, stmt: sname.clone() });
+            }
+            Stmt::Insert(ins) => {
+                // Write attributes: every column of the new row (also the
+                // implicit NULLs — the row springs into existence).
+                let attrs: Vec<AttrId> =
+                    (0..ts.ncols()).map(|col| AttrId { table, col }).collect();
+                // Condition: col = value for each explicitly inserted column
+                // (the paper's createCart example: SC.ID = sid).
+                let mut atoms = Vec::new();
+                for (c, v) in ins.columns.iter().zip(&ins.values) {
+                    if let Some(ci) = ts.col_index(c) {
+                        atoms.push(Atom {
+                            attr: AttrId { table, col: ci },
+                            op: CmpOp::Eq,
+                            rhs: rhs_of(v, &tpl.params),
+                        });
+                    }
+                }
+                rw.writes.push(AccessEntry {
+                    attrs,
+                    cond: Dnf(vec![Clause(atoms)]),
+                    stmt: sname.clone(),
+                });
+            }
+            Stmt::Update(u) => {
+                let mut attrs: Vec<AttrId> = u
+                    .sets
+                    .iter()
+                    .filter_map(|(c, _)| ts.col_index(c).map(|col| AttrId { table, col }))
+                    .collect();
+                attrs.sort_unstable();
+                attrs.dedup();
+                let cond = pred_to_dnf(&u.where_, table, schema, &tpl.params);
+                rw.writes.push(AccessEntry { attrs, cond: cond.clone(), stmt: sname.clone() });
+                if opts.strict_reads {
+                    // The UPDATE reads its WHERE columns and any columns in
+                    // SET arithmetic (e.g. STOCK = STOCK - ?q reads STOCK).
+                    let mut cols = Vec::new();
+                    u.where_.referenced_cols(&mut cols);
+                    for (_, v) in &u.sets {
+                        v.referenced_cols(&mut cols);
+                    }
+                    let mut rattrs: Vec<AttrId> = cols
+                        .into_iter()
+                        .filter_map(|c| ts.col_index(c).map(|col| AttrId { table, col }))
+                        .collect();
+                    rattrs.sort_unstable();
+                    rattrs.dedup();
+                    if !rattrs.is_empty() {
+                        rw.reads.push(AccessEntry { attrs: rattrs, cond, stmt: sname.clone() });
+                    }
+                }
+            }
+            Stmt::Delete(d) => {
+                // A delete writes (removes) every attribute of the rows.
+                let attrs: Vec<AttrId> =
+                    (0..ts.ncols()).map(|col| AttrId { table, col }).collect();
+                let cond = pred_to_dnf(&d.where_, table, schema, &tpl.params);
+                rw.writes.push(AccessEntry { attrs, cond, stmt: sname.clone() });
+            }
+        }
+    }
+    rw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{Schema, TableSchema, ValueType};
+
+    fn schema() -> Schema {
+        Schema::new(vec![TableSchema::new(
+            "SC",
+            &[("ID", ValueType::Int), ("I_ID", ValueType::Int), ("QTY", ValueType::Int)],
+            &["ID", "I_ID"],
+        )])
+    }
+
+    #[test]
+    fn paper_docart_write_set() {
+        // The paper's running example: doCart's UPDATE yields write entry
+        // ⟨{SC.QTY}, SC.ID = sid ∧ SC.I_ID = iid⟩.
+        let tpl = TxnTemplate::new(
+            "doCart",
+            &["sid", "iid", "q"],
+            &[("upd", "UPDATE SC SET QTY = ?q WHERE ID = ?sid AND I_ID = ?iid")],
+            1.0,
+        );
+        let rw = extract_rwsets(&tpl, &schema(), ExtractOptions::default());
+        assert_eq!(rw.reads.len(), 0);
+        assert_eq!(rw.writes.len(), 1);
+        let w = &rw.writes[0];
+        assert_eq!(w.attrs, vec![AttrId { table: 0, col: 2 }]); // QTY
+        assert_eq!(w.cond.0.len(), 1);
+        let clause = &w.cond.0[0];
+        assert_eq!(clause.0.len(), 2);
+        assert!(clause.0.iter().any(|a| a.attr.col == 0 && a.rhs == Rhs::Param("sid".into())));
+        assert!(clause.0.iter().any(|a| a.attr.col == 1 && a.rhs == Rhs::Param("iid".into())));
+    }
+
+    #[test]
+    fn paper_createcart_insert_condition() {
+        let tpl = TxnTemplate::new(
+            "createCart",
+            &["sid"],
+            &[("ins", "INSERT INTO SC (ID, I_ID, QTY) VALUES (?sid, 0, 0)")],
+            1.0,
+        );
+        let rw = extract_rwsets(&tpl, &schema(), ExtractOptions::default());
+        let w = &rw.writes[0];
+        // Insert writes all columns.
+        assert_eq!(w.attrs.len(), 3);
+        let clause = &w.cond.0[0];
+        // Condition: ID = sid AND I_ID = 0 AND QTY = 0.
+        assert!(clause.0.iter().any(|a| a.attr.col == 0 && a.rhs == Rhs::Param("sid".into())));
+        assert!(clause
+            .0
+            .iter()
+            .any(|a| a.attr.col == 1 && a.rhs == Rhs::Const(Literal::Int(0))));
+    }
+
+    #[test]
+    fn select_reads_projection_only_unless_strict() {
+        let tpl = TxnTemplate::new(
+            "getQty",
+            &["sid"],
+            &[("q", "SELECT QTY FROM SC WHERE ID = ?sid")],
+            1.0,
+        );
+        let rw = extract_rwsets(&tpl, &schema(), ExtractOptions::default());
+        assert_eq!(rw.reads[0].attrs, vec![AttrId { table: 0, col: 2 }]);
+        let rw = extract_rwsets(&tpl, &schema(), ExtractOptions { strict_reads: true });
+        // Strict mode adds the WHERE column ID.
+        assert_eq!(
+            rw.reads[0].attrs,
+            vec![AttrId { table: 0, col: 0 }, AttrId { table: 0, col: 2 }]
+        );
+    }
+
+    #[test]
+    fn derived_params_are_opaque() {
+        // `?derived` is not an input parameter of the template.
+        let tpl = TxnTemplate::new(
+            "useDerived",
+            &["sid"],
+            &[("q", "SELECT QTY FROM SC WHERE ID = ?derived")],
+            1.0,
+        );
+        let rw = extract_rwsets(&tpl, &schema(), ExtractOptions::default());
+        let atom = &rw.reads[0].cond.0[0].0[0];
+        assert_eq!(atom.rhs, Rhs::Opaque);
+    }
+
+    #[test]
+    fn or_where_produces_two_clauses() {
+        let tpl = TxnTemplate::new(
+            "either",
+            &["a", "b"],
+            &[("q", "SELECT QTY FROM SC WHERE ID = ?a OR ID = ?b")],
+            1.0,
+        );
+        let rw = extract_rwsets(&tpl, &schema(), ExtractOptions::default());
+        assert_eq!(rw.reads[0].cond.0.len(), 2);
+    }
+
+    #[test]
+    fn select_star_reads_all_columns() {
+        let tpl =
+            TxnTemplate::new("all", &["sid"], &[("q", "SELECT * FROM SC WHERE ID = ?sid")], 1.0);
+        let rw = extract_rwsets(&tpl, &schema(), ExtractOptions::default());
+        assert_eq!(rw.reads[0].attrs.len(), 3);
+    }
+
+    #[test]
+    fn delete_writes_all_columns() {
+        let tpl = TxnTemplate::new(
+            "rm",
+            &["sid"],
+            &[("d", "DELETE FROM SC WHERE ID = ?sid")],
+            1.0,
+        );
+        let rw = extract_rwsets(&tpl, &schema(), ExtractOptions::default());
+        assert_eq!(rw.writes[0].attrs.len(), 3);
+    }
+
+    #[test]
+    fn dnf_and_distributes() {
+        let a = Dnf(vec![Clause(vec![]), Clause(vec![])]); // true OR true
+        let b = Dnf(vec![Clause(vec![]), Clause(vec![]), Clause(vec![])]);
+        assert_eq!(a.and(&b).0.len(), 6);
+        assert!(Dnf::false_().and(&b).is_false());
+    }
+}

@@ -1,0 +1,137 @@
+//! The scalar reference scorer for Algorithm 1's cost function.
+//!
+//! `cost(P) = Σ_{t ≤ t'} conflict[t,t'] · (w(t)+w(t')) ·
+//!            [conflict not eliminated under (P[t], P[t'])]`
+//!
+//! This is the semantic ground truth; the AOT-compiled Pallas kernel
+//! computes the identical quantity in batch and is cross-checked against
+//! this function in tests (`rust/tests/cost_parity.rs`).
+
+use super::elim::EliminationTensor;
+
+/// A partitioning assignment: for each transaction, the index of its
+/// partitioning parameter (`None` = transaction has no usable parameter).
+pub type Assignment = Vec<Option<usize>>;
+
+/// Score one assignment.
+pub fn cost(tensor: &EliminationTensor, assign: &Assignment) -> f64 {
+    debug_assert_eq!(assign.len(), tensor.n);
+    let mut total = 0.0;
+    for t in 0..tensor.n {
+        for t2 in t..tensor.n {
+            if !tensor.conflict[t][t2] {
+                continue;
+            }
+            let eliminated = match (assign[t], assign[t2]) {
+                (Some(k), Some(k2)) => tensor.eliminated(t, t2, k, k2),
+                _ => false,
+            };
+            if !eliminated {
+                total += tensor.w2[t][t2];
+            }
+        }
+    }
+    total
+}
+
+/// Score a batch of assignments (the scalar counterpart of the AOT
+/// artifact's batched evaluation).
+pub fn cost_batch(tensor: &EliminationTensor, batch: &[Assignment]) -> Vec<f64> {
+    batch.iter().map(|a| cost(tensor, a)).collect()
+}
+
+/// Trait for pluggable batch scorers (scalar or PJRT-accelerated).
+pub trait BatchScorer: Send + Sync {
+    /// Score `batch`; must equal [`cost_batch`] on every input.
+    fn score(&self, tensor: &EliminationTensor, batch: &[Assignment]) -> Vec<f64>;
+    fn name(&self) -> &'static str;
+}
+
+/// The default scorer: the scalar reference.
+pub struct ScalarScorer;
+
+impl BatchScorer for ScalarScorer {
+    fn score(&self, tensor: &EliminationTensor, batch: &[Assignment]) -> Vec<f64> {
+        cost_batch(tensor, batch)
+    }
+
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::conflict::ConflictMatrix;
+    use crate::analysis::rwsets::{extract_rwsets, ExtractOptions};
+    use crate::catalog::{Schema, TableSchema, ValueType};
+    use crate::workload::spec::TxnTemplate;
+
+    fn tensor() -> EliminationTensor {
+        let schema = Schema::new(vec![TableSchema::new(
+            "SC",
+            &[("ID", ValueType::Int), ("I_ID", ValueType::Int), ("QTY", ValueType::Int)],
+            &["ID", "I_ID"],
+        )]);
+        let templates = vec![
+            TxnTemplate::new(
+                "createCart",
+                &["sid"],
+                &[("i", "INSERT INTO SC (ID, I_ID, QTY) VALUES (?sid, 0, 0)")],
+                1.0,
+            ),
+            TxnTemplate::new(
+                "doCart",
+                &["sid", "iid", "q"],
+                &[("u", "UPDATE SC SET QTY = ?q WHERE ID = ?sid AND I_ID = ?iid")],
+                2.0,
+            ),
+        ];
+        let rws: Vec<_> = templates
+            .iter()
+            .map(|t| extract_rwsets(t, &schema, ExtractOptions::default()))
+            .collect();
+        EliminationTensor::build(&templates, &ConflictMatrix::detect(&rws))
+    }
+
+    #[test]
+    fn best_assignment_costs_zero() {
+        let t = tensor();
+        // Both partition on sid: all three conflicts (0-0, 0-1, 1-1)
+        // eliminated.
+        assert_eq!(cost(&t, &vec![Some(0), Some(0)]), 0.0);
+    }
+
+    #[test]
+    fn bad_assignment_pays_weights() {
+        let t = tensor();
+        // doCart on iid: pair (0,1) costs 3.0; self (1,1) on (iid,iid):
+        // the WW self-conflict of doCart requires sid=sid' AND iid=iid'
+        // in its clause, so iid/iid covers it... check both plausible
+        // outcomes by computing explicitly.
+        let c = cost(&t, &vec![Some(0), Some(1)]);
+        // (0,0) self eliminated via sid; (0,1) pays 3.0; (1,1) covered by
+        // iid=iid' (the clause contains I_ID = iid on both sides).
+        assert_eq!(c, 3.0);
+    }
+
+    #[test]
+    fn none_assignment_pays_everything() {
+        let t = tensor();
+        let all = cost(&t, &vec![None, None]);
+        // Pairs: (0,0) w=2, (0,1) w=3, (1,1) w=4 => 9 total.
+        assert_eq!(all, 9.0);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let t = tensor();
+        let batch = vec![
+            vec![Some(0), Some(0)],
+            vec![Some(0), Some(1)],
+            vec![None, None],
+        ];
+        assert_eq!(cost_batch(&t, &batch), vec![0.0, 3.0, 9.0]);
+    }
+}

@@ -1,0 +1,5 @@
+//! Single-server and read-only-optimized baselines (paper §7.2).
+
+pub mod sim;
+
+pub use sim::{BaselineConfig, BaselineMode, BaselineReport, BaselineSim};

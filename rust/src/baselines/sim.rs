@@ -1,0 +1,373 @@
+//! WAN baselines of the paper's RQ2 experiments (§7.2):
+//!
+//! * **Centralized** — one server (at the first site); clients at all
+//!   sites pay the WAN round trip for every operation.
+//! * **Read-only optimization** — replicas at the first `n` sites;
+//!   read-only operations execute at the client's nearest replica
+//!   without coordination, writes go to the primary (site 0) and are
+//!   replicated asynchronously. "A common optimization offered by many
+//!   systems."
+//!
+//! Both keep the application unmodified and serializable, like Eliá.
+
+use crate::simnet::clients::{ClientPool, ClientsConfig};
+use crate::simnet::events::EventQueue;
+use crate::simnet::latency::LatencyMatrix;
+use crate::simnet::metrics::SimMetrics;
+use crate::simnet::station::Station;
+use crate::util::{Rng, VTime};
+use crate::workload::analyzed::AnalyzedApp;
+use crate::workload::generator::{OpGenerator, ServiceModel};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineMode {
+    Centralized,
+    /// Read-only ops at the nearest of `n_servers` replicas.
+    ReadOnly { n_servers: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct BaselineConfig {
+    pub mode: BaselineMode,
+    pub workers: usize,
+    pub service: ServiceModel,
+    /// CPU cost of applying one replicated write at a replica.
+    pub apply_ms: f64,
+    pub warmup: VTime,
+    pub horizon: VTime,
+    pub seed: u64,
+}
+
+impl BaselineConfig {
+    pub fn centralized() -> Self {
+        BaselineConfig {
+            mode: BaselineMode::Centralized,
+            workers: 8,
+            service: ServiceModel::default(),
+            apply_ms: 0.5,
+            warmup: VTime::from_secs(5),
+            horizon: VTime::from_secs(25),
+            seed: 0xBA5E,
+        }
+    }
+
+    pub fn read_only(n_servers: usize) -> Self {
+        BaselineConfig { mode: BaselineMode::ReadOnly { n_servers }, ..Self::centralized() }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Job {
+    Op(u64),
+    /// Replicated-write application at a replica.
+    Apply,
+}
+
+#[derive(Debug, Clone)]
+enum Ev {
+    Issue { client: usize },
+    Arrive { op: u64 },
+    ApplyArrive { server: usize },
+    JobDone { server: usize, job: Job },
+    Reply { op: u64 },
+}
+
+struct OpState {
+    txn: usize,
+    client: usize,
+    issued: VTime,
+    server: usize,
+    write: bool,
+}
+
+pub struct BaselineSim<'a> {
+    app: &'a AnalyzedApp,
+    /// Latency matrix over *client sites*; servers occupy the first sites.
+    sites: LatencyMatrix,
+    cfg: BaselineConfig,
+    gen: Box<dyn OpGenerator + 'a>,
+    clients: ClientPool,
+    stations: Vec<Station<Job>>,
+    ops: Vec<OpState>,
+    rng: Rng,
+    pub metrics: SimMetrics,
+    q: EventQueue<Ev>,
+}
+
+impl<'a> BaselineSim<'a> {
+    /// `sites` is the full client-site latency matrix (all five paper
+    /// sites in the WAN experiments); clients spread over all of them
+    /// regardless of how many servers the mode deploys.
+    pub fn new(
+        app: &'a AnalyzedApp,
+        sites: LatencyMatrix,
+        clients_cfg: ClientsConfig,
+        cfg: BaselineConfig,
+        gen: Box<dyn OpGenerator + 'a>,
+    ) -> Self {
+        let n_sites = sites.n();
+        let clients = ClientPool::new(ClientsConfig { sites: n_sites, ..clients_cfg });
+        let n_servers = match cfg.mode {
+            BaselineMode::Centralized => 1,
+            BaselineMode::ReadOnly { n_servers } => n_servers.min(n_sites).max(1),
+        };
+        let stations = (0..n_servers).map(|_| Station::new(cfg.workers)).collect();
+        let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
+        let rng = Rng::new(cfg.seed);
+        BaselineSim {
+            app,
+            sites,
+            cfg,
+            gen,
+            clients,
+            stations,
+            ops: Vec::new(),
+            rng,
+            metrics,
+            q: EventQueue::new(),
+        }
+    }
+
+    fn n_servers(&self) -> usize {
+        self.stations.len()
+    }
+
+    /// The server with the lowest latency from a client site.
+    fn nearest_server(&self, site: usize) -> usize {
+        (0..self.n_servers()).min_by_key(|&s| self.sites.one_way(site, s)).unwrap_or(0)
+    }
+
+    pub fn run(mut self) -> BaselineReport {
+        for c in 0..self.clients.n() {
+            let jitter = VTime::from_micros((c as u64 % 97) * 13);
+            self.q.schedule(jitter, Ev::Issue { client: c });
+        }
+        while let Some(t) = self.q.peek_time() {
+            if t > self.cfg.horizon {
+                break;
+            }
+            let (_, ev) = self.q.pop().unwrap();
+            self.handle(ev);
+        }
+        let now = self.cfg.horizon;
+        BaselineReport {
+            metrics: self.metrics.clone(),
+            utilization: self.stations.iter_mut().map(|s| s.utilization(now)).collect(),
+            events: self.q.processed(),
+        }
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Issue { client } => self.on_issue(client),
+            Ev::Arrive { op } => {
+                let (server, txn) = {
+                    let o = &self.ops[op as usize];
+                    (o.server, o.txn)
+                };
+                let service = self.cfg.service.sample(&self.app.spec.txns[txn], &mut self.rng);
+                self.submit(server, Job::Op(op), service);
+            }
+            Ev::ApplyArrive { server } => {
+                let apply = VTime::from_millis_f64(self.cfg.apply_ms);
+                self.submit(server, Job::Apply, apply);
+            }
+            Ev::JobDone { server, job } => self.on_job_done(server, job),
+            Ev::Reply { op } => self.on_reply(op),
+        }
+    }
+
+    fn submit(&mut self, server: usize, job: Job, service: VTime) {
+        let now = self.q.now();
+        if let Some(j) = self.stations[server].submit(now, job, service, false) {
+            self.q.schedule(j.service, Ev::JobDone { server, job: j.payload });
+        }
+    }
+
+    fn on_issue(&mut self, client: usize) {
+        let site = self.clients.site(client);
+        let n = self.n_servers();
+        let op = {
+            let mut r = self.clients.rng(client).fork();
+            self.gen.next_op(&mut r, site, n)
+        };
+        let write = !self.app.spec.txns[op.txn].is_read_only();
+        let server = match self.cfg.mode {
+            BaselineMode::Centralized => 0,
+            BaselineMode::ReadOnly { .. } => {
+                if write {
+                    0 // primary
+                } else {
+                    self.nearest_server(site)
+                }
+            }
+        };
+        let op_id = self.ops.len() as u64;
+        self.ops.push(OpState { txn: op.txn, client, issued: self.q.now(), server, write });
+        let delay = self.sites.one_way(site, server);
+        self.q.schedule(delay, Ev::Arrive { op: op_id });
+    }
+
+    fn on_job_done(&mut self, server: usize, job: Job) {
+        let now = self.q.now();
+        if let Some(next) = self.stations[server].complete(now) {
+            self.q.schedule(next.service, Ev::JobDone { server, job: next.payload });
+        }
+        if let Job::Op(op_id) = job {
+            let (client, write) = {
+                let o = &self.ops[op_id as usize];
+                (o.client, o.write)
+            };
+            // Read-only mode: writes replicate asynchronously to replicas.
+            if write && matches!(self.cfg.mode, BaselineMode::ReadOnly { .. }) {
+                for s in 1..self.n_servers() {
+                    let d = self.sites.one_way(server, s);
+                    self.q.schedule(d, Ev::ApplyArrive { server: s });
+                }
+            }
+            let site = self.clients.site(client);
+            let d = self.sites.one_way(server, site);
+            self.q.schedule(d, Ev::Reply { op: op_id });
+        }
+    }
+
+    fn on_reply(&mut self, op_id: u64) {
+        let (client, issued, write) = {
+            let o = &self.ops[op_id as usize];
+            (o.client, o.issued, o.write)
+        };
+        self.metrics.complete(issued, self.q.now(), write);
+        let think = self.clients.think(client);
+        self.q.schedule(think, Ev::Issue { client });
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BaselineReport {
+    pub metrics: SimMetrics,
+    pub utilization: Vec<f64>,
+    pub events: u64,
+}
+
+impl BaselineReport {
+    pub fn throughput(&self) -> f64 {
+        self.metrics.throughput()
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.metrics.latency.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{Schema, TableSchema, ValueType};
+    use crate::db::{Bindings, Value};
+    use crate::simnet::latency::Topology;
+    use crate::workload::spec::{AppSpec, Operation, TxnTemplate};
+
+    fn app() -> AnalyzedApp {
+        let schema = Schema::new(vec![TableSchema::new(
+            "T",
+            &[("K", ValueType::Int), ("V", ValueType::Int)],
+            &["K"],
+        )]);
+        let txns = vec![
+            TxnTemplate::new("read", &["k"], &[("q", "SELECT V FROM T WHERE K = ?k")], 1.0),
+            TxnTemplate::new(
+                "write",
+                &["k"],
+                &[("u", "UPDATE T SET V = V + 1 WHERE K = ?k")],
+                1.0,
+            ),
+        ];
+        AnalyzedApp::analyze(AppSpec { name: "kv".into(), schema, txns })
+    }
+
+    struct Gen {
+        write_ratio: f64,
+    }
+
+    impl OpGenerator for Gen {
+        fn next_op(&mut self, rng: &mut Rng, _site: usize, _n: usize) -> Operation {
+            let txn = if rng.chance(self.write_ratio) { 1 } else { 0 };
+            let args: Bindings =
+                [("k".to_string(), Value::Int(rng.range(0, 1000) as i64))].into_iter().collect();
+            Operation { txn, args }
+        }
+    }
+
+    fn run(mode: BaselineMode, clients: usize, write_ratio: f64) -> BaselineReport {
+        let app = app();
+        let cfg = BaselineConfig {
+            mode,
+            warmup: VTime::from_secs(2),
+            horizon: VTime::from_secs(10),
+            service: ServiceModel::fixed(5.0),
+            ..BaselineConfig::centralized()
+        };
+        BaselineSim::new(
+            &app,
+            Topology::wan_full_client(5),
+            ClientsConfig { n: clients, think_ms: 50.0, seed: 2, ..Default::default() },
+            cfg,
+            Box::new(Gen { write_ratio }),
+        )
+        .run()
+    }
+
+    #[test]
+    fn centralized_pays_wan_round_trips() {
+        let r = run(BaselineMode::Centralized, 10, 0.3);
+        // Mean latency must reflect WAN RTTs (G clients see ~20ms, A
+        // clients ~314ms; the cross-site mean is large).
+        let mean = r.mean_latency_ms();
+        assert!(mean > 100.0, "mean={mean}");
+        assert!(r.metrics.completed > 100);
+    }
+
+    #[test]
+    fn read_only_replicas_cut_read_latency() {
+        let cen = run(BaselineMode::Centralized, 10, 0.0);
+        let ro = run(BaselineMode::ReadOnly { n_servers: 5 }, 10, 0.0);
+        // Pure reads: every client hits its local replica.
+        assert!(
+            ro.mean_latency_ms() < cen.mean_latency_ms() / 3.0,
+            "ro={} cen={}",
+            ro.mean_latency_ms(),
+            cen.mean_latency_ms()
+        );
+    }
+
+    #[test]
+    fn writes_still_pay_primary_round_trip() {
+        let ro_reads = run(BaselineMode::ReadOnly { n_servers: 5 }, 10, 0.0);
+        let ro_writes = run(BaselineMode::ReadOnly { n_servers: 5 }, 10, 1.0);
+        assert!(
+            ro_writes.mean_latency_ms() > ro_reads.mean_latency_ms() * 2.0,
+            "writes={} reads={}",
+            ro_writes.mean_latency_ms(),
+            ro_reads.mean_latency_ms()
+        );
+    }
+
+    #[test]
+    fn centralized_saturates_with_load() {
+        let light = run(BaselineMode::Centralized, 5, 0.3);
+        let heavy = run(BaselineMode::Centralized, 1500, 0.3);
+        // One 8-thread server at 5 ms/op sustains ~1600 ops/s; the heavy
+        // run must sit near that ceiling with far higher latency.
+        assert!(heavy.throughput() < 1750.0, "tput={}", heavy.throughput());
+        assert!(heavy.mean_latency_ms() > 3.0 * light.mean_latency_ms());
+        assert!(heavy.utilization[0] > 0.9, "util={:?}", heavy.utilization);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(BaselineMode::ReadOnly { n_servers: 3 }, 20, 0.2);
+        let b = run(BaselineMode::ReadOnly { n_servers: 3 }, 20, 0.2);
+        assert_eq!(a.metrics.completed, b.metrics.completed);
+        assert_eq!(a.events, b.events);
+    }
+}

@@ -1,0 +1,159 @@
+//! Table schemas (the "catalog") shared by the engine and the analysis.
+
+use std::collections::HashMap;
+
+/// Column data types. The engine coerces bound values into the declared
+/// type on write, so storage stays uniformly typed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValueType {
+    Int,
+    Float,
+    Str,
+}
+
+/// A column definition.
+#[derive(Debug, Clone)]
+pub struct ColumnDef {
+    pub name: String,
+    pub ty: ValueType,
+}
+
+/// Schema of one table: ordered columns, primary-key columns (a prefix of
+/// typical OLTP designs, but any subset is allowed), and secondary
+/// single-column hash indexes.
+#[derive(Debug, Clone)]
+pub struct TableSchema {
+    pub name: String,
+    pub columns: Vec<ColumnDef>,
+    pub primary_key: Vec<String>,
+    pub indexes: Vec<String>,
+}
+
+impl TableSchema {
+    pub fn new(name: &str, columns: &[(&str, ValueType)], primary_key: &[&str]) -> Self {
+        TableSchema {
+            name: name.to_string(),
+            columns: columns
+                .iter()
+                .map(|(n, t)| ColumnDef { name: n.to_string(), ty: *t })
+                .collect(),
+            primary_key: primary_key.iter().map(|s| s.to_string()).collect(),
+            indexes: Vec::new(),
+        }
+    }
+
+    pub fn with_index(mut self, col: &str) -> Self {
+        assert!(self.col_index(col).is_some(), "index on unknown column {col}");
+        self.indexes.push(col.to_string());
+        self
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c.name.eq_ignore_ascii_case(name))
+    }
+
+    pub fn col_type(&self, name: &str) -> Option<ValueType> {
+        self.col_index(name).map(|i| self.columns[i].ty)
+    }
+
+    /// Column indexes of the primary key, in declaration order.
+    pub fn pk_indices(&self) -> Vec<usize> {
+        self.primary_key
+            .iter()
+            .map(|c| self.col_index(c).expect("pk column must exist"))
+            .collect()
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.columns.len()
+    }
+}
+
+/// A database schema: a set of tables with stable integer ids.
+#[derive(Debug, Clone, Default)]
+pub struct Schema {
+    tables: Vec<TableSchema>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Schema {
+    pub fn new(tables: Vec<TableSchema>) -> Self {
+        let mut by_name = HashMap::new();
+        for (i, t) in tables.iter().enumerate() {
+            let prev = by_name.insert(t.name.to_ascii_uppercase(), i);
+            assert!(prev.is_none(), "duplicate table {}", t.name);
+        }
+        Schema { tables, by_name }
+    }
+
+    pub fn table_id(&self, name: &str) -> Option<usize> {
+        self.by_name.get(&name.to_ascii_uppercase()).copied()
+    }
+
+    pub fn table(&self, id: usize) -> &TableSchema {
+        &self.tables[id]
+    }
+
+    pub fn table_by_name(&self, name: &str) -> Option<&TableSchema> {
+        self.table_id(name).map(|i| &self.tables[i])
+    }
+
+    pub fn tables(&self) -> &[TableSchema] {
+        &self.tables
+    }
+
+    pub fn ntables(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Schema {
+        Schema::new(vec![
+            TableSchema::new(
+                "ITEMS",
+                &[("ID", ValueType::Int), ("TITLE", ValueType::Str), ("STOCK", ValueType::Int)],
+                &["ID"],
+            )
+            .with_index("TITLE"),
+            TableSchema::new(
+                "CARTS",
+                &[("ID", ValueType::Int), ("OWNER", ValueType::Int)],
+                &["ID"],
+            ),
+        ])
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        let s = sample();
+        assert_eq!(s.table_id("items"), Some(0));
+        assert_eq!(s.table_id("Carts"), Some(1));
+        assert_eq!(s.table_id("NOPE"), None);
+        assert_eq!(s.table(0).col_index("stock"), Some(2));
+    }
+
+    #[test]
+    fn pk_indices_resolve() {
+        let s = sample();
+        assert_eq!(s.table(0).pk_indices(), vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate table")]
+    fn duplicate_table_panics() {
+        Schema::new(vec![
+            TableSchema::new("T", &[("A", ValueType::Int)], &["A"]),
+            TableSchema::new("t", &[("A", ValueType::Int)], &["A"]),
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown column")]
+    fn index_on_unknown_column_panics() {
+        let _ = TableSchema::new("T", &[("A", ValueType::Int)], &["A"]).with_index("B");
+    }
+}

@@ -1,0 +1,10 @@
+//! The data-partitioning baseline: a MySQL-Cluster-like deployment with
+//! horizontal partitioning, distributed transactions (row locks + 2PC)
+//! and read-committed isolation — the system Eliá is compared against in
+//! the paper's RQ1 experiments.
+
+pub mod footprint;
+pub mod sim;
+
+pub use footprint::{footprint, Footprint, ShardDemand, StmtAccess};
+pub use sim::{ClusterConfig, ClusterReport, ClusterSim};

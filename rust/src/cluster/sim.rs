@@ -1,0 +1,554 @@
+//! Simulation of the data-partitioning baseline: a MySQL-Cluster-like
+//! system with horizontal partitioning, distributed row locks and
+//! two-phase commit, at read-committed isolation (paper §7.1).
+//!
+//! Model per operation:
+//! * the client talks to the nearest server, which acts as coordinator;
+//! * the shards touched come from the template's [`Footprint`];
+//! * writes take virtual row locks on their partition keys that are held
+//!   for the whole transaction, including the 2PC rounds — the paper's
+//!   "necessary coordination with remote machines prevents the progress
+//!   of concurrent conflicting transactions";
+//! * multi-shard reads scatter-gather (one round), multi-shard writes run
+//!   2PC (prepare round + commit round);
+//! * every remote interaction costs CPU on both ends, so coordination
+//!   eats aggregate capacity as the distributed fraction grows with N —
+//!   the mechanism behind MySQL Cluster's peak at ~4 servers.
+
+use crate::simnet::clients::{ClientPool, ClientsConfig};
+use crate::simnet::events::EventQueue;
+use crate::simnet::latency::Topology;
+use crate::simnet::metrics::SimMetrics;
+use crate::simnet::station::Station;
+use crate::util::{Rng, VTime};
+use crate::workload::analyzed::AnalyzedApp;
+use crate::workload::generator::{OpGenerator, ServiceModel};
+
+use std::collections::HashMap;
+
+use super::footprint::{footprint, Footprint, ShardDemand};
+
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub workers: usize,
+    pub service: ServiceModel,
+    /// Fraction of the full service time a remote shard spends on its
+    /// share of a distributed transaction.
+    pub remote_exec_frac: f64,
+    /// CPU cost of handling one coordination message.
+    pub msg_cpu_ms: f64,
+    pub warmup: VTime,
+    pub horizon: VTime,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            // Same thread-pool sizing as the Eliá servers (fair baseline).
+            workers: 8,
+            service: ServiceModel::default(),
+            // A 2PC participant re-executes its share of the transaction
+            // (prepare) and applies the decision; coordination messages
+            // cost CPU on both ends.
+            remote_exec_frac: 0.8,
+            msg_cpu_ms: 0.8,
+            warmup: VTime::from_secs(5),
+            horizon: VTime::from_secs(25),
+            seed: 0xC1B5,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Job {
+    Coord(u64),
+    Remote { op: u64, shard: usize },
+    /// Fire-and-forget commit application at a participant.
+    CommitApply,
+}
+
+#[derive(Debug, Clone)]
+enum Ev {
+    Issue { client: usize },
+    Arrive { op: u64 },
+    LockStart { op: u64 },
+    JobDone { server: usize, job: Job },
+    /// Prepare/read request lands at a participant shard.
+    PrepareArrive { op: u64, shard: usize },
+    VoteArrive { op: u64 },
+    /// Commit decision lands at a participant shard.
+    CommitArrive { shard: usize },
+    Complete { op: u64 },
+    Reply { op: u64 },
+}
+
+struct OpState {
+    client: usize,
+    issued: VTime,
+    coordinator: usize,
+    demand: ShardDemand,
+    votes_pending: usize,
+    service: VTime,
+    distributed: bool,
+}
+
+pub struct ClusterSim<'a> {
+    app: &'a AnalyzedApp,
+    topo: Topology,
+    cfg: ClusterConfig,
+    gen: Box<dyn OpGenerator + 'a>,
+    clients: ClientPool,
+    stations: Vec<Station<Job>>,
+    footprints: Vec<Footprint>,
+    ops: Vec<OpState>,
+    /// Virtual row-lock table: key -> earliest next acquisition time.
+    locks: HashMap<(usize, u64), VTime>,
+    rng: Rng,
+    pub metrics: SimMetrics,
+    q: EventQueue<Ev>,
+    lock_waits: u64,
+}
+
+impl<'a> ClusterSim<'a> {
+    pub fn new(
+        app: &'a AnalyzedApp,
+        topo: Topology,
+        clients_cfg: ClientsConfig,
+        cfg: ClusterConfig,
+        gen: Box<dyn OpGenerator + 'a>,
+    ) -> Self {
+        let n = topo.n();
+        let clients = ClientPool::new(ClientsConfig { sites: n, ..clients_cfg });
+        let stations = (0..n).map(|_| Station::new(cfg.workers)).collect();
+        let footprints =
+            app.spec.txns.iter().map(|t| footprint(t, &app.spec.schema)).collect();
+        let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
+        let rng = Rng::new(cfg.seed);
+        ClusterSim {
+            app,
+            topo,
+            cfg,
+            gen,
+            clients,
+            stations,
+            footprints,
+            ops: Vec::new(),
+            locks: HashMap::new(),
+            rng,
+            metrics,
+            q: EventQueue::new(),
+            lock_waits: 0,
+        }
+    }
+
+    pub fn run(mut self) -> ClusterReport {
+        for c in 0..self.clients.n() {
+            let jitter = VTime::from_micros((c as u64 % 97) * 13);
+            self.q.schedule(jitter, Ev::Issue { client: c });
+        }
+        while let Some(t) = self.q.peek_time() {
+            if t > self.cfg.horizon {
+                break;
+            }
+            let (_, ev) = self.q.pop().unwrap();
+            self.handle(ev);
+        }
+        let now = self.cfg.horizon;
+        ClusterReport {
+            metrics: self.metrics.clone(),
+            utilization: self.stations.iter_mut().map(|s| s.utilization(now)).collect(),
+            lock_waits: self.lock_waits,
+            events: self.q.processed(),
+        }
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Issue { client } => self.on_issue(client),
+            Ev::Arrive { op } => self.on_arrive(op),
+            Ev::LockStart { op } => self.on_lock_start(op),
+            Ev::JobDone { server, job } => self.on_job_done(server, job),
+            Ev::PrepareArrive { op, shard } => self.on_prepare(op, shard),
+            Ev::VoteArrive { op } => self.on_vote(op),
+            Ev::CommitArrive { shard } => {
+                let apply = VTime::from_millis_f64(self.cfg.msg_cpu_ms);
+                self.submit(shard, Job::CommitApply, apply, false);
+            }
+            Ev::Complete { op } => self.on_complete(op),
+            Ev::Reply { op } => self.on_reply(op),
+        }
+    }
+
+    fn submit(&mut self, server: usize, job: Job, service: VTime, priority: bool) {
+        let now = self.q.now();
+        if let Some(j) = self.stations[server].submit(now, job, service, priority) {
+            self.q.schedule(j.service, Ev::JobDone { server, job: j.payload });
+        }
+    }
+
+    fn on_issue(&mut self, client: usize) {
+        let n = self.topo.n();
+        let site = self.clients.site(client);
+        let op = {
+            let mut r = self.clients.rng(client).fork();
+            self.gen.next_op(&mut r, site, n)
+        };
+        let coordinator = site % n;
+        let demand = self.footprints[op.txn].demand(&op.args, n, &mut self.rng);
+        let service = self.cfg.service.sample(&self.app.spec.txns[op.txn], &mut self.rng);
+        let distributed = demand.shards.iter().any(|&s| s != coordinator);
+        let op_id = self.ops.len() as u64;
+        self.ops.push(OpState {
+            client,
+            issued: self.q.now(),
+            coordinator,
+            demand,
+            votes_pending: 0,
+            service,
+            distributed,
+        });
+        let delay = self.topo.servers.one_way(site, coordinator);
+        self.q.schedule(delay, Ev::Arrive { op: op_id });
+    }
+
+    /// Estimated lock hold: local execution plus the coordination rounds.
+    fn estimate_hold(&self, op: &OpState) -> VTime {
+        let mut hold = op.service;
+        let remotes: Vec<usize> = op
+            .demand
+            .shards
+            .iter()
+            .copied()
+            .filter(|&s| s != op.coordinator)
+            .collect();
+        if !remotes.is_empty() {
+            let max_rtt = remotes
+                .iter()
+                .map(|&s| self.topo.servers.rtt(op.coordinator, s))
+                .max()
+                .unwrap();
+            let rounds = if op.demand.read_only { 1 } else { 2 };
+            hold += VTime::from_micros(max_rtt.as_micros() * rounds);
+        }
+        hold
+    }
+
+    fn on_arrive(&mut self, op_id: u64) {
+        let now = self.q.now();
+        // Read-committed: read-only transactions take no locks.
+        let (start, hold) = {
+            let op = &self.ops[op_id as usize];
+            if op.demand.write_keys.is_empty() {
+                (now, VTime::ZERO)
+            } else {
+                let hold = self.estimate_hold(op);
+                let mut start = now;
+                for key in &op.demand.write_keys {
+                    if let Some(&avail) = self.locks.get(key) {
+                        if avail > start {
+                            start = avail;
+                        }
+                    }
+                }
+                (start, hold)
+            }
+        };
+        if start > now {
+            self.lock_waits += 1;
+        }
+        // Reserve the locks until the estimated release.
+        let keys: Vec<(usize, u64)> = self.ops[op_id as usize].demand.write_keys.clone();
+        for key in keys {
+            self.locks.insert(key, start + hold);
+        }
+        self.q.schedule_at(start, Ev::LockStart { op: op_id });
+    }
+
+    fn on_lock_start(&mut self, op_id: u64) {
+        let (coordinator, service, n_remotes) = {
+            let op = &self.ops[op_id as usize];
+            let n_remotes =
+                op.demand.shards.iter().filter(|&&s| s != op.coordinator).count();
+            (op.coordinator, op.service, n_remotes)
+        };
+        // Coordinator executes its share plus per-remote message handling.
+        let coord_service =
+            service + VTime::from_millis_f64(self.cfg.msg_cpu_ms * n_remotes as f64);
+        self.submit(coordinator, Job::Coord(op_id), coord_service, false);
+    }
+
+    fn on_job_done(&mut self, server: usize, job: Job) {
+        let now = self.q.now();
+        if let Some(next) = self.stations[server].complete(now) {
+            self.q.schedule(next.service, Ev::JobDone { server, job: next.payload });
+        }
+        match job {
+            Job::Coord(op_id) => {
+                let remotes: Vec<usize> = {
+                    let op = &self.ops[op_id as usize];
+                    op.demand
+                        .shards
+                        .iter()
+                        .copied()
+                        .filter(|&s| s != op.coordinator)
+                        .collect()
+                };
+                if remotes.is_empty() {
+                    self.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
+                    return;
+                }
+                self.ops[op_id as usize].votes_pending = remotes.len();
+                let coordinator = self.ops[op_id as usize].coordinator;
+                for shard in remotes {
+                    let d = self.topo.servers.one_way(coordinator, shard);
+                    self.q.schedule(d, Ev::PrepareArrive { op: op_id, shard });
+                }
+            }
+            Job::Remote { op: op_id, shard } => {
+                // Remote share done: vote travels back.
+                let coordinator = self.ops[op_id as usize].coordinator;
+                let d = self.topo.servers.one_way(shard, coordinator);
+                self.q.schedule(d, Ev::VoteArrive { op: op_id });
+            }
+            Job::CommitApply => {}
+        }
+    }
+
+    /// Prepare/read request landed at a participant: charge its CPU share.
+    fn on_prepare(&mut self, op_id: u64, shard: usize) {
+        let service = self.ops[op_id as usize].service;
+        let remote_service = VTime::from_millis_f64(
+            service.as_millis_f64() * self.cfg.remote_exec_frac + self.cfg.msg_cpu_ms,
+        );
+        self.submit(shard, Job::Remote { op: op_id, shard }, remote_service, false);
+    }
+
+    fn on_vote(&mut self, op_id: u64) {
+        let done = {
+            let op = &mut self.ops[op_id as usize];
+            op.votes_pending -= 1;
+            op.votes_pending == 0
+        };
+        if !done {
+            return;
+        }
+        let (read_only, coordinator, remotes): (bool, usize, Vec<usize>) = {
+            let op = &self.ops[op_id as usize];
+            (
+                op.demand.read_only,
+                op.coordinator,
+                op.demand.shards.iter().copied().filter(|&s| s != op.coordinator).collect(),
+            )
+        };
+        if read_only {
+            // Scatter-gather read: done once all results are in.
+            self.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
+        } else {
+            // 2PC commit round: decision to all participants + acks; the
+            // commit application costs CPU at each participant.
+            let mut max_rtt = VTime::ZERO;
+            for &shard in &remotes {
+                let one = self.topo.servers.one_way(coordinator, shard);
+                if one + one > max_rtt {
+                    max_rtt = one + one;
+                }
+                self.q.schedule(one, Ev::CommitArrive { shard });
+            }
+            self.q.schedule(max_rtt, Ev::Complete { op: op_id });
+        }
+    }
+
+    fn on_complete(&mut self, op_id: u64) {
+        let (client, coordinator) = {
+            let op = &self.ops[op_id as usize];
+            (op.client, op.coordinator)
+        };
+        let site = self.clients.site(client);
+        let delay = self.topo.servers.one_way(coordinator, site);
+        self.q.schedule(delay, Ev::Reply { op: op_id });
+    }
+
+    fn on_reply(&mut self, op_id: u64) {
+        let (client, issued, distributed) = {
+            let op = &self.ops[op_id as usize];
+            (op.client, op.issued, op.distributed)
+        };
+        self.metrics.complete(issued, self.q.now(), distributed);
+        let think = self.clients.think(client);
+        self.q.schedule(think, Ev::Issue { client });
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub metrics: SimMetrics,
+    pub utilization: Vec<f64>,
+    pub lock_waits: u64,
+    pub events: u64,
+}
+
+impl ClusterReport {
+    pub fn throughput(&self) -> f64 {
+        self.metrics.throughput()
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.metrics.latency.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{Schema, TableSchema, ValueType};
+    use crate::db::{Bindings, Value};
+    use crate::workload::spec::{AppSpec, Operation, TxnTemplate};
+
+    fn app() -> AnalyzedApp {
+        let schema = Schema::new(vec![
+            TableSchema::new(
+                "CARTS",
+                &[("CID", ValueType::Int), ("QTY", ValueType::Int)],
+                &["CID"],
+            ),
+            TableSchema::new(
+                "STOCK",
+                &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int)],
+                &["ITEM"],
+            ),
+        ]);
+        let txns = vec![
+            TxnTemplate::new(
+                "add",
+                &["cid"],
+                &[("u", "UPDATE CARTS SET QTY = QTY + 1 WHERE CID = ?cid")],
+                1.0,
+            ),
+            TxnTemplate::new(
+                "order",
+                &["cid"],
+                &[
+                    ("r", "SELECT QTY FROM CARTS WHERE CID = ?cid"),
+                    ("w", "UPDATE STOCK SET LEVEL = LEVEL - 1 WHERE ITEM = ?derived"),
+                ],
+                1.0,
+            ),
+            TxnTemplate::new(
+                "view",
+                &["cid"],
+                &[("q", "SELECT QTY FROM CARTS WHERE CID = ?cid")],
+                1.0,
+            ),
+        ];
+        AnalyzedApp::analyze(AppSpec { name: "cart".into(), schema, txns })
+    }
+
+    struct Gen {
+        write_ratio: f64,
+    }
+
+    impl OpGenerator for Gen {
+        fn next_op(&mut self, rng: &mut Rng, _site: usize, _n: usize) -> Operation {
+            let cid = rng.range(0, 5000) as i64;
+            let args: Bindings = [("cid".to_string(), Value::Int(cid))].into_iter().collect();
+            if rng.chance(self.write_ratio) {
+                if rng.chance(0.5) {
+                    Operation { txn: 0, args }
+                } else {
+                    Operation { txn: 1, args }
+                }
+            } else {
+                Operation { txn: 2, args }
+            }
+        }
+    }
+
+    fn run(n: usize, clients: usize, write_ratio: f64) -> ClusterReport {
+        let app = app();
+        let cfg = ClusterConfig {
+            warmup: VTime::from_secs(2),
+            horizon: VTime::from_secs(10),
+            service: ServiceModel::fixed(5.0),
+            ..Default::default()
+        };
+        ClusterSim::new(
+            &app,
+            Topology::lan(n),
+            ClientsConfig { n: clients, think_ms: 10.0, seed: 11, ..Default::default() },
+            cfg,
+            Box::new(Gen { write_ratio }),
+        )
+        .run()
+    }
+
+    #[test]
+    fn single_server_is_all_local() {
+        let r = run(1, 20, 0.5);
+        assert!(r.metrics.completed > 500);
+        // No remote coordination on one server.
+        assert_eq!(r.metrics.global_latency.count(), 0);
+    }
+
+    #[test]
+    fn distributed_fraction_appears_with_shards() {
+        let r = run(4, 20, 0.5);
+        let dist = r.metrics.global_latency.count() as f64;
+        let local = r.metrics.local_latency.count() as f64;
+        // With 4 shards most point ops are remote (3/4 expected).
+        assert!(dist / (dist + local) > 0.5, "dist={dist} local={local}");
+        // Distributed ops must be slower (they pay RTTs).
+        assert!(r.metrics.global_latency.mean() > r.metrics.local_latency.mean() + 5.0);
+    }
+
+    #[test]
+    fn write_heavy_suffers_more_than_read_heavy() {
+        let wr = run(6, 40, 0.8);
+        let rd = run(6, 40, 0.1);
+        // Read-heavy completes more with the same offered load (reads take
+        // no locks and only one round).
+        assert!(
+            rd.metrics.latency.mean() < wr.metrics.latency.mean(),
+            "read mean {} vs write mean {}",
+            rd.metrics.latency.mean(),
+            wr.metrics.latency.mean()
+        );
+    }
+
+    #[test]
+    fn hot_key_contention_serializes() {
+        // All writes to one cart: lock queueing must show up.
+        struct HotGen;
+        impl OpGenerator for HotGen {
+            fn next_op(&mut self, _rng: &mut Rng, _site: usize, _n: usize) -> Operation {
+                let args: Bindings =
+                    [("cid".to_string(), Value::Int(7))].into_iter().collect();
+                Operation { txn: 0, args }
+            }
+        }
+        let app = app();
+        let cfg = ClusterConfig {
+            warmup: VTime::from_secs(2),
+            horizon: VTime::from_secs(10),
+            service: ServiceModel::fixed(5.0),
+            ..Default::default()
+        };
+        let r = ClusterSim::new(
+            &app,
+            Topology::lan(3),
+            ClientsConfig { n: 30, think_ms: 0.0, seed: 5, ..Default::default() },
+            cfg,
+            Box::new(HotGen),
+        )
+        .run();
+        assert!(r.lock_waits > 100, "lock_waits={}", r.lock_waits);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(4, 25, 0.3);
+        let b = run(4, 25, 0.3);
+        assert_eq!(a.metrics.completed, b.metrics.completed);
+        assert_eq!(a.events, b.events);
+    }
+}

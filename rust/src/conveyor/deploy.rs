@@ -1,0 +1,508 @@
+//! Real-threads Eliá deployment: Algorithm 2 running over OS threads,
+//! one embedded DBMS instance per server, with genuine concurrency.
+//!
+//! This is the runtime the examples and the serializability tests use —
+//! everything the simulator models (token rotation, pending queues,
+//! commit-order tracing) happens here for real:
+//!
+//! * client threads call [`Deployment::submit`]; local and commutative
+//!   operations execute immediately on the target server's DBMS
+//!   (Algorithm 2 lines 2-4);
+//! * global operations park in the server's pending queue (line 6) until
+//!   the token thread takes a snapshot and wakes them (the paper's §5
+//!   "parallelizing the execution of global operations": handling threads
+//!   execute, the token thread waits on a countdown);
+//! * state updates are appended in DBMS commit order via the engine's
+//!   `commit_with` hook (§5 "tracing the sequential order");
+//! * a dedicated token thread rotates the token, applying remote updates
+//!   at each stop (lines 10-15), with optional injected per-hop latency
+//!   to emulate WAN deployments.
+
+use crate::db::{Db, StateUpdate, TxnError};
+use crate::workload::analyzed::{AnalyzedApp, Route};
+use crate::workload::spec::{Operation, Reply, TxnCtx};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::token::Token;
+
+/// Configuration of a real-threads deployment.
+#[derive(Debug, Clone)]
+pub struct DeployConfig {
+    pub n_servers: usize,
+    /// Injected token hop latency (0 for tests; set to one-way site
+    /// latency to emulate WAN rings).
+    pub hop_delay: Duration,
+    /// Idle pause when a rotation found no work anywhere (keeps the
+    /// token thread from spinning).
+    pub idle_pause: Duration,
+    /// Max retries for lock-aborted operations before giving up.
+    pub max_retries: u32,
+}
+
+impl Default for DeployConfig {
+    fn default() -> Self {
+        DeployConfig {
+            n_servers: 3,
+            hop_delay: Duration::ZERO,
+            idle_pause: Duration::from_micros(200),
+            max_retries: 1000,
+        }
+    }
+}
+
+/// State of one parked global operation.
+struct Parked {
+    op: Operation,
+    go: Mutex<bool>,
+    cv: Condvar,
+}
+
+struct RoundShared {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    /// Updates in DBMS commit order (the paper's U queue).
+    updates: Mutex<Vec<StateUpdate>>,
+}
+
+struct ServerNode {
+    db: Db,
+    pending: Mutex<Vec<Arc<Parked>>>,
+    round: Mutex<Option<Arc<RoundShared>>>,
+}
+
+/// A running multi-server Eliá deployment.
+pub struct Deployment {
+    app: Arc<AnalyzedApp>,
+    /// Statement maps precomputed per template (perf: building a HashMap
+    /// per submitted operation was ~8% of the request path — see
+    /// EXPERIMENTS.md §Perf).
+    stmt_maps: Vec<std::collections::HashMap<String, crate::sqlir::Stmt>>,
+    cfg: DeployConfig,
+    servers: Vec<Arc<ServerNode>>,
+    stop: Arc<AtomicBool>,
+    token_thread: Mutex<Option<std::thread::JoinHandle<Token>>>,
+    pub ops_local: AtomicU64,
+    pub ops_global: AtomicU64,
+    pub retries: AtomicU64,
+}
+
+impl Deployment {
+    /// Start a deployment: builds per-server DBs (seeded by `seed_db`)
+    /// and launches the token thread.
+    pub fn start(
+        app: Arc<AnalyzedApp>,
+        cfg: DeployConfig,
+        seed_db: impl Fn(&Db),
+    ) -> Arc<Self> {
+        let servers: Vec<Arc<ServerNode>> = (0..cfg.n_servers)
+            .map(|_| {
+                let db = Db::new(app.spec.schema.clone());
+                seed_db(&db);
+                Arc::new(ServerNode {
+                    db,
+                    pending: Mutex::new(Vec::new()),
+                    round: Mutex::new(None),
+                })
+            })
+            .collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stmt_maps = app.spec.txns.iter().map(|t| t.stmt_map()).collect();
+        let dep = Arc::new(Deployment {
+            app,
+            stmt_maps,
+            cfg: cfg.clone(),
+            servers,
+            stop: Arc::clone(&stop),
+            token_thread: Mutex::new(None),
+            ops_local: AtomicU64::new(0),
+            ops_global: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+        });
+        let dep2 = Arc::clone(&dep);
+        let handle = std::thread::Builder::new()
+            .name("conveyor-token".into())
+            .spawn(move || dep2.token_loop())
+            .expect("spawn token thread");
+        *dep.token_thread.lock().unwrap() = Some(handle);
+        dep
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Direct access to a server's DBMS (tests: seed checks, hashes).
+    pub fn db(&self, server: usize) -> &Db {
+        &self.servers[server].db
+    }
+
+    /// Submit one operation from a client thread and wait for its reply.
+    /// This is Eliá's full request path: route, execute or park, reply.
+    pub fn submit(&self, op: Operation) -> Result<Reply, TxnError> {
+        let n = self.servers.len();
+        match self.app.route(&op, n) {
+            Route::Any => {
+                self.ops_local.fetch_add(1, Ordering::Relaxed);
+                // Commutative: any server; pick by cheap hash for spread.
+                let s = (op.txn + op.args.len()) % n;
+                self.execute_local(s, &op)
+            }
+            Route::LocalAt(s) => {
+                self.ops_local.fetch_add(1, Ordering::Relaxed);
+                self.execute_local(s, &op)
+            }
+            Route::GlobalAt(s) => {
+                self.ops_global.fetch_add(1, Ordering::Relaxed);
+                self.submit_global(s, op)
+            }
+        }
+    }
+
+    /// Execute a local/commutative operation immediately (with wait-die
+    /// retries), like Algorithm 2 lines 2-4.
+    fn execute_local(&self, server: usize, op: &Operation) -> Result<Reply, TxnError> {
+        let node = &self.servers[server];
+        let tpl = &self.app.spec.txns[op.txn];
+        let stmts = &self.stmt_maps[op.txn];
+        let body = tpl.body.as_ref().expect("template needs a body for execution");
+        let mut attempts = 0;
+        loop {
+            let mut handle = node.db.begin();
+            let mut ctx = TxnCtx::new(&mut handle, stmts);
+            match body(&mut ctx, &op.args) {
+                Ok(reply) => match handle.commit() {
+                    Ok(_update) => return Ok(reply),
+                    Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
+                        attempts += 1;
+                        self.retries.fetch_add(1, Ordering::Relaxed);
+                        std::thread::yield_now();
+                    }
+                    Err(e) => return Err(e),
+                },
+                Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
+                    handle.abort();
+                    attempts += 1;
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::yield_now();
+                }
+                Err(e) => {
+                    handle.abort();
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Park a global operation until the token arrives, then execute it
+    /// on this (handling) thread, appending the update in commit order.
+    fn submit_global(&self, server: usize, op: Operation) -> Result<Reply, TxnError> {
+        let node = &self.servers[server];
+        let parked = Arc::new(Parked { op, go: Mutex::new(false), cv: Condvar::new() });
+        node.pending.lock().unwrap().push(Arc::clone(&parked));
+
+        // Wait for the token thread's wake-up (the initially-locked lock
+        // of the paper's §5).
+        {
+            let mut go = parked.go.lock().unwrap();
+            while !*go {
+                go = parked.cv.wait(go).unwrap();
+            }
+        }
+
+        // Execute with commit-order tracing into the round's U queue.
+        let round = self.servers[server]
+            .round
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("round must be active when a parked op runs");
+        let tpl = &self.app.spec.txns[parked.op.txn];
+        let stmts = &self.stmt_maps[parked.op.txn];
+        let body = tpl.body.as_ref().expect("template needs a body");
+        let mut attempts = 0;
+        let result = loop {
+            let mut handle = node.db.begin();
+            let mut ctx = TxnCtx::new(&mut handle, stmts);
+            match body(&mut ctx, &parked.op.args) {
+                Ok(reply) => {
+                    match handle.commit_with(|u| {
+                        // Hook runs before lock release: the append order
+                        // equals the DBMS serialization order.
+                        round.updates.lock().unwrap().push(u.clone());
+                    }) {
+                        Ok(_) => break Ok(reply),
+                        Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
+                            attempts += 1;
+                            self.retries.fetch_add(1, Ordering::Relaxed);
+                            std::thread::yield_now();
+                        }
+                        Err(e) => break Err(e),
+                    }
+                }
+                Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
+                    handle.abort();
+                    attempts += 1;
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::yield_now();
+                }
+                Err(e) => {
+                    handle.abort();
+                    break Err(e);
+                }
+            }
+        };
+
+        // Signal the token thread (the semaphore of §5).
+        {
+            let mut remaining = round.remaining.lock().unwrap();
+            *remaining -= 1;
+            if *remaining == 0 {
+                round.cv.notify_all();
+            }
+        }
+        result
+    }
+
+    /// The token thread: rotate, apply, wake, collect (Algorithm 2 lines
+    /// 10-22).
+    fn token_loop(&self) -> Token {
+        let n = self.servers.len();
+        let mut token = Token::new(n);
+        let mut idle_rounds = 0;
+        while !self.stop.load(Ordering::Relaxed) {
+            let mut any_work = false;
+            for p in 0..n {
+                if self.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                if !self.cfg.hop_delay.is_zero() {
+                    std::thread::sleep(self.cfg.hop_delay);
+                }
+                // Apply remote updates in token order (lines 11-15).
+                let updates = token.on_receive(p);
+                for u in &updates {
+                    self.servers[p].db.apply_update(u).expect("apply_update");
+                }
+                any_work |= !updates.is_empty();
+
+                // Atomic snapshot of the pending queue (line 16).
+                let snapshot: Vec<Arc<Parked>> = {
+                    let mut pending = self.servers[p].pending.lock().unwrap();
+                    std::mem::take(&mut *pending)
+                };
+                if snapshot.is_empty() {
+                    continue;
+                }
+                any_work = true;
+
+                let round = Arc::new(RoundShared {
+                    remaining: Mutex::new(snapshot.len()),
+                    cv: Condvar::new(),
+                    updates: Mutex::new(Vec::new()),
+                });
+                *self.servers[p].round.lock().unwrap() = Some(Arc::clone(&round));
+
+                // Wake all handling threads (they execute in parallel).
+                for parked in &snapshot {
+                    let mut go = parked.go.lock().unwrap();
+                    *go = true;
+                    parked.cv.notify_all();
+                }
+                // Wait for the countdown (the paper's semaphore).
+                {
+                    let mut remaining = round.remaining.lock().unwrap();
+                    while *remaining > 0 {
+                        remaining = round.cv.wait(remaining).unwrap();
+                    }
+                }
+                *self.servers[p].round.lock().unwrap() = None;
+
+                // Append updates to the token in commit order.
+                let updates = std::mem::take(&mut *round.updates.lock().unwrap());
+                for u in updates {
+                    token.append(p, u);
+                }
+            }
+            token.rotations += 1;
+            if !any_work {
+                idle_rounds += 1;
+                if idle_rounds > 2 {
+                    std::thread::sleep(self.cfg.idle_pause);
+                }
+            } else {
+                idle_rounds = 0;
+            }
+        }
+        // Drain: one final rotation so every server applies outstanding
+        // updates (needed for convergence checks at shutdown).
+        for p in 0..n {
+            let updates = token.on_receive(p);
+            for u in &updates {
+                self.servers[p].db.apply_update(u).expect("apply_update");
+            }
+        }
+        token
+    }
+
+    /// Stop the token thread, drain replication, and return the token
+    /// (diagnostics). After this, per-server DBs are quiesced.
+    pub fn shutdown(&self) -> Token {
+        self.stop.store(true, Ordering::Relaxed);
+        let handle = self.token_thread.lock().unwrap().take();
+        match handle {
+            Some(h) => h.join().expect("token thread panicked"),
+            None => Token::new(self.servers.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{Schema, TableSchema, ValueType};
+    use crate::db::{Bindings, Value};
+    use crate::sqlir::parse_statement;
+    use crate::workload::spec::{AppSpec, TxnTemplate};
+
+    /// Cart app with a genuinely global `order` (derived STOCK write).
+    fn app() -> Arc<AnalyzedApp> {
+        let schema = Schema::new(vec![
+            TableSchema::new(
+                "CARTS",
+                &[("CID", ValueType::Int), ("QTY", ValueType::Int)],
+                &["CID"],
+            ),
+            TableSchema::new(
+                "STOCK",
+                &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int)],
+                &["ITEM"],
+            ),
+        ]);
+        let txns = vec![
+            TxnTemplate::new(
+                "add",
+                &["cid"],
+                &[("u", "UPDATE CARTS SET QTY = QTY + 1 WHERE CID = ?cid")],
+                1.0,
+            )
+            .with_body(|ctx, args| ctx.exec("u", args)),
+            TxnTemplate::new(
+                "order",
+                &["cid"],
+                &[
+                    ("r", "SELECT QTY FROM CARTS WHERE CID = ?cid"),
+                    ("w", "UPDATE STOCK SET LEVEL = LEVEL - 1 WHERE ITEM = ?derived_item"),
+                ],
+                1.0,
+            )
+            .with_body(|ctx, args| {
+                ctx.exec("r", args)?;
+                let cid = args.get("cid").and_then(|v| v.as_int()).unwrap_or(0);
+                let mut b = args.clone();
+                b.insert("derived_item".to_string(), Value::Int(cid.rem_euclid(4)));
+                ctx.exec("w", &b)
+            }),
+        ];
+        let app = AnalyzedApp::analyze(AppSpec { name: "cart".into(), schema, txns });
+        assert_eq!(*app.class(1), crate::analysis::OpClass::Global);
+        Arc::new(app)
+    }
+
+    fn seed(db: &Db) {
+        let ins_cart = parse_statement("INSERT INTO CARTS (CID, QTY) VALUES (?c, 0)").unwrap();
+        let ins_stock =
+            parse_statement("INSERT INTO STOCK (ITEM, LEVEL) VALUES (?i, 10000)").unwrap();
+        for c in 0..512i64 {
+            let b: Bindings = [("c".to_string(), Value::Int(c))].into_iter().collect();
+            db.exec_auto(&ins_cart, &b).unwrap();
+        }
+        for i in 0..4i64 {
+            let b: Bindings = [("i".to_string(), Value::Int(i))].into_iter().collect();
+            db.exec_auto(&ins_stock, &b).unwrap();
+        }
+    }
+
+    fn cart_op(txn: usize, cid: i64) -> Operation {
+        Operation {
+            txn,
+            args: [("cid".to_string(), Value::Int(cid))].into_iter().collect(),
+        }
+    }
+
+    #[test]
+    fn local_ops_execute_without_token() {
+        let dep = Deployment::start(app(), DeployConfig::default(), seed);
+        for cid in 0..32 {
+            dep.submit(cart_op(0, cid)).unwrap();
+        }
+        assert_eq!(dep.ops_local.load(Ordering::Relaxed), 32);
+        dep.shutdown();
+    }
+
+    #[test]
+    fn global_ops_complete_and_replicate() {
+        let dep = Deployment::start(app(), DeployConfig::default(), seed);
+        // Issue orders from several threads.
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let dep = Arc::clone(&dep);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25i64 {
+                    dep.submit(cart_op(1, t * 100 + i)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(dep.ops_global.load(Ordering::Relaxed), 100);
+        dep.shutdown();
+        // After quiesce, total stock decrement must be exactly 100 at
+        // EVERY server (global writes are replicated everywhere).
+        let q = parse_statement("SELECT SUM(LEVEL) FROM STOCK").unwrap();
+        for s in 0..dep.n_servers() {
+            let total = dep
+                .db(s)
+                .exec_auto(&q, &Bindings::new())
+                .unwrap()
+                .scalar()
+                .unwrap()
+                .as_int()
+                .unwrap();
+            assert_eq!(total, 4 * 10000 - 100, "server {s}");
+        }
+    }
+
+    #[test]
+    fn mixed_load_under_concurrency() {
+        let dep = Deployment::start(app(), DeployConfig::default(), seed);
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let dep = Arc::clone(&dep);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::Rng::new(t);
+                for _ in 0..50 {
+                    let cid = rng.range(0, 512) as i64;
+                    let txn = if rng.chance(0.3) { 1 } else { 0 };
+                    dep.submit(cart_op(txn, cid)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = dep.ops_local.load(Ordering::Relaxed) + dep.ops_global.load(Ordering::Relaxed);
+        assert_eq!(total, 400);
+        dep.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_the_token() {
+        let dep = Deployment::start(app(), DeployConfig::default(), seed);
+        dep.submit(cart_op(1, 3)).unwrap();
+        let token = dep.shutdown();
+        assert!(token.is_empty(), "token drained at shutdown");
+    }
+}

@@ -1,0 +1,14 @@
+//! The Conveyor Belt protocol (paper §4) — Eliá's coordination core.
+//!
+//! * [`token`] — the circulating token (Primary Order atomic broadcast),
+//! * [`sim`] — the virtual-time simulation of an N-server deployment,
+//! * [`deploy`] — the real-threads runtime (Algorithm 2 verbatim, real
+//!   concurrency, used by examples and the serializability tests).
+
+pub mod deploy;
+pub mod sim;
+pub mod token;
+
+pub use deploy::{DeployConfig, Deployment};
+pub use sim::{ConveyorConfig, ConveyorReport, ConveyorSim};
+pub use token::{Token, TokenEntry};

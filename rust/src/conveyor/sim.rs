@@ -1,0 +1,682 @@
+//! Discrete-event simulation of an Eliá deployment: N servers running the
+//! Conveyor Belt protocol (Algorithm 2) over the paper's LAN/WAN
+//! topologies, with closed-loop clients.
+//!
+//! Operations are *really executed* against per-server embedded DBMS
+//! instances (so replication, token ordering and state convergence are
+//! exercised, not just modeled) while time is virtual: each operation
+//! charges a modeled service time on its server's 2-worker station, and
+//! messages pay Table 2 latencies.
+
+use crate::db::{Db, StateUpdate, TxnError};
+use crate::simnet::clients::{ClientPool, ClientsConfig};
+use crate::simnet::events::EventQueue;
+use crate::simnet::latency::Topology;
+use crate::simnet::metrics::SimMetrics;
+use crate::simnet::station::Station;
+use crate::util::{Rng, VTime};
+use crate::workload::analyzed::{AnalyzedApp, Route};
+use crate::workload::generator::{OpGenerator, ServiceModel};
+use crate::workload::spec::{Operation, TxnCtx};
+
+use super::token::Token;
+
+/// Tunables of the Conveyor Belt simulation.
+#[derive(Debug, Clone)]
+pub struct ConveyorConfig {
+    pub workers: usize,
+    pub service: ServiceModel,
+    /// CPU time to apply one replicated state update (a fraction of a
+    /// full execution: update-only replay, no reads).
+    pub apply_per_update_ms: f64,
+    /// Minimum token hold time when there is nothing to do.
+    pub min_hold_ms: f64,
+    /// Per-hop token processing overhead (serialization etc.).
+    pub hop_overhead_ms: f64,
+    /// Probability a client sends to the wrong server (exercises the MAP
+    /// redirect path; 0 in the paper's common case).
+    pub misroute_prob: f64,
+    /// Execute operations against real per-server DBs.
+    pub execute_real: bool,
+    /// Client placement: latency matrix over *client sites* (the paper
+    /// keeps clients at all five WAN sites even when Eliá deploys fewer
+    /// servers; servers occupy the first `topology.n()` sites). `None` =
+    /// clients co-located with servers.
+    pub client_matrix: Option<crate::simnet::latency::LatencyMatrix>,
+    pub warmup: VTime,
+    pub horizon: VTime,
+    pub seed: u64,
+}
+
+impl Default for ConveyorConfig {
+    fn default() -> Self {
+        ConveyorConfig {
+            // T2.medium runs a Tomcat thread pool over 2 vCPUs; the ~5 ms
+            // operations are dominated by DBMS/IO waits, so the effective
+            // service parallelism is the pool, not the core count.
+            workers: 8,
+            service: ServiceModel::default(),
+            // Logical replay of one update record; measured ~2 us in the
+            // real engine (hotpath bench) — 50 us here is conservative and
+            // covers deserialization.
+            apply_per_update_ms: 0.05,
+            min_hold_ms: 0.1,
+            hop_overhead_ms: 0.1,
+            misroute_prob: 0.0,
+            execute_real: false,
+            client_matrix: None,
+            warmup: VTime::from_secs(5),
+            horizon: VTime::from_secs(25),
+            seed: 0x5EED,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Ev {
+    /// Client (after thinking) issues its next operation.
+    Issue { client: usize },
+    /// Request arrives at a server (possibly after a MAP redirect).
+    Arrive { op: u64, redirected: bool },
+    /// A station job completed.
+    JobDone { server: usize, job: JobKind },
+    /// The token arrives at a server.
+    TokenArrive { server: usize },
+    /// Reply reaches the client.
+    Reply { op: u64 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum JobKind {
+    /// Execute operation (local/commutative, or global under token).
+    Op(u64),
+    /// Apply `n` replicated updates from the token.
+    Apply { n: usize },
+}
+
+struct OpState {
+    op: Operation,
+    client: usize,
+    issued: VTime,
+    server: usize,
+    global: bool,
+}
+
+struct ServerState {
+    db: Option<Db>,
+    station: Station<JobKind>,
+    /// Global operations waiting for the token (Algorithm 2's Q).
+    pending: Vec<u64>,
+    /// Snapshot being executed under the current token hold (Q').
+    outstanding: usize,
+    /// True between TokenArrive and PassToken.
+    holds_token: bool,
+    /// Updates to apply were dispatched; globals wait for the apply job.
+    applying: bool,
+    aborts: u64,
+}
+
+/// The simulation driver.
+pub struct ConveyorSim<'a> {
+    app: &'a AnalyzedApp,
+    /// Per-template statement maps (built once; see §Perf).
+    stmt_maps: Vec<std::collections::HashMap<String, crate::sqlir::Stmt>>,
+    topo: Topology,
+    cfg: ConveyorConfig,
+    gen: Box<dyn OpGenerator + 'a>,
+    clients: ClientPool,
+    servers: Vec<ServerState>,
+    ops: Vec<OpState>,
+    token: Token,
+    token_at: usize,
+    svc_rng: Rng,
+    pub metrics: SimMetrics,
+    q: EventQueue<Ev>,
+}
+
+impl<'a> ConveyorSim<'a> {
+    pub fn new(
+        app: &'a AnalyzedApp,
+        topo: Topology,
+        clients_cfg: ClientsConfig,
+        cfg: ConveyorConfig,
+        gen: Box<dyn OpGenerator + 'a>,
+        seed_db: impl Fn(&Db),
+    ) -> Self {
+        let n = topo.n();
+        let client_sites = cfg.client_matrix.as_ref().map(|m| m.n()).unwrap_or(n);
+        let clients = ClientPool::new(ClientsConfig { sites: client_sites, ..clients_cfg });
+        let servers = (0..n)
+            .map(|_| {
+                let db = if cfg.execute_real {
+                    let db = Db::new(app.spec.schema.clone());
+                    seed_db(&db);
+                    Some(db)
+                } else {
+                    None
+                };
+                ServerState {
+                    db,
+                    station: Station::new(cfg.workers),
+                    pending: Vec::new(),
+                    outstanding: 0,
+                    holds_token: false,
+                    applying: false,
+                    aborts: 0,
+                }
+            })
+            .collect();
+        let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
+        let svc_rng = Rng::new(cfg.seed ^ 0xF00D);
+        ConveyorSim {
+            stmt_maps: app.spec.txns.iter().map(|t| t.stmt_map()).collect(),
+            app,
+            topo,
+            cfg,
+            gen,
+            clients,
+            servers,
+            ops: Vec::new(),
+            token: Token::new(n),
+            token_at: 0,
+            svc_rng,
+            metrics,
+            q: EventQueue::new(),
+        }
+    }
+
+    /// Run the simulation to the configured horizon and return final
+    /// metrics. Consumes the driver.
+    pub fn run(mut self) -> ConveyorReport {
+        // Boot: token starts at server 0; all clients issue.
+        self.q.schedule(VTime::ZERO, Ev::TokenArrive { server: 0 });
+        for c in 0..self.clients.n() {
+            // Stagger initial issues a little to avoid a thundering herd
+            // artifact at t=0.
+            let jitter = VTime::from_micros((c as u64 % 97) * 13);
+            self.q.schedule(jitter, Ev::Issue { client: c });
+        }
+        while let Some(t) = self.q.peek_time() {
+            if t > self.cfg.horizon {
+                break;
+            }
+            let (_, ev) = self.q.pop().unwrap();
+            self.handle(ev);
+        }
+        self.report()
+    }
+
+    fn report(&mut self) -> ConveyorReport {
+        let n = self.topo.n();
+        let now = self.cfg.horizon;
+        ConveyorReport {
+            metrics: self.metrics.clone(),
+            rotations: self.token.rotations,
+            utilization: (0..n).map(|s| self.servers[s].station.utilization(now)).collect(),
+            aborts: self.servers.iter().map(|s| s.aborts).sum(),
+            db_hashes: self
+                .servers
+                .iter()
+                .map(|s| s.db.as_ref().map(|d| d.content_hash()))
+                .collect(),
+            events: self.q.processed(),
+        }
+    }
+
+    fn client_server_latency(&self, site: usize, server: usize) -> VTime {
+        // The Table 2 diagonal carries the intra-site latency. With an
+        // explicit client matrix, clients may sit at sites without a
+        // server (paper §7.2: five client locations regardless of the
+        // server count).
+        match &self.cfg.client_matrix {
+            Some(m) => m.one_way(site, server),
+            None => self.topo.servers.one_way(site.min(self.topo.n() - 1), server),
+        }
+    }
+
+    /// The deployed server with the lowest latency from a client site.
+    fn nearest_server(&self, site: usize) -> usize {
+        match &self.cfg.client_matrix {
+            Some(m) => (0..self.topo.n())
+                .min_by_key(|&s| m.one_way(site, s))
+                .unwrap_or(0),
+            None => site % self.topo.n(),
+        }
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Issue { client } => self.on_issue(client),
+            Ev::Arrive { op, redirected } => self.on_arrive(op, redirected),
+            Ev::JobDone { server, job } => self.on_job_done(server, job),
+            Ev::TokenArrive { server } => self.on_token(server),
+            Ev::Reply { op } => self.on_reply(op),
+        }
+    }
+
+    fn on_issue(&mut self, client: usize) {
+        let n = self.topo.n();
+        let site = self.clients.site(client);
+        // Key affinity targets the nearest server site (clients at
+        // server-less sites adopt the closest deployed server).
+        let affinity = self.nearest_server(site);
+        let op = {
+            let rng = self.clients.rng(client);
+            // Borrow juggling: generator needs its own &mut.
+            let mut r = rng.fork();
+            self.gen.next_op(&mut r, affinity, n)
+        };
+        let route = self.app.route(&op, n);
+        let (server, global) = match route {
+            Route::Any => (affinity, false),
+            Route::LocalAt(s) => (s, false),
+            Route::GlobalAt(s) => (s, true),
+        };
+        let op_id = self.ops.len() as u64;
+        self.ops.push(OpState { op, client, issued: self.q.now(), server, global });
+
+        // Misrouting: send to a wrong server which answers MAP; the client
+        // then contacts the right one — two extra hops.
+        let mut delay = self.client_server_latency(site, server);
+        if self.cfg.misroute_prob > 0.0 {
+            let r = self.clients.rng(client).f64();
+            if r < self.cfg.misroute_prob {
+                let wrong = (server + 1) % n;
+                delay = self.client_server_latency(site, wrong)
+                    + self.client_server_latency(site, wrong)
+                    + self.client_server_latency(site, server);
+            }
+        }
+        self.q.schedule(delay, Ev::Arrive { op: op_id, redirected: false });
+    }
+
+    fn on_arrive(&mut self, op_id: u64, _redirected: bool) {
+        let (server, global, txn) = {
+            let o = &self.ops[op_id as usize];
+            (o.server, o.global, o.op.txn)
+        };
+        if global {
+            // Algorithm 2 line 6: hold until the token arrives. If this
+            // server currently holds the token and has not yet passed it,
+            // the op still waits for the *next* rotation (the snapshot Q'
+            // was already taken).
+            self.servers[server].pending.push(op_id);
+            return;
+        }
+        let service = self.cfg.service.sample(&self.app.spec.txns[txn], &mut self.svc_rng);
+        self.submit_job(server, JobKind::Op(op_id), service, false);
+    }
+
+    fn submit_job(&mut self, server: usize, job: JobKind, service: VTime, priority: bool) {
+        let now = self.q.now();
+        if let Some(started) = self.servers[server].station.submit(now, job, service, priority) {
+            self.q.schedule(started.service, Ev::JobDone { server, job: started.payload });
+        }
+    }
+
+    fn on_job_done(&mut self, server: usize, job: JobKind) {
+        // Start whatever the station dequeues next.
+        let now = self.q.now();
+        if let Some(next) = self.servers[server].station.complete(now) {
+            self.q.schedule(next.service, Ev::JobDone { server, job: next.payload });
+        }
+
+        match job {
+            JobKind::Op(op_id) => {
+                let global = self.ops[op_id as usize].global;
+                let update = self.execute_real(server, op_id);
+                if global {
+                    // Append to the token in completion order (the DBMS
+                    // commit order under strict 2PL).
+                    if let Some(u) = update {
+                        self.token.append(server, u);
+                    } else {
+                        self.token.append(server, StateUpdate::new());
+                    }
+                    let s = &mut self.servers[server];
+                    s.outstanding -= 1;
+                    if s.outstanding == 0 {
+                        self.pass_token(server);
+                    }
+                }
+                self.send_reply(op_id);
+            }
+            JobKind::Apply { .. } => {
+                // Replicated updates applied; dispatch the snapshot.
+                self.servers[server].applying = false;
+                self.dispatch_globals(server);
+            }
+        }
+    }
+
+    /// Execute the operation body against the server's DB, returning its
+    /// state update (None when real execution is disabled or aborted).
+    fn execute_real(&mut self, server: usize, op_id: u64) -> Option<StateUpdate> {
+        if !self.cfg.execute_real {
+            return None;
+        }
+        let o = &self.ops[op_id as usize];
+        let tpl = &self.app.spec.txns[o.op.txn];
+        let Some(body) = tpl.body.as_ref() else { return None };
+        let db = self.servers[server].db.as_ref().expect("real exec needs db");
+        let stmts = &self.stmt_maps[o.op.txn];
+        // Single-threaded simulation: lock conflicts cannot occur, but
+        // semantic errors (duplicate key etc.) count as aborts.
+        let mut handle = db.begin();
+        let mut ctx = TxnCtx::new(&mut handle, stmts);
+        match body(&mut ctx, &o.op.args) {
+            Ok(_reply) => match handle.commit() {
+                Ok(update) => Some(update),
+                Err(_) => {
+                    self.servers[server].aborts += 1;
+                    None
+                }
+            },
+            Err(TxnError::Lock(_)) | Err(_) => {
+                handle.abort();
+                self.servers[server].aborts += 1;
+                None
+            }
+        }
+    }
+
+    fn send_reply(&mut self, op_id: u64) {
+        let o = &self.ops[op_id as usize];
+        let site = self.clients.site(o.client);
+        let delay = self.client_server_latency(site, o.server);
+        self.q.schedule(delay, Ev::Reply { op: op_id });
+    }
+
+    fn on_reply(&mut self, op_id: u64) {
+        let (client, issued, global) = {
+            let o = &self.ops[op_id as usize];
+            (o.client, o.issued, o.global)
+        };
+        self.metrics.complete(issued, self.q.now(), global);
+        let think = self.clients.think(client);
+        self.q.schedule(think, Ev::Issue { client });
+    }
+
+    fn on_token(&mut self, server: usize) {
+        self.token_at = server;
+        if server == 0 {
+            self.token.rotations += 1;
+        }
+        let updates = self.token.on_receive(server);
+        let s = &mut self.servers[server];
+        s.holds_token = true;
+
+        // Apply replicated updates (Algorithm 2 lines 11-15) as one CPU
+        // job; the pending snapshot executes after it.
+        let n_updates = updates.len();
+        if self.cfg.execute_real {
+            if let Some(db) = self.servers[server].db.as_ref() {
+                for u in &updates {
+                    db.apply_update(u).expect("apply_update");
+                }
+            }
+        }
+        if n_updates > 0 {
+            self.servers[server].applying = true;
+            let service = VTime::from_millis_f64(self.cfg.apply_per_update_ms * n_updates as f64);
+            self.submit_job(server, JobKind::Apply { n: n_updates }, service, true);
+        } else {
+            self.dispatch_globals(server);
+        }
+    }
+
+    /// Take the atomic snapshot Q' and execute it (Algorithm 2 lines
+    /// 16-21); pass the token when the snapshot drains.
+    fn dispatch_globals(&mut self, server: usize) {
+        let snapshot: Vec<u64> = std::mem::take(&mut self.servers[server].pending);
+        if snapshot.is_empty() {
+            // Nothing to do: hold briefly, then pass.
+            let hold = VTime::from_millis_f64(self.cfg.min_hold_ms);
+            let next = (server + 1) % self.topo.n();
+            let delay = hold
+                + self.topo.servers.one_way(server, next)
+                + VTime::from_millis_f64(self.cfg.hop_overhead_ms);
+            self.q.schedule(delay, Ev::TokenArrive { server: next });
+            self.servers[server].holds_token = false;
+            return;
+        }
+        self.servers[server].outstanding = snapshot.len();
+        for op_id in snapshot {
+            let txn = self.ops[op_id as usize].op.txn;
+            let service = self.cfg.service.sample(&self.app.spec.txns[txn], &mut self.svc_rng);
+            // Global ops jump the queue: the paper's token thread wakes
+            // the handling threads which run concurrently with new local
+            // arrivals; priority keeps token hold times short.
+            self.submit_job(server, JobKind::Op(op_id), service, true);
+        }
+    }
+
+    fn pass_token(&mut self, server: usize) {
+        debug_assert!(self.servers[server].holds_token);
+        self.servers[server].holds_token = false;
+        let next = (server + 1) % self.topo.n();
+        let delay = self.topo.servers.one_way(server, next)
+            + VTime::from_millis_f64(self.cfg.hop_overhead_ms);
+        self.q.schedule(delay, Ev::TokenArrive { server: next });
+    }
+}
+
+/// Output of one simulation run.
+#[derive(Debug, Clone)]
+pub struct ConveyorReport {
+    pub metrics: SimMetrics,
+    pub rotations: u64,
+    pub utilization: Vec<f64>,
+    pub aborts: u64,
+    /// Per-server DB content hashes (real-execution runs); replicated
+    /// tables must converge once quiesced.
+    pub db_hashes: Vec<Option<u64>>,
+    pub events: u64,
+}
+
+impl ConveyorReport {
+    pub fn throughput(&self) -> f64 {
+        self.metrics.throughput()
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.metrics.latency.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{Schema, TableSchema, ValueType};
+    use crate::db::{Bindings, Value};
+    use crate::workload::spec::{AppSpec, TxnTemplate};
+
+    /// A small cart app: local add, global order (writes shared STOCK).
+    fn app() -> AnalyzedApp {
+        let schema = Schema::new(vec![
+            TableSchema::new(
+                "CARTS",
+                &[("CID", ValueType::Int), ("QTY", ValueType::Int)],
+                &["CID"],
+            ),
+            TableSchema::new(
+                "STOCK",
+                &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int)],
+                &["ITEM"],
+            ),
+        ]);
+        let txns = vec![
+            TxnTemplate::new(
+                "add",
+                &["cid"],
+                &[("u", "UPDATE CARTS SET QTY = QTY + 1 WHERE CID = ?cid")],
+                1.0,
+            )
+            .with_body(|ctx, args| ctx.exec("u", args)),
+            TxnTemplate::new(
+                "order",
+                &["cid"],
+                &[
+                    ("r", "SELECT QTY FROM CARTS WHERE CID = ?cid"),
+                    // The touched item is derived from the cart content at
+                    // run time — an opaque write, so `order` is Global
+                    // exactly like the paper's Figure 1.
+                    ("w", "UPDATE STOCK SET LEVEL = LEVEL - 1 WHERE ITEM = ?derived_item"),
+                ],
+                1.0,
+            )
+            .with_body(|ctx, args| {
+                ctx.exec("r", args)?;
+                let cid = args.get("cid").and_then(|v| v.as_int()).unwrap_or(0);
+                let mut b = args.clone();
+                b.insert("derived_item".to_string(), Value::Int(cid.rem_euclid(8)));
+                ctx.exec("w", &b)
+            }),
+        ];
+        let app = AnalyzedApp::analyze(AppSpec { name: "cart".into(), schema, txns });
+        assert_eq!(*app.class(0), crate::analysis::OpClass::Local);
+        assert_eq!(*app.class(1), crate::analysis::OpClass::Global);
+        app
+    }
+
+    struct MixGen {
+        global_ratio: f64,
+    }
+
+    impl OpGenerator for MixGen {
+        fn next_op(&mut self, rng: &mut Rng, site: usize, n: usize) -> Operation {
+            if rng.chance(self.global_ratio) {
+                // order a random cart; the derived item write makes it global.
+                let cid = (rng.range(0, 1000) * n + site) as i64;
+                let args: Bindings =
+                    [("cid".to_string(), Value::Int(cid))].into_iter().collect();
+                Operation { txn: 1, args }
+            } else {
+                // add: site-affine cart id.
+                let cid = (rng.range(0, 1000) * n + site) as i64;
+                let args: Bindings =
+                    [("cid".to_string(), Value::Int(cid))].into_iter().collect();
+                Operation { txn: 0, args }
+            }
+        }
+    }
+
+    fn seed(db: &Db) {
+        use crate::sqlir::parse_statement;
+        let ins_cart = parse_statement("INSERT INTO CARTS (CID, QTY) VALUES (?c, 0)").unwrap();
+        let ins_stock = parse_statement("INSERT INTO STOCK (ITEM, LEVEL) VALUES (?i, 1000)").unwrap();
+        for c in 0..5000i64 {
+            let b: Bindings = [("c".to_string(), Value::Int(c))].into_iter().collect();
+            db.exec_auto(&ins_cart, &b).unwrap();
+        }
+        for i in 0..8i64 {
+            let b: Bindings = [("i".to_string(), Value::Int(i))].into_iter().collect();
+            db.exec_auto(&ins_stock, &b).unwrap();
+        }
+    }
+
+    fn run(n_servers: usize, clients: usize, global_ratio: f64, real: bool) -> ConveyorReport {
+        let app = app();
+        let cfg = ConveyorConfig {
+            execute_real: real,
+            warmup: VTime::from_secs(2),
+            horizon: VTime::from_secs(10),
+            service: ServiceModel::fixed(5.0),
+            ..Default::default()
+        };
+        let sim = ConveyorSim::new(
+            &app,
+            Topology::lan(n_servers),
+            ClientsConfig { n: clients, think_ms: 10.0, seed: 7, ..Default::default() },
+            cfg,
+            Box::new(MixGen { global_ratio }),
+            seed,
+        );
+        sim.run()
+    }
+
+    #[test]
+    fn local_only_workload_flows() {
+        let r = run(3, 30, 0.0, false);
+        assert!(r.metrics.completed > 500, "completed={}", r.metrics.completed);
+        // Latency ≈ client RTT (20ms) + service (5ms) + queueing.
+        let mean = r.mean_latency_ms();
+        assert!(mean > 20.0 && mean < 80.0, "mean={mean}");
+        assert_eq!(r.metrics.global_latency.count(), 0);
+    }
+
+    #[test]
+    fn global_ops_wait_for_token_and_cost_more() {
+        let mut r = run(3, 30, 0.3, false);
+        assert!(r.metrics.global_latency.count() > 50);
+        let lg = r.metrics.global_latency.mean();
+        let ll = r.metrics.local_latency.mean();
+        assert!(
+            lg > ll * 1.5,
+            "global latency ({lg}) should exceed local ({ll}) significantly"
+        );
+        assert!(r.rotations > 10, "token must rotate: {}", r.rotations);
+        // Sanity on percentiles API.
+        assert!(r.metrics.latency.p99() >= r.metrics.latency.p50());
+    }
+
+    #[test]
+    fn real_execution_replicates_global_writes() {
+        let r = run(3, 20, 0.4, true);
+        assert!(r.metrics.completed > 200);
+        assert_eq!(r.aborts, 0, "no aborts expected");
+        // STOCK must have been written: decrements happened across
+        // servers. Per-server hashes differ because CARTS are partial
+        // (local, not replicated) — convergence of the replicated STOCK
+        // table is asserted in the integration test which quiesces first.
+        assert!(r.db_hashes.iter().all(|h| h.is_some()));
+    }
+
+    #[test]
+    fn more_servers_increase_local_capacity() {
+        // Pure-local workload: 9 servers should sustain clearly more than 1.
+        let r1 = run(1, 120, 0.0, false);
+        let r9 = run(9, 120, 0.0, false);
+        assert!(
+            r9.throughput() > r1.throughput() * 2.0,
+            "t1={} t9={}",
+            r1.throughput(),
+            r9.throughput()
+        );
+    }
+
+    #[test]
+    fn misrouting_adds_latency() {
+        let app = app();
+        let mk = |mis: f64| {
+            let cfg = ConveyorConfig {
+                misroute_prob: mis,
+                warmup: VTime::from_secs(2),
+                horizon: VTime::from_secs(8),
+                service: ServiceModel::fixed(5.0),
+                ..Default::default()
+            };
+            ConveyorSim::new(
+                &app,
+                Topology::lan(3),
+                ClientsConfig { n: 10, think_ms: 10.0, seed: 3, ..Default::default() },
+                cfg,
+                Box::new(MixGen { global_ratio: 0.0 }),
+                |_db| {},
+            )
+            .run()
+        };
+        let clean = mk(0.0).mean_latency_ms();
+        let dirty = mk(0.5).mean_latency_ms();
+        assert!(dirty > clean + 5.0, "clean={clean} dirty={dirty}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run(3, 25, 0.2, false);
+        let b = run(3, 25, 0.2, false);
+        assert_eq!(a.metrics.completed, b.metrics.completed);
+        assert_eq!(a.events, b.events);
+        assert!((a.mean_latency_ms() - b.mean_latency_ms()).abs() < 1e-9);
+    }
+}

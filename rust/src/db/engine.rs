@@ -1,0 +1,938 @@
+//! The database engine: storage, statement execution, commit/abort, and
+//! state-update application (replication path).
+
+use super::lockmgr::{LockManager, LockMode, LockTarget, TxnId};
+use super::plan::{eval_pred, plan, AccessPath};
+use super::txn::{IsolationLevel, TxnError, TxnState};
+use super::update::{ColOp, StateUpdate, WriteRecord};
+use super::value::{eval_scalar, Bindings, Key, Row, Value};
+use crate::catalog::{Schema, TableSchema};
+use crate::sqlir::{Delete, Insert, Select, SelectItem, Stmt, Update};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Result of executing one statement.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct QueryResult {
+    /// Projected rows (SELECT only).
+    pub rows: Vec<Vec<Value>>,
+    /// Rows inserted/updated/deleted (DML only).
+    pub affected: usize,
+}
+
+impl QueryResult {
+    pub fn first(&self) -> Option<&Vec<Value>> {
+        self.rows.first()
+    }
+
+    /// Convenience: the single scalar of a one-row/one-col result.
+    pub fn scalar(&self) -> Option<&Value> {
+        self.rows.first().and_then(|r| r.first())
+    }
+}
+
+#[derive(Debug, Default)]
+struct TableData {
+    rows: HashMap<Key, Row>,
+    /// Secondary hash indexes: column idx -> value -> set of PKs.
+    indexes: HashMap<usize, HashMap<Value, HashSet<Key>>>,
+}
+
+impl TableData {
+    fn new(schema: &TableSchema) -> Self {
+        let mut t = TableData::default();
+        for col in &schema.indexes {
+            let ci = schema.col_index(col).expect("index column");
+            t.indexes.insert(ci, HashMap::new());
+        }
+        t
+    }
+
+    fn index_insert(&mut self, key: &Key, row: &Row) {
+        for (ci, bucket) in self.indexes.iter_mut() {
+            bucket.entry(row[*ci].clone()).or_default().insert(key.clone());
+        }
+    }
+
+    fn index_remove(&mut self, key: &Key, row: &Row) {
+        for (ci, bucket) in self.indexes.iter_mut() {
+            if let Some(set) = bucket.get_mut(&row[*ci]) {
+                set.remove(key);
+                if set.is_empty() {
+                    bucket.remove(&row[*ci]);
+                }
+            }
+        }
+    }
+
+    fn put(&mut self, key: Key, row: Row) {
+        if let Some(old) = self.rows.get(&key).cloned() {
+            self.index_remove(&key, &old);
+        }
+        self.index_insert(&key, &row);
+        self.rows.insert(key, row);
+    }
+
+    fn remove(&mut self, key: &Key) {
+        if let Some(old) = self.rows.remove(key) {
+            self.index_remove(key, &old);
+        }
+    }
+}
+
+
+/// If `scalar` has the shape `col ± expr` where `expr` does not read any
+/// row column, return the signed delta value of `expr` (None otherwise).
+fn delta_of(
+    scalar: &crate::sqlir::Scalar,
+    target_col: &str,
+    schema: &TableSchema,
+    binds: &Bindings,
+) -> Option<Value> {
+    use crate::sqlir::Scalar as S;
+    let (lhs, rhs, negate) = match scalar {
+        S::Add(a, b) => (a, b, false),
+        S::Sub(a, b) => (a, b, true),
+        _ => return None,
+    };
+    match (&**lhs, &**rhs) {
+        (S::Col(c), expr) if c.eq_ignore_ascii_case(target_col) => {
+            let mut cols = Vec::new();
+            expr.referenced_cols(&mut cols);
+            if !cols.is_empty() {
+                return None;
+            }
+            let v = eval_scalar(expr, None, &|c| schema.col_index(c), binds).ok()?;
+            Some(match (v, negate) {
+                (Value::Int(i), true) => Value::Int(-i),
+                (Value::Float(x), true) => Value::Float(-x),
+                (v, false) => v,
+                _ => return None,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// The embedded database: schema + storage + lock manager.
+///
+/// Thread-safe: statement execution takes logical 2PL locks (blocking)
+/// and short physical `RwLock` sections per table; commits apply buffered
+/// writes under physical write locks before releasing logical locks.
+pub struct Db {
+    schema: Schema,
+    tables: Vec<RwLock<TableData>>,
+    locks: LockManager,
+    next_txn: AtomicU64,
+    default_isolation: IsolationLevel,
+    commits: AtomicU64,
+    aborts: AtomicU64,
+}
+
+impl std::fmt::Debug for Db {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Db").field("tables", &self.schema.ntables()).finish()
+    }
+}
+
+impl Db {
+    pub fn new(schema: Schema) -> Self {
+        let tables =
+            schema.tables().iter().map(|t| RwLock::new(TableData::new(t))).collect();
+        Db {
+            schema,
+            tables,
+            locks: LockManager::default(),
+            next_txn: AtomicU64::new(1),
+            default_isolation: IsolationLevel::Serializable,
+            commits: AtomicU64::new(0),
+            aborts: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_isolation(mut self, iso: IsolationLevel) -> Self {
+        self.default_isolation = iso;
+        self
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn commit_count(&self) -> u64 {
+        self.commits.load(Ordering::Relaxed)
+    }
+
+    pub fn abort_count(&self) -> u64 {
+        self.aborts.load(Ordering::Relaxed)
+    }
+
+    /// Begin a transaction at the database's default isolation level.
+    pub fn begin(&self) -> TxnHandle<'_> {
+        self.begin_with(self.default_isolation)
+    }
+
+    pub fn begin_with(&self, isolation: IsolationLevel) -> TxnHandle<'_> {
+        let id = self.next_txn.fetch_add(1, Ordering::SeqCst);
+        TxnHandle { db: self, id, isolation, state: TxnState::default(), done: false }
+    }
+
+    /// Execute a single auto-committed statement (loader convenience).
+    pub fn exec_auto(&self, stmt: &Stmt, binds: &Bindings) -> Result<QueryResult, TxnError> {
+        let mut txn = self.begin();
+        let r = txn.exec(stmt, binds)?;
+        txn.commit()?;
+        Ok(r)
+    }
+
+    /// Apply a replicated [`StateUpdate`] (the Conveyor Belt `apply(u)`).
+    ///
+    /// Runs as an internal transaction: X row locks on every touched key
+    /// so replication serializes against local operations, exactly as a
+    /// DBMS transaction would.
+    pub fn apply_update(&self, update: &StateUpdate) -> Result<(), TxnError> {
+        loop {
+            match self.try_apply_update(update) {
+                Err(TxnError::Lock(_)) => {
+                    // The token thread must win eventually; back off and retry.
+                    std::thread::yield_now();
+                }
+                other => return other,
+            }
+        }
+    }
+
+    fn try_apply_update(&self, update: &StateUpdate) -> Result<(), TxnError> {
+        let id = self.next_txn.fetch_add(1, Ordering::SeqCst);
+        let res = (|| -> Result<(), TxnError> {
+            for rec in &update.records {
+                let t = rec.table();
+                self.locks.acquire(id, LockTarget::Table(t), LockMode::IX)?;
+                self.locks.acquire(id, LockTarget::Row(t, rec.key().clone()), LockMode::X)?;
+            }
+            for rec in &update.records {
+                let mut table = self.tables[rec.table()].write().unwrap();
+                match rec {
+                    WriteRecord::Insert { key, row, .. } => {
+                        table.put(key.clone(), row.clone());
+                    }
+                    WriteRecord::Update { key, cols, .. } => {
+                        if let Some(mut row) = table.rows.get(key).cloned() {
+                            for (ci, op) in cols {
+                                row[*ci] = op.apply(&row[*ci]);
+                            }
+                            table.put(key.clone(), row);
+                        }
+                        // A missing row means the update raced a delete that
+                        // this replica already applied — drop it silently,
+                        // matching the paper's replay-in-order guarantee
+                        // (this branch is unreachable under token ordering).
+                    }
+                    WriteRecord::Delete { key, .. } => {
+                        table.remove(key);
+                    }
+                }
+            }
+            Ok(())
+        })();
+        self.locks.release_all(id);
+        res
+    }
+
+    /// Deterministic hash of all committed data — used by tests to check
+    /// replica convergence.
+    pub fn content_hash(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut acc: u64 = 0xcbf29ce484222325;
+        for (ti, table) in self.tables.iter().enumerate() {
+            let table = table.read().unwrap();
+            // XOR of per-row hashes: order-independent, so no sort needed.
+            let mut table_acc: u64 = 0;
+            for (k, row) in &table.rows {
+                let mut h = std::collections::hash_map::DefaultHasher::new();
+                ti.hash(&mut h);
+                k.hash(&mut h);
+                row.hash(&mut h);
+                table_acc ^= h.finish();
+            }
+            acc = acc.wrapping_mul(0x100000001b3) ^ table_acc;
+        }
+        acc
+    }
+
+    /// Number of committed rows in a table (tests / examples).
+    pub fn row_count(&self, table: &str) -> usize {
+        let ti = self.schema.table_id(table).expect("unknown table");
+        self.tables[ti].read().unwrap().rows.len()
+    }
+
+    /// Read one committed row by primary key outside any transaction
+    /// (tests / invariant checks; not part of the transactional API).
+    pub fn peek(&self, table: &str, key: &Key) -> Option<Row> {
+        let ti = self.schema.table_id(table)?;
+        self.tables[ti].read().unwrap().rows.get(key).cloned()
+    }
+}
+
+/// A live transaction. Dropping without commit aborts.
+pub struct TxnHandle<'a> {
+    db: &'a Db,
+    id: TxnId,
+    isolation: IsolationLevel,
+    state: TxnState,
+    done: bool,
+}
+
+impl<'a> TxnHandle<'a> {
+    pub fn id(&self) -> TxnId {
+        self.id
+    }
+
+    /// The state update accumulated so far (read-only view).
+    pub fn pending_update(&self) -> &StateUpdate {
+        &self.state.update
+    }
+
+    fn table_id(&self, name: &str) -> Result<usize, TxnError> {
+        self.db
+            .schema
+            .table_id(name)
+            .ok_or_else(|| TxnError::Sql(format!("unknown table {name}")))
+    }
+
+    fn lock(&self, target: LockTarget, mode: LockMode) -> Result<(), TxnError> {
+        Ok(self.db.locks.acquire(self.id, target, mode)?)
+    }
+
+    /// Execute one statement within this transaction.
+    pub fn exec(&mut self, stmt: &Stmt, binds: &Bindings) -> Result<QueryResult, TxnError> {
+        if self.done {
+            return Err(TxnError::Finished);
+        }
+        match stmt {
+            Stmt::Select(s) => self.exec_select(s, binds),
+            Stmt::Insert(s) => self.exec_insert(s, binds),
+            Stmt::Update(s) => self.exec_update(s, binds),
+            Stmt::Delete(s) => self.exec_delete(s, binds),
+        }
+    }
+
+    /// Collect `(key, row)` pairs visible to this txn that match `pred`,
+    /// taking the appropriate locks. `for_write` selects X/IX vs S/IS.
+    fn select_rows(
+        &mut self,
+        ti: usize,
+        pred: &crate::sqlir::Pred,
+        binds: &Bindings,
+        for_write: bool,
+    ) -> Result<Vec<(Key, Row)>, TxnError> {
+        let schema = self.db.schema.table(ti);
+        let path = plan(pred, schema, binds);
+        let serializable = self.isolation == IsolationLevel::Serializable;
+
+        // --- Locking ---
+        match (&path, for_write) {
+            (AccessPath::Point(key), true) => {
+                self.lock(LockTarget::Table(ti), LockMode::IX)?;
+                self.lock(LockTarget::Row(ti, key.clone()), LockMode::X)?;
+            }
+            (AccessPath::Point(key), false) => {
+                if serializable {
+                    self.lock(LockTarget::Table(ti), LockMode::IS)?;
+                    self.lock(LockTarget::Row(ti, key.clone()), LockMode::S)?;
+                }
+            }
+            (_, true) => {
+                // Scan-write: table X (covers phantom-safe multi-row update).
+                self.lock(LockTarget::Table(ti), LockMode::X)?;
+            }
+            (_, false) => {
+                if serializable {
+                    // Scan-read: table S for phantom protection.
+                    self.lock(LockTarget::Table(ti), LockMode::S)?;
+                }
+            }
+        }
+
+        // --- Row collection (short physical read section) ---
+        let mut out = Vec::new();
+        let table = self.db.tables[ti].read().unwrap();
+        let consider = |key: &Key, committed: Option<&Row>, out: &mut Vec<(Key, Row)>| -> Result<(), TxnError> {
+            if let Some(row) = self.state.visible(ti, key, committed) {
+                if eval_pred(pred, row, schema, binds).map_err(TxnError::Sql)? {
+                    out.push((key.clone(), row.clone()));
+                }
+            }
+            Ok(())
+        };
+        match &path {
+            AccessPath::Point(key) => {
+                consider(key, table.rows.get(key), &mut out)?;
+            }
+            AccessPath::IndexEq { col, value } => {
+                if let Some(keys) = table.indexes.get(col).and_then(|b| b.get(value)) {
+                    for key in keys {
+                        consider(key, table.rows.get(key), &mut out)?;
+                    }
+                }
+                // Overlay-inserted rows are not in the committed index.
+                for ((t, key), v) in &self.state.overlay {
+                    if *t == ti && !table.rows.contains_key(key) {
+                        if let Some(row) = v {
+                            if row[*col] == *value {
+                                if eval_pred(pred, row, schema, binds).map_err(TxnError::Sql)? {
+                                    out.push((key.clone(), row.clone()));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            AccessPath::Scan => {
+                for (key, committed) in &table.rows {
+                    consider(key, Some(committed), &mut out)?;
+                }
+                for ((t, key), v) in &self.state.overlay {
+                    if *t == ti && !table.rows.contains_key(key) {
+                        if let Some(row) = v {
+                            if eval_pred(pred, row, schema, binds).map_err(TxnError::Sql)? {
+                                out.push((key.clone(), row.clone()));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        drop(table);
+
+        // Row locks for matched rows under non-point paths.
+        if serializable || for_write {
+            match &path {
+                AccessPath::Point(_) => {}
+                _ => {
+                    let mode = if for_write { LockMode::X } else { LockMode::S };
+                    for (key, _) in &out {
+                        self.lock(LockTarget::Row(ti, key.clone()), mode)?;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn exec_select(&mut self, s: &Select, binds: &Bindings) -> Result<QueryResult, TxnError> {
+        let ti = self.table_id(&s.table)?;
+        let schema = self.db.schema.table(ti);
+        let mut matched = self.select_rows(ti, &s.where_, binds, false)?;
+
+        // ORDER BY before LIMIT.
+        if let Some((col, desc)) = &s.order_by {
+            let ci = schema
+                .col_index(col)
+                .ok_or_else(|| TxnError::Sql(format!("unknown ORDER BY column {col}")))?;
+            matched.sort_by(|(_, a), (_, b)| {
+                let ord = a[ci].total_cmp(&b[ci]);
+                if *desc {
+                    ord.reverse()
+                } else {
+                    ord
+                }
+            });
+        } else {
+            // Deterministic output independent of hash-map iteration order.
+            matched.sort_by(|(a, _), (b, _)| {
+                a.0.iter()
+                    .zip(b.0.iter())
+                    .map(|(x, y)| x.total_cmp(y))
+                    .find(|o| !o.is_eq())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+        }
+        if let Some(n) = s.limit {
+            matched.truncate(n as usize);
+        }
+
+        // Projection / aggregation.
+        let has_agg = s.items.iter().any(|i| i.is_aggregate());
+        if has_agg {
+            let mut row_out = Vec::with_capacity(s.items.len());
+            for item in &s.items {
+                let v = match item {
+                    SelectItem::Count => Value::Int(matched.len() as i64),
+                    SelectItem::Col(c) => {
+                        // Non-aggregated column with aggregates: take first row
+                        // (the subset of SQL our workloads need).
+                        let ci = self.col_idx(schema, c)?;
+                        matched.first().map(|(_, r)| r[ci].clone()).unwrap_or(Value::Null)
+                    }
+                    SelectItem::Max(c) | SelectItem::Min(c) => {
+                        let ci = self.col_idx(schema, c)?;
+                        let mut vals: Vec<&Value> =
+                            matched.iter().map(|(_, r)| &r[ci]).filter(|v| !matches!(v, Value::Null)).collect();
+                        vals.sort_by(|a, b| a.total_cmp(b));
+                        let picked = if matches!(item, SelectItem::Max(_)) {
+                            vals.last()
+                        } else {
+                            vals.first()
+                        };
+                        picked.cloned().cloned().unwrap_or(Value::Null)
+                    }
+                    SelectItem::Sum(c) => {
+                        let ci = self.col_idx(schema, c)?;
+                        let mut int_sum: i64 = 0;
+                        let mut float_sum = 0.0;
+                        let mut any_float = false;
+                        let mut any = false;
+                        for (_, r) in &matched {
+                            match &r[ci] {
+                                Value::Int(i) => {
+                                    int_sum += i;
+                                    any = true;
+                                }
+                                Value::Float(x) => {
+                                    float_sum += x;
+                                    any_float = true;
+                                    any = true;
+                                }
+                                _ => {}
+                            }
+                        }
+                        if !any {
+                            Value::Null
+                        } else if any_float {
+                            Value::Float(float_sum + int_sum as f64)
+                        } else {
+                            Value::Int(int_sum)
+                        }
+                    }
+                };
+                row_out.push(v);
+            }
+            return Ok(QueryResult { rows: vec![row_out], affected: 0 });
+        }
+
+        let rows = if s.items.is_empty() {
+            matched.into_iter().map(|(_, r)| r).collect()
+        } else {
+            let cis: Vec<usize> = s
+                .items
+                .iter()
+                .map(|i| self.col_idx(schema, i.referenced_col().unwrap()))
+                .collect::<Result<_, _>>()?;
+            matched
+                .into_iter()
+                .map(|(_, r)| cis.iter().map(|&ci| r[ci].clone()).collect())
+                .collect()
+        };
+        Ok(QueryResult { rows, affected: 0 })
+    }
+
+    fn col_idx(&self, schema: &TableSchema, c: &str) -> Result<usize, TxnError> {
+        schema
+            .col_index(c)
+            .ok_or_else(|| TxnError::Sql(format!("unknown column {c} in {}", schema.name)))
+    }
+
+    fn exec_insert(&mut self, s: &Insert, binds: &Bindings) -> Result<QueryResult, TxnError> {
+        let ti = self.table_id(&s.table)?;
+        let schema = self.db.schema.table(ti);
+
+        // Build the full row (unspecified columns are NULL).
+        let mut row: Row = vec![Value::Null; schema.ncols()];
+        for (col, scalar) in s.columns.iter().zip(&s.values) {
+            let ci = self.col_idx(schema, col)?;
+            let v = eval_scalar(scalar, None, &|c| schema.col_index(c), binds)
+                .map_err(TxnError::Sql)?;
+            row[ci] = v.coerce(schema.columns[ci].ty);
+        }
+        let key = Key(schema.pk_indices().iter().map(|&i| row[i].clone()).collect());
+        if key.0.iter().any(|v| matches!(v, Value::Null)) {
+            return Err(TxnError::Sql(format!("NULL primary key in INSERT into {}", s.table)));
+        }
+
+        self.lock(LockTarget::Table(ti), LockMode::IX)?;
+        self.lock(LockTarget::Row(ti, key.clone()), LockMode::X)?;
+
+        let exists = {
+            let table = self.db.tables[ti].read().unwrap();
+            self.state.visible(ti, &key, table.rows.get(&key)).is_some()
+        };
+        if exists {
+            return Err(TxnError::DuplicateKey { table: s.table.clone(), key: key.to_string() });
+        }
+        self.state.overlay.insert((ti, key.clone()), Some(row.clone()));
+        self.state.update.push(WriteRecord::Insert { table: ti, key, row });
+        Ok(QueryResult { rows: vec![], affected: 1 })
+    }
+
+    fn exec_update(&mut self, s: &Update, binds: &Bindings) -> Result<QueryResult, TxnError> {
+        let ti = self.table_id(&s.table)?;
+        let schema = self.db.schema.table(ti);
+        let pk = schema.pk_indices();
+        let matched = self.select_rows(ti, &s.where_, binds, true)?;
+        let schema = self.db.schema.table(ti); // reborrow after &mut self
+        let mut affected = 0;
+        for (key, old_row) in matched {
+            let mut new_row = old_row.clone();
+            let mut cols = Vec::with_capacity(s.sets.len());
+            for (col, scalar) in &s.sets {
+                let ci = self.col_idx(schema, col)?;
+                if pk.contains(&ci) {
+                    return Err(TxnError::Sql(format!(
+                        "updates to primary-key column {col} are unsupported"
+                    )));
+                }
+                let v = eval_scalar(scalar, Some(&old_row), &|c| schema.col_index(c), binds)
+                    .map_err(TxnError::Sql)?
+                    .coerce(schema.columns[ci].ty);
+                new_row[ci] = v.clone();
+                // Logical redo: `c = c ± expr` (with `expr` row-independent)
+                // is recorded as a delta so replicated replay merges with
+                // the replica's own value; everything else is an absolute
+                // assignment (see db::update::ColOp).
+                let op = delta_of(scalar, col, schema, binds)
+                    .map(ColOp::Add)
+                    .unwrap_or(ColOp::Set(v));
+                cols.push((ci, op));
+            }
+            self.state.overlay.insert((ti, key.clone()), Some(new_row));
+            self.state.update.push(WriteRecord::Update { table: ti, key, cols });
+            affected += 1;
+        }
+        Ok(QueryResult { rows: vec![], affected })
+    }
+
+    fn exec_delete(&mut self, s: &Delete, binds: &Bindings) -> Result<QueryResult, TxnError> {
+        let ti = self.table_id(&s.table)?;
+        let matched = self.select_rows(ti, &s.where_, binds, true)?;
+        let affected = matched.len();
+        for (key, _) in matched {
+            self.state.overlay.insert((ti, key.clone()), None);
+            self.state.update.push(WriteRecord::Delete { table: ti, key });
+        }
+        Ok(QueryResult { rows: vec![], affected })
+    }
+
+    /// Commit: apply buffered writes to storage, then release locks.
+    /// Returns the transaction's [`StateUpdate`].
+    pub fn commit(self) -> Result<StateUpdate, TxnError> {
+        self.commit_with(|_| ())
+            .map(|(u, ())| u)
+    }
+
+    /// Commit and run `hook` *after* the writes are applied but *before*
+    /// any lock is released. Under strict 2PL this means two conflicting
+    /// transactions invoke their hooks in their serialization order —
+    /// exactly the property Eliá's commit interception relies on to
+    /// append state updates to the token queue in execution order
+    /// (paper §5, "Tracing the sequential order of global operations").
+    pub fn commit_with<R>(mut self, hook: impl FnOnce(&StateUpdate) -> R) -> Result<(StateUpdate, R), TxnError> {
+        if self.done {
+            return Err(TxnError::Finished);
+        }
+        self.done = true;
+
+        // Apply per-table in table-id order under physical write locks.
+        let mut touched: Vec<usize> = self.state.update.records.iter().map(|r| r.table()).collect();
+        touched.sort_unstable();
+        touched.dedup();
+        for ti in touched {
+            let mut table = self.db.tables[ti].write().unwrap();
+            for rec in self.state.update.records.iter().filter(|r| r.table() == ti) {
+                match rec {
+                    WriteRecord::Insert { key, row, .. } => table.put(key.clone(), row.clone()),
+                    WriteRecord::Update { key, cols, .. } => {
+                        if let Some(mut row) = table.rows.get(key).cloned() {
+                            for (ci, op) in cols {
+                                row[*ci] = op.apply(&row[*ci]);
+                            }
+                            table.put(key.clone(), row);
+                        }
+                    }
+                    WriteRecord::Delete { key, .. } => table.remove(key),
+                }
+            }
+        }
+
+        let update = std::mem::take(&mut self.state.update);
+        let r = hook(&update);
+        self.db.locks.release_all(self.id);
+        self.db.commits.fetch_add(1, Ordering::Relaxed);
+        Ok((update, r))
+    }
+
+    /// Abort: discard buffered writes and release locks.
+    pub fn abort(mut self) {
+        self.done = true;
+        self.db.locks.release_all(self.id);
+        self.db.aborts.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl Drop for TxnHandle<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.db.locks.release_all(self.id);
+            self.db.aborts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{TableSchema, ValueType};
+    use crate::sqlir::parse_statement;
+
+    fn test_db() -> Db {
+        Db::new(Schema::new(vec![
+            TableSchema::new(
+                "ITEMS",
+                &[
+                    ("ID", ValueType::Int),
+                    ("TITLE", ValueType::Str),
+                    ("STOCK", ValueType::Int),
+                    ("COST", ValueType::Float),
+                ],
+                &["ID"],
+            )
+            .with_index("TITLE"),
+            TableSchema::new(
+                "SC",
+                &[("ID", ValueType::Int), ("I_ID", ValueType::Int), ("QTY", ValueType::Int)],
+                &["ID", "I_ID"],
+            ),
+        ]))
+    }
+
+    fn b(pairs: &[(&str, Value)]) -> Bindings {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    fn seed_items(db: &Db, n: i64) {
+        let ins = parse_statement(
+            "INSERT INTO ITEMS (ID, TITLE, STOCK, COST) VALUES (?id, ?t, ?s, ?c)",
+        )
+        .unwrap();
+        for i in 0..n {
+            db.exec_auto(
+                &ins,
+                &b(&[
+                    ("id", Value::Int(i)),
+                    ("t", Value::Str(format!("book{i}"))),
+                    ("s", Value::Int(100)),
+                    ("c", Value::Float(9.5 + i as f64)),
+                ]),
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn insert_select_roundtrip() {
+        let db = test_db();
+        seed_items(&db, 3);
+        let q = parse_statement("SELECT TITLE, STOCK FROM ITEMS WHERE ID = ?id").unwrap();
+        let r = db.exec_auto(&q, &b(&[("id", Value::Int(1))])).unwrap();
+        assert_eq!(r.rows, vec![vec![Value::Str("book1".into()), Value::Int(100)]]);
+    }
+
+    #[test]
+    fn update_with_arithmetic_and_state_update() {
+        let db = test_db();
+        seed_items(&db, 1);
+        let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK - ?q WHERE ID = ?id").unwrap();
+        let mut txn = db.begin();
+        let r = txn.exec(&u, &b(&[("q", Value::Int(30)), ("id", Value::Int(0))])).unwrap();
+        assert_eq!(r.affected, 1);
+        let update = txn.commit().unwrap();
+        assert_eq!(update.len(), 1);
+        match &update.records[0] {
+            WriteRecord::Update { cols, .. } => {
+                assert_eq!(cols, &vec![(2usize, ColOp::Add(Value::Int(-30)))])
+            }
+            other => panic!("{other:?}"),
+        }
+        let q = parse_statement("SELECT STOCK FROM ITEMS WHERE ID = 0").unwrap();
+        assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().scalar(), Some(&Value::Int(70)));
+    }
+
+    #[test]
+    fn reads_see_own_writes_before_commit() {
+        let db = test_db();
+        let mut txn = db.begin();
+        let ins = parse_statement("INSERT INTO ITEMS (ID, TITLE, STOCK, COST) VALUES (5, 'x', 1, 1.0)").unwrap();
+        txn.exec(&ins, &Bindings::new()).unwrap();
+        let q = parse_statement("SELECT STOCK FROM ITEMS WHERE ID = 5").unwrap();
+        assert_eq!(txn.exec(&q, &Bindings::new()).unwrap().scalar(), Some(&Value::Int(1)));
+        txn.abort();
+        // After abort: nothing.
+        assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().rows.len(), 0);
+    }
+
+    #[test]
+    fn duplicate_pk_rejected() {
+        let db = test_db();
+        seed_items(&db, 1);
+        let ins = parse_statement("INSERT INTO ITEMS (ID, TITLE, STOCK, COST) VALUES (0, 'dup', 1, 1.0)").unwrap();
+        let err = db.exec_auto(&ins, &Bindings::new()).unwrap_err();
+        assert!(matches!(err, TxnError::DuplicateKey { .. }));
+    }
+
+    #[test]
+    fn delete_and_scan() {
+        let db = test_db();
+        seed_items(&db, 5);
+        let d = parse_statement("DELETE FROM ITEMS WHERE ID >= 3").unwrap();
+        let r = db.exec_auto(&d, &Bindings::new()).unwrap();
+        assert_eq!(r.affected, 2);
+        assert_eq!(db.row_count("ITEMS"), 3);
+    }
+
+    #[test]
+    fn aggregates_and_order_by() {
+        let db = test_db();
+        seed_items(&db, 4);
+        let q = parse_statement("SELECT COUNT(*) FROM ITEMS WHERE STOCK = 100").unwrap();
+        assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().scalar(), Some(&Value::Int(4)));
+        let q = parse_statement("SELECT MAX(COST) FROM ITEMS").unwrap();
+        assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().scalar(), Some(&Value::Float(12.5)));
+        let q = parse_statement("SELECT ID FROM ITEMS ORDER BY COST DESC LIMIT 2").unwrap();
+        let r = db.exec_auto(&q, &Bindings::new()).unwrap();
+        assert_eq!(r.rows, vec![vec![Value::Int(3)], vec![Value::Int(2)]]);
+    }
+
+    #[test]
+    fn secondary_index_lookup() {
+        let db = test_db();
+        seed_items(&db, 10);
+        let q = parse_statement("SELECT ID FROM ITEMS WHERE TITLE = ?t").unwrap();
+        let r = db.exec_auto(&q, &b(&[("t", Value::Str("book7".into()))])).unwrap();
+        assert_eq!(r.rows, vec![vec![Value::Int(7)]]);
+        // Index stays correct across update of indexed column... (TITLE not
+        // updated here; check delete maintenance instead.)
+        let d = parse_statement("DELETE FROM ITEMS WHERE ID = 7").unwrap();
+        db.exec_auto(&d, &Bindings::new()).unwrap();
+        let r = db.exec_auto(&q, &b(&[("t", Value::Str("book7".into()))])).unwrap();
+        assert!(r.rows.is_empty());
+    }
+
+    #[test]
+    fn apply_update_replicates_state() {
+        let db1 = test_db();
+        let db2 = test_db();
+        seed_items(&db1, 2);
+        seed_items(&db2, 2);
+        // Run a txn on db1, capture its update, apply on db2.
+        let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK - 10 WHERE ID = 1").unwrap();
+        let mut txn = db1.begin();
+        txn.exec(&u, &Bindings::new()).unwrap();
+        let update = txn.commit().unwrap();
+        db2.apply_update(&update).unwrap();
+        assert_eq!(db1.content_hash(), db2.content_hash());
+    }
+
+    #[test]
+    fn commit_hook_runs_under_locks_in_commit_order() {
+        // Two conflicting txns run concurrently; the hook order must match
+        // the serialization (stock decrement) order.
+        use std::sync::{Arc, Mutex};
+        let db = Arc::new(test_db());
+        seed_items(&db, 1);
+        let order: Arc<Mutex<Vec<i64>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for tag in 0..4i64 {
+            let db = Arc::clone(&db);
+            let order = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK - 1 WHERE ID = 0").unwrap();
+                loop {
+                    let mut txn = db.begin();
+                    match txn.exec(&u, &Bindings::new()) {
+                        Ok(_) => {
+                            let stock_after = {
+                                let q = parse_statement("SELECT STOCK FROM ITEMS WHERE ID = 0").unwrap();
+                                txn.exec(&q, &Bindings::new()).unwrap().scalar().unwrap().as_int().unwrap()
+                            };
+                            txn.commit_with(|_| order.lock().unwrap().push(stock_after)).unwrap();
+                            break;
+                        }
+                        Err(e) if e.is_retryable() => continue,
+                        Err(e) => panic!("{e} (tag {tag})"),
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Hook order must be the strictly decreasing stock order 99,98,97,96.
+        assert_eq!(*order.lock().unwrap(), vec![99, 98, 97, 96]);
+    }
+
+    #[test]
+    fn read_committed_skips_read_locks() {
+        let db = test_db();
+        seed_items(&db, 1);
+        // Writer holds X lock on row 0.
+        let u = parse_statement("UPDATE ITEMS SET STOCK = 5 WHERE ID = 0").unwrap();
+        let mut writer = db.begin();
+        writer.exec(&u, &Bindings::new()).unwrap();
+        // Read-committed reader proceeds (no S lock) and sees committed 100.
+        let q = parse_statement("SELECT STOCK FROM ITEMS WHERE ID = 0").unwrap();
+        let mut reader = db.begin_with(IsolationLevel::ReadCommitted);
+        let r = reader.exec(&q, &Bindings::new()).unwrap();
+        assert_eq!(r.scalar(), Some(&Value::Int(100)));
+        reader.commit().unwrap();
+        writer.commit().unwrap();
+        let r = db.exec_auto(&q, &Bindings::new()).unwrap();
+        assert_eq!(r.scalar(), Some(&Value::Int(5)));
+    }
+
+    #[test]
+    fn serializable_blocks_conflicting_reader() {
+        // Writer holds X; a younger serializable reader must wait-die.
+        let db = test_db();
+        seed_items(&db, 1);
+        let u = parse_statement("UPDATE ITEMS SET STOCK = 5 WHERE ID = 0").unwrap();
+        let mut writer = db.begin();
+        writer.exec(&u, &Bindings::new()).unwrap();
+        let q = parse_statement("SELECT STOCK FROM ITEMS WHERE ID = 0").unwrap();
+        let mut reader = db.begin(); // younger
+        let err = reader.exec(&q, &Bindings::new()).unwrap_err();
+        assert!(err.is_retryable());
+    }
+
+    #[test]
+    fn concurrent_stock_decrements_are_serializable() {
+        use std::sync::Arc;
+        let db = Arc::new(test_db());
+        seed_items(&db, 1);
+        let threads = 8;
+        let per = 25;
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let db = Arc::clone(&db);
+            handles.push(std::thread::spawn(move || {
+                let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK - 1 WHERE ID = 0").unwrap();
+                for _ in 0..per {
+                    loop {
+                        let mut txn = db.begin();
+                        match txn.exec(&u, &Bindings::new()).and_then(|_| txn.commit().map(|_| ())) {
+                            Ok(()) => break,
+                            Err(e) if e.is_retryable() => continue,
+                            Err(e) => panic!("{e}"),
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let q = parse_statement("SELECT STOCK FROM ITEMS WHERE ID = 0").unwrap();
+        let final_stock = db.exec_auto(&q, &Bindings::new()).unwrap().scalar().unwrap().as_int().unwrap();
+        assert_eq!(final_stock, 100 - threads * per);
+    }
+}

@@ -1,0 +1,374 @@
+//! Strict two-phase locking with intent locks and wait-die deadlock
+//! avoidance.
+//!
+//! Lock targets are either a whole table (intent and scan locks: IS, IX,
+//! S, X) or a single row addressed by primary key (S, X). Scans take a
+//! table-level S (readers) or X (writers) lock, which conflicts with the
+//! IX/IS taken by point writers/readers — this also gives us phantom
+//! protection, so serializable really is serializable.
+//!
+//! Deadlock handling is **wait-die**: a requester older than every
+//! incompatible holder waits; a younger requester aborts immediately
+//! (`LockAborted`). Transaction age is its globally unique start
+//! timestamp. Wait-die guarantees no deadlock (waits only go from older
+//! to younger... strictly: older waits for younger is allowed, younger
+//! dies — the waits-for graph is acyclic because edges always point from
+//! lower to higher timestamp).
+
+use super::value::Key;
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+/// Transaction identifier; also its wait-die timestamp (smaller = older).
+pub type TxnId = u64;
+
+/// Lock modes. Rows only use `S`/`X`; tables use all four.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LockMode {
+    /// Intention shared: the txn will take S row locks in this table.
+    IS,
+    /// Intention exclusive: the txn will take X row locks in this table.
+    IX,
+    /// Shared (table: read scan; row: point read).
+    S,
+    /// Exclusive (table: write scan / delete scan; row: point write).
+    X,
+}
+
+impl LockMode {
+    /// Standard multi-granularity compatibility matrix.
+    pub fn compatible(self, other: LockMode) -> bool {
+        use LockMode::*;
+        match (self, other) {
+            (IS, IS) | (IS, IX) | (IX, IS) | (IX, IX) => true,
+            (IS, S) | (S, IS) => true,
+            (S, S) => true,
+            _ => false,
+        }
+    }
+
+    /// Whether `self` subsumes `other` (a holder of `self` needs no new
+    /// lock to also hold `other`).
+    pub fn covers(self, other: LockMode) -> bool {
+        use LockMode::*;
+        match (self, other) {
+            (X, _) => true,
+            (S, S) | (S, IS) => true,
+            (IX, IX) | (IX, IS) => true,
+            (IS, IS) => true,
+            _ => self == other,
+        }
+    }
+
+    /// The weakest mode that subsumes both (for upgrades: S + IX -> X is
+    /// the classic SIX case; we conservatively jump to X).
+    fn join(self, other: LockMode) -> LockMode {
+        use LockMode::*;
+        if self.covers(other) {
+            return self;
+        }
+        if other.covers(self) {
+            return other;
+        }
+        match (self, other) {
+            (IS, IX) | (IX, IS) => IX,
+            _ => X,
+        }
+    }
+}
+
+/// A lockable resource.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum LockTarget {
+    Table(usize),
+    Row(usize, Key),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum LockError {
+    /// Wait-die chose this (younger) transaction as the victim.
+    #[error("transaction {txn} aborted by wait-die on {target:?}")]
+    Aborted { txn: TxnId, target: String },
+    /// Lock wait exceeded the configured timeout (used as a backstop).
+    #[error("transaction {txn} timed out waiting for {target:?}")]
+    Timeout { txn: TxnId, target: String },
+}
+
+#[derive(Debug, Default)]
+struct LockEntry {
+    /// Current holders and their (joined) modes.
+    holders: Vec<(TxnId, LockMode)>,
+}
+
+#[derive(Debug, Default)]
+struct Shard {
+    entries: HashMap<LockTarget, LockEntry>,
+}
+
+/// The lock table, sharded to reduce mutex contention; each shard has a
+/// condvar that waiters park on.
+pub struct LockManager {
+    shards: Vec<(Mutex<Shard>, Condvar)>,
+    timeout: std::time::Duration,
+}
+
+impl std::fmt::Debug for LockManager {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LockManager").field("shards", &self.shards.len()).finish()
+    }
+}
+
+const DEFAULT_SHARDS: usize = 32;
+
+impl Default for LockManager {
+    fn default() -> Self {
+        Self::new(DEFAULT_SHARDS)
+    }
+}
+
+impl LockManager {
+    pub fn new(nshards: usize) -> Self {
+        LockManager {
+            shards: (0..nshards.max(1)).map(|_| (Mutex::new(Shard::default()), Condvar::new())).collect(),
+            // Generous backstop; wait-die should prevent true deadlocks.
+            timeout: std::time::Duration::from_secs(10),
+        }
+    }
+
+    pub fn with_timeout(mut self, t: std::time::Duration) -> Self {
+        self.timeout = t;
+        self
+    }
+
+    fn shard_of(&self, target: &LockTarget) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        target.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Acquire `mode` on `target` for `txn`, blocking per wait-die.
+    ///
+    /// Re-entrant: if the txn already holds a covering mode this is a
+    /// no-op; holding a weaker mode upgrades in place (subject to the
+    /// same compatibility/wait-die rules against *other* holders).
+    pub fn acquire(&self, txn: TxnId, target: LockTarget, mode: LockMode) -> Result<(), LockError> {
+        let sid = self.shard_of(&target);
+        let (mutex, cond) = &self.shards[sid];
+        let mut shard = mutex.lock().unwrap();
+        let deadline = std::time::Instant::now() + self.timeout;
+        loop {
+            let entry = shard.entries.entry(target.clone()).or_default();
+            let mine = entry.holders.iter().position(|(t, _)| *t == txn);
+            if let Some(i) = mine {
+                if entry.holders[i].1.covers(mode) {
+                    return Ok(()); // re-entrant
+                }
+            }
+            let want = match mine {
+                Some(i) => entry.holders[i].1.join(mode),
+                None => mode,
+            };
+            // Check compatibility against all *other* holders.
+            let blockers: Vec<TxnId> = entry
+                .holders
+                .iter()
+                .filter(|(t, m)| *t != txn && !m.compatible(want))
+                .map(|(t, _)| *t)
+                .collect();
+            if blockers.is_empty() {
+                match mine {
+                    Some(i) => entry.holders[i].1 = want,
+                    None => entry.holders.push((txn, want)),
+                }
+                return Ok(());
+            }
+            // Wait-die: if any blocker is older (smaller id), this txn dies.
+            if blockers.iter().any(|b| *b < txn) {
+                return Err(LockError::Aborted { txn, target: format!("{target:?}") });
+            }
+            // This txn is older than every blocker: wait.
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(LockError::Timeout { txn, target: format!("{target:?}") });
+            }
+            let (s, timeout_res) = cond.wait_timeout(shard, deadline - now).unwrap();
+            shard = s;
+            if timeout_res.timed_out() {
+                return Err(LockError::Timeout { txn, target: format!("{target:?}") });
+            }
+        }
+    }
+
+    /// Release every lock held by `txn` (strict 2PL release at
+    /// commit/abort). Returns the number of locks released.
+    pub fn release_all(&self, txn: TxnId) -> usize {
+        let mut released = 0;
+        for (mutex, cond) in &self.shards {
+            let mut shard = mutex.lock().unwrap();
+            let mut any = false;
+            shard.entries.retain(|_, entry| {
+                let before = entry.holders.len();
+                entry.holders.retain(|(t, _)| *t != txn);
+                if entry.holders.len() != before {
+                    released += before - entry.holders.len();
+                    any = true;
+                }
+                !entry.holders.is_empty()
+            });
+            if any {
+                cond.notify_all();
+            }
+        }
+        released
+    }
+
+    /// Locks currently held by a transaction (diagnostics and tests).
+    pub fn held_by(&self, txn: TxnId) -> Vec<(LockTarget, LockMode)> {
+        let mut out = Vec::new();
+        for (mutex, _) in &self.shards {
+            let shard = mutex.lock().unwrap();
+            for (target, entry) in &shard.entries {
+                for (t, m) in &entry.holders {
+                    if *t == txn {
+                        out.push((target.clone(), *m));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total number of live lock entries (diagnostics).
+    pub fn entry_count(&self) -> usize {
+        self.shards.iter().map(|(m, _)| m.lock().unwrap().entries.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::value::Value;
+    use std::sync::Arc;
+
+    fn row(k: i64) -> LockTarget {
+        LockTarget::Row(0, Key::single(Value::Int(k)))
+    }
+
+    #[test]
+    fn compatibility_matrix() {
+        use LockMode::*;
+        assert!(IS.compatible(IX));
+        assert!(S.compatible(S));
+        assert!(!S.compatible(X));
+        assert!(!X.compatible(X));
+        assert!(!IX.compatible(S));
+        assert!(IS.compatible(S));
+    }
+
+    #[test]
+    fn shared_locks_coexist_exclusive_does_not() {
+        let lm = LockManager::default();
+        lm.acquire(1, row(7), LockMode::S).unwrap();
+        lm.acquire(2, row(7), LockMode::S).unwrap();
+        // Txn 3 (younger than both) requesting X must die.
+        let err = lm.acquire(3, row(7), LockMode::X).unwrap_err();
+        assert!(matches!(err, LockError::Aborted { txn: 3, .. }));
+        lm.release_all(1);
+        lm.release_all(2);
+        lm.acquire(3, row(7), LockMode::X).unwrap();
+    }
+
+    #[test]
+    fn reentrant_and_upgrade() {
+        let lm = LockManager::default();
+        lm.acquire(5, row(1), LockMode::S).unwrap();
+        lm.acquire(5, row(1), LockMode::S).unwrap(); // re-entrant
+        lm.acquire(5, row(1), LockMode::X).unwrap(); // sole holder upgrade
+        assert_eq!(lm.held_by(5).len(), 1);
+        assert_eq!(lm.held_by(5)[0].1, LockMode::X);
+        lm.release_all(5);
+        assert_eq!(lm.entry_count(), 0);
+    }
+
+    #[test]
+    fn wait_die_older_waits_for_younger() {
+        // Txn 1 (old) requests a lock held by txn 2 (young): it must WAIT,
+        // and obtain the lock once 2 releases.
+        let lm = Arc::new(LockManager::default());
+        lm.acquire(2, row(9), LockMode::X).unwrap();
+        let lm2 = Arc::clone(&lm);
+        let waiter = std::thread::spawn(move || lm2.acquire(1, row(9), LockMode::X));
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!waiter.is_finished(), "older txn should be blocked, not aborted");
+        lm.release_all(2);
+        waiter.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn wait_die_younger_dies() {
+        let lm = LockManager::default();
+        lm.acquire(1, row(3), LockMode::X).unwrap();
+        let err = lm.acquire(2, row(3), LockMode::X).unwrap_err();
+        assert!(matches!(err, LockError::Aborted { txn: 2, .. }));
+    }
+
+    #[test]
+    fn table_scan_blocks_point_writer() {
+        let lm = LockManager::default();
+        lm.acquire(1, LockTarget::Table(0), LockMode::S).unwrap();
+        // Younger writer wants IX on the table -> incompatible with S -> dies.
+        let err = lm.acquire(2, LockTarget::Table(0), LockMode::IX).unwrap_err();
+        assert!(matches!(err, LockError::Aborted { .. }));
+        // But another reader's IS is fine.
+        lm.acquire(3, LockTarget::Table(0), LockMode::IS).unwrap();
+    }
+
+    #[test]
+    fn timeout_backstop_fires() {
+        let lm = LockManager::new(4).with_timeout(std::time::Duration::from_millis(50));
+        lm.acquire(2, row(4), LockMode::X).unwrap();
+        // Txn 1 is older so it waits; holder never releases -> timeout.
+        let err = lm.acquire(1, row(4), LockMode::X).unwrap_err();
+        assert!(matches!(err, LockError::Timeout { txn: 1, .. }));
+        lm.release_all(2);
+    }
+
+    #[test]
+    fn stress_no_two_exclusive_holders() {
+        // Property-style stress: N threads hammer M rows with X locks,
+        // tracking a per-row owner flag; the flag must never be observed
+        // owned by two threads at once.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let lm = Arc::new(LockManager::default());
+        let owners: Arc<Vec<AtomicU64>> = Arc::new((0..8).map(|_| AtomicU64::new(0)).collect());
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let lm = Arc::clone(&lm);
+            let owners = Arc::clone(&owners);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::Rng::new(t);
+                for i in 0..300 {
+                    let txn = t * 1_000_000 + i; // unique, interleaved ages
+                    let r = rng.range(0, 8);
+                    match lm.acquire(txn, row(r as i64), LockMode::X) {
+                        Ok(()) => {
+                            let prev = owners[r].swap(txn + 1, Ordering::SeqCst);
+                            assert_eq!(prev, 0, "row {r} already exclusively owned");
+                            std::thread::yield_now();
+                            owners[r].store(0, Ordering::SeqCst);
+                            lm.release_all(txn);
+                        }
+                        Err(_) => {
+                            lm.release_all(txn);
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(lm.entry_count(), 0);
+    }
+}

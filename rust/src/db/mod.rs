@@ -1,0 +1,39 @@
+//! An embedded, in-memory, multi-threaded relational engine.
+//!
+//! This is the project's stand-in for the paper's *unmodified DBMS*
+//! (MySQL behind JDBC). Eliá treats the DBMS as a black box that offers:
+//!
+//! 1. ACID transactions with **serializability via strict two-phase
+//!    locking** (the Conveyor Belt commit-order argument in §5 of the
+//!    paper depends on pessimistic locking),
+//! 2. a **read-committed** mode (what MySQL Cluster offers, used by the
+//!    data-partitioning baseline),
+//! 3. the ability to **capture the state update** of a transaction — the
+//!    ordered sequence of mutations it performed — which Eliá's JDBC
+//!    interception provided, and
+//! 4. the ability to **apply** such a state update directly (replication
+//!    of global operations).
+//!
+//! The engine executes [`crate::sqlir`] statements: point accesses via
+//! primary keys, secondary-index lookups, and full scans; inserts,
+//! multi-row updates and deletes; COUNT/MIN/MAX/SUM aggregates; ORDER BY
+//! and LIMIT.
+//!
+//! Concurrency control: logical strict-2PL locks (row S/X plus table
+//! IS/IX/S/X intent locks for scan/phantom protection) with **wait-die**
+//! deadlock avoidance, layered over short physical `RwLock` critical
+//! sections per table. Writes are buffered in the transaction and applied
+//! at commit, so read-committed readers never observe uncommitted data.
+
+pub mod engine;
+pub mod lockmgr;
+pub mod plan;
+pub mod txn;
+pub mod update;
+pub mod value;
+
+pub use engine::{Db, QueryResult, TxnHandle};
+pub use lockmgr::{LockManager, LockMode};
+pub use txn::{IsolationLevel, TxnError};
+pub use update::{StateUpdate, WriteRecord};
+pub use value::{Bindings, Key, Row, Value};

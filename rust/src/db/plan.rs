@@ -1,0 +1,214 @@
+//! Access-path planning: decide how a WHERE predicate selects rows.
+//!
+//! Three paths, best first:
+//! * **Point**: the predicate pins every primary-key column with an
+//!   equality — O(1) hash lookup, row-level locking.
+//! * **IndexEq**: an equality on a secondary-indexed column — index
+//!   bucket scan, row-level locking plus a table intent lock. For
+//!   serializable phantom protection an index-equality *read* still
+//!   takes a table S lock unless the index column is the full PK prefix;
+//!   we keep it simple and treat IndexEq reads like scans lock-wise when
+//!   the isolation level demands it (see engine).
+//! * **Scan**: everything else — full scan, table-level locking.
+
+use super::value::{eval_scalar, Bindings, Key, Value};
+use crate::catalog::TableSchema;
+use crate::sqlir::{CmpOp, Pred, Scalar};
+
+/// The chosen access path for a statement's WHERE clause.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AccessPath {
+    /// Full primary key pinned to concrete values.
+    Point(Key),
+    /// Equality on a secondary-indexed column.
+    IndexEq { col: usize, value: Value },
+    /// Full table scan.
+    Scan,
+}
+
+/// Extract `col = <concrete value>` equalities from the top-level
+/// conjunction of `pred` (disjunctions and non-equalities contribute
+/// nothing — they fall back to scan filtering).
+fn top_level_equalities(
+    pred: &Pred,
+    schema: &TableSchema,
+    binds: &Bindings,
+) -> Vec<(usize, Value)> {
+    let mut out = Vec::new();
+    collect_eq(pred, schema, binds, &mut out);
+    out
+}
+
+fn collect_eq(pred: &Pred, schema: &TableSchema, binds: &Bindings, out: &mut Vec<(usize, Value)>) {
+    match pred {
+        Pred::Cmp { col, op: CmpOp::Eq, rhs } => {
+            // Only param/literal right-hand sides yield a concrete value.
+            if matches!(rhs, Scalar::Param(_) | Scalar::Lit(_)) {
+                if let Some(idx) = schema.col_index(col) {
+                    if let Ok(v) = eval_scalar(rhs, None, &|c| schema.col_index(c), binds) {
+                        let v = v.coerce(schema.columns[idx].ty);
+                        out.push((idx, v));
+                    }
+                }
+            }
+        }
+        Pred::And(ps) => {
+            for p in ps {
+                collect_eq(p, schema, binds, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Plan the access path for `pred` over `schema` with `binds`.
+pub fn plan(pred: &Pred, schema: &TableSchema, binds: &Bindings) -> AccessPath {
+    let eqs = top_level_equalities(pred, schema, binds);
+    // Point access: every PK column pinned.
+    let pk = schema.pk_indices();
+    let mut key_vals = Vec::with_capacity(pk.len());
+    for pkc in &pk {
+        match eqs.iter().find(|(c, _)| c == pkc) {
+            Some((_, v)) => key_vals.push(v.clone()),
+            None => {
+                key_vals.clear();
+                break;
+            }
+        }
+    }
+    if !key_vals.is_empty() && key_vals.len() == pk.len() {
+        return AccessPath::Point(Key(key_vals));
+    }
+    // Secondary index equality.
+    for idx_col in &schema.indexes {
+        if let Some(ci) = schema.col_index(idx_col) {
+            if let Some((_, v)) = eqs.iter().find(|(c, _)| *c == ci) {
+                return AccessPath::IndexEq { col: ci, value: v.clone() };
+            }
+        }
+    }
+    AccessPath::Scan
+}
+
+/// Evaluate a predicate against a row.
+pub fn eval_pred(
+    pred: &Pred,
+    row: &super::value::Row,
+    schema: &TableSchema,
+    binds: &Bindings,
+) -> Result<bool, String> {
+    match pred {
+        Pred::True => Ok(true),
+        Pred::Cmp { col, op, rhs } => {
+            let idx = col_or_err(schema, col)?;
+            let rv = eval_scalar(rhs, Some(row), &|c| schema.col_index(c), binds)?;
+            Ok(row[idx].sql_cmp(*op, &rv))
+        }
+        Pred::And(ps) => {
+            for p in ps {
+                if !eval_pred(p, row, schema, binds)? {
+                    return Ok(false);
+                }
+            }
+            Ok(true)
+        }
+        Pred::Or(ps) => {
+            for p in ps {
+                if eval_pred(p, row, schema, binds)? {
+                    return Ok(true);
+                }
+            }
+            Ok(false)
+        }
+    }
+}
+
+fn col_or_err(schema: &TableSchema, col: &str) -> Result<usize, String> {
+    schema
+        .col_index(col)
+        .ok_or_else(|| format!("unknown column {col} in table {}", schema.name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::ValueType;
+    use crate::sqlir::parse_statement;
+    use crate::sqlir::Stmt;
+
+    fn schema() -> TableSchema {
+        TableSchema::new(
+            "SC",
+            &[
+                ("ID", ValueType::Int),
+                ("I_ID", ValueType::Int),
+                ("QTY", ValueType::Int),
+                ("OWNER", ValueType::Int),
+            ],
+            &["ID", "I_ID"],
+        )
+        .with_index("OWNER")
+    }
+
+    fn where_of(sql: &str) -> Pred {
+        match parse_statement(sql).unwrap() {
+            Stmt::Select(s) => s.where_,
+            Stmt::Update(u) => u.where_,
+            Stmt::Delete(d) => d.where_,
+            _ => panic!(),
+        }
+    }
+
+    fn binds(pairs: &[(&str, i64)]) -> Bindings {
+        pairs.iter().map(|(k, v)| (k.to_string(), Value::Int(*v))).collect()
+    }
+
+    #[test]
+    fn point_plan_when_full_pk_pinned() {
+        let p = where_of("SELECT * FROM SC WHERE ID = ?sid AND I_ID = ?iid");
+        let plan = plan(&p, &schema(), &binds(&[("sid", 5), ("iid", 9)]));
+        assert_eq!(plan, AccessPath::Point(Key(vec![Value::Int(5), Value::Int(9)])));
+    }
+
+    #[test]
+    fn partial_pk_falls_to_scan_or_index() {
+        let p = where_of("SELECT * FROM SC WHERE ID = ?sid");
+        assert_eq!(plan(&p, &schema(), &binds(&[("sid", 5)])), AccessPath::Scan);
+        let p = where_of("SELECT * FROM SC WHERE OWNER = ?u");
+        assert_eq!(
+            plan(&p, &schema(), &binds(&[("u", 3)])),
+            AccessPath::IndexEq { col: 3, value: Value::Int(3) }
+        );
+    }
+
+    #[test]
+    fn disjunction_prevents_point_access() {
+        let p = where_of("SELECT * FROM SC WHERE (ID = ?a AND I_ID = ?b) OR QTY = 0");
+        assert_eq!(plan(&p, &schema(), &binds(&[("a", 1), ("b", 2)])), AccessPath::Scan);
+    }
+
+    #[test]
+    fn range_predicate_scans() {
+        let p = where_of("SELECT * FROM SC WHERE QTY > 3");
+        assert_eq!(plan(&p, &schema(), &Bindings::new()), AccessPath::Scan);
+    }
+
+    #[test]
+    fn eval_pred_filters_rows() {
+        let s = schema();
+        let row = vec![Value::Int(1), Value::Int(2), Value::Int(7), Value::Int(4)];
+        let p = where_of("SELECT * FROM SC WHERE QTY >= 5 AND OWNER = ?u");
+        assert!(eval_pred(&p, &row, &s, &binds(&[("u", 4)])).unwrap());
+        assert!(!eval_pred(&p, &row, &s, &binds(&[("u", 9)])).unwrap());
+        let p = where_of("SELECT * FROM SC WHERE QTY = 0 OR OWNER = 4");
+        assert!(eval_pred(&p, &row, &s, &Bindings::new()).unwrap());
+    }
+
+    #[test]
+    fn eval_pred_unknown_column_errors() {
+        let s = schema();
+        let row = vec![Value::Int(1), Value::Int(2), Value::Int(7), Value::Int(4)];
+        let p = where_of("SELECT * FROM SC WHERE NOPE = 1");
+        assert!(eval_pred(&p, &row, &s, &Bindings::new()).is_err());
+    }
+}

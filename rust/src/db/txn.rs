@@ -1,0 +1,100 @@
+//! Transaction state and error types.
+
+use super::lockmgr::LockError;
+use super::update::StateUpdate;
+use super::value::{Key, Row};
+use std::collections::HashMap;
+
+/// Isolation levels the engine offers.
+///
+/// * `Serializable` — strict 2PL with table-level scan locks: what Eliá
+///   requires from its local DBMS (paper §5 assumes pessimistic locking).
+/// * `ReadCommitted` — reads take no locks and observe the latest
+///   committed state; writes still take exclusive locks. This is the only
+///   level MySQL Cluster offers and is what the data-partitioning
+///   baseline runs with (paper §7.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsolationLevel {
+    Serializable,
+    ReadCommitted,
+}
+
+/// Errors surfaced to transaction code.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum TxnError {
+    /// Wait-die abort or lock timeout; the caller should retry the whole
+    /// transaction (the harness and Conveyor Belt servers do).
+    #[error("lock conflict: {0}")]
+    Lock(#[from] LockError),
+    #[error("duplicate primary key {key} in table {table}")]
+    DuplicateKey { table: String, key: String },
+    #[error("sql error: {0}")]
+    Sql(String),
+    #[error("transaction already finished")]
+    Finished,
+}
+
+impl TxnError {
+    /// True when retrying the transaction may succeed (concurrency
+    /// victim), false for semantic errors.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, TxnError::Lock(_))
+    }
+}
+
+/// The buffered, not-yet-committed effects of a running transaction.
+#[derive(Debug, Default)]
+pub struct TxnState {
+    /// Write overlay: `Some(row)` = inserted/updated image, `None` =
+    /// deleted. Reads go through this before committed storage.
+    pub overlay: HashMap<(usize, Key), Option<Row>>,
+    /// Ordered redo log — becomes the operation's [`StateUpdate`].
+    pub update: StateUpdate,
+}
+
+impl TxnState {
+    pub fn visible<'a>(
+        &'a self,
+        table: usize,
+        key: &Key,
+        committed: Option<&'a Row>,
+    ) -> Option<&'a Row> {
+        match self.overlay.get(&(table, key.clone())) {
+            Some(Some(row)) => Some(row),
+            Some(None) => None,
+            None => committed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::value::Value;
+
+    #[test]
+    fn overlay_precedence() {
+        let mut st = TxnState::default();
+        let key = Key::single(Value::Int(1));
+        let committed = vec![Value::Int(1), Value::Int(10)];
+
+        // No overlay: committed row visible.
+        assert_eq!(st.visible(0, &key, Some(&committed)), Some(&committed));
+
+        // Updated: overlay image wins.
+        let img = vec![Value::Int(1), Value::Int(99)];
+        st.overlay.insert((0, key.clone()), Some(img.clone()));
+        assert_eq!(st.visible(0, &key, Some(&committed)), Some(&img));
+
+        // Deleted: nothing visible even though committed exists.
+        st.overlay.insert((0, key.clone()), None);
+        assert_eq!(st.visible(0, &key, Some(&committed)), None);
+    }
+
+    #[test]
+    fn retryability() {
+        use crate::db::lockmgr::LockError;
+        assert!(TxnError::Lock(LockError::Aborted { txn: 1, target: "t".into() }).is_retryable());
+        assert!(!TxnError::Sql("boom".into()).is_retryable());
+    }
+}

@@ -1,0 +1,336 @@
+//! Runtime values, rows and keys.
+
+use crate::catalog::ValueType;
+use crate::sqlir::{CmpOp, Literal, Scalar};
+use std::cmp::Ordering;
+use std::collections::HashMap;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+
+/// A runtime value. `Float` is hashable/orderable via its bit pattern
+/// after normalizing `-0.0` and NaN, so values can serve as map keys.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Null,
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Int(_) => "int",
+            Value::Float(_) => "float",
+            Value::Str(_) => "str",
+            Value::Null => "null",
+        }
+    }
+
+    pub fn from_literal(lit: &Literal) -> Value {
+        match lit {
+            Literal::Int(i) => Value::Int(*i),
+            Literal::Float(x) => Value::Float(*x),
+            Literal::Str(s) => Value::Str(s.clone()),
+            Literal::Null => Value::Null,
+        }
+    }
+
+    /// Coerce into a declared column type (ints widen to floats, anything
+    /// renders to string for Str columns). Null passes through.
+    pub fn coerce(self, ty: ValueType) -> Value {
+        match (self, ty) {
+            (Value::Null, _) => Value::Null,
+            (Value::Int(i), ValueType::Float) => Value::Float(i as f64),
+            (Value::Float(x), ValueType::Int) => Value::Int(x.round() as i64),
+            (v @ Value::Int(_), ValueType::Int) => v,
+            (v @ Value::Float(_), ValueType::Float) => v,
+            (v @ Value::Str(_), ValueType::Str) => v,
+            (Value::Int(i), ValueType::Str) => Value::Str(i.to_string()),
+            (Value::Float(x), ValueType::Str) => Value::Str(x.to_string()),
+            (Value::Str(s), ValueType::Int) => {
+                Value::Int(s.parse().unwrap_or_else(|_| panic!("cannot coerce {s:?} to int")))
+            }
+            (Value::Str(s), ValueType::Float) => {
+                Value::Float(s.parse().unwrap_or_else(|_| panic!("cannot coerce {s:?} to float")))
+            }
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(x) => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn norm_bits(x: f64) -> u64 {
+        if x.is_nan() {
+            f64::NAN.to_bits()
+        } else if x == 0.0 {
+            0u64 // normalize -0.0
+        } else {
+            x.to_bits()
+        }
+    }
+
+    /// Total comparison used by ORDER BY and range predicates. Numeric
+    /// types compare numerically against each other; Null sorts first;
+    /// cross-type (number vs string) compares by type rank — predicates on
+    /// typed columns never hit that case.
+    pub fn total_cmp(&self, other: &Value) -> Ordering {
+        use Value::*;
+        match (self, other) {
+            (Null, Null) => Ordering::Equal,
+            (Null, _) => Ordering::Less,
+            (_, Null) => Ordering::Greater,
+            (Int(a), Int(b)) => a.cmp(b),
+            (Str(a), Str(b)) => a.cmp(b),
+            (a, b) => match (a.as_f64(), b.as_f64()) {
+                (Some(x), Some(y)) => x.partial_cmp(&y).unwrap_or(Ordering::Equal),
+                _ => a.type_rank().cmp(&b.type_rank()),
+            },
+        }
+    }
+
+    fn type_rank(&self) -> u8 {
+        match self {
+            Value::Null => 0,
+            Value::Int(_) | Value::Float(_) => 1,
+            Value::Str(_) => 2,
+        }
+    }
+
+    /// SQL comparison semantics: any comparison involving NULL is false.
+    pub fn sql_cmp(&self, op: CmpOp, other: &Value) -> bool {
+        if matches!(self, Value::Null) || matches!(other, Value::Null) {
+            return false;
+        }
+        let ord = self.total_cmp(other);
+        match op {
+            CmpOp::Eq => ord == Ordering::Equal,
+            CmpOp::Ne => ord != Ordering::Equal,
+            CmpOp::Lt => ord == Ordering::Less,
+            CmpOp::Le => ord != Ordering::Greater,
+            CmpOp::Gt => ord == Ordering::Greater,
+            CmpOp::Ge => ord != Ordering::Less,
+        }
+    }
+}
+
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        use Value::*;
+        match (self, other) {
+            (Null, Null) => true,
+            (Int(a), Int(b)) => a == b,
+            (Str(a), Str(b)) => a == b,
+            (Float(a), Float(b)) => Value::norm_bits(*a) == Value::norm_bits(*b),
+            // Int/Float cross-equality so `WHERE price = 10` matches 10.0.
+            (Int(a), Float(b)) | (Float(b), Int(a)) => (*a as f64) == *b,
+            _ => false,
+        }
+    }
+}
+
+impl Eq for Value {}
+
+impl Hash for Value {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        match self {
+            Value::Null => 0u8.hash(state),
+            // Ints and integral floats must hash identically to honor the
+            // cross-type Eq above.
+            Value::Int(i) => {
+                1u8.hash(state);
+                Value::norm_bits(*i as f64).hash(state);
+            }
+            Value::Float(x) => {
+                1u8.hash(state);
+                Value::norm_bits(*x).hash(state);
+            }
+            Value::Str(s) => {
+                2u8.hash(state);
+                s.hash(state);
+            }
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Null => write!(f, "NULL"),
+        }
+    }
+}
+
+/// A row: values in the table's column order.
+pub type Row = Vec<Value>;
+
+/// A primary-key value tuple.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Key(pub Vec<Value>);
+
+impl Key {
+    pub fn single(v: Value) -> Key {
+        Key(vec![v])
+    }
+}
+
+impl fmt::Display for Key {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self.0.iter().map(|v| v.to_string()).collect();
+        write!(f, "({})", parts.join(","))
+    }
+}
+
+/// Parameter bindings for executing a statement.
+pub type Bindings = HashMap<String, Value>;
+
+/// Evaluate a [`Scalar`] given the current row (for `Col` references) and
+/// parameter bindings. `row`/`col_of` may be absent when evaluating
+/// row-independent scalars (INSERT values).
+pub fn eval_scalar(
+    scalar: &Scalar,
+    row: Option<&Row>,
+    col_of: &dyn Fn(&str) -> Option<usize>,
+    binds: &Bindings,
+) -> Result<Value, String> {
+    match scalar {
+        Scalar::Lit(l) => Ok(Value::from_literal(l)),
+        Scalar::Param(p) => {
+            binds.get(p).cloned().ok_or_else(|| format!("unbound parameter ?{p}"))
+        }
+        Scalar::Col(c) => {
+            let row = row.ok_or_else(|| format!("column {c} referenced in row-free context"))?;
+            let idx = col_of(c).ok_or_else(|| format!("unknown column {c}"))?;
+            Ok(row[idx].clone())
+        }
+        Scalar::Add(a, b) | Scalar::Sub(a, b) | Scalar::Mul(a, b) => {
+            let va = eval_scalar(a, row, col_of, binds)?;
+            let vb = eval_scalar(b, row, col_of, binds)?;
+            numeric_binop(scalar, &va, &vb)
+        }
+    }
+}
+
+fn numeric_binop(op: &Scalar, a: &Value, b: &Value) -> Result<Value, String> {
+    if matches!(a, Value::Null) || matches!(b, Value::Null) {
+        return Ok(Value::Null);
+    }
+    // Integer arithmetic stays integer; anything else goes through f64.
+    if let (Value::Int(x), Value::Int(y)) = (a, b) {
+        let r = match op {
+            Scalar::Add(..) => x.wrapping_add(*y),
+            Scalar::Sub(..) => x.wrapping_sub(*y),
+            Scalar::Mul(..) => x.wrapping_mul(*y),
+            _ => unreachable!(),
+        };
+        return Ok(Value::Int(r));
+    }
+    let (x, y) = match (a.as_f64(), b.as_f64()) {
+        (Some(x), Some(y)) => (x, y),
+        _ => return Err(format!("arithmetic on non-numeric values {a} and {b}")),
+    };
+    let r = match op {
+        Scalar::Add(..) => x + y,
+        Scalar::Sub(..) => x - y,
+        Scalar::Mul(..) => x * y,
+        _ => unreachable!(),
+    };
+    Ok(Value::Float(r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::hash_map::DefaultHasher;
+
+    fn h(v: &Value) -> u64 {
+        let mut s = DefaultHasher::new();
+        v.hash(&mut s);
+        s.finish()
+    }
+
+    #[test]
+    fn int_float_cross_equality_and_hash() {
+        assert_eq!(Value::Int(3), Value::Float(3.0));
+        assert_eq!(h(&Value::Int(3)), h(&Value::Float(3.0)));
+        assert_ne!(Value::Int(3), Value::Float(3.5));
+        assert_eq!(Value::Float(0.0), Value::Float(-0.0));
+        assert_eq!(h(&Value::Float(0.0)), h(&Value::Float(-0.0)));
+    }
+
+    #[test]
+    fn null_never_compares_true() {
+        assert!(!Value::Null.sql_cmp(CmpOp::Eq, &Value::Null));
+        assert!(!Value::Int(1).sql_cmp(CmpOp::Eq, &Value::Null));
+        assert!(!Value::Null.sql_cmp(CmpOp::Ne, &Value::Int(1)));
+    }
+
+    #[test]
+    fn sql_cmp_semantics() {
+        assert!(Value::Int(2).sql_cmp(CmpOp::Lt, &Value::Int(3)));
+        assert!(Value::Int(2).sql_cmp(CmpOp::Le, &Value::Float(2.0)));
+        assert!(Value::Str("b".into()).sql_cmp(CmpOp::Gt, &Value::Str("a".into())));
+        assert!(Value::Float(1.5).sql_cmp(CmpOp::Ne, &Value::Int(1)));
+    }
+
+    #[test]
+    fn coercion_into_column_types() {
+        assert_eq!(Value::Int(3).coerce(ValueType::Float), Value::Float(3.0));
+        assert_eq!(Value::Str("12".into()).coerce(ValueType::Int), Value::Int(12));
+        assert_eq!(Value::Int(7).coerce(ValueType::Str), Value::Str("7".into()));
+        assert_eq!(Value::Null.coerce(ValueType::Int), Value::Null);
+    }
+
+    #[test]
+    fn eval_scalar_arithmetic() {
+        let binds: Bindings = [("q".to_string(), Value::Int(4))].into_iter().collect();
+        let row: Row = vec![Value::Int(10)];
+        let col_of = |c: &str| if c == "STOCK" { Some(0) } else { None };
+        let expr = Scalar::Sub(
+            Box::new(Scalar::Col("STOCK".into())),
+            Box::new(Scalar::Param("q".into())),
+        );
+        let v = eval_scalar(&expr, Some(&row), &col_of, &binds).unwrap();
+        assert_eq!(v, Value::Int(6));
+    }
+
+    #[test]
+    fn eval_scalar_unbound_param_errors() {
+        let binds = Bindings::new();
+        let err = eval_scalar(&Scalar::Param("x".into()), None, &|_| None, &binds).unwrap_err();
+        assert!(err.contains("unbound"));
+    }
+
+    #[test]
+    fn arithmetic_with_null_is_null() {
+        let binds = Bindings::new();
+        let expr = Scalar::Add(
+            Box::new(Scalar::Lit(Literal::Null)),
+            Box::new(Scalar::Lit(Literal::Int(1))),
+        );
+        assert_eq!(eval_scalar(&expr, None, &|_| None, &binds).unwrap(), Value::Null);
+    }
+}

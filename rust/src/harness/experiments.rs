@@ -1,0 +1,432 @@
+//! Pre-packaged experiment runners for every table and figure of the
+//! paper's evaluation (§7). Benches call these at full scale; smoke tests
+//! call them with `quick = true`.
+//!
+//! Calibration note (DESIGN.md §1, substitution 3): servers are 2-worker
+//! stations (T2.medium), operations cost ~5 ms of service time, and
+//! message latencies follow Table 2. Absolute throughputs therefore
+//! differ from the authors' testbed; the *shapes* — who wins, by what
+//! factor, where the knees sit — are the reproduction target.
+
+use crate::baselines::{BaselineConfig, BaselineMode, BaselineSim};
+use crate::cluster::{ClusterConfig, ClusterSim};
+use crate::conveyor::{ConveyorConfig, ConveyorSim};
+use crate::simnet::clients::ClientsConfig;
+use crate::simnet::latency::Topology;
+use crate::util::VTime;
+use crate::workload::analyzed::AnalyzedApp;
+use crate::workload::generator::{OpGenerator, ServiceModel};
+use crate::workload::{micro, rubis, tpcw};
+
+use super::{ladder, ramp, Curve, LoadPoint};
+
+/// Which macro workload an experiment drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    Tpcw,
+    Rubis,
+}
+
+impl Workload {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Tpcw => "TPC-W",
+            Workload::Rubis => "RUBiS",
+        }
+    }
+
+    pub fn analyzed(&self) -> AnalyzedApp {
+        match self {
+            Workload::Tpcw => tpcw::analyzed(),
+            Workload::Rubis => rubis::analyzed(),
+        }
+    }
+
+    pub fn generator(&self, app: &AnalyzedApp, max_sites: usize) -> Box<dyn OpGenerator> {
+        match self {
+            Workload::Tpcw => {
+                Box::new(tpcw::TpcwGenerator::new(app, tpcw::TpcwScale::default(), max_sites))
+            }
+            Workload::Rubis => {
+                Box::new(rubis::RubisGenerator::new(app, rubis::RubisScale::default()))
+            }
+        }
+    }
+}
+
+/// Global experiment scale knobs.
+///
+/// `think_ms` defaults to ~1 s for the macro benchmarks: TPC-W/RUBiS
+/// emulate web browsers with think times (the TPC-W spec uses several
+/// seconds). This is what makes the paper's Table 3 consistent: a
+/// centralized server queues into the ~1.4 s regime at a load the
+/// five-site Eliá deployment absorbs at intra-site latency.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpScale {
+    pub warmup_s: u64,
+    pub horizon_s: u64,
+    pub max_clients: usize,
+    pub think_ms: f64,
+}
+
+impl ExpScale {
+    pub fn full() -> Self {
+        ExpScale { warmup_s: 4, horizon_s: 20, max_clients: 16384, think_ms: 1000.0 }
+    }
+
+    pub fn quick() -> Self {
+        ExpScale { warmup_s: 2, horizon_s: 8, max_clients: 4096, think_ms: 1000.0 }
+    }
+}
+
+fn conveyor_point(
+    app: &AnalyzedApp,
+    topo: Topology,
+    clients: usize,
+    scale: &ExpScale,
+    service: ServiceModel,
+    gen: Box<dyn OpGenerator + '_>,
+) -> LoadPoint {
+    conveyor_point_with(app, topo, clients, scale, service, gen, None)
+}
+
+fn conveyor_point_with(
+    app: &AnalyzedApp,
+    topo: Topology,
+    clients: usize,
+    scale: &ExpScale,
+    service: ServiceModel,
+    gen: Box<dyn OpGenerator + '_>,
+    client_matrix: Option<crate::simnet::latency::LatencyMatrix>,
+) -> LoadPoint {
+    let cfg = ConveyorConfig {
+        service,
+        warmup: VTime::from_secs(scale.warmup_s),
+        horizon: VTime::from_secs(scale.horizon_s),
+        execute_real: false,
+        client_matrix,
+        ..Default::default()
+    };
+    let report = ConveyorSim::new(
+        app,
+        topo,
+        ClientsConfig { n: clients, think_ms: scale.think_ms, seed: 0xF16, ..Default::default() },
+        cfg,
+        gen,
+        |_| {},
+    )
+    .run();
+    let mut lat = report.metrics.latency.clone();
+    LoadPoint::from_summary(clients, report.throughput(), &mut lat, report.metrics.completed)
+}
+
+fn cluster_point(
+    app: &AnalyzedApp,
+    topo: Topology,
+    clients: usize,
+    scale: &ExpScale,
+    service: ServiceModel,
+    gen: Box<dyn OpGenerator + '_>,
+) -> LoadPoint {
+    let cfg = ClusterConfig {
+        service,
+        warmup: VTime::from_secs(scale.warmup_s),
+        horizon: VTime::from_secs(scale.horizon_s),
+        ..Default::default()
+    };
+    let report = ClusterSim::new(
+        app,
+        topo,
+        ClientsConfig { n: clients, think_ms: scale.think_ms, seed: 0xF16, ..Default::default() },
+        cfg,
+        gen,
+    )
+    .run();
+    let mut lat = report.metrics.latency.clone();
+    LoadPoint::from_summary(clients, report.throughput(), &mut lat, report.metrics.completed)
+}
+
+fn baseline_point(
+    app: &AnalyzedApp,
+    mode: BaselineMode,
+    client_sites: usize,
+    clients: usize,
+    scale: &ExpScale,
+    service: ServiceModel,
+    gen: Box<dyn OpGenerator + '_>,
+) -> LoadPoint {
+    let cfg = BaselineConfig {
+        mode,
+        service,
+        warmup: VTime::from_secs(scale.warmup_s),
+        horizon: VTime::from_secs(scale.horizon_s),
+        ..BaselineConfig::centralized()
+    };
+    let report = BaselineSim::new(
+        app,
+        Topology::wan_full_client(client_sites),
+        ClientsConfig { n: clients, think_ms: scale.think_ms, seed: 0xF16, ..Default::default() },
+        cfg,
+        gen,
+    )
+    .run();
+    let mut lat = report.metrics.latency.clone();
+    LoadPoint::from_summary(clients, report.throughput(), &mut lat, report.metrics.completed)
+}
+
+/// Figure 3 — LAN scalability: (system, servers, curve) for each server
+/// count; peaks are extracted with the paper's 2000 ms SLA.
+pub fn fig3(workload: Workload, servers: &[usize], scale: &ExpScale) -> Vec<(String, usize, Curve)> {
+    let app = workload.analyzed();
+    let service = ServiceModel::default();
+    let mut out = Vec::new();
+    for &n in servers {
+        let clients = ladder(n * 16, 2.0, scale.max_clients);
+        let elia = ramp(&format!("elia-{n}"), &clients, 4000.0, |c| {
+            conveyor_point(&app, Topology::lan(n), c, scale, service, workload.generator(&app, n))
+        });
+        out.push(("elia".to_string(), n, elia));
+        let cluster = ramp(&format!("mysql-cluster-{n}"), &clients, 4000.0, |c| {
+            cluster_point(&app, Topology::lan(n), c, scale, service, workload.generator(&app, n))
+        });
+        out.push(("mysql-cluster".to_string(), n, cluster));
+    }
+    out
+}
+
+/// Figure 4 — WAN throughput/latency curves for Eliá vs centralized vs
+/// read-only, at `n` sites (clients always at 5 sites for the baselines,
+/// at `n` sites for Eliá — matching the paper's deployment).
+pub fn fig4(workload: Workload, n: usize, scale: &ExpScale) -> Vec<Curve> {
+    let app = workload.analyzed();
+    let service = ServiceModel::default();
+    let clients = ladder(16, 2.0, scale.max_clients);
+    let stop = 8000.0; // paper stresses until 5 s latency
+    let mut curves = Vec::new();
+    curves.push(ramp("centralized", &clients, stop, |c| {
+        baseline_point(&app, BaselineMode::Centralized, 5, c, scale, service, workload.generator(&app, 5))
+    }));
+    curves.push(ramp(&format!("read-only-{n}"), &clients, stop, |c| {
+        baseline_point(&app, BaselineMode::ReadOnly { n_servers: n }, 5, c, scale, service, workload.generator(&app, 5))
+    }));
+    curves.push(ramp(&format!("elia-{n}"), &clients, stop, |c| {
+        conveyor_point_with(
+            &app,
+            Topology::wan(n),
+            c,
+            scale,
+            service,
+            workload.generator(&app, n),
+            Some(Topology::wan_full_client(5)),
+        )
+    }));
+    curves
+}
+
+/// Table 3 — WAN light-load request latency for each configuration.
+/// Returns (config label, mean latency ms).
+pub fn table3(workload: Workload, scale: &ExpScale) -> Vec<(String, f64)> {
+    let app = workload.analyzed();
+    let service = ServiceModel::default();
+    // "Light load" matches the paper's Table 3 regime: far below the
+    // multi-server systems' saturation, but enough offered load that a
+    // single WAN server exhibits its queueing latency (the paper's
+    // centralized column shows 1390 ms / 416 ms — clearly not an idle
+    // server). We use the lowest rung of the Fig 4 ramp.
+    let light = 2048;
+    let mut rows = Vec::new();
+    let p = baseline_point(
+        &app,
+        BaselineMode::Centralized,
+        5,
+        light,
+        scale,
+        service,
+        workload.generator(&app, 5),
+    );
+    rows.push(("centralized".to_string(), p.mean_latency_ms));
+    for n in [2usize, 3, 5] {
+        let p = conveyor_point_with(
+            &app,
+            Topology::wan(n),
+            light,
+            scale,
+            service,
+            workload.generator(&app, n),
+            Some(Topology::wan_full_client(5)),
+        );
+        rows.push((format!("elia-{n}"), p.mean_latency_ms));
+    }
+    for n in [2usize, 3, 5] {
+        let p = baseline_point(
+            &app,
+            BaselineMode::ReadOnly { n_servers: n },
+            5,
+            light,
+            scale,
+            service,
+            workload.generator(&app, 5),
+        );
+        rows.push((format!("read-only-{n}"), p.mean_latency_ms));
+    }
+    rows
+}
+
+/// Figure 5 — micro: throughput/latency curves at different local-op
+/// ratios (WAN, 3 servers, 5 ms ops).
+pub fn fig5(ratios: &[f64], scale: &ExpScale) -> Vec<Curve> {
+    let app = micro::analyzed();
+    let service = ServiceModel::fixed(5.0);
+    // Micro clients replay with a short think time (the paper drives raw
+    // ops/s); macro experiments use ~1 s think times (web clients).
+    let scale = &ExpScale { think_ms: 100.0, ..*scale };
+    let clients = ladder(8, 2.0, scale.max_clients);
+    ratios
+        .iter()
+        .map(|&r| {
+            ramp(&format!("local={:.0}%", r * 100.0), &clients, 8000.0, |c| {
+                conveyor_point(
+                    &app,
+                    Topology::wan(3),
+                    c,
+                    scale,
+                    service,
+                    Box::new(micro::MicroGenerator::new(&app, r)),
+                )
+            })
+        })
+        .collect()
+}
+
+/// Figure 6 — micro mean latencies (overall, local, global) per ratio at
+/// a fixed load. Returns (ratio, overall, local, global).
+pub fn fig6(ratios: &[f64], clients: usize, scale: &ExpScale) -> Vec<(f64, f64, f64, f64)> {
+    let app = micro::analyzed();
+    let service = ServiceModel::fixed(5.0);
+    let scale = &ExpScale { think_ms: 100.0, ..*scale };
+    ratios
+        .iter()
+        .map(|&r| {
+            let cfg = ConveyorConfig {
+                service,
+                warmup: VTime::from_secs(scale.warmup_s),
+                horizon: VTime::from_secs(scale.horizon_s),
+                execute_real: false,
+                ..Default::default()
+            };
+            let report = ConveyorSim::new(
+                &app,
+                Topology::wan(3),
+                ClientsConfig {
+                    n: clients,
+                    think_ms: scale.think_ms,
+                    seed: 0xF16,
+                    ..Default::default()
+                },
+                cfg,
+                Box::new(micro::MicroGenerator::new(&app, r)),
+                |_| {},
+            )
+            .run();
+            (
+                r,
+                report.metrics.latency.mean(),
+                report.metrics.local_latency.mean(),
+                report.metrics.global_latency.mean(),
+            )
+        })
+        .collect()
+}
+
+/// Table 1 — classification and frequency summary for both benchmarks.
+pub fn table1() -> Vec<(String, usize, usize, usize, usize, usize, usize, f64, f64, f64, f64)> {
+    [Workload::Tpcw, Workload::Rubis]
+        .iter()
+        .map(|w| {
+            let app = w.analyzed();
+            let (l, g, c, lg, ro, total) = app.table1_row();
+            let wsum: f64 = app.spec.txns.iter().map(|t| t.weight).sum();
+            let freq = |class: crate::analysis::OpClass| -> f64 {
+                app.spec
+                    .txns
+                    .iter()
+                    .zip(&app.classification.classes)
+                    .filter(|(_, cl)| **cl == class)
+                    .map(|(t, _)| t.weight)
+                    .sum::<f64>()
+                    / wsum
+            };
+            let ro_freq: f64 = app
+                .spec
+                .txns
+                .iter()
+                .filter(|t| t.is_read_only())
+                .map(|t| t.weight)
+                .sum::<f64>()
+                / wsum;
+            (
+                w.name().to_string(),
+                l,
+                g,
+                c,
+                lg,
+                ro,
+                total,
+                freq(crate::analysis::OpClass::Local)
+                    + freq(crate::analysis::OpClass::LocalGlobal),
+                freq(crate::analysis::OpClass::Global),
+                freq(crate::analysis::OpClass::Commutative),
+                ro_freq,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fig3_shape_elia_beats_cluster() {
+        let scale = ExpScale::quick();
+        let rows = fig3(Workload::Rubis, &[3], &scale);
+        assert_eq!(rows.len(), 2);
+        let elia_peak = rows[0].2.peak(2000.0).unwrap().throughput;
+        let cluster_peak = rows[1].2.peak(2000.0).unwrap().throughput;
+        assert!(
+            elia_peak > cluster_peak,
+            "elia {elia_peak} must beat cluster {cluster_peak} on RUBiS"
+        );
+    }
+
+    #[test]
+    fn quick_table3_elia5_beats_centralized() {
+        let scale = ExpScale::quick();
+        let rows = table3(Workload::Rubis, &scale);
+        let get = |label: &str| rows.iter().find(|(l, _)| l == label).unwrap().1;
+        let cen = get("centralized");
+        let elia5 = get("elia-5");
+        assert!(
+            elia5 * 2.0 < cen,
+            "elia-5 ({elia5:.0}ms) must be far below centralized ({cen:.0}ms)"
+        );
+    }
+
+    #[test]
+    fn quick_fig6_global_latency_exceeds_local() {
+        let scale = ExpScale::quick();
+        let rows = fig6(&[0.5], 20, &scale);
+        let (_, overall, local, global) = rows[0];
+        assert!(global > local * 1.5, "global {global} vs local {local}");
+        assert!(overall > local && overall < global);
+    }
+
+    #[test]
+    fn table1_has_both_workloads() {
+        let rows = table1();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "TPC-W");
+        assert_eq!((rows[0].1, rows[0].2, rows[0].3, rows[0].4), (10, 5, 5, 0));
+        assert_eq!((rows[1].1, rows[1].2, rows[1].3, rows[1].4), (11, 4, 3, 8));
+    }
+}

@@ -1,0 +1,167 @@
+//! Experiment harness: client ramps, peak-throughput search under a
+//! latency SLA (the paper's "peak throughput is the maximum throughput a
+//! system can sustain while ensuring an average latency of less than
+//! 2000 ms"), and table/figure report rendering.
+
+pub mod experiments;
+pub mod report;
+
+use crate::util::stats::Summary;
+
+/// One measured load point of a throughput/latency curve.
+#[derive(Debug, Clone)]
+pub struct LoadPoint {
+    pub clients: usize,
+    pub throughput: f64,
+    pub mean_latency_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub completed: u64,
+}
+
+impl LoadPoint {
+    pub fn from_summary(clients: usize, throughput: f64, lat: &mut Summary, completed: u64) -> Self {
+        LoadPoint {
+            clients,
+            throughput,
+            mean_latency_ms: lat.mean(),
+            p50_ms: lat.p50(),
+            p99_ms: lat.p99(),
+            completed,
+        }
+    }
+}
+
+/// A measured throughput/latency curve for one system configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    pub label: String,
+    pub points: Vec<LoadPoint>,
+}
+
+impl Curve {
+    pub fn new(label: impl Into<String>) -> Self {
+        Curve { label: label.into(), points: Vec::new() }
+    }
+
+    /// Peak throughput under the SLA: max throughput among points whose
+    /// mean latency stays below `sla_ms`; falls back to the lowest-latency
+    /// point when every point violates the SLA.
+    pub fn peak(&self, sla_ms: f64) -> Option<&LoadPoint> {
+        let ok = self
+            .points
+            .iter()
+            .filter(|p| p.mean_latency_ms < sla_ms)
+            .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap());
+        ok.or_else(|| {
+            self.points
+                .iter()
+                .min_by(|a, b| a.mean_latency_ms.partial_cmp(&b.mean_latency_ms).unwrap())
+        })
+    }
+
+    /// Latency at the lightest measured load.
+    pub fn light_load_latency(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .min_by_key(|p| p.clients)
+            .map(|p| p.mean_latency_ms)
+    }
+}
+
+/// Ramp a system over a client ladder: `run(clients)` measures one load
+/// point. Stops early once mean latency exceeds `stop_ms` (saturated far
+/// past the SLA) to keep experiment time bounded.
+pub fn ramp(
+    label: &str,
+    ladder: &[usize],
+    stop_ms: f64,
+    mut run: impl FnMut(usize) -> LoadPoint,
+) -> Curve {
+    let mut curve = Curve::new(label);
+    for &clients in ladder {
+        let point = run(clients);
+        let lat = point.mean_latency_ms;
+        curve.points.push(point);
+        if lat > stop_ms {
+            break;
+        }
+    }
+    curve
+}
+
+/// A geometric client ladder `start, start*factor, ...` capped at `max`.
+pub fn ladder(start: usize, factor: f64, max: usize) -> Vec<usize> {
+    assert!(factor > 1.0 && start >= 1);
+    let mut out = vec![start];
+    loop {
+        let next = ((*out.last().unwrap() as f64) * factor).ceil() as usize;
+        if next > max {
+            break;
+        }
+        out.push(next);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(clients: usize, tput: f64, lat: f64) -> LoadPoint {
+        LoadPoint {
+            clients,
+            throughput: tput,
+            mean_latency_ms: lat,
+            p50_ms: lat,
+            p99_ms: lat * 2.0,
+            completed: 100,
+        }
+    }
+
+    #[test]
+    fn peak_respects_sla() {
+        let mut c = Curve::new("x");
+        c.points = vec![
+            point(10, 100.0, 50.0),
+            point(20, 180.0, 120.0),
+            point(40, 220.0, 900.0),
+            point(80, 230.0, 2500.0), // violates 2000ms SLA
+        ];
+        let p = c.peak(2000.0).unwrap();
+        assert_eq!(p.clients, 40);
+        assert_eq!(p.throughput, 220.0);
+    }
+
+    #[test]
+    fn peak_falls_back_when_all_violate() {
+        let mut c = Curve::new("x");
+        c.points = vec![point(10, 10.0, 3000.0), point(20, 12.0, 5000.0)];
+        let p = c.peak(2000.0).unwrap();
+        assert_eq!(p.clients, 10);
+    }
+
+    #[test]
+    fn ramp_stops_after_saturation() {
+        let mut calls = 0;
+        let curve = ramp("t", &[1, 2, 4, 8, 16], 100.0, |c| {
+            calls += 1;
+            point(c, c as f64, if c >= 4 { 500.0 } else { 10.0 })
+        });
+        assert_eq!(calls, 3, "stops after first point above stop_ms");
+        assert_eq!(curve.points.len(), 3);
+    }
+
+    #[test]
+    fn ladder_is_geometric() {
+        let l = ladder(5, 2.0, 50);
+        assert_eq!(l, vec![5, 10, 20, 40]);
+    }
+
+    #[test]
+    fn light_load_latency_picks_fewest_clients() {
+        let mut c = Curve::new("x");
+        c.points = vec![point(20, 10.0, 99.0), point(5, 2.0, 42.0)];
+        assert_eq!(c.light_load_latency(), Some(42.0));
+    }
+}

@@ -1,0 +1,154 @@
+//! Rendering of benchmark results in the shape of the paper's tables and
+//! figures (markdown tables + ASCII curves printed to stdout and captured
+//! into bench_output.txt).
+
+use super::{Curve, LoadPoint};
+
+/// Render a markdown table from headers + rows.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let padded: Vec<String> = cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:<w$}", w = w))
+            .collect();
+        format!("| {} |\n", padded.join(" | "))
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    let dashes: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&format!("|-{}-|\n", dashes.join("-|-")));
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// Render a throughput-vs-latency curve set as rows (the paper's Fig 4/5
+/// shape: each point is a load level).
+pub fn curves_table(curves: &[Curve]) -> String {
+    let mut rows = Vec::new();
+    for c in curves {
+        for p in &c.points {
+            rows.push(vec![
+                c.label.clone(),
+                p.clients.to_string(),
+                format!("{:.1}", p.throughput),
+                format!("{:.1}", p.mean_latency_ms),
+                format!("{:.1}", p.p99_ms),
+            ]);
+        }
+    }
+    table(&["system", "clients", "ops/s", "mean ms", "p99 ms"], &rows)
+}
+
+/// Render the Fig-3 shape: peak throughput (+latency at peak) per server
+/// count per system.
+pub fn scalability_table(
+    rows: &[(String, usize, Option<LoadPoint>)],
+    sla_ms: f64,
+) -> String {
+    let data: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(label, servers, peak)| match peak {
+            Some(p) => vec![
+                label.clone(),
+                servers.to_string(),
+                format!("{:.1}", p.throughput),
+                format!("{:.1}", p.mean_latency_ms),
+                p.clients.to_string(),
+            ],
+            None => vec![label.clone(), servers.to_string(), "-".into(), "-".into(), "-".into()],
+        })
+        .collect();
+    format!(
+        "peak throughput under {sla_ms:.0} ms SLA\n{}",
+        table(&["system", "servers", "peak ops/s", "lat@peak ms", "clients"], &data)
+    )
+}
+
+/// A minimal ASCII scatter of (x=throughput, y=latency) per curve — a
+/// visual cross-check of the figure shapes in terminal output.
+pub fn ascii_curve(curve: &Curve, width: usize, height: usize) -> String {
+    if curve.points.is_empty() {
+        return String::new();
+    }
+    let max_x = curve.points.iter().map(|p| p.throughput).fold(1.0f64, f64::max);
+    let max_y = curve.points.iter().map(|p| p.mean_latency_ms).fold(1.0f64, f64::max);
+    let mut grid = vec![vec![b' '; width]; height];
+    for p in &curve.points {
+        let x = ((p.throughput / max_x) * (width - 1) as f64).round() as usize;
+        let y = ((p.mean_latency_ms / max_y) * (height - 1) as f64).round() as usize;
+        grid[height - 1 - y][x.min(width - 1)] = b'*';
+    }
+    let mut out = format!("{} (x: 0..{max_x:.0} ops/s, y: 0..{max_y:.0} ms)\n", curve.label);
+    for row in grid {
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(
+            &["sys", "n"],
+            &[vec!["elia".into(), "4".into()], vec!["mysql-cluster".into(), "12".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("sys"));
+        assert!(lines[3].contains("mysql-cluster"));
+        // All lines same width.
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn curves_table_renders_points() {
+        let mut c = Curve::new("elia-3");
+        c.points.push(LoadPoint {
+            clients: 10,
+            throughput: 123.4,
+            mean_latency_ms: 56.7,
+            p50_ms: 50.0,
+            p99_ms: 99.0,
+            completed: 1000,
+        });
+        let t = curves_table(&[c]);
+        assert!(t.contains("elia-3"));
+        assert!(t.contains("123.4"));
+    }
+
+    #[test]
+    fn ascii_curve_has_requested_dims() {
+        let mut c = Curve::new("x");
+        for i in 1..5 {
+            c.points.push(LoadPoint {
+                clients: i,
+                throughput: i as f64 * 10.0,
+                mean_latency_ms: i as f64 * 5.0,
+                p50_ms: 0.0,
+                p99_ms: 0.0,
+                completed: 1,
+            });
+        }
+        let s = ascii_curve(&c, 20, 5);
+        assert_eq!(s.lines().count(), 6);
+        assert!(s.contains('*'));
+    }
+}

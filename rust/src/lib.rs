@@ -1,0 +1,22 @@
+//! Eliá — Operation Partitioning + the Conveyor Belt protocol.
+//!
+//! A reproduction of "Scaling Out ACID Applications with Operation
+//! Partitioning" (Saissi, Serafini, Suri; 2018): static analysis that
+//! partitions an OLTP application's *operations* (indirectly partitioning
+//! its data), an operation classification into commutative / local /
+//! global, and the lock-free Conveyor Belt token protocol that scales the
+//! application across servers while guaranteeing serializability.
+#![allow(clippy::too_many_arguments)]
+
+pub mod analysis;
+pub mod conveyor;
+pub mod baselines;
+pub mod catalog;
+pub mod cluster;
+pub mod db;
+pub mod harness;
+pub mod runtime;
+pub mod simnet;
+pub mod sqlir;
+pub mod util;
+pub mod workload;

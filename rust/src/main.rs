@@ -1,0 +1,90 @@
+//! `elia` — the command-line front end.
+//!
+//! ```text
+//! elia analyze  --workload tpcw|rubis       static analysis report
+//! elia serve    --workload tpcw --servers 4 real-threads deployment demo
+//! elia bench    --exp fig3|fig4|fig5|fig6|table1|table3 [--quick]
+//! elia doctor                               check PJRT + artifact health
+//! ```
+
+use elia::harness::experiments::{self, ExpScale, Workload};
+use elia::harness::report;
+use elia::util::cli::Args;
+
+fn workload_of(args: &Args) -> Workload {
+    match args.get_or("workload", "tpcw") {
+        "rubis" => Workload::Rubis,
+        _ => Workload::Tpcw,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.command() {
+        Some("analyze") => {
+            let w = workload_of(&args);
+            let app = w.analyzed();
+            let (l, g, c, lg, ro, total) = app.table1_row();
+            println!("{}: {total} transactions over {} tables", w.name(), app.spec.schema.ntables());
+            println!("classes: {l} local / {g} global / {c} commutative / {lg} local-global; {ro} read-only");
+            println!("partitioning cost: {:.1} (exact: {})", app.partitioning.cost, app.partitioning.exact);
+            for (t, tpl) in app.spec.txns.iter().enumerate() {
+                let routing: Vec<&str> = app.classification.routing_params[t]
+                    .iter()
+                    .map(|&k| tpl.params[k].as_str())
+                    .collect();
+                println!("  {:<24} {:<12} routes by {:?}", tpl.name, format!("{:?}", app.class(t)), routing);
+            }
+        }
+        Some("bench") => {
+            let scale = if args.has("quick") { ExpScale::quick() } else { ExpScale::full() };
+            let w = workload_of(&args);
+            match args.get_or("exp", "table1") {
+                "table1" => {
+                    for row in experiments::table1() {
+                        println!("{row:?}");
+                    }
+                }
+                "table3" => {
+                    for (label, ms) in experiments::table3(w, &scale) {
+                        println!("{label:<16} {ms:.0}ms");
+                    }
+                }
+                "fig3" => {
+                    let rows = experiments::fig3(w, &args.get_list("servers", &[1, 2, 4, 8]), &scale);
+                    let table_rows: Vec<_> =
+                        rows.iter().map(|(s, n, c)| (s.clone(), *n, c.peak(2000.0).cloned())).collect();
+                    println!("{}", report::scalability_table(&table_rows, 2000.0));
+                }
+                "fig4" => {
+                    let curves = experiments::fig4(w, args.get_parse("sites", 5), &scale);
+                    println!("{}", report::curves_table(&curves));
+                }
+                "fig5" => {
+                    let curves = experiments::fig5(&args.get_list("ratios", &[0.3, 0.6, 0.9]), &scale);
+                    println!("{}", report::curves_table(&curves));
+                }
+                "fig6" => {
+                    for row in experiments::fig6(&args.get_list("ratios", &[0.1, 0.5, 0.9]), 64, &scale) {
+                        println!("{row:?}");
+                    }
+                }
+                other => eprintln!("unknown experiment {other}"),
+            }
+        }
+        Some("doctor") => {
+            match elia::runtime::platform() {
+                Ok(p) => println!("PJRT CPU client: ok ({p})"),
+                Err(e) => println!("PJRT CPU client: FAILED ({e:#})"),
+            }
+            match elia::runtime::CostEvaluator::try_default() {
+                Some(e) => println!("partition-cost artifact: ok (platform {})", e.platform()),
+                None => println!("partition-cost artifact: missing — run `make artifacts`"),
+            }
+        }
+        _ => {
+            eprintln!("usage: elia <analyze|bench|doctor> [--workload tpcw|rubis] [--exp fig3|...] [--quick]");
+            eprintln!("examples and bench binaries cover the full evaluation; see README.md");
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Closed-loop client pools.
+//!
+//! Each simulated client sits at a site, issues one operation, waits for
+//! the reply, thinks for an exponentially distributed time, and repeats —
+//! the standard closed-loop model matching the paper's "we intensify the
+//! workload by increasing the number of clients".
+
+use crate::util::{Rng, VTime};
+
+#[derive(Debug, Clone)]
+pub struct ClientsConfig {
+    /// Number of clients.
+    pub n: usize,
+    /// Mean think time between reply and next request (ms). 0 = replay
+    /// as fast as possible (stress).
+    pub think_ms: f64,
+    /// Number of client sites; clients are assigned round-robin
+    /// ("we equally distribute client threads across client nodes").
+    pub sites: usize,
+    pub seed: u64,
+}
+
+impl Default for ClientsConfig {
+    fn default() -> Self {
+        ClientsConfig { n: 1, think_ms: 0.0, sites: 1, seed: 0xC11E }
+    }
+}
+
+#[derive(Debug)]
+pub struct ClientPool {
+    cfg: ClientsConfig,
+    rngs: Vec<Rng>,
+    issued: Vec<u64>,
+}
+
+impl ClientPool {
+    pub fn new(cfg: ClientsConfig) -> Self {
+        let mut meta = Rng::new(cfg.seed);
+        let rngs = (0..cfg.n).map(|_| meta.fork()).collect();
+        let issued = vec![0; cfg.n];
+        ClientPool { cfg, rngs, issued }
+    }
+
+    pub fn n(&self) -> usize {
+        self.cfg.n
+    }
+
+    /// The site a client lives at (round-robin over sites).
+    pub fn site(&self, client: usize) -> usize {
+        client % self.cfg.sites
+    }
+
+    /// Per-client deterministic RNG (workload generation).
+    pub fn rng(&mut self, client: usize) -> &mut Rng {
+        &mut self.rngs[client]
+    }
+
+    /// Record an issue and return the think delay to apply *before* it
+    /// (exponential; zero-mean collapses to zero).
+    pub fn think(&mut self, client: usize) -> VTime {
+        self.issued[client] += 1;
+        if self.cfg.think_ms <= 0.0 {
+            return VTime::ZERO;
+        }
+        let ms = self.rngs[client].exp(self.cfg.think_ms);
+        VTime::from_millis_f64(ms)
+    }
+
+    pub fn issued(&self, client: usize) -> u64 {
+        self.issued[client]
+    }
+
+    pub fn total_issued(&self) -> u64 {
+        self.issued.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_sites() {
+        let p = ClientPool::new(ClientsConfig { n: 7, sites: 3, ..Default::default() });
+        assert_eq!(p.site(0), 0);
+        assert_eq!(p.site(1), 1);
+        assert_eq!(p.site(2), 2);
+        assert_eq!(p.site(3), 0);
+        assert_eq!(p.site(6), 0);
+    }
+
+    #[test]
+    fn zero_think_time_is_zero() {
+        let mut p = ClientPool::new(ClientsConfig { n: 2, think_ms: 0.0, ..Default::default() });
+        assert_eq!(p.think(0), VTime::ZERO);
+        assert_eq!(p.issued(0), 1);
+    }
+
+    #[test]
+    fn think_time_mean_roughly_matches() {
+        let mut p =
+            ClientPool::new(ClientsConfig { n: 1, think_ms: 10.0, ..Default::default() });
+        let total: f64 = (0..20_000).map(|_| p.think(0).as_millis_f64()).sum();
+        let mean = total / 20_000.0;
+        assert!((mean - 10.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn client_rngs_are_independent_and_deterministic() {
+        let mut a = ClientPool::new(ClientsConfig { n: 2, seed: 1, ..Default::default() });
+        let mut b = ClientPool::new(ClientsConfig { n: 2, seed: 1, ..Default::default() });
+        assert_eq!(a.rng(0).next_u64(), b.rng(0).next_u64());
+        assert_ne!(a.rng(0).next_u64(), a.rng(1).next_u64());
+    }
+}

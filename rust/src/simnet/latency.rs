@@ -1,0 +1,182 @@
+//! Site topologies and inter-site latencies (the paper's Table 2).
+
+use crate::util::VTime;
+
+/// The five sites of the paper's WAN experiments, in deployment order
+/// ("We add these locations in the aforementioned order").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Site {
+    Germany,
+    Japan,
+    UsEast,
+    Brazil,
+    Australia,
+}
+
+pub const WAN_SITES: [Site; 5] =
+    [Site::Germany, Site::Japan, Site::UsEast, Site::Brazil, Site::Australia];
+
+impl Site {
+    pub fn short(&self) -> &'static str {
+        match self {
+            Site::Germany => "G",
+            Site::Japan => "J",
+            Site::UsEast => "US",
+            Site::Brazil => "B",
+            Site::Australia => "A",
+        }
+    }
+
+    #[allow(dead_code)]
+    fn index(&self) -> usize {
+        WAN_SITES.iter().position(|s| s == self).unwrap()
+    }
+}
+
+/// Paper Table 2: inter-site round-trip latencies in milliseconds.
+/// `TABLE2_RTT_MS[i][j]` for the site order G, J, US, B, A. The diagonal
+/// is the intra-site latency (~20 ms, paper §7).
+pub const TABLE2_RTT_MS: [[f64; 5]; 5] = [
+    [20.0, 253.0, 92.0, 193.0, 314.0],
+    [253.0, 20.0, 153.0, 282.0, 188.0],
+    [92.0, 153.0, 20.0, 145.0, 229.0],
+    [193.0, 282.0, 145.0, 20.0, 322.0],
+    [314.0, 188.0, 229.0, 322.0, 20.0],
+];
+
+/// One-way message latencies between N endpoints.
+#[derive(Debug, Clone)]
+pub struct LatencyMatrix {
+    n: usize,
+    /// One-way latency in micros, row-major.
+    one_way: Vec<u64>,
+}
+
+impl LatencyMatrix {
+    pub fn from_rtt_ms(rtt: &[Vec<f64>]) -> Self {
+        let n = rtt.len();
+        let mut one_way = vec![0u64; n * n];
+        for (i, row) in rtt.iter().enumerate() {
+            assert_eq!(row.len(), n);
+            for (j, &ms) in row.iter().enumerate() {
+                one_way[i * n + j] = ((ms / 2.0) * 1000.0).round() as u64;
+            }
+        }
+        LatencyMatrix { n, one_way }
+    }
+
+    /// Uniform matrix (LAN): every pair has the same RTT.
+    pub fn uniform(n: usize, rtt_ms: f64) -> Self {
+        LatencyMatrix::from_rtt_ms(&vec![vec![rtt_ms; n]; n])
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// One-way delivery latency from `a` to `b`.
+    pub fn one_way(&self, a: usize, b: usize) -> VTime {
+        VTime::from_micros(self.one_way[a * self.n + b])
+    }
+
+    pub fn rtt(&self, a: usize, b: usize) -> VTime {
+        VTime::from_micros(2 * self.one_way[a * self.n + b])
+    }
+}
+
+/// A deployment topology: server sites plus the latency matrix between
+/// servers (clients are co-located with a server site and reach it at
+/// intra-site latency).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Human-readable site labels, one per server.
+    pub labels: Vec<String>,
+    pub servers: LatencyMatrix,
+    /// Intra-site client<->server RTT.
+    pub client_rtt: VTime,
+}
+
+impl Topology {
+    /// LAN: `n` servers in one datacenter (paper §7.1).
+    pub fn lan(n: usize) -> Self {
+        Topology {
+            labels: (0..n).map(|i| format!("lan{i}")).collect(),
+            servers: LatencyMatrix::uniform(n, 20.0),
+            client_rtt: VTime::from_millis(20),
+        }
+    }
+
+    /// WAN with the first `n` paper sites (paper §7.2, Table 2).
+    pub fn wan(n: usize) -> Self {
+        assert!(n >= 1 && n <= 5, "paper WAN has 1..=5 sites");
+        let rtt: Vec<Vec<f64>> = (0..n)
+            .map(|i| (0..n).map(|j| TABLE2_RTT_MS[i][j]).collect())
+            .collect();
+        Topology {
+            labels: WAN_SITES[..n].iter().map(|s| s.short().to_string()).collect(),
+            servers: LatencyMatrix::from_rtt_ms(&rtt),
+            client_rtt: VTime::from_millis(20),
+        }
+    }
+
+    /// WAN latency from a *client site* to an arbitrary server. For the
+    /// centralized baselines clients stay at all five sites even when
+    /// there is a single server — this gives the paper's "clients direct
+    /// requests to the closest server" setup its remote costs.
+    pub fn wan_full_client(n_client_sites: usize) -> LatencyMatrix {
+        let rtt: Vec<Vec<f64>> = (0..n_client_sites)
+            .map(|i| (0..n_client_sites).map(|j| TABLE2_RTT_MS[i][j]).collect())
+            .collect();
+        LatencyMatrix::from_rtt_ms(&rtt)
+    }
+
+    pub fn n(&self) -> usize {
+        self.servers.n()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_is_symmetric() {
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(TABLE2_RTT_MS[i][j], TABLE2_RTT_MS[j][i]);
+            }
+        }
+    }
+
+    #[test]
+    fn one_way_is_half_rtt() {
+        let m = LatencyMatrix::from_rtt_ms(&vec![vec![20.0, 92.0], vec![92.0, 20.0]]);
+        assert_eq!(m.one_way(0, 1), VTime::from_millis(46));
+        assert_eq!(m.rtt(0, 1), VTime::from_millis(92));
+        assert_eq!(m.one_way(0, 0), VTime::from_millis(10));
+    }
+
+    #[test]
+    fn wan_topology_grows_in_paper_order() {
+        let t3 = Topology::wan(3);
+        assert_eq!(t3.labels, vec!["G", "J", "US"]);
+        // G <-> US one-way 46ms.
+        assert_eq!(t3.servers.one_way(0, 2), VTime::from_millis(46));
+        let t5 = Topology::wan(5);
+        assert_eq!(t5.labels.last().unwrap(), "A");
+    }
+
+    #[test]
+    fn lan_topology_uniform() {
+        let t = Topology::lan(4);
+        assert_eq!(t.n(), 4);
+        assert_eq!(t.servers.one_way(1, 3), VTime::from_millis(10));
+        assert_eq!(t.client_rtt, VTime::from_millis(20));
+    }
+
+    #[test]
+    fn site_shorthand() {
+        assert_eq!(Site::UsEast.short(), "US");
+        assert_eq!(Site::Germany.index(), 0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Measurement collection with a warm-up cutoff.
+
+use crate::util::stats::Summary;
+use crate::util::VTime;
+
+/// Operation latency/throughput metrics over a simulation run. Samples
+/// completed before `warmup` are discarded (cold caches, empty token
+/// pipelines); throughput is computed over the post-warm-up window.
+#[derive(Debug, Clone)]
+pub struct SimMetrics {
+    warmup: VTime,
+    horizon: VTime,
+    /// All completed operations.
+    pub latency: Summary,
+    /// Broken out by operation class (the RQ3 figures need local vs
+    /// global separately).
+    pub local_latency: Summary,
+    pub global_latency: Summary,
+    pub completed: u64,
+    pub aborted: u64,
+}
+
+impl SimMetrics {
+    pub fn new(warmup: VTime, horizon: VTime) -> Self {
+        assert!(horizon > warmup);
+        SimMetrics {
+            warmup,
+            horizon,
+            latency: Summary::new(),
+            local_latency: Summary::new(),
+            global_latency: Summary::new(),
+            completed: 0,
+            aborted: 0,
+        }
+    }
+
+    /// Record a completed operation. `global` selects the per-class bucket.
+    pub fn complete(&mut self, issued_at: VTime, done_at: VTime, global: bool) {
+        if done_at < self.warmup {
+            return;
+        }
+        let ms = (done_at - issued_at).as_millis_f64();
+        self.latency.add(ms);
+        if global {
+            self.global_latency.add(ms);
+        } else {
+            self.local_latency.add(ms);
+        }
+        self.completed += 1;
+    }
+
+    pub fn abort(&mut self) {
+        self.aborted += 1;
+    }
+
+    /// Throughput over the measurement window (ops/sec).
+    pub fn throughput(&self) -> f64 {
+        let window = (self.horizon - self.warmup).as_secs_f64();
+        if window <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / window
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.latency.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_discards_early_samples() {
+        let mut m = SimMetrics::new(VTime::from_secs(1), VTime::from_secs(3));
+        m.complete(VTime::ZERO, VTime::from_millis(500), false); // pre-warmup
+        m.complete(VTime::from_secs(1), VTime::from_millis(1500), false);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.latency.count(), 1);
+        assert!((m.mean_latency_ms() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_over_window() {
+        let mut m = SimMetrics::new(VTime::from_secs(1), VTime::from_secs(3));
+        for i in 0..100 {
+            let t = VTime::from_millis(1000 + i * 10);
+            m.complete(t, t + VTime::from_millis(5), i % 2 == 0);
+        }
+        assert!((m.throughput() - 50.0).abs() < 1e-9);
+        assert_eq!(m.local_latency.count(), 50);
+        assert_eq!(m.global_latency.count(), 50);
+    }
+}

@@ -1,0 +1,32 @@
+//! Discrete-event, virtual-time simulation of a multi-site deployment.
+//!
+//! This substitutes the paper's EC2 testbed (DESIGN.md §1, substitution 3):
+//! servers are W-worker FIFO queueing stations (T2.medium ⇒ W = 2),
+//! message delivery follows the paper's Table 2 inter-site latency matrix,
+//! and per-operation service times are configurable (5 ms in the paper's
+//! microbenchmark). Virtual time makes hour-long WAN experiments run in
+//! milliseconds, deterministically.
+//!
+//! The module provides the shared building blocks:
+//! * [`events`] — the event queue and virtual clock,
+//! * [`latency`] — site topologies and the Table 2 matrix,
+//! * [`station`] — the W-worker server station model,
+//! * [`clients`] — closed-loop client pools with think times,
+//! * [`metrics`] — latency/throughput collection over a warm-up window.
+//!
+//! The system models built on top live in sibling modules:
+//! [`crate::conveyor`] (Eliá), [`crate::cluster`] (MySQL-Cluster-like data
+//! partitioning + 2PC) and [`crate::baselines`] (centralized, read-only
+//! optimization).
+
+pub mod clients;
+pub mod events;
+pub mod latency;
+pub mod metrics;
+pub mod station;
+
+pub use clients::{ClientPool, ClientsConfig};
+pub use events::{EventQueue, Schedulable};
+pub use latency::{LatencyMatrix, Site, Topology};
+pub use metrics::SimMetrics;
+pub use station::Station;

@@ -1,0 +1,156 @@
+//! The server station model: a FIFO run queue served by `W` workers
+//! (the paper's T2.medium nodes have two virtual cores; Tomcat's thread
+//! pool multiplexes onto them, so a 2-worker queueing station is the
+//! right fidelity for throughput saturation).
+//!
+//! The station is a pure bookkeeping object: the owning simulation calls
+//! [`Station::submit`] with a job and its service time; the station
+//! returns jobs to *start* now; on every completion the simulation calls
+//! [`Station::complete`] to learn what starts next. Priorities: jobs
+//! submitted with `priority = true` (token work) jump the queue.
+
+use crate::util::VTime;
+use std::collections::VecDeque;
+
+/// A job accepted by the station, tagged with the caller's payload.
+#[derive(Debug, Clone)]
+pub struct Job<P> {
+    pub payload: P,
+    pub service: VTime,
+    pub enqueued_at: VTime,
+}
+
+#[derive(Debug)]
+pub struct Station<P> {
+    workers: usize,
+    busy: usize,
+    queue: VecDeque<Job<P>>,
+    /// Cumulative busy worker-time (utilization accounting).
+    busy_time: VTime,
+    last_change: VTime,
+    completed: u64,
+}
+
+impl<P> Station<P> {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        Station {
+            workers,
+            busy: 0,
+            queue: VecDeque::new(),
+            busy_time: VTime::ZERO,
+            last_change: VTime::ZERO,
+            completed: 0,
+        }
+    }
+
+    fn account(&mut self, now: VTime) {
+        let dt = now.saturating_sub(self.last_change);
+        self.busy_time += VTime::from_micros(dt.as_micros() * self.busy as u64);
+        self.last_change = now;
+    }
+
+    /// Submit a job. Returns `Some(job)` if a worker is free and it starts
+    /// immediately, `None` if it queued.
+    pub fn submit(&mut self, now: VTime, payload: P, service: VTime, priority: bool) -> Option<Job<P>> {
+        self.account(now);
+        let job = Job { payload, service, enqueued_at: now };
+        if self.busy < self.workers {
+            self.busy += 1;
+            Some(job)
+        } else {
+            if priority {
+                self.queue.push_front(job);
+            } else {
+                self.queue.push_back(job);
+            }
+            None
+        }
+    }
+
+    /// A running job finished; returns the next job to start, if any.
+    pub fn complete(&mut self, now: VTime) -> Option<Job<P>> {
+        self.account(now);
+        self.completed += 1;
+        debug_assert!(self.busy > 0);
+        if let Some(next) = self.queue.pop_front() {
+            // Worker moves straight to the next job; busy count unchanged.
+            Some(next)
+        } else {
+            self.busy -= 1;
+            None
+        }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn busy(&self) -> usize {
+        self.busy
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Average utilization in [0, 1] over `[0, now]`.
+    pub fn utilization(&mut self, now: VTime) -> f64 {
+        self.account(now);
+        if now == VTime::ZERO {
+            return 0.0;
+        }
+        self.busy_time.as_micros() as f64 / (now.as_micros() as f64 * self.workers as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_immediately_when_idle() {
+        let mut s: Station<u32> = Station::new(2);
+        assert!(s.submit(VTime::ZERO, 1, VTime::from_millis(5), false).is_some());
+        assert!(s.submit(VTime::ZERO, 2, VTime::from_millis(5), false).is_some());
+        assert_eq!(s.busy(), 2);
+        // Third job queues.
+        assert!(s.submit(VTime::ZERO, 3, VTime::from_millis(5), false).is_none());
+        assert_eq!(s.queue_len(), 1);
+    }
+
+    #[test]
+    fn completion_dequeues_fifo() {
+        let mut s: Station<u32> = Station::new(1);
+        s.submit(VTime::ZERO, 1, VTime::from_millis(5), false);
+        s.submit(VTime::ZERO, 2, VTime::from_millis(5), false);
+        s.submit(VTime::ZERO, 3, VTime::from_millis(5), false);
+        let next = s.complete(VTime::from_millis(5)).unwrap();
+        assert_eq!(next.payload, 2);
+        let next = s.complete(VTime::from_millis(10)).unwrap();
+        assert_eq!(next.payload, 3);
+        assert!(s.complete(VTime::from_millis(15)).is_none());
+        assert_eq!(s.busy(), 0);
+        assert_eq!(s.completed(), 3);
+    }
+
+    #[test]
+    fn priority_jobs_jump_the_queue() {
+        let mut s: Station<u32> = Station::new(1);
+        s.submit(VTime::ZERO, 1, VTime::from_millis(5), false);
+        s.submit(VTime::ZERO, 2, VTime::from_millis(5), false);
+        s.submit(VTime::ZERO, 9, VTime::from_millis(5), true);
+        let next = s.complete(VTime::from_millis(5)).unwrap();
+        assert_eq!(next.payload, 9, "priority job first");
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut s: Station<u32> = Station::new(2);
+        s.submit(VTime::ZERO, 1, VTime::from_millis(10), false);
+        // One of two workers busy for 10ms, then idle until 20ms.
+        s.complete(VTime::from_millis(10));
+        let u = s.utilization(VTime::from_millis(20));
+        assert!((u - 0.25).abs() < 1e-9, "u={u}");
+    }
+}

@@ -1,0 +1,438 @@
+//! Abstract syntax for the SQL subset.
+
+use std::fmt;
+
+/// A literal constant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Null,
+}
+
+impl fmt::Display for Literal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Literal::Int(i) => write!(f, "{i}"),
+            Literal::Float(x) => write!(f, "{x}"),
+            Literal::Str(s) => write!(f, "'{}'", s.replace('\'', "''")),
+            Literal::Null => write!(f, "NULL"),
+        }
+    }
+}
+
+/// A value-producing expression: literals, `?parameters`, column
+/// references and +,-,* arithmetic (enough for `SET stock = stock - ?q`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar {
+    Lit(Literal),
+    /// Named placeholder `?name`. At execution time bound from the
+    /// operation's arguments (or a derived intermediate value); at
+    /// analysis time, names matching a transaction input parameter are
+    /// candidate partitioning parameters.
+    Param(String),
+    /// Reference to a column of the statement's (single) table.
+    Col(String),
+    Add(Box<Scalar>, Box<Scalar>),
+    Sub(Box<Scalar>, Box<Scalar>),
+    Mul(Box<Scalar>, Box<Scalar>),
+}
+
+impl Scalar {
+    /// Column names this scalar reads.
+    pub fn referenced_cols<'a>(&'a self, out: &mut Vec<&'a str>) {
+        match self {
+            Scalar::Col(c) => out.push(c),
+            Scalar::Add(a, b) | Scalar::Sub(a, b) | Scalar::Mul(a, b) => {
+                a.referenced_cols(out);
+                b.referenced_cols(out);
+            }
+            _ => {}
+        }
+    }
+
+    /// Parameter names this scalar references.
+    pub fn referenced_params<'a>(&'a self, out: &mut Vec<&'a str>) {
+        match self {
+            Scalar::Param(p) => out.push(p),
+            Scalar::Add(a, b) | Scalar::Sub(a, b) | Scalar::Mul(a, b) => {
+                a.referenced_params(out);
+                b.referenced_params(out);
+            }
+            _ => {}
+        }
+    }
+}
+
+impl fmt::Display for Scalar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Scalar::Lit(l) => write!(f, "{l}"),
+            Scalar::Param(p) => write!(f, "?{p}"),
+            Scalar::Col(c) => write!(f, "{c}"),
+            Scalar::Add(a, b) => write!(f, "({a} + {b})"),
+            Scalar::Sub(a, b) => write!(f, "({a} - {b})"),
+            Scalar::Mul(a, b) => write!(f, "({a} * {b})"),
+        }
+    }
+}
+
+/// Comparison operators usable in WHERE atoms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpOp {
+    pub fn flip(self) -> CmpOp {
+        match self {
+            CmpOp::Eq => CmpOp::Eq,
+            CmpOp::Ne => CmpOp::Ne,
+            CmpOp::Lt => CmpOp::Gt,
+            CmpOp::Le => CmpOp::Ge,
+            CmpOp::Gt => CmpOp::Lt,
+            CmpOp::Ge => CmpOp::Le,
+        }
+    }
+}
+
+impl fmt::Display for CmpOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            CmpOp::Eq => "=",
+            CmpOp::Ne => "<>",
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A WHERE predicate: and/or tree over atomic comparisons
+/// `column op scalar`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pred {
+    /// Always true (absent WHERE clause).
+    True,
+    Cmp { col: String, op: CmpOp, rhs: Scalar },
+    And(Vec<Pred>),
+    Or(Vec<Pred>),
+}
+
+impl Pred {
+    /// Conjunction helper that flattens nested Ands.
+    pub fn and(preds: Vec<Pred>) -> Pred {
+        let mut flat = Vec::new();
+        for p in preds {
+            match p {
+                Pred::True => {}
+                Pred::And(inner) => flat.extend(inner),
+                other => flat.push(other),
+            }
+        }
+        match flat.len() {
+            0 => Pred::True,
+            1 => flat.pop().unwrap(),
+            _ => Pred::And(flat),
+        }
+    }
+
+    /// All column names mentioned anywhere in the predicate.
+    pub fn referenced_cols<'a>(&'a self, out: &mut Vec<&'a str>) {
+        match self {
+            Pred::True => {}
+            Pred::Cmp { col, rhs, .. } => {
+                out.push(col);
+                rhs.referenced_cols(out);
+            }
+            Pred::And(ps) | Pred::Or(ps) => {
+                for p in ps {
+                    p.referenced_cols(out);
+                }
+            }
+        }
+    }
+
+    /// All parameter names mentioned anywhere in the predicate.
+    pub fn referenced_params<'a>(&'a self, out: &mut Vec<&'a str>) {
+        match self {
+            Pred::True => {}
+            Pred::Cmp { rhs, .. } => rhs.referenced_params(out),
+            Pred::And(ps) | Pred::Or(ps) => {
+                for p in ps {
+                    p.referenced_params(out);
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for Pred {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Pred::True => write!(f, "TRUE"),
+            Pred::Cmp { col, op, rhs } => write!(f, "{col} {op} {rhs}"),
+            Pred::And(ps) => {
+                let parts: Vec<String> = ps.iter().map(|p| p.to_string()).collect();
+                write!(f, "({})", parts.join(" AND "))
+            }
+            Pred::Or(ps) => {
+                let parts: Vec<String> = ps.iter().map(|p| p.to_string()).collect();
+                write!(f, "({})", parts.join(" OR "))
+            }
+        }
+    }
+}
+
+/// An item in a SELECT projection list.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectItem {
+    /// Plain column reference.
+    Col(String),
+    /// `COUNT(*)`
+    Count,
+    Max(String),
+    Min(String),
+    Sum(String),
+}
+
+impl SelectItem {
+    pub fn referenced_col(&self) -> Option<&str> {
+        match self {
+            SelectItem::Col(c) | SelectItem::Max(c) | SelectItem::Min(c) | SelectItem::Sum(c) => {
+                Some(c)
+            }
+            SelectItem::Count => None,
+        }
+    }
+
+    pub fn is_aggregate(&self) -> bool {
+        !matches!(self, SelectItem::Col(_))
+    }
+}
+
+impl fmt::Display for SelectItem {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SelectItem::Col(c) => write!(f, "{c}"),
+            SelectItem::Count => write!(f, "COUNT(*)"),
+            SelectItem::Max(c) => write!(f, "MAX({c})"),
+            SelectItem::Min(c) => write!(f, "MIN({c})"),
+            SelectItem::Sum(c) => write!(f, "SUM({c})"),
+        }
+    }
+}
+
+/// `SELECT items FROM table [WHERE pred] [ORDER BY col [DESC]] [LIMIT n]`
+///
+/// An empty `items` list means `SELECT *`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Select {
+    pub table: String,
+    pub items: Vec<SelectItem>,
+    pub where_: Pred,
+    pub order_by: Option<(String, bool)>, // (column, descending)
+    pub limit: Option<u64>,
+}
+
+/// `INSERT INTO table (cols) VALUES (scalars)`
+#[derive(Debug, Clone, PartialEq)]
+pub struct Insert {
+    pub table: String,
+    pub columns: Vec<String>,
+    pub values: Vec<Scalar>,
+}
+
+/// `UPDATE table SET col = scalar, ... [WHERE pred]`
+#[derive(Debug, Clone, PartialEq)]
+pub struct Update {
+    pub table: String,
+    pub sets: Vec<(String, Scalar)>,
+    pub where_: Pred,
+}
+
+/// `DELETE FROM table [WHERE pred]`
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delete {
+    pub table: String,
+    pub where_: Pred,
+}
+
+/// A statement in the SQL subset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    Select(Select),
+    Insert(Insert),
+    Update(Update),
+    Delete(Delete),
+}
+
+impl Stmt {
+    pub fn table(&self) -> &str {
+        match self {
+            Stmt::Select(s) => &s.table,
+            Stmt::Insert(s) => &s.table,
+            Stmt::Update(s) => &s.table,
+            Stmt::Delete(s) => &s.table,
+        }
+    }
+
+    pub fn is_read_only(&self) -> bool {
+        matches!(self, Stmt::Select(_))
+    }
+
+    /// Every `?param` name the statement references, in source order.
+    pub fn referenced_params(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        match self {
+            Stmt::Select(s) => s.where_.referenced_params(&mut out),
+            Stmt::Insert(s) => {
+                for v in &s.values {
+                    v.referenced_params(&mut out);
+                }
+            }
+            Stmt::Update(s) => {
+                for (_, v) in &s.sets {
+                    v.referenced_params(&mut out);
+                }
+                s.where_.referenced_params(&mut out);
+            }
+            Stmt::Delete(s) => s.where_.referenced_params(&mut out),
+        }
+        out
+    }
+}
+
+impl fmt::Display for Stmt {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Stmt::Select(s) => {
+                let items = if s.items.is_empty() {
+                    "*".to_string()
+                } else {
+                    s.items.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(", ")
+                };
+                write!(f, "SELECT {items} FROM {}", s.table)?;
+                if s.where_ != Pred::True {
+                    write!(f, " WHERE {}", s.where_)?;
+                }
+                if let Some((col, desc)) = &s.order_by {
+                    write!(f, " ORDER BY {col}{}", if *desc { " DESC" } else { "" })?;
+                }
+                if let Some(n) = s.limit {
+                    write!(f, " LIMIT {n}")?;
+                }
+                Ok(())
+            }
+            Stmt::Insert(s) => write!(
+                f,
+                "INSERT INTO {} ({}) VALUES ({})",
+                s.table,
+                s.columns.join(", "),
+                s.values.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
+            ),
+            Stmt::Update(s) => {
+                write!(
+                    f,
+                    "UPDATE {} SET {}",
+                    s.table,
+                    s.sets
+                        .iter()
+                        .map(|(c, v)| format!("{c} = {v}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )?;
+                if s.where_ != Pred::True {
+                    write!(f, " WHERE {}", s.where_)?;
+                }
+                Ok(())
+            }
+            Stmt::Delete(s) => {
+                write!(f, "DELETE FROM {}", s.table)?;
+                if s.where_ != Pred::True {
+                    write!(f, " WHERE {}", s.where_)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pred_and_flattens() {
+        let p = Pred::and(vec![
+            Pred::True,
+            Pred::And(vec![
+                Pred::Cmp { col: "a".into(), op: CmpOp::Eq, rhs: Scalar::Lit(Literal::Int(1)) },
+            ]),
+            Pred::Cmp { col: "b".into(), op: CmpOp::Eq, rhs: Scalar::Param("p".into()) },
+        ]);
+        match p {
+            Pred::And(ps) => assert_eq!(ps.len(), 2),
+            other => panic!("expected And, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pred_and_single_collapses() {
+        let p = Pred::and(vec![Pred::True, Pred::True]);
+        assert_eq!(p, Pred::True);
+    }
+
+    #[test]
+    fn scalar_referenced_cols_and_params() {
+        let s = Scalar::Sub(
+            Box::new(Scalar::Col("stock".into())),
+            Box::new(Scalar::Param("qty".into())),
+        );
+        let mut cols = Vec::new();
+        s.referenced_cols(&mut cols);
+        assert_eq!(cols, vec!["stock"]);
+        let mut params = Vec::new();
+        s.referenced_params(&mut params);
+        assert_eq!(params, vec!["qty"]);
+    }
+
+    #[test]
+    fn cmp_op_flip() {
+        assert_eq!(CmpOp::Lt.flip(), CmpOp::Gt);
+        assert_eq!(CmpOp::Eq.flip(), CmpOp::Eq);
+        assert_eq!(CmpOp::Ge.flip(), CmpOp::Le);
+    }
+
+    #[test]
+    fn display_roundtrips_visually() {
+        let stmt = Stmt::Update(Update {
+            table: "SHOPPING_CARTS".into(),
+            sets: vec![("QTY".into(), Scalar::Param("q".into()))],
+            where_: Pred::And(vec![
+                Pred::Cmp {
+                    col: "ID".into(),
+                    op: CmpOp::Eq,
+                    rhs: Scalar::Param("sid".into()),
+                },
+                Pred::Cmp {
+                    col: "I_ID".into(),
+                    op: CmpOp::Eq,
+                    rhs: Scalar::Param("iid".into()),
+                },
+            ]),
+        });
+        assert_eq!(
+            stmt.to_string(),
+            "UPDATE SHOPPING_CARTS SET QTY = ?q WHERE (ID = ?sid AND I_ID = ?iid)"
+        );
+    }
+}

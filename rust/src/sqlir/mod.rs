@@ -1,0 +1,25 @@
+//! `sqlir` — the SQL subset Eliá's static analysis and embedded engine
+//! share.
+//!
+//! The paper's analysis consumes the SQL statements embedded in the
+//! application's transaction code (extracted with JavaParser). Here the
+//! application's transactions are *templates*: named SQL statements with
+//! `?param` placeholders plus a procedural body that executes them. Both
+//! the Operation Partitioning analysis ([`crate::analysis`]) and the
+//! embedded database engine ([`crate::db`]) operate on this one parsed
+//! representation, so the statements the analysis reasons about are — by
+//! construction — the statements the application executes.
+//!
+//! Supported grammar (per the paper §3.1 "Applicability"): single-table
+//! SELECT / INSERT / UPDATE / DELETE; WHERE clauses as and/or trees of
+//! atomic comparisons; parameters only in atomic conditions; ORDER BY /
+//! LIMIT on SELECT; COUNT/MIN/MAX/SUM aggregates. No nested queries, no
+//! joins (application-side joins are sequences of statements, as in the
+//! benchmark servlets), no triggers.
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+
+pub use ast::*;
+pub use parser::{parse_statement, ParseError};

@@ -1,0 +1,471 @@
+//! Recursive-descent parser for the SQL subset.
+
+use super::ast::*;
+use super::lexer::{lex, LexError, Token};
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ParseError {
+    #[error(transparent)]
+    Lex(#[from] LexError),
+    #[error("parse error: {0}")]
+    Syntax(String),
+}
+
+/// Parse a single statement of the SQL subset.
+pub fn parse_statement(input: &str) -> Result<Stmt, ParseError> {
+    let tokens = lex(input)?;
+    let mut p = Parser { toks: &tokens, pos: 0 };
+    let stmt = p.statement()?;
+    if p.pos != p.toks.len() {
+        return Err(ParseError::Syntax(format!(
+            "trailing tokens starting at {:?}",
+            p.toks[p.pos]
+        )));
+    }
+    Ok(stmt)
+}
+
+struct Parser<'a> {
+    toks: &'a [Token],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<&Token> {
+        let t = self.toks.get(self.pos);
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, ParseError> {
+        Err(ParseError::Syntax(format!("{} (at token {})", msg.into(), self.pos)))
+    }
+
+    /// Consume an identifier matching `kw` case-insensitively.
+    fn expect_kw(&mut self, kw: &str) -> Result<(), ParseError> {
+        match self.next() {
+            Some(Token::Ident(s)) if s.eq_ignore_ascii_case(kw) => Ok(()),
+            other => Err(ParseError::Syntax(format!("expected keyword {kw}, got {other:?}"))),
+        }
+    }
+
+    fn peek_kw(&self, kw: &str) -> bool {
+        matches!(self.peek(), Some(Token::Ident(s)) if s.eq_ignore_ascii_case(kw))
+    }
+
+    fn accept_kw(&mut self, kw: &str) -> bool {
+        if self.peek_kw(kw) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_tok(&mut self, t: Token) -> Result<(), ParseError> {
+        match self.next() {
+            Some(got) if *got == t => Ok(()),
+            other => Err(ParseError::Syntax(format!("expected {t:?}, got {other:?}"))),
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, ParseError> {
+        match self.next() {
+            Some(Token::Ident(s)) => Ok(s.clone()),
+            other => Err(ParseError::Syntax(format!("expected identifier, got {other:?}"))),
+        }
+    }
+
+    fn statement(&mut self) -> Result<Stmt, ParseError> {
+        match self.peek() {
+            Some(Token::Ident(s)) if s.eq_ignore_ascii_case("SELECT") => self.select(),
+            Some(Token::Ident(s)) if s.eq_ignore_ascii_case("INSERT") => self.insert(),
+            Some(Token::Ident(s)) if s.eq_ignore_ascii_case("UPDATE") => self.update(),
+            Some(Token::Ident(s)) if s.eq_ignore_ascii_case("DELETE") => self.delete(),
+            other => self.err(format!("expected statement keyword, got {other:?}")),
+        }
+    }
+
+    fn select(&mut self) -> Result<Stmt, ParseError> {
+        self.expect_kw("SELECT")?;
+        let mut items = Vec::new();
+        if matches!(self.peek(), Some(Token::Star)) {
+            self.next();
+        } else {
+            loop {
+                items.push(self.select_item()?);
+                if matches!(self.peek(), Some(Token::Comma)) {
+                    self.next();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect_kw("FROM")?;
+        let table = self.ident()?;
+        let where_ = self.opt_where()?;
+        let order_by = if self.accept_kw("ORDER") {
+            self.expect_kw("BY")?;
+            let col = self.ident()?;
+            let desc = self.accept_kw("DESC");
+            if !desc {
+                self.accept_kw("ASC");
+            }
+            Some((col, desc))
+        } else {
+            None
+        };
+        let limit = if self.accept_kw("LIMIT") {
+            match self.next() {
+                Some(Token::Int(n)) if *n >= 0 => Some(*n as u64),
+                other => return Err(ParseError::Syntax(format!("bad LIMIT: {other:?}"))),
+            }
+        } else {
+            None
+        };
+        Ok(Stmt::Select(Select { table, items, where_, order_by, limit }))
+    }
+
+    fn select_item(&mut self) -> Result<SelectItem, ParseError> {
+        let name = self.ident()?;
+        let upper = name.to_ascii_uppercase();
+        if matches!(upper.as_str(), "COUNT" | "MAX" | "MIN" | "SUM")
+            && matches!(self.peek(), Some(Token::LParen))
+        {
+            self.next(); // (
+            let item = if upper == "COUNT" {
+                self.expect_tok(Token::Star)?;
+                SelectItem::Count
+            } else {
+                let col = self.ident()?;
+                match upper.as_str() {
+                    "MAX" => SelectItem::Max(col),
+                    "MIN" => SelectItem::Min(col),
+                    "SUM" => SelectItem::Sum(col),
+                    _ => unreachable!(),
+                }
+            };
+            self.expect_tok(Token::RParen)?;
+            Ok(item)
+        } else {
+            Ok(SelectItem::Col(name))
+        }
+    }
+
+    fn insert(&mut self) -> Result<Stmt, ParseError> {
+        self.expect_kw("INSERT")?;
+        self.expect_kw("INTO")?;
+        let table = self.ident()?;
+        self.expect_tok(Token::LParen)?;
+        let mut columns = Vec::new();
+        loop {
+            columns.push(self.ident()?);
+            if matches!(self.peek(), Some(Token::Comma)) {
+                self.next();
+            } else {
+                break;
+            }
+        }
+        self.expect_tok(Token::RParen)?;
+        self.expect_kw("VALUES")?;
+        self.expect_tok(Token::LParen)?;
+        let mut values = Vec::new();
+        loop {
+            values.push(self.scalar()?);
+            if matches!(self.peek(), Some(Token::Comma)) {
+                self.next();
+            } else {
+                break;
+            }
+        }
+        self.expect_tok(Token::RParen)?;
+        if columns.len() != values.len() {
+            return self.err(format!(
+                "INSERT arity mismatch: {} columns, {} values",
+                columns.len(),
+                values.len()
+            ));
+        }
+        Ok(Stmt::Insert(Insert { table, columns, values }))
+    }
+
+    fn update(&mut self) -> Result<Stmt, ParseError> {
+        self.expect_kw("UPDATE")?;
+        let table = self.ident()?;
+        self.expect_kw("SET")?;
+        let mut sets = Vec::new();
+        loop {
+            let col = self.ident()?;
+            self.expect_tok(Token::Eq)?;
+            let v = self.scalar()?;
+            sets.push((col, v));
+            if matches!(self.peek(), Some(Token::Comma)) {
+                self.next();
+            } else {
+                break;
+            }
+        }
+        let where_ = self.opt_where()?;
+        Ok(Stmt::Update(Update { table, sets, where_ }))
+    }
+
+    fn delete(&mut self) -> Result<Stmt, ParseError> {
+        self.expect_kw("DELETE")?;
+        self.expect_kw("FROM")?;
+        let table = self.ident()?;
+        let where_ = self.opt_where()?;
+        Ok(Stmt::Delete(Delete { table, where_ }))
+    }
+
+    fn opt_where(&mut self) -> Result<Pred, ParseError> {
+        if self.accept_kw("WHERE") {
+            self.pred_or()
+        } else {
+            Ok(Pred::True)
+        }
+    }
+
+    // pred_or := pred_and (OR pred_and)*
+    fn pred_or(&mut self) -> Result<Pred, ParseError> {
+        let mut parts = vec![self.pred_and()?];
+        while self.accept_kw("OR") {
+            parts.push(self.pred_and()?);
+        }
+        Ok(if parts.len() == 1 { parts.pop().unwrap() } else { Pred::Or(parts) })
+    }
+
+    // pred_and := pred_atom (AND pred_atom)*
+    fn pred_and(&mut self) -> Result<Pred, ParseError> {
+        let mut parts = vec![self.pred_atom()?];
+        while self.accept_kw("AND") {
+            parts.push(self.pred_atom()?);
+        }
+        Ok(if parts.len() == 1 { parts.pop().unwrap() } else { Pred::And(parts) })
+    }
+
+    // pred_atom := '(' pred_or ')' | column cmpop scalar
+    fn pred_atom(&mut self) -> Result<Pred, ParseError> {
+        if matches!(self.peek(), Some(Token::LParen)) {
+            self.next();
+            let p = self.pred_or()?;
+            self.expect_tok(Token::RParen)?;
+            return Ok(p);
+        }
+        let col = self.ident()?;
+        let op = match self.next() {
+            Some(Token::Eq) => CmpOp::Eq,
+            Some(Token::Ne) => CmpOp::Ne,
+            Some(Token::Lt) => CmpOp::Lt,
+            Some(Token::Le) => CmpOp::Le,
+            Some(Token::Gt) => CmpOp::Gt,
+            Some(Token::Ge) => CmpOp::Ge,
+            other => return Err(ParseError::Syntax(format!("expected comparison, got {other:?}"))),
+        };
+        let rhs = self.scalar()?;
+        Ok(Pred::Cmp { col, op, rhs })
+    }
+
+    // scalar := term (('+'|'-') term)*
+    fn scalar(&mut self) -> Result<Scalar, ParseError> {
+        let mut lhs = self.term()?;
+        loop {
+            match self.peek() {
+                Some(Token::Plus) => {
+                    self.next();
+                    let rhs = self.term()?;
+                    lhs = Scalar::Add(Box::new(lhs), Box::new(rhs));
+                }
+                Some(Token::Minus) => {
+                    self.next();
+                    let rhs = self.term()?;
+                    lhs = Scalar::Sub(Box::new(lhs), Box::new(rhs));
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    // term := factor ('*' factor)*
+    fn term(&mut self) -> Result<Scalar, ParseError> {
+        let mut lhs = self.factor()?;
+        while matches!(self.peek(), Some(Token::Star)) {
+            self.next();
+            let rhs = self.factor()?;
+            lhs = Scalar::Mul(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    // factor := literal | param | column | '(' scalar ')'
+    fn factor(&mut self) -> Result<Scalar, ParseError> {
+        match self.next().cloned() {
+            Some(Token::Int(i)) => Ok(Scalar::Lit(Literal::Int(i))),
+            Some(Token::Float(x)) => Ok(Scalar::Lit(Literal::Float(x))),
+            Some(Token::Str(s)) => Ok(Scalar::Lit(Literal::Str(s))),
+            Some(Token::Minus) => match self.next() {
+                Some(Token::Int(i)) => Ok(Scalar::Lit(Literal::Int(-i))),
+                Some(Token::Float(x)) => Ok(Scalar::Lit(Literal::Float(-x))),
+                other => Err(ParseError::Syntax(format!("expected number after '-', got {other:?}"))),
+            },
+            Some(Token::Param(p)) => Ok(Scalar::Param(p)),
+            Some(Token::Ident(s)) => {
+                if s.eq_ignore_ascii_case("NULL") {
+                    Ok(Scalar::Lit(Literal::Null))
+                } else {
+                    Ok(Scalar::Col(s))
+                }
+            }
+            Some(Token::LParen) => {
+                let s = self.scalar()?;
+                self.expect_tok(Token::RParen)?;
+                Ok(s)
+            }
+            other => Err(ParseError::Syntax(format!("expected scalar, got {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_paper_docart_update() {
+        let stmt =
+            parse_statement("UPDATE SHOPPING_CARTS SET QTY = ?q WHERE ID = ?sid AND I_ID = ?iid")
+                .unwrap();
+        match &stmt {
+            Stmt::Update(u) => {
+                assert_eq!(u.table, "SHOPPING_CARTS");
+                assert_eq!(u.sets, vec![("QTY".into(), Scalar::Param("q".into()))]);
+                match &u.where_ {
+                    Pred::And(ps) => assert_eq!(ps.len(), 2),
+                    other => panic!("bad where: {other:?}"),
+                }
+            }
+            other => panic!("expected update, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_paper_createcart_insert() {
+        let stmt = parse_statement("INSERT INTO SHOPPING_CARTS (ID) VALUES (?sid)").unwrap();
+        match stmt {
+            Stmt::Insert(i) => {
+                assert_eq!(i.columns, vec!["ID"]);
+                assert_eq!(i.values, vec![Scalar::Param("sid".into())]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_select_star_and_projection() {
+        let s = parse_statement("SELECT * FROM ITEMS WHERE ID = ?iid").unwrap();
+        match s {
+            Stmt::Select(sel) => {
+                assert!(sel.items.is_empty());
+                assert_eq!(sel.table, "ITEMS");
+            }
+            _ => panic!(),
+        }
+        let s = parse_statement("SELECT TITLE, COST FROM ITEMS WHERE STOCK > 0 ORDER BY COST DESC LIMIT 10")
+            .unwrap();
+        match s {
+            Stmt::Select(sel) => {
+                assert_eq!(sel.items.len(), 2);
+                assert_eq!(sel.order_by, Some(("COST".into(), true)));
+                assert_eq!(sel.limit, Some(10));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_aggregates() {
+        let s = parse_statement("SELECT COUNT(*) FROM BIDS WHERE ITEM_ID = ?iid").unwrap();
+        match s {
+            Stmt::Select(sel) => assert_eq!(sel.items, vec![SelectItem::Count]),
+            _ => panic!(),
+        }
+        let s = parse_statement("SELECT MAX(AMOUNT) FROM BIDS WHERE ITEM_ID = ?iid").unwrap();
+        match s {
+            Stmt::Select(sel) => assert_eq!(sel.items, vec![SelectItem::Max("AMOUNT".into())]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_arithmetic_in_set() {
+        let s = parse_statement("UPDATE ITEMS SET STOCK = STOCK - ?qty WHERE ID = ?iid").unwrap();
+        match s {
+            Stmt::Update(u) => match &u.sets[0].1 {
+                Scalar::Sub(a, b) => {
+                    assert_eq!(**a, Scalar::Col("STOCK".into()));
+                    assert_eq!(**b, Scalar::Param("qty".into()));
+                }
+                other => panic!("{other:?}"),
+            },
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_or_with_parens() {
+        let s = parse_statement(
+            "SELECT * FROM USERS WHERE (ID = ?a OR ID = ?b) AND REGION = 'EU'",
+        )
+        .unwrap();
+        match s {
+            Stmt::Select(sel) => match sel.where_ {
+                Pred::And(ps) => {
+                    assert!(matches!(ps[0], Pred::Or(_)));
+                    assert!(matches!(ps[1], Pred::Cmp { .. }));
+                }
+                other => panic!("{other:?}"),
+            },
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_delete_and_negative_literal() {
+        let s = parse_statement("DELETE FROM CARTS WHERE TTL < -1").unwrap();
+        match s {
+            Stmt::Delete(d) => match d.where_ {
+                Pred::Cmp { rhs: Scalar::Lit(Literal::Int(-1)), .. } => {}
+                other => panic!("{other:?}"),
+            },
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_and_arity_mismatch() {
+        assert!(parse_statement("SELECT * FROM T WHERE A = 1 extra junk ,").is_err());
+        assert!(parse_statement("INSERT INTO T (A, B) VALUES (1)").is_err());
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let sources = [
+            "UPDATE SHOPPING_CARTS SET QTY = ?q WHERE (ID = ?sid AND I_ID = ?iid)",
+            "INSERT INTO SHOPPING_CARTS (ID) VALUES (?sid)",
+            "SELECT TITLE FROM ITEMS WHERE ID = ?iid",
+            "DELETE FROM CARTS WHERE OWNER = ?uid",
+        ];
+        for src in sources {
+            let stmt = parse_statement(src).unwrap();
+            let printed = stmt.to_string();
+            let reparsed = parse_statement(&printed).unwrap();
+            assert_eq!(stmt, reparsed, "roundtrip failed for {src}");
+        }
+    }
+}

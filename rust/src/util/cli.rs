@@ -1,0 +1,133 @@
+//! Minimal command-line flag parsing for the `elia` binary, examples and
+//! bench harnesses (stand-in for `clap`, unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, and `--key=value` forms plus
+//! positional arguments.
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv\[0\]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (used in tests).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Typed getter with default; panics with a clear message on a
+    /// malformed value (fail-fast is the right behaviour for a bench CLI).
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {v:?} as {}", std::any::type_name::<T>())),
+        }
+    }
+
+    /// Comma-separated list getter, e.g. `--servers 1,2,4,8`.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad list element {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = parse(&["serve", "--servers", "4", "--verbose", "--mix=shopping"]);
+        assert_eq!(a.command(), Some("serve"));
+        assert_eq!(a.get("servers"), Some("4"));
+        assert_eq!(a.get("mix"), Some("shopping"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "12", "--ratio", "0.5"]);
+        assert_eq!(a.get_parse("n", 0usize), 12);
+        assert!((a.get_parse("ratio", 0.0f64) - 0.5).abs() < 1e-12);
+        assert_eq!(a.get_parse("missing", 7u32), 7);
+    }
+
+    #[test]
+    fn list_getter() {
+        let a = parse(&["--servers", "1,2,4,8"]);
+        assert_eq!(a.get_list("servers", &[0usize]), vec![1, 2, 4, 8]);
+        assert_eq!(a.get_list::<usize>("absent", &[3]), vec![3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_typed_value_panics() {
+        let a = parse(&["--n", "abc"]);
+        let _: usize = a.get_parse("n", 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Small self-contained utilities.
+//!
+//! The build environment vendors only the `xla` crate closure, so the
+//! usual ecosystem crates (`rand`, `serde`, `proptest`, `clap`) are
+//! implemented in-repo at the small scale this project needs:
+//!
+//! * [`rng`] — SplitMix64 PRNG + distribution helpers,
+//! * [`stats`] — mean / percentiles / histograms / time-series,
+//! * [`qcheck`] — a miniature property-testing harness,
+//! * [`vtime`] — virtual-time types shared by the simulator,
+//! * [`cli`] — flag parsing for the binary, examples and benches.
+
+pub mod cli;
+pub mod qcheck;
+pub mod rng;
+pub mod stats;
+pub mod vtime;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use vtime::VTime;

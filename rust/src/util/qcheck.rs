@@ -1,0 +1,197 @@
+//! A miniature property-testing harness (stand-in for `proptest`, which
+//! is not available in the offline build environment).
+//!
+//! Supports: seeded case generation through [`Rng`], a configurable number
+//! of cases, and greedy input shrinking for `Vec`-shaped inputs. Failures
+//! report the seed so a case can be replayed deterministically.
+//!
+//! ```no_run
+//! use elia::util::qcheck::{check, Config};
+//! check(Config::default().cases(200), |rng| {
+//!     let n = rng.range(0, 1000);
+//!     assert!(n < 1000);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Property-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub name: &'static str,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Honor QCHECK_SEED for replay, QCHECK_CASES for soak runs.
+        let seed = std::env::var("QCHECK_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xE11A);
+        let cases = std::env::var("QCHECK_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(100);
+        Config { cases, seed, name: "property" }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn name(mut self, n: &'static str) -> Self {
+        self.name = n;
+        self
+    }
+}
+
+/// Run `prop` against `cfg.cases` seeded generators. The property signals
+/// failure by panicking (plain `assert!` works). On failure the harness
+/// re-panics with the case seed embedded so the exact case can be replayed
+/// with `QCHECK_SEED`.
+pub fn check<F>(cfg: Config, prop: F)
+where
+    F: Fn(&mut Rng) + std::panic::RefUnwindSafe,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(case_seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{}' failed at case {}/{} (case_seed={:#x}, run QCHECK_SEED={} QCHECK_CASES=1 to replay): {}",
+                cfg.name, case + 1, cfg.cases, case_seed, case_seed, msg
+            );
+        }
+    }
+}
+
+/// Run a property over generated `Vec<T>` inputs with greedy shrinking:
+/// on failure, repeatedly try dropping chunks of the input while the
+/// property still fails, then report the minimized counterexample via
+/// `render`.
+pub fn check_vec<T, G, F>(cfg: Config, gen_item: G, max_len: usize, prop: F)
+where
+    T: Clone + std::fmt::Debug + std::panic::RefUnwindSafe,
+    G: Fn(&mut Rng) -> T,
+    F: Fn(&[T]) -> bool + std::panic::RefUnwindSafe,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let len = rng.range(0, max_len + 1);
+        let input: Vec<T> = (0..len).map(|_| gen_item(&mut rng)).collect();
+        let ok = std::panic::catch_unwind(|| prop(&input)).unwrap_or(false);
+        if !ok {
+            let minimized = shrink(&input, &prop);
+            panic!(
+                "property '{}' failed at case {}/{} (case_seed={:#x});\n  minimized input ({} items): {:?}",
+                cfg.name,
+                case + 1,
+                cfg.cases,
+                case_seed,
+                minimized.len(),
+                minimized
+            );
+        }
+    }
+}
+
+/// Greedy delta-debugging shrink: try removing halves, quarters, ... then
+/// single elements, keeping any removal that still fails the property.
+fn shrink<T, F>(input: &[T], prop: &F) -> Vec<T>
+where
+    T: Clone + std::panic::RefUnwindSafe,
+    F: Fn(&[T]) -> bool + std::panic::RefUnwindSafe,
+{
+    let fails = |xs: &[T]| !std::panic::catch_unwind(|| prop(xs)).unwrap_or(false);
+    let mut cur: Vec<T> = input.to_vec();
+    let mut chunk = (cur.len() / 2).max(1);
+    while chunk >= 1 && !cur.is_empty() {
+        let mut progressed = false;
+        let mut start = 0;
+        while start < cur.len() {
+            let end = (start + chunk).min(cur.len());
+            let mut candidate = Vec::with_capacity(cur.len() - (end - start));
+            candidate.extend_from_slice(&cur[..start]);
+            candidate.extend_from_slice(&cur[end..]);
+            if fails(&candidate) {
+                cur = candidate;
+                progressed = true;
+                // retry same offset with new (shorter) vector
+            } else {
+                start += chunk;
+            }
+        }
+        if !progressed {
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default().cases(50).name("tautology"), |rng| {
+            let x = rng.range(0, 10);
+            assert!(x < 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-false")]
+    fn failing_property_reports_seed() {
+        check(Config::default().cases(5).name("always-false"), |_rng| {
+            panic!("always-false");
+        });
+    }
+
+    #[test]
+    fn check_vec_passes_on_valid_property() {
+        check_vec(
+            Config::default().cases(30),
+            |rng| rng.range(0, 100) as i64,
+            20,
+            |xs| xs.iter().all(|&x| x < 100),
+        );
+    }
+
+    #[test]
+    fn shrink_minimizes_to_single_culprit() {
+        // Property: no element equals 7. Counterexample should shrink to [7].
+        let input: Vec<i64> = vec![1, 2, 7, 3, 4, 5, 6];
+        let minimized = shrink(&input, &|xs: &[i64]| !xs.contains(&7));
+        assert_eq!(minimized, vec![7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimized input (1 items)")]
+    fn check_vec_shrinks_failure() {
+        check_vec(
+            Config::default().cases(200).name("no-42"),
+            |rng| rng.range(0, 50) as i64,
+            30,
+            |xs| !xs.contains(&42),
+        );
+    }
+}

@@ -1,0 +1,210 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! SplitMix64 core: tiny, fast, passes BigCrush for our purposes
+//! (workload generation and property testing), and — crucially for the
+//! simulator — fully deterministic across runs and platforms.
+
+/// A deterministic 64-bit PRNG (SplitMix64).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Two generators with the same seed
+    /// produce identical streams.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Derive an independent child generator (used to give each simulated
+    /// client its own stream so event interleaving does not perturb
+    /// workloads).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform value in `[0, n)`. `n` must be non-zero.
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free-enough reduction; the
+        // modulo bias is < 2^-32 for every n we use (n << 2^32).
+        ((self.next_u64() >> 32).wrapping_mul(n)) >> 32
+    }
+
+    /// Uniform `usize` in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.gen_range((hi - lo) as u64) as usize
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick an index according to a weight vector (weights need not be
+    /// normalized). Panics on an empty or all-zero vector.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weighted() requires positive total weight");
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Pick a uniform element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Exponentially distributed value with the given mean (used for
+    /// Poisson inter-arrival times in open-loop workloads).
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.f64(); // (0, 1]
+        -mean * u.ln()
+    }
+
+    /// Zipf-distributed value in `[0, n)` with exponent `theta` (used for
+    /// skewed key popularity in ablation workloads). Rejection-inversion
+    /// is overkill here; we use the classic cumulative method with a
+    /// cached normalizer for small n, and a power-law approximation for
+    /// large n.
+    pub fn zipf(&mut self, n: usize, theta: f64) -> usize {
+        debug_assert!(n > 0);
+        if theta <= 0.0 {
+            return self.range(0, n);
+        }
+        // Inverse-CDF approximation of the zeta distribution.
+        let u = self.f64().max(1e-12);
+        let s = 1.0 - theta;
+        if s.abs() < 1e-9 {
+            // theta == 1: CDF ~ ln(k)/ln(n)
+            let k = ((n as f64).powf(u)).floor() as usize;
+            return k.min(n - 1);
+        }
+        let k = ((u * ((n as f64).powf(s) - 1.0) + 1.0).powf(1.0 / s) - 1.0).floor() as usize;
+        k.min(n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn gen_range_in_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let n = 1 + r.next_u64() % 1000;
+            assert!(r.gen_range(n) < n);
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_roughly_uniform() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..100_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn weighted_respects_weights() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 3];
+        for _ in 0..60_000 {
+            counts[r.weighted(&[1.0, 2.0, 3.0])] += 1;
+        }
+        assert!(counts[0] < counts[1] && counts[1] < counts[2]);
+        // ~10k / 20k / 30k
+        assert!((counts[0] as i64 - 10_000).abs() < 1000);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::new(11);
+        let mean: f64 = (0..100_000).map(|_| r.exp(5.0)).sum::<f64>() / 100_000.0;
+        assert!((mean - 5.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_skews_low() {
+        let mut r = Rng::new(13);
+        let mut lo = 0;
+        for _ in 0..10_000 {
+            if r.zipf(1000, 0.99) < 10 {
+                lo += 1;
+            }
+        }
+        // With theta ~1, the first 10 of 1000 keys get a large share.
+        assert!(lo > 2000, "lo={lo}");
+        // theta = 0 degenerates to uniform
+        let mut lo_u = 0;
+        for _ in 0..10_000 {
+            if r.zipf(1000, 0.0) < 10 {
+                lo_u += 1;
+            }
+        }
+        assert!(lo_u < 300, "lo_u={lo_u}");
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut parent = Rng::new(5);
+        let mut c1 = parent.fork();
+        let mut c2 = parent.fork();
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+}

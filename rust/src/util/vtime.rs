@@ -1,0 +1,117 @@
+//! Virtual time for the discrete-event simulator.
+//!
+//! All simulated timestamps, latencies and service times are expressed as
+//! [`VTime`] — integer microseconds since the start of the simulation.
+//! Integer micros keep event ordering exact (no float-comparison
+//! nondeterminism) while giving sub-millisecond resolution, enough for
+//! LAN latencies of a few hundred microseconds.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in virtual time (microseconds since simulation start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct VTime(pub u64);
+
+impl VTime {
+    pub const ZERO: VTime = VTime(0);
+
+    pub fn from_micros(us: u64) -> Self {
+        VTime(us)
+    }
+
+    pub fn from_millis(ms: u64) -> Self {
+        VTime(ms * 1_000)
+    }
+
+    pub fn from_millis_f64(ms: f64) -> Self {
+        VTime((ms * 1_000.0).round().max(0.0) as u64)
+    }
+
+    pub fn from_secs(s: u64) -> Self {
+        VTime(s * 1_000_000)
+    }
+
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+
+    pub fn saturating_sub(self, other: VTime) -> VTime {
+        VTime(self.0.saturating_sub(other.0))
+    }
+}
+
+impl Add for VTime {
+    type Output = VTime;
+    fn add(self, rhs: VTime) -> VTime {
+        VTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for VTime {
+    fn add_assign(&mut self, rhs: VTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for VTime {
+    type Output = VTime;
+    fn sub(self, rhs: VTime) -> VTime {
+        VTime(self.0.checked_sub(rhs.0).expect("VTime underflow"))
+    }
+}
+
+impl fmt::Display for VTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1_000_000 {
+            write!(f, "{:.3}s", self.as_secs_f64())
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.2}ms", self.as_millis_f64())
+        } else {
+            write!(f, "{}us", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip() {
+        assert_eq!(VTime::from_millis(5).as_micros(), 5_000);
+        assert_eq!(VTime::from_secs(2).as_millis_f64(), 2_000.0);
+        assert_eq!(VTime::from_millis_f64(0.35).as_micros(), 350);
+    }
+
+    #[test]
+    fn arithmetic_and_ordering() {
+        let a = VTime::from_millis(10);
+        let b = VTime::from_millis(3);
+        assert_eq!((a + b).as_micros(), 13_000);
+        assert_eq!((a - b).as_micros(), 7_000);
+        assert!(b < a);
+        assert_eq!(b.saturating_sub(a), VTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        let _ = VTime::from_millis(1) - VTime::from_millis(2);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(VTime::from_micros(12).to_string(), "12us");
+        assert_eq!(VTime::from_millis(12).to_string(), "12.00ms");
+        assert_eq!(VTime::from_secs(3).to_string(), "3.000s");
+    }
+}

@@ -1,0 +1,114 @@
+//! Operation generation: the interface every workload (TPC-W, RUBiS,
+//! micro) implements, plus the per-operation service-time model used by
+//! the simulator.
+
+use crate::util::{Rng, VTime};
+use crate::workload::spec::{Operation, TxnTemplate};
+
+/// Generates the next operation for a client.
+///
+/// `client_site` lets generators produce site-affine key values (the
+/// paper's server-specific unique ids: carts created at a site get ids
+/// routing back to that site's server). `n_servers` is the deployment
+/// size the routing function hashes into.
+pub trait OpGenerator: Send {
+    fn next_op(&mut self, rng: &mut Rng, client_site: usize, n_servers: usize) -> Operation;
+}
+
+impl<F> OpGenerator for F
+where
+    F: FnMut(&mut Rng, usize, usize) -> Operation + Send,
+{
+    fn next_op(&mut self, rng: &mut Rng, client_site: usize, n_servers: usize) -> Operation {
+        self(rng, client_site, n_servers)
+    }
+}
+
+/// Service-time model: how long an operation occupies a worker.
+///
+/// The paper's microbenchmark fixes this at 5 ms per operation; for the
+/// macro benchmarks we model `base + per_stmt · n_statements` to reflect
+/// that multi-statement transactions cost more.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceModel {
+    pub base_ms: f64,
+    pub per_stmt_ms: f64,
+    /// Multiplicative jitter amplitude in [0, 1): service is scaled by
+    /// `1 + U(-jitter, +jitter)`.
+    pub jitter: f64,
+}
+
+impl Default for ServiceModel {
+    fn default() -> Self {
+        // ~5 ms for a 2-3 statement transaction, matching the paper's
+        // microbenchmark scale.
+        ServiceModel { base_ms: 2.0, per_stmt_ms: 1.0, jitter: 0.1 }
+    }
+}
+
+impl ServiceModel {
+    /// Fixed per-op cost (the RQ3 microbenchmark: exactly 5 ms).
+    pub fn fixed(ms: f64) -> Self {
+        ServiceModel { base_ms: ms, per_stmt_ms: 0.0, jitter: 0.0 }
+    }
+
+    pub fn sample(&self, tpl: &TxnTemplate, rng: &mut Rng) -> VTime {
+        let mut ms = self.base_ms + self.per_stmt_ms * tpl.stmts.len() as f64;
+        if self.jitter > 0.0 {
+            ms *= 1.0 + (rng.f64() * 2.0 - 1.0) * self.jitter;
+        }
+        VTime::from_millis_f64(ms.max(0.01))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::TxnTemplate;
+
+    fn tpl(nstmts: usize) -> TxnTemplate {
+        let stmts: Vec<(String, String)> = (0..nstmts)
+            .map(|i| (format!("s{i}"), format!("SELECT A FROM T WHERE A = {i}")))
+            .collect();
+        let refs: Vec<(&str, &str)> =
+            stmts.iter().map(|(a, b)| (a.as_str(), b.as_str())).collect();
+        TxnTemplate::new("t", &[], &refs, 1.0)
+    }
+
+    #[test]
+    fn fixed_model_is_exact() {
+        let m = ServiceModel::fixed(5.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(m.sample(&tpl(3), &mut rng), VTime::from_millis(5));
+        assert_eq!(m.sample(&tpl(1), &mut rng), VTime::from_millis(5));
+    }
+
+    #[test]
+    fn per_stmt_scales() {
+        let m = ServiceModel { base_ms: 1.0, per_stmt_ms: 2.0, jitter: 0.0 };
+        let mut rng = Rng::new(1);
+        assert_eq!(m.sample(&tpl(3), &mut rng), VTime::from_millis(7));
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let m = ServiceModel { base_ms: 10.0, per_stmt_ms: 0.0, jitter: 0.2 };
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let s = m.sample(&tpl(1), &mut rng).as_millis_f64();
+            assert!((8.0..=12.0).contains(&s), "s={s}");
+        }
+    }
+
+    #[test]
+    fn closure_is_a_generator() {
+        use crate::db::Bindings;
+        use crate::workload::spec::Operation;
+        let mut g = |_rng: &mut Rng, _site: usize, _n: usize| Operation {
+            txn: 0,
+            args: Bindings::new(),
+        };
+        let op = crate::workload::generator::OpGenerator::next_op(&mut g, &mut Rng::new(1), 0, 4);
+        assert_eq!(op.txn, 0);
+    }
+}

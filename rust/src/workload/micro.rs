@@ -1,0 +1,177 @@
+//! The RQ3 microbenchmark (paper §7.3): a synthetic workload with a
+//! precisely controllable fraction of local operations and a fixed 5 ms
+//! execution time per operation (local or global).
+
+use crate::catalog::{Schema, TableSchema, ValueType};
+use crate::db::{Bindings, Db, Value};
+use crate::sqlir::parse_statement;
+use crate::util::Rng;
+use crate::workload::analyzed::AnalyzedApp;
+use crate::workload::generator::OpGenerator;
+use crate::workload::spec::{AppSpec, Operation, TxnTemplate};
+
+/// Keys per server partition in the local table.
+pub const LOCAL_KEYS: i64 = 10_000;
+/// Shared global rows.
+pub const GLOBAL_KEYS: i64 = 64;
+
+pub fn schema() -> Schema {
+    Schema::new(vec![
+        TableSchema::new(
+            "LOCAL_TAB",
+            &[("K", ValueType::Int), ("V", ValueType::Int)],
+            &["K"],
+        ),
+        TableSchema::new(
+            "GLOBAL_TAB",
+            &[("G", ValueType::Int), ("V", ValueType::Int)],
+            &["G"],
+        ),
+    ])
+}
+
+pub fn templates() -> Vec<TxnTemplate> {
+    vec![
+        // Partitioned single-row update: local under Operation Partitioning.
+        TxnTemplate::new(
+            "localOp",
+            &["k"],
+            &[("u", "UPDATE LOCAL_TAB SET V = V + 1 WHERE K = ?k")],
+            1.0,
+        )
+        .with_body(|ctx, args| ctx.exec("u", args)),
+        // Derived-key update on the shared table: global (uncoverable).
+        TxnTemplate::new(
+            "globalOp",
+            &["k"],
+            &[("u", "UPDATE GLOBAL_TAB SET V = V + 1 WHERE G = ?derived_g")],
+            1.0,
+        )
+        .with_body(|ctx, args| {
+            let k = args.get("k").and_then(|v| v.as_int()).unwrap_or(0);
+            let mut b = args.clone();
+            b.insert("derived_g".to_string(), Value::Int(k.rem_euclid(GLOBAL_KEYS)));
+            ctx.exec("u", &b)
+        }),
+    ]
+}
+
+pub fn analyzed() -> AnalyzedApp {
+    let app = AnalyzedApp::analyze(AppSpec {
+        name: "micro".into(),
+        schema: schema(),
+        txns: templates(),
+    });
+    debug_assert_eq!(*app.class(0), crate::analysis::OpClass::Local);
+    debug_assert_eq!(*app.class(1), crate::analysis::OpClass::Global);
+    app
+}
+
+pub fn seed(db: &Db) {
+    let lt = parse_statement("INSERT INTO LOCAL_TAB (K, V) VALUES (?k, 0)").unwrap();
+    let gt = parse_statement("INSERT INTO GLOBAL_TAB (G, V) VALUES (?g, 0)").unwrap();
+    for k in 0..LOCAL_KEYS {
+        let b: Bindings = [("k".to_string(), Value::Int(k))].into_iter().collect();
+        db.exec_auto(&lt, &b).unwrap();
+    }
+    for g in 0..GLOBAL_KEYS {
+        let b: Bindings = [("g".to_string(), Value::Int(g))].into_iter().collect();
+        db.exec_auto(&gt, &b).unwrap();
+    }
+}
+
+/// Generator with an exact local-operation ratio. Local keys are
+/// site-affine so local ops execute at the client's nearest server.
+pub struct MicroGenerator {
+    pub local_ratio: f64,
+    route_helper: AnalyzedApp,
+}
+
+impl MicroGenerator {
+    pub fn new(app: &AnalyzedApp, local_ratio: f64) -> Self {
+        assert!((0.0..=1.0).contains(&local_ratio));
+        MicroGenerator { local_ratio, route_helper: app.clone() }
+    }
+}
+
+impl OpGenerator for MicroGenerator {
+    fn next_op(&mut self, rng: &mut Rng, site: usize, n: usize) -> Operation {
+        if rng.chance(self.local_ratio) {
+            let base = rng.range(0, LOCAL_KEYS as usize) as i64;
+            let k = self.route_helper.value_routing_to(base, site % n.max(1), n);
+            Operation {
+                txn: 0,
+                args: [("k".to_string(), k)].into_iter().collect(),
+            }
+        } else {
+            let k = Value::Int(rng.range(0, LOCAL_KEYS as usize) as i64);
+            Operation {
+                txn: 1,
+                args: [("k".to_string(), k)].into_iter().collect(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::OpClass;
+    use crate::workload::analyzed::Route;
+
+    #[test]
+    fn classification_is_one_local_one_global() {
+        let app = analyzed();
+        assert_eq!(*app.class(0), OpClass::Local);
+        assert_eq!(*app.class(1), OpClass::Global);
+    }
+
+    #[test]
+    fn ratio_is_respected() {
+        let app = analyzed();
+        let mut g = MicroGenerator::new(&app, 0.7);
+        let mut rng = Rng::new(1);
+        let mut local = 0;
+        for _ in 0..10_000 {
+            let op = g.next_op(&mut rng, 0, 3);
+            if op.txn == 0 {
+                local += 1;
+            }
+        }
+        let frac = local as f64 / 10_000.0;
+        assert!((frac - 0.7).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn local_ops_route_to_client_site() {
+        let app = analyzed();
+        let mut g = MicroGenerator::new(&app, 1.0);
+        let mut rng = Rng::new(2);
+        for site in 0..3 {
+            for _ in 0..100 {
+                let op = g.next_op(&mut rng, site, 3);
+                assert_eq!(app.route(&op, 3), Route::LocalAt(site));
+            }
+        }
+    }
+
+    #[test]
+    fn bodies_execute() {
+        let app = analyzed();
+        let db = Db::new(app.spec.schema.clone());
+        seed(&db);
+        for (txn, k) in [(0usize, 5i64), (1, 9)] {
+            let tpl = &app.spec.txns[txn];
+            let stmts = tpl.stmt_map();
+            let mut h = db.begin();
+            let mut ctx = crate::workload::spec::TxnCtx::new(&mut h, &stmts);
+            let args: Bindings = [("k".to_string(), Value::Int(k))].into_iter().collect();
+            (tpl.body.as_ref().unwrap())(&mut ctx, &args).unwrap();
+            h.commit().unwrap();
+        }
+        let q = parse_statement("SELECT V FROM LOCAL_TAB WHERE K = 5").unwrap();
+        assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().scalar(), Some(&Value::Int(1)));
+        let q = parse_statement("SELECT V FROM GLOBAL_TAB WHERE G = 9").unwrap();
+        assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().scalar(), Some(&Value::Int(1)));
+    }
+}

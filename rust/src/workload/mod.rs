@@ -1,0 +1,14 @@
+//! Workloads: application specifications (transaction templates), the
+//! TPC-W and RUBiS benchmarks, the RQ3 microbenchmark, and client
+//! generators.
+
+pub mod analyzed;
+pub mod generator;
+pub mod micro;
+pub mod rubis;
+pub mod spec;
+pub mod tpcw;
+
+pub use analyzed::{AnalyzedApp, Route};
+pub use generator::{OpGenerator, ServiceModel};
+pub use spec::{AppSpec, Operation, Reply, TxnBody, TxnCtx, TxnTemplate};

@@ -1,0 +1,221 @@
+//! Application specifications: transaction templates.
+//!
+//! A [`TxnTemplate`] is the unit the paper's static analysis operates on:
+//! a named procedure with input parameters and the set of SQL statements
+//! it *may* execute (collected over all execution paths, per §3.1). The
+//! template additionally carries a procedural `body` that the runtime
+//! invokes to actually execute an operation; the body may only issue the
+//! declared statements, so the analysis surface and the executed code
+//! cannot drift apart.
+
+use crate::db::{Bindings, QueryResult, TxnError, TxnHandle};
+use crate::sqlir::{parse_statement, Stmt};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Reply returned to a client: the result of the operation.
+pub type Reply = QueryResult;
+
+/// Execution context handed to a transaction body: it can only execute
+/// statements declared in its template, by name.
+pub struct TxnCtx<'a, 'b> {
+    handle: &'b mut TxnHandle<'a>,
+    stmts: &'b HashMap<String, Stmt>,
+}
+
+impl<'a, 'b> TxnCtx<'a, 'b> {
+    pub fn new(handle: &'b mut TxnHandle<'a>, stmts: &'b HashMap<String, Stmt>) -> Self {
+        TxnCtx { handle, stmts }
+    }
+
+    /// Execute a declared statement with the given bindings.
+    pub fn exec(&mut self, stmt_name: &str, binds: &Bindings) -> Result<QueryResult, TxnError> {
+        let stmt = self
+            .stmts
+            .get(stmt_name)
+            .unwrap_or_else(|| panic!("transaction body uses undeclared statement {stmt_name:?}"));
+        self.handle.exec(stmt, binds)
+    }
+}
+
+/// Procedural glue executed inside one DBMS transaction.
+pub type TxnBody =
+    Arc<dyn Fn(&mut TxnCtx<'_, '_>, &Bindings) -> Result<Reply, TxnError> + Send + Sync>;
+
+/// One transaction type of the application.
+#[derive(Clone)]
+pub struct TxnTemplate {
+    pub name: String,
+    /// Input parameter names (candidate partitioning parameters).
+    pub params: Vec<String>,
+    /// Every SQL statement the transaction may execute, keyed by name.
+    pub stmts: Vec<(String, Stmt)>,
+    /// Relative frequency in the workload mix (used as the cost weight in
+    /// Algorithm 1 and to drive the generator).
+    pub weight: f64,
+    /// Procedural body; `None` for analysis-only templates.
+    pub body: Option<TxnBody>,
+    /// Weak (consistent-prefix) reads: this transaction's reads do not
+    /// demand co-location with their writers — it observes its server's
+    /// local prefix of the global order. Used for the paper's global
+    /// multi-partition searches (RUBiS §6); such templates are normally
+    /// combined with `Classification::force_global`.
+    pub weak_reads: bool,
+}
+
+impl std::fmt::Debug for TxnTemplate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TxnTemplate")
+            .field("name", &self.name)
+            .field("params", &self.params)
+            .field("stmts", &self.stmts.len())
+            .field("weight", &self.weight)
+            .finish()
+    }
+}
+
+impl TxnTemplate {
+    /// Build a template from SQL sources. Panics on parse errors — the
+    /// templates are compiled into the binary, so this is a build bug.
+    pub fn new(name: &str, params: &[&str], stmts: &[(&str, &str)], weight: f64) -> Self {
+        let parsed = stmts
+            .iter()
+            .map(|(n, sql)| {
+                let stmt = parse_statement(sql)
+                    .unwrap_or_else(|e| panic!("template {name}/{n}: {e}\n  sql: {sql}"));
+                (n.to_string(), stmt)
+            })
+            .collect();
+        TxnTemplate {
+            name: name.to_string(),
+            params: params.iter().map(|s| s.to_string()).collect(),
+            stmts: parsed,
+            weight,
+            body: None,
+            weak_reads: false,
+        }
+    }
+
+    /// Mark this template's reads as weak (see the field docs).
+    pub fn with_weak_reads(mut self) -> Self {
+        self.weak_reads = true;
+        self
+    }
+
+    pub fn with_body(
+        mut self,
+        body: impl Fn(&mut TxnCtx<'_, '_>, &Bindings) -> Result<Reply, TxnError> + Send + Sync + 'static,
+    ) -> Self {
+        self.body = Some(Arc::new(body));
+        self
+    }
+
+    pub fn with_weight(mut self, w: f64) -> Self {
+        self.weight = w;
+        self
+    }
+
+    /// A transaction is read-only iff all its declared statements are.
+    pub fn is_read_only(&self) -> bool {
+        self.stmts.iter().all(|(_, s)| s.is_read_only())
+    }
+
+    pub fn stmt_map(&self) -> HashMap<String, Stmt> {
+        self.stmts.iter().cloned().collect()
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p == name)
+    }
+}
+
+/// An application: schema + transaction templates (+ a human name).
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    pub name: String,
+    pub schema: crate::catalog::Schema,
+    pub txns: Vec<TxnTemplate>,
+}
+
+impl AppSpec {
+    pub fn txn_index(&self, name: &str) -> Option<usize> {
+        self.txns.iter().position(|t| t.name == name)
+    }
+
+    pub fn txn(&self, name: &str) -> &TxnTemplate {
+        &self.txns[self.txn_index(name).unwrap_or_else(|| panic!("unknown txn {name}"))]
+    }
+}
+
+/// A concrete operation: an invocation of a transaction template with
+/// bound arguments (the paper's `createCart(5)`).
+#[derive(Debug, Clone)]
+pub struct Operation {
+    /// Index into `AppSpec::txns`.
+    pub txn: usize,
+    pub args: Bindings,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{Schema, TableSchema, ValueType};
+    use crate::db::{Db, Value};
+
+    fn mini_app() -> AppSpec {
+        let schema = Schema::new(vec![TableSchema::new(
+            "SC",
+            &[("ID", ValueType::Int), ("QTY", ValueType::Int)],
+            &["ID"],
+        )]);
+        let create = TxnTemplate::new(
+            "createCart",
+            &["sid"],
+            &[("ins", "INSERT INTO SC (ID, QTY) VALUES (?sid, 0)")],
+            1.0,
+        )
+        .with_body(|ctx, args| ctx.exec("ins", args));
+        AppSpec { name: "mini".into(), schema, txns: vec![create] }
+    }
+
+    #[test]
+    fn template_parses_and_flags_read_only() {
+        let app = mini_app();
+        assert!(!app.txns[0].is_read_only());
+        assert_eq!(app.txns[0].param_index("sid"), Some(0));
+        let ro = TxnTemplate::new("q", &["x"], &[("s", "SELECT * FROM SC WHERE ID = ?x")], 1.0);
+        assert!(ro.is_read_only());
+    }
+
+    #[test]
+    fn body_executes_declared_statement() {
+        let app = mini_app();
+        let db = Db::new(app.schema.clone());
+        let tpl = &app.txns[0];
+        let mut handle = db.begin();
+        let stmts = tpl.stmt_map();
+        let mut ctx = TxnCtx::new(&mut handle, &stmts);
+        let args: Bindings = [("sid".to_string(), Value::Int(7))].into_iter().collect();
+        let r = (tpl.body.as_ref().unwrap())(&mut ctx, &args).unwrap();
+        assert_eq!(r.affected, 1);
+        handle.commit().unwrap();
+        assert_eq!(db.row_count("SC"), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "undeclared statement")]
+    fn undeclared_statement_panics() {
+        let app = mini_app();
+        let db = Db::new(app.schema.clone());
+        let mut handle = db.begin();
+        let stmts = HashMap::new();
+        let mut ctx = TxnCtx::new(&mut handle, &stmts);
+        let _ = ctx.exec("nope", &Bindings::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "template bad/x")]
+    fn parse_error_panics_with_context() {
+        TxnTemplate::new("bad", &[], &[("x", "SELEC * FORM T")], 1.0);
+    }
+}

@@ -1,0 +1,770 @@
+//! TPC-W: the online bookstore benchmark (paper §6).
+//!
+//! 10 tables, 20 transaction templates. Under Operation Partitioning the
+//! classification matches the paper's Table 1 exactly: **10 local, 5
+//! global, 5 commutative**, 13 read-only templates. Local transactions
+//! update customer data (partitioned by customer id) or manipulate
+//! shopping carts (partitioned by cart id); global transactions order
+//! books or perform administrative updates of the book list; commutative
+//! transactions read immutable tables (countries, authors, subjects).
+//!
+//! Two templates — the best-seller and new-product searches — are
+//! *forced* global (the paper's "global search" treatment, see
+//! [`crate::analysis::Classification::force_global`]); the shopping-mix
+//! weights then reproduce Table 1's operation frequencies:
+//! L ≈ 47%, G ≈ 39%, C ≈ 14%, ~30% writes.
+
+use crate::catalog::{Schema, TableSchema, ValueType};
+use crate::db::{Bindings, Db, Value};
+use crate::sqlir::parse_statement;
+use crate::util::Rng;
+use crate::workload::analyzed::AnalyzedApp;
+use crate::workload::generator::OpGenerator;
+use crate::workload::spec::{AppSpec, Operation, TxnTemplate};
+
+/// Scale parameters for seeding.
+#[derive(Debug, Clone, Copy)]
+pub struct TpcwScale {
+    pub items: i64,
+    pub customers: i64,
+    pub authors: i64,
+    pub countries: i64,
+    pub subjects: i64,
+}
+
+impl Default for TpcwScale {
+    fn default() -> Self {
+        TpcwScale { items: 1000, customers: 1000, authors: 100, countries: 92, subjects: 24 }
+    }
+}
+
+/// The 10-table TPC-W schema.
+pub fn schema() -> Schema {
+    use ValueType::*;
+    Schema::new(vec![
+        TableSchema::new(
+            "CUSTOMER",
+            &[
+                ("C_ID", Int),
+                ("C_UNAME", Str),
+                ("C_FNAME", Str),
+                ("C_LNAME", Str),
+                ("C_ADDR_ID", Int),
+                ("C_BALANCE", Float),
+                ("C_LOGIN", Int),
+            ],
+            &["C_ID"],
+        ),
+        TableSchema::new(
+            "ADDRESS",
+            &[("ADDR_ID", Int), ("ADDR_STREET", Str), ("ADDR_CITY", Str), ("ADDR_CO_ID", Int)],
+            &["ADDR_ID"],
+        ),
+        TableSchema::new("COUNTRY", &[("CO_ID", Int), ("CO_NAME", Str)], &["CO_ID"]),
+        TableSchema::new(
+            "AUTHOR",
+            &[("A_ID", Int), ("A_FNAME", Str), ("A_LNAME", Str)],
+            &["A_ID"],
+        )
+        .with_index("A_LNAME"),
+        TableSchema::new("SUBJECTS", &[("SUB_ID", Int), ("SUB_NAME", Str)], &["SUB_ID"]),
+        TableSchema::new(
+            "ITEM",
+            &[
+                ("I_ID", Int),
+                ("I_TITLE", Str),
+                ("I_A_ID", Int),
+                ("I_SUBJECT", Int),
+                ("I_COST", Float),
+                ("I_STOCK", Int),
+                ("I_TOTAL_SOLD", Int),
+                ("I_PUB_DATE", Int),
+            ],
+            &["I_ID"],
+        )
+        .with_index("I_SUBJECT"),
+        TableSchema::new(
+            "ORDERS",
+            &[
+                ("O_ID", Int),
+                ("O_C_ID", Int),
+                ("O_DATE", Int),
+                ("O_TOTAL", Float),
+                ("O_STATUS", Str),
+            ],
+            &["O_ID"],
+        )
+        .with_index("O_C_ID"),
+        TableSchema::new(
+            "ORDER_LINE",
+            &[("OL_O_ID", Int), ("OL_SEQ", Int), ("OL_I_ID", Int), ("OL_QTY", Int)],
+            &["OL_O_ID", "OL_SEQ"],
+        ),
+        TableSchema::new(
+            "CC_XACTS",
+            &[("CX_O_ID", Int), ("CX_TYPE", Str), ("CX_AMOUNT", Float)],
+            &["CX_O_ID"],
+        ),
+        TableSchema::new(
+            "SHOPPING_CART",
+            &[("SC_ID", Int), ("SC_TIME", Int), ("SC_TOTAL", Float)],
+            &["SC_ID"],
+        ),
+        // NOTE: the paper counts 10 tables; SHOPPING_CART_LINE is added
+        // by full_schema() as the composite-key line table.
+    ])
+}
+
+/// Full schema including the cart-line table (11 physical tables; the
+/// paper counts 10 — cart lines live inside the cart table there).
+pub fn full_schema() -> Schema {
+    let mut tables: Vec<TableSchema> = schema().tables().to_vec();
+    tables.push(TableSchema::new(
+        "SHOPPING_CART_LINE",
+        &[
+            ("SCL_SC_ID", ValueType::Int),
+            ("SCL_I_ID", ValueType::Int),
+            ("SCL_QTY", ValueType::Int),
+        ],
+        &["SCL_SC_ID", "SCL_I_ID"],
+    ));
+    Schema::new(tables)
+}
+
+/// Build the 20 TPC-W transaction templates with shopping-mix weights.
+pub fn templates() -> Vec<TxnTemplate> {
+    vec![
+        // ---------- Local: shopping carts (partitioned by sid) ----------
+        TxnTemplate::new(
+            "createCart",
+            &["sid", "now"],
+            &[("ins", "INSERT INTO SHOPPING_CART (SC_ID, SC_TIME, SC_TOTAL) VALUES (?sid, ?now, 0.0)")],
+            4.0,
+        )
+        .with_body(|ctx, args| ctx.exec("ins", args)),
+        TxnTemplate::new(
+            "doCart",
+            &["sid", "iid", "qty", "now"],
+            &[
+                ("upd", "UPDATE SHOPPING_CART_LINE SET SCL_QTY = ?qty WHERE SCL_SC_ID = ?sid AND SCL_I_ID = ?iid"),
+                ("ins", "INSERT INTO SHOPPING_CART_LINE (SCL_SC_ID, SCL_I_ID, SCL_QTY) VALUES (?sid, ?iid, ?qty)"),
+                ("touch", "UPDATE SHOPPING_CART SET SC_TIME = ?now WHERE SC_ID = ?sid"),
+            ],
+            10.0,
+        )
+        .with_body(|ctx, args| {
+            let r = ctx.exec("upd", args)?;
+            if r.affected == 0 {
+                // Not in the cart yet: insert (ignore a lost race on
+                // duplicate keys — same cart, same item).
+                let _ = ctx.exec("ins", args);
+            }
+            ctx.exec("touch", args)
+        }),
+        TxnTemplate::new(
+            "getCart",
+            &["sid"],
+            &[
+                ("lines", "SELECT SCL_I_ID, SCL_QTY FROM SHOPPING_CART_LINE WHERE SCL_SC_ID = ?sid"),
+                ("cart", "SELECT SC_TOTAL FROM SHOPPING_CART WHERE SC_ID = ?sid"),
+            ],
+            8.0,
+        )
+        .with_body(|ctx, args| {
+            ctx.exec("cart", args)?;
+            ctx.exec("lines", args)
+        }),
+        // ---------- Local: customers (partitioned by cid) ----------
+        TxnTemplate::new(
+            "createCustomer",
+            &["cid", "uname"],
+            &[
+                ("addr", "INSERT INTO ADDRESS (ADDR_ID, ADDR_STREET, ADDR_CITY, ADDR_CO_ID) VALUES (?cid, 'street', 'city', 1)"),
+                ("cust", "INSERT INTO CUSTOMER (C_ID, C_UNAME, C_FNAME, C_LNAME, C_ADDR_ID, C_BALANCE, C_LOGIN) VALUES (?cid, ?uname, 'f', 'l', ?cid, 0.0, 0)"),
+            ],
+            2.0,
+        )
+        .with_body(|ctx, args| {
+            ctx.exec("addr", args)?;
+            ctx.exec("cust", args)
+        }),
+        TxnTemplate::new(
+            "getCustomer",
+            &["cid"],
+            &[("q", "SELECT C_UNAME, C_FNAME, C_LNAME, C_BALANCE FROM CUSTOMER WHERE C_ID = ?cid")],
+            6.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        TxnTemplate::new(
+            "refreshSession",
+            &["cid"],
+            &[("u", "UPDATE CUSTOMER SET C_LOGIN = C_LOGIN + 1 WHERE C_ID = ?cid")],
+            2.0,
+        )
+        .with_body(|ctx, args| ctx.exec("u", args)),
+        TxnTemplate::new(
+            "getAddress",
+            &["cid"],
+            &[("q", "SELECT ADDR_STREET, ADDR_CITY, ADDR_CO_ID FROM ADDRESS WHERE ADDR_ID = ?cid")],
+            3.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        TxnTemplate::new(
+            "getMostRecentOrder",
+            &["cid"],
+            &[("q", "SELECT O_ID, O_DATE, O_TOTAL, O_STATUS FROM ORDERS WHERE O_C_ID = ?cid ORDER BY O_DATE DESC LIMIT 1")],
+            5.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        TxnTemplate::new(
+            "getOrderDetail",
+            &["oid"],
+            &[
+                ("o", "SELECT O_C_ID, O_DATE, O_TOTAL, O_STATUS FROM ORDERS WHERE O_ID = ?oid"),
+                ("lines", "SELECT OL_SEQ, OL_I_ID, OL_QTY FROM ORDER_LINE WHERE OL_O_ID = ?oid"),
+                ("cc", "SELECT CX_TYPE, CX_AMOUNT FROM CC_XACTS WHERE CX_O_ID = ?oid"),
+            ],
+            4.0,
+        )
+        .with_body(|ctx, args| {
+            ctx.exec("o", args)?;
+            ctx.exec("lines", args)?;
+            ctx.exec("cc", args)
+        }),
+        TxnTemplate::new(
+            "getItem",
+            &["iid"],
+            &[("q", "SELECT I_TITLE, I_A_ID, I_COST, I_STOCK FROM ITEM WHERE I_ID = ?iid")],
+            3.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        // ---------- Global: ordering + administration ----------
+        TxnTemplate::new(
+            "buyConfirm",
+            &["sid", "cid", "oid", "now"],
+            &[
+                ("lines", "SELECT SCL_I_ID, SCL_QTY FROM SHOPPING_CART_LINE WHERE SCL_SC_ID = ?sid"),
+                ("order", "INSERT INTO ORDERS (O_ID, O_C_ID, O_DATE, O_TOTAL, O_STATUS) VALUES (?oid, ?cid, ?now, ?derived_total, 'PENDING')"),
+                ("oline", "INSERT INTO ORDER_LINE (OL_O_ID, OL_SEQ, OL_I_ID, OL_QTY) VALUES (?oid, ?derived_seq, ?derived_iid, ?derived_qty)"),
+                ("stock", "UPDATE ITEM SET I_STOCK = I_STOCK - ?derived_qty, I_TOTAL_SOLD = I_TOTAL_SOLD + ?derived_qty WHERE I_ID = ?derived_iid"),
+                ("cc", "INSERT INTO CC_XACTS (CX_O_ID, CX_TYPE, CX_AMOUNT) VALUES (?oid, 'VISA', ?derived_total)"),
+                ("clear", "DELETE FROM SHOPPING_CART_LINE WHERE SCL_SC_ID = ?sid"),
+                ("cart", "UPDATE SHOPPING_CART SET SC_TOTAL = 0.0 WHERE SC_ID = ?sid"),
+            ],
+            10.0,
+        )
+        .with_body(|ctx, args| {
+            let lines = ctx.exec("lines", args)?;
+            let mut b = args.clone();
+            let mut total = 0.0f64;
+            for (seq, line) in lines.rows.iter().enumerate() {
+                let iid = line[0].clone();
+                let qty = line[1].as_int().unwrap_or(1).max(1);
+                total += qty as f64;
+                b.insert("derived_seq".into(), Value::Int(seq as i64));
+                b.insert("derived_iid".into(), iid);
+                b.insert("derived_qty".into(), Value::Int(qty));
+                b.insert("derived_total".into(), Value::Float(total));
+                ctx.exec("oline", &b)?;
+                ctx.exec("stock", &b)?;
+            }
+            b.insert("derived_total".into(), Value::Float(total));
+            ctx.exec("order", &b)?;
+            ctx.exec("cc", &b)?;
+            ctx.exec("clear", &b)?;
+            ctx.exec("cart", &b)
+        }),
+        TxnTemplate::new(
+            "adminRestock",
+            &["iid", "q"],
+            &[("u", "UPDATE ITEM SET I_STOCK = I_STOCK + ?q WHERE I_ID = ?iid")],
+            1.0,
+        )
+        .with_body(|ctx, args| ctx.exec("u", args)),
+        TxnTemplate::new(
+            "adminUpdateItem",
+            &["iid", "cost", "now"],
+            &[("u", "UPDATE ITEM SET I_COST = ?cost, I_PUB_DATE = ?now WHERE I_ID = ?iid")],
+            1.0,
+        )
+        .with_body(|ctx, args| ctx.exec("u", args)),
+        // Multi-partition searches: forced global (paper §6).
+        TxnTemplate::new(
+            "getBestSellers",
+            &[],
+            &[("q", "SELECT I_ID, I_TITLE, I_TOTAL_SOLD FROM ITEM ORDER BY I_TOTAL_SOLD DESC LIMIT 50")],
+            13.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        TxnTemplate::new(
+            "getNewProducts",
+            &["subject"],
+            &[("q", "SELECT I_ID, I_TITLE, I_PUB_DATE FROM ITEM WHERE I_SUBJECT = ?subject ORDER BY I_PUB_DATE DESC LIMIT 50")],
+            14.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        // ---------- Commutative: immutable reference data ----------
+        TxnTemplate::new(
+            "getCountries",
+            &[],
+            &[("q", "SELECT CO_ID, CO_NAME FROM COUNTRY ORDER BY CO_NAME LIMIT 100")],
+            2.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        TxnTemplate::new(
+            "getCountry",
+            &["co"],
+            &[("q", "SELECT CO_NAME FROM COUNTRY WHERE CO_ID = ?co")],
+            3.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        TxnTemplate::new(
+            "getAuthor",
+            &["aid"],
+            &[("q", "SELECT A_FNAME, A_LNAME FROM AUTHOR WHERE A_ID = ?aid")],
+            4.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        TxnTemplate::new(
+            "searchByAuthor",
+            &["lname"],
+            &[("q", "SELECT A_ID, A_FNAME FROM AUTHOR WHERE A_LNAME = ?lname")],
+            3.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        TxnTemplate::new(
+            "getSubjects",
+            &[],
+            &[("q", "SELECT SUB_ID, SUB_NAME FROM SUBJECTS ORDER BY SUB_ID LIMIT 50")],
+            2.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+    ]
+}
+
+/// Analyze TPC-W: run Operation Partitioning and apply the paper's
+/// forced-global searches.
+pub fn analyzed() -> AnalyzedApp {
+    let spec = AppSpec { name: "tpcw".into(), schema: full_schema(), txns: templates() };
+    let mut app = AnalyzedApp::analyze(spec);
+    app.force_global("getBestSellers");
+    app.force_global("getNewProducts");
+    app
+}
+
+/// Seed a server database at the given scale.
+pub fn seed(db: &Db, scale: TpcwScale) {
+    let exec = |sql: &str, binds: &Bindings| {
+        let stmt = parse_statement(sql).unwrap();
+        db.exec_auto(&stmt, binds).unwrap();
+    };
+    let mut rng = Rng::new(0x79C3u64);
+    for co in 0..scale.countries {
+        exec(
+            "INSERT INTO COUNTRY (CO_ID, CO_NAME) VALUES (?i, ?n)",
+            &[
+                ("i".to_string(), Value::Int(co)),
+                ("n".to_string(), Value::Str(format!("country{co}"))),
+            ]
+            .into_iter()
+            .collect(),
+        );
+    }
+    for s in 0..scale.subjects {
+        exec(
+            "INSERT INTO SUBJECTS (SUB_ID, SUB_NAME) VALUES (?i, ?n)",
+            &[
+                ("i".to_string(), Value::Int(s)),
+                ("n".to_string(), Value::Str(format!("subject{s}"))),
+            ]
+            .into_iter()
+            .collect(),
+        );
+    }
+    for a in 0..scale.authors {
+        exec(
+            "INSERT INTO AUTHOR (A_ID, A_FNAME, A_LNAME) VALUES (?i, ?f, ?l)",
+            &[
+                ("i".to_string(), Value::Int(a)),
+                ("f".to_string(), Value::Str(format!("first{a}"))),
+                ("l".to_string(), Value::Str(format!("last{}", a % 37))),
+            ]
+            .into_iter()
+            .collect(),
+        );
+    }
+    for i in 0..scale.items {
+        exec(
+            "INSERT INTO ITEM (I_ID, I_TITLE, I_A_ID, I_SUBJECT, I_COST, I_STOCK, I_TOTAL_SOLD, I_PUB_DATE) VALUES (?i, ?t, ?a, ?s, ?c, ?st, 0, ?d)",
+            &[
+                ("i".to_string(), Value::Int(i)),
+                ("t".to_string(), Value::Str(format!("book{i}"))),
+                ("a".to_string(), Value::Int(i % scale.authors)),
+                ("s".to_string(), Value::Int(i % scale.subjects)),
+                ("c".to_string(), Value::Float(5.0 + rng.f64() * 50.0)),
+                ("st".to_string(), Value::Int(500 + rng.range(0, 500) as i64)),
+                ("d".to_string(), Value::Int(rng.range(0, 10_000) as i64)),
+            ]
+            .into_iter()
+            .collect(),
+        );
+    }
+    for c in 0..scale.customers {
+        exec(
+            "INSERT INTO ADDRESS (ADDR_ID, ADDR_STREET, ADDR_CITY, ADDR_CO_ID) VALUES (?i, 's', 'c', ?co)",
+            &[
+                ("i".to_string(), Value::Int(c)),
+                ("co".to_string(), Value::Int(c % scale.countries)),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        exec(
+            "INSERT INTO CUSTOMER (C_ID, C_UNAME, C_FNAME, C_LNAME, C_ADDR_ID, C_BALANCE, C_LOGIN) VALUES (?i, ?u, 'f', 'l', ?i, 0.0, 0)",
+            &[
+                ("i".to_string(), Value::Int(c)),
+                ("u".to_string(), Value::Str(format!("user{c}"))),
+            ]
+            .into_iter()
+            .collect(),
+        );
+    }
+}
+
+/// Shopping-mix operation generator with site-affine ids.
+pub struct TpcwGenerator {
+    scale: TpcwScale,
+    /// Template indices resolved once.
+    idx: std::collections::HashMap<String, usize>,
+    weights: Vec<f64>,
+    /// Per-site monotonically increasing id bases (server-specific ids).
+    next_cart: Vec<i64>,
+    next_customer: Vec<i64>,
+    next_order: Vec<i64>,
+    route_helper: AnalyzedApp,
+}
+
+impl TpcwGenerator {
+    pub fn new(app: &AnalyzedApp, scale: TpcwScale, max_sites: usize) -> Self {
+        let idx = app
+            .spec
+            .txns
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        let weights = app.spec.txns.iter().map(|t| t.weight).collect();
+        TpcwGenerator {
+            scale,
+            idx,
+            weights,
+            next_cart: vec![1_000_000; max_sites],
+            next_customer: vec![2_000_000; max_sites],
+            next_order: vec![3_000_000; max_sites],
+            route_helper: app.clone(),
+        }
+    }
+
+    fn t(&self, name: &str) -> usize {
+        self.idx[name]
+    }
+
+    /// Stagger fresh id bases so concurrent generator instances (one per
+    /// client thread) never collide on cart/customer/order ids.
+    pub fn with_stream(mut self, stream: u64) -> Self {
+        let off = (stream as i64) * 50_000_000;
+        for v in self
+            .next_cart
+            .iter_mut()
+            .chain(self.next_customer.iter_mut())
+            .chain(self.next_order.iter_mut())
+        {
+            *v += off;
+        }
+        self
+    }
+
+    /// Fresh id routed to the site's server.
+    fn fresh_id(&mut self, counter: &mut Vec<i64>, site: usize, n: usize) -> Value
+    where
+        Self: Sized,
+    {
+        let base = counter[site];
+        counter[site] += 1;
+        self.route_helper.value_routing_to(base, site % n, n)
+    }
+}
+
+fn b(pairs: Vec<(&str, Value)>) -> Bindings {
+    pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+impl OpGenerator for TpcwGenerator {
+    fn next_op(&mut self, rng: &mut Rng, site: usize, n: usize) -> Operation {
+        let txn = rng.weighted(&self.weights);
+        let name = self.route_helper.spec.txns[txn].name.clone();
+        // Site-affine existing ids: ids previously created at this site
+        // (approximated by sampling the site's residue class).
+        let exist_cart = {
+            let base = 1_000_000 + rng.range(0, 10_000) as i64;
+            self.route_helper.value_routing_to(base, site % n, n)
+        };
+        let exist_customer = {
+            let base = 2_000_000 + rng.range(0, 10_000) as i64;
+            self.route_helper.value_routing_to(base, site % n, n)
+        };
+        let exist_order = {
+            let base = 3_000_000 + rng.range(0, 10_000) as i64;
+            self.route_helper.value_routing_to(base, site % n, n)
+        };
+        let now = Value::Int(rng.range(0, 1_000_000) as i64);
+        let iid = Value::Int(rng.range(0, self.scale.items as usize) as i64);
+        let args = match name.as_str() {
+            "createCart" => {
+                let mut c = self.next_cart.clone();
+                let sid = self.fresh_id(&mut c, site, n);
+                self.next_cart = c;
+                b(vec![("sid", sid), ("now", now)])
+            }
+            "doCart" => b(vec![
+                ("sid", exist_cart),
+                ("iid", iid),
+                ("qty", Value::Int(1 + rng.range(0, 5) as i64)),
+                ("now", now),
+            ]),
+            "getCart" => b(vec![("sid", exist_cart)]),
+            "createCustomer" => {
+                let mut c = self.next_customer.clone();
+                let cid = self.fresh_id(&mut c, site, n);
+                self.next_customer = c;
+                let uname = Value::Str(format!("u{}", cid.as_int().unwrap_or(0)));
+                b(vec![("cid", cid), ("uname", uname)])
+            }
+            "getCustomer" | "refreshSession" | "getAddress" | "getMostRecentOrder" => {
+                // Mix of seeded and created customers.
+                let cid = if rng.chance(0.5) {
+                    Value::Int(rng.range(0, self.scale.customers as usize) as i64)
+                } else {
+                    exist_customer
+                };
+                b(vec![("cid", cid)])
+            }
+            "getOrderDetail" => b(vec![("oid", exist_order)]),
+            "getItem" => b(vec![("iid", iid)]),
+            "buyConfirm" => {
+                let mut c = self.next_order.clone();
+                let oid = self.fresh_id(&mut c, site, n);
+                self.next_order = c;
+                b(vec![("sid", exist_cart), ("cid", exist_customer), ("oid", oid), ("now", now)])
+            }
+            "adminRestock" => b(vec![("iid", iid), ("q", Value::Int(50))]),
+            "adminUpdateItem" => {
+                b(vec![("iid", iid), ("cost", Value::Float(9.99)), ("now", now)])
+            }
+            "getNewProducts" => {
+                b(vec![("subject", Value::Int(rng.range(0, self.scale.subjects as usize) as i64))])
+            }
+            "getCountry" => {
+                b(vec![("co", Value::Int(rng.range(0, self.scale.countries as usize) as i64))])
+            }
+            "getAuthor" => {
+                b(vec![("aid", Value::Int(rng.range(0, self.scale.authors as usize) as i64))])
+            }
+            "searchByAuthor" => {
+                b(vec![("lname", Value::Str(format!("last{}", rng.range(0, 37))))])
+            }
+            // getBestSellers, getCountries, getSubjects: no parameters.
+            _ => Bindings::new(),
+        };
+        let _ = self.t("createCart"); // keep idx used
+        Operation { txn, args }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::OpClass;
+
+    #[test]
+    fn classification_matches_paper_table1() {
+        let app = analyzed();
+        let (l, g, c, lg, ro, total) = app.table1_row();
+        assert_eq!(total, 20, "TPC-W has 20 transactions");
+        assert_eq!(l, 10, "10 local (paper Table 1): {:?}", names_by_class(&app));
+        assert_eq!(g, 5, "5 global: {:?}", names_by_class(&app));
+        assert_eq!(c, 5, "5 commutative: {:?}", names_by_class(&app));
+        assert_eq!(lg, 0, "TPC-W uses no double-key scheme");
+        assert_eq!(ro, 13, "13 read-only templates");
+    }
+
+    fn names_by_class(app: &AnalyzedApp) -> Vec<(String, OpClass)> {
+        app.spec
+            .txns
+            .iter()
+            .zip(&app.classification.classes)
+            .map(|(t, c)| (t.name.clone(), c.clone()))
+            .collect()
+    }
+
+    #[test]
+    fn carts_partition_by_sid_customers_by_cid() {
+        let app = analyzed();
+        let t = app.spec.txn_index("doCart").unwrap();
+        let k = app.partitioning.choice[t].unwrap();
+        assert_eq!(app.spec.txns[t].params[k], "sid");
+        let t = app.spec.txn_index("getCustomer").unwrap();
+        let k = app.classification.routing_params[t][0];
+        assert_eq!(app.spec.txns[t].params[k], "cid");
+    }
+
+    #[test]
+    fn frequencies_match_paper() {
+        let app = analyzed();
+        let total: f64 = app.spec.txns.iter().map(|t| t.weight).sum();
+        let freq = |class: OpClass| -> f64 {
+            app.spec
+                .txns
+                .iter()
+                .zip(&app.classification.classes)
+                .filter(|(_, c)| **c == class)
+                .map(|(t, _)| t.weight)
+                .sum::<f64>()
+                / total
+        };
+        let l = freq(OpClass::Local);
+        let g = freq(OpClass::Global);
+        let c = freq(OpClass::Commutative);
+        assert!((l - 0.47).abs() < 0.02, "L freq {l}");
+        assert!((g - 0.39).abs() < 0.02, "G freq {g}");
+        assert!((c - 0.14).abs() < 0.02, "C freq {c}");
+        // ~30% writes (shopping mix).
+        let w: f64 = app
+            .spec
+            .txns
+            .iter()
+            .filter(|t| !t.is_read_only())
+            .map(|t| t.weight)
+            .sum::<f64>()
+            / total;
+        assert!((w - 0.30).abs() < 0.03, "write freq {w}");
+    }
+
+    #[test]
+    fn seed_and_execute_key_transactions() {
+        let app = analyzed();
+        let db = Db::new(app.spec.schema.clone());
+        seed(&db, TpcwScale { items: 50, customers: 20, authors: 10, countries: 5, subjects: 4 });
+        assert_eq!(db.row_count("ITEM"), 50);
+
+        let run = |name: &str, args: Bindings| -> crate::db::QueryResult {
+            let t = app.spec.txn_index(name).unwrap();
+            let tpl = &app.spec.txns[t];
+            let stmts = tpl.stmt_map();
+            let mut h = db.begin();
+            let mut ctx = crate::workload::spec::TxnCtx::new(&mut h, &stmts);
+            let r = (tpl.body.as_ref().unwrap())(&mut ctx, &args).unwrap();
+            h.commit().unwrap();
+            r
+        };
+
+        run("createCart", b(vec![("sid", Value::Int(100)), ("now", Value::Int(1))]));
+        run(
+            "doCart",
+            b(vec![
+                ("sid", Value::Int(100)),
+                ("iid", Value::Int(3)),
+                ("qty", Value::Int(2)),
+                ("now", Value::Int(2)),
+            ]),
+        );
+        let cart = run("getCart", b(vec![("sid", Value::Int(100))]));
+        assert_eq!(cart.rows.len(), 1);
+        // Buy: stock of item 3 decreases by 2, order materializes.
+        let before = db
+            .exec_auto(
+                &parse_statement("SELECT I_STOCK FROM ITEM WHERE I_ID = 3").unwrap(),
+                &Bindings::new(),
+            )
+            .unwrap()
+            .scalar()
+            .unwrap()
+            .as_int()
+            .unwrap();
+        run(
+            "buyConfirm",
+            b(vec![
+                ("sid", Value::Int(100)),
+                ("cid", Value::Int(5)),
+                ("oid", Value::Int(900)),
+                ("now", Value::Int(3)),
+            ]),
+        );
+        let after = db
+            .exec_auto(
+                &parse_statement("SELECT I_STOCK FROM ITEM WHERE I_ID = 3").unwrap(),
+                &Bindings::new(),
+            )
+            .unwrap()
+            .scalar()
+            .unwrap()
+            .as_int()
+            .unwrap();
+        assert_eq!(after, before - 2);
+        assert_eq!(db.row_count("ORDERS"), 1);
+        assert_eq!(db.row_count("CC_XACTS"), 1);
+        // Cart emptied.
+        let cart = run("getCart", b(vec![("sid", Value::Int(100))]));
+        assert_eq!(cart.rows.len(), 0);
+        // Order readable by detail view.
+        let detail = run("getOrderDetail", b(vec![("oid", Value::Int(900))]));
+        assert_eq!(detail.rows.len(), 1);
+    }
+
+    #[test]
+    fn generator_produces_valid_routable_ops() {
+        let app = analyzed();
+        let mut g = TpcwGenerator::new(&app, TpcwScale::default(), 4);
+        let mut rng = Rng::new(5);
+        let mut class_counts = [0usize; 3]; // local-ish, global, any
+        for i in 0..2000 {
+            let op = g.next_op(&mut rng, i % 4, 4);
+            assert!(op.txn < 20);
+            match app.route(&op, 4) {
+                crate::workload::analyzed::Route::LocalAt(s) => {
+                    assert!(s < 4);
+                    class_counts[0] += 1;
+                }
+                crate::workload::analyzed::Route::GlobalAt(_) => class_counts[1] += 1,
+                crate::workload::analyzed::Route::Any => class_counts[2] += 1,
+            }
+        }
+        // Mix roughly L/G/C = 47/39/14.
+        let total = 2000.0;
+        assert!((class_counts[0] as f64 / total - 0.47).abs() < 0.08, "{class_counts:?}");
+        assert!((class_counts[1] as f64 / total - 0.39).abs() < 0.08, "{class_counts:?}");
+    }
+
+    #[test]
+    fn site_affinity_routes_local_ops_home() {
+        let app = analyzed();
+        let mut g = TpcwGenerator::new(&app, TpcwScale::default(), 4);
+        let mut rng = Rng::new(9);
+        let mut home = 0;
+        let mut total = 0;
+        for _ in 0..1000 {
+            let site = rng.range(0, 4);
+            let op = g.next_op(&mut rng, site, 4);
+            if app.spec.txns[op.txn].name == "doCart" {
+                total += 1;
+                if let crate::workload::analyzed::Route::LocalAt(s) = app.route(&op, 4) {
+                    if s == site {
+                        home += 1;
+                    }
+                }
+            }
+        }
+        assert!(total > 30);
+        assert_eq!(home, total, "cart ids must route to the client's site");
+    }
+}

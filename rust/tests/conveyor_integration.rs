@@ -1,0 +1,135 @@
+//! Integration: full TPC-W / RUBiS applications on both runtimes — the
+//! real-threads deployment (real concurrency) and the virtual-time
+//! simulator with real execution enabled — checking cross-layer
+//! consistency between analysis, routing, execution and replication.
+
+use elia::conveyor::{ConveyorConfig, ConveyorSim, DeployConfig, Deployment};
+use elia::db::Bindings;
+use elia::simnet::clients::ClientsConfig;
+use elia::simnet::latency::Topology;
+use elia::sqlir::parse_statement;
+use elia::util::{Rng, VTime};
+use elia::workload::generator::{OpGenerator, ServiceModel};
+use elia::workload::{rubis, tpcw};
+use std::sync::Arc;
+
+#[test]
+fn tpcw_on_real_threads_converges() {
+    let app = Arc::new(tpcw::analyzed());
+    let scale = tpcw::TpcwScale { items: 100, customers: 100, ..Default::default() };
+    let dep = Deployment::start(
+        Arc::clone(&app),
+        DeployConfig { n_servers: 3, ..Default::default() },
+        |db| tpcw::seed(db, scale),
+    );
+    let mut handles = Vec::new();
+    for client in 0..6u64 {
+        let dep = Arc::clone(&dep);
+        let app = Arc::clone(&app);
+        handles.push(std::thread::spawn(move || {
+            let mut gen = tpcw::TpcwGenerator::new(&app, scale, 3).with_stream(client);
+            let mut rng = Rng::new(client);
+            for _ in 0..80 {
+                let op = gen.next_op(&mut rng, client as usize % 3, 3);
+                let _ = dep.submit(op); // benign semantic errors allowed
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    dep.shutdown();
+    // The replicated ITEM table must be identical everywhere.
+    let q = parse_statement("SELECT SUM(I_STOCK) FROM ITEM").unwrap();
+    let v0 = dep.db(0).exec_auto(&q, &Bindings::new()).unwrap().scalar().unwrap().clone();
+    for s in 1..3 {
+        let v = dep.db(s).exec_auto(&q, &Bindings::new()).unwrap().scalar().unwrap().clone();
+        assert_eq!(v, v0, "server {s} ITEM stock diverged");
+    }
+}
+
+#[test]
+fn rubis_on_simulator_with_real_execution() {
+    let app = rubis::analyzed();
+    let scale = rubis::RubisScale { users: 200, items: 400, ..Default::default() };
+    let cfg = ConveyorConfig {
+        execute_real: true,
+        service: ServiceModel::fixed(5.0),
+        warmup: VTime::from_secs(1),
+        horizon: VTime::from_secs(6),
+        ..Default::default()
+    };
+    let report = ConveyorSim::new(
+        &app,
+        Topology::lan(3),
+        ClientsConfig { n: 24, think_ms: 20.0, seed: 5, ..Default::default() },
+        cfg,
+        Box::new(rubis::RubisGenerator::new(&app, scale)),
+        |db| rubis::seed(db, scale),
+    )
+    .run();
+    assert!(report.metrics.completed > 300, "completed={}", report.metrics.completed);
+    // Sim executions are sequential per event; aborts should be rare
+    // (only duplicate-key collisions on generated ids).
+    assert!(
+        (report.aborts as f64) < report.metrics.completed as f64 * 0.05,
+        "aborts={} completed={}",
+        report.aborts,
+        report.metrics.completed
+    );
+}
+
+#[test]
+fn runtime_global_fraction_matches_static_frequencies() {
+    // The routed global share of generated TPC-W ops must track Table 1's
+    // 39% within tolerance at several deployment sizes.
+    let app = tpcw::analyzed();
+    for n in [2usize, 4, 8] {
+        let mut gen = tpcw::TpcwGenerator::new(&app, tpcw::TpcwScale::default(), n);
+        let mut rng = Rng::new(n as u64);
+        let mut global = 0usize;
+        let total = 3000;
+        for i in 0..total {
+            let op = gen.next_op(&mut rng, i % n, n);
+            if app.route(&op, n).is_global() {
+                global += 1;
+            }
+        }
+        let frac = global as f64 / total as f64;
+        assert!((frac - 0.39).abs() < 0.05, "n={n}: global frac {frac}");
+    }
+}
+
+#[test]
+fn wan_deployment_with_injected_hop_latency() {
+    // Real threads with a real 5ms token hop: global ops must still
+    // complete and replicate correctly (slower, but correct).
+    let app = Arc::new(tpcw::analyzed());
+    let scale = tpcw::TpcwScale { items: 50, customers: 50, ..Default::default() };
+    let dep = Deployment::start(
+        Arc::clone(&app),
+        DeployConfig {
+            n_servers: 3,
+            hop_delay: std::time::Duration::from_millis(5),
+            ..Default::default()
+        },
+        |db| tpcw::seed(db, scale),
+    );
+    let mut gen = tpcw::TpcwGenerator::new(&app, scale, 3);
+    let mut rng = Rng::new(1);
+    let t0 = std::time::Instant::now();
+    let mut globals = 0;
+    for i in 0..60 {
+        let op = gen.next_op(&mut rng, i % 3, 3);
+        if app.route(&op, 3).is_global() {
+            globals += 1;
+        }
+        let _ = dep.submit(op);
+    }
+    assert!(globals > 5, "need some globals, got {globals}");
+    // Each global waits for at least one hop (5ms+); the run must take
+    // visibly longer than a zero-latency run but still finish promptly.
+    let elapsed = t0.elapsed();
+    assert!(elapsed >= std::time::Duration::from_millis(15), "{elapsed:?}");
+    dep.shutdown();
+}
