@@ -1,0 +1,25 @@
+# Developer entry points. `make check` is the pre-PR gate (see ROADMAP.md).
+
+.PHONY: check build test clippy bench artifacts
+
+# Pre-PR gate: release build + tests + lint, all from the rust crate.
+check: build test clippy
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+clippy:
+	cd rust && cargo clippy -- -D warnings
+
+# Hot-path micro-benchmarks; writes BENCH_hotpath.json in rust/.
+bench:
+	cd rust && cargo bench --bench hotpath
+
+# AOT-compile the Pallas partition-cost model to HLO text for the
+# (feature-gated) PJRT runtime. Needs jax; see python/compile/aot.py.
+artifacts:
+	mkdir -p artifacts
+	cd python && python3 -m compile.aot --out ../artifacts/partition_cost.hlo.txt

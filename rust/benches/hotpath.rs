@@ -1,39 +1,69 @@
 //! Hot-path micro-benchmarks (§Perf): per-component cost of the paths
 //! that bound end-to-end performance. Hand-rolled timing (criterion is
 //! unavailable offline): median of repeated batches.
+//!
+//! Besides stdout, results are written to `BENCH_hotpath.json`
+//! (`name -> ns/op`) so the perf trajectory is tracked across PRs.
 
 use elia::catalog::{Schema, TableSchema, ValueType};
-use elia::db::{Bindings, Db, Value};
+use elia::db::{BindSlots, Bindings, Db, Value};
 use elia::simnet::events::EventQueue;
 use elia::sqlir::parse_statement;
 use elia::util::{Rng, VTime};
 use std::time::Instant;
 
-fn bench(name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
-    // Warm up, then take the median of 5 batches.
-    for _ in 0..(iters / 10).max(1) {
-        f();
-    }
-    let mut samples = Vec::new();
-    for _ in 0..5 {
-        let t0 = Instant::now();
-        for _ in 0..iters {
+struct Bench {
+    results: Vec<(String, f64)>,
+}
+
+impl Bench {
+    fn run(&mut self, name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
+        // Warm up, then take the median of 5 batches.
+        for _ in 0..(iters / 10).max(1) {
             f();
         }
-        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        let mut samples = Vec::new();
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let per_op = samples[2];
+        println!(
+            "{name:<46} {:>12.0} ns/op {:>14.0} ops/s",
+            per_op * 1e9,
+            1.0 / per_op
+        );
+        self.results.push((name.to_string(), per_op * 1e9));
+        per_op
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let per_op = samples[2];
-    println!(
-        "{name:<46} {:>12.0} ns/op {:>14.0} ops/s",
-        per_op * 1e9,
-        1.0 / per_op
-    );
-    per_op
+
+    fn record(&mut self, name: &str, ns: f64) {
+        self.results.push((name.to_string(), ns));
+    }
+
+    /// Write `name -> ns/op` as JSON (no serde offline: the names contain
+    /// no characters that need escaping beyond quotes).
+    fn write_json(&self, path: &str) {
+        let mut s = String::from("{\n");
+        for (i, (name, ns)) in self.results.iter().enumerate() {
+            let sep = if i + 1 < self.results.len() { "," } else { "" };
+            s.push_str(&format!("  \"{}\": {:.1}{}\n", name.replace('"', "'"), ns, sep));
+        }
+        s.push_str("}\n");
+        match std::fs::write(path, &s) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nwarning: could not write {path}: {e}"),
+        }
+    }
 }
 
 fn main() {
     println!("=== hotpath micro-benchmarks ===");
+    let mut bench = Bench { results: Vec::new() };
 
     // --- DB engine: point read / point update / insert ---
     let schema = Schema::new(vec![TableSchema::new(
@@ -42,57 +72,62 @@ fn main() {
         &["K"],
     )]);
     let db = Db::new(schema);
-    let ins = parse_statement("INSERT INTO T (K, V, S) VALUES (?k, 0, 'x')").unwrap();
+    let ins = db.prepare_sql("INSERT INTO T (K, V, S) VALUES (?k, 0, 'x')").unwrap();
     for k in 0..10_000i64 {
-        let b: Bindings = [("k".to_string(), Value::Int(k))].into_iter().collect();
-        db.exec_auto(&ins, &b).unwrap();
+        db.exec_auto_prepared(&ins, &BindSlots(vec![Value::Int(k)])).unwrap();
     }
-    let sel = parse_statement("SELECT V FROM T WHERE K = ?k").unwrap();
-    let upd = parse_statement("UPDATE T SET V = V + 1 WHERE K = ?k").unwrap();
+    let sel = db.prepare_sql("SELECT V FROM T WHERE K = ?k").unwrap();
+    let upd = db.prepare_sql("UPDATE T SET V = V + 1 WHERE K = ?k").unwrap();
     let mut rng = Rng::new(7);
 
-    bench("db: point SELECT (serializable txn)", 50_000, || {
-        let b: Bindings =
-            [("k".to_string(), Value::Int(rng.range(0, 10_000) as i64))].into_iter().collect();
-        db.exec_auto(&sel, &b).unwrap();
+    bench.run("db: point SELECT (serializable txn)", 50_000, || {
+        let slots = BindSlots(vec![Value::Int(rng.range(0, 10_000) as i64)]);
+        db.exec_auto_prepared(&sel, &slots).unwrap();
     });
-    bench("db: point UPDATE (serializable txn)", 50_000, || {
-        let b: Bindings =
-            [("k".to_string(), Value::Int(rng.range(0, 10_000) as i64))].into_iter().collect();
-        db.exec_auto(&upd, &b).unwrap();
+    bench.run("db: point UPDATE (serializable txn)", 50_000, || {
+        let slots = BindSlots(vec![Value::Int(rng.range(0, 10_000) as i64)]);
+        db.exec_auto_prepared(&upd, &slots).unwrap();
     });
-    bench("db: full txn w/ state-update extraction", 20_000, || {
+    // The compat path compiles + name-binds per call — kept as a
+    // reference line for what prepare-once saves.
+    let sel_stmt = parse_statement("SELECT V FROM T WHERE K = ?k").unwrap();
+    bench.run("db: point SELECT (unprepared compat path)", 50_000, || {
         let b: Bindings =
             [("k".to_string(), Value::Int(rng.range(0, 10_000) as i64))].into_iter().collect();
+        db.exec_auto(&sel_stmt, &b).unwrap();
+    });
+    bench.run("db: full txn w/ state-update extraction", 20_000, || {
+        let slots = BindSlots(vec![Value::Int(rng.range(0, 10_000) as i64)]);
         let mut t = db.begin();
-        t.exec(&upd, &b).unwrap();
+        t.exec_prepared(&upd, &slots).unwrap();
         let u = t.commit().unwrap();
         assert_eq!(u.len(), 1);
     });
 
     // --- apply_update (replication path) ---
-    let upd_k0: Bindings = [("k".to_string(), Value::Int(0))].into_iter().collect();
-    let mut t = db.begin();
-    t.exec(&upd, &upd_k0).unwrap();
-    let update = t.commit().unwrap();
-    bench("db: apply_update (1 record)", 50_000, || {
+    let update = {
+        let mut t = db.begin();
+        t.exec_prepared(&upd, &BindSlots(vec![Value::Int(0)])).unwrap();
+        t.commit().unwrap()
+    };
+    bench.run("db: apply_update (1 record)", 50_000, || {
         db.apply_update(&update).unwrap();
     });
 
     // --- lock manager ---
     let lm = elia::db::LockManager::default();
     let mut txn_id = 1u64;
-    bench("lockmgr: acquire+release X", 100_000, || {
+    bench.run("lockmgr: acquire+release X", 100_000, || {
         use elia::db::lockmgr::{LockMode, LockTarget};
         use elia::db::Key;
         txn_id += 1;
-        lm.acquire(txn_id, LockTarget::Row(0, Key::single(Value::Int((txn_id % 512) as i64))), LockMode::X)
-            .unwrap();
-        lm.release_all(txn_id);
+        let target = LockTarget::row(0, &Key::single(Value::Int((txn_id % 512) as i64)));
+        lm.acquire(txn_id, target, LockMode::X).unwrap();
+        lm.release(txn_id, &[target]);
     });
 
     // --- simnet event loop ---
-    bench("simnet: schedule+pop event", 200_000, || {
+    bench.run("simnet: schedule+pop event", 200_000, || {
         let mut q: EventQueue<u32> = EventQueue::new();
         for i in 0..8 {
             q.schedule(VTime::from_micros(i), i as u32);
@@ -104,7 +139,7 @@ fn main() {
     let app = elia::workload::tpcw::analyzed();
     let tensor = elia::analysis::elim::EliminationTensor::build(&app.spec.txns, &app.matrix);
     let assign: Vec<Option<usize>> = app.partitioning.choice.clone();
-    bench("analysis: scalar cost(P) on TPC-W tensor", 100_000, || {
+    bench.run("analysis: scalar cost(P) on TPC-W tensor", 100_000, || {
         let c = elia::analysis::score::cost(&tensor, &assign);
         assert!(c >= 0.0);
     });
@@ -114,7 +149,7 @@ fn main() {
         txn: app.spec.txn_index("doCart").unwrap(),
         args: [("sid".to_string(), Value::Int(42))].into_iter().collect(),
     };
-    bench("router: route(op) TPC-W doCart", 200_000, || {
+    bench.run("router: route(op) TPC-W doCart", 200_000, || {
         let r = app.route(&op, 8);
         assert!(!matches!(r, elia::workload::analyzed::Route::Any));
     });
@@ -138,6 +173,7 @@ fn main() {
             256.0 / per_exec,
             per_exec * 1e3,
         );
+        bench.record("pjrt: artifact batch scoring (ns/cand)", per_exec / 256.0 * 1e9);
     } else {
         println!("pjrt: artifact not built (run `make artifacts`) — skipped");
     }
@@ -154,5 +190,8 @@ fn main() {
             wall,
             rows.len()
         );
+        bench.record("sim: fig6 quick point (wall ns)", wall * 1e9);
     }
+
+    bench.write_json("BENCH_hotpath.json");
 }

@@ -75,10 +75,10 @@ struct ServerNode {
 /// A running multi-server Eliá deployment.
 pub struct Deployment {
     app: Arc<AnalyzedApp>,
-    /// Statement maps precomputed per template (perf: building a HashMap
-    /// per submitted operation was ~8% of the request path — see
-    /// EXPERIMENTS.md §Perf).
-    stmt_maps: Vec<std::collections::HashMap<String, crate::sqlir::Stmt>>,
+    /// Per-template statements compiled once against the schema
+    /// (prepare-once: plans, column indices and bind slots are resolved
+    /// here, never on the request path).
+    stmt_maps: Vec<crate::workload::spec::PreparedStmts>,
     cfg: DeployConfig,
     servers: Vec<Arc<ServerNode>>,
     stop: Arc<AtomicBool>,
@@ -108,7 +108,7 @@ impl Deployment {
             })
             .collect();
         let stop = Arc::new(AtomicBool::new(false));
-        let stmt_maps = app.spec.txns.iter().map(|t| t.stmt_map()).collect();
+        let stmt_maps = app.spec.txns.iter().map(|t| t.prepared_map(&app.spec.schema)).collect();
         let dep = Arc::new(Deployment {
             app,
             stmt_maps,
@@ -411,16 +411,15 @@ mod tests {
     }
 
     fn seed(db: &Db) {
-        let ins_cart = parse_statement("INSERT INTO CARTS (CID, QTY) VALUES (?c, 0)").unwrap();
+        use crate::db::BindSlots;
+        let ins_cart = db.prepare_sql("INSERT INTO CARTS (CID, QTY) VALUES (?c, 0)").unwrap();
         let ins_stock =
-            parse_statement("INSERT INTO STOCK (ITEM, LEVEL) VALUES (?i, 10000)").unwrap();
+            db.prepare_sql("INSERT INTO STOCK (ITEM, LEVEL) VALUES (?i, 10000)").unwrap();
         for c in 0..512i64 {
-            let b: Bindings = [("c".to_string(), Value::Int(c))].into_iter().collect();
-            db.exec_auto(&ins_cart, &b).unwrap();
+            db.exec_auto_prepared(&ins_cart, &BindSlots(vec![Value::Int(c)])).unwrap();
         }
         for i in 0..4i64 {
-            let b: Bindings = [("i".to_string(), Value::Int(i))].into_iter().collect();
-            db.exec_auto(&ins_stock, &b).unwrap();
+            db.exec_auto_prepared(&ins_stock, &BindSlots(vec![Value::Int(i)])).unwrap();
         }
     }
 

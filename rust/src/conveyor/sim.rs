@@ -119,8 +119,9 @@ struct ServerState {
 /// The simulation driver.
 pub struct ConveyorSim<'a> {
     app: &'a AnalyzedApp,
-    /// Per-template statement maps (built once; see §Perf).
-    stmt_maps: Vec<std::collections::HashMap<String, crate::sqlir::Stmt>>,
+    /// Per-template statements compiled once against the schema
+    /// (prepare-once; all per-server DBs share one schema).
+    stmt_maps: Vec<crate::workload::spec::PreparedStmts>,
     topo: Topology,
     cfg: ConveyorConfig,
     gen: Box<dyn OpGenerator + 'a>,
@@ -169,7 +170,7 @@ impl<'a> ConveyorSim<'a> {
         let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
         let svc_rng = Rng::new(cfg.seed ^ 0xF00D);
         ConveyorSim {
-            stmt_maps: app.spec.txns.iter().map(|t| t.stmt_map()).collect(),
+            stmt_maps: app.spec.txns.iter().map(|t| t.prepared_map(&app.spec.schema)).collect(),
             app,
             topo,
             cfg,
@@ -562,16 +563,14 @@ mod tests {
     }
 
     fn seed(db: &Db) {
-        use crate::sqlir::parse_statement;
-        let ins_cart = parse_statement("INSERT INTO CARTS (CID, QTY) VALUES (?c, 0)").unwrap();
-        let ins_stock = parse_statement("INSERT INTO STOCK (ITEM, LEVEL) VALUES (?i, 1000)").unwrap();
+        use crate::db::BindSlots;
+        let ins_cart = db.prepare_sql("INSERT INTO CARTS (CID, QTY) VALUES (?c, 0)").unwrap();
+        let ins_stock = db.prepare_sql("INSERT INTO STOCK (ITEM, LEVEL) VALUES (?i, 1000)").unwrap();
         for c in 0..5000i64 {
-            let b: Bindings = [("c".to_string(), Value::Int(c))].into_iter().collect();
-            db.exec_auto(&ins_cart, &b).unwrap();
+            db.exec_auto_prepared(&ins_cart, &BindSlots(vec![Value::Int(c)])).unwrap();
         }
         for i in 0..8i64 {
-            let b: Bindings = [("i".to_string(), Value::Int(i))].into_iter().collect();
-            db.exec_auto(&ins_stock, &b).unwrap();
+            db.exec_auto_prepared(&ins_stock, &BindSlots(vec![Value::Int(i)])).unwrap();
         }
     }
 

@@ -1,16 +1,30 @@
 //! The database engine: storage, statement execution, commit/abort, and
 //! state-update application (replication path).
+//!
+//! Execution is **prepared-first** (see [`super::prepared`]): statements
+//! are compiled once against the schema — resolving column names to
+//! indices, binding names to slots, and the access-path template — and
+//! then executed many times with positional [`BindSlots`]. The
+//! name-keyed [`TxnHandle::exec`] entry point is kept as a convenience
+//! that compiles on the fly (tests, examples, ad-hoc statements).
+//!
+//! Storage shares rows via `Arc`: reads hand out refcounted handles and
+//! never deep-copy a row; a write clones the row once when it builds the
+//! new image (copy-on-write).
 
-use super::lockmgr::{LockManager, LockMode, LockTarget, TxnId};
-use super::plan::{eval_pred, plan, AccessPath};
+use super::lockmgr::{Acquired, LockManager, LockMode, LockTarget, TxnId};
+use super::prepared::{
+    eval_cpred, eval_cscalar, BindSlots, CItem, PDelete, PInsert, PSelect, PUpdate,
+    PathTemplate, Prepared, PreparedKind, SetOp,
+};
 use super::txn::{IsolationLevel, TxnError, TxnState};
 use super::update::{ColOp, StateUpdate, WriteRecord};
-use super::value::{eval_scalar, Bindings, Key, Row, Value};
+use super::value::{numeric_arith, ArithKind, Bindings, Key, Row, Value};
 use crate::catalog::{Schema, TableSchema};
-use crate::sqlir::{Delete, Insert, Select, SelectItem, Stmt, Update};
+use crate::sqlir::Stmt;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 /// Result of executing one statement.
 #[derive(Debug, Clone, PartialEq, Default)]
@@ -34,7 +48,7 @@ impl QueryResult {
 
 #[derive(Debug, Default)]
 struct TableData {
-    rows: HashMap<Key, Row>,
+    rows: HashMap<Key, Arc<Row>>,
     /// Secondary hash indexes: column idx -> value -> set of PKs.
     indexes: HashMap<usize, HashMap<Value, HashSet<Key>>>,
 }
@@ -66,11 +80,13 @@ impl TableData {
         }
     }
 
-    fn put(&mut self, key: Key, row: Row) {
-        if let Some(old) = self.rows.get(&key).cloned() {
-            self.index_remove(&key, &old);
+    fn put(&mut self, key: Key, row: Arc<Row>) {
+        if !self.indexes.is_empty() {
+            if let Some(old) = self.rows.get(&key).map(Arc::clone) {
+                self.index_remove(&key, &old);
+            }
+            self.index_insert(&key, &row);
         }
-        self.index_insert(&key, &row);
         self.rows.insert(key, row);
     }
 
@@ -78,40 +94,6 @@ impl TableData {
         if let Some(old) = self.rows.remove(key) {
             self.index_remove(key, &old);
         }
-    }
-}
-
-
-/// If `scalar` has the shape `col ± expr` where `expr` does not read any
-/// row column, return the signed delta value of `expr` (None otherwise).
-fn delta_of(
-    scalar: &crate::sqlir::Scalar,
-    target_col: &str,
-    schema: &TableSchema,
-    binds: &Bindings,
-) -> Option<Value> {
-    use crate::sqlir::Scalar as S;
-    let (lhs, rhs, negate) = match scalar {
-        S::Add(a, b) => (a, b, false),
-        S::Sub(a, b) => (a, b, true),
-        _ => return None,
-    };
-    match (&**lhs, &**rhs) {
-        (S::Col(c), expr) if c.eq_ignore_ascii_case(target_col) => {
-            let mut cols = Vec::new();
-            expr.referenced_cols(&mut cols);
-            if !cols.is_empty() {
-                return None;
-            }
-            let v = eval_scalar(expr, None, &|c| schema.col_index(c), binds).ok()?;
-            Some(match (v, negate) {
-                (Value::Int(i), true) => Value::Int(-i),
-                (Value::Float(x), true) => Value::Float(-x),
-                (v, false) => v,
-                _ => return None,
-            })
-        }
-        _ => None,
     }
 }
 
@@ -168,6 +150,19 @@ impl Db {
         self.aborts.load(Ordering::Relaxed)
     }
 
+    /// Compile a statement against this database's schema (prepare once,
+    /// execute many via [`TxnHandle::exec_prepared`]).
+    pub fn prepare(&self, stmt: &Stmt) -> Result<Prepared, TxnError> {
+        Prepared::compile(stmt, &self.schema).map_err(TxnError::Sql)
+    }
+
+    /// Parse + compile convenience.
+    pub fn prepare_sql(&self, sql: &str) -> Result<Prepared, TxnError> {
+        let stmt =
+            crate::sqlir::parse_statement(sql).map_err(|e| TxnError::Sql(e.to_string()))?;
+        self.prepare(&stmt)
+    }
+
     /// Begin a transaction at the database's default isolation level.
     pub fn begin(&self) -> TxnHandle<'_> {
         self.begin_with(self.default_isolation)
@@ -175,13 +170,33 @@ impl Db {
 
     pub fn begin_with(&self, isolation: IsolationLevel) -> TxnHandle<'_> {
         let id = self.next_txn.fetch_add(1, Ordering::SeqCst);
-        TxnHandle { db: self, id, isolation, state: TxnState::default(), done: false }
+        TxnHandle {
+            db: self,
+            id,
+            isolation,
+            state: TxnState::default(),
+            locks_held: Vec::new(),
+            lock_overflow: false,
+            done: false,
+        }
     }
 
     /// Execute a single auto-committed statement (loader convenience).
     pub fn exec_auto(&self, stmt: &Stmt, binds: &Bindings) -> Result<QueryResult, TxnError> {
         let mut txn = self.begin();
         let r = txn.exec(stmt, binds)?;
+        txn.commit()?;
+        Ok(r)
+    }
+
+    /// Execute a single auto-committed prepared statement.
+    pub fn exec_auto_prepared(
+        &self,
+        p: &Prepared,
+        slots: &BindSlots,
+    ) -> Result<QueryResult, TxnError> {
+        let mut txn = self.begin();
+        let r = txn.exec_prepared(p, slots)?;
         txn.commit()?;
         Ok(r)
     }
@@ -205,24 +220,37 @@ impl Db {
 
     fn try_apply_update(&self, update: &StateUpdate) -> Result<(), TxnError> {
         let id = self.next_txn.fetch_add(1, Ordering::SeqCst);
+        let mut held: Vec<LockTarget> = Vec::with_capacity(update.records.len() * 2);
         let res = (|| -> Result<(), TxnError> {
             for rec in &update.records {
                 let t = rec.table();
-                self.locks.acquire(id, LockTarget::Table(t), LockMode::IX)?;
-                self.locks.acquire(id, LockTarget::Row(t, rec.key().clone()), LockMode::X)?;
+                let table_target = LockTarget::Table(t);
+                if self.locks.acquire(id, table_target, LockMode::IX)? == Acquired::Fresh {
+                    held.push(table_target);
+                }
+                let row_target = LockTarget::row(t, rec.key());
+                if self.locks.acquire(id, row_target, LockMode::X)? == Acquired::Fresh {
+                    held.push(row_target);
+                }
             }
             for rec in &update.records {
                 let mut table = self.tables[rec.table()].write().unwrap();
                 match rec {
                     WriteRecord::Insert { key, row, .. } => {
-                        table.put(key.clone(), row.clone());
+                        table.put(key.clone(), Arc::clone(row));
                     }
                     WriteRecord::Update { key, cols, .. } => {
-                        if let Some(mut row) = table.rows.get(key).cloned() {
+                        if let Some(mut row) = table.rows.get(key).map(|r| (**r).clone()) {
+                            let schema = self.schema.table(rec.table());
                             for (ci, op) in cols {
-                                row[*ci] = op.apply(&row[*ci]);
+                                // Coerce so a mixed-type delta (e.g. a Float
+                                // Add on an Int column) leaves storage in the
+                                // declared column type, matching the image
+                                // the originating txn computed.
+                                row[*ci] =
+                                    op.apply(&row[*ci]).coerce(schema.columns[*ci].ty);
                             }
-                            table.put(key.clone(), row);
+                            table.put(key.clone(), Arc::new(row));
                         }
                         // A missing row means the update raced a delete that
                         // this replica already applied — drop it silently,
@@ -236,7 +264,7 @@ impl Db {
             }
             Ok(())
         })();
-        self.locks.release_all(id);
+        self.locks.release(id, &held);
         res
     }
 
@@ -271,9 +299,14 @@ impl Db {
     /// (tests / invariant checks; not part of the transactional API).
     pub fn peek(&self, table: &str, key: &Key) -> Option<Row> {
         let ti = self.schema.table_id(table)?;
-        self.tables[ti].read().unwrap().rows.get(key).cloned()
+        self.tables[ti].read().unwrap().rows.get(key).map(|r| (**r).clone())
     }
 }
+
+/// Past this many tracked lock targets a transaction falls back to the
+/// all-shards release sweep (scans lock thousands of rows; releasing
+/// each target individually would cost more than the sweep).
+const LOCK_TRACK_MAX: usize = 128;
 
 /// A live transaction. Dropping without commit aborts.
 pub struct TxnHandle<'a> {
@@ -281,6 +314,10 @@ pub struct TxnHandle<'a> {
     id: TxnId,
     isolation: IsolationLevel,
     state: TxnState,
+    /// Targets acquired so far — released individually at commit/abort so
+    /// short transactions do not sweep every lock shard.
+    locks_held: Vec<LockTarget>,
+    lock_overflow: bool,
     done: bool,
 }
 
@@ -294,60 +331,105 @@ impl<'a> TxnHandle<'a> {
         &self.state.update
     }
 
-    fn table_id(&self, name: &str) -> Result<usize, TxnError> {
-        self.db
-            .schema
-            .table_id(name)
-            .ok_or_else(|| TxnError::Sql(format!("unknown table {name}")))
+    fn lock(&mut self, target: LockTarget, mode: LockMode) -> Result<(), TxnError> {
+        // Track only first-time holds: re-entrant hits and in-place
+        // upgrades share the entry already recorded, so multi-statement
+        // transactions stay under LOCK_TRACK_MAX.
+        if self.db.locks.acquire(self.id, target, mode)? == Acquired::Fresh {
+            if self.locks_held.len() < LOCK_TRACK_MAX {
+                self.locks_held.push(target);
+            } else {
+                self.lock_overflow = true;
+            }
+        }
+        Ok(())
     }
 
-    fn lock(&self, target: LockTarget, mode: LockMode) -> Result<(), TxnError> {
-        Ok(self.db.locks.acquire(self.id, target, mode)?)
+    fn release_locks(&mut self) {
+        if self.lock_overflow {
+            self.db.locks.release_all(self.id);
+        } else {
+            self.db.locks.release(self.id, &self.locks_held);
+        }
     }
 
-    /// Execute one statement within this transaction.
+    /// Execute one statement within this transaction, compiling it on
+    /// the fly (convenience path — the simulators and benches prepare
+    /// once and use [`Self::exec_prepared`]).
     pub fn exec(&mut self, stmt: &Stmt, binds: &Bindings) -> Result<QueryResult, TxnError> {
         if self.done {
             return Err(TxnError::Finished);
         }
-        match stmt {
-            Stmt::Select(s) => self.exec_select(s, binds),
-            Stmt::Insert(s) => self.exec_insert(s, binds),
-            Stmt::Update(s) => self.exec_update(s, binds),
-            Stmt::Delete(s) => self.exec_delete(s, binds),
+        let p = Prepared::compile(stmt, &self.db.schema).map_err(TxnError::Sql)?;
+        let slots = p.bind(binds).map_err(TxnError::Sql)?;
+        self.exec_prepared(&p, &slots)
+    }
+
+    /// Execute a prepared statement with positional bindings.
+    pub fn exec_prepared(
+        &mut self,
+        p: &Prepared,
+        slots: &BindSlots,
+    ) -> Result<QueryResult, TxnError> {
+        if self.done {
+            return Err(TxnError::Finished);
+        }
+        // A Prepared carries raw table/column indices: it must have been
+        // compiled against this database's schema (an identical clone is
+        // fine — the conveyor replicas share one compilation).
+        debug_assert!(
+            p.table() < self.db.schema.ntables(),
+            "prepared statement compiled against a different schema"
+        );
+        match &p.kind {
+            PreparedKind::Select(s) => self.exec_select(s, slots),
+            PreparedKind::Insert(i) => self.exec_insert(i, slots),
+            PreparedKind::Update(u) => self.exec_update(u, slots),
+            PreparedKind::Delete(d) => self.exec_delete(d, slots),
         }
     }
 
     /// Collect `(key, row)` pairs visible to this txn that match `pred`,
     /// taking the appropriate locks. `for_write` selects X/IX vs S/IS.
+    /// Rows are returned as `Arc` handles — no deep clone.
     fn select_rows(
         &mut self,
         ti: usize,
-        pred: &crate::sqlir::Pred,
-        binds: &Bindings,
+        pred: &super::prepared::CPred,
+        path: &PathTemplate,
+        slots: &BindSlots,
         for_write: bool,
-    ) -> Result<Vec<(Key, Row)>, TxnError> {
-        let schema = self.db.schema.table(ti);
-        let path = plan(pred, schema, binds);
+    ) -> Result<Vec<(Key, Arc<Row>)>, TxnError> {
+        let db = self.db;
         let serializable = self.isolation == IsolationLevel::Serializable;
 
-        // --- Locking ---
-        match (&path, for_write) {
-            (AccessPath::Point(key), true) => {
-                self.lock(LockTarget::Table(ti), LockMode::IX)?;
-                self.lock(LockTarget::Row(ti, key.clone()), LockMode::X)?;
+        // The point key (if any) is built once per execution; only its
+        // values come from the slots — the plan shape was fixed at
+        // prepare time.
+        let point_key = match path {
+            PathTemplate::Point(srcs) => {
+                Some(PathTemplate::point_key(srcs, slots).map_err(TxnError::Sql)?)
             }
-            (AccessPath::Point(key), false) => {
+            _ => None,
+        };
+
+        // --- Locking ---
+        match (&point_key, for_write) {
+            (Some(key), true) => {
+                self.lock(LockTarget::Table(ti), LockMode::IX)?;
+                self.lock(LockTarget::row(ti, key), LockMode::X)?;
+            }
+            (Some(key), false) => {
                 if serializable {
                     self.lock(LockTarget::Table(ti), LockMode::IS)?;
-                    self.lock(LockTarget::Row(ti, key.clone()), LockMode::S)?;
+                    self.lock(LockTarget::row(ti, key), LockMode::S)?;
                 }
             }
-            (_, true) => {
+            (None, true) => {
                 // Scan-write: table X (covers phantom-safe multi-row update).
                 self.lock(LockTarget::Table(ti), LockMode::X)?;
             }
-            (_, false) => {
+            (None, false) => {
                 if serializable {
                     // Scan-read: table S for phantom protection.
                     self.lock(LockTarget::Table(ti), LockMode::S)?;
@@ -356,84 +438,93 @@ impl<'a> TxnHandle<'a> {
         }
 
         // --- Row collection (short physical read section) ---
-        let mut out = Vec::new();
-        let table = self.db.tables[ti].read().unwrap();
-        let consider = |key: &Key, committed: Option<&Row>, out: &mut Vec<(Key, Row)>| -> Result<(), TxnError> {
-            if let Some(row) = self.state.visible(ti, key, committed) {
-                if eval_pred(pred, row, schema, binds).map_err(TxnError::Sql)? {
-                    out.push((key.clone(), row.clone()));
-                }
-            }
-            Ok(())
-        };
-        match &path {
-            AccessPath::Point(key) => {
-                consider(key, table.rows.get(key), &mut out)?;
-            }
-            AccessPath::IndexEq { col, value } => {
-                if let Some(keys) = table.indexes.get(col).and_then(|b| b.get(value)) {
-                    for key in keys {
-                        consider(key, table.rows.get(key), &mut out)?;
+        let mut out: Vec<(Key, Arc<Row>)> = Vec::new();
+        {
+            let table = db.tables[ti].read().unwrap();
+            let state = &self.state;
+            let consider = |key: &Key,
+                            committed: Option<&Arc<Row>>,
+                            out: &mut Vec<(Key, Arc<Row>)>|
+             -> Result<(), TxnError> {
+                if let Some(row) = state.visible(ti, key, committed) {
+                    if eval_cpred(pred, row.as_ref(), slots).map_err(TxnError::Sql)? {
+                        out.push((key.clone(), Arc::clone(row)));
                     }
                 }
-                // Overlay-inserted rows are not in the committed index.
-                for ((t, key), v) in &self.state.overlay {
-                    if *t == ti && !table.rows.contains_key(key) {
-                        if let Some(row) = v {
-                            if row[*col] == *value {
-                                if eval_pred(pred, row, schema, binds).map_err(TxnError::Sql)? {
-                                    out.push((key.clone(), row.clone()));
+                Ok(())
+            };
+            match path {
+                PathTemplate::Point(_) => {
+                    let key = point_key.as_ref().expect("point key built above");
+                    consider(key, table.rows.get(key), &mut out)?;
+                }
+                PathTemplate::IndexEq { col, src } => {
+                    let value = src.value(slots).map_err(TxnError::Sql)?;
+                    let bucket = table.indexes.get(col).and_then(|b| b.get(&value));
+                    if let Some(keys) = bucket {
+                        for key in keys {
+                            consider(key, table.rows.get(key), &mut out)?;
+                        }
+                    }
+                    // Overlay rows unreachable through the committed
+                    // index: fresh inserts AND committed rows whose
+                    // indexed column was updated inside this transaction.
+                    if let Some(ov) = state.overlay_table(ti) {
+                        for (key, v) in ov {
+                            if bucket.map_or(false, |b| b.contains(key)) {
+                                continue; // already considered via the index
+                            }
+                            if let Some(row) = v {
+                                if row[*col] == value
+                                    && eval_cpred(pred, row.as_ref(), slots)
+                                        .map_err(TxnError::Sql)?
+                                {
+                                    out.push((key.clone(), Arc::clone(row)));
+                                }
+                            }
+                        }
+                    }
+                }
+                PathTemplate::Scan => {
+                    for (key, committed) in &table.rows {
+                        consider(key, Some(committed), &mut out)?;
+                    }
+                    if let Some(ov) = state.overlay_table(ti) {
+                        for (key, v) in ov {
+                            if table.rows.contains_key(key) {
+                                continue; // already considered via storage
+                            }
+                            if let Some(row) = v {
+                                if eval_cpred(pred, row.as_ref(), slots)
+                                    .map_err(TxnError::Sql)?
+                                {
+                                    out.push((key.clone(), Arc::clone(row)));
                                 }
                             }
                         }
                     }
                 }
             }
-            AccessPath::Scan => {
-                for (key, committed) in &table.rows {
-                    consider(key, Some(committed), &mut out)?;
-                }
-                for ((t, key), v) in &self.state.overlay {
-                    if *t == ti && !table.rows.contains_key(key) {
-                        if let Some(row) = v {
-                            if eval_pred(pred, row, schema, binds).map_err(TxnError::Sql)? {
-                                out.push((key.clone(), row.clone()));
-                            }
-                        }
-                    }
-                }
-            }
         }
-        drop(table);
 
         // Row locks for matched rows under non-point paths.
-        if serializable || for_write {
-            match &path {
-                AccessPath::Point(_) => {}
-                _ => {
-                    let mode = if for_write { LockMode::X } else { LockMode::S };
-                    for (key, _) in &out {
-                        self.lock(LockTarget::Row(ti, key.clone()), mode)?;
-                    }
-                }
+        if (serializable || for_write) && point_key.is_none() {
+            let mode = if for_write { LockMode::X } else { LockMode::S };
+            for (key, _) in &out {
+                self.lock(LockTarget::row(ti, key), mode)?;
             }
         }
         Ok(out)
     }
 
-    fn exec_select(&mut self, s: &Select, binds: &Bindings) -> Result<QueryResult, TxnError> {
-        let ti = self.table_id(&s.table)?;
-        let schema = self.db.schema.table(ti);
-        let mut matched = self.select_rows(ti, &s.where_, binds, false)?;
+    fn exec_select(&mut self, s: &PSelect, slots: &BindSlots) -> Result<QueryResult, TxnError> {
+        let mut matched = self.select_rows(s.ti, &s.where_, &s.path, slots, false)?;
 
         // ORDER BY before LIMIT.
-        if let Some((col, desc)) = &s.order_by {
-            let ci = schema
-                .col_index(col)
-                .ok_or_else(|| TxnError::Sql(format!("unknown ORDER BY column {col}")))?;
+        if let Some((ci, desc)) = s.order_by {
             matched.sort_by(|(_, a), (_, b)| {
                 let ord = a[ci].total_cmp(&b[ci]);
-                if *desc {
+                if desc {
                     ord.reverse()
                 } else {
                     ord
@@ -454,38 +545,37 @@ impl<'a> TxnHandle<'a> {
         }
 
         // Projection / aggregation.
-        let has_agg = s.items.iter().any(|i| i.is_aggregate());
-        if has_agg {
+        if s.has_agg {
             let mut row_out = Vec::with_capacity(s.items.len());
             for item in &s.items {
                 let v = match item {
-                    SelectItem::Count => Value::Int(matched.len() as i64),
-                    SelectItem::Col(c) => {
+                    CItem::Count => Value::Int(matched.len() as i64),
+                    CItem::Col(ci) => {
                         // Non-aggregated column with aggregates: take first row
                         // (the subset of SQL our workloads need).
-                        let ci = self.col_idx(schema, c)?;
-                        matched.first().map(|(_, r)| r[ci].clone()).unwrap_or(Value::Null)
+                        matched.first().map(|(_, r)| r[*ci].clone()).unwrap_or(Value::Null)
                     }
-                    SelectItem::Max(c) | SelectItem::Min(c) => {
-                        let ci = self.col_idx(schema, c)?;
-                        let mut vals: Vec<&Value> =
-                            matched.iter().map(|(_, r)| &r[ci]).filter(|v| !matches!(v, Value::Null)).collect();
+                    CItem::Max(ci) | CItem::Min(ci) => {
+                        let mut vals: Vec<&Value> = matched
+                            .iter()
+                            .map(|(_, r)| &r[*ci])
+                            .filter(|v| !matches!(v, Value::Null))
+                            .collect();
                         vals.sort_by(|a, b| a.total_cmp(b));
-                        let picked = if matches!(item, SelectItem::Max(_)) {
+                        let picked = if matches!(item, CItem::Max(_)) {
                             vals.last()
                         } else {
                             vals.first()
                         };
                         picked.cloned().cloned().unwrap_or(Value::Null)
                     }
-                    SelectItem::Sum(c) => {
-                        let ci = self.col_idx(schema, c)?;
+                    CItem::Sum(ci) => {
                         let mut int_sum: i64 = 0;
                         let mut float_sum = 0.0;
                         let mut any_float = false;
                         let mut any = false;
                         for (_, r) in &matched {
-                            match &r[ci] {
+                            match &r[*ci] {
                                 Value::Int(i) => {
                                     int_sum += i;
                                     any = true;
@@ -513,103 +603,121 @@ impl<'a> TxnHandle<'a> {
         }
 
         let rows = if s.items.is_empty() {
-            matched.into_iter().map(|(_, r)| r).collect()
+            // SELECT *: the result owns its rows, so this is the one
+            // place a read still copies values.
+            matched.into_iter().map(|(_, r)| (*r).clone()).collect()
         } else {
-            let cis: Vec<usize> = s
-                .items
-                .iter()
-                .map(|i| self.col_idx(schema, i.referenced_col().unwrap()))
-                .collect::<Result<_, _>>()?;
             matched
                 .into_iter()
-                .map(|(_, r)| cis.iter().map(|&ci| r[ci].clone()).collect())
+                .map(|(_, r)| {
+                    s.items
+                        .iter()
+                        .map(|item| match item {
+                            CItem::Col(ci) => r[*ci].clone(),
+                            _ => unreachable!("aggregates handled above"),
+                        })
+                        .collect()
+                })
                 .collect()
         };
         Ok(QueryResult { rows, affected: 0 })
     }
 
-    fn col_idx(&self, schema: &TableSchema, c: &str) -> Result<usize, TxnError> {
-        schema
-            .col_index(c)
-            .ok_or_else(|| TxnError::Sql(format!("unknown column {c} in {}", schema.name)))
-    }
-
-    fn exec_insert(&mut self, s: &Insert, binds: &Bindings) -> Result<QueryResult, TxnError> {
-        let ti = self.table_id(&s.table)?;
-        let schema = self.db.schema.table(ti);
+    fn exec_insert(&mut self, p: &PInsert, slots: &BindSlots) -> Result<QueryResult, TxnError> {
+        let db = self.db;
+        let ti = p.ti;
+        let schema = db.schema.table(ti);
 
         // Build the full row (unspecified columns are NULL).
         let mut row: Row = vec![Value::Null; schema.ncols()];
-        for (col, scalar) in s.columns.iter().zip(&s.values) {
-            let ci = self.col_idx(schema, col)?;
-            let v = eval_scalar(scalar, None, &|c| schema.col_index(c), binds)
-                .map_err(TxnError::Sql)?;
-            row[ci] = v.coerce(schema.columns[ci].ty);
+        for (ci, expr) in &p.sets {
+            let v = eval_cscalar(expr, None, slots).map_err(TxnError::Sql)?;
+            row[*ci] = v.coerce(schema.columns[*ci].ty);
         }
-        let key = Key(schema.pk_indices().iter().map(|&i| row[i].clone()).collect());
+        let key = Key(p.pk.iter().map(|&i| row[i].clone()).collect());
         if key.0.iter().any(|v| matches!(v, Value::Null)) {
-            return Err(TxnError::Sql(format!("NULL primary key in INSERT into {}", s.table)));
+            return Err(TxnError::Sql(format!(
+                "NULL primary key in INSERT into {}",
+                schema.name
+            )));
         }
 
         self.lock(LockTarget::Table(ti), LockMode::IX)?;
-        self.lock(LockTarget::Row(ti, key.clone()), LockMode::X)?;
+        self.lock(LockTarget::row(ti, &key), LockMode::X)?;
 
         let exists = {
-            let table = self.db.tables[ti].read().unwrap();
+            let table = db.tables[ti].read().unwrap();
             self.state.visible(ti, &key, table.rows.get(&key)).is_some()
         };
         if exists {
-            return Err(TxnError::DuplicateKey { table: s.table.clone(), key: key.to_string() });
+            return Err(TxnError::DuplicateKey {
+                table: schema.name.clone(),
+                key: key.to_string(),
+            });
         }
-        self.state.overlay.insert((ti, key.clone()), Some(row.clone()));
+        let row = Arc::new(row);
+        self.state.overlay_put(ti, key.clone(), Some(Arc::clone(&row)));
         self.state.update.push(WriteRecord::Insert { table: ti, key, row });
         Ok(QueryResult { rows: vec![], affected: 1 })
     }
 
-    fn exec_update(&mut self, s: &Update, binds: &Bindings) -> Result<QueryResult, TxnError> {
-        let ti = self.table_id(&s.table)?;
-        let schema = self.db.schema.table(ti);
-        let pk = schema.pk_indices();
-        let matched = self.select_rows(ti, &s.where_, binds, true)?;
-        let schema = self.db.schema.table(ti); // reborrow after &mut self
+    fn exec_update(&mut self, p: &PUpdate, slots: &BindSlots) -> Result<QueryResult, TxnError> {
+        let db = self.db;
+        let matched = self.select_rows(p.ti, &p.where_, &p.path, slots, true)?;
+        let schema = db.schema.table(p.ti);
         let mut affected = 0;
         for (key, old_row) in matched {
-            let mut new_row = old_row.clone();
-            let mut cols = Vec::with_capacity(s.sets.len());
-            for (col, scalar) in &s.sets {
-                let ci = self.col_idx(schema, col)?;
-                if pk.contains(&ci) {
-                    return Err(TxnError::Sql(format!(
-                        "updates to primary-key column {col} are unsupported"
-                    )));
+            // Copy-on-write: the one deep clone on the write path.
+            let mut new_row: Row = (*old_row).clone();
+            let mut cols = Vec::with_capacity(p.sets.len());
+            for (ci, op) in &p.sets {
+                let ty = schema.columns[*ci].ty;
+                match op {
+                    SetOp::Assign(expr) => {
+                        let v = eval_cscalar(expr, Some(old_row.as_ref()), slots)
+                            .map_err(TxnError::Sql)?
+                            .coerce(ty);
+                        new_row[*ci] = v.clone();
+                        cols.push((*ci, ColOp::Set(v)));
+                    }
+                    SetOp::Delta { expr, negate } => {
+                        // Logical redo: the delta shape was detected at
+                        // prepare time; replicated replay merges the delta
+                        // with the replica's own value (db::update::ColOp).
+                        let d = eval_cscalar(expr, None, slots).map_err(TxnError::Sql)?;
+                        let kind = if *negate { ArithKind::Sub } else { ArithKind::Add };
+                        let v = numeric_arith(kind, &old_row[*ci], &d)
+                            .map_err(TxnError::Sql)?
+                            .coerce(ty);
+                        let colop = if *negate {
+                            match &d {
+                                Value::Int(i) => ColOp::Add(Value::Int(-*i)),
+                                Value::Float(x) => ColOp::Add(Value::Float(-*x)),
+                                // Non-negatable delta (NULL): degrade to an
+                                // absolute assignment of the computed value.
+                                _ => ColOp::Set(v.clone()),
+                            }
+                        } else {
+                            ColOp::Add(d)
+                        };
+                        new_row[*ci] = v;
+                        cols.push((*ci, colop));
+                    }
                 }
-                let v = eval_scalar(scalar, Some(&old_row), &|c| schema.col_index(c), binds)
-                    .map_err(TxnError::Sql)?
-                    .coerce(schema.columns[ci].ty);
-                new_row[ci] = v.clone();
-                // Logical redo: `c = c ± expr` (with `expr` row-independent)
-                // is recorded as a delta so replicated replay merges with
-                // the replica's own value; everything else is an absolute
-                // assignment (see db::update::ColOp).
-                let op = delta_of(scalar, col, schema, binds)
-                    .map(ColOp::Add)
-                    .unwrap_or(ColOp::Set(v));
-                cols.push((ci, op));
             }
-            self.state.overlay.insert((ti, key.clone()), Some(new_row));
-            self.state.update.push(WriteRecord::Update { table: ti, key, cols });
+            self.state.overlay_put(p.ti, key.clone(), Some(Arc::new(new_row)));
+            self.state.update.push(WriteRecord::Update { table: p.ti, key, cols });
             affected += 1;
         }
         Ok(QueryResult { rows: vec![], affected })
     }
 
-    fn exec_delete(&mut self, s: &Delete, binds: &Bindings) -> Result<QueryResult, TxnError> {
-        let ti = self.table_id(&s.table)?;
-        let matched = self.select_rows(ti, &s.where_, binds, true)?;
+    fn exec_delete(&mut self, p: &PDelete, slots: &BindSlots) -> Result<QueryResult, TxnError> {
+        let matched = self.select_rows(p.ti, &p.where_, &p.path, slots, true)?;
         let affected = matched.len();
         for (key, _) in matched {
-            self.state.overlay.insert((ti, key.clone()), None);
-            self.state.update.push(WriteRecord::Delete { table: ti, key });
+            self.state.overlay_put(p.ti, key.clone(), None);
+            self.state.update.push(WriteRecord::Delete { table: p.ti, key });
         }
         Ok(QueryResult { rows: vec![], affected })
     }
@@ -641,13 +749,20 @@ impl<'a> TxnHandle<'a> {
             let mut table = self.db.tables[ti].write().unwrap();
             for rec in self.state.update.records.iter().filter(|r| r.table() == ti) {
                 match rec {
-                    WriteRecord::Insert { key, row, .. } => table.put(key.clone(), row.clone()),
+                    WriteRecord::Insert { key, row, .. } => {
+                        table.put(key.clone(), Arc::clone(row))
+                    }
                     WriteRecord::Update { key, cols, .. } => {
-                        if let Some(mut row) = table.rows.get(key).cloned() {
+                        if let Some(mut row) = table.rows.get(key).map(|r| (**r).clone()) {
+                            let schema = self.db.schema.table(ti);
                             for (ci, op) in cols {
-                                row[*ci] = op.apply(&row[*ci]);
+                                // Same coercion as apply_update: committed
+                                // state must equal the overlay image the
+                                // statement computed (typed deltas included).
+                                row[*ci] =
+                                    op.apply(&row[*ci]).coerce(schema.columns[*ci].ty);
                             }
-                            table.put(key.clone(), row);
+                            table.put(key.clone(), Arc::new(row));
                         }
                     }
                     WriteRecord::Delete { key, .. } => table.remove(key),
@@ -657,7 +772,7 @@ impl<'a> TxnHandle<'a> {
 
         let update = std::mem::take(&mut self.state.update);
         let r = hook(&update);
-        self.db.locks.release_all(self.id);
+        self.release_locks();
         self.db.commits.fetch_add(1, Ordering::Relaxed);
         Ok((update, r))
     }
@@ -665,7 +780,7 @@ impl<'a> TxnHandle<'a> {
     /// Abort: discard buffered writes and release locks.
     pub fn abort(mut self) {
         self.done = true;
-        self.db.locks.release_all(self.id);
+        self.release_locks();
         self.db.aborts.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -673,7 +788,7 @@ impl<'a> TxnHandle<'a> {
 impl Drop for TxnHandle<'_> {
     fn drop(&mut self) {
         if !self.done {
-            self.db.locks.release_all(self.id);
+            self.release_locks();
             self.db.aborts.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -711,19 +826,19 @@ mod tests {
     }
 
     fn seed_items(db: &Db, n: i64) {
-        let ins = parse_statement(
-            "INSERT INTO ITEMS (ID, TITLE, STOCK, COST) VALUES (?id, ?t, ?s, ?c)",
-        )
-        .unwrap();
+        let ins = db
+            .prepare_sql("INSERT INTO ITEMS (ID, TITLE, STOCK, COST) VALUES (?id, ?t, ?s, ?c)")
+            .unwrap();
         for i in 0..n {
-            db.exec_auto(
+            db.exec_auto_prepared(
                 &ins,
-                &b(&[
+                &ins.bind_pairs(&[
                     ("id", Value::Int(i)),
                     ("t", Value::Str(format!("book{i}"))),
                     ("s", Value::Int(100)),
                     ("c", Value::Float(9.5 + i as f64)),
-                ]),
+                ])
+                .unwrap(),
             )
             .unwrap();
         }
@@ -736,6 +851,22 @@ mod tests {
         let q = parse_statement("SELECT TITLE, STOCK FROM ITEMS WHERE ID = ?id").unwrap();
         let r = db.exec_auto(&q, &b(&[("id", Value::Int(1))])).unwrap();
         assert_eq!(r.rows, vec![vec![Value::Str("book1".into()), Value::Int(100)]]);
+    }
+
+    #[test]
+    fn prepared_reuse_across_executions() {
+        let db = test_db();
+        seed_items(&db, 5);
+        let q = db.prepare_sql("SELECT STOCK FROM ITEMS WHERE ID = ?id").unwrap();
+        for i in 0..5i64 {
+            let r = db
+                .exec_auto_prepared(&q, &BindSlots(vec![Value::Int(i)]))
+                .unwrap();
+            assert_eq!(r.scalar(), Some(&Value::Int(100)), "id {i}");
+        }
+        // Missing key: empty result, same prepared statement.
+        let r = db.exec_auto_prepared(&q, &BindSlots(vec![Value::Int(99)])).unwrap();
+        assert!(r.rows.is_empty());
     }
 
     #[test]
@@ -756,6 +887,26 @@ mod tests {
         }
         let q = parse_statement("SELECT STOCK FROM ITEMS WHERE ID = 0").unwrap();
         assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().scalar(), Some(&Value::Int(70)));
+    }
+
+    #[test]
+    fn typed_delta_commits_in_column_type() {
+        // A Float delta on an Int column: committed state must equal the
+        // overlay image the statement computed (coerced to the column
+        // type), at the origin and at a replica replaying the update.
+        let db = test_db();
+        seed_items(&db, 1);
+        let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK + ?d WHERE ID = 0").unwrap();
+        let mut txn = db.begin();
+        txn.exec(&u, &b(&[("d", Value::Float(1.5))])).unwrap();
+        let update = txn.commit().unwrap();
+        // 100 + 1.5 = 101.5, coerced into the Int column as 102.
+        let row = db.peek("ITEMS", &Key::single(Value::Int(0))).unwrap();
+        assert_eq!(row[2], Value::Int(102));
+        let db2 = test_db();
+        seed_items(&db2, 1);
+        db2.apply_update(&update).unwrap();
+        assert_eq!(db2.content_hash(), db.content_hash());
     }
 
     #[test]
@@ -810,12 +961,50 @@ mod tests {
         let q = parse_statement("SELECT ID FROM ITEMS WHERE TITLE = ?t").unwrap();
         let r = db.exec_auto(&q, &b(&[("t", Value::Str("book7".into()))])).unwrap();
         assert_eq!(r.rows, vec![vec![Value::Int(7)]]);
-        // Index stays correct across update of indexed column... (TITLE not
-        // updated here; check delete maintenance instead.)
         let d = parse_statement("DELETE FROM ITEMS WHERE ID = 7").unwrap();
         db.exec_auto(&d, &Bindings::new()).unwrap();
         let r = db.exec_auto(&q, &b(&[("t", Value::Str("book7".into()))])).unwrap();
         assert!(r.rows.is_empty());
+    }
+
+    #[test]
+    fn index_eq_sees_in_txn_update_of_indexed_column() {
+        // Regression: a committed row whose indexed column is updated
+        // *within* the transaction must be visible to an index-equality
+        // read on the new value (it is not in the committed index bucket),
+        // and invisible on the old value.
+        let db = test_db();
+        seed_items(&db, 3);
+        let u = parse_statement("UPDATE ITEMS SET TITLE = ?t WHERE ID = 1").unwrap();
+        let q = parse_statement("SELECT ID FROM ITEMS WHERE TITLE = ?t").unwrap();
+
+        let mut txn = db.begin();
+        txn.exec(&u, &b(&[("t", Value::Str("renamed".into()))])).unwrap();
+        let r = txn.exec(&q, &b(&[("t", Value::Str("renamed".into()))])).unwrap();
+        assert_eq!(r.rows, vec![vec![Value::Int(1)]], "new value must be visible in-txn");
+        let r = txn.exec(&q, &b(&[("t", Value::Str("book1".into()))])).unwrap();
+        assert!(r.rows.is_empty(), "old value must no longer match in-txn");
+        txn.commit().unwrap();
+
+        // After commit the committed index agrees.
+        let r = db.exec_auto(&q, &b(&[("t", Value::Str("renamed".into()))])).unwrap();
+        assert_eq!(r.rows, vec![vec![Value::Int(1)]]);
+    }
+
+    #[test]
+    fn index_eq_sees_in_txn_inserts() {
+        let db = test_db();
+        seed_items(&db, 2);
+        let ins = parse_statement(
+            "INSERT INTO ITEMS (ID, TITLE, STOCK, COST) VALUES (7, 'fresh', 1, 1.0)",
+        )
+        .unwrap();
+        let q = parse_statement("SELECT ID FROM ITEMS WHERE TITLE = 'fresh'").unwrap();
+        let mut txn = db.begin();
+        txn.exec(&ins, &Bindings::new()).unwrap();
+        let r = txn.exec(&q, &Bindings::new()).unwrap();
+        assert_eq!(r.rows, vec![vec![Value::Int(7)]]);
+        txn.commit().unwrap();
     }
 
     #[test]
@@ -837,7 +1026,7 @@ mod tests {
     fn commit_hook_runs_under_locks_in_commit_order() {
         // Two conflicting txns run concurrently; the hook order must match
         // the serialization (stock decrement) order.
-        use std::sync::{Arc, Mutex};
+        use std::sync::Mutex;
         let db = Arc::new(test_db());
         seed_items(&db, 1);
         let order: Arc<Mutex<Vec<i64>>> = Arc::new(Mutex::new(Vec::new()));
@@ -906,7 +1095,6 @@ mod tests {
 
     #[test]
     fn concurrent_stock_decrements_are_serializable() {
-        use std::sync::Arc;
         let db = Arc::new(test_db());
         seed_items(&db, 1);
         let threads = 8;
@@ -915,11 +1103,17 @@ mod tests {
         for _ in 0..threads {
             let db = Arc::clone(&db);
             handles.push(std::thread::spawn(move || {
-                let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK - 1 WHERE ID = 0").unwrap();
+                let u = db
+                    .prepare_sql("UPDATE ITEMS SET STOCK = STOCK - 1 WHERE ID = ?id")
+                    .unwrap();
+                let slots = BindSlots(vec![Value::Int(0)]);
                 for _ in 0..per {
                     loop {
                         let mut txn = db.begin();
-                        match txn.exec(&u, &Bindings::new()).and_then(|_| txn.commit().map(|_| ())) {
+                        match txn
+                            .exec_prepared(&u, &slots)
+                            .and_then(|_| txn.commit().map(|_| ()))
+                        {
                             Ok(()) => break,
                             Err(e) if e.is_retryable() => continue,
                             Err(e) => panic!("{e}"),
@@ -934,5 +1128,32 @@ mod tests {
         let q = parse_statement("SELECT STOCK FROM ITEMS WHERE ID = 0").unwrap();
         let final_stock = db.exec_auto(&q, &Bindings::new()).unwrap().scalar().unwrap().as_int().unwrap();
         assert_eq!(final_stock, 100 - threads * per);
+    }
+
+    #[test]
+    fn composite_pk_point_access() {
+        let db = test_db();
+        let ins = db
+            .prepare_sql("INSERT INTO SC (ID, I_ID, QTY) VALUES (?s, ?i, ?q)")
+            .unwrap();
+        for s in 0..3i64 {
+            for i in 0..3i64 {
+                db.exec_auto_prepared(
+                    &ins,
+                    &ins.bind_pairs(&[
+                        ("s", Value::Int(s)),
+                        ("i", Value::Int(i)),
+                        ("q", Value::Int(s * 10 + i)),
+                    ])
+                    .unwrap(),
+                )
+                .unwrap();
+            }
+        }
+        let q = db.prepare_sql("SELECT QTY FROM SC WHERE ID = ?s AND I_ID = ?i").unwrap();
+        let r = db
+            .exec_auto_prepared(&q, &q.bind_pairs(&[("s", Value::Int(2)), ("i", Value::Int(1))]).unwrap())
+            .unwrap();
+        assert_eq!(r.scalar(), Some(&Value::Int(21)));
     }
 }

@@ -17,6 +17,7 @@
 
 use super::value::Key;
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::{Condvar, Mutex};
 
 /// Transaction identifier; also its wait-die timestamp (smaller = older).
@@ -77,21 +78,55 @@ impl LockMode {
     }
 }
 
-/// A lockable resource.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+/// A lockable resource. `Copy`, so acquiring a lock never clones a key:
+/// rows are addressed by `(table, key hash)` with the hash precomputed
+/// once per statement via [`Key::lock_hash`]. A hash collision merges
+/// two lock targets — safe (coarser locking only adds blocking, so
+/// serializability is preserved), and vanishingly rare at 64 bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LockTarget {
     Table(usize),
-    Row(usize, Key),
+    /// Row lock: `(table id, precomputed key hash)`.
+    Row(usize, u64),
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+impl LockTarget {
+    /// The row-lock target for `key` in `table`.
+    pub fn row(table: usize, key: &Key) -> LockTarget {
+        LockTarget::Row(table, key.lock_hash())
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LockError {
     /// Wait-die chose this (younger) transaction as the victim.
-    #[error("transaction {txn} aborted by wait-die on {target:?}")]
     Aborted { txn: TxnId, target: String },
     /// Lock wait exceeded the configured timeout (used as a backstop).
-    #[error("transaction {txn} timed out waiting for {target:?}")]
     Timeout { txn: TxnId, target: String },
+}
+
+impl fmt::Display for LockError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LockError::Aborted { txn, target } => {
+                write!(f, "transaction {txn} aborted by wait-die on {target:?}")
+            }
+            LockError::Timeout { txn, target } => {
+                write!(f, "transaction {txn} timed out waiting for {target:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LockError {}
+
+/// Outcome of a successful [`LockManager::acquire`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Acquired {
+    /// First hold of this txn on the target.
+    Fresh,
+    /// Re-entrant hit or in-place mode upgrade on an existing hold.
+    Held,
 }
 
 #[derive(Debug, Default)]
@@ -152,17 +187,25 @@ impl LockManager {
     /// Re-entrant: if the txn already holds a covering mode this is a
     /// no-op; holding a weaker mode upgrades in place (subject to the
     /// same compatibility/wait-die rules against *other* holders).
-    pub fn acquire(&self, txn: TxnId, target: LockTarget, mode: LockMode) -> Result<(), LockError> {
+    /// Returns [`Acquired::Fresh`] only for the txn's first hold on this
+    /// target, so callers can track distinct targets for targeted
+    /// release without recording re-entrant hits.
+    pub fn acquire(
+        &self,
+        txn: TxnId,
+        target: LockTarget,
+        mode: LockMode,
+    ) -> Result<Acquired, LockError> {
         let sid = self.shard_of(&target);
         let (mutex, cond) = &self.shards[sid];
         let mut shard = mutex.lock().unwrap();
         let deadline = std::time::Instant::now() + self.timeout;
         loop {
-            let entry = shard.entries.entry(target.clone()).or_default();
+            let entry = shard.entries.entry(target).or_default();
             let mine = entry.holders.iter().position(|(t, _)| *t == txn);
             if let Some(i) = mine {
                 if entry.holders[i].1.covers(mode) {
-                    return Ok(()); // re-entrant
+                    return Ok(Acquired::Held); // re-entrant
                 }
             }
             let want = match mine {
@@ -178,10 +221,15 @@ impl LockManager {
                 .collect();
             if blockers.is_empty() {
                 match mine {
-                    Some(i) => entry.holders[i].1 = want,
-                    None => entry.holders.push((txn, want)),
+                    Some(i) => {
+                        entry.holders[i].1 = want;
+                        return Ok(Acquired::Held); // in-place upgrade
+                    }
+                    None => {
+                        entry.holders.push((txn, want));
+                        return Ok(Acquired::Fresh);
+                    }
                 }
-                return Ok(());
             }
             // Wait-die: if any blocker is older (smaller id), this txn dies.
             if blockers.iter().any(|b| *b < txn) {
@@ -198,6 +246,32 @@ impl LockManager {
                 return Err(LockError::Timeout { txn, target: format!("{target:?}") });
             }
         }
+    }
+
+    /// Release exactly the given targets for `txn` (strict 2PL release at
+    /// commit/abort when the caller tracked its acquisitions). Touches
+    /// only the shards that actually hold the targets, instead of
+    /// sweeping every shard like [`release_all`](Self::release_all).
+    /// Duplicate targets are harmless. Returns the number released.
+    pub fn release(&self, txn: TxnId, targets: &[LockTarget]) -> usize {
+        let mut released = 0;
+        for target in targets {
+            let sid = self.shard_of(target);
+            let (mutex, cond) = &self.shards[sid];
+            let mut shard = mutex.lock().unwrap();
+            if let Some(entry) = shard.entries.get_mut(target) {
+                let before = entry.holders.len();
+                entry.holders.retain(|(t, _)| *t != txn);
+                if entry.holders.len() != before {
+                    released += 1;
+                    if entry.holders.is_empty() {
+                        shard.entries.remove(target);
+                    }
+                    cond.notify_all();
+                }
+            }
+        }
+        released
     }
 
     /// Release every lock held by `txn` (strict 2PL release at
@@ -231,7 +305,7 @@ impl LockManager {
             for (target, entry) in &shard.entries {
                 for (t, m) in &entry.holders {
                     if *t == txn {
-                        out.push((target.clone(), *m));
+                        out.push((*target, *m));
                     }
                 }
             }
@@ -252,7 +326,7 @@ mod tests {
     use std::sync::Arc;
 
     fn row(k: i64) -> LockTarget {
-        LockTarget::Row(0, Key::single(Value::Int(k)))
+        LockTarget::row(0, &Key::single(Value::Int(k)))
     }
 
     #[test]
@@ -303,6 +377,22 @@ mod tests {
         assert!(!waiter.is_finished(), "older txn should be blocked, not aborted");
         lm.release_all(2);
         waiter.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn targeted_release_wakes_waiters() {
+        let lm = Arc::new(LockManager::default());
+        lm.acquire(2, row(9), LockMode::X).unwrap();
+        lm.acquire(2, LockTarget::Table(0), LockMode::IX).unwrap();
+        let lm2 = Arc::clone(&lm);
+        let waiter = std::thread::spawn(move || lm2.acquire(1, row(9), LockMode::X));
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // Releasing exactly the held targets (with a duplicate) unblocks.
+        let n = lm.release(2, &[row(9), LockTarget::Table(0), row(9)]);
+        assert_eq!(n, 2);
+        waiter.join().unwrap().unwrap();
+        lm.release(1, &[row(9)]);
+        assert_eq!(lm.entry_count(), 0);
     }
 
     #[test]

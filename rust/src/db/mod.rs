@@ -24,16 +24,23 @@
 //! deadlock avoidance, layered over short physical `RwLock` critical
 //! sections per table. Writes are buffered in the transaction and applied
 //! at commit, so read-committed readers never observe uncommitted data.
+//!
+//! The hot path is **prepared-first**: statements are compiled once
+//! ([`prepared::Prepared`]) and executed with positional
+//! [`prepared::BindSlots`]; rows are `Arc`-shared so reads never deep-
+//! copy. See `src/db/README.md` for the architecture.
 
 pub mod engine;
 pub mod lockmgr;
 pub mod plan;
+pub mod prepared;
 pub mod txn;
 pub mod update;
 pub mod value;
 
 pub use engine::{Db, QueryResult, TxnHandle};
 pub use lockmgr::{LockManager, LockMode};
+pub use prepared::{BindSlots, Prepared};
 pub use txn::{IsolationLevel, TxnError};
 pub use update::{StateUpdate, WriteRecord};
 pub use value::{Bindings, Key, Row, Value};

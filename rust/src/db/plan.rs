@@ -1,5 +1,11 @@
 //! Access-path planning: decide how a WHERE predicate selects rows.
 //!
+//! This is the *value-level reference* planner: it inspects concrete
+//! bind values and is kept for tests and analysis tooling. The engine's
+//! execution path plans once per statement at prepare time instead —
+//! [`crate::db::prepared::plan_template`] makes the same decision from
+//! the predicate shape alone and fills values in per execution.
+//!
 //! Three paths, best first:
 //! * **Point**: the predicate pins every primary-key column with an
 //!   equality — O(1) hash lookup, row-level locking.

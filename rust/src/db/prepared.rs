@@ -1,0 +1,657 @@
+//! Prepared statements: compile a [`Stmt`] against a [`Schema`] once,
+//! execute it many times with positional bindings.
+//!
+//! The interpreted execution path re-derived everything per call: it
+//! re-planned the access path, re-hashed string binding names on every
+//! scalar evaluation, and linearly re-resolved column names against the
+//! schema for every row it touched. For the simulated servers in
+//! `cluster::sim` / `conveyor::sim`, which execute millions of statements
+//! per experiment, that tax dominated the single-server hot path.
+//!
+//! Compilation resolves, once per SQL string:
+//!
+//! * **table + column names → indices** ([`CScalar::Col`], [`CPred`]),
+//! * **binding names → integer slots** ([`BindSlots`]; slot order is the
+//!   statement's source order of first occurrence, exposed via
+//!   [`Prepared::params`]),
+//! * the **access-path template** ([`PathTemplate`]): the point /
+//!   index-eq / scan decision depends only on the predicate shape and
+//!   the schema, never on bind values — only the concrete key value is
+//!   filled in per execution,
+//! * the **delta shape** of `SET c = c ± expr` updates ([`SetOp::Delta`]),
+//!   so the logical-redo analysis is not repeated per matched row.
+//!
+//! A name-keyed constructor ([`Prepared::bind`]) is kept for tests,
+//! examples and transaction bodies; it costs one small `Vec` plus one
+//! map lookup per parameter, after which execution is name-free.
+
+use super::value::{numeric_arith, ArithKind, Bindings, Key, Row, Value};
+use crate::catalog::{Schema, TableSchema, ValueType};
+use crate::sqlir::{CmpOp, Pred, Scalar, SelectItem, Stmt};
+
+/// Positional parameter values for one execution of a [`Prepared`]
+/// statement. Slot `i` corresponds to `prepared.params()[i]`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BindSlots(pub Vec<Value>);
+
+impl BindSlots {
+    pub fn new(values: Vec<Value>) -> Self {
+        BindSlots(values)
+    }
+
+    fn get(&self, slot: usize) -> Result<&Value, String> {
+        self.0.get(slot).ok_or_else(|| format!("missing bind slot {slot}"))
+    }
+}
+
+/// A scalar expression with column names resolved to indices and
+/// parameter names resolved to slots.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CScalar {
+    /// Literal constant, pre-converted to a runtime [`Value`].
+    Lit(Value),
+    /// Parameter, resolved to its bind slot.
+    Slot(usize),
+    /// Column of the statement's table, resolved to its index.
+    Col(usize),
+    Add(Box<CScalar>, Box<CScalar>),
+    Sub(Box<CScalar>, Box<CScalar>),
+    Mul(Box<CScalar>, Box<CScalar>),
+}
+
+/// Evaluate a compiled scalar. `row` may be `None` for row-free contexts
+/// (INSERT values, delta expressions).
+pub fn eval_cscalar(s: &CScalar, row: Option<&Row>, slots: &BindSlots) -> Result<Value, String> {
+    match s {
+        CScalar::Lit(v) => Ok(v.clone()),
+        CScalar::Slot(i) => slots.get(*i).cloned(),
+        CScalar::Col(ci) => {
+            let row = row.ok_or_else(|| format!("column #{ci} referenced in row-free context"))?;
+            Ok(row[*ci].clone())
+        }
+        CScalar::Add(a, b) | CScalar::Sub(a, b) | CScalar::Mul(a, b) => {
+            let va = eval_cscalar(a, row, slots)?;
+            let vb = eval_cscalar(b, row, slots)?;
+            let kind = match s {
+                CScalar::Add(..) => ArithKind::Add,
+                CScalar::Sub(..) => ArithKind::Sub,
+                _ => ArithKind::Mul,
+            };
+            numeric_arith(kind, &va, &vb)
+        }
+    }
+}
+
+/// A predicate with resolved columns and slots.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CPred {
+    True,
+    Cmp { col: usize, op: CmpOp, rhs: CScalar },
+    And(Vec<CPred>),
+    Or(Vec<CPred>),
+}
+
+/// Evaluate a compiled predicate against a row.
+pub fn eval_cpred(p: &CPred, row: &Row, slots: &BindSlots) -> Result<bool, String> {
+    match p {
+        CPred::True => Ok(true),
+        CPred::Cmp { col, op, rhs } => {
+            let rv = eval_cscalar(rhs, Some(row), slots)?;
+            Ok(row[*col].sql_cmp(*op, &rv))
+        }
+        CPred::And(ps) => {
+            for p in ps {
+                if !eval_cpred(p, row, slots)? {
+                    return Ok(false);
+                }
+            }
+            Ok(true)
+        }
+        CPred::Or(ps) => {
+            for p in ps {
+                if eval_cpred(p, row, slots)? {
+                    return Ok(true);
+                }
+            }
+            Ok(false)
+        }
+    }
+}
+
+/// Where a key / index-probe value comes from at execution time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ValueSrc {
+    /// Literal, already coerced to the column's declared type.
+    Lit(Value),
+    /// Bind slot; coerced to the column type per execution.
+    Slot(usize, ValueType),
+}
+
+impl ValueSrc {
+    pub fn value(&self, slots: &BindSlots) -> Result<Value, String> {
+        match self {
+            ValueSrc::Lit(v) => Ok(v.clone()),
+            ValueSrc::Slot(i, ty) => Ok(slots.get(*i)?.clone().coerce(*ty)),
+        }
+    }
+}
+
+/// The access-path *template*: the plan decision made once at prepare
+/// time. Per execution only the concrete values are filled in.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PathTemplate {
+    /// Full primary key pinned; one source per PK column, in PK order.
+    Point(Vec<ValueSrc>),
+    /// Equality on a secondary-indexed column.
+    IndexEq { col: usize, src: ValueSrc },
+    /// Full table scan.
+    Scan,
+}
+
+impl PathTemplate {
+    /// Build the concrete primary key for a `Point` template.
+    pub fn point_key(srcs: &[ValueSrc], slots: &BindSlots) -> Result<Key, String> {
+        let mut vals = Vec::with_capacity(srcs.len());
+        for s in srcs {
+            vals.push(s.value(slots)?);
+        }
+        Ok(Key(vals))
+    }
+}
+
+/// One compiled SET action of an UPDATE.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SetOp {
+    /// General assignment `c = expr` (may read row columns).
+    Assign(CScalar),
+    /// `c = c + expr` / `c = c - expr` with a row-independent `expr`:
+    /// recorded as a logical delta so replicated replay merges with the
+    /// replica's own value (see [`crate::db::update::ColOp::Add`]).
+    Delta { expr: CScalar, negate: bool },
+}
+
+/// Compiled SELECT.
+#[derive(Debug, Clone)]
+pub struct PSelect {
+    pub ti: usize,
+    pub where_: CPred,
+    pub path: PathTemplate,
+    /// Resolved projection; empty means `SELECT *`.
+    pub items: Vec<CItem>,
+    pub has_agg: bool,
+    pub order_by: Option<(usize, bool)>,
+    pub limit: Option<u64>,
+}
+
+/// A resolved projection item.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CItem {
+    Col(usize),
+    Count,
+    Max(usize),
+    Min(usize),
+    Sum(usize),
+}
+
+/// Compiled INSERT.
+#[derive(Debug, Clone)]
+pub struct PInsert {
+    pub ti: usize,
+    /// `(column index, row-free value expression)` pairs.
+    pub sets: Vec<(usize, CScalar)>,
+    /// Primary-key column indices, resolved once.
+    pub pk: Vec<usize>,
+}
+
+/// Compiled UPDATE.
+#[derive(Debug, Clone)]
+pub struct PUpdate {
+    pub ti: usize,
+    pub where_: CPred,
+    pub path: PathTemplate,
+    pub sets: Vec<(usize, SetOp)>,
+}
+
+/// Compiled DELETE.
+#[derive(Debug, Clone)]
+pub struct PDelete {
+    pub ti: usize,
+    pub where_: CPred,
+    pub path: PathTemplate,
+}
+
+/// The statement kinds in compiled form.
+#[derive(Debug, Clone)]
+pub enum PreparedKind {
+    Select(PSelect),
+    Insert(PInsert),
+    Update(PUpdate),
+    Delete(PDelete),
+}
+
+/// A statement compiled against a schema: execute with
+/// [`crate::db::TxnHandle::exec_prepared`] or
+/// [`crate::db::Db::exec_auto_prepared`].
+#[derive(Debug, Clone)]
+pub struct Prepared {
+    params: Vec<String>,
+    pub kind: PreparedKind,
+}
+
+impl Prepared {
+    /// Compile `stmt` against `schema`. Errors are SQL-level (unknown
+    /// table / column, PK update, row reference in row-free context).
+    pub fn compile(stmt: &Stmt, schema: &Schema) -> Result<Prepared, String> {
+        let table_name = stmt.table();
+        let ti = schema
+            .table_id(table_name)
+            .ok_or_else(|| format!("unknown table {table_name}"))?;
+        let ts = schema.table(ti);
+
+        // Slot order: source order of first occurrence.
+        let mut params: Vec<String> = Vec::new();
+        for p in stmt.referenced_params() {
+            if !params.iter().any(|q| q == p) {
+                params.push(p.to_string());
+            }
+        }
+
+        let kind = match stmt {
+            Stmt::Select(s) => {
+                let mut items = Vec::with_capacity(s.items.len());
+                for it in &s.items {
+                    items.push(match it {
+                        SelectItem::Col(c) => CItem::Col(col_of(ts, c)?),
+                        SelectItem::Count => CItem::Count,
+                        SelectItem::Max(c) => CItem::Max(col_of(ts, c)?),
+                        SelectItem::Min(c) => CItem::Min(col_of(ts, c)?),
+                        SelectItem::Sum(c) => CItem::Sum(col_of(ts, c)?),
+                    });
+                }
+                let order_by = match &s.order_by {
+                    Some((c, desc)) => Some((
+                        ts.col_index(c)
+                            .ok_or_else(|| format!("unknown ORDER BY column {c}"))?,
+                        *desc,
+                    )),
+                    None => None,
+                };
+                PreparedKind::Select(PSelect {
+                    ti,
+                    where_: cpred(&s.where_, ts, &params)?,
+                    path: plan_template(&s.where_, ts, &params),
+                    has_agg: s.items.iter().any(|i| i.is_aggregate()),
+                    items,
+                    order_by,
+                    limit: s.limit,
+                })
+            }
+            Stmt::Insert(s) => {
+                let mut sets = Vec::with_capacity(s.columns.len());
+                for (col, scalar) in s.columns.iter().zip(&s.values) {
+                    let ci = col_of(ts, col)?;
+                    let cs = cscalar(scalar, ts, &params)?;
+                    if refs_row(&cs) {
+                        return Err(format!("column {col} referenced in row-free context"));
+                    }
+                    sets.push((ci, cs));
+                }
+                PreparedKind::Insert(PInsert { ti, sets, pk: ts.pk_indices() })
+            }
+            Stmt::Update(s) => {
+                let pk = ts.pk_indices();
+                let mut sets = Vec::with_capacity(s.sets.len());
+                for (col, scalar) in &s.sets {
+                    let ci = col_of(ts, col)?;
+                    if pk.contains(&ci) {
+                        return Err(format!(
+                            "updates to primary-key column {col} are unsupported"
+                        ));
+                    }
+                    sets.push((ci, setop(scalar, ci, ts, &params)?));
+                }
+                PreparedKind::Update(PUpdate {
+                    ti,
+                    where_: cpred(&s.where_, ts, &params)?,
+                    path: plan_template(&s.where_, ts, &params),
+                    sets,
+                })
+            }
+            Stmt::Delete(s) => PreparedKind::Delete(PDelete {
+                ti,
+                where_: cpred(&s.where_, ts, &params)?,
+                path: plan_template(&s.where_, ts, &params),
+            }),
+        };
+        Ok(Prepared { params, kind })
+    }
+
+    /// The table this statement touches.
+    pub fn table(&self) -> usize {
+        match &self.kind {
+            PreparedKind::Select(p) => p.ti,
+            PreparedKind::Insert(p) => p.ti,
+            PreparedKind::Update(p) => p.ti,
+            PreparedKind::Delete(p) => p.ti,
+        }
+    }
+
+    /// Parameter names in slot order.
+    pub fn params(&self) -> &[String] {
+        &self.params
+    }
+
+    /// The slot of a named parameter.
+    pub fn slot(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p == name)
+    }
+
+    /// Name-keyed binding constructor (tests / examples / transaction
+    /// bodies): every referenced parameter must be present. Extra entries
+    /// in `binds` are ignored.
+    pub fn bind(&self, binds: &Bindings) -> Result<BindSlots, String> {
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            out.push(
+                binds.get(p).cloned().ok_or_else(|| format!("unbound parameter ?{p}"))?,
+            );
+        }
+        Ok(BindSlots(out))
+    }
+
+    /// Slice-of-pairs binding constructor (avoids building a map).
+    pub fn bind_pairs(&self, pairs: &[(&str, Value)]) -> Result<BindSlots, String> {
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let v = pairs
+                .iter()
+                .find(|(k, _)| k == p)
+                .map(|(_, v)| v.clone())
+                .ok_or_else(|| format!("unbound parameter ?{p}"))?;
+            out.push(v);
+        }
+        Ok(BindSlots(out))
+    }
+}
+
+fn col_of(ts: &TableSchema, name: &str) -> Result<usize, String> {
+    ts.col_index(name)
+        .ok_or_else(|| format!("unknown column {name} in {}", ts.name))
+}
+
+fn slot_of(params: &[String], name: &str) -> Result<usize, String> {
+    params
+        .iter()
+        .position(|p| p == name)
+        .ok_or_else(|| format!("internal: parameter ?{name} missing from slot table"))
+}
+
+fn cscalar(s: &Scalar, ts: &TableSchema, params: &[String]) -> Result<CScalar, String> {
+    Ok(match s {
+        Scalar::Lit(l) => CScalar::Lit(Value::from_literal(l)),
+        Scalar::Param(p) => CScalar::Slot(slot_of(params, p)?),
+        Scalar::Col(c) => CScalar::Col(col_of(ts, c)?),
+        Scalar::Add(a, b) => {
+            CScalar::Add(Box::new(cscalar(a, ts, params)?), Box::new(cscalar(b, ts, params)?))
+        }
+        Scalar::Sub(a, b) => {
+            CScalar::Sub(Box::new(cscalar(a, ts, params)?), Box::new(cscalar(b, ts, params)?))
+        }
+        Scalar::Mul(a, b) => {
+            CScalar::Mul(Box::new(cscalar(a, ts, params)?), Box::new(cscalar(b, ts, params)?))
+        }
+    })
+}
+
+fn refs_row(s: &CScalar) -> bool {
+    match s {
+        CScalar::Col(_) => true,
+        CScalar::Add(a, b) | CScalar::Sub(a, b) | CScalar::Mul(a, b) => {
+            refs_row(a) || refs_row(b)
+        }
+        _ => false,
+    }
+}
+
+fn cpred(p: &Pred, ts: &TableSchema, params: &[String]) -> Result<CPred, String> {
+    Ok(match p {
+        Pred::True => CPred::True,
+        Pred::Cmp { col, op, rhs } => CPred::Cmp {
+            col: col_of(ts, col)?,
+            op: *op,
+            rhs: cscalar(rhs, ts, params)?,
+        },
+        Pred::And(ps) => {
+            CPred::And(ps.iter().map(|p| cpred(p, ts, params)).collect::<Result<_, _>>()?)
+        }
+        Pred::Or(ps) => {
+            CPred::Or(ps.iter().map(|p| cpred(p, ts, params)).collect::<Result<_, _>>()?)
+        }
+    })
+}
+
+/// Compile the delta shape of one SET action: `c = c ± expr` with `expr`
+/// reading no row columns becomes [`SetOp::Delta`]; everything else is a
+/// general [`SetOp::Assign`]. Mirrors the shape analysis the interpreted
+/// path ran per execution.
+fn setop(
+    scalar: &Scalar,
+    target_ci: usize,
+    ts: &TableSchema,
+    params: &[String],
+) -> Result<SetOp, String> {
+    let (lhs, rhs, negate) = match scalar {
+        Scalar::Add(a, b) => (a, b, false),
+        Scalar::Sub(a, b) => (a, b, true),
+        _ => return Ok(SetOp::Assign(cscalar(scalar, ts, params)?)),
+    };
+    if let Scalar::Col(c) = &**lhs {
+        if ts.col_index(c) == Some(target_ci) {
+            let expr = cscalar(rhs, ts, params)?;
+            if !refs_row(&expr) {
+                return Ok(SetOp::Delta { expr, negate });
+            }
+        }
+    }
+    Ok(SetOp::Assign(cscalar(scalar, ts, params)?))
+}
+
+/// Collect `col = <slot|literal>` equalities from the top-level
+/// conjunction (disjunctions and non-equalities contribute nothing).
+fn collect_eq_srcs(p: &Pred, ts: &TableSchema, params: &[String], out: &mut Vec<(usize, ValueSrc)>) {
+    match p {
+        Pred::Cmp { col, op: CmpOp::Eq, rhs } => {
+            if let Some(ci) = ts.col_index(col) {
+                let ty = ts.columns[ci].ty;
+                match rhs {
+                    Scalar::Lit(l) => {
+                        out.push((ci, ValueSrc::Lit(Value::from_literal(l).coerce(ty))));
+                    }
+                    Scalar::Param(name) => {
+                        if let Ok(slot) = slot_of(params, name) {
+                            out.push((ci, ValueSrc::Slot(slot, ty)));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Pred::And(ps) => {
+            for p in ps {
+                collect_eq_srcs(p, ts, params, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Plan the access-path template for `pred` over `ts`. The decision
+/// depends only on the predicate shape and the schema — bind values are
+/// filled per execution.
+pub fn plan_template(pred: &Pred, ts: &TableSchema, params: &[String]) -> PathTemplate {
+    let mut eqs = Vec::new();
+    collect_eq_srcs(pred, ts, params, &mut eqs);
+
+    // Point access: every PK column pinned.
+    let pk = ts.pk_indices();
+    let mut srcs = Vec::with_capacity(pk.len());
+    for pkc in &pk {
+        match eqs.iter().find(|(c, _)| c == pkc) {
+            Some((_, s)) => srcs.push(s.clone()),
+            None => {
+                srcs.clear();
+                break;
+            }
+        }
+    }
+    if !srcs.is_empty() && srcs.len() == pk.len() {
+        return PathTemplate::Point(srcs);
+    }
+    // Secondary index equality.
+    for idx_col in &ts.indexes {
+        if let Some(ci) = ts.col_index(idx_col) {
+            if let Some((_, s)) = eqs.iter().find(|(c, _)| *c == ci) {
+                return PathTemplate::IndexEq { col: ci, src: s.clone() };
+            }
+        }
+    }
+    PathTemplate::Scan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{TableSchema, ValueType};
+    use crate::sqlir::parse_statement;
+
+    fn schema() -> Schema {
+        Schema::new(vec![TableSchema::new(
+            "SC",
+            &[
+                ("ID", ValueType::Int),
+                ("I_ID", ValueType::Int),
+                ("QTY", ValueType::Int),
+                ("OWNER", ValueType::Int),
+            ],
+            &["ID", "I_ID"],
+        )
+        .with_index("OWNER")])
+    }
+
+    fn prep(sql: &str) -> Prepared {
+        Prepared::compile(&parse_statement(sql).unwrap(), &schema()).unwrap()
+    }
+
+    #[test]
+    fn point_template_when_full_pk_pinned() {
+        let p = prep("SELECT * FROM SC WHERE ID = ?sid AND I_ID = ?iid");
+        assert_eq!(p.params(), &["sid".to_string(), "iid".to_string()]);
+        let PreparedKind::Select(s) = &p.kind else { panic!() };
+        assert_eq!(
+            s.path,
+            PathTemplate::Point(vec![
+                ValueSrc::Slot(0, ValueType::Int),
+                ValueSrc::Slot(1, ValueType::Int)
+            ])
+        );
+        let key = PathTemplate::point_key(
+            match &s.path {
+                PathTemplate::Point(srcs) => srcs,
+                _ => unreachable!(),
+            },
+            &BindSlots(vec![Value::Int(5), Value::Int(9)]),
+        )
+        .unwrap();
+        assert_eq!(key, Key(vec![Value::Int(5), Value::Int(9)]));
+    }
+
+    #[test]
+    fn partial_pk_falls_to_scan_or_index() {
+        let p = prep("SELECT * FROM SC WHERE ID = ?sid");
+        let PreparedKind::Select(s) = &p.kind else { panic!() };
+        assert_eq!(s.path, PathTemplate::Scan);
+        let p = prep("SELECT * FROM SC WHERE OWNER = ?u");
+        let PreparedKind::Select(s) = &p.kind else { panic!() };
+        assert_eq!(
+            s.path,
+            PathTemplate::IndexEq { col: 3, src: ValueSrc::Slot(0, ValueType::Int) }
+        );
+    }
+
+    #[test]
+    fn disjunction_and_ranges_scan() {
+        let p = prep("SELECT * FROM SC WHERE (ID = ?a AND I_ID = ?b) OR QTY = 0");
+        let PreparedKind::Select(s) = &p.kind else { panic!() };
+        assert_eq!(s.path, PathTemplate::Scan);
+        let p = prep("SELECT * FROM SC WHERE QTY > 3");
+        let PreparedKind::Select(s) = &p.kind else { panic!() };
+        assert_eq!(s.path, PathTemplate::Scan);
+    }
+
+    #[test]
+    fn literal_key_is_precoerced() {
+        let p = prep("SELECT * FROM SC WHERE ID = 3.0 AND I_ID = 4");
+        let PreparedKind::Select(s) = &p.kind else { panic!() };
+        assert_eq!(
+            s.path,
+            PathTemplate::Point(vec![
+                ValueSrc::Lit(Value::Int(3)),
+                ValueSrc::Lit(Value::Int(4))
+            ])
+        );
+    }
+
+    #[test]
+    fn delta_shape_detected_once() {
+        let p = prep("UPDATE SC SET QTY = QTY - ?q WHERE ID = ?sid AND I_ID = ?iid");
+        let PreparedKind::Update(u) = &p.kind else { panic!() };
+        assert_eq!(u.sets.len(), 1);
+        assert_eq!(u.sets[0].0, 2);
+        assert_eq!(u.sets[0].1, SetOp::Delta { expr: CScalar::Slot(0), negate: true });
+        // General assignment stays Assign.
+        let p = prep("UPDATE SC SET QTY = ?q WHERE ID = ?sid AND I_ID = ?iid");
+        let PreparedKind::Update(u) = &p.kind else { panic!() };
+        assert_eq!(u.sets[0].1, SetOp::Assign(CScalar::Slot(0)));
+    }
+
+    #[test]
+    fn pk_update_rejected_at_compile_time() {
+        let err =
+            Prepared::compile(&parse_statement("UPDATE SC SET ID = 1").unwrap(), &schema())
+                .unwrap_err();
+        assert!(err.contains("primary-key"), "{err}");
+    }
+
+    #[test]
+    fn bind_resolves_names_to_slots() {
+        let p = prep("SELECT QTY FROM SC WHERE I_ID = ?iid AND ID = ?sid");
+        // Source order of first occurrence: iid before sid.
+        assert_eq!(p.slot("iid"), Some(0));
+        assert_eq!(p.slot("sid"), Some(1));
+        let slots = p
+            .bind_pairs(&[("sid", Value::Int(1)), ("iid", Value::Int(2))])
+            .unwrap();
+        assert_eq!(slots, BindSlots(vec![Value::Int(2), Value::Int(1)]));
+        let err = p.bind_pairs(&[("sid", Value::Int(1))]).unwrap_err();
+        assert!(err.contains("unbound parameter ?iid"), "{err}");
+    }
+
+    #[test]
+    fn eval_cpred_matches_rows() {
+        let p = prep("SELECT * FROM SC WHERE QTY >= 5 AND OWNER = ?u");
+        let PreparedKind::Select(s) = &p.kind else { panic!() };
+        let row = vec![Value::Int(1), Value::Int(2), Value::Int(7), Value::Int(4)];
+        let yes = BindSlots(vec![Value::Int(4)]);
+        let no = BindSlots(vec![Value::Int(9)]);
+        assert!(eval_cpred(&s.where_, &row, &yes).unwrap());
+        assert!(!eval_cpred(&s.where_, &row, &no).unwrap());
+    }
+
+    #[test]
+    fn unknown_column_errors_at_compile_time() {
+        let err =
+            Prepared::compile(&parse_statement("SELECT * FROM SC WHERE NOPE = 1").unwrap(), &schema())
+                .unwrap_err();
+        assert!(err.contains("unknown column"), "{err}");
+    }
+}

@@ -4,6 +4,8 @@ use super::lockmgr::LockError;
 use super::update::StateUpdate;
 use super::value::{Key, Row};
 use std::collections::HashMap;
+use std::fmt;
+use std::sync::Arc;
 
 /// Isolation levels the engine offers.
 ///
@@ -20,18 +22,42 @@ pub enum IsolationLevel {
 }
 
 /// Errors surfaced to transaction code.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum TxnError {
     /// Wait-die abort or lock timeout; the caller should retry the whole
     /// transaction (the harness and Conveyor Belt servers do).
-    #[error("lock conflict: {0}")]
-    Lock(#[from] LockError),
-    #[error("duplicate primary key {key} in table {table}")]
+    Lock(LockError),
     DuplicateKey { table: String, key: String },
-    #[error("sql error: {0}")]
     Sql(String),
-    #[error("transaction already finished")]
     Finished,
+}
+
+impl fmt::Display for TxnError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TxnError::Lock(e) => write!(f, "lock conflict: {e}"),
+            TxnError::DuplicateKey { table, key } => {
+                write!(f, "duplicate primary key {key} in table {table}")
+            }
+            TxnError::Sql(msg) => write!(f, "sql error: {msg}"),
+            TxnError::Finished => write!(f, "transaction already finished"),
+        }
+    }
+}
+
+impl std::error::Error for TxnError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TxnError::Lock(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<LockError> for TxnError {
+    fn from(e: LockError) -> Self {
+        TxnError::Lock(e)
+    }
 }
 
 impl TxnError {
@@ -43,23 +69,42 @@ impl TxnError {
 }
 
 /// The buffered, not-yet-committed effects of a running transaction.
+///
+/// Rows are shared via `Arc`: the read path hands out handles into
+/// committed storage without deep-cloning; a write clones the row once
+/// (copy-on-write) when it builds the new image.
 #[derive(Debug, Default)]
 pub struct TxnState {
-    /// Write overlay: `Some(row)` = inserted/updated image, `None` =
-    /// deleted. Reads go through this before committed storage.
-    pub overlay: HashMap<(usize, Key), Option<Row>>,
+    /// Write overlay per table: `Some(row)` = inserted/updated image,
+    /// `None` = deleted. Reads go through this before committed storage.
+    pub overlay: HashMap<usize, HashMap<Key, Option<Arc<Row>>>>,
     /// Ordered redo log — becomes the operation's [`StateUpdate`].
     pub update: StateUpdate,
 }
 
 impl TxnState {
+    /// Record an overlay image for `(table, key)`.
+    pub fn overlay_put(&mut self, table: usize, key: Key, img: Option<Arc<Row>>) {
+        self.overlay.entry(table).or_default().insert(key, img);
+    }
+
+    /// The overlay entries of one table (scan/index paths).
+    pub fn overlay_table(&self, table: usize) -> Option<&HashMap<Key, Option<Arc<Row>>>> {
+        self.overlay.get(&table)
+    }
+
+    /// The row image visible to this transaction: its own overlay first,
+    /// then the committed row. No key clone, no row clone.
     pub fn visible<'a>(
         &'a self,
         table: usize,
         key: &Key,
-        committed: Option<&'a Row>,
-    ) -> Option<&'a Row> {
-        match self.overlay.get(&(table, key.clone())) {
+        committed: Option<&'a Arc<Row>>,
+    ) -> Option<&'a Arc<Row>> {
+        if self.overlay.is_empty() {
+            return committed;
+        }
+        match self.overlay.get(&table).and_then(|m| m.get(key)) {
             Some(Some(row)) => Some(row),
             Some(None) => None,
             None => committed,
@@ -76,19 +121,22 @@ mod tests {
     fn overlay_precedence() {
         let mut st = TxnState::default();
         let key = Key::single(Value::Int(1));
-        let committed = vec![Value::Int(1), Value::Int(10)];
+        let committed = Arc::new(vec![Value::Int(1), Value::Int(10)]);
 
         // No overlay: committed row visible.
         assert_eq!(st.visible(0, &key, Some(&committed)), Some(&committed));
 
         // Updated: overlay image wins.
-        let img = vec![Value::Int(1), Value::Int(99)];
-        st.overlay.insert((0, key.clone()), Some(img.clone()));
+        let img = Arc::new(vec![Value::Int(1), Value::Int(99)]);
+        st.overlay_put(0, key.clone(), Some(Arc::clone(&img)));
         assert_eq!(st.visible(0, &key, Some(&committed)), Some(&img));
 
         // Deleted: nothing visible even though committed exists.
-        st.overlay.insert((0, key.clone()), None);
+        st.overlay_put(0, key.clone(), None);
         assert_eq!(st.visible(0, &key, Some(&committed)), None);
+
+        // Other tables unaffected.
+        assert_eq!(st.visible(1, &key, Some(&committed)), Some(&committed));
     }
 
     #[test]

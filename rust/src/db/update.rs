@@ -11,6 +11,7 @@
 
 use super::value::{Key, Row, Value};
 use std::fmt;
+use std::sync::Arc;
 
 /// How one column changes in a logical update record.
 ///
@@ -44,11 +45,14 @@ impl ColOp {
     }
 }
 
-/// One logical mutation.
+/// One logical mutation. Inserted rows are `Arc`-shared with the
+/// transaction overlay and committed storage, so buffering, commit and
+/// replicated replay never deep-copy the row (and cloning a
+/// [`StateUpdate`] as a token payload is refcount-cheap).
 #[derive(Debug, Clone, PartialEq)]
 pub enum WriteRecord {
     /// Insert a full row into `table`.
-    Insert { table: usize, key: Key, row: Row },
+    Insert { table: usize, key: Key, row: Arc<Row> },
     /// Change columns `(col_idx, op)` of the row at `key`.
     Update { table: usize, key: Key, cols: Vec<(usize, ColOp)> },
     /// Delete the row at `key`.
@@ -142,7 +146,7 @@ mod tests {
         u.push(WriteRecord::Insert {
             table: 0,
             key: Key::single(Value::Int(1)),
-            row: vec![Value::Int(1)],
+            row: Arc::new(vec![Value::Int(1)]),
         });
         u.push(WriteRecord::Delete { table: 0, key: Key::single(Value::Int(1)) });
         assert_eq!(u.len(), 2);
@@ -159,7 +163,7 @@ mod tests {
             records: vec![WriteRecord::Insert {
                 table: 0,
                 key: Key::single(Value::Int(1)),
-                row: vec![Value::Str("x".repeat(100))],
+                row: Arc::new(vec![Value::Str("x".repeat(100))]),
             }],
         };
         assert!(big.wire_size() > small.wire_size() + 90);

@@ -195,6 +195,17 @@ impl Key {
     pub fn single(v: Value) -> Key {
         Key(vec![v])
     }
+
+    /// Deterministic 64-bit hash used to address row locks by value
+    /// instead of by cloned key (see [`crate::db::lockmgr::LockTarget`]).
+    /// A collision merges two lock targets, which is safe: coarser
+    /// locking can only add blocking, never remove it.
+    pub fn lock_hash(&self) -> u64 {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.0.len().hash(&mut h);
+        self.hash(&mut h);
+        h.finish()
+    }
 }
 
 impl fmt::Display for Key {
@@ -204,7 +215,10 @@ impl fmt::Display for Key {
     }
 }
 
-/// Parameter bindings for executing a statement.
+/// Name-keyed parameter bindings. This is the *convenience* form used by
+/// tests, examples and transaction bodies; the engine's hot path resolves
+/// names to integer slots once at prepare time (see
+/// [`crate::db::prepared::BindSlots`]).
 pub type Bindings = HashMap<String, Value>;
 
 /// Evaluate a [`Scalar`] given the current row (for `Col` references) and
@@ -229,22 +243,36 @@ pub fn eval_scalar(
         Scalar::Add(a, b) | Scalar::Sub(a, b) | Scalar::Mul(a, b) => {
             let va = eval_scalar(a, row, col_of, binds)?;
             let vb = eval_scalar(b, row, col_of, binds)?;
-            numeric_binop(scalar, &va, &vb)
+            let kind = match scalar {
+                Scalar::Add(..) => ArithKind::Add,
+                Scalar::Sub(..) => ArithKind::Sub,
+                _ => ArithKind::Mul,
+            };
+            numeric_arith(kind, &va, &vb)
         }
     }
 }
 
-fn numeric_binop(op: &Scalar, a: &Value, b: &Value) -> Result<Value, String> {
+/// Arithmetic operator kinds shared by the interpreted ([`eval_scalar`])
+/// and compiled ([`crate::db::prepared`]) evaluators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArithKind {
+    Add,
+    Sub,
+    Mul,
+}
+
+/// SQL arithmetic: NULL propagates, integer ops stay integer, anything
+/// else goes through f64.
+pub fn numeric_arith(kind: ArithKind, a: &Value, b: &Value) -> Result<Value, String> {
     if matches!(a, Value::Null) || matches!(b, Value::Null) {
         return Ok(Value::Null);
     }
-    // Integer arithmetic stays integer; anything else goes through f64.
     if let (Value::Int(x), Value::Int(y)) = (a, b) {
-        let r = match op {
-            Scalar::Add(..) => x.wrapping_add(*y),
-            Scalar::Sub(..) => x.wrapping_sub(*y),
-            Scalar::Mul(..) => x.wrapping_mul(*y),
-            _ => unreachable!(),
+        let r = match kind {
+            ArithKind::Add => x.wrapping_add(*y),
+            ArithKind::Sub => x.wrapping_sub(*y),
+            ArithKind::Mul => x.wrapping_mul(*y),
         };
         return Ok(Value::Int(r));
     }
@@ -252,11 +280,10 @@ fn numeric_binop(op: &Scalar, a: &Value, b: &Value) -> Result<Value, String> {
         (Some(x), Some(y)) => (x, y),
         _ => return Err(format!("arithmetic on non-numeric values {a} and {b}")),
     };
-    let r = match op {
-        Scalar::Add(..) => x + y,
-        Scalar::Sub(..) => x - y,
-        Scalar::Mul(..) => x * y,
-        _ => unreachable!(),
+    let r = match kind {
+        ArithKind::Add => x + y,
+        ArithKind::Sub => x - y,
+        ArithKind::Mul => x * y,
     };
     Ok(Value::Float(r))
 }

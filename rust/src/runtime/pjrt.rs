@@ -1,0 +1,189 @@
+//! PJRT runtime: load the AOT-compiled partition-cost artifact (HLO text
+//! produced by `python/compile/aot.py`) and execute it from the
+//! partitioning search hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L2 JAX
+//! graph (which calls the L1 Pallas kernel) to HLO *text* once; this
+//! module loads it with `HloModuleProto::from_text_file`, compiles it on
+//! the PJRT CPU client, and exposes it as a [`BatchScorer`] for
+//! [`crate::analysis::partition::optimize`].
+//!
+//! Artifact contract (shapes fixed at AOT time, see `python/compile/model.py`):
+//!
+//! ```text
+//! inputs : cand [B, T, K] f32 one-hot   — candidate partitioning arrays
+//!          cw   [T, T]    f32           — conflict[t,t'] * (w(t)+w(t'))
+//!          elim [T, T, K, K] f32        — coverage bits
+//! output : cost [B] f32
+//! cost[b] = Σ_{t,t'} cw[t,t'] · (1 − Σ_{k,k'} cand[b,t,k]·cand[b,t',k']·elim[t,t',k,k'])
+//! ```
+
+use crate::analysis::elim::EliminationTensor;
+use crate::analysis::score::{Assignment, BatchScorer};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Padded shapes baked into the artifact. Must match `python/compile/model.py`.
+pub const ARTIFACT_B: usize = 256;
+pub const ARTIFACT_T: usize = 32;
+pub const ARTIFACT_K: usize = 8;
+
+/// Default artifact file name.
+pub const ARTIFACT_FILE: &str = "partition_cost.hlo.txt";
+
+/// Resolve the artifacts directory: `$ELIA_ARTIFACTS`, else `./artifacts`,
+/// else `<crate root>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("ELIA_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let local = PathBuf::from("artifacts");
+    if local.exists() {
+        return local;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A compiled partition-cost evaluator.
+///
+/// Thread-safety: PJRT execution itself is thread-safe, but we guard
+/// execution with a mutex to keep buffer lifetimes simple — the search
+/// calls are already batched so this is not a bottleneck.
+pub struct CostEvaluator {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    platform: String,
+}
+
+// SAFETY: the `xla` crate's PJRT wrappers hold `Rc` handles, making them
+// !Send/!Sync even though the underlying PJRT CPU client is thread-safe.
+// Every access to `exe` (the only wrapper we retain, owning the only Rc
+// chain to the client) goes through the Mutex, so Rc refcount updates are
+// serialized and never race.
+unsafe impl Send for CostEvaluator {}
+unsafe impl Sync for CostEvaluator {}
+
+impl std::fmt::Debug for CostEvaluator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CostEvaluator").field("platform", &self.platform).finish()
+    }
+}
+
+impl CostEvaluator {
+    /// Load and compile the artifact at `path`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let platform = client.platform_name();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(CostEvaluator { exe: Mutex::new(exe), platform })
+    }
+
+    /// Load the default artifact if present (`None` if not built yet).
+    pub fn try_default() -> Option<Self> {
+        let path = artifacts_dir().join(ARTIFACT_FILE);
+        if !path.exists() {
+            return None;
+        }
+        match Self::load(&path) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("warning: failed to load {}: {err:#}", path.display());
+                None
+            }
+        }
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Score up to [`ARTIFACT_B`] assignments in one artifact execution.
+    fn score_chunk(&self, tensor: &EliminationTensor, chunk: &[Assignment]) -> Result<Vec<f64>> {
+        assert!(chunk.len() <= ARTIFACT_B);
+        assert!(
+            tensor.n <= ARTIFACT_T && tensor.kmax <= ARTIFACT_K,
+            "application exceeds artifact padding (T={} K={})",
+            tensor.n,
+            tensor.kmax
+        );
+        // One-hot candidates, padded.
+        let mut cand = vec![0f32; ARTIFACT_B * ARTIFACT_T * ARTIFACT_K];
+        for (b, assign) in chunk.iter().enumerate() {
+            for (t, choice) in assign.iter().enumerate() {
+                if let Some(k) = choice {
+                    cand[(b * ARTIFACT_T + t) * ARTIFACT_K + k] = 1.0;
+                }
+            }
+        }
+        let (cw, elim) = tensor.to_f32(ARTIFACT_T, ARTIFACT_K);
+
+        let cand_lit = xla::Literal::vec1(&cand)
+            .reshape(&[ARTIFACT_B as i64, ARTIFACT_T as i64, ARTIFACT_K as i64])?;
+        let cw_lit = xla::Literal::vec1(&cw).reshape(&[ARTIFACT_T as i64, ARTIFACT_T as i64])?;
+        let elim_lit = xla::Literal::vec1(&elim).reshape(&[
+            ARTIFACT_T as i64,
+            ARTIFACT_T as i64,
+            ARTIFACT_K as i64,
+            ARTIFACT_K as i64,
+        ])?;
+
+        let exe = self.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&[cand_lit, cw_lit, elim_lit])?[0][0]
+            .to_literal_sync()?;
+        drop(exe);
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let costs: Vec<f32> = out.to_vec()?;
+        anyhow::ensure!(costs.len() == ARTIFACT_B, "bad output length {}", costs.len());
+        Ok(costs[..chunk.len()].iter().map(|&x| x as f64).collect())
+    }
+}
+
+impl BatchScorer for CostEvaluator {
+    fn score(&self, tensor: &EliminationTensor, batch: &[Assignment]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(batch.len());
+        for chunk in batch.chunks(ARTIFACT_B) {
+            match self.score_chunk(tensor, chunk) {
+                Ok(mut v) => out.append(&mut v),
+                Err(e) => panic!("artifact scoring failed: {e:#}"),
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-pallas"
+    }
+}
+
+/// Smoke helper: report the PJRT platform (used by the CLI `doctor`
+/// command and tests).
+pub fn platform() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(client.platform_name())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pjrt_cpu_client_comes_up() {
+        let p = platform().expect("PJRT CPU client");
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+
+    // Full artifact-vs-scalar parity lives in rust/tests/cost_parity.rs
+    // (it needs `make artifacts` to have run).
+}

@@ -1,0 +1,93 @@
+//! Offline stand-in for the PJRT-backed [`CostEvaluator`]: same surface,
+//! artifact always reported as unavailable. Keeps the crate building
+//! with zero external dependencies (see `runtime/mod.rs`).
+
+use crate::analysis::elim::EliminationTensor;
+use crate::analysis::score::{Assignment, BatchScorer};
+use std::path::{Path, PathBuf};
+
+/// Padded shapes baked into the artifact. Must match `python/compile/model.py`.
+pub const ARTIFACT_B: usize = 256;
+pub const ARTIFACT_T: usize = 32;
+pub const ARTIFACT_K: usize = 8;
+
+/// Default artifact file name.
+pub const ARTIFACT_FILE: &str = "partition_cost.hlo.txt";
+
+/// Resolve the artifacts directory: `$ELIA_ARTIFACTS`, else `./artifacts`,
+/// else `<crate root>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("ELIA_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let local = PathBuf::from("artifacts");
+    if local.exists() {
+        return local;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+const UNAVAILABLE: &str =
+    "PJRT runtime not built: enable the `pjrt` cargo feature (requires the xla crate)";
+
+/// Uninhabited in the stub build: [`CostEvaluator::load`] always fails
+/// and [`CostEvaluator::try_default`] always returns `None`.
+pub struct CostEvaluator {
+    _priv: std::convert::Infallible,
+}
+
+impl std::fmt::Debug for CostEvaluator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CostEvaluator").field("platform", &"stub").finish()
+    }
+}
+
+impl CostEvaluator {
+    /// Always fails in the stub build.
+    pub fn load(_path: &Path) -> Result<Self, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    /// Always `None` in the stub build (callers fall back to the scalar
+    /// scorer).
+    pub fn try_default() -> Option<Self> {
+        None
+    }
+
+    pub fn platform(&self) -> &str {
+        unreachable!("stub CostEvaluator cannot be constructed")
+    }
+}
+
+impl BatchScorer for CostEvaluator {
+    fn score(&self, _tensor: &EliminationTensor, _batch: &[Assignment]) -> Vec<f64> {
+        unreachable!("stub CostEvaluator cannot be constructed")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+/// Report the PJRT platform; always an error in the stub build.
+pub fn platform() -> Result<String, String> {
+    Err(UNAVAILABLE.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(CostEvaluator::try_default().is_none());
+        assert!(CostEvaluator::load(Path::new("/nonexistent")).is_err());
+        assert!(platform().is_err());
+    }
+}

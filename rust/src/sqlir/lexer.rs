@@ -50,12 +50,19 @@ impl fmt::Display for Token {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("lex error at byte {pos}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LexError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lex error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
 
 /// Tokenize `input`. Whitespace separates tokens; strings use single
 /// quotes with `''` escaping.

@@ -3,12 +3,34 @@
 use super::ast::*;
 use super::lexer::{lex, LexError, Token};
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ParseError {
-    #[error(transparent)]
-    Lex(#[from] LexError),
-    #[error("parse error: {0}")]
+    Lex(LexError),
     Syntax(String),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Lex(e) => e.fmt(f),
+            ParseError::Syntax(msg) => write!(f, "parse error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ParseError::Lex(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<LexError> for ParseError {
+    fn from(e: LexError) -> Self {
+        ParseError::Lex(e)
+    }
 }
 
 /// Parse a single statement of the SQL subset.

@@ -3,8 +3,7 @@
 //! execution time per operation (local or global).
 
 use crate::catalog::{Schema, TableSchema, ValueType};
-use crate::db::{Bindings, Db, Value};
-use crate::sqlir::parse_statement;
+use crate::db::{Db, Value};
 use crate::util::Rng;
 use crate::workload::analyzed::AnalyzedApp;
 use crate::workload::generator::OpGenerator;
@@ -68,15 +67,14 @@ pub fn analyzed() -> AnalyzedApp {
 }
 
 pub fn seed(db: &Db) {
-    let lt = parse_statement("INSERT INTO LOCAL_TAB (K, V) VALUES (?k, 0)").unwrap();
-    let gt = parse_statement("INSERT INTO GLOBAL_TAB (G, V) VALUES (?g, 0)").unwrap();
+    use crate::db::BindSlots;
+    let lt = db.prepare_sql("INSERT INTO LOCAL_TAB (K, V) VALUES (?k, 0)").unwrap();
+    let gt = db.prepare_sql("INSERT INTO GLOBAL_TAB (G, V) VALUES (?g, 0)").unwrap();
     for k in 0..LOCAL_KEYS {
-        let b: Bindings = [("k".to_string(), Value::Int(k))].into_iter().collect();
-        db.exec_auto(&lt, &b).unwrap();
+        db.exec_auto_prepared(&lt, &BindSlots(vec![Value::Int(k)])).unwrap();
     }
     for g in 0..GLOBAL_KEYS {
-        let b: Bindings = [("g".to_string(), Value::Int(g))].into_iter().collect();
-        db.exec_auto(&gt, &b).unwrap();
+        db.exec_auto_prepared(&gt, &BindSlots(vec![Value::Int(g)])).unwrap();
     }
 }
 
@@ -117,6 +115,8 @@ impl OpGenerator for MicroGenerator {
 mod tests {
     use super::*;
     use crate::analysis::OpClass;
+    use crate::db::Bindings;
+    use crate::sqlir::parse_statement;
     use crate::workload::analyzed::Route;
 
     #[test]
@@ -162,7 +162,7 @@ mod tests {
         seed(&db);
         for (txn, k) in [(0usize, 5i64), (1, 9)] {
             let tpl = &app.spec.txns[txn];
-            let stmts = tpl.stmt_map();
+            let stmts = tpl.prepared_map(&app.spec.schema);
             let mut h = db.begin();
             let mut ctx = crate::workload::spec::TxnCtx::new(&mut h, &stmts);
             let args: Bindings = [("k".to_string(), Value::Int(k))].into_iter().collect();

@@ -15,7 +15,6 @@
 
 use crate::catalog::{Schema, TableSchema, ValueType};
 use crate::db::{Bindings, Db, Value};
-use crate::sqlir::parse_statement;
 use crate::util::Rng;
 use crate::workload::analyzed::AnalyzedApp;
 use crate::workload::generator::OpGenerator;
@@ -396,60 +395,48 @@ pub fn analyzed() -> AnalyzedApp {
     app
 }
 
-/// Seed a server database.
+/// Seed a server database (prepare once per statement — the loader runs
+/// one insert per row at full scale).
 pub fn seed(db: &Db, scale: RubisScale) {
-    let exec = |sql: &str, binds: &Bindings| {
-        let stmt = parse_statement(sql).unwrap();
-        db.exec_auto(&stmt, binds).unwrap();
+    let exec = |p: &crate::db::Prepared, pairs: &[(&str, Value)]| {
+        db.exec_auto_prepared(p, &p.bind_pairs(pairs).unwrap()).unwrap();
     };
     let mut rng = Rng::new(0x28B15);
+    let ins = db.prepare_sql("INSERT INTO CATEGORIES (C_ID, C_NAME) VALUES (?i, ?n)").unwrap();
     for c in 0..scale.categories {
-        exec(
-            "INSERT INTO CATEGORIES (C_ID, C_NAME) VALUES (?i, ?n)",
-            &[
-                ("i".to_string(), Value::Int(c)),
-                ("n".to_string(), Value::Str(format!("cat{c}"))),
-            ]
-            .into_iter()
-            .collect(),
-        );
+        exec(&ins, &[("i", Value::Int(c)), ("n", Value::Str(format!("cat{c}")))]);
     }
+    let ins = db.prepare_sql("INSERT INTO REGIONS (R_ID, R_NAME) VALUES (?i, ?n)").unwrap();
     for r in 0..scale.regions {
-        exec(
-            "INSERT INTO REGIONS (R_ID, R_NAME) VALUES (?i, ?n)",
-            &[
-                ("i".to_string(), Value::Int(r)),
-                ("n".to_string(), Value::Str(format!("region{r}"))),
-            ]
-            .into_iter()
-            .collect(),
-        );
+        exec(&ins, &[("i", Value::Int(r)), ("n", Value::Str(format!("region{r}")))]);
     }
+    let ins = db
+        .prepare_sql("INSERT INTO USERS (U_ID, U_NAME, U_EMAIL, U_REGION, U_RATING, U_NB_BIDS, U_NB_BOUGHT, U_NB_SOLD, U_NB_ITEMS, U_NB_COMMENTS, U_NB_RATINGS) VALUES (?i, ?n, 'e', ?r, 0, 0, 0, 0, 0, 0, 0)")
+        .unwrap();
     for u in 0..scale.users {
         exec(
-            "INSERT INTO USERS (U_ID, U_NAME, U_EMAIL, U_REGION, U_RATING, U_NB_BIDS, U_NB_BOUGHT, U_NB_SOLD, U_NB_ITEMS, U_NB_COMMENTS, U_NB_RATINGS) VALUES (?i, ?n, 'e', ?r, 0, 0, 0, 0, 0, 0, 0)",
+            &ins,
             &[
-                ("i".to_string(), Value::Int(u)),
-                ("n".to_string(), Value::Str(format!("user{u}"))),
-                ("r".to_string(), Value::Int(u % scale.regions)),
-            ]
-            .into_iter()
-            .collect(),
+                ("i", Value::Int(u)),
+                ("n", Value::Str(format!("user{u}"))),
+                ("r", Value::Int(u % scale.regions)),
+            ],
         );
     }
+    let ins = db
+        .prepare_sql("INSERT INTO ITEMS (I_ID, I_NAME, I_SELLER, I_CATEGORY, I_REGION, I_DESC, I_QTY, I_STATUS, I_END_DATE, I_MAX_BID, I_NB_BIDS) VALUES (?i, ?n, ?s, ?c, ?r, 'd', 10, 'OPEN', ?e, 0.0, 0)")
+        .unwrap();
     for i in 0..scale.items {
         exec(
-            "INSERT INTO ITEMS (I_ID, I_NAME, I_SELLER, I_CATEGORY, I_REGION, I_DESC, I_QTY, I_STATUS, I_END_DATE, I_MAX_BID, I_NB_BIDS) VALUES (?i, ?n, ?s, ?c, ?r, 'd', 10, 'OPEN', ?e, 0.0, 0)",
+            &ins,
             &[
-                ("i".to_string(), Value::Int(i)),
-                ("n".to_string(), Value::Str(format!("item{i}"))),
-                ("s".to_string(), Value::Int(i % scale.users)),
-                ("c".to_string(), Value::Int(i % scale.categories)),
-                ("r".to_string(), Value::Int(i % scale.regions)),
-                ("e".to_string(), Value::Int(rng.range(0, 100_000) as i64)),
-            ]
-            .into_iter()
-            .collect(),
+                ("i", Value::Int(i)),
+                ("n", Value::Str(format!("item{i}"))),
+                ("s", Value::Int(i % scale.users)),
+                ("c", Value::Int(i % scale.categories)),
+                ("r", Value::Int(i % scale.regions)),
+                ("e", Value::Int(rng.range(0, 100_000) as i64)),
+            ],
         );
     }
 }
@@ -681,7 +668,7 @@ mod tests {
         let run = |name: &str, args: Bindings| {
             let t = app.spec.txn_index(name).unwrap();
             let tpl = &app.spec.txns[t];
-            let stmts = tpl.stmt_map();
+            let stmts = tpl.prepared_map(&app.spec.schema);
             let mut h = db.begin();
             let mut ctx = crate::workload::spec::TxnCtx::new(&mut h, &stmts);
             let r = (tpl.body.as_ref().unwrap())(&mut ctx, &args).unwrap();

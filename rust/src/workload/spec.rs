@@ -8,33 +8,40 @@
 //! declared statements, so the analysis surface and the executed code
 //! cannot drift apart.
 
-use crate::db::{Bindings, QueryResult, TxnError, TxnHandle};
+use crate::db::{Bindings, Prepared, QueryResult, TxnError, TxnHandle};
 use crate::sqlir::{parse_statement, Stmt};
 use std::collections::HashMap;
 use std::sync::Arc;
+
+/// Statements of one template compiled against a schema (prepare once,
+/// execute for the lifetime of the deployment/simulation).
+pub type PreparedStmts = HashMap<String, Prepared>;
 
 /// Reply returned to a client: the result of the operation.
 pub type Reply = QueryResult;
 
 /// Execution context handed to a transaction body: it can only execute
-/// statements declared in its template, by name.
+/// statements declared in its template, by name. Statements are
+/// pre-compiled ([`Prepared`]); the per-call work is resolving the
+/// name-keyed `binds` into positional slots.
 pub struct TxnCtx<'a, 'b> {
     handle: &'b mut TxnHandle<'a>,
-    stmts: &'b HashMap<String, Stmt>,
+    stmts: &'b PreparedStmts,
 }
 
 impl<'a, 'b> TxnCtx<'a, 'b> {
-    pub fn new(handle: &'b mut TxnHandle<'a>, stmts: &'b HashMap<String, Stmt>) -> Self {
+    pub fn new(handle: &'b mut TxnHandle<'a>, stmts: &'b PreparedStmts) -> Self {
         TxnCtx { handle, stmts }
     }
 
     /// Execute a declared statement with the given bindings.
     pub fn exec(&mut self, stmt_name: &str, binds: &Bindings) -> Result<QueryResult, TxnError> {
-        let stmt = self
+        let prepared = self
             .stmts
             .get(stmt_name)
             .unwrap_or_else(|| panic!("transaction body uses undeclared statement {stmt_name:?}"));
-        self.handle.exec(stmt, binds)
+        let slots = prepared.bind(binds).map_err(TxnError::Sql)?;
+        self.handle.exec_prepared(prepared, &slots)
     }
 }
 
@@ -124,6 +131,22 @@ impl TxnTemplate {
         self.stmts.iter().cloned().collect()
     }
 
+    /// Compile every declared statement against `schema` — the
+    /// prepare-once side of the engine's prepared-execution pipeline.
+    /// Panics on compile errors: templates are validated against their
+    /// application schema at build time, so a failure is a build bug.
+    pub fn prepared_map(&self, schema: &crate::catalog::Schema) -> PreparedStmts {
+        self.stmts
+            .iter()
+            .map(|(n, s)| {
+                let p = Prepared::compile(s, schema).unwrap_or_else(|e| {
+                    panic!("template {}/{n}: {e}\n  sql: {s}", self.name)
+                });
+                (n.clone(), p)
+            })
+            .collect()
+    }
+
     pub fn param_index(&self, name: &str) -> Option<usize> {
         self.params.iter().position(|p| p == name)
     }
@@ -193,7 +216,7 @@ mod tests {
         let db = Db::new(app.schema.clone());
         let tpl = &app.txns[0];
         let mut handle = db.begin();
-        let stmts = tpl.stmt_map();
+        let stmts = tpl.prepared_map(&app.schema);
         let mut ctx = TxnCtx::new(&mut handle, &stmts);
         let args: Bindings = [("sid".to_string(), Value::Int(7))].into_iter().collect();
         let r = (tpl.body.as_ref().unwrap())(&mut ctx, &args).unwrap();

@@ -16,7 +16,6 @@
 
 use crate::catalog::{Schema, TableSchema, ValueType};
 use crate::db::{Bindings, Db, Value};
-use crate::sqlir::parse_statement;
 use crate::util::Rng;
 use crate::workload::analyzed::AnalyzedApp;
 use crate::workload::generator::OpGenerator;
@@ -354,79 +353,69 @@ pub fn analyzed() -> AnalyzedApp {
 
 /// Seed a server database at the given scale.
 pub fn seed(db: &Db, scale: TpcwScale) {
-    let exec = |sql: &str, binds: &Bindings| {
-        let stmt = parse_statement(sql).unwrap();
-        db.exec_auto(&stmt, binds).unwrap();
+    // Prepare once per statement; the loader is itself a hot path at
+    // full scale (one insert per row).
+    let exec = |p: &crate::db::Prepared, pairs: &[(&str, Value)]| {
+        db.exec_auto_prepared(p, &p.bind_pairs(pairs).unwrap()).unwrap();
     };
     let mut rng = Rng::new(0x79C3u64);
+    let ins = db.prepare_sql("INSERT INTO COUNTRY (CO_ID, CO_NAME) VALUES (?i, ?n)").unwrap();
     for co in 0..scale.countries {
         exec(
-            "INSERT INTO COUNTRY (CO_ID, CO_NAME) VALUES (?i, ?n)",
-            &[
-                ("i".to_string(), Value::Int(co)),
-                ("n".to_string(), Value::Str(format!("country{co}"))),
-            ]
-            .into_iter()
-            .collect(),
+            &ins,
+            &[("i", Value::Int(co)), ("n", Value::Str(format!("country{co}")))],
         );
     }
+    let ins = db.prepare_sql("INSERT INTO SUBJECTS (SUB_ID, SUB_NAME) VALUES (?i, ?n)").unwrap();
     for s in 0..scale.subjects {
         exec(
-            "INSERT INTO SUBJECTS (SUB_ID, SUB_NAME) VALUES (?i, ?n)",
-            &[
-                ("i".to_string(), Value::Int(s)),
-                ("n".to_string(), Value::Str(format!("subject{s}"))),
-            ]
-            .into_iter()
-            .collect(),
+            &ins,
+            &[("i", Value::Int(s)), ("n", Value::Str(format!("subject{s}")))],
         );
     }
+    let ins =
+        db.prepare_sql("INSERT INTO AUTHOR (A_ID, A_FNAME, A_LNAME) VALUES (?i, ?f, ?l)").unwrap();
     for a in 0..scale.authors {
         exec(
-            "INSERT INTO AUTHOR (A_ID, A_FNAME, A_LNAME) VALUES (?i, ?f, ?l)",
+            &ins,
             &[
-                ("i".to_string(), Value::Int(a)),
-                ("f".to_string(), Value::Str(format!("first{a}"))),
-                ("l".to_string(), Value::Str(format!("last{}", a % 37))),
-            ]
-            .into_iter()
-            .collect(),
+                ("i", Value::Int(a)),
+                ("f", Value::Str(format!("first{a}"))),
+                ("l", Value::Str(format!("last{}", a % 37))),
+            ],
         );
     }
+    let ins = db
+        .prepare_sql("INSERT INTO ITEM (I_ID, I_TITLE, I_A_ID, I_SUBJECT, I_COST, I_STOCK, I_TOTAL_SOLD, I_PUB_DATE) VALUES (?i, ?t, ?a, ?s, ?c, ?st, 0, ?d)")
+        .unwrap();
     for i in 0..scale.items {
         exec(
-            "INSERT INTO ITEM (I_ID, I_TITLE, I_A_ID, I_SUBJECT, I_COST, I_STOCK, I_TOTAL_SOLD, I_PUB_DATE) VALUES (?i, ?t, ?a, ?s, ?c, ?st, 0, ?d)",
+            &ins,
             &[
-                ("i".to_string(), Value::Int(i)),
-                ("t".to_string(), Value::Str(format!("book{i}"))),
-                ("a".to_string(), Value::Int(i % scale.authors)),
-                ("s".to_string(), Value::Int(i % scale.subjects)),
-                ("c".to_string(), Value::Float(5.0 + rng.f64() * 50.0)),
-                ("st".to_string(), Value::Int(500 + rng.range(0, 500) as i64)),
-                ("d".to_string(), Value::Int(rng.range(0, 10_000) as i64)),
-            ]
-            .into_iter()
-            .collect(),
+                ("i", Value::Int(i)),
+                ("t", Value::Str(format!("book{i}"))),
+                ("a", Value::Int(i % scale.authors)),
+                ("s", Value::Int(i % scale.subjects)),
+                ("c", Value::Float(5.0 + rng.f64() * 50.0)),
+                ("st", Value::Int(500 + rng.range(0, 500) as i64)),
+                ("d", Value::Int(rng.range(0, 10_000) as i64)),
+            ],
         );
     }
+    let ins_addr = db
+        .prepare_sql("INSERT INTO ADDRESS (ADDR_ID, ADDR_STREET, ADDR_CITY, ADDR_CO_ID) VALUES (?i, 's', 'c', ?co)")
+        .unwrap();
+    let ins_cust = db
+        .prepare_sql("INSERT INTO CUSTOMER (C_ID, C_UNAME, C_FNAME, C_LNAME, C_ADDR_ID, C_BALANCE, C_LOGIN) VALUES (?i, ?u, 'f', 'l', ?i, 0.0, 0)")
+        .unwrap();
     for c in 0..scale.customers {
         exec(
-            "INSERT INTO ADDRESS (ADDR_ID, ADDR_STREET, ADDR_CITY, ADDR_CO_ID) VALUES (?i, 's', 'c', ?co)",
-            &[
-                ("i".to_string(), Value::Int(c)),
-                ("co".to_string(), Value::Int(c % scale.countries)),
-            ]
-            .into_iter()
-            .collect(),
+            &ins_addr,
+            &[("i", Value::Int(c)), ("co", Value::Int(c % scale.countries))],
         );
         exec(
-            "INSERT INTO CUSTOMER (C_ID, C_UNAME, C_FNAME, C_LNAME, C_ADDR_ID, C_BALANCE, C_LOGIN) VALUES (?i, ?u, 'f', 'l', ?i, 0.0, 0)",
-            &[
-                ("i".to_string(), Value::Int(c)),
-                ("u".to_string(), Value::Str(format!("user{c}"))),
-            ]
-            .into_iter()
-            .collect(),
+            &ins_cust,
+            &[("i", Value::Int(c)), ("u", Value::Str(format!("user{c}")))],
         );
     }
 }
@@ -585,6 +574,7 @@ impl OpGenerator for TpcwGenerator {
 mod tests {
     use super::*;
     use crate::analysis::OpClass;
+    use crate::sqlir::parse_statement;
 
     #[test]
     fn classification_matches_paper_table1() {
@@ -660,7 +650,7 @@ mod tests {
         let run = |name: &str, args: Bindings| -> crate::db::QueryResult {
             let t = app.spec.txn_index(name).unwrap();
             let tpl = &app.spec.txns[t];
-            let stmts = tpl.stmt_map();
+            let stmts = tpl.prepared_map(&app.spec.schema);
             let mut h = db.begin();
             let mut ctx = crate::workload::spec::TxnCtx::new(&mut h, &stmts);
             let r = (tpl.body.as_ref().unwrap())(&mut ctx, &args).unwrap();

@@ -1,0 +1,260 @@
+//! Prepared-execution equivalence: prepare-once/execute-many must behave
+//! exactly like the name-keyed convenience path (which itself compiles
+//! per call) across point, index-equality and scan predicates, including
+//! NULL and type-coercion binds — and both must produce the semantics
+//! the interpreted engine had before the prepared pipeline landed
+//! (golden results asserted literally below).
+
+use elia::catalog::{Schema, TableSchema, ValueType};
+use elia::db::{BindSlots, Bindings, Db, Key, Value};
+use elia::sqlir::parse_statement;
+
+fn test_db() -> Db {
+    Db::new(Schema::new(vec![TableSchema::new(
+        "ITEMS",
+        &[
+            ("ID", ValueType::Int),
+            ("TITLE", ValueType::Str),
+            ("STOCK", ValueType::Int),
+            ("COST", ValueType::Float),
+        ],
+        &["ID"],
+    )
+    .with_index("TITLE")]))
+}
+
+fn seed(db: &Db, n: i64) {
+    let ins = db
+        .prepare_sql("INSERT INTO ITEMS (ID, TITLE, STOCK, COST) VALUES (?id, ?t, ?s, ?c)")
+        .unwrap();
+    for i in 0..n {
+        db.exec_auto_prepared(
+            &ins,
+            &ins.bind_pairs(&[
+                ("id", Value::Int(i)),
+                ("t", Value::Str(format!("book{}", i % 4))),
+                ("s", Value::Int(10 * i)),
+                ("c", Value::Float(1.5 * i as f64)),
+            ])
+            .unwrap(),
+        )
+        .unwrap();
+    }
+}
+
+fn named(pairs: &[(&str, Value)]) -> Bindings {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+/// Run the same SQL through the prepared path and the name-keyed compat
+/// path against identically-seeded databases; results must agree.
+fn both_paths(sql: &str, pairs: &[(&str, Value)], rows: i64) -> elia::db::QueryResult {
+    let db_a = test_db();
+    let db_b = test_db();
+    seed(&db_a, rows);
+    seed(&db_b, rows);
+
+    let prepared = db_a.prepare_sql(sql).unwrap();
+    let slots = prepared.bind_pairs(pairs).unwrap();
+    let via_prepared = db_a.exec_auto_prepared(&prepared, &slots).unwrap();
+
+    let stmt = parse_statement(sql).unwrap();
+    let via_named = db_b.exec_auto(&stmt, &named(pairs)).unwrap();
+
+    assert_eq!(via_prepared, via_named, "paths diverged for {sql}");
+    assert_eq!(db_a.content_hash(), db_b.content_hash(), "state diverged for {sql}");
+    via_prepared
+}
+
+#[test]
+fn point_select_equivalence() {
+    let r = both_paths(
+        "SELECT TITLE, STOCK FROM ITEMS WHERE ID = ?id",
+        &[("id", Value::Int(2))],
+        6,
+    );
+    assert_eq!(r.rows, vec![vec![Value::Str("book2".into()), Value::Int(20)]]);
+}
+
+#[test]
+fn point_select_with_float_coercion_bind() {
+    // A Float bind on an Int PK column must coerce and still hit the
+    // point path (value-level coercion happens per execution).
+    let r = both_paths(
+        "SELECT STOCK FROM ITEMS WHERE ID = ?id",
+        &[("id", Value::Float(3.0))],
+        6,
+    );
+    assert_eq!(r.rows, vec![vec![Value::Int(30)]]);
+}
+
+#[test]
+fn index_eq_select_equivalence() {
+    let r = both_paths(
+        "SELECT ID FROM ITEMS WHERE TITLE = ?t",
+        &[("t", Value::Str("book1".into()))],
+        8,
+    );
+    // ids 1 and 5 carry title book1; output is deterministically sorted.
+    assert_eq!(r.rows, vec![vec![Value::Int(1)], vec![Value::Int(5)]]);
+}
+
+#[test]
+fn scan_select_equivalence() {
+    let r = both_paths(
+        "SELECT ID FROM ITEMS WHERE STOCK >= ?s ORDER BY COST DESC LIMIT 3",
+        &[("s", Value::Int(20))],
+        8,
+    );
+    assert_eq!(
+        r.rows,
+        vec![vec![Value::Int(7)], vec![Value::Int(6)], vec![Value::Int(5)]]
+    );
+}
+
+#[test]
+fn null_bind_matches_nothing() {
+    // SQL comparison semantics: NULL never compares equal, on every path.
+    let r = both_paths(
+        "SELECT ID FROM ITEMS WHERE ID = ?id",
+        &[("id", Value::Null)],
+        4,
+    );
+    assert!(r.rows.is_empty());
+    let r = both_paths(
+        "SELECT ID FROM ITEMS WHERE TITLE = ?t",
+        &[("t", Value::Null)],
+        4,
+    );
+    assert!(r.rows.is_empty());
+    let r = both_paths(
+        "SELECT COUNT(*) FROM ITEMS WHERE STOCK > ?s",
+        &[("s", Value::Null)],
+        4,
+    );
+    assert_eq!(r.scalar(), Some(&Value::Int(0)));
+}
+
+#[test]
+fn point_update_delta_equivalence() {
+    let r = both_paths(
+        "UPDATE ITEMS SET STOCK = STOCK - ?q WHERE ID = ?id",
+        &[("q", Value::Int(7)), ("id", Value::Int(1))],
+        4,
+    );
+    assert_eq!(r.affected, 1);
+}
+
+#[test]
+fn scan_update_and_delete_equivalence() {
+    let r = both_paths(
+        "UPDATE ITEMS SET COST = COST * ?f WHERE STOCK >= ?s",
+        &[("f", Value::Float(2.0)), ("s", Value::Int(20))],
+        6,
+    );
+    assert_eq!(r.affected, 4);
+    let r = both_paths("DELETE FROM ITEMS WHERE ID >= ?id", &[("id", Value::Int(3))], 6);
+    assert_eq!(r.affected, 3);
+}
+
+#[test]
+fn aggregate_equivalence() {
+    let r = both_paths(
+        "SELECT COUNT(*), MAX(STOCK), MIN(COST), SUM(STOCK) FROM ITEMS WHERE TITLE = ?t",
+        &[("t", Value::Str("book0".into()))],
+        8,
+    );
+    assert_eq!(
+        r.rows,
+        vec![vec![
+            Value::Int(2),
+            Value::Int(40),
+            Value::Float(0.0),
+            Value::Int(40),
+        ]]
+    );
+}
+
+#[test]
+fn prepare_once_execute_many_matches_per_call_compile() {
+    let db = test_db();
+    seed(&db, 16);
+    let prepared = db.prepare_sql("SELECT STOCK FROM ITEMS WHERE ID = ?id").unwrap();
+    let stmt = parse_statement("SELECT STOCK FROM ITEMS WHERE ID = ?id").unwrap();
+    for i in (0..16).rev() {
+        let a = db
+            .exec_auto_prepared(&prepared, &BindSlots(vec![Value::Int(i)]))
+            .unwrap();
+        let b = db.exec_auto(&stmt, &named(&[("id", Value::Int(i))])).unwrap();
+        assert_eq!(a, b, "id {i}");
+        assert_eq!(a.scalar(), Some(&Value::Int(10 * i)));
+    }
+}
+
+#[test]
+fn prepared_statements_shared_across_replicas() {
+    // One compiled statement drives many identically-schema'd DBs (what
+    // the conveyor simulator does with per-server instances).
+    let dbs: Vec<Db> = (0..3).map(|_| test_db()).collect();
+    for db in &dbs {
+        seed(db, 4);
+    }
+    let upd = dbs[0].prepare_sql("UPDATE ITEMS SET STOCK = STOCK + ?d WHERE ID = ?id").unwrap();
+    for db in &dbs {
+        db.exec_auto_prepared(
+            &upd,
+            &upd.bind_pairs(&[("d", Value::Int(5)), ("id", Value::Int(2))]).unwrap(),
+        )
+        .unwrap();
+    }
+    let h0 = dbs[0].content_hash();
+    for db in &dbs[1..] {
+        assert_eq!(db.content_hash(), h0);
+    }
+}
+
+#[test]
+fn state_updates_replicate_identically_across_paths() {
+    // The WriteRecord stream (logical redo) must be byte-identical
+    // between paths so replication is unaffected by how the statement
+    // was executed.
+    let db_a = test_db();
+    let db_b = test_db();
+    seed(&db_a, 3);
+    seed(&db_b, 3);
+    let sql = "UPDATE ITEMS SET STOCK = STOCK - ?q, COST = ?c WHERE ID = ?id";
+    let pairs =
+        [("q", Value::Int(4)), ("c", Value::Float(9.0)), ("id", Value::Int(1))];
+
+    let p = db_a.prepare_sql(sql).unwrap();
+    let mut txn = db_a.begin();
+    txn.exec_prepared(&p, &p.bind_pairs(&pairs).unwrap()).unwrap();
+    let ua = txn.commit().unwrap();
+
+    let stmt = parse_statement(sql).unwrap();
+    let mut txn = db_b.begin();
+    txn.exec(&stmt, &named(&pairs)).unwrap();
+    let ub = txn.commit().unwrap();
+
+    assert_eq!(ua, ub);
+
+    // And applying either update to a third replica converges it.
+    let db_c = test_db();
+    seed(&db_c, 3);
+    db_c.apply_update(&ua).unwrap();
+    assert_eq!(db_c.content_hash(), db_a.content_hash());
+}
+
+#[test]
+fn peek_sees_prepared_writes() {
+    let db = test_db();
+    seed(&db, 2);
+    let upd = db.prepare_sql("UPDATE ITEMS SET TITLE = ?t WHERE ID = ?id").unwrap();
+    db.exec_auto_prepared(
+        &upd,
+        &upd.bind_pairs(&[("t", Value::Str("zzz".into())), ("id", Value::Int(0))]).unwrap(),
+    )
+    .unwrap();
+    let row = db.peek("ITEMS", &Key::single(Value::Int(0))).unwrap();
+    assert_eq!(row[1], Value::Str("zzz".into()));
+}
