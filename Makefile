@@ -1,9 +1,10 @@
 # Developer entry points. `make check` is the pre-PR gate (see ROADMAP.md).
 
-.PHONY: check build test clippy bench artifacts
+.PHONY: check build test test-par clippy bench bench-sim artifacts
 
-# Pre-PR gate: release build + tests + lint, all from the rust crate.
-check: build test clippy
+# Pre-PR gate: release build + tests (incl. the parallel-determinism
+# ladder) + lint, all from the rust crate.
+check: build test-par clippy
 
 build:
 	cd rust && cargo build --release
@@ -11,12 +12,25 @@ build:
 test:
 	cd rust && cargo test -q
 
+# Tier-1 suite plus the 1-thread rung of the parallel-determinism
+# suite. The plain `test` run already exercises the suite's default
+# ladder (1-thread baseline vs 2 threads and vs all cores); the extra
+# ELIA_PAR_MAX=1 pass pins pure 1-thread run-to-run reproducibility,
+# completing the 1/2/max matrix without redundant reruns (see
+# tests/parallel_determinism.rs::alt_thread_counts).
+test-par: test
+	cd rust && ELIA_PAR_MAX=1 cargo test -q --test parallel_determinism
+
 clippy:
 	cd rust && cargo clippy -- -D warnings
 
 # Hot-path micro-benchmarks; writes BENCH_hotpath.json in rust/.
 bench:
 	cd rust && cargo bench --bench hotpath
+
+# Single- vs multi-thread simulator benchmark; writes BENCH_sim.json.
+bench-sim:
+	cd rust && cargo bench --bench sim_parallel
 
 # AOT-compile the Pallas partition-cost model to HLO text for the
 # (feature-gated) PJRT runtime. Needs jax; see python/compile/aot.py.

@@ -9,10 +9,17 @@
 
 use elia::harness::experiments::{fig4, ExpScale, Workload};
 use elia::harness::report;
+use elia::simnet::parallel::resolve_threads;
+use elia::util::cli::Args;
 
 fn main() {
+    let args = Args::from_env();
+    // Simulator worker threads; 0 (the default) = all available cores.
+    let par = args.get_parse("parallel", 0usize);
     let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
-    let scale = if quick { ExpScale::quick() } else { ExpScale::full() };
+    let scale =
+        (if quick { ExpScale::quick() } else { ExpScale::full() }).with_parallel(par);
+    println!("[fig4 simulator threads: {}]", resolve_threads(par));
     let sites: Vec<usize> = if quick { vec![3] } else { vec![2, 3, 5] };
 
     for workload in [Workload::Tpcw, Workload::Rubis] {

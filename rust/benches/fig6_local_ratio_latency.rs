@@ -8,10 +8,17 @@
 
 use elia::harness::experiments::{fig6, ExpScale};
 use elia::harness::report;
+use elia::simnet::parallel::resolve_threads;
+use elia::util::cli::Args;
 
 fn main() {
+    let args = Args::from_env();
+    // Simulator worker threads; 0 (the default) = all available cores.
+    let par = args.get_parse("parallel", 0usize);
     let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
-    let scale = if quick { ExpScale::quick() } else { ExpScale::full() };
+    let scale =
+        (if quick { ExpScale::quick() } else { ExpScale::full() }).with_parallel(par);
+    println!("[fig6 simulator threads: {}]", resolve_threads(par));
     let ratios: Vec<f64> = if quick {
         vec![0.3, 0.7]
     } else {

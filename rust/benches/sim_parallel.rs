@@ -1,0 +1,114 @@
+//! Single- vs multi-thread simulator benchmark (ROADMAP bench-tracking
+//! item for the parallel window engine).
+//!
+//! Runs the same quick Fig-3-style Conveyor point (and a real-execution
+//! variant, where the per-server DB work dominates and parallelism pays
+//! most) at 1 thread and at all available cores, verifies the results
+//! are identical (they must be — see `tests/parallel_determinism.rs`),
+//! and writes wall-clock numbers to `BENCH_sim.json`.
+
+use elia::conveyor::{ConveyorConfig, ConveyorSim};
+use elia::harness::experiments::{fig3, ExpScale, Workload};
+use elia::simnet::clients::ClientsConfig;
+use elia::simnet::latency::Topology;
+use elia::simnet::parallel::available_threads;
+use elia::util::VTime;
+use elia::workload::generator::ServiceModel;
+use elia::workload::micro;
+use std::time::Instant;
+
+fn write_json(results: &[(String, f64)], path: &str) {
+    let mut s = String::from("{\n");
+    for (i, (name, v)) in results.iter().enumerate() {
+        let sep = if i + 1 < results.len() { "," } else { "" };
+        s.push_str(&format!("  \"{}\": {:.1}{}\n", name.replace('"', "'"), v, sep));
+    }
+    s.push_str("}\n");
+    match std::fs::write(path, &s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nwarning: could not write {path}: {e}"),
+    }
+}
+
+/// One modeled-execution micro point (fig5/fig6 shape: WAN 3 servers).
+fn micro_point(threads: usize) -> (f64, u64) {
+    let app = micro::analyzed();
+    let cfg = ConveyorConfig {
+        service: ServiceModel::fixed(5.0),
+        warmup: VTime::from_secs(2),
+        horizon: VTime::from_secs(8),
+        parallel: threads,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = ConveyorSim::new(
+        &app,
+        Topology::wan(3),
+        ClientsConfig { n: 512, think_ms: 100.0, seed: 0xF16, ..Default::default() },
+        cfg,
+        Box::new(micro::MicroGenerator::new(&app, 0.7)),
+        |_| {},
+    )
+    .run();
+    (t0.elapsed().as_secs_f64(), r.metrics.completed)
+}
+
+/// One real-execution point: per-server DBMS work dominates, which is
+/// the case intra-run parallelism targets.
+fn real_point(threads: usize) -> (f64, u64) {
+    let app = micro::analyzed();
+    let cfg = ConveyorConfig {
+        service: ServiceModel::fixed(5.0),
+        execute_real: true,
+        warmup: VTime::from_secs(1),
+        horizon: VTime::from_secs(6),
+        parallel: threads,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = ConveyorSim::new(
+        &app,
+        Topology::lan(4),
+        ClientsConfig { n: 96, think_ms: 5.0, seed: 0xF16, ..Default::default() },
+        cfg,
+        Box::new(micro::MicroGenerator::new(&app, 0.7)),
+        micro::seed,
+    )
+    .run();
+    (t0.elapsed().as_secs_f64(), r.metrics.completed)
+}
+
+fn main() {
+    let cores = available_threads();
+    let mut results: Vec<(String, f64)> = Vec::new();
+    println!("sim_parallel: 1 thread vs {cores} cores\n");
+
+    for (name, f) in [
+        ("sim: micro wan3 modeled", micro_point as fn(usize) -> (f64, u64)),
+        ("sim: micro lan4 real-exec", real_point),
+    ] {
+        let (w1, c1) = f(1);
+        let (wn, cn) = f(0);
+        assert_eq!(c1, cn, "{name}: thread counts must not change results");
+        println!(
+            "{name:<34} 1T {w1:>7.2}s   {cores}T {wn:>7.2}s   speedup {:.2}x   (completed {c1})",
+            w1 / wn
+        );
+        results.push((format!("{name} (1T wall ns)"), w1 * 1e9));
+        results.push((format!("{name} ({cores}T wall ns)"), wn * 1e9));
+        results.push((format!("{name} (speedup x1000)"), w1 / wn * 1000.0));
+    }
+
+    // A quick fig3 point through the harness (the `--parallel` plumbing
+    // path the figure benches use).
+    {
+        let scale = ExpScale::quick().with_parallel(0);
+        let t0 = Instant::now();
+        let rows = fig3(Workload::Rubis, &[3], &scale);
+        let wall = t0.elapsed().as_secs_f64();
+        println!("{:<34} {wall:>7.2}s wall (rows={})", "sim: fig3 quick point (allT)", rows.len());
+        results.push(("sim: fig3 rubis n=3 quick (allT wall ns)".into(), wall * 1e9));
+    }
+
+    write_json(&results, "BENCH_sim.json");
+}

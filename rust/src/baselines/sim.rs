@@ -89,7 +89,9 @@ pub struct BaselineSim<'a> {
     clients: ClientPool,
     stations: Vec<Station<Job>>,
     ops: Vec<OpState>,
-    rng: Rng,
+    /// Per-server RNG streams (service sampling), derived statelessly
+    /// from the seed — see `Rng::stream`.
+    rngs: Vec<Rng>,
     pub metrics: SimMetrics,
     q: EventQueue<Ev>,
 }
@@ -113,7 +115,7 @@ impl<'a> BaselineSim<'a> {
         };
         let stations = (0..n_servers).map(|_| Station::new(cfg.workers)).collect();
         let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
-        let rng = Rng::new(cfg.seed);
+        let rngs = (0..n_servers).map(|i| Rng::stream(cfg.seed, i as u64)).collect();
         BaselineSim {
             app,
             sites,
@@ -122,7 +124,7 @@ impl<'a> BaselineSim<'a> {
             clients,
             stations,
             ops: Vec::new(),
-            rng,
+            rngs,
             metrics,
             q: EventQueue::new(),
         }
@@ -152,7 +154,7 @@ impl<'a> BaselineSim<'a> {
         let now = self.cfg.horizon;
         BaselineReport {
             metrics: self.metrics.clone(),
-            utilization: self.stations.iter_mut().map(|s| s.utilization(now)).collect(),
+            utilization: self.stations.iter().map(|s| s.utilization(now)).collect(),
             events: self.q.processed(),
         }
     }
@@ -165,7 +167,8 @@ impl<'a> BaselineSim<'a> {
                     let o = &self.ops[op as usize];
                     (o.server, o.txn)
                 };
-                let service = self.cfg.service.sample(&self.app.spec.txns[txn], &mut self.rng);
+                let service =
+                    self.cfg.service.sample(&self.app.spec.txns[txn], &mut self.rngs[server]);
                 self.submit(server, Job::Op(op), service);
             }
             Ev::ApplyArrive { server } => {

@@ -104,7 +104,10 @@ pub struct ClusterSim<'a> {
     ops: Vec<OpState>,
     /// Virtual row-lock table: key -> earliest next acquisition time.
     locks: HashMap<(usize, u64), VTime>,
-    rng: Rng,
+    /// Per-server RNG streams (demand + service sampling at the
+    /// coordinator), derived statelessly from the seed so server count
+    /// and event interleaving cannot perturb another server's stream.
+    rngs: Vec<Rng>,
     pub metrics: SimMetrics,
     q: EventQueue<Ev>,
     lock_waits: u64,
@@ -124,7 +127,7 @@ impl<'a> ClusterSim<'a> {
         let footprints =
             app.spec.txns.iter().map(|t| footprint(t, &app.spec.schema)).collect();
         let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
-        let rng = Rng::new(cfg.seed);
+        let rngs = (0..n).map(|i| Rng::stream(cfg.seed, i as u64)).collect();
         ClusterSim {
             app,
             topo,
@@ -135,7 +138,7 @@ impl<'a> ClusterSim<'a> {
             footprints,
             ops: Vec::new(),
             locks: HashMap::new(),
-            rng,
+            rngs,
             metrics,
             q: EventQueue::new(),
             lock_waits: 0,
@@ -157,7 +160,7 @@ impl<'a> ClusterSim<'a> {
         let now = self.cfg.horizon;
         ClusterReport {
             metrics: self.metrics.clone(),
-            utilization: self.stations.iter_mut().map(|s| s.utilization(now)).collect(),
+            utilization: self.stations.iter().map(|s| s.utilization(now)).collect(),
             lock_waits: self.lock_waits,
             events: self.q.processed(),
         }
@@ -195,8 +198,9 @@ impl<'a> ClusterSim<'a> {
             self.gen.next_op(&mut r, site, n)
         };
         let coordinator = site % n;
-        let demand = self.footprints[op.txn].demand(&op.args, n, &mut self.rng);
-        let service = self.cfg.service.sample(&self.app.spec.txns[op.txn], &mut self.rng);
+        let demand = self.footprints[op.txn].demand(&op.args, n, &mut self.rngs[coordinator]);
+        let service =
+            self.cfg.service.sample(&self.app.spec.txns[op.txn], &mut self.rngs[coordinator]);
         let distributed = demand.shards.iter().any(|&s| s != coordinator);
         let op_id = self.ops.len() as u64;
         self.ops.push(OpState {
@@ -550,5 +554,19 @@ mod tests {
         let b = run(4, 25, 0.3);
         assert_eq!(a.metrics.completed, b.metrics.completed);
         assert_eq!(a.events, b.events);
+    }
+
+    /// Satellite guard: the documented defaults the benches assume
+    /// (`ClusterConfig::default()` inside `harness::experiments`). A
+    /// silent retuning would skew every recorded Fig-3 baseline curve.
+    #[test]
+    fn documented_defaults_match_bench_assumptions() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.workers, 8, "fair-baseline thread pool (same as Eliá servers)");
+        assert!((c.remote_exec_frac - 0.8).abs() < 1e-12);
+        assert!((c.msg_cpu_ms - 0.8).abs() < 1e-12);
+        assert_eq!(c.warmup, VTime::from_secs(5));
+        assert_eq!(c.horizon, VTime::from_secs(25));
+        assert_eq!(c.seed, 0xC1B5);
     }
 }

@@ -5,19 +5,48 @@
 //! Operations are *really executed* against per-server embedded DBMS
 //! instances (so replication, token ordering and state convergence are
 //! exercised, not just modeled) while time is virtual: each operation
-//! charges a modeled service time on its server's 2-worker station, and
-//! messages pay Table 2 latencies.
+//! charges a modeled service time on its server's station, and messages
+//! pay Table 2 latencies.
+//!
+//! # Parallel window engine
+//!
+//! The simulation is organized as `n + 1` *groups*, each owning its own
+//! [`EventQueue`], clock and state: one group per server (DB, station,
+//! token-wait queue, service-time RNG stream) plus one *client tier*
+//! (client pool, workload generator, metrics). Groups interact only by
+//! messages that pay a network latency — client→server requests,
+//! server→client replies, and the token hop — so any event emitted for
+//! another group lands at least `L` (the minimum such latency, the
+//! *lookahead*) into the future.
+//!
+//! The driver therefore advances in conservative windows `[T, T + L)`
+//! where `T` is the earliest pending event across all groups: inside a
+//! window every group can process its own events independently — there is
+//! provably no cross-group delivery inside the window — so per-server
+//! work (real DB execution, update replay, station scheduling) fans out
+//! across a scoped thread pool ([`crate::simnet::parallel`]). Emitted
+//! cross-group events are collected in per-group buffers and merged back
+//! in canonical order — `(virtual time, source group id, per-source
+//! emission number)` — so queue insertion order, and with it the entire
+//! simulation, is **bit-identical for every thread count** (see
+//! `src/simnet/README.md` for the full argument and
+//! `tests/parallel_determinism.rs` for the enforcement).
+//!
+//! The token itself travels *inside* the [`Ev::TokenArrive`] event, just
+//! like the real protocol: exactly one group ever owns it, so global-op
+//! appends need no shared state.
 
 use crate::db::{Db, StateUpdate, TxnError};
 use crate::simnet::clients::{ClientPool, ClientsConfig};
 use crate::simnet::events::EventQueue;
 use crate::simnet::latency::Topology;
 use crate::simnet::metrics::SimMetrics;
+use crate::simnet::parallel;
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
 use crate::workload::analyzed::{AnalyzedApp, Route};
 use crate::workload::generator::{OpGenerator, ServiceModel};
-use crate::workload::spec::{Operation, TxnCtx};
+use crate::workload::spec::{PreparedStmts, TxnCtx};
 
 use super::token::Token;
 
@@ -43,6 +72,16 @@ pub struct ConveyorConfig {
     /// servers; servers occupy the first `topology.n()` sites). `None` =
     /// clients co-located with servers.
     pub client_matrix: Option<crate::simnet::latency::LatencyMatrix>,
+    /// Worker threads for the window-parallel engine: `1` = process every
+    /// group on the driving thread (default), `0` = all available cores,
+    /// `N` = at most N threads. Results are bit-identical for every
+    /// value — the thread count is a pure performance knob.
+    pub parallel: usize,
+    /// Record the token's total order of global state updates and return
+    /// it in [`ConveyorReport::global_log`] (testing hook for
+    /// serializability checks; off by default — it retains every update
+    /// for the whole run).
+    pub record_global_log: bool,
     pub warmup: VTime,
     pub horizon: VTime,
     pub seed: u64,
@@ -65,6 +104,8 @@ impl Default for ConveyorConfig {
             misroute_prob: 0.0,
             execute_real: false,
             client_matrix: None,
+            parallel: 1,
+            record_global_log: false,
             warmup: VTime::from_secs(5),
             horizon: VTime::from_secs(25),
             seed: 0x5EED,
@@ -72,158 +113,78 @@ impl Default for ConveyorConfig {
     }
 }
 
+/// Pseudo group id of the client tier in cross-send targets and merge
+/// ranks (servers are `0..n`; the client tier ranks after all of them).
+const CLIENT_TIER: usize = usize::MAX;
+
+
+/// An operation in flight, carried inside events (the engine has no
+/// global operation table — groups exchange self-contained messages).
 #[derive(Debug, Clone)]
-enum Ev {
-    /// Client (after thinking) issues its next operation.
-    Issue { client: usize },
-    /// Request arrives at a server (possibly after a MAP redirect).
-    Arrive { op: u64, redirected: bool },
-    /// A station job completed.
-    JobDone { server: usize, job: JobKind },
-    /// The token arrives at a server.
-    TokenArrive { server: usize },
-    /// Reply reaches the client.
-    Reply { op: u64 },
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum JobKind {
-    /// Execute operation (local/commutative, or global under token).
-    Op(u64),
-    /// Apply `n` replicated updates from the token.
-    Apply { n: usize },
-}
-
-struct OpState {
-    op: Operation,
+struct OpEnvelope {
+    txn: usize,
+    args: crate::db::Bindings,
     client: usize,
+    client_site: usize,
     issued: VTime,
-    server: usize,
     global: bool,
 }
 
-struct ServerState {
-    db: Option<Db>,
-    station: Station<JobKind>,
-    /// Global operations waiting for the token (Algorithm 2's Q).
-    pending: Vec<u64>,
-    /// Snapshot being executed under the current token hold (Q').
-    outstanding: usize,
-    /// True between TokenArrive and PassToken.
-    holds_token: bool,
-    /// Updates to apply were dispatched; globals wait for the apply job.
-    applying: bool,
-    aborts: u64,
+#[derive(Debug)]
+enum Ev {
+    /// Client (after thinking) issues its next operation. [client tier]
+    Issue { client: usize },
+    /// Reply reaches the client. [client tier]
+    Reply { client: usize, issued: VTime, global: bool },
+    /// Request arrives at its server, misroute redirects already paid.
+    /// [server]
+    Arrive { op: OpEnvelope },
+    /// A station job completed. [server]
+    JobDone { job: JobKind },
+    /// The token arrives — the token state travels with the event, so
+    /// exactly one group owns it at any virtual time. [server]
+    TokenArrive { token: Token },
 }
 
-/// The simulation driver.
-pub struct ConveyorSim<'a> {
-    app: &'a AnalyzedApp,
-    /// Per-template statements compiled once against the schema
-    /// (prepare-once; all per-server DBs share one schema).
-    stmt_maps: Vec<crate::workload::spec::PreparedStmts>,
-    topo: Topology,
-    cfg: ConveyorConfig,
-    gen: Box<dyn OpGenerator + 'a>,
-    clients: ClientPool,
-    servers: Vec<ServerState>,
-    ops: Vec<OpState>,
-    token: Token,
-    token_at: usize,
-    svc_rng: Rng,
-    pub metrics: SimMetrics,
-    q: EventQueue<Ev>,
+#[derive(Debug)]
+enum JobKind {
+    /// Execute operation (local/commutative, or global under token).
+    Op(OpEnvelope),
+    /// Apply the replicated updates of one token receipt (the update
+    /// count only shapes the job's service time, set at submission).
+    Apply,
 }
 
-impl<'a> ConveyorSim<'a> {
-    pub fn new(
-        app: &'a AnalyzedApp,
-        topo: Topology,
-        clients_cfg: ClientsConfig,
-        cfg: ConveyorConfig,
-        gen: Box<dyn OpGenerator + 'a>,
-        seed_db: impl Fn(&Db),
-    ) -> Self {
-        let n = topo.n();
-        let client_sites = cfg.client_matrix.as_ref().map(|m| m.n()).unwrap_or(n);
-        let clients = ClientPool::new(ClientsConfig { sites: client_sites, ..clients_cfg });
-        let servers = (0..n)
-            .map(|_| {
-                let db = if cfg.execute_real {
-                    let db = Db::new(app.spec.schema.clone());
-                    seed_db(&db);
-                    Some(db)
-                } else {
-                    None
-                };
-                ServerState {
-                    db,
-                    station: Station::new(cfg.workers),
-                    pending: Vec::new(),
-                    outstanding: 0,
-                    holds_token: false,
-                    applying: false,
-                    aborts: 0,
-                }
-            })
-            .collect();
-        let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
-        let svc_rng = Rng::new(cfg.seed ^ 0xF00D);
-        ConveyorSim {
-            stmt_maps: app.spec.txns.iter().map(|t| t.prepared_map(&app.spec.schema)).collect(),
-            app,
-            topo,
-            cfg,
-            gen,
-            clients,
-            servers,
-            ops: Vec::new(),
-            token: Token::new(n),
-            token_at: 0,
-            svc_rng,
-            metrics,
-            q: EventQueue::new(),
-        }
-    }
+/// A cross-group event emission, buffered during a window and merged
+/// into the target group's queue afterwards in canonical order.
+#[derive(Debug)]
+struct OutMsg {
+    target: usize,
+    at: VTime,
+    ev: Ev,
+}
 
-    /// Run the simulation to the configured horizon and return final
-    /// metrics. Consumes the driver.
-    pub fn run(mut self) -> ConveyorReport {
-        // Boot: token starts at server 0; all clients issue.
-        self.q.schedule(VTime::ZERO, Ev::TokenArrive { server: 0 });
-        for c in 0..self.clients.n() {
-            // Stagger initial issues a little to avoid a thundering herd
-            // artifact at t=0.
-            let jitter = VTime::from_micros((c as u64 % 97) * 13);
-            self.q.schedule(jitter, Ev::Issue { client: c });
-        }
-        while let Some(t) = self.q.peek_time() {
-            if t > self.cfg.horizon {
-                break;
-            }
-            let (_, ev) = self.q.pop().unwrap();
-            self.handle(ev);
-        }
-        self.report()
-    }
+/// Buffered cross-send tagged with its canonical merge rank.
+#[derive(Debug)]
+struct MergeEntry {
+    at: VTime,
+    /// Source group rank: server id, or `n` for the client tier.
+    src: u32,
+    /// Emission number within the source group's window.
+    idx: u32,
+    target: usize,
+    ev: Ev,
+}
 
-    fn report(&mut self) -> ConveyorReport {
-        let n = self.topo.n();
-        let now = self.cfg.horizon;
-        ConveyorReport {
-            metrics: self.metrics.clone(),
-            rotations: self.token.rotations,
-            utilization: (0..n).map(|s| self.servers[s].station.utilization(now)).collect(),
-            aborts: self.servers.iter().map(|s| s.aborts).sum(),
-            db_hashes: self
-                .servers
-                .iter()
-                .map(|s| s.db.as_ref().map(|d| d.content_hash()))
-                .collect(),
-            events: self.q.processed(),
-        }
-    }
+/// Immutable context shared by every group during a window.
+struct Shared<'s> {
+    app: &'s AnalyzedApp,
+    stmt_maps: &'s [PreparedStmts],
+    topo: &'s Topology,
+    cfg: &'s ConveyorConfig,
+}
 
+impl Shared<'_> {
     fn client_server_latency(&self, site: usize, server: usize) -> VTime {
         // The Table 2 diagonal carries the intra-site latency. With an
         // explicit client matrix, clients may sit at sites without a
@@ -244,221 +205,531 @@ impl<'a> ConveyorSim<'a> {
             None => site % self.topo.n(),
         }
     }
+}
 
-    fn handle(&mut self, ev: Ev) {
-        match ev {
-            Ev::Issue { client } => self.on_issue(client),
-            Ev::Arrive { op, redirected } => self.on_arrive(op, redirected),
-            Ev::JobDone { server, job } => self.on_job_done(server, job),
-            Ev::TokenArrive { server } => self.on_token(server),
-            Ev::Reply { op } => self.on_reply(op),
+/// One server group: everything a server mutates while handling its own
+/// events. No field is observable by another group during a window.
+struct ServerState {
+    id: usize,
+    db: Option<Db>,
+    station: Station<JobKind>,
+    /// Global operations waiting for the token (Algorithm 2's Q).
+    pending: Vec<OpEnvelope>,
+    /// Operations of the snapshot Q' still executing under the hold.
+    outstanding: usize,
+    /// The token, while this server holds it (`Some` between
+    /// TokenArrive and the pass).
+    token: Option<Token>,
+    /// Completed ring rotations observed here (counted at server 0).
+    rotations: u64,
+    aborts: u64,
+    /// Per-server service-time stream: derived from the seed by server
+    /// id (`Rng::stream`), so neither thread count nor event
+    /// interleaving across servers can perturb any server's randomness.
+    rng: Rng,
+    q: EventQueue<Ev>,
+    out: Vec<OutMsg>,
+    /// Token-order log of global updates (when `record_global_log`).
+    log: Vec<(u64, StateUpdate)>,
+}
+
+impl ServerState {
+    /// Process own events strictly before `cut` (the window bound).
+    fn drain(&mut self, cut: VTime, ctx: &Shared<'_>) {
+        while let Some(t) = self.q.peek_time() {
+            if t >= cut {
+                break;
+            }
+            let (_, ev) = self.q.pop().unwrap();
+            self.handle(ev, ctx);
         }
     }
 
-    fn on_issue(&mut self, client: usize) {
-        let n = self.topo.n();
+    fn handle(&mut self, ev: Ev, ctx: &Shared<'_>) {
+        match ev {
+            Ev::Arrive { op } => self.on_arrive(op, ctx),
+            Ev::JobDone { job } => self.on_job_done(job, ctx),
+            Ev::TokenArrive { token } => self.on_token(token, ctx),
+            Ev::Issue { .. } | Ev::Reply { .. } => {
+                unreachable!("client-tier event delivered to a server")
+            }
+        }
+    }
+
+    fn on_arrive(&mut self, op: OpEnvelope, ctx: &Shared<'_>) {
+        if op.global {
+            // Algorithm 2 line 6: hold until the token arrives. If this
+            // server currently holds the token and has not yet passed it,
+            // the op still waits for the *next* rotation (the snapshot Q'
+            // was already taken).
+            self.pending.push(op);
+            return;
+        }
+        let service = ctx.cfg.service.sample(&ctx.app.spec.txns[op.txn], &mut self.rng);
+        self.submit_job(JobKind::Op(op), service, false);
+    }
+
+    fn submit_job(&mut self, job: JobKind, service: VTime, priority: bool) {
+        let now = self.q.now();
+        if let Some(started) = self.station.submit(now, job, service, priority) {
+            self.q.schedule(started.service, Ev::JobDone { job: started.payload });
+        }
+    }
+
+    fn on_job_done(&mut self, job: JobKind, ctx: &Shared<'_>) {
+        // Start whatever the station dequeues next.
+        let now = self.q.now();
+        if let Some(next) = self.station.complete(now) {
+            self.q.schedule(next.service, Ev::JobDone { job: next.payload });
+        }
+
+        match job {
+            JobKind::Op(op) => {
+                let update = self.execute_real(&op, ctx);
+                if op.global {
+                    // Append to the token in completion order (the DBMS
+                    // commit order under strict 2PL).
+                    let token =
+                        self.token.as_mut().expect("global op completed without the token");
+                    let u = update.unwrap_or_default();
+                    if ctx.cfg.record_global_log {
+                        self.log.push((token.appended + 1, u.clone()));
+                    }
+                    token.append(self.id, u);
+                    self.outstanding -= 1;
+                    if self.outstanding == 0 {
+                        self.pass_token(ctx, VTime::ZERO);
+                    }
+                }
+                self.send_reply(&op, ctx);
+            }
+            JobKind::Apply => {
+                // Replicated updates applied; dispatch the snapshot.
+                self.dispatch_globals(ctx);
+            }
+        }
+    }
+
+    /// Execute the operation body against this server's DB, returning its
+    /// state update (None when real execution is disabled or aborted).
+    fn execute_real(&mut self, op: &OpEnvelope, ctx: &Shared<'_>) -> Option<StateUpdate> {
+        if !ctx.cfg.execute_real {
+            return None;
+        }
+        let tpl = &ctx.app.spec.txns[op.txn];
+        let body = tpl.body.as_ref()?;
+        let db = self.db.as_ref().expect("real exec needs db");
+        let stmts = &ctx.stmt_maps[op.txn];
+        // Each server's events are handled sequentially, so lock
+        // conflicts cannot occur within a server; semantic errors
+        // (duplicate key etc.) count as aborts.
+        let mut handle = db.begin();
+        let mut tctx = TxnCtx::new(&mut handle, stmts);
+        match body(&mut tctx, &op.args) {
+            Ok(_reply) => match handle.commit() {
+                Ok(update) => Some(update),
+                Err(_) => {
+                    self.aborts += 1;
+                    None
+                }
+            },
+            Err(TxnError::Lock(_)) | Err(_) => {
+                handle.abort();
+                self.aborts += 1;
+                None
+            }
+        }
+    }
+
+    fn send_reply(&mut self, op: &OpEnvelope, ctx: &Shared<'_>) {
+        let delay = ctx.client_server_latency(op.client_site, self.id);
+        self.out.push(OutMsg {
+            target: CLIENT_TIER,
+            at: self.q.now() + delay,
+            ev: Ev::Reply { client: op.client, issued: op.issued, global: op.global },
+        });
+    }
+
+    fn on_token(&mut self, mut token: Token, ctx: &Shared<'_>) {
+        if self.id == 0 {
+            self.rotations += 1;
+        }
+        let updates = token.on_receive(self.id);
+        self.token = Some(token);
+
+        // Apply replicated updates (Algorithm 2 lines 11-15) as one CPU
+        // job; the pending snapshot executes after it.
+        if ctx.cfg.execute_real {
+            if let Some(db) = self.db.as_ref() {
+                for u in &updates {
+                    db.apply_update(u).expect("apply_update");
+                }
+            }
+        }
+        let n_updates = updates.len();
+        if n_updates > 0 {
+            let service =
+                VTime::from_millis_f64(ctx.cfg.apply_per_update_ms * n_updates as f64);
+            self.submit_job(JobKind::Apply, service, true);
+        } else {
+            self.dispatch_globals(ctx);
+        }
+    }
+
+    /// Take the atomic snapshot Q' and execute it (Algorithm 2 lines
+    /// 16-21); pass the token when the snapshot drains.
+    fn dispatch_globals(&mut self, ctx: &Shared<'_>) {
+        let snapshot: Vec<OpEnvelope> = std::mem::take(&mut self.pending);
+        if snapshot.is_empty() {
+            // Nothing to do: hold briefly, then pass.
+            self.pass_token(ctx, VTime::from_millis_f64(ctx.cfg.min_hold_ms));
+            return;
+        }
+        self.outstanding = snapshot.len();
+        for op in snapshot {
+            let service = ctx.cfg.service.sample(&ctx.app.spec.txns[op.txn], &mut self.rng);
+            // Global ops jump the queue: the paper's token thread wakes
+            // the handling threads which run concurrently with new local
+            // arrivals; priority keeps token hold times short.
+            self.submit_job(JobKind::Op(op), service, true);
+        }
+    }
+
+    fn pass_token(&mut self, ctx: &Shared<'_>, hold: VTime) {
+        let token = self.token.take().expect("passing the token without holding it");
+        let next = (self.id + 1) % ctx.topo.n();
+        let delay = hold
+            + ctx.topo.servers.one_way(self.id, next)
+            + VTime::from_millis_f64(ctx.cfg.hop_overhead_ms);
+        self.out.push(OutMsg {
+            target: next,
+            at: self.q.now() + delay,
+            ev: Ev::TokenArrive { token },
+        });
+    }
+}
+
+/// The client tier: client pool, workload generator and metrics — the
+/// sequential "edge" of the simulation, processed as one group.
+struct ClientTier<'a> {
+    clients: ClientPool,
+    gen: Box<dyn OpGenerator + 'a>,
+    metrics: SimMetrics,
+    q: EventQueue<Ev>,
+    out: Vec<OutMsg>,
+}
+
+impl ClientTier<'_> {
+    fn drain(&mut self, cut: VTime, ctx: &Shared<'_>) {
+        while let Some(t) = self.q.peek_time() {
+            if t >= cut {
+                break;
+            }
+            let (_, ev) = self.q.pop().unwrap();
+            match ev {
+                Ev::Issue { client } => self.on_issue(client, ctx),
+                Ev::Reply { client, issued, global } => self.on_reply(client, issued, global),
+                Ev::Arrive { .. } | Ev::JobDone { .. } | Ev::TokenArrive { .. } => {
+                    unreachable!("server event delivered to the client tier")
+                }
+            }
+        }
+    }
+
+    fn on_issue(&mut self, client: usize, ctx: &Shared<'_>) {
+        let n = ctx.topo.n();
         let site = self.clients.site(client);
         // Key affinity targets the nearest server site (clients at
         // server-less sites adopt the closest deployed server).
-        let affinity = self.nearest_server(site);
+        let affinity = ctx.nearest_server(site);
         let op = {
             let rng = self.clients.rng(client);
             // Borrow juggling: generator needs its own &mut.
             let mut r = rng.fork();
             self.gen.next_op(&mut r, affinity, n)
         };
-        let route = self.app.route(&op, n);
+        let route = ctx.app.route(&op, n);
         let (server, global) = match route {
             Route::Any => (affinity, false),
             Route::LocalAt(s) => (s, false),
             Route::GlobalAt(s) => (s, true),
         };
-        let op_id = self.ops.len() as u64;
-        self.ops.push(OpState { op, client, issued: self.q.now(), server, global });
 
         // Misrouting: send to a wrong server which answers MAP; the client
         // then contacts the right one — two extra hops.
-        let mut delay = self.client_server_latency(site, server);
-        if self.cfg.misroute_prob > 0.0 {
+        let mut delay = ctx.client_server_latency(site, server);
+        if ctx.cfg.misroute_prob > 0.0 {
             let r = self.clients.rng(client).f64();
-            if r < self.cfg.misroute_prob {
+            if r < ctx.cfg.misroute_prob {
                 let wrong = (server + 1) % n;
-                delay = self.client_server_latency(site, wrong)
-                    + self.client_server_latency(site, wrong)
-                    + self.client_server_latency(site, server);
+                delay = ctx.client_server_latency(site, wrong)
+                    + ctx.client_server_latency(site, wrong)
+                    + ctx.client_server_latency(site, server);
             }
         }
-        self.q.schedule(delay, Ev::Arrive { op: op_id, redirected: false });
-    }
-
-    fn on_arrive(&mut self, op_id: u64, _redirected: bool) {
-        let (server, global, txn) = {
-            let o = &self.ops[op_id as usize];
-            (o.server, o.global, o.op.txn)
+        let env = OpEnvelope {
+            txn: op.txn,
+            args: op.args,
+            client,
+            client_site: site,
+            issued: self.q.now(),
+            global,
         };
-        if global {
-            // Algorithm 2 line 6: hold until the token arrives. If this
-            // server currently holds the token and has not yet passed it,
-            // the op still waits for the *next* rotation (the snapshot Q'
-            // was already taken).
-            self.servers[server].pending.push(op_id);
-            return;
-        }
-        let service = self.cfg.service.sample(&self.app.spec.txns[txn], &mut self.svc_rng);
-        self.submit_job(server, JobKind::Op(op_id), service, false);
+        self.out.push(OutMsg {
+            target: server,
+            at: self.q.now() + delay,
+            ev: Ev::Arrive { op: env },
+        });
     }
 
-    fn submit_job(&mut self, server: usize, job: JobKind, service: VTime, priority: bool) {
-        let now = self.q.now();
-        if let Some(started) = self.servers[server].station.submit(now, job, service, priority) {
-            self.q.schedule(started.service, Ev::JobDone { server, job: started.payload });
-        }
-    }
-
-    fn on_job_done(&mut self, server: usize, job: JobKind) {
-        // Start whatever the station dequeues next.
-        let now = self.q.now();
-        if let Some(next) = self.servers[server].station.complete(now) {
-            self.q.schedule(next.service, Ev::JobDone { server, job: next.payload });
-        }
-
-        match job {
-            JobKind::Op(op_id) => {
-                let global = self.ops[op_id as usize].global;
-                let update = self.execute_real(server, op_id);
-                if global {
-                    // Append to the token in completion order (the DBMS
-                    // commit order under strict 2PL).
-                    if let Some(u) = update {
-                        self.token.append(server, u);
-                    } else {
-                        self.token.append(server, StateUpdate::new());
-                    }
-                    let s = &mut self.servers[server];
-                    s.outstanding -= 1;
-                    if s.outstanding == 0 {
-                        self.pass_token(server);
-                    }
-                }
-                self.send_reply(op_id);
-            }
-            JobKind::Apply { .. } => {
-                // Replicated updates applied; dispatch the snapshot.
-                self.servers[server].applying = false;
-                self.dispatch_globals(server);
-            }
-        }
-    }
-
-    /// Execute the operation body against the server's DB, returning its
-    /// state update (None when real execution is disabled or aborted).
-    fn execute_real(&mut self, server: usize, op_id: u64) -> Option<StateUpdate> {
-        if !self.cfg.execute_real {
-            return None;
-        }
-        let o = &self.ops[op_id as usize];
-        let tpl = &self.app.spec.txns[o.op.txn];
-        let Some(body) = tpl.body.as_ref() else { return None };
-        let db = self.servers[server].db.as_ref().expect("real exec needs db");
-        let stmts = &self.stmt_maps[o.op.txn];
-        // Single-threaded simulation: lock conflicts cannot occur, but
-        // semantic errors (duplicate key etc.) count as aborts.
-        let mut handle = db.begin();
-        let mut ctx = TxnCtx::new(&mut handle, stmts);
-        match body(&mut ctx, &o.op.args) {
-            Ok(_reply) => match handle.commit() {
-                Ok(update) => Some(update),
-                Err(_) => {
-                    self.servers[server].aborts += 1;
-                    None
-                }
-            },
-            Err(TxnError::Lock(_)) | Err(_) => {
-                handle.abort();
-                self.servers[server].aborts += 1;
-                None
-            }
-        }
-    }
-
-    fn send_reply(&mut self, op_id: u64) {
-        let o = &self.ops[op_id as usize];
-        let site = self.clients.site(o.client);
-        let delay = self.client_server_latency(site, o.server);
-        self.q.schedule(delay, Ev::Reply { op: op_id });
-    }
-
-    fn on_reply(&mut self, op_id: u64) {
-        let (client, issued, global) = {
-            let o = &self.ops[op_id as usize];
-            (o.client, o.issued, o.global)
-        };
+    fn on_reply(&mut self, client: usize, issued: VTime, global: bool) {
         self.metrics.complete(issued, self.q.now(), global);
         let think = self.clients.think(client);
         self.q.schedule(think, Ev::Issue { client });
     }
+}
 
-    fn on_token(&mut self, server: usize) {
-        self.token_at = server;
-        if server == 0 {
-            self.token.rotations += 1;
+/// The simulation driver.
+pub struct ConveyorSim<'a> {
+    app: &'a AnalyzedApp,
+    /// Per-template statements compiled once against the schema
+    /// (prepare-once; all per-server DBs share one schema).
+    stmt_maps: Vec<PreparedStmts>,
+    topo: Topology,
+    cfg: ConveyorConfig,
+    client: ClientTier<'a>,
+    servers: Vec<ServerState>,
+    /// Reused cross-send merge buffer (allocation-steady rounds).
+    merge_buf: Vec<MergeEntry>,
+}
+
+impl<'a> ConveyorSim<'a> {
+    pub fn new(
+        app: &'a AnalyzedApp,
+        topo: Topology,
+        clients_cfg: ClientsConfig,
+        cfg: ConveyorConfig,
+        gen: Box<dyn OpGenerator + 'a>,
+        seed_db: impl Fn(&Db),
+    ) -> Self {
+        let n = topo.n();
+        let client_sites = cfg.client_matrix.as_ref().map(|m| m.n()).unwrap_or(n);
+        let clients = ClientPool::new(ClientsConfig { sites: client_sites, ..clients_cfg });
+        let servers = (0..n)
+            .map(|id| {
+                let db = if cfg.execute_real {
+                    let db = Db::new(app.spec.schema.clone());
+                    seed_db(&db);
+                    Some(db)
+                } else {
+                    None
+                };
+                ServerState {
+                    id,
+                    db,
+                    station: Station::new(cfg.workers),
+                    pending: Vec::new(),
+                    outstanding: 0,
+                    token: None,
+                    rotations: 0,
+                    aborts: 0,
+                    rng: Rng::stream(cfg.seed ^ 0xF00D, id as u64),
+                    q: EventQueue::new(),
+                    out: Vec::new(),
+                    log: Vec::new(),
+                }
+            })
+            .collect();
+        let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
+        ConveyorSim {
+            stmt_maps: app.spec.txns.iter().map(|t| t.prepared_map(&app.spec.schema)).collect(),
+            app,
+            topo,
+            cfg,
+            client: ClientTier {
+                clients,
+                gen,
+                metrics,
+                q: EventQueue::new(),
+                out: Vec::new(),
+            },
+            servers,
+            merge_buf: Vec::new(),
         }
-        let updates = self.token.on_receive(server);
-        let s = &mut self.servers[server];
-        s.holds_token = true;
+    }
 
-        // Apply replicated updates (Algorithm 2 lines 11-15) as one CPU
-        // job; the pending snapshot executes after it.
-        let n_updates = updates.len();
-        if self.cfg.execute_real {
-            if let Some(db) = self.servers[server].db.as_ref() {
-                for u in &updates {
-                    db.apply_update(u).expect("apply_update");
+    /// The conservative lookahead `L`: the minimum latency any
+    /// cross-group event pays. Every client↔server leg and every token
+    /// hop is at least this far in the future, so events inside a window
+    /// `[T, T + L)` cannot be affected by other groups' work in the same
+    /// window.
+    fn lookahead(&self) -> VTime {
+        let n = self.topo.n();
+        let mut l = VTime::from_micros(u64::MAX);
+        // Client <-> server legs (Issue→Arrive, op completion→Reply).
+        match &self.cfg.client_matrix {
+            Some(m) => {
+                for site in 0..m.n() {
+                    for s in 0..n {
+                        l = l.min(m.one_way(site, s));
+                    }
+                }
+            }
+            None => {
+                for site in 0..n {
+                    for s in 0..n {
+                        l = l.min(self.topo.servers.one_way(site, s));
+                    }
                 }
             }
         }
-        if n_updates > 0 {
-            self.servers[server].applying = true;
-            let service = VTime::from_millis_f64(self.cfg.apply_per_update_ms * n_updates as f64);
-            self.submit_job(server, JobKind::Apply { n: n_updates }, service, true);
-        } else {
-            self.dispatch_globals(server);
+        // Token ring hops; every pass also pays the hop overhead.
+        let hop = VTime::from_millis_f64(self.cfg.hop_overhead_ms);
+        for a in 0..n {
+            let b = (a + 1) % n;
+            l = l.min(self.topo.servers.one_way(a, b) + hop);
         }
+        l
     }
 
-    /// Take the atomic snapshot Q' and execute it (Algorithm 2 lines
-    /// 16-21); pass the token when the snapshot drains.
-    fn dispatch_globals(&mut self, server: usize) {
-        let snapshot: Vec<u64> = std::mem::take(&mut self.servers[server].pending);
-        if snapshot.is_empty() {
-            // Nothing to do: hold briefly, then pass.
-            let hold = VTime::from_millis_f64(self.cfg.min_hold_ms);
-            let next = (server + 1) % self.topo.n();
-            let delay = hold
-                + self.topo.servers.one_way(server, next)
-                + VTime::from_millis_f64(self.cfg.hop_overhead_ms);
-            self.q.schedule(delay, Ev::TokenArrive { server: next });
-            self.servers[server].holds_token = false;
-            return;
-        }
-        self.servers[server].outstanding = snapshot.len();
-        for op_id in snapshot {
-            let txn = self.ops[op_id as usize].op.txn;
-            let service = self.cfg.service.sample(&self.app.spec.txns[txn], &mut self.svc_rng);
-            // Global ops jump the queue: the paper's token thread wakes
-            // the handling threads which run concurrently with new local
-            // arrivals; priority keeps token hold times short.
-            self.submit_job(server, JobKind::Op(op_id), service, true);
-        }
+    /// Run the simulation to the configured horizon and return final
+    /// metrics. Consumes the driver.
+    pub fn run(self) -> ConveyorReport {
+        self.run_keep_dbs().0
     }
 
-    fn pass_token(&mut self, server: usize) {
-        debug_assert!(self.servers[server].holds_token);
-        self.servers[server].holds_token = false;
-        let next = (server + 1) % self.topo.n();
-        let delay = self.topo.servers.one_way(server, next)
-            + VTime::from_millis_f64(self.cfg.hop_overhead_ms);
-        self.q.schedule(delay, Ev::TokenArrive { server: next });
+    /// Like [`run`](Self::run), but additionally hands back the
+    /// per-server DB instances (real-execution runs; `None` entries
+    /// otherwise) so tests can inspect final state beyond the digest.
+    pub fn run_keep_dbs(mut self) -> (ConveyorReport, Vec<Option<Db>>) {
+        // Boot: token starts at server 0; all clients issue.
+        let n = self.topo.n();
+        self.servers[0].q.schedule_at(VTime::ZERO, Ev::TokenArrive { token: Token::new(n) });
+        for c in 0..self.client.clients.n() {
+            // Stagger initial issues a little to avoid a thundering herd
+            // artifact at t=0.
+            let jitter = VTime::from_micros((c as u64 % 97) * 13);
+            self.client.q.schedule_at(jitter, Ev::Issue { client: c });
+        }
+
+        let lookahead = self.lookahead();
+        let threads = parallel::resolve_threads(self.cfg.parallel);
+        let horizon = self.cfg.horizon;
+
+        loop {
+            // T = earliest pending event anywhere; stop past the horizon.
+            let mut t_min = self.client.q.peek_time();
+            for s in &self.servers {
+                if let Some(t) = s.q.peek_time() {
+                    t_min = Some(t_min.map_or(t, |m| m.min(t)));
+                }
+            }
+            let Some(t) = t_min else { break };
+            if t > horizon {
+                break;
+            }
+            // Exclusive processing cut: [T, T+L) ∩ [0, horizon]. A
+            // zero lookahead (degenerate topology) falls back to
+            // single-tick windows, which stay correct: zero-latency
+            // cross sends are merged after the round and processed at
+            // the same virtual time in the next one.
+            let width = if lookahead == VTime::ZERO {
+                VTime::from_micros(1)
+            } else {
+                lookahead
+            };
+            let cut = VTime::from_micros(
+                (t + width).as_micros().min(horizon.as_micros() + 1),
+            );
+
+            let ctx = Shared {
+                app: self.app,
+                stmt_maps: &self.stmt_maps,
+                topo: &self.topo,
+                cfg: &self.cfg,
+            };
+            // Client tier on the driving thread, then the servers fan
+            // out. Groups cannot interact inside a window, so this
+            // order is a scheduling choice, not a semantic one.
+            self.client.drain(cut, &ctx);
+            // Spawn when at least two servers have work *inside this
+            // window* (queued future events don't count): sparse windows
+            // — a lone token hop, one server's job completions — stay on
+            // the driving thread, while any genuinely shareable window
+            // exercises the fan-out path. Both paths are identical, so
+            // this is purely a spawn-overhead heuristic.
+            let busy = self
+                .servers
+                .iter()
+                .filter(|s| s.q.peek_time().is_some_and(|pt| pt < cut))
+                .count();
+            if threads > 1 && busy >= 2 {
+                parallel::fan_out_mut(threads, &mut self.servers, |s| s.drain(cut, &ctx));
+            } else {
+                for s in self.servers.iter_mut() {
+                    s.drain(cut, &ctx);
+                }
+            }
+
+            // Deterministic merge of cross-group sends: canonical order
+            // (time, source rank, emission number) fixes the target
+            // queues' FIFO tie-break sequence numbers independently of
+            // which thread produced what.
+            for (src, s) in self.servers.iter_mut().enumerate() {
+                for (idx, m) in s.out.drain(..).enumerate() {
+                    self.merge_buf.push(MergeEntry {
+                        at: m.at,
+                        src: src as u32,
+                        idx: idx as u32,
+                        target: m.target,
+                        ev: m.ev,
+                    });
+                }
+            }
+            for (idx, m) in self.client.out.drain(..).enumerate() {
+                self.merge_buf.push(MergeEntry {
+                    at: m.at,
+                    src: n as u32,
+                    idx: idx as u32,
+                    target: m.target,
+                    ev: m.ev,
+                });
+            }
+            self.merge_buf.sort_by_key(|e| (e.at, e.src, e.idx));
+            for e in self.merge_buf.drain(..) {
+                if e.target == CLIENT_TIER {
+                    self.client.q.schedule_at(e.at, e.ev);
+                } else {
+                    self.servers[e.target].q.schedule_at(e.at, e.ev);
+                }
+            }
+        }
+        let report = self.report();
+        let dbs = self.servers.into_iter().map(|s| s.db).collect();
+        (report, dbs)
+    }
+
+    fn report(&mut self) -> ConveyorReport {
+        let now = self.cfg.horizon;
+        let mut log: Vec<(u64, StateUpdate)> = Vec::new();
+        for s in self.servers.iter_mut() {
+            log.append(&mut s.log);
+        }
+        log.sort_by_key(|(seq, _)| *seq);
+        ConveyorReport {
+            metrics: self.client.metrics.clone(),
+            rotations: self.servers.iter().map(|s| s.rotations).sum(),
+            utilization: self.servers.iter().map(|s| s.station.utilization(now)).collect(),
+            aborts: self.servers.iter().map(|s| s.aborts).sum(),
+            db_hashes: self
+                .servers
+                .iter()
+                .map(|s| s.db.as_ref().map(|d| d.content_hash()))
+                .collect(),
+            events: self.client.q.processed()
+                + self.servers.iter().map(|s| s.q.processed()).sum::<u64>(),
+            global_log: log.into_iter().map(|(_, u)| u).collect(),
+        }
     }
 }
 
@@ -473,6 +744,10 @@ pub struct ConveyorReport {
     /// tables must converge once quiesced.
     pub db_hashes: Vec<Option<u64>>,
     pub events: u64,
+    /// The token's total order of global state updates (only populated
+    /// with [`ConveyorConfig::record_global_log`]): the serial history
+    /// every server's replicated state must be explainable by.
+    pub global_log: Vec<StateUpdate>,
 }
 
 impl ConveyorReport {
@@ -490,7 +765,7 @@ mod tests {
     use super::*;
     use crate::catalog::{Schema, TableSchema, ValueType};
     use crate::db::{Bindings, Value};
-    use crate::workload::spec::{AppSpec, TxnTemplate};
+    use crate::workload::spec::{AppSpec, Operation, TxnTemplate};
 
     /// A small cart app: local add, global order (writes shared STOCK).
     fn app() -> AnalyzedApp {
@@ -574,13 +849,20 @@ mod tests {
         }
     }
 
-    fn run(n_servers: usize, clients: usize, global_ratio: f64, real: bool) -> ConveyorReport {
+    fn run_par(
+        n_servers: usize,
+        clients: usize,
+        global_ratio: f64,
+        real: bool,
+        threads: usize,
+    ) -> ConveyorReport {
         let app = app();
         let cfg = ConveyorConfig {
             execute_real: real,
             warmup: VTime::from_secs(2),
             horizon: VTime::from_secs(10),
             service: ServiceModel::fixed(5.0),
+            parallel: threads,
             ..Default::default()
         };
         let sim = ConveyorSim::new(
@@ -592,6 +874,10 @@ mod tests {
             seed,
         );
         sim.run()
+    }
+
+    fn run(n_servers: usize, clients: usize, global_ratio: f64, real: bool) -> ConveyorReport {
+        run_par(n_servers, clients, global_ratio, real, 1)
     }
 
     #[test]
@@ -677,5 +963,107 @@ mod tests {
         assert_eq!(a.metrics.completed, b.metrics.completed);
         assert_eq!(a.events, b.events);
         assert!((a.mean_latency_ms() - b.mean_latency_ms()).abs() < 1e-9);
+    }
+
+    /// The headline property of the window engine, checked cheaply here
+    /// and exhaustively in `tests/parallel_determinism.rs`: any thread
+    /// count produces bit-identical results.
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let base = run_par(4, 40, 0.3, false, 1);
+        for threads in [2usize, 0] {
+            let r = run_par(4, 40, 0.3, false, threads);
+            assert_eq!(r.metrics.completed, base.metrics.completed, "threads={threads}");
+            assert_eq!(r.events, base.events, "threads={threads}");
+            assert_eq!(r.rotations, base.rotations, "threads={threads}");
+            assert!(
+                (r.mean_latency_ms() - base.mean_latency_ms()).abs() < 1e-12,
+                "threads={threads}"
+            );
+        }
+    }
+
+    /// Satellite guard: the documented defaults the benches assume. A
+    /// silent retuning of these constants would skew every recorded
+    /// figure, so drift fails loudly here.
+    #[test]
+    fn documented_defaults_match_bench_assumptions() {
+        let c = ConveyorConfig::default();
+        assert_eq!(c.workers, 8);
+        assert!((c.apply_per_update_ms - 0.05).abs() < 1e-12);
+        assert!((c.min_hold_ms - 0.1).abs() < 1e-12);
+        assert!((c.hop_overhead_ms - 0.1).abs() < 1e-12);
+        assert!((c.misroute_prob - 0.0).abs() < 1e-12);
+        assert_eq!(c.parallel, 1, "sequential by default; benches opt in");
+        assert!(!c.record_global_log);
+        assert!(!c.execute_real);
+        assert_eq!(c.warmup, VTime::from_secs(5));
+        assert_eq!(c.horizon, VTime::from_secs(25));
+        assert_eq!(c.seed, 0x5EED);
+    }
+
+    /// The recorded token log is the serial history: replaying it on a
+    /// fresh DB must reproduce every server's replicated table.
+    #[test]
+    fn global_log_replays_to_converged_state() {
+        let app = app();
+        let cfg = ConveyorConfig {
+            execute_real: true,
+            record_global_log: true,
+            warmup: VTime::from_secs(1),
+            horizon: VTime::from_secs(6),
+            service: ServiceModel::fixed(5.0),
+            ..Default::default()
+        };
+        let (r, dbs) = ConveyorSim::new(
+            &app,
+            Topology::lan(3),
+            ClientsConfig { n: 12, think_ms: 10.0, seed: 7, ..Default::default() },
+            cfg,
+            Box::new(MixGen { global_ratio: 0.5 }),
+            seed,
+        )
+        .run_keep_dbs();
+        assert!(!r.global_log.is_empty());
+        assert!(r.metrics.completed > 100);
+        // Serial replay of the token history on a fresh replica.
+        let replica = Db::new(app.spec.schema.clone());
+        seed(&replica);
+        for u in &r.global_log {
+            replica.apply_update(u).unwrap();
+        }
+        use crate::db::Key;
+        let levels = |db: &Db| -> Vec<i64> {
+            (0..8i64)
+                .map(|item| {
+                    db.peek("STOCK", &Key::single(Value::Int(item))).unwrap()[1]
+                        .as_int()
+                        .unwrap()
+                })
+                .collect()
+        };
+        // Every recorded global is one STOCK decrement, so the full
+        // replay sells exactly log-many units — the log records real,
+        // replayable effects.
+        let full = levels(&replica);
+        let sold: i64 = full.iter().map(|l| 1000 - l).sum();
+        assert_eq!(sold, r.global_log.len() as i64);
+        // The generator never quiesces (globals keep arriving up to the
+        // horizon), so each server holds the effects of a *subset* of
+        // the log: per item, its level sits between the full replay and
+        // the seed value — and well below the seed overall, proving the
+        // servers really applied replicated updates.
+        for (s, db) in dbs.iter().enumerate() {
+            let lv = levels(db.as_ref().expect("real-execution db"));
+            let mut server_sold = 0;
+            for (item, (&have, &all)) in lv.iter().zip(full.iter()).enumerate() {
+                assert!(
+                    (all..=1000).contains(&have),
+                    "server {s} item {item}: level {have} outside [{all}, 1000]"
+                );
+                server_sold += 1000 - have;
+            }
+            assert!(server_sold > 0, "server {s} applied no global updates");
+        }
     }
 }

@@ -442,7 +442,7 @@ mod tests {
                     let txn = t * 1_000_000 + i; // unique, interleaved ages
                     let r = rng.range(0, 8);
                     match lm.acquire(txn, row(r as i64), LockMode::X) {
-                        Ok(()) => {
+                        Ok(_) => {
                             let prev = owners[r].swap(txn + 1, Ordering::SeqCst);
                             assert_eq!(prev, 0, "row {r} already exclusively owned");
                             std::thread::yield_now();

@@ -67,15 +67,39 @@ pub struct ExpScale {
     pub horizon_s: u64,
     pub max_clients: usize,
     pub think_ms: f64,
+    /// Worker threads for the window-parallel Conveyor simulator
+    /// (`ConveyorConfig::parallel`): 1 = sequential, 0 = all cores.
+    /// Results are bit-identical for every value (see
+    /// `tests/parallel_determinism.rs`), so benches default to all
+    /// cores via their `--parallel` flag.
+    pub parallel: usize,
 }
 
 impl ExpScale {
     pub fn full() -> Self {
-        ExpScale { warmup_s: 4, horizon_s: 20, max_clients: 16384, think_ms: 1000.0 }
+        ExpScale {
+            warmup_s: 4,
+            horizon_s: 20,
+            max_clients: 16384,
+            think_ms: 1000.0,
+            parallel: 1,
+        }
     }
 
     pub fn quick() -> Self {
-        ExpScale { warmup_s: 2, horizon_s: 8, max_clients: 4096, think_ms: 1000.0 }
+        ExpScale {
+            warmup_s: 2,
+            horizon_s: 8,
+            max_clients: 4096,
+            think_ms: 1000.0,
+            parallel: 1,
+        }
+    }
+
+    /// Set the simulator thread budget (0 = all available cores).
+    pub fn with_parallel(mut self, threads: usize) -> Self {
+        self.parallel = threads;
+        self
     }
 }
 
@@ -105,6 +129,7 @@ fn conveyor_point_with(
         horizon: VTime::from_secs(scale.horizon_s),
         execute_real: false,
         client_matrix,
+        parallel: scale.parallel,
         ..Default::default()
     };
     let report = ConveyorSim::new(
@@ -312,6 +337,7 @@ pub fn fig6(ratios: &[f64], clients: usize, scale: &ExpScale) -> Vec<(f64, f64, 
                 warmup: VTime::from_secs(scale.warmup_s),
                 horizon: VTime::from_secs(scale.horizon_s),
                 execute_real: false,
+                parallel: scale.parallel,
                 ..Default::default()
             };
             let report = ConveyorSim::new(

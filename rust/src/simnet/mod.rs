@@ -23,6 +23,7 @@ pub mod clients;
 pub mod events;
 pub mod latency;
 pub mod metrics;
+pub mod parallel;
 pub mod station;
 
 pub use clients::{ClientPool, ClientsConfig};
@@ -30,3 +31,7 @@ pub use events::{EventQueue, Schedulable};
 pub use latency::{LatencyMatrix, Site, Topology};
 pub use metrics::SimMetrics;
 pub use station::Station;
+
+// The conservative-window parallel execution mode built from these
+// pieces (per-server event queues, deterministic cross-send merge,
+// per-server RNG streams) is documented in `src/simnet/README.md`.

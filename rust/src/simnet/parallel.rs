@@ -1,0 +1,106 @@
+//! Scoped fan-out used by the parallel simulators.
+//!
+//! The window-parallel engines (see `simnet/README.md`) repeatedly need
+//! "run f over every server's state, using up to N OS threads, with no
+//! shared mutable state". [`fan_out_mut`] does exactly that with
+//! `std::thread::scope`: the item slice is split into one contiguous
+//! chunk per thread, each chunk is processed sequentially on its thread,
+//! and the call returns once every chunk is done.
+//!
+//! Determinism: `f` receives disjoint `&mut` items and (by the `Sync`
+//! bound) only shared immutable context, so the *result* of a fan-out is
+//! independent of the thread count and of OS scheduling — threads decide
+//! only *where* each item is processed, never in what order effects are
+//! observed (items do not observe each other at all).
+
+/// Number of worker threads a `parallel = 0` ("auto") knob resolves to.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a user-facing `parallel` knob: `0` means "all available
+/// cores", anything else is taken literally (min 1).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        available_threads()
+    } else {
+        requested
+    }
+}
+
+/// Apply `f` to every item of `items`, fanning out across at most
+/// `threads` scoped OS threads. With `threads <= 1` (or a single item)
+/// this degrades to a plain sequential loop on the calling thread — the
+/// effects are identical either way.
+pub fn fan_out_mut<T, F>(threads: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let threads = threads.min(items.len()).max(1);
+    if threads <= 1 {
+        for it in items.iter_mut() {
+            f(it);
+        }
+        return;
+    }
+    let chunk = items.len().div_ceil(threads);
+    let f = &f; // shared by reference; `move` below copies the reference
+    std::thread::scope(|scope| {
+        for slice in items.chunks_mut(chunk) {
+            scope.spawn(move || {
+                for it in slice.iter_mut() {
+                    f(it);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolves_auto_and_literal() {
+        assert!(available_threads() >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(0), available_threads());
+    }
+
+    #[test]
+    fn fan_out_touches_every_item_exactly_once() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut xs: Vec<u64> = (0..37).collect();
+            fan_out_mut(threads, &mut xs, |x| *x += 1000);
+            let expect: Vec<u64> = (0..37).map(|i| i + 1000).collect();
+            assert_eq!(xs, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fan_out_result_is_thread_count_independent() {
+        // Each item's result depends only on the item itself, so any
+        // thread count must produce bit-identical output.
+        let run = |threads: usize| {
+            let mut xs: Vec<u64> = (0..101).collect();
+            fan_out_mut(threads, &mut xs, |x| {
+                let mut r = crate::util::Rng::new(*x);
+                for _ in 0..10 {
+                    *x = x.wrapping_add(r.next_u64());
+                }
+            });
+            xs
+        };
+        let base = run(1);
+        for threads in [2usize, 4, 7, 16] {
+            assert_eq!(run(threads), base, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_slice_is_fine() {
+        let mut xs: Vec<u32> = vec![];
+        fan_out_mut(4, &mut xs, |_| unreachable!());
+    }
+}

@@ -94,13 +94,16 @@ impl<P> Station<P> {
         self.completed
     }
 
-    /// Average utilization in [0, 1] over `[0, now]`.
-    pub fn utilization(&mut self, now: VTime) -> f64 {
-        self.account(now);
+    /// Average utilization in [0, 1] over `[0, now]`. Read-only: the
+    /// interval since the last state change is folded in on the fly, so
+    /// report code can query stations without `&mut` access.
+    pub fn utilization(&self, now: VTime) -> f64 {
         if now == VTime::ZERO {
             return 0.0;
         }
-        self.busy_time.as_micros() as f64 / (now.as_micros() as f64 * self.workers as f64)
+        let dt = now.saturating_sub(self.last_change);
+        let busy = self.busy_time + VTime::from_micros(dt.as_micros() * self.busy as u64);
+        busy.as_micros() as f64 / (now.as_micros() as f64 * self.workers as f64)
     }
 }
 

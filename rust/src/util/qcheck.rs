@@ -78,10 +78,31 @@ where
     }
 }
 
+/// Outcome of one property invocation: `None` = passed; `Some(detail)` =
+/// failed, carrying the panic message when the property signalled failure
+/// by panicking (plain `assert!` works) rather than returning `false`.
+fn prop_failure<T, F>(prop: &F, xs: &[T]) -> Option<String>
+where
+    T: std::panic::RefUnwindSafe,
+    F: Fn(&[T]) -> bool + std::panic::RefUnwindSafe,
+{
+    match std::panic::catch_unwind(|| prop(xs)) {
+        Ok(true) => None,
+        Ok(false) => Some("property returned false".into()),
+        Err(payload) => Some(
+            payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into()),
+        ),
+    }
+}
+
 /// Run a property over generated `Vec<T>` inputs with greedy shrinking:
 /// on failure, repeatedly try dropping chunks of the input while the
-/// property still fails, then report the minimized counterexample via
-/// `render`.
+/// property still fails, then report the minimized counterexample along
+/// with *its* failure message (not the original, larger case's).
 pub fn check_vec<T, G, F>(cfg: Config, gen_item: G, max_len: usize, prop: F)
 where
     T: Clone + std::fmt::Debug + std::panic::RefUnwindSafe,
@@ -94,17 +115,19 @@ where
         let mut rng = Rng::new(case_seed);
         let len = rng.range(0, max_len + 1);
         let input: Vec<T> = (0..len).map(|_| gen_item(&mut rng)).collect();
-        let ok = std::panic::catch_unwind(|| prop(&input)).unwrap_or(false);
-        if !ok {
+        if prop_failure(&prop, &input).is_some() {
             let minimized = shrink(&input, &prop);
+            let detail = prop_failure(&prop, &minimized)
+                .unwrap_or_else(|| "<minimized case passes — flaky property?>".into());
             panic!(
-                "property '{}' failed at case {}/{} (case_seed={:#x});\n  minimized input ({} items): {:?}",
+                "property '{}' failed at case {}/{} (case_seed={:#x});\n  minimized input ({} items): {:?}\n  failure: {}",
                 cfg.name,
                 case + 1,
                 cfg.cases,
                 case_seed,
                 minimized.len(),
-                minimized
+                minimized,
+                detail
             );
         }
     }
@@ -192,6 +215,20 @@ mod tests {
             |rng| rng.range(0, 50) as i64,
             30,
             |xs| !xs.contains(&42),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "boom on 42")]
+    fn check_vec_surfaces_inner_panic_message() {
+        check_vec(
+            Config::default().cases(200).name("panic-msg"),
+            |rng| rng.range(0, 50) as i64,
+            30,
+            |xs| {
+                assert!(!xs.contains(&42), "boom on 42");
+                true
+            },
         );
     }
 }

@@ -1,0 +1,417 @@
+//! Determinism suite for the window-parallel Conveyor simulator.
+//!
+//! The whole point of the parallel execution mode is that it can be
+//! *trusted*: an N-thread run must be bit-identical to the 1-thread run
+//! — same metrics, same event counts, same token rotations, same final
+//! DB state on every server — across seeds and topologies. This suite
+//! enforces exactly that (the ISSUE's acceptance criterion), plus:
+//!
+//! * end-to-end coverage of the MAP misroute/redirect path
+//!   (`misroute_prob > 0`), previously untested;
+//! * a qcheck property: for random operation schedules, the committed
+//!   replicated state of every server equals a *serial* replay of the
+//!   token's total order of global updates — the Conveyor Belt
+//!   serializability witness.
+//!
+//! The real-execution workloads here use point statements only: the
+//! embedded engine's scan iteration order over hash storage is not part
+//! of its determinism contract, while point accesses are fully
+//! deterministic (see `src/simnet/README.md`, "Engine determinism").
+
+use elia::conveyor::{ConveyorConfig, ConveyorReport, ConveyorSim};
+use elia::db::{BindSlots, Bindings, Db, Key, Value};
+use elia::simnet::clients::ClientsConfig;
+use elia::simnet::latency::{LatencyMatrix, Topology};
+use elia::simnet::metrics::SimMetrics;
+use elia::util::qcheck::{check_vec, Config};
+use elia::util::{Rng, VTime};
+use elia::workload::generator::{OpGenerator, ServiceModel};
+use elia::workload::analyzed::AnalyzedApp;
+use elia::workload::spec::{AppSpec, Operation, TxnTemplate};
+
+// ---------------------------------------------------------------- app --
+
+const N_ITEMS: i64 = 8;
+const N_CARTS: i64 = 256;
+const INIT_LEVEL: i64 = 1000;
+
+/// The Figure-1 store: local `add`, global `order` (derived STOCK key),
+/// read-only local `view`. Point statements only.
+fn store_app() -> AnalyzedApp {
+    use elia::catalog::{Schema, TableSchema, ValueType};
+    let schema = Schema::new(vec![
+        TableSchema::new(
+            "CARTS",
+            &[("CID", ValueType::Int), ("QTY", ValueType::Int)],
+            &["CID"],
+        ),
+        TableSchema::new(
+            "STOCK",
+            &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int)],
+            &["ITEM"],
+        ),
+    ]);
+    let txns = vec![
+        TxnTemplate::new(
+            "add",
+            &["cid"],
+            &[("u", "UPDATE CARTS SET QTY = QTY + 1 WHERE CID = ?cid")],
+            1.0,
+        )
+        .with_body(|ctx, args| ctx.exec("u", args)),
+        TxnTemplate::new(
+            "order",
+            &["cid"],
+            &[
+                ("r", "SELECT QTY FROM CARTS WHERE CID = ?cid"),
+                ("w", "UPDATE STOCK SET LEVEL = LEVEL - 1 WHERE ITEM = ?derived_item"),
+            ],
+            1.0,
+        )
+        .with_body(|ctx, args| {
+            ctx.exec("r", args)?;
+            let cid = args.get("cid").and_then(|v| v.as_int()).unwrap_or(0);
+            let mut b = args.clone();
+            b.insert("derived_item".to_string(), Value::Int(cid.rem_euclid(N_ITEMS)));
+            ctx.exec("w", &b)
+        }),
+        TxnTemplate::new(
+            "view",
+            &["cid"],
+            &[("q", "SELECT QTY FROM CARTS WHERE CID = ?cid")],
+            1.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+    ];
+    let app = AnalyzedApp::analyze(AppSpec { name: "store".into(), schema, txns });
+    assert_eq!(*app.class(0), elia::analysis::OpClass::Local);
+    assert_eq!(*app.class(1), elia::analysis::OpClass::Global);
+    app
+}
+
+fn seed_store(db: &Db) {
+    let cart = db.prepare_sql("INSERT INTO CARTS (CID, QTY) VALUES (?c, 0)").unwrap();
+    let stock = db.prepare_sql("INSERT INTO STOCK (ITEM, LEVEL) VALUES (?i, ?l)").unwrap();
+    for c in 0..N_CARTS {
+        db.exec_auto_prepared(&cart, &BindSlots(vec![Value::Int(c)])).unwrap();
+    }
+    for i in 0..N_ITEMS {
+        db.exec_auto_prepared(&stock, &BindSlots(vec![Value::Int(i), Value::Int(INIT_LEVEL)]))
+            .unwrap();
+    }
+}
+
+fn op(txn: usize, cid: i64) -> Operation {
+    let args: Bindings = [("cid".to_string(), Value::Int(cid))].into_iter().collect();
+    Operation { txn, args }
+}
+
+/// Random mixed workload (site-affine locals, derived-key globals).
+struct MixGen {
+    global_ratio: f64,
+}
+
+impl OpGenerator for MixGen {
+    fn next_op(&mut self, rng: &mut Rng, site: usize, n: usize) -> Operation {
+        let cid = (rng.range(0, N_CARTS as usize / n.max(1)) * n + site) as i64 % N_CARTS;
+        if rng.chance(self.global_ratio) {
+            op(1, cid)
+        } else {
+            op(0, cid)
+        }
+    }
+}
+
+/// Replays a fixed schedule, then issues read-only `view`s (quiesce
+/// filler): the sim's closed loop keeps running, but global state stops
+/// changing, so the token can distribute every update before the horizon.
+struct ScheduleGen {
+    ops: Vec<Operation>,
+    next: usize,
+}
+
+impl OpGenerator for ScheduleGen {
+    fn next_op(&mut self, _rng: &mut Rng, site: usize, _n: usize) -> Operation {
+        if self.next < self.ops.len() {
+            let o = self.ops[self.next].clone();
+            self.next += 1;
+            o
+        } else {
+            op(2, site as i64 % N_CARTS)
+        }
+    }
+}
+
+// ------------------------------------------------------------ helpers --
+
+/// The paper-relevant topology shapes: LAN cluster, WAN ring, and WAN
+/// with clients at all five sites (exercises `client_matrix` and the
+/// nearest-server selection path).
+fn topologies() -> Vec<(&'static str, Topology, Option<LatencyMatrix>)> {
+    vec![
+        ("lan4", Topology::lan(4), None),
+        ("wan3", Topology::wan(3), None),
+        ("wan3+clients5", Topology::wan(3), Some(Topology::wan_full_client(5))),
+    ]
+}
+
+struct RunSpec {
+    topo: Topology,
+    client_matrix: Option<LatencyMatrix>,
+    seed: u64,
+    threads: usize,
+    real: bool,
+    misroute: f64,
+}
+
+fn run_store(spec: RunSpec, gen: Box<dyn OpGenerator>) -> (ConveyorReport, Vec<Option<Db>>) {
+    let app = store_app();
+    let cfg = ConveyorConfig {
+        execute_real: spec.real,
+        record_global_log: spec.real,
+        misroute_prob: spec.misroute,
+        service: ServiceModel::default(), // jittered: exercises RNG streams
+        client_matrix: spec.client_matrix,
+        parallel: spec.threads,
+        warmup: VTime::from_secs(1),
+        horizon: VTime::from_secs(6),
+        seed: spec.seed,
+        ..Default::default()
+    };
+    ConveyorSim::new(
+        &app,
+        spec.topo,
+        ClientsConfig { n: 24, think_ms: 10.0, seed: spec.seed, ..Default::default() },
+        cfg,
+        gen,
+        seed_store,
+    )
+    .run_keep_dbs()
+}
+
+/// Bitwise signature of a metrics object: counts plus exact latency
+/// statistics (mean, p50, p99 as raw f64 bits — "identical" means
+/// identical, not approximately equal).
+fn metrics_sig(m: &SimMetrics) -> Vec<u64> {
+    let mut lat = m.latency.clone();
+    let mut loc = m.local_latency.clone();
+    let mut glo = m.global_latency.clone();
+    vec![
+        m.completed,
+        m.aborted,
+        lat.count() as u64,
+        loc.count() as u64,
+        glo.count() as u64,
+        lat.mean().to_bits(),
+        lat.p50().to_bits(),
+        lat.p99().to_bits(),
+        loc.mean().to_bits(),
+        glo.mean().to_bits(),
+    ]
+}
+
+fn assert_identical(a: &ConveyorReport, b: &ConveyorReport, ctx: &str) {
+    assert_eq!(metrics_sig(&a.metrics), metrics_sig(&b.metrics), "metrics differ: {ctx}");
+    assert_eq!(a.events, b.events, "event counts differ: {ctx}");
+    assert_eq!(a.rotations, b.rotations, "rotations differ: {ctx}");
+    assert_eq!(a.aborts, b.aborts, "aborts differ: {ctx}");
+    assert_eq!(a.db_hashes, b.db_hashes, "DB digests differ: {ctx}");
+    assert_eq!(a.global_log, b.global_log, "token logs differ: {ctx}");
+    let ua: Vec<u64> = a.utilization.iter().map(|u| u.to_bits()).collect();
+    let ub: Vec<u64> = b.utilization.iter().map(|u| u.to_bits()).collect();
+    assert_eq!(ua, ub, "utilization differs: {ctx}");
+}
+
+/// Thread counts compared against the 1-thread baseline. `ELIA_PAR_MAX`
+/// caps the "all cores" rung (the `make test-par` ladder pins it to 1
+/// and 2 before an uncapped run).
+fn alt_thread_counts() -> Vec<usize> {
+    match std::env::var("ELIA_PAR_MAX").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(cap) => vec![cap.max(1)],
+        None => vec![2, 0], // 0 = all available cores
+    }
+}
+
+// -------------------------------------------------------------- tests --
+
+/// Acceptance criterion: ≥3 seeds × ≥2 topologies, modeled execution —
+/// N-thread runs match the 1-thread run exactly.
+#[test]
+fn thread_count_invariant_modeled_execution() {
+    for (name, topo, cm) in topologies() {
+        for seed in [0x5EEDu64, 1, 42] {
+            let mk = |threads| RunSpec {
+                topo: topo.clone(),
+                client_matrix: cm.clone(),
+                seed,
+                threads,
+                real: false,
+                misroute: 0.0,
+            };
+            let (base, _) = run_store(mk(1), Box::new(MixGen { global_ratio: 0.3 }));
+            assert!(base.metrics.completed > 100, "{name}/{seed}: too few completions");
+            for threads in alt_thread_counts() {
+                let (r, _) = run_store(mk(threads), Box::new(MixGen { global_ratio: 0.3 }));
+                assert_identical(&base, &r, &format!("{name} seed={seed} threads={threads}"));
+            }
+        }
+    }
+}
+
+/// Acceptance criterion, real-execution half: per-server DB state
+/// digests (and the token's update log) are identical too.
+#[test]
+fn thread_count_invariant_real_execution_digests() {
+    for (name, topo, cm) in topologies() {
+        for seed in [7u64, 0xB5EED, 3030] {
+            let mk = |threads| RunSpec {
+                topo: topo.clone(),
+                client_matrix: cm.clone(),
+                seed,
+                threads,
+                real: true,
+                misroute: 0.0,
+            };
+            let (base, _) = run_store(mk(1), Box::new(MixGen { global_ratio: 0.4 }));
+            assert!(base.metrics.completed > 100, "{name}/{seed}: too few completions");
+            assert!(base.db_hashes.iter().all(|h| h.is_some()));
+            for threads in alt_thread_counts() {
+                let (r, _) = run_store(mk(threads), Box::new(MixGen { global_ratio: 0.4 }));
+                assert_identical(&base, &r, &format!("{name} seed={seed} threads={threads}"));
+            }
+        }
+    }
+}
+
+/// Satellite: end-to-end MAP redirect coverage. Misrouted operations
+/// still commit (no aborts, completions stay healthy), the metrics count
+/// the two extra hops as added latency, and the redirect path is itself
+/// thread-count invariant (it draws from the per-client RNG streams).
+#[test]
+fn misroute_redirect_end_to_end() {
+    let spec = |threads, misroute| RunSpec {
+        topo: Topology::lan(3),
+        client_matrix: None,
+        seed: 9,
+        threads,
+        real: true,
+        misroute,
+    };
+    let (clean, _) = run_store(spec(1, 0.0), Box::new(MixGen { global_ratio: 0.2 }));
+    let (dirty, _) = run_store(spec(1, 0.25), Box::new(MixGen { global_ratio: 0.2 }));
+    // Redirected operations still execute and commit.
+    assert_eq!(dirty.aborts, 0, "redirected ops must still commit");
+    assert!(
+        dirty.metrics.completed as f64 > clean.metrics.completed as f64 * 0.7,
+        "redirects must not strand operations: clean={} dirty={}",
+        clean.metrics.completed,
+        dirty.metrics.completed
+    );
+    // The extra hops show up in measured latency (~25% of ops pay two
+    // extra one-way legs of >= 10 ms each).
+    assert!(
+        dirty.mean_latency_ms() > clean.mean_latency_ms() + 2.0,
+        "clean={} dirty={}",
+        clean.mean_latency_ms(),
+        dirty.mean_latency_ms()
+    );
+    // Global updates still replicate: the token log is non-empty and the
+    // digests exist on every server.
+    assert!(!dirty.global_log.is_empty());
+    assert!(dirty.db_hashes.iter().all(|h| h.is_some()));
+    // And the redirect path is deterministic under parallelism.
+    for threads in alt_thread_counts() {
+        let (r, _) = run_store(spec(threads, 0.25), Box::new(MixGen { global_ratio: 0.2 }));
+        assert_identical(&dirty, &r, &format!("misroute threads={threads}"));
+    }
+}
+
+/// Serial replay of a token log over a freshly seeded store.
+fn replay_serially(app: &AnalyzedApp, log: &[elia::db::StateUpdate]) -> Db {
+    let db = Db::new(app.spec.schema.clone());
+    seed_store(&db);
+    for u in log {
+        db.apply_update(u).unwrap();
+    }
+    db
+}
+
+fn stock_levels(db: &Db) -> Vec<i64> {
+    (0..N_ITEMS)
+        .map(|i| {
+            db.peek("STOCK", &Key::single(Value::Int(i)))
+                .expect("stock row")[1]
+                .as_int()
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Tentpole property (qcheck): for random operation schedules, once the
+/// schedule drains and the token quiesces, every server's replicated
+/// STOCK table equals a *serial* replay of the token's total order of
+/// global updates — the committed state of every server converges to a
+/// serial order of the token history. Checked at 1 and 2 threads, which
+/// must also agree with each other exactly.
+#[test]
+fn committed_state_converges_to_serial_token_order() {
+    let cases = Config::default().cases(10).name("token-serial-order");
+    check_vec(
+        cases,
+        |rng: &mut Rng| {
+            let kind = rng.range(0, 4) as u8; // 2x local, 1x global, 1x view
+            let cid = rng.range(0, N_CARTS as usize) as i64;
+            (kind, cid)
+        },
+        40,
+        |schedule: &[(u8, i64)]| {
+            // Built inside the property: `AnalyzedApp` holds `Arc<dyn Fn>`
+            // bodies, which are not `RefUnwindSafe` captures.
+            let app = store_app();
+            let ops: Vec<Operation> = schedule
+                .iter()
+                .map(|&(kind, cid)| match kind {
+                    0 | 1 => op(0, cid),
+                    2 => op(1, cid),
+                    _ => op(2, cid),
+                })
+                .collect();
+            let globals = ops.iter().filter(|o| o.txn == 1).count() as i64;
+            let mut prev: Option<(ConveyorReport, Vec<i64>)> = None;
+            for threads in [1usize, 2] {
+                let spec = RunSpec {
+                    topo: Topology::lan(3),
+                    client_matrix: None,
+                    seed: 0xC0FFEE,
+                    threads,
+                    real: true,
+                    misroute: 0.0,
+                };
+                let (r, dbs) =
+                    run_store(spec, Box::new(ScheduleGen { ops: ops.clone(), next: 0 }));
+                assert_eq!(r.aborts, 0, "schedule must commit cleanly");
+                assert_eq!(r.global_log.len() as i64, globals, "every global is ordered once");
+                let replay = replay_serially(&app, &r.global_log);
+                let serial = stock_levels(&replay);
+                // Serial replay sells exactly the ordered units...
+                let sold: i64 = serial.iter().map(|l| INIT_LEVEL - l).sum();
+                assert_eq!(sold, globals, "serial replay must sell exactly the ordered units");
+                // ...and every server's replicated table equals it.
+                for (s, db) in dbs.iter().enumerate() {
+                    let db = db.as_ref().expect("real-execution db");
+                    assert_eq!(
+                        stock_levels(db),
+                        serial,
+                        "server {s} (threads={threads}) diverged from the serial token order"
+                    );
+                }
+                if let Some((base, base_serial)) = &prev {
+                    assert_eq!(&serial, base_serial);
+                    assert_identical(base, &r, "property threads=1 vs 2");
+                }
+                prev = Some((r, serial));
+            }
+            true
+        },
+    );
+}
