@@ -13,7 +13,8 @@ test:
 	cd rust && cargo test -q
 
 # Tier-1 suite plus the 1-thread rung of the parallel-determinism
-# suite. The plain `test` run already exercises the suite's default
+# suite (Conveyor, Cluster and Baseline sims — all on the window
+# engine). The plain `test` run already exercises the suite's default
 # ladder (1-thread baseline vs 2 threads and vs all cores); the extra
 # ELIA_PAR_MAX=1 pass pins pure 1-thread run-to-run reproducibility,
 # completing the 1/2/max matrix without redundant reruns (see
@@ -28,7 +29,8 @@ clippy:
 bench:
 	cd rust && cargo bench --bench hotpath
 
-# Single- vs multi-thread simulator benchmark; writes BENCH_sim.json.
+# Single- vs multi-thread simulator benchmark (Conveyor modeled/real,
+# Cluster 2PC, Baseline read-only); writes BENCH_sim.json.
 bench-sim:
 	cd rust && cargo bench --bench sim_parallel
 

@@ -14,6 +14,8 @@ use elia::util::cli::Args;
 fn main() {
     let args = Args::from_env();
     // Simulator worker threads; 0 (the default) = all available cores.
+    // Applies to *both* sides of the comparison: the Eliá Conveyor sim
+    // and the MySQL-Cluster baseline now share the window engine.
     let par = args.get_parse("parallel", 0usize);
     let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
     let scale =

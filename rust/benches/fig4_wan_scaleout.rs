@@ -15,6 +15,8 @@ use elia::util::cli::Args;
 fn main() {
     let args = Args::from_env();
     // Simulator worker threads; 0 (the default) = all available cores.
+    // Applies to Eliá and the centralized/read-only baselines alike —
+    // all simulators run on the shared window engine.
     let par = args.get_parse("parallel", 0usize);
     let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
     let scale =

@@ -1,12 +1,16 @@
 //! Single- vs multi-thread simulator benchmark (ROADMAP bench-tracking
 //! item for the parallel window engine).
 //!
-//! Runs the same quick Fig-3-style Conveyor point (and a real-execution
-//! variant, where the per-server DB work dominates and parallelism pays
-//! most) at 1 thread and at all available cores, verifies the results
-//! are identical (they must be — see `tests/parallel_determinism.rs`),
-//! and writes wall-clock numbers to `BENCH_sim.json`.
+//! Runs quick Conveyor points (modeled + real-execution, where the
+//! per-server DB work dominates and parallelism pays most) plus the
+//! Cluster and Baseline simulators — all three now share the window
+//! engine — at 1 thread and at all available cores, verifies the
+//! results are identical (they must be — see
+//! `tests/parallel_determinism.rs`), and writes wall-clock numbers to
+//! `BENCH_sim.json`.
 
+use elia::baselines::{BaselineConfig, BaselineMode, BaselineSim};
+use elia::cluster::{ClusterConfig, ClusterSim};
 use elia::conveyor::{ConveyorConfig, ConveyorSim};
 use elia::harness::experiments::{fig3, ExpScale, Workload};
 use elia::simnet::clients::ClientsConfig;
@@ -78,6 +82,56 @@ fn real_point(threads: usize) -> (f64, u64) {
     (t0.elapsed().as_secs_f64(), r.metrics.completed)
 }
 
+/// The Fig-3 cluster baseline on the window engine: LAN, 6 shards, a
+/// write-heavy mix — lock-shard work and 2PC message fan-out spread
+/// across server groups.
+fn cluster_point(threads: usize) -> (f64, u64) {
+    let app = micro::analyzed();
+    let cfg = ClusterConfig {
+        service: ServiceModel::fixed(5.0),
+        warmup: VTime::from_secs(2),
+        horizon: VTime::from_secs(8),
+        parallel: threads,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = ClusterSim::new(
+        &app,
+        Topology::lan(6),
+        ClientsConfig { n: 512, think_ms: 100.0, seed: 0xF16, ..Default::default() },
+        cfg,
+        Box::new(micro::MicroGenerator::new(&app, 0.7)),
+    )
+    .run();
+    // Checksum folds both counters injectively (lock_waits stays far
+    // below the multiplier), so compensating divergence cannot cancel.
+    (t0.elapsed().as_secs_f64(), r.metrics.completed * 1_000_003 + r.lock_waits)
+}
+
+/// The Fig-4 read-only baseline on the window engine: five WAN replica
+/// groups plus async write replication.
+fn baseline_point(threads: usize) -> (f64, u64) {
+    let app = micro::analyzed();
+    let cfg = BaselineConfig {
+        mode: BaselineMode::ReadOnly { n_servers: 5 },
+        service: ServiceModel::fixed(5.0),
+        warmup: VTime::from_secs(2),
+        horizon: VTime::from_secs(8),
+        parallel: threads,
+        ..BaselineConfig::centralized()
+    };
+    let t0 = Instant::now();
+    let r = BaselineSim::new(
+        &app,
+        Topology::wan_full_client(5),
+        ClientsConfig { n: 512, think_ms: 100.0, seed: 0xF16, ..Default::default() },
+        cfg,
+        Box::new(micro::MicroGenerator::new(&app, 0.7)),
+    )
+    .run();
+    (t0.elapsed().as_secs_f64(), r.metrics.completed)
+}
+
 fn main() {
     let cores = available_threads();
     let mut results: Vec<(String, f64)> = Vec::new();
@@ -86,12 +140,14 @@ fn main() {
     for (name, f) in [
         ("sim: micro wan3 modeled", micro_point as fn(usize) -> (f64, u64)),
         ("sim: micro lan4 real-exec", real_point),
+        ("sim: cluster lan6 2pc", cluster_point),
+        ("sim: baseline wan5 read-only", baseline_point),
     ] {
         let (w1, c1) = f(1);
         let (wn, cn) = f(0);
         assert_eq!(c1, cn, "{name}: thread counts must not change results");
         println!(
-            "{name:<34} 1T {w1:>7.2}s   {cores}T {wn:>7.2}s   speedup {:.2}x   (completed {c1})",
+            "{name:<34} 1T {w1:>7.2}s   {cores}T {wn:>7.2}s   speedup {:.2}x   (check {c1})",
             w1 / wn
         );
         results.push((format!("{name} (1T wall ns)"), w1 * 1e9));

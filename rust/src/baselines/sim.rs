@@ -9,11 +9,19 @@
 //!   systems."
 //!
 //! Both keep the application unmodified and serializable, like Eliá.
+//!
+//! The simulation runs on the conservative window engine
+//! ([`crate::simnet::parallel::run_windows`], shared with `ConveyorSim`
+//! and `ClusterSim`): one group per deployed server (station + RNG
+//! stream) plus a client tier, interacting only through latency-paying
+//! messages (request, async replication, reply) — results are
+//! bit-identical at any thread count ([`BaselineConfig::parallel`]).
 
 use crate::simnet::clients::{ClientPool, ClientsConfig};
 use crate::simnet::events::EventQueue;
 use crate::simnet::latency::LatencyMatrix;
 use crate::simnet::metrics::SimMetrics;
+use crate::simnet::parallel::{self, CrossSend, WindowGroup, CLIENT_TIER};
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
 use crate::workload::analyzed::AnalyzedApp;
@@ -33,6 +41,10 @@ pub struct BaselineConfig {
     pub service: ServiceModel,
     /// CPU cost of applying one replicated write at a replica.
     pub apply_ms: f64,
+    /// Worker threads for the window-parallel engine: `1` sequential
+    /// (default), `0` all cores, `N` at most N threads. Results are
+    /// bit-identical for every value.
+    pub parallel: usize,
     pub warmup: VTime,
     pub horizon: VTime,
     pub seed: u64,
@@ -45,6 +57,7 @@ impl BaselineConfig {
             workers: 8,
             service: ServiceModel::default(),
             apply_ms: 0.5,
+            parallel: 1,
             warmup: VTime::from_secs(5),
             horizon: VTime::from_secs(25),
             seed: 0xBA5E,
@@ -56,28 +69,201 @@ impl BaselineConfig {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone)]
 enum Job {
-    Op(u64),
+    Op(OpEnvelope),
     /// Replicated-write application at a replica.
     Apply,
 }
 
 #[derive(Debug, Clone)]
 enum Ev {
+    /// Client (after thinking) issues its next operation. [client tier]
     Issue { client: usize },
-    Arrive { op: u64 },
-    ApplyArrive { server: usize },
-    JobDone { server: usize, job: Job },
-    Reply { op: u64 },
+    /// Reply reaches the client. [client tier]
+    Reply { client: usize, issued: VTime, write: bool },
+    /// Request arrives at its server. [server]
+    Arrive { op: OpEnvelope },
+    /// An async replicated write lands at a replica. [server]
+    ApplyArrive,
+    /// A station job completed. [server]
+    JobDone { job: Job },
 }
 
-struct OpState {
+/// An operation in flight, carried inside events and station jobs (the
+/// engine has no global operation table).
+#[derive(Debug, Clone)]
+struct OpEnvelope {
     txn: usize,
     client: usize,
+    client_site: usize,
     issued: VTime,
-    server: usize,
     write: bool,
+}
+
+/// Immutable context shared by every group during a window.
+struct Shared<'s> {
+    app: &'s AnalyzedApp,
+    /// Latency matrix over *client sites*; servers occupy the first sites.
+    sites: &'s LatencyMatrix,
+    cfg: &'s BaselineConfig,
+    n_servers: usize,
+}
+
+impl Shared<'_> {
+    /// The server with the lowest latency from a client site.
+    fn nearest_server(&self, site: usize) -> usize {
+        (0..self.n_servers).min_by_key(|&s| self.sites.one_way(site, s)).unwrap_or(0)
+    }
+}
+
+/// One server group: a queueing station plus its RNG stream.
+struct ServerGroup {
+    id: usize,
+    station: Station<Job>,
+    /// Per-server RNG stream (service sampling) — see `Rng::stream`.
+    rng: Rng,
+    q: EventQueue<Ev>,
+    out: Vec<CrossSend<Ev>>,
+}
+
+impl<'s> WindowGroup<Shared<'s>> for ServerGroup {
+    type Ev = Ev;
+
+    fn queue(&self) -> &EventQueue<Ev> {
+        &self.q
+    }
+
+    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
+        &mut self.q
+    }
+
+    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
+        &mut self.out
+    }
+
+    fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
+        match ev {
+            Ev::Arrive { op } => {
+                let service =
+                    ctx.cfg.service.sample(&ctx.app.spec.txns[op.txn], &mut self.rng);
+                self.submit(Job::Op(op), service);
+            }
+            Ev::ApplyArrive => {
+                let apply = VTime::from_millis_f64(ctx.cfg.apply_ms);
+                self.submit(Job::Apply, apply);
+            }
+            Ev::JobDone { job } => self.on_job_done(job, ctx),
+            Ev::Issue { .. } | Ev::Reply { .. } => {
+                unreachable!("client-tier event delivered to a server")
+            }
+        }
+    }
+}
+
+impl ServerGroup {
+    fn submit(&mut self, job: Job, service: VTime) {
+        let now = self.q.now();
+        if let Some(j) = self.station.submit(now, job, service, false) {
+            self.q.schedule(j.service, Ev::JobDone { job: j.payload });
+        }
+    }
+
+    fn on_job_done(&mut self, job: Job, ctx: &Shared<'_>) {
+        let now = self.q.now();
+        if let Some(next) = self.station.complete(now) {
+            self.q.schedule(next.service, Ev::JobDone { job: next.payload });
+        }
+        if let Job::Op(op) = job {
+            // Read-only mode: writes replicate asynchronously to replicas.
+            if op.write && matches!(ctx.cfg.mode, BaselineMode::ReadOnly { .. }) {
+                for s in 0..ctx.n_servers {
+                    if s == self.id {
+                        continue;
+                    }
+                    let d = ctx.sites.one_way(self.id, s);
+                    self.out.push(CrossSend { target: s, at: now + d, ev: Ev::ApplyArrive });
+                }
+            }
+            let d = ctx.sites.one_way(self.id, op.client_site);
+            self.out.push(CrossSend {
+                target: CLIENT_TIER,
+                at: now + d,
+                ev: Ev::Reply { client: op.client, issued: op.issued, write: op.write },
+            });
+        }
+    }
+}
+
+/// The client tier: client pool, workload generator and metrics.
+struct ClientTier<'a> {
+    clients: ClientPool,
+    gen: Box<dyn OpGenerator + 'a>,
+    metrics: SimMetrics,
+    q: EventQueue<Ev>,
+    out: Vec<CrossSend<Ev>>,
+}
+
+impl<'a, 's> WindowGroup<Shared<'s>> for ClientTier<'a> {
+    type Ev = Ev;
+
+    fn queue(&self) -> &EventQueue<Ev> {
+        &self.q
+    }
+
+    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
+        &mut self.q
+    }
+
+    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
+        &mut self.out
+    }
+
+    fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
+        match ev {
+            Ev::Issue { client } => self.on_issue(client, ctx),
+            Ev::Reply { client, issued, write } => {
+                self.metrics.complete(issued, self.q.now(), write);
+                let think = self.clients.think(client);
+                self.q.schedule(think, Ev::Issue { client });
+            }
+            _ => unreachable!("server event delivered to the client tier"),
+        }
+    }
+}
+
+impl ClientTier<'_> {
+    fn on_issue(&mut self, client: usize, ctx: &Shared<'_>) {
+        let site = self.clients.site(client);
+        let op = {
+            let mut r = self.clients.rng(client).fork();
+            self.gen.next_op(&mut r, site, ctx.n_servers)
+        };
+        let write = !ctx.app.spec.txns[op.txn].is_read_only();
+        let server = match ctx.cfg.mode {
+            BaselineMode::Centralized => 0,
+            BaselineMode::ReadOnly { .. } => {
+                if write {
+                    0 // primary
+                } else {
+                    ctx.nearest_server(site)
+                }
+            }
+        };
+        let env = OpEnvelope {
+            txn: op.txn,
+            client,
+            client_site: site,
+            issued: self.q.now(),
+            write,
+        };
+        let delay = ctx.sites.one_way(site, server);
+        self.out.push(CrossSend {
+            target: server,
+            at: self.q.now() + delay,
+            ev: Ev::Arrive { op: env },
+        });
+    }
 }
 
 pub struct BaselineSim<'a> {
@@ -85,15 +271,8 @@ pub struct BaselineSim<'a> {
     /// Latency matrix over *client sites*; servers occupy the first sites.
     sites: LatencyMatrix,
     cfg: BaselineConfig,
-    gen: Box<dyn OpGenerator + 'a>,
-    clients: ClientPool,
-    stations: Vec<Station<Job>>,
-    ops: Vec<OpState>,
-    /// Per-server RNG streams (service sampling), derived statelessly
-    /// from the seed — see `Rng::stream`.
-    rngs: Vec<Rng>,
-    pub metrics: SimMetrics,
-    q: EventQueue<Ev>,
+    client: ClientTier<'a>,
+    servers: Vec<ServerGroup>,
 }
 
 impl<'a> BaselineSim<'a> {
@@ -113,135 +292,63 @@ impl<'a> BaselineSim<'a> {
             BaselineMode::Centralized => 1,
             BaselineMode::ReadOnly { n_servers } => n_servers.min(n_sites).max(1),
         };
-        let stations = (0..n_servers).map(|_| Station::new(cfg.workers)).collect();
         let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
-        let rngs = (0..n_servers).map(|i| Rng::stream(cfg.seed, i as u64)).collect();
+        let servers = (0..n_servers)
+            .map(|id| ServerGroup {
+                id,
+                station: Station::new(cfg.workers),
+                rng: Rng::stream(cfg.seed, id as u64),
+                q: EventQueue::new(),
+                out: Vec::new(),
+            })
+            .collect();
         BaselineSim {
             app,
             sites,
             cfg,
-            gen,
-            clients,
-            stations,
-            ops: Vec::new(),
-            rngs,
-            metrics,
-            q: EventQueue::new(),
+            client: ClientTier {
+                clients,
+                gen,
+                metrics,
+                q: EventQueue::new(),
+                out: Vec::new(),
+            },
+            servers,
         }
     }
 
-    fn n_servers(&self) -> usize {
-        self.stations.len()
-    }
-
-    /// The server with the lowest latency from a client site.
-    fn nearest_server(&self, site: usize) -> usize {
-        (0..self.n_servers()).min_by_key(|&s| self.sites.one_way(site, s)).unwrap_or(0)
+    /// The conservative lookahead: requests, replies and async
+    /// replication all pay a one-way latency from the site matrix, so
+    /// its minimum bounds every cross-group message (over-conservative
+    /// if the tightest pair involves a server-less site — harmless, the
+    /// window just gets narrower).
+    fn lookahead(&self) -> VTime {
+        self.sites.min_one_way()
     }
 
     pub fn run(mut self) -> BaselineReport {
-        for c in 0..self.clients.n() {
+        for c in 0..self.client.clients.n() {
             let jitter = VTime::from_micros((c as u64 % 97) * 13);
-            self.q.schedule(jitter, Ev::Issue { client: c });
+            self.client.q.schedule_at(jitter, Ev::Issue { client: c });
         }
-        while let Some(t) = self.q.peek_time() {
-            if t > self.cfg.horizon {
-                break;
-            }
-            let (_, ev) = self.q.pop().unwrap();
-            self.handle(ev);
+        let lookahead = self.lookahead();
+        let threads = parallel::resolve_threads(self.cfg.parallel);
+        let horizon = self.cfg.horizon;
+
+        let BaselineSim { app, sites, cfg, mut client, mut servers } = self;
+        {
+            let ctx =
+                Shared { app, sites: &sites, cfg: &cfg, n_servers: servers.len() };
+            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client);
         }
-        let now = self.cfg.horizon;
+
+        let now = cfg.horizon;
         BaselineReport {
-            metrics: self.metrics.clone(),
-            utilization: self.stations.iter().map(|s| s.utilization(now)).collect(),
-            events: self.q.processed(),
+            metrics: client.metrics.clone(),
+            utilization: servers.iter().map(|s| s.station.utilization(now)).collect(),
+            events: client.q.processed()
+                + servers.iter().map(|s| s.q.processed()).sum::<u64>(),
         }
-    }
-
-    fn handle(&mut self, ev: Ev) {
-        match ev {
-            Ev::Issue { client } => self.on_issue(client),
-            Ev::Arrive { op } => {
-                let (server, txn) = {
-                    let o = &self.ops[op as usize];
-                    (o.server, o.txn)
-                };
-                let service =
-                    self.cfg.service.sample(&self.app.spec.txns[txn], &mut self.rngs[server]);
-                self.submit(server, Job::Op(op), service);
-            }
-            Ev::ApplyArrive { server } => {
-                let apply = VTime::from_millis_f64(self.cfg.apply_ms);
-                self.submit(server, Job::Apply, apply);
-            }
-            Ev::JobDone { server, job } => self.on_job_done(server, job),
-            Ev::Reply { op } => self.on_reply(op),
-        }
-    }
-
-    fn submit(&mut self, server: usize, job: Job, service: VTime) {
-        let now = self.q.now();
-        if let Some(j) = self.stations[server].submit(now, job, service, false) {
-            self.q.schedule(j.service, Ev::JobDone { server, job: j.payload });
-        }
-    }
-
-    fn on_issue(&mut self, client: usize) {
-        let site = self.clients.site(client);
-        let n = self.n_servers();
-        let op = {
-            let mut r = self.clients.rng(client).fork();
-            self.gen.next_op(&mut r, site, n)
-        };
-        let write = !self.app.spec.txns[op.txn].is_read_only();
-        let server = match self.cfg.mode {
-            BaselineMode::Centralized => 0,
-            BaselineMode::ReadOnly { .. } => {
-                if write {
-                    0 // primary
-                } else {
-                    self.nearest_server(site)
-                }
-            }
-        };
-        let op_id = self.ops.len() as u64;
-        self.ops.push(OpState { txn: op.txn, client, issued: self.q.now(), server, write });
-        let delay = self.sites.one_way(site, server);
-        self.q.schedule(delay, Ev::Arrive { op: op_id });
-    }
-
-    fn on_job_done(&mut self, server: usize, job: Job) {
-        let now = self.q.now();
-        if let Some(next) = self.stations[server].complete(now) {
-            self.q.schedule(next.service, Ev::JobDone { server, job: next.payload });
-        }
-        if let Job::Op(op_id) = job {
-            let (client, write) = {
-                let o = &self.ops[op_id as usize];
-                (o.client, o.write)
-            };
-            // Read-only mode: writes replicate asynchronously to replicas.
-            if write && matches!(self.cfg.mode, BaselineMode::ReadOnly { .. }) {
-                for s in 1..self.n_servers() {
-                    let d = self.sites.one_way(server, s);
-                    self.q.schedule(d, Ev::ApplyArrive { server: s });
-                }
-            }
-            let site = self.clients.site(client);
-            let d = self.sites.one_way(server, site);
-            self.q.schedule(d, Ev::Reply { op: op_id });
-        }
-    }
-
-    fn on_reply(&mut self, op_id: u64) {
-        let (client, issued, write) = {
-            let o = &self.ops[op_id as usize];
-            (o.client, o.issued, o.write)
-        };
-        self.metrics.complete(issued, self.q.now(), write);
-        let think = self.clients.think(client);
-        self.q.schedule(think, Ev::Issue { client });
     }
 }
 
@@ -301,13 +408,19 @@ mod tests {
         }
     }
 
-    fn run(mode: BaselineMode, clients: usize, write_ratio: f64) -> BaselineReport {
+    fn run_par(
+        mode: BaselineMode,
+        clients: usize,
+        write_ratio: f64,
+        threads: usize,
+    ) -> BaselineReport {
         let app = app();
         let cfg = BaselineConfig {
             mode,
             warmup: VTime::from_secs(2),
             horizon: VTime::from_secs(10),
             service: ServiceModel::fixed(5.0),
+            parallel: threads,
             ..BaselineConfig::centralized()
         };
         BaselineSim::new(
@@ -318,6 +431,10 @@ mod tests {
             Box::new(Gen { write_ratio }),
         )
         .run()
+    }
+
+    fn run(mode: BaselineMode, clients: usize, write_ratio: f64) -> BaselineReport {
+        run_par(mode, clients, write_ratio, 1)
     }
 
     #[test]
@@ -372,5 +489,37 @@ mod tests {
         let b = run(BaselineMode::ReadOnly { n_servers: 3 }, 20, 0.2);
         assert_eq!(a.metrics.completed, b.metrics.completed);
         assert_eq!(a.events, b.events);
+    }
+
+    /// The window-engine property, checked cheaply here and exhaustively
+    /// in `tests/parallel_determinism.rs`: any thread count produces
+    /// bit-identical results.
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let base = run_par(BaselineMode::ReadOnly { n_servers: 5 }, 40, 0.3, 1);
+        for threads in [2usize, 0] {
+            let r = run_par(BaselineMode::ReadOnly { n_servers: 5 }, 40, 0.3, threads);
+            assert_eq!(r.metrics.completed, base.metrics.completed, "threads={threads}");
+            assert_eq!(r.events, base.events, "threads={threads}");
+            assert!(
+                (r.mean_latency_ms() - base.mean_latency_ms()).abs() < 1e-12,
+                "threads={threads}"
+            );
+        }
+    }
+
+    /// Satellite guard: the documented defaults the benches assume. A
+    /// silent retuning would skew every recorded Fig-4/Table-3 curve.
+    #[test]
+    fn documented_defaults_match_bench_assumptions() {
+        let c = BaselineConfig::centralized();
+        assert_eq!(c.mode, BaselineMode::Centralized);
+        assert_eq!(c.workers, 8);
+        assert!((c.apply_ms - 0.5).abs() < 1e-12);
+        assert_eq!(c.parallel, 1, "sequential by default; benches opt in");
+        assert_eq!(c.warmup, VTime::from_secs(5));
+        assert_eq!(c.horizon, VTime::from_secs(25));
+        assert_eq!(c.seed, 0xBA5E);
+        assert_eq!(BaselineConfig::read_only(3).mode, BaselineMode::ReadOnly { n_servers: 3 });
     }
 }

@@ -124,6 +124,23 @@ pub struct ShardDemand {
     pub scatter: bool,
 }
 
+impl ShardDemand {
+    /// The write-key hashes owned by `shard`. Every reservation belongs
+    /// to exactly one data shard, which is what lets the cluster
+    /// simulator shard its virtual lock table by server group: the
+    /// coordinator reserves `keys_on(coordinator)` locally and ships
+    /// `keys_on(participant)` inside the prepare/commit messages.
+    pub fn keys_on(&self, shard: usize) -> Vec<u64> {
+        self.write_keys.iter().filter(|(s, _)| *s == shard).map(|&(_, k)| k).collect()
+    }
+
+    /// The shards other than `home` this operation touches, in demand
+    /// order (the 2PC participant set when `home` coordinates).
+    pub fn remotes(&self, home: usize) -> Vec<usize> {
+        self.shards.iter().copied().filter(|&s| s != home).collect()
+    }
+}
+
 impl Footprint {
     /// Instantiate the footprint for a concrete operation.
     pub fn demand(
@@ -307,6 +324,50 @@ mod tests {
         assert!(f8 > f2, "multi-shard fraction must grow: f2={f2} f8={f8}");
         assert!((f2 - 0.5).abs() < 0.1);
         assert!((f8 - 0.875).abs() < 0.05);
+    }
+
+    #[test]
+    fn keys_partition_by_owning_shard() {
+        // Two-key write: the per-shard views partition the write-key
+        // set, and each reservation belongs to exactly one shard.
+        let tpl = TxnTemplate::new(
+            "transfer",
+            &["a", "b"],
+            &[
+                ("u1", "UPDATE CARTS SET QTY = 0 WHERE CID = ?a"),
+                ("u2", "UPDATE CARTS SET QTY = 0 WHERE CID = ?b"),
+            ],
+            1.0,
+        );
+        let fp = footprint(&tpl, &schema());
+        let mut rng = Rng::new(4);
+        let args: Bindings = [
+            ("a".to_string(), Value::Int(1)),
+            ("b".to_string(), Value::Int(2)),
+        ]
+        .into_iter()
+        .collect();
+        let d = fp.demand(&args, 3, &mut rng);
+        assert_eq!(d.write_keys.len(), 2);
+        let mut total = 0;
+        for s in 0..3 {
+            let keys = d.keys_on(s);
+            total += keys.len();
+            for k in &keys {
+                assert!(d.write_keys.contains(&(s, *k)));
+            }
+        }
+        assert_eq!(total, d.write_keys.len());
+        assert_eq!(d.keys_on(99), Vec::<u64>::new());
+        // Participant set = touched shards minus the coordinator.
+        for home in 0..3 {
+            let r = d.remotes(home);
+            assert!(!r.contains(&home));
+            assert_eq!(
+                r.len(),
+                d.shards.iter().filter(|&&s| s != home).count()
+            );
+        }
     }
 
     #[test]

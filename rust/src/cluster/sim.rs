@@ -10,15 +10,39 @@
 //!   "necessary coordination with remote machines prevents the progress
 //!   of concurrent conflicting transactions";
 //! * multi-shard reads scatter-gather (one round), multi-shard writes run
-//!   2PC (prepare round + commit round);
-//! * every remote interaction costs CPU on both ends, so coordination
-//!   eats aggregate capacity as the distributed fraction grows with N —
-//!   the mechanism behind MySQL Cluster's peak at ~4 servers.
+//!   2PC (prepare round + commit round + acks);
+//! * every remote interaction costs CPU on both ends — prepares and
+//!   votes at the participants, one `msg_cpu_ms` per participant ack at
+//!   the coordinator — so coordination eats aggregate capacity as the
+//!   distributed fraction grows with N: the mechanism behind MySQL
+//!   Cluster's peak at ~4 servers.
+//!
+//! # Sharded virtual lock table + window engine
+//!
+//! The virtual row-lock table is *sharded by data shard*: every
+//! reservation `(table, key-hash)` from [`ShardDemand`] belongs to
+//! exactly one partition, so each server group owns the reservations for
+//! its own shard (see [`LockShard`]). Acquisition is an explicit event
+//! at the owning shard — the coordinator reserves its local keys when
+//! the operation arrives, participants reserve theirs when the 2PC
+//! prepare reaches them — and every reservation is *released* (and its
+//! entry evicted) when the transaction completes. The old engine kept
+//! one global `HashMap` that only ever inserted, leaking an entry per
+//! distinct key forever; eviction-on-release falls out of the sharded
+//! design and is pinned by `lock_table_is_bounded_on_sustained_hot_key_run`.
+//!
+//! With the lock table sharded, the simulation runs on the conservative
+//! window engine ([`crate::simnet::parallel::run_windows`], same as
+//! `ConveyorSim`): one group per server (station, lock shard, RNG
+//! stream, coordinated-op table) plus a client tier, advancing in
+//! lookahead windows with the canonical cross-group merge — results are
+//! bit-identical at any thread count ([`ClusterConfig::parallel`]).
 
 use crate::simnet::clients::{ClientPool, ClientsConfig};
 use crate::simnet::events::EventQueue;
 use crate::simnet::latency::Topology;
 use crate::simnet::metrics::SimMetrics;
+use crate::simnet::parallel::{self, CrossSend, WindowGroup, CLIENT_TIER};
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
 use crate::workload::analyzed::AnalyzedApp;
@@ -37,6 +61,10 @@ pub struct ClusterConfig {
     pub remote_exec_frac: f64,
     /// CPU cost of handling one coordination message.
     pub msg_cpu_ms: f64,
+    /// Worker threads for the window-parallel engine: `1` sequential
+    /// (default), `0` all cores, `N` at most N threads. Results are
+    /// bit-identical for every value.
+    pub parallel: usize,
     pub warmup: VTime,
     pub horizon: VTime,
     pub seed: u64,
@@ -53,6 +81,7 @@ impl Default for ClusterConfig {
             // cost CPU on both ends.
             remote_exec_frac: 0.8,
             msg_cpu_ms: 0.8,
+            parallel: 1,
             warmup: VTime::from_secs(5),
             horizon: VTime::from_secs(25),
             seed: 0xC1B5,
@@ -60,57 +89,509 @@ impl Default for ClusterConfig {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone)]
 enum Job {
+    /// Coordinator's own execution share (plus per-remote message CPU).
     Coord(u64),
-    Remote { op: u64, shard: usize },
-    /// Fire-and-forget commit application at a participant.
-    CommitApply,
+    /// A participant's prepare/read share of `op` coordinated elsewhere.
+    Remote { coord: usize, op: u64 },
+    /// Commit application at a participant; releases `keys` on this
+    /// shard when done, then acks the coordinator.
+    CommitApply { coord: usize, op: u64, keys: Vec<u64> },
+    /// Coordinator-side handling of one participant ack (the commit
+    /// round costs CPU on *both* ends, like the prepare round).
+    Ack(u64),
 }
 
 #[derive(Debug, Clone)]
 enum Ev {
+    /// Client (after thinking) issues its next operation. [client tier]
     Issue { client: usize },
-    Arrive { op: u64 },
+    /// Reply reaches the client. [client tier]
+    Reply { client: usize, issued: VTime, distributed: bool },
+    /// Request arrives at its coordinator. [server]
+    Arrive { op: OpEnvelope },
+    /// Coordinator-local lock reservations granted; execution starts.
+    /// [server]
     LockStart { op: u64 },
-    JobDone { server: usize, job: Job },
-    /// Prepare/read request lands at a participant shard.
-    PrepareArrive { op: u64, shard: usize },
+    /// A station job completed. [server]
+    JobDone { job: Job },
+    /// Prepare/read request lands at a participant shard, carrying the
+    /// write keys that shard owns. [server]
+    PrepareArrive { coord: usize, op: u64, service: VTime, keys: Vec<u64> },
+    /// Participant lock reservations granted; its share executes.
+    /// [server]
+    RemoteStart { coord: usize, op: u64, service: VTime },
+    /// A participant's prepare vote reaches the coordinator. [server]
     VoteArrive { op: u64 },
-    /// Commit decision lands at a participant shard.
-    CommitArrive { shard: usize },
+    /// Commit decision lands at a participant shard. [server]
+    CommitArrive { coord: usize, op: u64, keys: Vec<u64> },
+    /// A participant's commit ack reaches the coordinator. [server]
+    AckArrive { op: u64 },
+    /// All rounds done: the transaction completes at the coordinator.
+    /// [server]
     Complete { op: u64 },
-    Reply { op: u64 },
 }
 
+/// An operation travelling from the client tier to its coordinator; the
+/// coordinator derives demand and service time with its own RNG stream.
+#[derive(Debug, Clone)]
+struct OpEnvelope {
+    txn: usize,
+    args: crate::db::Bindings,
+    client: usize,
+    client_site: usize,
+    issued: VTime,
+}
+
+/// Coordinator-side state of one operation (owned by the coordinating
+/// server group; other groups see only self-contained messages).
 struct OpState {
     client: usize,
+    client_site: usize,
     issued: VTime,
-    coordinator: usize,
     demand: ShardDemand,
-    votes_pending: usize,
+    /// The coordinator's own write keys (`demand.keys_on(coordinator)`),
+    /// computed once at arrival: acquired before execution starts,
+    /// released at `Complete`.
+    local_keys: Vec<u64>,
     service: VTime,
+    votes_pending: usize,
+    acks_pending: usize,
     distributed: bool,
+}
+
+/// One server's shard of the virtual row-lock table: only keys whose
+/// data shard is this server ever appear here.
+///
+/// A reservation models a queued-then-held row lock by its *estimated*
+/// hold window: acquiring keys returns the grant time (after every
+/// earlier reservation's window) and extends each key's `avail`
+/// horizon; releasing decrements the key's live-reservation count and
+/// evicts the entry when it reaches zero. The table therefore holds
+/// only keys with in-flight transactions — bounded by concurrency, not
+/// by the number of distinct keys ever touched.
+#[derive(Debug, Default)]
+struct LockShard {
+    slots: HashMap<u64, LockSlot>,
+    /// High-water mark of live entries (leak regression diagnostics).
+    peak: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct LockSlot {
+    /// When the last queued reservation's estimated hold ends.
+    avail: VTime,
+    /// Live reservations (granted or queued) on this key.
+    queued: u32,
+}
+
+impl LockShard {
+    /// Reserve `keys` for one transaction starting no earlier than
+    /// `now`; returns the grant time (`> now` means it queued).
+    fn acquire(&mut self, now: VTime, keys: &[u64], hold: VTime) -> VTime {
+        let mut grant = now;
+        for k in keys {
+            if let Some(slot) = self.slots.get(k) {
+                grant = grant.max(slot.avail);
+            }
+        }
+        for &k in keys {
+            let slot =
+                self.slots.entry(k).or_insert(LockSlot { avail: VTime::ZERO, queued: 0 });
+            slot.avail = slot.avail.max(grant + hold);
+            slot.queued += 1;
+        }
+        self.peak = self.peak.max(self.slots.len());
+        grant
+    }
+
+    /// Release the reservations taken by one matching `acquire`; entries
+    /// with no live reservations are evicted (the leak fix).
+    fn release(&mut self, keys: &[u64]) {
+        for k in keys {
+            if let Some(slot) = self.slots.get_mut(k) {
+                slot.queued = slot.queued.saturating_sub(1);
+                if slot.queued == 0 {
+                    self.slots.remove(k);
+                }
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Immutable context shared by every group during a window.
+struct Shared<'s> {
+    app: &'s AnalyzedApp,
+    topo: &'s Topology,
+    cfg: &'s ClusterConfig,
+    footprints: &'s [Footprint],
+}
+
+/// One server group: coordinator + 2PC participant + lock shard.
+struct ServerGroup {
+    id: usize,
+    station: Station<Job>,
+    /// This shard's slice of the virtual row-lock table.
+    locks: LockShard,
+    /// Operations this server coordinates (ids are group-local). Slots
+    /// of completed operations are recycled through `free_ops`, so the
+    /// table is bounded by in-flight concurrency — the same guarantee
+    /// the lock shards give — instead of growing with every operation
+    /// ever coordinated.
+    ops: Vec<OpState>,
+    /// Recycled op slots (no message can reference an op after its
+    /// `Complete` fires, so reuse is safe).
+    free_ops: Vec<u64>,
+    /// Per-server RNG stream (demand + service sampling), derived
+    /// statelessly from the seed so server count and event interleaving
+    /// cannot perturb another server's stream.
+    rng: Rng,
+    lock_waits: u64,
+    q: EventQueue<Ev>,
+    out: Vec<CrossSend<Ev>>,
+}
+
+impl<'s> WindowGroup<Shared<'s>> for ServerGroup {
+    type Ev = Ev;
+
+    fn queue(&self) -> &EventQueue<Ev> {
+        &self.q
+    }
+
+    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
+        &mut self.q
+    }
+
+    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
+        &mut self.out
+    }
+
+    fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
+        match ev {
+            Ev::Arrive { op } => self.on_arrive(op, ctx),
+            Ev::LockStart { op } => self.on_lock_start(op, ctx),
+            Ev::JobDone { job } => self.on_job_done(job, ctx),
+            Ev::PrepareArrive { coord, op, service, keys } => {
+                self.on_prepare(coord, op, service, keys, ctx)
+            }
+            Ev::RemoteStart { coord, op, service } => {
+                self.submit(Job::Remote { coord, op }, service, false)
+            }
+            Ev::CommitArrive { coord, op, keys } => {
+                let apply = VTime::from_millis_f64(ctx.cfg.msg_cpu_ms);
+                self.submit(Job::CommitApply { coord, op, keys }, apply, false);
+            }
+            Ev::AckArrive { op } => {
+                let ack_cpu = VTime::from_millis_f64(ctx.cfg.msg_cpu_ms);
+                self.submit(Job::Ack(op), ack_cpu, false);
+            }
+            Ev::VoteArrive { op } => self.on_vote(op, ctx),
+            Ev::Complete { op } => self.on_complete(op, ctx),
+            Ev::Issue { .. } | Ev::Reply { .. } => {
+                unreachable!("client-tier event delivered to a server")
+            }
+        }
+    }
+}
+
+impl ServerGroup {
+    fn submit(&mut self, job: Job, service: VTime, priority: bool) {
+        let now = self.q.now();
+        if let Some(j) = self.station.submit(now, job, service, priority) {
+            self.q.schedule(j.service, Ev::JobDone { job: j.payload });
+        }
+    }
+
+    /// Estimated lock hold at the coordinator: local execution plus the
+    /// coordination rounds. An estimate shapes only the queueing of
+    /// later reservations — the reservation itself is explicitly
+    /// released (and evicted) at completion.
+    fn estimate_hold(&self, op: &OpState, ctx: &Shared<'_>) -> VTime {
+        let mut hold = op.service;
+        let mut max_rtt = VTime::ZERO;
+        for &s in &op.demand.shards {
+            if s != self.id {
+                max_rtt = max_rtt.max(ctx.topo.servers.rtt(self.id, s));
+            }
+        }
+        if max_rtt > VTime::ZERO {
+            let rounds = if op.demand.read_only { 1 } else { 2 };
+            hold += VTime::from_micros(max_rtt.as_micros() * rounds);
+        }
+        hold
+    }
+
+    fn on_arrive(&mut self, env: OpEnvelope, ctx: &Shared<'_>) {
+        let n = ctx.topo.n();
+        let demand = ctx.footprints[env.txn].demand(&env.args, n, &mut self.rng);
+        let service = ctx.cfg.service.sample(&ctx.app.spec.txns[env.txn], &mut self.rng);
+        let distributed = demand.shards.iter().any(|&s| s != self.id);
+        let local_keys = demand.keys_on(self.id);
+        let op = OpState {
+            client: env.client,
+            client_site: env.client_site,
+            issued: env.issued,
+            demand,
+            local_keys,
+            service,
+            votes_pending: 0,
+            acks_pending: 0,
+            distributed,
+        };
+        // Read-committed: read-only transactions take no row locks.
+        // Write transactions reserve their *coordinator-local* keys here;
+        // keys owned by other shards are reserved where they live, when
+        // the prepare round reaches them.
+        let now = self.q.now();
+        let start = if op.local_keys.is_empty() {
+            now
+        } else {
+            let hold = self.estimate_hold(&op, ctx);
+            let grant = self.locks.acquire(now, &op.local_keys, hold);
+            if grant > now {
+                self.lock_waits += 1;
+            }
+            grant
+        };
+        let op_id = match self.free_ops.pop() {
+            Some(id) => {
+                self.ops[id as usize] = op;
+                id
+            }
+            None => {
+                self.ops.push(op);
+                self.ops.len() as u64 - 1
+            }
+        };
+        self.q.schedule_at(start, Ev::LockStart { op: op_id });
+    }
+
+    fn on_lock_start(&mut self, op_id: u64, ctx: &Shared<'_>) {
+        let (service, n_remotes) = {
+            let op = &self.ops[op_id as usize];
+            let n_remotes = op.demand.shards.iter().filter(|&&s| s != self.id).count();
+            (op.service, n_remotes)
+        };
+        // Coordinator executes its share plus per-remote message handling.
+        let coord_service =
+            service + VTime::from_millis_f64(ctx.cfg.msg_cpu_ms * n_remotes as f64);
+        self.submit(Job::Coord(op_id), coord_service, false);
+    }
+
+    fn on_job_done(&mut self, job: Job, ctx: &Shared<'_>) {
+        let now = self.q.now();
+        if let Some(next) = self.station.complete(now) {
+            self.q.schedule(next.service, Ev::JobDone { job: next.payload });
+        }
+        match job {
+            Job::Coord(op_id) => self.on_coord_done(op_id, ctx),
+            Job::Remote { coord, op } => {
+                // Remote share done: the vote travels back.
+                let d = ctx.topo.servers.one_way(self.id, coord);
+                self.out.push(CrossSend {
+                    target: coord,
+                    at: now + d,
+                    ev: Ev::VoteArrive { op },
+                });
+            }
+            Job::CommitApply { coord, op, keys } => {
+                // Commit applied: this shard's reservations end (entries
+                // evict) and the ack travels back to the coordinator.
+                self.locks.release(&keys);
+                let d = ctx.topo.servers.one_way(self.id, coord);
+                self.out.push(CrossSend {
+                    target: coord,
+                    at: now + d,
+                    ev: Ev::AckArrive { op },
+                });
+            }
+            Job::Ack(op_id) => {
+                let done = {
+                    let op = &mut self.ops[op_id as usize];
+                    op.acks_pending -= 1;
+                    op.acks_pending == 0
+                };
+                if done {
+                    self.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
+                }
+            }
+        }
+    }
+
+    fn on_coord_done(&mut self, op_id: u64, ctx: &Shared<'_>) {
+        let remotes = self.ops[op_id as usize].demand.remotes(self.id);
+        if remotes.is_empty() {
+            self.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
+            return;
+        }
+        self.ops[op_id as usize].votes_pending = remotes.len();
+        let service = self.ops[op_id as usize].service;
+        let now = self.q.now();
+        for shard in remotes {
+            let keys = self.ops[op_id as usize].demand.keys_on(shard);
+            let d = ctx.topo.servers.one_way(self.id, shard);
+            self.out.push(CrossSend {
+                target: shard,
+                at: now + d,
+                ev: Ev::PrepareArrive { coord: self.id, op: op_id, service, keys },
+            });
+        }
+    }
+
+    /// Prepare/read request landed at a participant: reserve this
+    /// shard's keys (writes only — `keys` is empty for reads), then
+    /// charge its CPU share once the reservations are granted.
+    fn on_prepare(
+        &mut self,
+        coord: usize,
+        op: u64,
+        service: VTime,
+        keys: Vec<u64>,
+        ctx: &Shared<'_>,
+    ) {
+        let remote_service = VTime::from_millis_f64(
+            service.as_millis_f64() * ctx.cfg.remote_exec_frac + ctx.cfg.msg_cpu_ms,
+        );
+        let now = self.q.now();
+        let start = if keys.is_empty() {
+            now
+        } else {
+            // Held through the vote leg and the commit round back.
+            let hold = remote_service + ctx.topo.servers.rtt(self.id, coord);
+            let grant = self.locks.acquire(now, &keys, hold);
+            if grant > now {
+                self.lock_waits += 1;
+            }
+            grant
+        };
+        self.q.schedule_at(start, Ev::RemoteStart { coord, op, service: remote_service });
+    }
+
+    fn on_vote(&mut self, op_id: u64, ctx: &Shared<'_>) {
+        let done = {
+            let op = &mut self.ops[op_id as usize];
+            op.votes_pending -= 1;
+            op.votes_pending == 0
+        };
+        if !done {
+            return;
+        }
+        if self.ops[op_id as usize].demand.read_only {
+            // Scatter-gather read: done once all results are in.
+            self.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
+            return;
+        }
+        // 2PC commit round: decision to every participant; each applies
+        // it (releasing its reservations) and acks back, and the
+        // coordinator pays CPU per ack — symmetric with the prepare path.
+        let remotes = self.ops[op_id as usize].demand.remotes(self.id);
+        self.ops[op_id as usize].acks_pending = remotes.len();
+        let now = self.q.now();
+        for shard in remotes {
+            let keys = self.ops[op_id as usize].demand.keys_on(shard);
+            let d = ctx.topo.servers.one_way(self.id, shard);
+            self.out.push(CrossSend {
+                target: shard,
+                at: now + d,
+                ev: Ev::CommitArrive { coord: self.id, op: op_id, keys },
+            });
+        }
+    }
+
+    fn on_complete(&mut self, op_id: u64, ctx: &Shared<'_>) {
+        // The transaction is over: the coordinator's own reservations
+        // end (strict 2PL release; entries evict when idle).
+        self.locks.release(&self.ops[op_id as usize].local_keys);
+        let (client, client_site, issued, distributed) = {
+            let op = &self.ops[op_id as usize];
+            (op.client, op.client_site, op.issued, op.distributed)
+        };
+        let d = ctx.topo.servers.one_way(self.id, client_site);
+        self.out.push(CrossSend {
+            target: CLIENT_TIER,
+            at: self.q.now() + d,
+            ev: Ev::Reply { client, issued, distributed },
+        });
+        // Nothing references this op id past its Complete (votes and
+        // acks are all in): recycle the slot.
+        self.free_ops.push(op_id);
+    }
+}
+
+/// The client tier: client pool, workload generator and metrics.
+struct ClientTier<'a> {
+    clients: ClientPool,
+    gen: Box<dyn OpGenerator + 'a>,
+    metrics: SimMetrics,
+    q: EventQueue<Ev>,
+    out: Vec<CrossSend<Ev>>,
+}
+
+impl<'a, 's> WindowGroup<Shared<'s>> for ClientTier<'a> {
+    type Ev = Ev;
+
+    fn queue(&self) -> &EventQueue<Ev> {
+        &self.q
+    }
+
+    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
+        &mut self.q
+    }
+
+    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
+        &mut self.out
+    }
+
+    fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
+        match ev {
+            Ev::Issue { client } => self.on_issue(client, ctx),
+            Ev::Reply { client, issued, distributed } => {
+                self.metrics.complete(issued, self.q.now(), distributed);
+                let think = self.clients.think(client);
+                self.q.schedule(think, Ev::Issue { client });
+            }
+            _ => unreachable!("server event delivered to the client tier"),
+        }
+    }
+}
+
+impl ClientTier<'_> {
+    fn on_issue(&mut self, client: usize, ctx: &Shared<'_>) {
+        let n = ctx.topo.n();
+        let site = self.clients.site(client);
+        let op = {
+            let mut r = self.clients.rng(client).fork();
+            self.gen.next_op(&mut r, site, n)
+        };
+        let coordinator = site % n;
+        let env = OpEnvelope {
+            txn: op.txn,
+            args: op.args,
+            client,
+            client_site: site,
+            issued: self.q.now(),
+        };
+        let delay = ctx.topo.servers.one_way(site, coordinator);
+        self.out.push(CrossSend {
+            target: coordinator,
+            at: self.q.now() + delay,
+            ev: Ev::Arrive { op: env },
+        });
+    }
 }
 
 pub struct ClusterSim<'a> {
     app: &'a AnalyzedApp,
     topo: Topology,
     cfg: ClusterConfig,
-    gen: Box<dyn OpGenerator + 'a>,
-    clients: ClientPool,
-    stations: Vec<Station<Job>>,
     footprints: Vec<Footprint>,
-    ops: Vec<OpState>,
-    /// Virtual row-lock table: key -> earliest next acquisition time.
-    locks: HashMap<(usize, u64), VTime>,
-    /// Per-server RNG streams (demand + service sampling at the
-    /// coordinator), derived statelessly from the seed so server count
-    /// and event interleaving cannot perturb another server's stream.
-    rngs: Vec<Rng>,
-    pub metrics: SimMetrics,
-    q: EventQueue<Ev>,
-    lock_waits: u64,
+    client: ClientTier<'a>,
+    servers: Vec<ServerGroup>,
 }
 
 impl<'a> ClusterSim<'a> {
@@ -123,264 +604,71 @@ impl<'a> ClusterSim<'a> {
     ) -> Self {
         let n = topo.n();
         let clients = ClientPool::new(ClientsConfig { sites: n, ..clients_cfg });
-        let stations = (0..n).map(|_| Station::new(cfg.workers)).collect();
         let footprints =
             app.spec.txns.iter().map(|t| footprint(t, &app.spec.schema)).collect();
         let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
-        let rngs = (0..n).map(|i| Rng::stream(cfg.seed, i as u64)).collect();
+        let servers = (0..n)
+            .map(|id| ServerGroup {
+                id,
+                station: Station::new(cfg.workers),
+                locks: LockShard::default(),
+                ops: Vec::new(),
+                free_ops: Vec::new(),
+                rng: Rng::stream(cfg.seed, id as u64),
+                lock_waits: 0,
+                q: EventQueue::new(),
+                out: Vec::new(),
+            })
+            .collect();
         ClusterSim {
             app,
             topo,
             cfg,
-            gen,
-            clients,
-            stations,
             footprints,
-            ops: Vec::new(),
-            locks: HashMap::new(),
-            rngs,
-            metrics,
-            q: EventQueue::new(),
-            lock_waits: 0,
+            client: ClientTier {
+                clients,
+                gen,
+                metrics,
+                q: EventQueue::new(),
+                out: Vec::new(),
+            },
+            servers,
         }
+    }
+
+    /// The conservative lookahead: every cross-group message — request,
+    /// prepare, vote, commit, ack, reply — pays a one-way latency from
+    /// the server matrix (clients are co-located with server sites), so
+    /// the matrix minimum bounds all of them.
+    fn lookahead(&self) -> VTime {
+        self.topo.servers.min_one_way()
     }
 
     pub fn run(mut self) -> ClusterReport {
-        for c in 0..self.clients.n() {
+        for c in 0..self.client.clients.n() {
             let jitter = VTime::from_micros((c as u64 % 97) * 13);
-            self.q.schedule(jitter, Ev::Issue { client: c });
+            self.client.q.schedule_at(jitter, Ev::Issue { client: c });
         }
-        while let Some(t) = self.q.peek_time() {
-            if t > self.cfg.horizon {
-                break;
-            }
-            let (_, ev) = self.q.pop().unwrap();
-            self.handle(ev);
+        let lookahead = self.lookahead();
+        let threads = parallel::resolve_threads(self.cfg.parallel);
+        let horizon = self.cfg.horizon;
+
+        let ClusterSim { app, topo, cfg, footprints, mut client, mut servers } = self;
+        {
+            let ctx = Shared { app, topo: &topo, cfg: &cfg, footprints: &footprints };
+            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client);
         }
-        let now = self.cfg.horizon;
+
+        let now = cfg.horizon;
         ClusterReport {
-            metrics: self.metrics.clone(),
-            utilization: self.stations.iter().map(|s| s.utilization(now)).collect(),
-            lock_waits: self.lock_waits,
-            events: self.q.processed(),
+            metrics: client.metrics.clone(),
+            utilization: servers.iter().map(|s| s.station.utilization(now)).collect(),
+            lock_waits: servers.iter().map(|s| s.lock_waits).sum(),
+            lock_entries: servers.iter().map(|s| s.locks.len()).sum(),
+            lock_entries_peak: servers.iter().map(|s| s.locks.peak).sum(),
+            events: client.q.processed()
+                + servers.iter().map(|s| s.q.processed()).sum::<u64>(),
         }
-    }
-
-    fn handle(&mut self, ev: Ev) {
-        match ev {
-            Ev::Issue { client } => self.on_issue(client),
-            Ev::Arrive { op } => self.on_arrive(op),
-            Ev::LockStart { op } => self.on_lock_start(op),
-            Ev::JobDone { server, job } => self.on_job_done(server, job),
-            Ev::PrepareArrive { op, shard } => self.on_prepare(op, shard),
-            Ev::VoteArrive { op } => self.on_vote(op),
-            Ev::CommitArrive { shard } => {
-                let apply = VTime::from_millis_f64(self.cfg.msg_cpu_ms);
-                self.submit(shard, Job::CommitApply, apply, false);
-            }
-            Ev::Complete { op } => self.on_complete(op),
-            Ev::Reply { op } => self.on_reply(op),
-        }
-    }
-
-    fn submit(&mut self, server: usize, job: Job, service: VTime, priority: bool) {
-        let now = self.q.now();
-        if let Some(j) = self.stations[server].submit(now, job, service, priority) {
-            self.q.schedule(j.service, Ev::JobDone { server, job: j.payload });
-        }
-    }
-
-    fn on_issue(&mut self, client: usize) {
-        let n = self.topo.n();
-        let site = self.clients.site(client);
-        let op = {
-            let mut r = self.clients.rng(client).fork();
-            self.gen.next_op(&mut r, site, n)
-        };
-        let coordinator = site % n;
-        let demand = self.footprints[op.txn].demand(&op.args, n, &mut self.rngs[coordinator]);
-        let service =
-            self.cfg.service.sample(&self.app.spec.txns[op.txn], &mut self.rngs[coordinator]);
-        let distributed = demand.shards.iter().any(|&s| s != coordinator);
-        let op_id = self.ops.len() as u64;
-        self.ops.push(OpState {
-            client,
-            issued: self.q.now(),
-            coordinator,
-            demand,
-            votes_pending: 0,
-            service,
-            distributed,
-        });
-        let delay = self.topo.servers.one_way(site, coordinator);
-        self.q.schedule(delay, Ev::Arrive { op: op_id });
-    }
-
-    /// Estimated lock hold: local execution plus the coordination rounds.
-    fn estimate_hold(&self, op: &OpState) -> VTime {
-        let mut hold = op.service;
-        let remotes: Vec<usize> = op
-            .demand
-            .shards
-            .iter()
-            .copied()
-            .filter(|&s| s != op.coordinator)
-            .collect();
-        if !remotes.is_empty() {
-            let max_rtt = remotes
-                .iter()
-                .map(|&s| self.topo.servers.rtt(op.coordinator, s))
-                .max()
-                .unwrap();
-            let rounds = if op.demand.read_only { 1 } else { 2 };
-            hold += VTime::from_micros(max_rtt.as_micros() * rounds);
-        }
-        hold
-    }
-
-    fn on_arrive(&mut self, op_id: u64) {
-        let now = self.q.now();
-        // Read-committed: read-only transactions take no locks.
-        let (start, hold) = {
-            let op = &self.ops[op_id as usize];
-            if op.demand.write_keys.is_empty() {
-                (now, VTime::ZERO)
-            } else {
-                let hold = self.estimate_hold(op);
-                let mut start = now;
-                for key in &op.demand.write_keys {
-                    if let Some(&avail) = self.locks.get(key) {
-                        if avail > start {
-                            start = avail;
-                        }
-                    }
-                }
-                (start, hold)
-            }
-        };
-        if start > now {
-            self.lock_waits += 1;
-        }
-        // Reserve the locks until the estimated release.
-        let keys: Vec<(usize, u64)> = self.ops[op_id as usize].demand.write_keys.clone();
-        for key in keys {
-            self.locks.insert(key, start + hold);
-        }
-        self.q.schedule_at(start, Ev::LockStart { op: op_id });
-    }
-
-    fn on_lock_start(&mut self, op_id: u64) {
-        let (coordinator, service, n_remotes) = {
-            let op = &self.ops[op_id as usize];
-            let n_remotes =
-                op.demand.shards.iter().filter(|&&s| s != op.coordinator).count();
-            (op.coordinator, op.service, n_remotes)
-        };
-        // Coordinator executes its share plus per-remote message handling.
-        let coord_service =
-            service + VTime::from_millis_f64(self.cfg.msg_cpu_ms * n_remotes as f64);
-        self.submit(coordinator, Job::Coord(op_id), coord_service, false);
-    }
-
-    fn on_job_done(&mut self, server: usize, job: Job) {
-        let now = self.q.now();
-        if let Some(next) = self.stations[server].complete(now) {
-            self.q.schedule(next.service, Ev::JobDone { server, job: next.payload });
-        }
-        match job {
-            Job::Coord(op_id) => {
-                let remotes: Vec<usize> = {
-                    let op = &self.ops[op_id as usize];
-                    op.demand
-                        .shards
-                        .iter()
-                        .copied()
-                        .filter(|&s| s != op.coordinator)
-                        .collect()
-                };
-                if remotes.is_empty() {
-                    self.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
-                    return;
-                }
-                self.ops[op_id as usize].votes_pending = remotes.len();
-                let coordinator = self.ops[op_id as usize].coordinator;
-                for shard in remotes {
-                    let d = self.topo.servers.one_way(coordinator, shard);
-                    self.q.schedule(d, Ev::PrepareArrive { op: op_id, shard });
-                }
-            }
-            Job::Remote { op: op_id, shard } => {
-                // Remote share done: vote travels back.
-                let coordinator = self.ops[op_id as usize].coordinator;
-                let d = self.topo.servers.one_way(shard, coordinator);
-                self.q.schedule(d, Ev::VoteArrive { op: op_id });
-            }
-            Job::CommitApply => {}
-        }
-    }
-
-    /// Prepare/read request landed at a participant: charge its CPU share.
-    fn on_prepare(&mut self, op_id: u64, shard: usize) {
-        let service = self.ops[op_id as usize].service;
-        let remote_service = VTime::from_millis_f64(
-            service.as_millis_f64() * self.cfg.remote_exec_frac + self.cfg.msg_cpu_ms,
-        );
-        self.submit(shard, Job::Remote { op: op_id, shard }, remote_service, false);
-    }
-
-    fn on_vote(&mut self, op_id: u64) {
-        let done = {
-            let op = &mut self.ops[op_id as usize];
-            op.votes_pending -= 1;
-            op.votes_pending == 0
-        };
-        if !done {
-            return;
-        }
-        let (read_only, coordinator, remotes): (bool, usize, Vec<usize>) = {
-            let op = &self.ops[op_id as usize];
-            (
-                op.demand.read_only,
-                op.coordinator,
-                op.demand.shards.iter().copied().filter(|&s| s != op.coordinator).collect(),
-            )
-        };
-        if read_only {
-            // Scatter-gather read: done once all results are in.
-            self.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
-        } else {
-            // 2PC commit round: decision to all participants + acks; the
-            // commit application costs CPU at each participant.
-            let mut max_rtt = VTime::ZERO;
-            for &shard in &remotes {
-                let one = self.topo.servers.one_way(coordinator, shard);
-                if one + one > max_rtt {
-                    max_rtt = one + one;
-                }
-                self.q.schedule(one, Ev::CommitArrive { shard });
-            }
-            self.q.schedule(max_rtt, Ev::Complete { op: op_id });
-        }
-    }
-
-    fn on_complete(&mut self, op_id: u64) {
-        let (client, coordinator) = {
-            let op = &self.ops[op_id as usize];
-            (op.client, op.coordinator)
-        };
-        let site = self.clients.site(client);
-        let delay = self.topo.servers.one_way(coordinator, site);
-        self.q.schedule(delay, Ev::Reply { op: op_id });
-    }
-
-    fn on_reply(&mut self, op_id: u64) {
-        let (client, issued, distributed) = {
-            let op = &self.ops[op_id as usize];
-            (op.client, op.issued, op.distributed)
-        };
-        self.metrics.complete(issued, self.q.now(), distributed);
-        let think = self.clients.think(client);
-        self.q.schedule(think, Ev::Issue { client });
     }
 }
 
@@ -389,6 +677,12 @@ pub struct ClusterReport {
     pub metrics: SimMetrics,
     pub utilization: Vec<f64>,
     pub lock_waits: u64,
+    /// Live lock-table entries at the horizon, summed over shards.
+    pub lock_entries: usize,
+    /// Sum of per-shard lock-table high-water marks: bounded by
+    /// in-flight write concurrency, not by distinct keys ever touched
+    /// (the leak regression metric).
+    pub lock_entries_peak: usize,
     pub events: u64,
 }
 
@@ -468,12 +762,13 @@ mod tests {
         }
     }
 
-    fn run(n: usize, clients: usize, write_ratio: f64) -> ClusterReport {
+    fn run_par(n: usize, clients: usize, write_ratio: f64, threads: usize) -> ClusterReport {
         let app = app();
         let cfg = ClusterConfig {
             warmup: VTime::from_secs(2),
             horizon: VTime::from_secs(10),
             service: ServiceModel::fixed(5.0),
+            parallel: threads,
             ..Default::default()
         };
         ClusterSim::new(
@@ -484,6 +779,10 @@ mod tests {
             Box::new(Gen { write_ratio }),
         )
         .run()
+    }
+
+    fn run(n: usize, clients: usize, write_ratio: f64) -> ClusterReport {
+        run_par(n, clients, write_ratio, 1)
     }
 
     #[test]
@@ -546,6 +845,65 @@ mod tests {
         )
         .run();
         assert!(r.lock_waits > 100, "lock_waits={}", r.lock_waits);
+        // One hot key: its shard's table holds exactly that entry while
+        // the queue is busy — never more than the keys actually in flight.
+        assert!(r.lock_entries_peak <= 2, "peak={}", r.lock_entries_peak);
+    }
+
+    /// ISSUE bugfix regression: reservations are evicted on release, so
+    /// the virtual lock table stays bounded on a sustained 10-second
+    /// run. The old engine's global map only ever inserted — its size
+    /// grew monotonically with every distinct key ever written (~50% of
+    /// completions below), while the sharded table plateaus at the
+    /// in-flight write concurrency (≤ one reservation per busy client).
+    #[test]
+    fn lock_table_is_bounded_on_sustained_hot_key_run() {
+        struct HotColdGen;
+        impl OpGenerator for HotColdGen {
+            fn next_op(&mut self, rng: &mut Rng, _site: usize, _n: usize) -> Operation {
+                // One scorching key keeps a lock queue standing for the
+                // whole run; a huge cold tail would have leaked an entry
+                // per key in the old table.
+                let cid = if rng.chance(0.2) { 7 } else { rng.range(0, 1_000_000) as i64 };
+                let args: Bindings =
+                    [("cid".to_string(), Value::Int(cid))].into_iter().collect();
+                Operation { txn: 0, args }
+            }
+        }
+        let app = app();
+        let mk = |horizon_s: u64| {
+            let cfg = ClusterConfig {
+                warmup: VTime::from_secs(2),
+                horizon: VTime::from_secs(horizon_s),
+                service: ServiceModel::fixed(5.0),
+                ..Default::default()
+            };
+            ClusterSim::new(
+                &app,
+                Topology::lan(3),
+                ClientsConfig { n: 40, think_ms: 0.0, seed: 5, ..Default::default() },
+                cfg,
+                Box::new(HotColdGen),
+            )
+            .run()
+        };
+        let short = mk(4);
+        let full = mk(10);
+        // Sustained load: thousands of distinct keys written...
+        assert!(full.metrics.completed > 1000, "completed={}", full.metrics.completed);
+        assert!(full.metrics.completed > 2 * short.metrics.completed);
+        // ...but live reservations stay bounded by concurrency (40
+        // closed-loop clients → at most 40 write keys in flight)...
+        assert!(full.lock_entries_peak <= 40, "peak={}", full.lock_entries_peak);
+        // ...and the high-water mark *plateaus* rather than growing with
+        // the horizon like the leaky table did.
+        assert!(
+            full.lock_entries_peak <= short.lock_entries_peak + 5,
+            "peak grew with the horizon: {} -> {}",
+            short.lock_entries_peak,
+            full.lock_entries_peak
+        );
+        assert!(full.lock_entries <= full.lock_entries_peak);
     }
 
     #[test]
@@ -554,6 +912,26 @@ mod tests {
         let b = run(4, 25, 0.3);
         assert_eq!(a.metrics.completed, b.metrics.completed);
         assert_eq!(a.events, b.events);
+        assert_eq!(a.lock_waits, b.lock_waits);
+    }
+
+    /// The window-engine property, checked cheaply here and exhaustively
+    /// in `tests/parallel_determinism.rs`: any thread count produces
+    /// bit-identical results.
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let base = run_par(4, 40, 0.5, 1);
+        for threads in [2usize, 0] {
+            let r = run_par(4, 40, 0.5, threads);
+            assert_eq!(r.metrics.completed, base.metrics.completed, "threads={threads}");
+            assert_eq!(r.events, base.events, "threads={threads}");
+            assert_eq!(r.lock_waits, base.lock_waits, "threads={threads}");
+            assert_eq!(r.lock_entries_peak, base.lock_entries_peak, "threads={threads}");
+            assert!(
+                (r.mean_latency_ms() - base.mean_latency_ms()).abs() < 1e-12,
+                "threads={threads}"
+            );
+        }
     }
 
     /// Satellite guard: the documented defaults the benches assume
@@ -565,6 +943,7 @@ mod tests {
         assert_eq!(c.workers, 8, "fair-baseline thread pool (same as Eliá servers)");
         assert!((c.remote_exec_frac - 0.8).abs() < 1e-12);
         assert!((c.msg_cpu_ms - 0.8).abs() < 1e-12);
+        assert_eq!(c.parallel, 1, "sequential by default; benches opt in");
         assert_eq!(c.warmup, VTime::from_secs(5));
         assert_eq!(c.horizon, VTime::from_secs(25));
         assert_eq!(c.seed, 0xC1B5);

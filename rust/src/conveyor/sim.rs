@@ -24,13 +24,15 @@
 //! window every group can process its own events independently — there is
 //! provably no cross-group delivery inside the window — so per-server
 //! work (real DB execution, update replay, station scheduling) fans out
-//! across a scoped thread pool ([`crate::simnet::parallel`]). Emitted
-//! cross-group events are collected in per-group buffers and merged back
-//! in canonical order — `(virtual time, source group id, per-source
-//! emission number)` — so queue insertion order, and with it the entire
-//! simulation, is **bit-identical for every thread count** (see
-//! `src/simnet/README.md` for the full argument and
-//! `tests/parallel_determinism.rs` for the enforcement).
+//! across a scoped thread pool. The window loop itself is the generic
+//! [`crate::simnet::parallel::run_windows`] engine (shared with
+//! `ClusterSim` and `BaselineSim`): emitted cross-group events are
+//! collected in per-group buffers and merged back in canonical order —
+//! `(virtual time, source group id, per-source emission number)` — so
+//! queue insertion order, and with it the entire simulation, is
+//! **bit-identical for every thread count** (see `src/simnet/README.md`
+//! for the full argument and `tests/parallel_determinism.rs` for the
+//! enforcement).
 //!
 //! The token itself travels *inside* the [`Ev::TokenArrive`] event, just
 //! like the real protocol: exactly one group ever owns it, so global-op
@@ -41,7 +43,7 @@ use crate::simnet::clients::{ClientPool, ClientsConfig};
 use crate::simnet::events::EventQueue;
 use crate::simnet::latency::Topology;
 use crate::simnet::metrics::SimMetrics;
-use crate::simnet::parallel;
+use crate::simnet::parallel::{self, CrossSend, WindowGroup, CLIENT_TIER};
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
 use crate::workload::analyzed::{AnalyzedApp, Route};
@@ -113,11 +115,6 @@ impl Default for ConveyorConfig {
     }
 }
 
-/// Pseudo group id of the client tier in cross-send targets and merge
-/// ranks (servers are `0..n`; the client tier ranks after all of them).
-const CLIENT_TIER: usize = usize::MAX;
-
-
 /// An operation in flight, carried inside events (the engine has no
 /// global operation table — groups exchange self-contained messages).
 #[derive(Debug, Clone)]
@@ -153,27 +150,6 @@ enum JobKind {
     /// Apply the replicated updates of one token receipt (the update
     /// count only shapes the job's service time, set at submission).
     Apply,
-}
-
-/// A cross-group event emission, buffered during a window and merged
-/// into the target group's queue afterwards in canonical order.
-#[derive(Debug)]
-struct OutMsg {
-    target: usize,
-    at: VTime,
-    ev: Ev,
-}
-
-/// Buffered cross-send tagged with its canonical merge rank.
-#[derive(Debug)]
-struct MergeEntry {
-    at: VTime,
-    /// Source group rank: server id, or `n` for the client tier.
-    src: u32,
-    /// Emission number within the source group's window.
-    idx: u32,
-    target: usize,
-    ev: Ev,
 }
 
 /// Immutable context shared by every group during a window.
@@ -228,24 +204,27 @@ struct ServerState {
     /// interleaving across servers can perturb any server's randomness.
     rng: Rng,
     q: EventQueue<Ev>,
-    out: Vec<OutMsg>,
+    out: Vec<CrossSend<Ev>>,
     /// Token-order log of global updates (when `record_global_log`).
     log: Vec<(u64, StateUpdate)>,
 }
 
-impl ServerState {
-    /// Process own events strictly before `cut` (the window bound).
-    fn drain(&mut self, cut: VTime, ctx: &Shared<'_>) {
-        while let Some(t) = self.q.peek_time() {
-            if t >= cut {
-                break;
-            }
-            let (_, ev) = self.q.pop().unwrap();
-            self.handle(ev, ctx);
-        }
+impl<'s> WindowGroup<Shared<'s>> for ServerState {
+    type Ev = Ev;
+
+    fn queue(&self) -> &EventQueue<Ev> {
+        &self.q
     }
 
-    fn handle(&mut self, ev: Ev, ctx: &Shared<'_>) {
+    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
+        &mut self.q
+    }
+
+    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
+        &mut self.out
+    }
+
+    fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
         match ev {
             Ev::Arrive { op } => self.on_arrive(op, ctx),
             Ev::JobDone { job } => self.on_job_done(job, ctx),
@@ -255,7 +234,9 @@ impl ServerState {
             }
         }
     }
+}
 
+impl ServerState {
     fn on_arrive(&mut self, op: OpEnvelope, ctx: &Shared<'_>) {
         if op.global {
             // Algorithm 2 line 6: hold until the token arrives. If this
@@ -343,7 +324,7 @@ impl ServerState {
 
     fn send_reply(&mut self, op: &OpEnvelope, ctx: &Shared<'_>) {
         let delay = ctx.client_server_latency(op.client_site, self.id);
-        self.out.push(OutMsg {
+        self.out.push(CrossSend {
             target: CLIENT_TIER,
             at: self.q.now() + delay,
             ev: Ev::Reply { client: op.client, issued: op.issued, global: op.global },
@@ -401,7 +382,7 @@ impl ServerState {
         let delay = hold
             + ctx.topo.servers.one_way(self.id, next)
             + VTime::from_millis_f64(ctx.cfg.hop_overhead_ms);
-        self.out.push(OutMsg {
+        self.out.push(CrossSend {
             target: next,
             at: self.q.now() + delay,
             ev: Ev::TokenArrive { token },
@@ -416,26 +397,36 @@ struct ClientTier<'a> {
     gen: Box<dyn OpGenerator + 'a>,
     metrics: SimMetrics,
     q: EventQueue<Ev>,
-    out: Vec<OutMsg>,
+    out: Vec<CrossSend<Ev>>,
 }
 
-impl ClientTier<'_> {
-    fn drain(&mut self, cut: VTime, ctx: &Shared<'_>) {
-        while let Some(t) = self.q.peek_time() {
-            if t >= cut {
-                break;
-            }
-            let (_, ev) = self.q.pop().unwrap();
-            match ev {
-                Ev::Issue { client } => self.on_issue(client, ctx),
-                Ev::Reply { client, issued, global } => self.on_reply(client, issued, global),
-                Ev::Arrive { .. } | Ev::JobDone { .. } | Ev::TokenArrive { .. } => {
-                    unreachable!("server event delivered to the client tier")
-                }
+impl<'a, 's> WindowGroup<Shared<'s>> for ClientTier<'a> {
+    type Ev = Ev;
+
+    fn queue(&self) -> &EventQueue<Ev> {
+        &self.q
+    }
+
+    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
+        &mut self.q
+    }
+
+    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
+        &mut self.out
+    }
+
+    fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
+        match ev {
+            Ev::Issue { client } => self.on_issue(client, ctx),
+            Ev::Reply { client, issued, global } => self.on_reply(client, issued, global),
+            Ev::Arrive { .. } | Ev::JobDone { .. } | Ev::TokenArrive { .. } => {
+                unreachable!("server event delivered to the client tier")
             }
         }
     }
+}
 
+impl ClientTier<'_> {
     fn on_issue(&mut self, client: usize, ctx: &Shared<'_>) {
         let n = ctx.topo.n();
         let site = self.clients.site(client);
@@ -475,7 +466,7 @@ impl ClientTier<'_> {
             issued: self.q.now(),
             global,
         };
-        self.out.push(OutMsg {
+        self.out.push(CrossSend {
             target: server,
             at: self.q.now() + delay,
             ev: Ev::Arrive { op: env },
@@ -499,8 +490,6 @@ pub struct ConveyorSim<'a> {
     cfg: ConveyorConfig,
     client: ClientTier<'a>,
     servers: Vec<ServerState>,
-    /// Reused cross-send merge buffer (allocation-steady rounds).
-    merge_buf: Vec<MergeEntry>,
 }
 
 impl<'a> ConveyorSim<'a> {
@@ -554,7 +543,6 @@ impl<'a> ConveyorSim<'a> {
                 out: Vec::new(),
             },
             servers,
-            merge_buf: Vec::new(),
         }
     }
 
@@ -576,11 +564,7 @@ impl<'a> ConveyorSim<'a> {
                 }
             }
             None => {
-                for site in 0..n {
-                    for s in 0..n {
-                        l = l.min(self.topo.servers.one_way(site, s));
-                    }
-                }
+                l = l.min(self.topo.servers.min_one_way());
             }
         }
         // Token ring hops; every pass also pays the hop overhead.
@@ -616,120 +600,30 @@ impl<'a> ConveyorSim<'a> {
         let threads = parallel::resolve_threads(self.cfg.parallel);
         let horizon = self.cfg.horizon;
 
-        loop {
-            // T = earliest pending event anywhere; stop past the horizon.
-            let mut t_min = self.client.q.peek_time();
-            for s in &self.servers {
-                if let Some(t) = s.q.peek_time() {
-                    t_min = Some(t_min.map_or(t, |m| m.min(t)));
-                }
-            }
-            let Some(t) = t_min else { break };
-            if t > horizon {
-                break;
-            }
-            // Exclusive processing cut: [T, T+L) ∩ [0, horizon]. A
-            // zero lookahead (degenerate topology) falls back to
-            // single-tick windows, which stay correct: zero-latency
-            // cross sends are merged after the round and processed at
-            // the same virtual time in the next one.
-            let width = if lookahead == VTime::ZERO {
-                VTime::from_micros(1)
-            } else {
-                lookahead
-            };
-            let cut = VTime::from_micros(
-                (t + width).as_micros().min(horizon.as_micros() + 1),
-            );
-
-            let ctx = Shared {
-                app: self.app,
-                stmt_maps: &self.stmt_maps,
-                topo: &self.topo,
-                cfg: &self.cfg,
-            };
-            // Client tier on the driving thread, then the servers fan
-            // out. Groups cannot interact inside a window, so this
-            // order is a scheduling choice, not a semantic one.
-            self.client.drain(cut, &ctx);
-            // Spawn when at least two servers have work *inside this
-            // window* (queued future events don't count): sparse windows
-            // — a lone token hop, one server's job completions — stay on
-            // the driving thread, while any genuinely shareable window
-            // exercises the fan-out path. Both paths are identical, so
-            // this is purely a spawn-overhead heuristic.
-            let busy = self
-                .servers
-                .iter()
-                .filter(|s| s.q.peek_time().is_some_and(|pt| pt < cut))
-                .count();
-            if threads > 1 && busy >= 2 {
-                parallel::fan_out_mut(threads, &mut self.servers, |s| s.drain(cut, &ctx));
-            } else {
-                for s in self.servers.iter_mut() {
-                    s.drain(cut, &ctx);
-                }
-            }
-
-            // Deterministic merge of cross-group sends: canonical order
-            // (time, source rank, emission number) fixes the target
-            // queues' FIFO tie-break sequence numbers independently of
-            // which thread produced what.
-            for (src, s) in self.servers.iter_mut().enumerate() {
-                for (idx, m) in s.out.drain(..).enumerate() {
-                    self.merge_buf.push(MergeEntry {
-                        at: m.at,
-                        src: src as u32,
-                        idx: idx as u32,
-                        target: m.target,
-                        ev: m.ev,
-                    });
-                }
-            }
-            for (idx, m) in self.client.out.drain(..).enumerate() {
-                self.merge_buf.push(MergeEntry {
-                    at: m.at,
-                    src: n as u32,
-                    idx: idx as u32,
-                    target: m.target,
-                    ev: m.ev,
-                });
-            }
-            self.merge_buf.sort_by_key(|e| (e.at, e.src, e.idx));
-            for e in self.merge_buf.drain(..) {
-                if e.target == CLIENT_TIER {
-                    self.client.q.schedule_at(e.at, e.ev);
-                } else {
-                    self.servers[e.target].q.schedule_at(e.at, e.ev);
-                }
-            }
+        let ConveyorSim { app, stmt_maps, topo, cfg, mut client, mut servers } = self;
+        {
+            let ctx = Shared { app, stmt_maps: &stmt_maps, topo: &topo, cfg: &cfg };
+            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client);
         }
-        let report = self.report();
-        let dbs = self.servers.into_iter().map(|s| s.db).collect();
-        (report, dbs)
-    }
 
-    fn report(&mut self) -> ConveyorReport {
-        let now = self.cfg.horizon;
+        let now = cfg.horizon;
         let mut log: Vec<(u64, StateUpdate)> = Vec::new();
-        for s in self.servers.iter_mut() {
+        for s in servers.iter_mut() {
             log.append(&mut s.log);
         }
         log.sort_by_key(|(seq, _)| *seq);
-        ConveyorReport {
-            metrics: self.client.metrics.clone(),
-            rotations: self.servers.iter().map(|s| s.rotations).sum(),
-            utilization: self.servers.iter().map(|s| s.station.utilization(now)).collect(),
-            aborts: self.servers.iter().map(|s| s.aborts).sum(),
-            db_hashes: self
-                .servers
-                .iter()
-                .map(|s| s.db.as_ref().map(|d| d.content_hash()))
-                .collect(),
-            events: self.client.q.processed()
-                + self.servers.iter().map(|s| s.q.processed()).sum::<u64>(),
+        let report = ConveyorReport {
+            metrics: client.metrics.clone(),
+            rotations: servers.iter().map(|s| s.rotations).sum(),
+            utilization: servers.iter().map(|s| s.station.utilization(now)).collect(),
+            aborts: servers.iter().map(|s| s.aborts).sum(),
+            db_hashes: servers.iter().map(|s| s.db.as_ref().map(|d| d.content_hash())).collect(),
+            events: client.q.processed()
+                + servers.iter().map(|s| s.q.processed()).sum::<u64>(),
             global_log: log.into_iter().map(|(_, u)| u).collect(),
-        }
+        };
+        let dbs = servers.into_iter().map(|s| s.db).collect();
+        (report, dbs)
     }
 }
 

@@ -175,11 +175,39 @@ impl LockManager {
         self
     }
 
+    /// Shard addressing derives from the target's *stored* hash: row
+    /// targets already carry the `Key::lock_hash` computed once per
+    /// statement, so the old scheme — running SipHash over the whole
+    /// `LockTarget` again — paid a second full hash pass on every
+    /// acquire and release. An FNV-style table-id mix plus a 64→64
+    /// finalizer (same spirit as `workload::analyzed::route_hash`)
+    /// spreads the precomputed bits instead. Shard collisions only
+    /// funnel two targets onto one mutex — they never coarsen lock
+    /// granularity (pinned in `tests/lock_sharding.rs`).
     fn shard_of(&self, target: &LockTarget) -> usize {
-        use std::hash::{Hash, Hasher};
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        target.hash(&mut h);
-        (h.finish() as usize) % self.shards.len()
+        let h = match *target {
+            LockTarget::Table(t) => (t as u64).wrapping_mul(0x100000001B3) ^ 0xcbf29ce484222325,
+            LockTarget::Row(t, h) => h ^ (t as u64).wrapping_mul(0x100000001B3),
+        };
+        // Finalizer mix so the modulo sees every input bit.
+        let mut x = h;
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xFF51AFD7ED558CCD);
+        x ^= x >> 33;
+        (x as usize) % self.shards.len()
+    }
+
+    /// The shard a target is addressed to (diagnostics and the sharding
+    /// tests): stable for a given target and shard count, and identical
+    /// for Eq-equal keys because it is a pure function of
+    /// `(table, Key::lock_hash)`.
+    pub fn shard_index(&self, target: &LockTarget) -> usize {
+        self.shard_of(target)
+    }
+
+    /// Number of shards in this lock table.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
     /// Acquire `mode` on `target` for `txn`, blocking per wait-die.

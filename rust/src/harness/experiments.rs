@@ -67,9 +67,10 @@ pub struct ExpScale {
     pub horizon_s: u64,
     pub max_clients: usize,
     pub think_ms: f64,
-    /// Worker threads for the window-parallel Conveyor simulator
-    /// (`ConveyorConfig::parallel`): 1 = sequential, 0 = all cores.
-    /// Results are bit-identical for every value (see
+    /// Worker threads for the window-parallel simulators (plumbed into
+    /// `ConveyorConfig`, `ClusterConfig` and `BaselineConfig`
+    /// `::parallel`): 1 = sequential, 0 = all cores. Results are
+    /// bit-identical for every value (see
     /// `tests/parallel_determinism.rs`), so benches default to all
     /// cores via their `--parallel` flag.
     pub parallel: usize,
@@ -157,6 +158,7 @@ fn cluster_point(
         service,
         warmup: VTime::from_secs(scale.warmup_s),
         horizon: VTime::from_secs(scale.horizon_s),
+        parallel: scale.parallel,
         ..Default::default()
     };
     let report = ClusterSim::new(
@@ -185,6 +187,7 @@ fn baseline_point(
         service,
         warmup: VTime::from_secs(scale.warmup_s),
         horizon: VTime::from_secs(scale.horizon_s),
+        parallel: scale.parallel,
         ..BaselineConfig::centralized()
     };
     let report = BaselineSim::new(

@@ -117,6 +117,16 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|Reverse(k)| k.at)
     }
 
+    /// Pop the next event only if it fires strictly before `cut` — the
+    /// drain primitive of the window-parallel engine: a group processes
+    /// its own events up to the window bound and no further.
+    pub fn pop_before(&mut self, cut: VTime) -> Option<(VTime, E)> {
+        match self.peek_time() {
+            Some(t) if t < cut => self.pop(),
+            _ => None,
+        }
+    }
+
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -173,6 +183,18 @@ mod tests {
         assert_eq!(q.pop().unwrap().1, "b");
         assert_eq!(q.pop().unwrap().1, "c");
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn pop_before_respects_the_cut() {
+        let mut q = EventQueue::new();
+        q.schedule(VTime::from_millis(1), "a");
+        q.schedule(VTime::from_millis(5), "b");
+        assert_eq!(q.pop_before(VTime::from_millis(5)).unwrap().1, "a");
+        // Exclusive bound: an event *at* the cut stays queued.
+        assert!(q.pop_before(VTime::from_millis(5)).is_none());
+        assert_eq!(q.pop_before(VTime::from_millis(6)).unwrap().1, "b");
+        assert!(q.pop_before(VTime::from_secs(1)).is_none());
     }
 
     #[test]

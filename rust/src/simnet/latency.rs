@@ -82,6 +82,15 @@ impl LatencyMatrix {
     pub fn rtt(&self, a: usize, b: usize) -> VTime {
         VTime::from_micros(2 * self.one_way[a * self.n + b])
     }
+
+    /// Smallest one-way entry in the matrix — the conservative lookahead
+    /// bound of the window-parallel engine: every message between two
+    /// endpoints of this matrix pays at least this much (see
+    /// `simnet/README.md`; an empty matrix degenerates to zero, which
+    /// the engine handles with single-tick windows).
+    pub fn min_one_way(&self) -> VTime {
+        VTime::from_micros(self.one_way.iter().copied().min().unwrap_or(0))
+    }
 }
 
 /// A deployment topology: server sites plus the latency matrix between
@@ -154,6 +163,18 @@ mod tests {
         assert_eq!(m.one_way(0, 1), VTime::from_millis(46));
         assert_eq!(m.rtt(0, 1), VTime::from_millis(92));
         assert_eq!(m.one_way(0, 0), VTime::from_millis(10));
+        assert_eq!(m.min_one_way(), VTime::from_millis(10));
+    }
+
+    #[test]
+    fn min_one_way_is_the_table2_diagonal() {
+        // Every paper topology's tightest leg is the 20 ms intra-site
+        // RTT — the ≥10 ms lookahead every window engine relies on.
+        for n in 1..=5 {
+            assert_eq!(Topology::wan(n).servers.min_one_way(), VTime::from_millis(10));
+        }
+        assert_eq!(Topology::lan(8).servers.min_one_way(), VTime::from_millis(10));
+        assert_eq!(Topology::wan_full_client(5).min_one_way(), VTime::from_millis(10));
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //! * [`latency`] — site topologies and the Table 2 matrix,
 //! * [`station`] — the W-worker server station model,
 //! * [`clients`] — closed-loop client pools with think times,
-//! * [`metrics`] — latency/throughput collection over a warm-up window.
+//! * [`metrics`] — latency/throughput collection over a warm-up window,
+//! * [`parallel`] — the conservative-window parallel engine
+//!   ([`parallel::WindowGroup`] + [`parallel::run_windows`]) every
+//!   simulator executes on.
 //!
 //! The system models built on top live in sibling modules:
 //! [`crate::conveyor`] (Eliá), [`crate::cluster`] (MySQL-Cluster-like data
@@ -30,8 +33,10 @@ pub use clients::{ClientPool, ClientsConfig};
 pub use events::{EventQueue, Schedulable};
 pub use latency::{LatencyMatrix, Site, Topology};
 pub use metrics::SimMetrics;
+pub use parallel::{run_windows, CrossSend, WindowGroup};
 pub use station::Station;
 
 // The conservative-window parallel execution mode built from these
-// pieces (per-server event queues, deterministic cross-send merge,
-// per-server RNG streams) is documented in `src/simnet/README.md`.
+// pieces (per-group event queues, deterministic cross-send merge,
+// per-server RNG streams) lives in [`parallel`] and is documented in
+// `src/simnet/README.md`; all three system models run on it.

@@ -1,17 +1,27 @@
-//! Scoped fan-out used by the parallel simulators.
+//! The conservative-window parallel engine shared by every simulator.
 //!
-//! The window-parallel engines (see `simnet/README.md`) repeatedly need
-//! "run f over every server's state, using up to N OS threads, with no
-//! shared mutable state". [`fan_out_mut`] does exactly that with
-//! `std::thread::scope`: the item slice is split into one contiguous
-//! chunk per thread, each chunk is processed sequentially on its thread,
-//! and the call returns once every chunk is done.
+//! Two layers live here:
+//!
+//! * [`fan_out_mut`] — scoped fan-out: "run f over every server's state,
+//!   using up to N OS threads, with no shared mutable state". The item
+//!   slice is split into one contiguous chunk per thread, each chunk is
+//!   processed sequentially on its thread, and the call returns once
+//!   every chunk is done.
+//! * [`run_windows`] — the window driver built on top of it: a set of
+//!   isolated [`WindowGroup`]s (one per server plus a client tier), each
+//!   owning its own event queue and state, advanced in conservative
+//!   lookahead windows with a canonical cross-group merge. This is the
+//!   engine `ConveyorSim`, `ClusterSim` and `BaselineSim` all run on;
+//!   the full determinism argument is in `simnet/README.md`.
 //!
 //! Determinism: `f` receives disjoint `&mut` items and (by the `Sync`
 //! bound) only shared immutable context, so the *result* of a fan-out is
 //! independent of the thread count and of OS scheduling — threads decide
 //! only *where* each item is processed, never in what order effects are
 //! observed (items do not observe each other at all).
+
+use crate::simnet::events::EventQueue;
+use crate::util::VTime;
 
 /// Number of worker threads a `parallel = 0` ("auto") knob resolves to.
 pub fn available_threads() -> usize {
@@ -55,6 +65,175 @@ where
             });
         }
     });
+}
+
+/// Pseudo group id of the client tier in cross-send targets (servers are
+/// `0..n`; in the canonical merge order the client tier ranks after all
+/// of them).
+pub const CLIENT_TIER: usize = usize::MAX;
+
+/// A cross-group event emission, buffered in the source group's out
+/// vector during a window and merged into the target group's queue
+/// afterwards in canonical order. `at` is the *absolute* arrival time
+/// (emission time plus the network latency the message pays).
+#[derive(Debug)]
+pub struct CrossSend<E> {
+    pub target: usize,
+    pub at: VTime,
+    pub ev: E,
+}
+
+/// One isolated group of a window-parallel simulation: it owns an event
+/// queue plus whatever mutable state its events touch, and interacts
+/// with other groups only through buffered [`CrossSend`]s. `Ctx` is the
+/// simulation's shared immutable context (config, topology, app), the
+/// same reference handed to every group of a window.
+///
+/// Implementors supply the queue/out-buffer accessors and [`handle`]
+/// (the group's event semantics); the window mechanics — `peek`,
+/// `drain`, `deliver` — are provided once here.
+///
+/// [`handle`]: WindowGroup::handle
+pub trait WindowGroup<Ctx> {
+    type Ev: Send;
+    /// The group's event queue.
+    fn queue(&self) -> &EventQueue<Self::Ev>;
+    fn queue_mut(&mut self) -> &mut EventQueue<Self::Ev>;
+    /// The window's buffered cross-group sends, in emission order.
+    fn out(&mut self) -> &mut Vec<CrossSend<Self::Ev>>;
+    /// Process one event: may schedule intra-group events and buffer
+    /// cross-group sends, but must never touch another group's state.
+    fn handle(&mut self, ev: Self::Ev, ctx: &Ctx);
+
+    /// Earliest pending event in this group's queue.
+    fn peek(&self) -> Option<VTime> {
+        self.queue().peek_time()
+    }
+
+    /// Process own events strictly before `cut` (the window bound).
+    fn drain(&mut self, cut: VTime, ctx: &Ctx) {
+        while let Some((_, ev)) = self.queue_mut().pop_before(cut) {
+            self.handle(ev, ctx);
+        }
+    }
+
+    /// Insert a merged cross-group event into this group's queue.
+    fn deliver(&mut self, at: VTime, ev: Self::Ev) {
+        self.queue_mut().schedule_at(at, ev);
+    }
+}
+
+/// Buffered cross-send tagged with its canonical merge rank.
+struct MergeEntry<E> {
+    at: VTime,
+    /// Source group rank: server id, or `n` for the client tier.
+    src: u32,
+    /// Emission number within the source group's window.
+    idx: u32,
+    target: usize,
+    ev: E,
+}
+
+/// Drive a set of window groups to `horizon`: repeatedly take the
+/// earliest pending event time `T` across all groups, drain every group
+/// independently over the window `[T, T + lookahead)` — servers fanned
+/// out over at most `threads` scoped threads, the client tier on the
+/// driving thread — then merge the buffered cross-group sends back in
+/// canonical `(arrival time, source rank, emission number)` order.
+///
+/// `lookahead` must be a lower bound on the latency any cross-group
+/// message pays; a zero lookahead (degenerate topology) falls back to
+/// single-tick windows, which stay correct — zero-delay cross sends are
+/// merged after the round and processed at the same virtual time in the
+/// next one. Results are bit-identical for every thread count (see
+/// `simnet/README.md` for the induction).
+pub fn run_windows<Ctx, S, C>(
+    threads: usize,
+    lookahead: VTime,
+    horizon: VTime,
+    ctx: &Ctx,
+    servers: &mut [S],
+    client: &mut C,
+) where
+    Ctx: Sync,
+    S: WindowGroup<Ctx> + Send,
+    C: WindowGroup<Ctx, Ev = S::Ev>,
+{
+    let n = servers.len();
+    // Reused across rounds: steady state allocates nothing per window.
+    let mut merge_buf: Vec<MergeEntry<S::Ev>> = Vec::new();
+    loop {
+        // T = earliest pending event anywhere; stop past the horizon.
+        let mut t_min = client.peek();
+        for s in servers.iter() {
+            if let Some(t) = s.peek() {
+                t_min = Some(t_min.map_or(t, |m| m.min(t)));
+            }
+        }
+        let Some(t) = t_min else { break };
+        if t > horizon {
+            break;
+        }
+        // Exclusive processing cut: [T, T+L) ∩ [0, horizon].
+        let width = if lookahead == VTime::ZERO {
+            VTime::from_micros(1)
+        } else {
+            lookahead
+        };
+        let cut = VTime::from_micros((t + width).as_micros().min(horizon.as_micros() + 1));
+
+        // Client tier on the driving thread, then the servers fan out.
+        // Groups cannot interact inside a window, so this order is a
+        // scheduling choice, not a semantic one.
+        client.drain(cut, ctx);
+        // Spawn when at least two servers have work *inside this window*
+        // (queued future events don't count): sparse windows stay on the
+        // driving thread. Both paths are identical, so this is purely a
+        // spawn-overhead heuristic.
+        let busy = servers
+            .iter()
+            .filter(|s| s.peek().is_some_and(|pt| pt < cut))
+            .count();
+        if threads > 1 && busy >= 2 {
+            fan_out_mut(threads, servers, |s| s.drain(cut, ctx));
+        } else {
+            for s in servers.iter_mut() {
+                s.drain(cut, ctx);
+            }
+        }
+
+        // Deterministic merge: the canonical order fixes the target
+        // queues' FIFO tie-break sequence numbers independently of which
+        // thread produced what.
+        for (src, s) in servers.iter_mut().enumerate() {
+            for (idx, m) in s.out().drain(..).enumerate() {
+                merge_buf.push(MergeEntry {
+                    at: m.at,
+                    src: src as u32,
+                    idx: idx as u32,
+                    target: m.target,
+                    ev: m.ev,
+                });
+            }
+        }
+        for (idx, m) in client.out().drain(..).enumerate() {
+            merge_buf.push(MergeEntry {
+                at: m.at,
+                src: n as u32,
+                idx: idx as u32,
+                target: m.target,
+                ev: m.ev,
+            });
+        }
+        merge_buf.sort_by_key(|e| (e.at, e.src, e.idx));
+        for e in merge_buf.drain(..) {
+            if e.target == CLIENT_TIER {
+                client.deliver(e.at, e.ev);
+            } else {
+                servers[e.target].deliver(e.at, e.ev);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +281,130 @@ mod tests {
     fn empty_slice_is_fine() {
         let mut xs: Vec<u32> = vec![];
         fan_out_mut(4, &mut xs, |_| unreachable!());
+    }
+
+    // ---- generic window driver ----
+
+    use crate::simnet::events::EventQueue;
+    use crate::util::Rng;
+
+    /// Toy protocol: the client pings a random server; the server works
+    /// for an RNG-drawn local delay (intra-group events), then pongs
+    /// back; the client counts and pings again. Cross sends always pay
+    /// `LAT`, intra-group events may be sub-lookahead.
+    const LAT: VTime = VTime(5_000);
+
+    #[derive(Debug)]
+    enum TEv {
+        Ping(u32),
+        Work(u32),
+        Pong,
+    }
+
+    struct TServer {
+        rng: Rng,
+        sum: u64,
+        q: EventQueue<TEv>,
+        out: Vec<CrossSend<TEv>>,
+    }
+
+    impl WindowGroup<()> for TServer {
+        type Ev = TEv;
+        fn queue(&self) -> &EventQueue<TEv> {
+            &self.q
+        }
+        fn queue_mut(&mut self) -> &mut EventQueue<TEv> {
+            &mut self.q
+        }
+        fn out(&mut self) -> &mut Vec<CrossSend<TEv>> {
+            &mut self.out
+        }
+        fn handle(&mut self, ev: TEv, _ctx: &()) {
+            match ev {
+                TEv::Ping(x) => {
+                    let d = VTime::from_micros(self.rng.gen_range(2_000));
+                    self.q.schedule(d, TEv::Work(x));
+                }
+                TEv::Work(x) => {
+                    self.sum = self.sum.wrapping_add(x as u64 ^ self.q.now().as_micros());
+                    self.out.push(CrossSend {
+                        target: CLIENT_TIER,
+                        at: self.q.now() + LAT,
+                        ev: TEv::Pong,
+                    });
+                }
+                TEv::Pong => unreachable!(),
+            }
+        }
+    }
+
+    struct TClient {
+        rng: Rng,
+        n_servers: usize,
+        pongs: u64,
+        q: EventQueue<TEv>,
+        out: Vec<CrossSend<TEv>>,
+    }
+
+    impl WindowGroup<()> for TClient {
+        type Ev = TEv;
+        fn queue(&self) -> &EventQueue<TEv> {
+            &self.q
+        }
+        fn queue_mut(&mut self) -> &mut EventQueue<TEv> {
+            &mut self.q
+        }
+        fn out(&mut self) -> &mut Vec<CrossSend<TEv>> {
+            &mut self.out
+        }
+        fn handle(&mut self, ev: TEv, _ctx: &()) {
+            match ev {
+                TEv::Pong => {
+                    self.pongs += 1;
+                    let t = self.rng.range(0, self.n_servers);
+                    self.out.push(CrossSend {
+                        target: t,
+                        at: self.q.now() + LAT,
+                        ev: TEv::Ping(self.pongs as u32),
+                    });
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    fn drive(threads: usize) -> (u64, Vec<u64>, u64) {
+        let n = 4;
+        let mut servers: Vec<TServer> = (0..n)
+            .map(|i| TServer {
+                rng: Rng::stream(9, i as u64),
+                sum: 0,
+                q: EventQueue::new(),
+                out: Vec::new(),
+            })
+            .collect();
+        let mut client = TClient {
+            rng: Rng::new(3),
+            n_servers: n,
+            pongs: 0,
+            q: EventQueue::new(),
+            out: Vec::new(),
+        };
+        for c in 0..8u64 {
+            client.q.schedule_at(VTime::from_micros(c * 7), TEv::Pong);
+        }
+        run_windows(threads, LAT, VTime::from_secs(2), &(), &mut servers, &mut client);
+        let events =
+            client.q.processed() + servers.iter().map(|s| s.q.processed()).sum::<u64>();
+        (client.pongs, servers.iter().map(|s| s.sum).collect(), events)
+    }
+
+    #[test]
+    fn window_driver_is_thread_count_invariant() {
+        let base = drive(1);
+        assert!(base.0 > 1000, "pongs={}", base.0);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(drive(threads), base, "threads={threads}");
+        }
     }
 }

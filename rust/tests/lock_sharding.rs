@@ -92,6 +92,64 @@ fn colliding_targets_only_add_blocking() {
     lm.release_all(1);
 }
 
+// ------------------------------------------------- shard addressing --
+
+/// ROADMAP lock-shard-tuning (perf half): shard choice now derives from
+/// the *stored* `Key::lock_hash` with an FNV-style mix, instead of
+/// re-running SipHash over the whole target per acquire/release. The
+/// semantics that must survive the swap: Eq-equal keys (which share a
+/// lock hash, see above) land on the same shard — a txn's acquire and
+/// release for one logical row always talk to one mutex.
+#[test]
+fn eq_keys_share_lock_shard() {
+    let lm = LockManager::default();
+    let cases: Vec<(Key, Key)> = vec![
+        (Key::single(Value::Int(3)), Key::single(Value::Float(3.0))),
+        (Key::single(Value::Float(0.0)), Key::single(Value::Float(-0.0))),
+        (
+            Key(vec![Value::Int(1), Value::Float(2.0)]),
+            Key(vec![Value::Float(1.0), Value::Int(2)]),
+        ),
+    ];
+    for (a, b) in cases {
+        let (ta, tb) = (LockTarget::row(4, &a), LockTarget::row(4, &b));
+        assert_eq!(ta, tb, "Eq keys must address one target: {a} vs {b}");
+        assert_eq!(lm.shard_index(&ta), lm.shard_index(&tb));
+    }
+}
+
+/// The derived addressing must still *spread*: sequential row keys fill
+/// every shard roughly evenly, and the table id contributes (the same
+/// key hash in different tables is not pinned to one shard).
+#[test]
+fn shard_addressing_spreads_targets() {
+    let lm = LockManager::default();
+    let n = lm.shard_count();
+    assert_eq!(n, 32, "default shard count assumed by the distribution bounds");
+    let mut counts = vec![0usize; n];
+    let total = 10_000;
+    for k in 0..total as i64 {
+        let t = LockTarget::row(0, &Key::single(Value::Int(k)));
+        counts[lm.shard_index(&t)] += 1;
+    }
+    let avg = total / n;
+    for (i, &c) in counts.iter().enumerate() {
+        assert!(
+            c > avg / 4 && c < avg * 4,
+            "shard {i} holds {c} of {total} targets (avg {avg}) — degenerate spread"
+        );
+    }
+    // Same row hash across table ids must not collapse onto few shards.
+    let spread: std::collections::HashSet<usize> = (0..64)
+        .map(|t| lm.shard_index(&LockTarget::row(t, &Key::single(Value::Int(1)))))
+        .collect();
+    assert!(spread.len() > 8, "table id must contribute to the shard: {}", spread.len());
+    // Table-level intent locks distribute too.
+    let tables: std::collections::HashSet<usize> =
+        (0..64).map(|t| lm.shard_index(&LockTarget::Table(t))).collect();
+    assert!(tables.len() > 8, "table targets collapse: {}", tables.len());
+}
+
 // ------------------------------------------------ end-to-end property --
 
 fn kv_db() -> Db {

@@ -1,10 +1,12 @@
-//! Determinism suite for the window-parallel Conveyor simulator.
+//! Determinism suite for the window-parallel simulators — Conveyor,
+//! Cluster and Baseline all run on `simnet::parallel::run_windows`.
 //!
 //! The whole point of the parallel execution mode is that it can be
 //! *trusted*: an N-thread run must be bit-identical to the 1-thread run
-//! — same metrics, same event counts, same token rotations, same final
-//! DB state on every server — across seeds and topologies. This suite
-//! enforces exactly that (the ISSUE's acceptance criterion), plus:
+//! — same metrics, same event counts, same token rotations / lock-wait
+//! totals, same final DB state on every server — across seeds and
+//! topologies. This suite enforces exactly that (the ISSUE's acceptance
+//! criterion), plus:
 //!
 //! * end-to-end coverage of the MAP misroute/redirect path
 //!   (`misroute_prob > 0`), previously untested;
@@ -18,6 +20,8 @@
 //! of its determinism contract, while point accesses are fully
 //! deterministic (see `src/simnet/README.md`, "Engine determinism").
 
+use elia::baselines::{BaselineConfig, BaselineMode, BaselineReport, BaselineSim};
+use elia::cluster::{ClusterConfig, ClusterReport, ClusterSim};
 use elia::conveyor::{ConveyorConfig, ConveyorReport, ConveyorSim};
 use elia::db::{BindSlots, Bindings, Db, Key, Value};
 use elia::simnet::clients::ClientsConfig;
@@ -323,6 +327,138 @@ fn misroute_redirect_end_to_end() {
     for threads in alt_thread_counts() {
         let (r, _) = run_store(spec(threads, 0.25), Box::new(MixGen { global_ratio: 0.2 }));
         assert_identical(&dirty, &r, &format!("misroute threads={threads}"));
+    }
+}
+
+// ---- ClusterSim / BaselineSim on the window engine (ISSUE 3) ----
+
+/// Mixed cluster workload: local point writes, multi-statement writes
+/// with a derived (Zipf-hot) key, and read-only views — exercises the
+/// single-shard, 2PC and scatter paths plus the sharded lock table.
+struct ClusterMixGen;
+
+impl OpGenerator for ClusterMixGen {
+    fn next_op(&mut self, rng: &mut Rng, _site: usize, _n: usize) -> Operation {
+        let cid = rng.range(0, N_CARTS as usize) as i64;
+        match rng.range(0, 4) {
+            0 | 1 => op(0, cid),
+            2 => op(1, cid),
+            _ => op(2, cid),
+        }
+    }
+}
+
+/// Bitwise signature of a cluster run: metrics plus event counts,
+/// lock-wait totals, lock-table high-water mark and utilizations.
+fn cluster_sig(r: &ClusterReport) -> Vec<u64> {
+    let mut v = metrics_sig(&r.metrics);
+    v.push(r.events);
+    v.push(r.lock_waits);
+    v.push(r.lock_entries as u64);
+    v.push(r.lock_entries_peak as u64);
+    v.extend(r.utilization.iter().map(|u| u.to_bits()));
+    v
+}
+
+fn baseline_sig(r: &BaselineReport) -> Vec<u64> {
+    let mut v = metrics_sig(&r.metrics);
+    v.push(r.events);
+    v.extend(r.utilization.iter().map(|u| u.to_bits()));
+    v
+}
+
+/// Acceptance criterion: `ClusterSim` on the window engine — seeds ×
+/// {lan4, wan3} × {1, 2, all} threads produce bitwise-equal metrics,
+/// event counts and lock-wait totals.
+#[test]
+fn cluster_thread_count_invariant() {
+    for (name, topo) in [("lan4", Topology::lan(4)), ("wan3", Topology::wan(3))] {
+        for seed in [0xC1B5u64, 11, 77] {
+            let run = |threads: usize| {
+                let app = store_app();
+                let cfg = ClusterConfig {
+                    service: ServiceModel::default(), // jittered: exercises RNG streams
+                    warmup: VTime::from_secs(1),
+                    horizon: VTime::from_secs(6),
+                    seed,
+                    parallel: threads,
+                    ..Default::default()
+                };
+                ClusterSim::new(
+                    &app,
+                    topo.clone(),
+                    ClientsConfig { n: 24, think_ms: 10.0, seed, ..Default::default() },
+                    cfg,
+                    Box::new(ClusterMixGen),
+                )
+                .run()
+            };
+            let base = run(1);
+            assert!(
+                base.metrics.completed > 100,
+                "cluster {name}/{seed}: too few completions ({})",
+                base.metrics.completed
+            );
+            assert!(base.lock_waits > 0, "cluster {name}/{seed}: no lock contention seen");
+            for threads in alt_thread_counts() {
+                let r = run(threads);
+                assert_eq!(
+                    cluster_sig(&base),
+                    cluster_sig(&r),
+                    "cluster differs: {name} seed={seed} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance criterion: `BaselineSim` on the window engine — seeds ×
+/// topologies × {1, 2, all} threads, both baseline modes (the
+/// centralized single group and the read-only replica fan-out).
+#[test]
+fn baseline_thread_count_invariant() {
+    let topos = [
+        ("lan4", Topology::lan(4).servers, BaselineMode::ReadOnly { n_servers: 4 }),
+        ("wan3", Topology::wan(3).servers, BaselineMode::ReadOnly { n_servers: 3 }),
+        ("wan5-central", Topology::wan_full_client(5), BaselineMode::Centralized),
+    ];
+    for (name, sites, mode) in topos {
+        for seed in [0xBA5Eu64, 13] {
+            let run = |threads: usize| {
+                let app = store_app();
+                let cfg = BaselineConfig {
+                    mode,
+                    service: ServiceModel::default(),
+                    warmup: VTime::from_secs(1),
+                    horizon: VTime::from_secs(6),
+                    seed,
+                    parallel: threads,
+                    ..BaselineConfig::centralized()
+                };
+                BaselineSim::new(
+                    &app,
+                    sites.clone(),
+                    ClientsConfig { n: 24, think_ms: 10.0, seed, ..Default::default() },
+                    cfg,
+                    Box::new(ClusterMixGen),
+                )
+                .run()
+            };
+            let base = run(1);
+            assert!(
+                base.metrics.completed > 100,
+                "baseline {name}/{seed}: too few completions ({})",
+                base.metrics.completed
+            );
+            for threads in alt_thread_counts() {
+                let r = run(threads);
+                assert_eq!(
+                    baseline_sig(&base),
+                    baseline_sig(&r),
+                    "baseline differs: {name} seed={seed} threads={threads}"
+                );
+            }
+        }
     }
 }
 
