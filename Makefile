@@ -1,10 +1,10 @@
 # Developer entry points. `make check` is the pre-PR gate (see ROADMAP.md).
 
-.PHONY: check build test test-par clippy bench bench-sim artifacts
+.PHONY: check build test test-par clippy doc bench bench-sim artifacts
 
 # Pre-PR gate: release build + tests (incl. the parallel-determinism
-# ladder) + lint, all from the rust crate.
-check: build test-par clippy
+# ladder) + lint + the rustdoc gate, all from the rust crate.
+check: build test-par clippy doc
 
 build:
 	cd rust && cargo build --release
@@ -24,6 +24,14 @@ test-par: test
 
 clippy:
 	cd rust && cargo clippy -- -D warnings
+
+# Rustdoc gate: `-D warnings` turns every rustdoc warning into an error,
+# including `missing_docs` — scoped to the `db::` and `simnet::` public
+# API via `#![cfg_attr(doc, warn(missing_docs))]` in their mod.rs — and
+# broken intra-doc links anywhere. An undocumented public item in those
+# modules fails the pre-PR gate.
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # Hot-path micro-benchmarks; writes BENCH_hotpath.json in rust/.
 bench:

@@ -72,7 +72,7 @@ fn main() {
         )
         .with_body(|ctx, args| {
             let lines = ctx.exec("read", args)?;
-            for line in &lines.rows {
+            for line in &lines {
                 if line[0].as_int() == Some(0) {
                     continue; // the cart-exists marker row
                 }

@@ -3,14 +3,45 @@
 //! unavailable offline): median of repeated batches.
 //!
 //! Besides stdout, results are written to `BENCH_hotpath.json`
-//! (`name -> ns/op`) so the perf trajectory is tracked across PRs.
+//! (`name -> ns/op`; the `allocs/op` lines record an allocation count
+//! instead of a time) so the perf trajectory is tracked across PRs.
+//!
+//! The binary runs under a counting global allocator so the borrowed
+//! read path's "allocation-free" claim is a measured number, not a code
+//! comment: `db: point SELECT allocs/op (borrowed read)` counts heap
+//! allocations per executed point SELECT including the value access.
 
 use elia::catalog::{Schema, TableSchema, ValueType};
 use elia::db::{BindSlots, Bindings, Db, Value};
 use elia::simnet::events::EventQueue;
 use elia::sqlir::parse_statement;
 use elia::util::{Rng, VTime};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// `System` allocator wrapped with an allocation counter (dealloc is
+/// uncounted: the interesting number is how often the hot path asks the
+/// allocator for memory at all).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: delegates directly to `System`; the counter has no effect on
+// the returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 struct Bench {
     results: Vec<(String, f64)>,
@@ -84,6 +115,35 @@ fn main() {
         let slots = BindSlots(vec![Value::Int(rng.range(0, 10_000) as i64)]);
         db.exec_auto_prepared(&sel, &slots).unwrap();
     });
+    // The borrowed read path end to end: execute + read the value
+    // through the lazy accessor (no Value clones), vs. the explicit
+    // to_owned() escape hatch as the owned-materialization reference.
+    bench.run("db: point SELECT + scalar read (borrowed)", 50_000, || {
+        let slots = BindSlots(vec![Value::Int(rng.range(0, 10_000) as i64)]);
+        let r = db.exec_auto_prepared(&sel, &slots).unwrap();
+        assert!(r.scalar().is_some());
+    });
+    bench.run("db: point SELECT + to_owned() (escape hatch)", 50_000, || {
+        let slots = BindSlots(vec![Value::Int(rng.range(0, 10_000) as i64)]);
+        let r = db.exec_auto_prepared(&sel, &slots).unwrap();
+        assert!(!std::hint::black_box(r.to_owned()).is_empty());
+    });
+    // Allocation count of one borrowed point SELECT (execute + scalar
+    // read). The remaining allocations are the point key, the handle
+    // vector and the two lock-table entries — zero are value clones;
+    // tests/prepared_equivalence.rs asserts the clone count separately.
+    {
+        let slots = BindSlots(vec![Value::Int(4242)]);
+        const N: u64 = 10_000;
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..N {
+            let r = db.exec_auto_prepared(&sel, &slots).unwrap();
+            assert!(std::hint::black_box(r.scalar()).is_some());
+        }
+        let per_op = (ALLOCS.load(Ordering::Relaxed) - a0) as f64 / N as f64;
+        println!("{:<46} {per_op:>12.1} allocs/op", "db: point SELECT allocs/op (borrowed read)");
+        bench.record("db: point SELECT allocs/op (borrowed read)", per_op);
+    }
     bench.run("db: point UPDATE (serializable txn)", 50_000, || {
         let slots = BindSlots(vec![Value::Int(rng.range(0, 10_000) as i64)]);
         db.exec_auto_prepared(&upd, &slots).unwrap();

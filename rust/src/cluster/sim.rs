@@ -22,7 +22,7 @@
 //! The virtual row-lock table is *sharded by data shard*: every
 //! reservation `(table, key-hash)` from [`ShardDemand`] belongs to
 //! exactly one partition, so each server group owns the reservations for
-//! its own shard (see [`LockShard`]). Acquisition is an explicit event
+//! its own shard (the private `LockShard`). Acquisition is an explicit event
 //! at the owning shard — the coordinator reserves its local keys when
 //! the operation arrives, participants reserve theirs when the 2PC
 //! prepare reaches them — and every reservation is *released* (and its

@@ -34,7 +34,7 @@
 //! for the full argument and `tests/parallel_determinism.rs` for the
 //! enforcement).
 //!
-//! The token itself travels *inside* the [`Ev::TokenArrive`] event, just
+//! The token itself travels *inside* the (private) `Ev::TokenArrive` event, just
 //! like the real protocol: exactly one group ever owns it, so global-op
 //! appends need no shared state.
 

@@ -10,13 +10,17 @@
 //!
 //! Storage shares rows via `Arc`: reads hand out refcounted handles and
 //! never deep-copy a row; a write clones the row once when it builds the
-//! new image (copy-on-write).
+//! new image (copy-on-write). Since this PR, reads also never clone a
+//! `Value`: SELECTs return a borrowed [`ResultSet`] (row handles plus
+//! the prepared projection, resolved lazily) instead of materializing
+//! owned rows — see [`super::result`].
 
 use super::lockmgr::{Acquired, LockManager, LockMode, LockTarget, TxnId};
 use super::prepared::{
-    eval_cpred, eval_cscalar, BindSlots, CItem, PDelete, PInsert, PSelect, PUpdate,
+    eval_cpred, eval_cscalar, BindSlots, CItem, CPred, PDelete, PInsert, PSelect, PUpdate,
     PathTemplate, Prepared, PreparedKind, SetOp,
 };
+use super::result::ResultSet;
 use super::txn::{IsolationLevel, TxnError, TxnState};
 use super::update::{ColOp, StateUpdate, WriteRecord};
 use super::value::{numeric_arith, ArithKind, Bindings, Key, Row, Value};
@@ -25,26 +29,6 @@ use crate::sqlir::Stmt;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
-
-/// Result of executing one statement.
-#[derive(Debug, Clone, PartialEq, Default)]
-pub struct QueryResult {
-    /// Projected rows (SELECT only).
-    pub rows: Vec<Vec<Value>>,
-    /// Rows inserted/updated/deleted (DML only).
-    pub affected: usize,
-}
-
-impl QueryResult {
-    pub fn first(&self) -> Option<&Vec<Value>> {
-        self.rows.first()
-    }
-
-    /// Convenience: the single scalar of a one-row/one-col result.
-    pub fn scalar(&self) -> Option<&Value> {
-        self.rows.first().and_then(|r| r.first())
-    }
-}
 
 #[derive(Debug, Default)]
 struct TableData {
@@ -119,6 +103,8 @@ impl std::fmt::Debug for Db {
 }
 
 impl Db {
+    /// Create an empty database for `schema` (default isolation:
+    /// serializable).
     pub fn new(schema: Schema) -> Self {
         let tables =
             schema.tables().iter().map(|t| RwLock::new(TableData::new(t))).collect();
@@ -133,19 +119,23 @@ impl Db {
         }
     }
 
+    /// Set the default isolation level handed to [`begin`](Self::begin).
     pub fn with_isolation(mut self, iso: IsolationLevel) -> Self {
         self.default_isolation = iso;
         self
     }
 
+    /// The schema this database was created with.
     pub fn schema(&self) -> &Schema {
         &self.schema
     }
 
+    /// Number of committed transactions so far.
     pub fn commit_count(&self) -> u64 {
         self.commits.load(Ordering::Relaxed)
     }
 
+    /// Number of aborted transactions so far.
     pub fn abort_count(&self) -> u64 {
         self.aborts.load(Ordering::Relaxed)
     }
@@ -168,6 +158,7 @@ impl Db {
         self.begin_with(self.default_isolation)
     }
 
+    /// Begin a transaction at an explicit isolation level.
     pub fn begin_with(&self, isolation: IsolationLevel) -> TxnHandle<'_> {
         let id = self.next_txn.fetch_add(1, Ordering::SeqCst);
         TxnHandle {
@@ -182,7 +173,9 @@ impl Db {
     }
 
     /// Execute a single auto-committed statement (loader convenience).
-    pub fn exec_auto(&self, stmt: &Stmt, binds: &Bindings) -> Result<QueryResult, TxnError> {
+    /// The returned [`ResultSet`] holds `Arc` handles into the committed
+    /// snapshot, so it stays valid after the internal commit.
+    pub fn exec_auto(&self, stmt: &Stmt, binds: &Bindings) -> Result<ResultSet, TxnError> {
         let mut txn = self.begin();
         let r = txn.exec(stmt, binds)?;
         txn.commit()?;
@@ -194,7 +187,7 @@ impl Db {
         &self,
         p: &Prepared,
         slots: &BindSlots,
-    ) -> Result<QueryResult, TxnError> {
+    ) -> Result<ResultSet, TxnError> {
         let mut txn = self.begin();
         let r = txn.exec_prepared(p, slots)?;
         txn.commit()?;
@@ -304,8 +297,9 @@ impl Db {
 }
 
 /// Past this many tracked lock targets a transaction falls back to the
-/// all-shards release sweep (scans lock thousands of rows; releasing
-/// each target individually would cost more than the sweep).
+/// all-shards release sweep (a long multi-statement transaction can
+/// accumulate hundreds of point targets; releasing each individually
+/// would cost more than the sweep).
 const LOCK_TRACK_MAX: usize = 128;
 
 /// A live transaction. Dropping without commit aborts.
@@ -322,6 +316,7 @@ pub struct TxnHandle<'a> {
 }
 
 impl<'a> TxnHandle<'a> {
+    /// The transaction id (also its wait-die timestamp).
     pub fn id(&self) -> TxnId {
         self.id
     }
@@ -356,7 +351,7 @@ impl<'a> TxnHandle<'a> {
     /// Execute one statement within this transaction, compiling it on
     /// the fly (convenience path — the simulators and benches prepare
     /// once and use [`Self::exec_prepared`]).
-    pub fn exec(&mut self, stmt: &Stmt, binds: &Bindings) -> Result<QueryResult, TxnError> {
+    pub fn exec(&mut self, stmt: &Stmt, binds: &Bindings) -> Result<ResultSet, TxnError> {
         if self.done {
             return Err(TxnError::Finished);
         }
@@ -365,12 +360,15 @@ impl<'a> TxnHandle<'a> {
         self.exec_prepared(&p, &slots)
     }
 
-    /// Execute a prepared statement with positional bindings.
+    /// Execute a prepared statement with positional bindings. SELECTs
+    /// return a borrowed [`ResultSet`] — `Arc` row handles plus the
+    /// statement's projection, no value clones; the set stays a valid
+    /// snapshot across this transaction's later writes and its commit.
     pub fn exec_prepared(
         &mut self,
         p: &Prepared,
         slots: &BindSlots,
-    ) -> Result<QueryResult, TxnError> {
+    ) -> Result<ResultSet, TxnError> {
         if self.done {
             return Err(TxnError::Finished);
         }
@@ -390,16 +388,47 @@ impl<'a> TxnHandle<'a> {
     }
 
     /// Collect `(key, row)` pairs visible to this txn that match `pred`,
-    /// taking the appropriate locks. `for_write` selects X/IX vs S/IS.
-    /// Rows are returned as `Arc` handles — no deep clone.
+    /// taking X/IX write locks — the UPDATE/DELETE side, which needs
+    /// owned keys for the overlay and the redo records.
     fn select_rows(
         &mut self,
         ti: usize,
-        pred: &super::prepared::CPred,
+        pred: &CPred,
+        path: &PathTemplate,
+        slots: &BindSlots,
+    ) -> Result<Vec<(Key, Arc<Row>)>, TxnError> {
+        self.collect_rows(ti, pred, path, slots, true, |key, row| {
+            (key.clone(), Arc::clone(row))
+        })
+    }
+
+    /// Collect the row handles visible to this txn that match `pred`,
+    /// taking S/IS read locks when serializable. The read path: no `Key`
+    /// and no `Value` is ever cloned — a match costs one `Arc` bump.
+    fn select_rows_ro(
+        &mut self,
+        ti: usize,
+        pred: &CPred,
+        path: &PathTemplate,
+        slots: &BindSlots,
+    ) -> Result<Vec<Arc<Row>>, TxnError> {
+        self.collect_rows(ti, pred, path, slots, false, |_, row| Arc::clone(row))
+    }
+
+    /// Shared row-collection core of [`select_rows`](Self::select_rows) /
+    /// [`select_rows_ro`](Self::select_rows_ro): locking prelude and the
+    /// three access paths (point / index-eq / scan) with overlay
+    /// visibility. `make` builds one output entry per match while the
+    /// key is still borrowed from storage.
+    fn collect_rows<O>(
+        &mut self,
+        ti: usize,
+        pred: &CPred,
         path: &PathTemplate,
         slots: &BindSlots,
         for_write: bool,
-    ) -> Result<Vec<(Key, Arc<Row>)>, TxnError> {
+        mut make: impl FnMut(&Key, &Arc<Row>) -> O,
+    ) -> Result<Vec<O>, TxnError> {
         let db = self.db;
         let serializable = self.isolation == IsolationLevel::Serializable;
 
@@ -437,18 +466,28 @@ impl<'a> TxnHandle<'a> {
             }
         }
 
+        // No per-matched-row locks on the non-point paths: every case
+        // that used to take them already holds a *covering* table-level
+        // lock from the prelude above — scan/index writes hold table X
+        // (subsumes every row X), serializable non-point reads hold
+        // table S (conflicts with any writer's IX/X, so rows cannot
+        // change under the reader) — making per-row locks pure overhead,
+        // O(matched rows) shard-mutex work on the path this module keeps
+        // allocation-free. Multi-granularity coverage is exactly what
+        // table locks are for (see `lockmgr::LockMode::covers`).
+
         // --- Row collection (short physical read section) ---
-        let mut out: Vec<(Key, Arc<Row>)> = Vec::new();
+        let mut out: Vec<O> = Vec::new();
         {
             let table = db.tables[ti].read().unwrap();
             let state = &self.state;
-            let consider = |key: &Key,
-                            committed: Option<&Arc<Row>>,
-                            out: &mut Vec<(Key, Arc<Row>)>|
+            let mut consider = |key: &Key,
+                                committed: Option<&Arc<Row>>,
+                                out: &mut Vec<O>|
              -> Result<(), TxnError> {
                 if let Some(row) = state.visible(ti, key, committed) {
                     if eval_cpred(pred, row.as_ref(), slots).map_err(TxnError::Sql)? {
-                        out.push((key.clone(), Arc::clone(row)));
+                        out.push(make(key, row));
                     }
                 }
                 Ok(())
@@ -471,7 +510,7 @@ impl<'a> TxnHandle<'a> {
                     // indexed column was updated inside this transaction.
                     if let Some(ov) = state.overlay_table(ti) {
                         for (key, v) in ov {
-                            if bucket.map_or(false, |b| b.contains(key)) {
+                            if bucket.is_some_and(|b| b.contains(key)) {
                                 continue; // already considered via the index
                             }
                             if let Some(row) = v {
@@ -479,7 +518,7 @@ impl<'a> TxnHandle<'a> {
                                     && eval_cpred(pred, row.as_ref(), slots)
                                         .map_err(TxnError::Sql)?
                                 {
-                                    out.push((key.clone(), Arc::clone(row)));
+                                    out.push(make(key, row));
                                 }
                             }
                         }
@@ -498,7 +537,7 @@ impl<'a> TxnHandle<'a> {
                                 if eval_cpred(pred, row.as_ref(), slots)
                                     .map_err(TxnError::Sql)?
                                 {
-                                    out.push((key.clone(), Arc::clone(row)));
+                                    out.push(make(key, row));
                                 }
                             }
                         }
@@ -506,23 +545,15 @@ impl<'a> TxnHandle<'a> {
                 }
             }
         }
-
-        // Row locks for matched rows under non-point paths.
-        if (serializable || for_write) && point_key.is_none() {
-            let mode = if for_write { LockMode::X } else { LockMode::S };
-            for (key, _) in &out {
-                self.lock(LockTarget::row(ti, key), mode)?;
-            }
-        }
         Ok(out)
     }
 
-    fn exec_select(&mut self, s: &PSelect, slots: &BindSlots) -> Result<QueryResult, TxnError> {
-        let mut matched = self.select_rows(s.ti, &s.where_, &s.path, slots, false)?;
+    fn exec_select(&mut self, s: &PSelect, slots: &BindSlots) -> Result<ResultSet, TxnError> {
+        let mut matched = self.select_rows_ro(s.ti, &s.where_, &s.path, slots)?;
 
         // ORDER BY before LIMIT.
         if let Some((ci, desc)) = s.order_by {
-            matched.sort_by(|(_, a), (_, b)| {
+            matched.sort_by(|a, b| {
                 let ord = a[ci].total_cmp(&b[ci]);
                 if desc {
                     ord.reverse()
@@ -531,11 +562,12 @@ impl<'a> TxnHandle<'a> {
                 }
             });
         } else {
-            // Deterministic output independent of hash-map iteration order.
-            matched.sort_by(|(a, _), (b, _)| {
-                a.0.iter()
-                    .zip(b.0.iter())
-                    .map(|(x, y)| x.total_cmp(y))
+            // Deterministic output independent of hash-map iteration
+            // order: sort by primary-key value, read from the rows
+            // themselves (the result carries no keys).
+            matched.sort_by(|a, b| {
+                s.pk.iter()
+                    .map(|&i| a[i].total_cmp(&b[i]))
                     .find(|o| !o.is_eq())
                     .unwrap_or(std::cmp::Ordering::Equal)
             });
@@ -544,7 +576,8 @@ impl<'a> TxnHandle<'a> {
             matched.truncate(n as usize);
         }
 
-        // Projection / aggregation.
+        // Aggregation computes its single row; plain projections stay
+        // borrowed (handles + the prepared statement's index list).
         if s.has_agg {
             let mut row_out = Vec::with_capacity(s.items.len());
             for item in &s.items {
@@ -553,12 +586,12 @@ impl<'a> TxnHandle<'a> {
                     CItem::Col(ci) => {
                         // Non-aggregated column with aggregates: take first row
                         // (the subset of SQL our workloads need).
-                        matched.first().map(|(_, r)| r[*ci].clone()).unwrap_or(Value::Null)
+                        matched.first().map(|r| r[*ci].clone()).unwrap_or(Value::Null)
                     }
                     CItem::Max(ci) | CItem::Min(ci) => {
                         let mut vals: Vec<&Value> = matched
                             .iter()
-                            .map(|(_, r)| &r[*ci])
+                            .map(|r| &r[*ci])
                             .filter(|v| !matches!(v, Value::Null))
                             .collect();
                         vals.sort_by(|a, b| a.total_cmp(b));
@@ -574,7 +607,7 @@ impl<'a> TxnHandle<'a> {
                         let mut float_sum = 0.0;
                         let mut any_float = false;
                         let mut any = false;
-                        for (_, r) in &matched {
+                        for r in &matched {
                             match &r[*ci] {
                                 Value::Int(i) => {
                                     int_sum += i;
@@ -599,31 +632,13 @@ impl<'a> TxnHandle<'a> {
                 };
                 row_out.push(v);
             }
-            return Ok(QueryResult { rows: vec![row_out], affected: 0 });
+            return Ok(ResultSet::computed(row_out));
         }
 
-        let rows = if s.items.is_empty() {
-            // SELECT *: the result owns its rows, so this is the one
-            // place a read still copies values.
-            matched.into_iter().map(|(_, r)| (*r).clone()).collect()
-        } else {
-            matched
-                .into_iter()
-                .map(|(_, r)| {
-                    s.items
-                        .iter()
-                        .map(|item| match item {
-                            CItem::Col(ci) => r[*ci].clone(),
-                            _ => unreachable!("aggregates handled above"),
-                        })
-                        .collect()
-                })
-                .collect()
-        };
-        Ok(QueryResult { rows, affected: 0 })
+        Ok(ResultSet::rows(matched, s.proj.clone()))
     }
 
-    fn exec_insert(&mut self, p: &PInsert, slots: &BindSlots) -> Result<QueryResult, TxnError> {
+    fn exec_insert(&mut self, p: &PInsert, slots: &BindSlots) -> Result<ResultSet, TxnError> {
         let db = self.db;
         let ti = p.ti;
         let schema = db.schema.table(ti);
@@ -658,12 +673,12 @@ impl<'a> TxnHandle<'a> {
         let row = Arc::new(row);
         self.state.overlay_put(ti, key.clone(), Some(Arc::clone(&row)));
         self.state.update.push(WriteRecord::Insert { table: ti, key, row });
-        Ok(QueryResult { rows: vec![], affected: 1 })
+        Ok(ResultSet::write(1))
     }
 
-    fn exec_update(&mut self, p: &PUpdate, slots: &BindSlots) -> Result<QueryResult, TxnError> {
+    fn exec_update(&mut self, p: &PUpdate, slots: &BindSlots) -> Result<ResultSet, TxnError> {
         let db = self.db;
-        let matched = self.select_rows(p.ti, &p.where_, &p.path, slots, true)?;
+        let matched = self.select_rows(p.ti, &p.where_, &p.path, slots)?;
         let schema = db.schema.table(p.ti);
         let mut affected = 0;
         for (key, old_row) in matched {
@@ -709,17 +724,17 @@ impl<'a> TxnHandle<'a> {
             self.state.update.push(WriteRecord::Update { table: p.ti, key, cols });
             affected += 1;
         }
-        Ok(QueryResult { rows: vec![], affected })
+        Ok(ResultSet::write(affected))
     }
 
-    fn exec_delete(&mut self, p: &PDelete, slots: &BindSlots) -> Result<QueryResult, TxnError> {
-        let matched = self.select_rows(p.ti, &p.where_, &p.path, slots, true)?;
+    fn exec_delete(&mut self, p: &PDelete, slots: &BindSlots) -> Result<ResultSet, TxnError> {
+        let matched = self.select_rows(p.ti, &p.where_, &p.path, slots)?;
         let affected = matched.len();
         for (key, _) in matched {
             self.state.overlay_put(p.ti, key.clone(), None);
             self.state.update.push(WriteRecord::Delete { table: p.ti, key });
         }
-        Ok(QueryResult { rows: vec![], affected })
+        Ok(ResultSet::write(affected))
     }
 
     /// Commit: apply buffered writes to storage, then release locks.
@@ -850,7 +865,7 @@ mod tests {
         seed_items(&db, 3);
         let q = parse_statement("SELECT TITLE, STOCK FROM ITEMS WHERE ID = ?id").unwrap();
         let r = db.exec_auto(&q, &b(&[("id", Value::Int(1))])).unwrap();
-        assert_eq!(r.rows, vec![vec![Value::Str("book1".into()), Value::Int(100)]]);
+        assert_eq!(r.to_owned(), vec![vec![Value::Str("book1".into()), Value::Int(100)]]);
     }
 
     #[test]
@@ -866,7 +881,7 @@ mod tests {
         }
         // Missing key: empty result, same prepared statement.
         let r = db.exec_auto_prepared(&q, &BindSlots(vec![Value::Int(99)])).unwrap();
-        assert!(r.rows.is_empty());
+        assert!(r.is_empty());
     }
 
     #[test]
@@ -919,7 +934,7 @@ mod tests {
         assert_eq!(txn.exec(&q, &Bindings::new()).unwrap().scalar(), Some(&Value::Int(1)));
         txn.abort();
         // After abort: nothing.
-        assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().rows.len(), 0);
+        assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().len(), 0);
     }
 
     #[test]
@@ -951,7 +966,7 @@ mod tests {
         assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().scalar(), Some(&Value::Float(12.5)));
         let q = parse_statement("SELECT ID FROM ITEMS ORDER BY COST DESC LIMIT 2").unwrap();
         let r = db.exec_auto(&q, &Bindings::new()).unwrap();
-        assert_eq!(r.rows, vec![vec![Value::Int(3)], vec![Value::Int(2)]]);
+        assert_eq!(r.to_owned(), vec![vec![Value::Int(3)], vec![Value::Int(2)]]);
     }
 
     #[test]
@@ -960,11 +975,11 @@ mod tests {
         seed_items(&db, 10);
         let q = parse_statement("SELECT ID FROM ITEMS WHERE TITLE = ?t").unwrap();
         let r = db.exec_auto(&q, &b(&[("t", Value::Str("book7".into()))])).unwrap();
-        assert_eq!(r.rows, vec![vec![Value::Int(7)]]);
+        assert_eq!(r.to_owned(), vec![vec![Value::Int(7)]]);
         let d = parse_statement("DELETE FROM ITEMS WHERE ID = 7").unwrap();
         db.exec_auto(&d, &Bindings::new()).unwrap();
         let r = db.exec_auto(&q, &b(&[("t", Value::Str("book7".into()))])).unwrap();
-        assert!(r.rows.is_empty());
+        assert!(r.is_empty());
     }
 
     #[test]
@@ -981,14 +996,14 @@ mod tests {
         let mut txn = db.begin();
         txn.exec(&u, &b(&[("t", Value::Str("renamed".into()))])).unwrap();
         let r = txn.exec(&q, &b(&[("t", Value::Str("renamed".into()))])).unwrap();
-        assert_eq!(r.rows, vec![vec![Value::Int(1)]], "new value must be visible in-txn");
+        assert_eq!(r.to_owned(), vec![vec![Value::Int(1)]], "new value must be visible in-txn");
         let r = txn.exec(&q, &b(&[("t", Value::Str("book1".into()))])).unwrap();
-        assert!(r.rows.is_empty(), "old value must no longer match in-txn");
+        assert!(r.is_empty(), "old value must no longer match in-txn");
         txn.commit().unwrap();
 
         // After commit the committed index agrees.
         let r = db.exec_auto(&q, &b(&[("t", Value::Str("renamed".into()))])).unwrap();
-        assert_eq!(r.rows, vec![vec![Value::Int(1)]]);
+        assert_eq!(r.to_owned(), vec![vec![Value::Int(1)]]);
     }
 
     #[test]
@@ -1003,8 +1018,46 @@ mod tests {
         let mut txn = db.begin();
         txn.exec(&ins, &Bindings::new()).unwrap();
         let r = txn.exec(&q, &Bindings::new()).unwrap();
-        assert_eq!(r.rows, vec![vec![Value::Int(7)]]);
+        assert_eq!(r.to_owned(), vec![vec![Value::Int(7)]]);
         txn.commit().unwrap();
+    }
+
+    #[test]
+    fn select_star_is_borrowed_and_full_width() {
+        let db = test_db();
+        seed_items(&db, 3);
+        let q = parse_statement("SELECT * FROM ITEMS WHERE ID = 1").unwrap();
+        let r = db.exec_auto(&q, &Bindings::new()).unwrap();
+        assert_eq!(r.len(), 1);
+        let row = r.row(0);
+        assert_eq!(row.len(), 4, "SELECT * projects every storage column");
+        assert_eq!(row[1], Value::Str("book1".into()));
+        assert_eq!(row[2], Value::Int(100));
+    }
+
+    #[test]
+    fn result_set_outlives_txn_as_a_snapshot() {
+        // A held ResultSet keeps reading the values it matched, across
+        // later writes in the same transaction (copy-on-write overlay)
+        // and across the commit (storage swaps in new Arcs).
+        let db = test_db();
+        seed_items(&db, 1);
+        let q = parse_statement("SELECT STOCK FROM ITEMS WHERE ID = 0").unwrap();
+        let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK - 40 WHERE ID = 0").unwrap();
+        let mut txn = db.begin();
+        let before = txn.exec(&q, &Bindings::new()).unwrap();
+        txn.exec(&u, &Bindings::new()).unwrap();
+        let after = txn.exec(&q, &Bindings::new()).unwrap();
+        txn.commit().unwrap();
+        assert_eq!(before.scalar(), Some(&Value::Int(100)), "snapshot preserved");
+        assert_eq!(after.scalar(), Some(&Value::Int(60)), "overlay image visible");
+        assert_eq!(
+            db.exec_auto(&q, &Bindings::new()).unwrap().scalar(),
+            Some(&Value::Int(60))
+        );
+        // Both handles still read their respective snapshots post-commit.
+        assert_eq!(before.scalar(), Some(&Value::Int(100)));
+        assert_eq!(after.scalar(), Some(&Value::Int(60)));
     }
 
     #[test]

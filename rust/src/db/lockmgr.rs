@@ -85,6 +85,7 @@ impl LockMode {
 /// serializability is preserved), and vanishingly rare at 64 bits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LockTarget {
+    /// Whole-table lock (intent and scan modes).
     Table(usize),
     /// Row lock: `(table id, precomputed key hash)`.
     Row(usize, u64),
@@ -97,12 +98,23 @@ impl LockTarget {
     }
 }
 
+/// Why a lock acquisition failed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LockError {
     /// Wait-die chose this (younger) transaction as the victim.
-    Aborted { txn: TxnId, target: String },
+    Aborted {
+        /// The aborted transaction.
+        txn: TxnId,
+        /// Rendered lock target (diagnostics).
+        target: String,
+    },
     /// Lock wait exceeded the configured timeout (used as a backstop).
-    Timeout { txn: TxnId, target: String },
+    Timeout {
+        /// The timed-out transaction.
+        txn: TxnId,
+        /// Rendered lock target (diagnostics).
+        target: String,
+    },
 }
 
 impl fmt::Display for LockError {
@@ -162,6 +174,7 @@ impl Default for LockManager {
 }
 
 impl LockManager {
+    /// A lock table with `nshards` mutex shards (min 1).
     pub fn new(nshards: usize) -> Self {
         LockManager {
             shards: (0..nshards.max(1)).map(|_| (Mutex::new(Shard::default()), Condvar::new())).collect(),
@@ -170,6 +183,7 @@ impl LockManager {
         }
     }
 
+    /// Set the lock-wait timeout backstop.
     pub fn with_timeout(mut self, t: std::time::Duration) -> Self {
         self.timeout = t;
         self

@@ -28,19 +28,24 @@
 //! The hot path is **prepared-first**: statements are compiled once
 //! ([`prepared::Prepared`]) and executed with positional
 //! [`prepared::BindSlots`]; rows are `Arc`-shared so reads never deep-
-//! copy. See `src/db/README.md` for the architecture.
+//! copy, and SELECTs return the borrowed [`result::ResultSet`] — values
+//! are resolved lazily and never cloned. See `src/db/README.md` and the
+//! top-level `ARCHITECTURE.md` for the architecture.
+#![cfg_attr(doc, warn(missing_docs))]
 
 pub mod engine;
 pub mod lockmgr;
 pub mod plan;
 pub mod prepared;
+pub mod result;
 pub mod txn;
 pub mod update;
 pub mod value;
 
-pub use engine::{Db, QueryResult, TxnHandle};
+pub use engine::{Db, TxnHandle};
 pub use lockmgr::{LockManager, LockMode};
 pub use prepared::{BindSlots, Prepared};
+pub use result::{ResultSet, RowRef};
 pub use txn::{IsolationLevel, TxnError};
 pub use update::{StateUpdate, WriteRecord};
-pub use value::{Bindings, Key, Row, Value};
+pub use value::{value_clone_count, Bindings, Key, Row, Value};

@@ -27,7 +27,12 @@ pub enum AccessPath {
     /// Full primary key pinned to concrete values.
     Point(Key),
     /// Equality on a secondary-indexed column.
-    IndexEq { col: usize, value: Value },
+    IndexEq {
+        /// Indexed column.
+        col: usize,
+        /// Concrete probe value.
+        value: Value,
+    },
     /// Full table scan.
     Scan,
 }

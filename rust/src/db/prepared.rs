@@ -32,9 +32,13 @@ use crate::sqlir::{CmpOp, Pred, Scalar, SelectItem, Stmt};
 /// Positional parameter values for one execution of a [`Prepared`]
 /// statement. Slot `i` corresponds to `prepared.params()[i]`.
 #[derive(Debug, Clone, Default, PartialEq)]
-pub struct BindSlots(pub Vec<Value>);
+pub struct BindSlots(
+    /// Values in slot order.
+    pub Vec<Value>,
+);
 
 impl BindSlots {
+    /// Wrap already-ordered slot values.
     pub fn new(values: Vec<Value>) -> Self {
         BindSlots(values)
     }
@@ -54,9 +58,25 @@ pub enum CScalar {
     Slot(usize),
     /// Column of the statement's table, resolved to its index.
     Col(usize),
+    /// Sum of two sub-expressions.
     Add(Box<CScalar>, Box<CScalar>),
+    /// Difference of two sub-expressions.
     Sub(Box<CScalar>, Box<CScalar>),
+    /// Product of two sub-expressions.
     Mul(Box<CScalar>, Box<CScalar>),
+}
+
+/// The right-hand side of a comparison as a *borrowed* value, when the
+/// expression is a literal or a bind slot — the shapes every workload
+/// predicate uses. Lets [`eval_cpred`] compare without cloning a
+/// [`Value`] per row, which is what keeps the scan/index read path free
+/// of per-row clones.
+fn scalar_ref<'a>(s: &'a CScalar, slots: &'a BindSlots) -> Option<&'a Value> {
+    match s {
+        CScalar::Lit(v) => Some(v),
+        CScalar::Slot(i) => slots.0.get(*i),
+        _ => None,
+    }
 }
 
 /// Evaluate a compiled scalar. `row` may be `None` for row-free contexts
@@ -85,17 +105,32 @@ pub fn eval_cscalar(s: &CScalar, row: Option<&Row>, slots: &BindSlots) -> Result
 /// A predicate with resolved columns and slots.
 #[derive(Debug, Clone, PartialEq)]
 pub enum CPred {
+    /// Matches every row (no WHERE clause).
     True,
-    Cmp { col: usize, op: CmpOp, rhs: CScalar },
+    /// Single comparison.
+    Cmp {
+        /// Left-hand column, resolved to its index.
+        col: usize,
+        /// Comparison operator.
+        op: CmpOp,
+        /// Right-hand expression.
+        rhs: CScalar,
+    },
+    /// Conjunction.
     And(Vec<CPred>),
+    /// Disjunction.
     Or(Vec<CPred>),
 }
 
-/// Evaluate a compiled predicate against a row.
+/// Evaluate a compiled predicate against a row. Literal/slot right-hand
+/// sides are compared by reference — no value is cloned per row.
 pub fn eval_cpred(p: &CPred, row: &Row, slots: &BindSlots) -> Result<bool, String> {
     match p {
         CPred::True => Ok(true),
         CPred::Cmp { col, op, rhs } => {
+            if let Some(rv) = scalar_ref(rhs, slots) {
+                return Ok(row[*col].sql_cmp(*op, rv));
+            }
             let rv = eval_cscalar(rhs, Some(row), slots)?;
             Ok(row[*col].sql_cmp(*op, &rv))
         }
@@ -128,6 +163,8 @@ pub enum ValueSrc {
 }
 
 impl ValueSrc {
+    /// Resolve the concrete (owned, type-coerced) value for one
+    /// execution.
     pub fn value(&self, slots: &BindSlots) -> Result<Value, String> {
         match self {
             ValueSrc::Lit(v) => Ok(v.clone()),
@@ -143,7 +180,12 @@ pub enum PathTemplate {
     /// Full primary key pinned; one source per PK column, in PK order.
     Point(Vec<ValueSrc>),
     /// Equality on a secondary-indexed column.
-    IndexEq { col: usize, src: ValueSrc },
+    IndexEq {
+        /// Indexed column.
+        col: usize,
+        /// Probe value source.
+        src: ValueSrc,
+    },
     /// Full table scan.
     Scan,
 }
@@ -167,35 +209,62 @@ pub enum SetOp {
     /// `c = c + expr` / `c = c - expr` with a row-independent `expr`:
     /// recorded as a logical delta so replicated replay merges with the
     /// replica's own value (see [`crate::db::update::ColOp::Add`]).
-    Delta { expr: CScalar, negate: bool },
+    Delta {
+        /// The row-free delta expression.
+        expr: CScalar,
+        /// True for the `c - expr` form.
+        negate: bool,
+    },
 }
 
 /// Compiled SELECT.
 #[derive(Debug, Clone)]
 pub struct PSelect {
+    /// Table index.
     pub ti: usize,
+    /// Compiled WHERE predicate.
     pub where_: CPred,
+    /// Access-path template.
     pub path: PathTemplate,
     /// Resolved projection; empty means `SELECT *`.
     pub items: Vec<CItem>,
+    /// Pure-column projection indices resolved once at prepare time and
+    /// `Arc`-shared with every [`ResultSet`](crate::db::ResultSet) this
+    /// statement produces (borrowed result materialization — no index
+    /// list is built or copied per execution). `None` for `SELECT *` and
+    /// for aggregate queries, which compute their single row instead.
+    pub proj: Option<std::sync::Arc<[usize]>>,
+    /// Primary-key column indices — the read path's deterministic output
+    /// order is by PK value, resolved from the row itself so results
+    /// never carry cloned keys.
+    pub pk: Vec<usize>,
+    /// True when any projection item aggregates.
     pub has_agg: bool,
+    /// `ORDER BY` column index and descending flag.
     pub order_by: Option<(usize, bool)>,
+    /// `LIMIT` row count.
     pub limit: Option<u64>,
 }
 
 /// A resolved projection item.
 #[derive(Debug, Clone, PartialEq)]
 pub enum CItem {
+    /// Plain column, by index.
     Col(usize),
+    /// `COUNT(*)`.
     Count,
+    /// `MAX(col)`.
     Max(usize),
+    /// `MIN(col)`.
     Min(usize),
+    /// `SUM(col)`.
     Sum(usize),
 }
 
 /// Compiled INSERT.
 #[derive(Debug, Clone)]
 pub struct PInsert {
+    /// Table index.
     pub ti: usize,
     /// `(column index, row-free value expression)` pairs.
     pub sets: Vec<(usize, CScalar)>,
@@ -206,26 +275,37 @@ pub struct PInsert {
 /// Compiled UPDATE.
 #[derive(Debug, Clone)]
 pub struct PUpdate {
+    /// Table index.
     pub ti: usize,
+    /// Compiled WHERE predicate.
     pub where_: CPred,
+    /// Access-path template.
     pub path: PathTemplate,
+    /// `(column index, compiled SET action)` pairs.
     pub sets: Vec<(usize, SetOp)>,
 }
 
 /// Compiled DELETE.
 #[derive(Debug, Clone)]
 pub struct PDelete {
+    /// Table index.
     pub ti: usize,
+    /// Compiled WHERE predicate.
     pub where_: CPred,
+    /// Access-path template.
     pub path: PathTemplate,
 }
 
 /// The statement kinds in compiled form.
 #[derive(Debug, Clone)]
 pub enum PreparedKind {
+    /// Compiled SELECT.
     Select(PSelect),
+    /// Compiled INSERT.
     Insert(PInsert),
+    /// Compiled UPDATE.
     Update(PUpdate),
+    /// Compiled DELETE.
     Delete(PDelete),
 }
 
@@ -235,6 +315,7 @@ pub enum PreparedKind {
 #[derive(Debug, Clone)]
 pub struct Prepared {
     params: Vec<String>,
+    /// The compiled statement body.
     pub kind: PreparedKind,
 }
 
@@ -276,12 +357,31 @@ impl Prepared {
                     )),
                     None => None,
                 };
+                let has_agg = s.items.iter().any(|i| i.is_aggregate());
+                // Pure-column projections resolve to an index list once,
+                // shared (`Arc`) with every ResultSet this statement
+                // produces.
+                let proj: Option<std::sync::Arc<[usize]>> = if has_agg || items.is_empty() {
+                    None
+                } else {
+                    Some(
+                        items
+                            .iter()
+                            .map(|i| match i {
+                                CItem::Col(ci) => *ci,
+                                _ => unreachable!("no aggregates when has_agg is false"),
+                            })
+                            .collect(),
+                    )
+                };
                 PreparedKind::Select(PSelect {
                     ti,
                     where_: cpred(&s.where_, ts, &params)?,
                     path: plan_template(&s.where_, ts, &params),
-                    has_agg: s.items.iter().any(|i| i.is_aggregate()),
+                    has_agg,
                     items,
+                    proj,
+                    pk: ts.pk_indices(),
                     order_by,
                     limit: s.limit,
                 })

@@ -1,0 +1,319 @@
+//! Borrowed result materialization: the allocation-free read path.
+//!
+//! The engine used to materialize every SELECT into an owned
+//! `QueryResult { rows: Vec<Vec<Value>> }`, cloning each projected value
+//! out of `Arc<Row>` storage — the last per-row allocation left on the
+//! read hot path after the prepared-execution pipeline (PR 1) removed
+//! per-call planning and row deep-clones. [`ResultSet`] replaces it with
+//! a *borrowed* form:
+//!
+//! * matched rows are held as `Arc<Row>` handles into committed storage
+//!   (or the transaction overlay) — taking a handle is a refcount bump,
+//! * the projection is the prepared statement's column-index list,
+//!   shared by `Arc` with the [`Prepared`](super::prepared::Prepared)
+//!   statement — cloning it per execution is refcount-cheap,
+//! * values are resolved lazily through [`RowRef`] accessors and never
+//!   cloned; aggregates, which inherently *compute* values, carry their
+//!   single computed row inline.
+//!
+//! Because the handles are `Arc`s (not lifetimes), a `ResultSet` is
+//! `'static`: it can outlive its transaction and it keeps reading the
+//! snapshot it was built from — later writes in the same transaction go
+//! through copy-on-write images, and commits swap new `Arc`s into
+//! storage, so held handles are never mutated
+//! (`rust/tests/prepared_equivalence.rs` pins this as a property).
+//!
+//! Callers that genuinely need owned rows use the explicit
+//! [`ResultSet::to_owned`] escape hatch; write statements keep their
+//! `affected`-count shape.
+
+use super::value::{Row, Value};
+use std::fmt;
+use std::sync::Arc;
+
+/// The result of executing one statement: borrowed rows for SELECT, an
+/// affected-row count for DML. See the [module docs](self) for the
+/// design.
+#[derive(Clone, Default)]
+pub struct ResultSet {
+    repr: Repr,
+    /// Rows inserted/updated/deleted (DML only; 0 for SELECT).
+    pub affected: usize,
+}
+
+/// Internal row storage of a [`ResultSet`].
+#[derive(Clone)]
+enum Repr {
+    /// Handles into storage/overlay plus the lazy projection
+    /// (`None` = `SELECT *`: every storage column in schema order).
+    Rows { rows: Vec<Arc<Row>>, cols: Option<Arc<[usize]>> },
+    /// The single locally-computed row of an aggregate query (the one
+    /// result shape that inherently owns its values).
+    Computed(Row),
+}
+
+impl Default for Repr {
+    fn default() -> Self {
+        // `Vec::new` does not allocate: DML results are allocation-free.
+        Repr::Rows { rows: Vec::new(), cols: None }
+    }
+}
+
+impl ResultSet {
+    /// Borrowed SELECT result: row handles plus the prepared statement's
+    /// projection indices.
+    pub(crate) fn rows(rows: Vec<Arc<Row>>, cols: Option<Arc<[usize]>>) -> Self {
+        ResultSet { repr: Repr::Rows { rows, cols }, affected: 0 }
+    }
+
+    /// Aggregate result: one locally-computed row.
+    pub(crate) fn computed(row: Row) -> Self {
+        ResultSet { repr: Repr::Computed(row), affected: 0 }
+    }
+
+    /// DML result: no rows, `n` affected.
+    pub(crate) fn write(n: usize) -> Self {
+        ResultSet { repr: Repr::default(), affected: n }
+    }
+
+    /// Number of result rows. Costs nothing — emptiness/length checks
+    /// never touch values.
+    pub fn len(&self) -> usize {
+        match &self.repr {
+            Repr::Rows { rows, .. } => rows.len(),
+            Repr::Computed(_) => 1,
+        }
+    }
+
+    /// True when the result has no rows (see [`len`](Self::len)).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `i`-th result row, or `None` past the end.
+    pub fn get(&self, i: usize) -> Option<RowRef<'_>> {
+        match &self.repr {
+            Repr::Rows { rows, cols } => {
+                rows.get(i).map(|r| RowRef { row: r.as_ref(), cols: cols.as_deref() })
+            }
+            Repr::Computed(row) => (i == 0).then_some(RowRef { row, cols: None }),
+        }
+    }
+
+    /// The `i`-th result row; panics past the end (indexing convenience
+    /// for tests and transaction bodies).
+    pub fn row(&self, i: usize) -> RowRef<'_> {
+        self.get(i).unwrap_or_else(|| panic!("row {i} out of bounds (len {})", self.len()))
+    }
+
+    /// The first row, if any.
+    pub fn first(&self) -> Option<RowRef<'_>> {
+        self.get(0)
+    }
+
+    /// Convenience: the single scalar of a one-row/one-col result.
+    pub fn scalar(&self) -> Option<&Value> {
+        self.first().and_then(|r| r.get(0))
+    }
+
+    /// Iterate over the result rows (no values are cloned; see
+    /// [`RowRef`]).
+    pub fn iter(&self) -> RowIter<'_> {
+        RowIter { rs: self, i: 0 }
+    }
+
+    /// Materialize the projected rows as owned `Vec<Row>` — the explicit
+    /// escape hatch for callers that genuinely need owned values. This is
+    /// the only way a read result clones `Value`s. (Shadows the blanket
+    /// `ToOwned::to_owned` on purpose: materializing is this type's
+    /// natural "owned" form; use `.clone()` for a cheap handle copy.)
+    #[allow(clippy::should_implement_trait)]
+    pub fn to_owned(&self) -> Vec<Row> {
+        self.iter().map(|r| r.to_vec()).collect()
+    }
+}
+
+impl PartialEq for ResultSet {
+    /// Structural equality on the *projected* values plus the affected
+    /// count — two results compare equal regardless of whether the values
+    /// are borrowed from storage or locally computed.
+    fn eq(&self, other: &Self) -> bool {
+        self.affected == other.affected
+            && self.len() == other.len()
+            && self.iter().zip(other.iter()).all(|(a, b)| a == b)
+    }
+}
+
+impl fmt::Debug for ResultSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ResultSet")
+            .field("rows", &self.iter().map(|r| r.iter().collect::<Vec<_>>()).collect::<Vec<_>>())
+            .field("affected", &self.affected)
+            .finish()
+    }
+}
+
+impl<'a> IntoIterator for &'a ResultSet {
+    type Item = RowRef<'a>;
+    type IntoIter = RowIter<'a>;
+    fn into_iter(self) -> RowIter<'a> {
+        self.iter()
+    }
+}
+
+/// Iterator over the rows of a [`ResultSet`], yielding [`RowRef`]s.
+#[derive(Debug, Clone)]
+pub struct RowIter<'a> {
+    rs: &'a ResultSet,
+    i: usize,
+}
+
+impl<'a> Iterator for RowIter<'a> {
+    type Item = RowRef<'a>;
+
+    fn next(&mut self) -> Option<RowRef<'a>> {
+        let r = self.rs.get(self.i);
+        if r.is_some() {
+            self.i += 1;
+        }
+        r
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.rs.len().saturating_sub(self.i);
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for RowIter<'_> {}
+
+/// A borrowed view of one result row: the stored row plus the lazy
+/// projection. Indexing (`row[j]`) and [`get`](Self::get) resolve the
+/// `j`-th *projected* column to a `&Value` without cloning.
+#[derive(Clone, Copy)]
+pub struct RowRef<'a> {
+    row: &'a Row,
+    /// Projection indices; `None` = identity (all storage columns).
+    cols: Option<&'a [usize]>,
+}
+
+impl<'a> RowRef<'a> {
+    /// Number of projected columns.
+    pub fn len(&self) -> usize {
+        self.cols.map_or(self.row.len(), <[usize]>::len)
+    }
+
+    /// True when the row projects no columns.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `j`-th projected value, or `None` past the projection width.
+    pub fn get(&self, j: usize) -> Option<&'a Value> {
+        match self.cols {
+            Some(cols) => cols.get(j).map(|&ci| &self.row[ci]),
+            None => self.row.get(j),
+        }
+    }
+
+    /// Iterate over the projected values (borrowed — nothing is cloned).
+    pub fn iter(&self) -> impl ExactSizeIterator<Item = &'a Value> {
+        let row = self.row;
+        let cols = self.cols;
+        (0..self.len()).map(move |j| match cols {
+            Some(cols) => &row[cols[j]],
+            None => &row[j],
+        })
+    }
+
+    /// Clone the projected values into an owned row.
+    pub fn to_vec(&self) -> Row {
+        self.iter().cloned().collect()
+    }
+}
+
+impl std::ops::Index<usize> for RowRef<'_> {
+    type Output = Value;
+
+    fn index(&self, j: usize) -> &Value {
+        self.get(j)
+            .unwrap_or_else(|| panic!("column {j} out of bounds (width {})", self.len()))
+    }
+}
+
+impl PartialEq for RowRef<'_> {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len() && self.iter().zip(other.iter()).all(|(a, b)| a == b)
+    }
+}
+
+impl fmt::Debug for RowRef<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.iter()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arc_row(vals: &[i64]) -> Arc<Row> {
+        Arc::new(vals.iter().map(|&v| Value::Int(v)).collect())
+    }
+
+    #[test]
+    fn projection_resolves_lazily() {
+        let rows = vec![arc_row(&[1, 10, 100]), arc_row(&[2, 20, 200])];
+        let cols: Arc<[usize]> = vec![2, 0].into();
+        let rs = ResultSet::rows(rows, Some(cols));
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs.row(0)[0], Value::Int(100));
+        assert_eq!(rs.row(0)[1], Value::Int(1));
+        assert_eq!(rs.row(1).to_vec(), vec![Value::Int(200), Value::Int(2)]);
+        assert_eq!(rs.scalar(), Some(&Value::Int(100)));
+        assert_eq!(rs.to_owned(), vec![
+            vec![Value::Int(100), Value::Int(1)],
+            vec![Value::Int(200), Value::Int(2)],
+        ]);
+    }
+
+    #[test]
+    fn select_star_projects_all_columns() {
+        let rs = ResultSet::rows(vec![arc_row(&[7, 8])], None);
+        assert_eq!(rs.row(0).len(), 2);
+        assert_eq!(rs.row(0)[1], Value::Int(8));
+        assert!(rs.row(0).get(2).is_none());
+        assert!(rs.get(1).is_none());
+    }
+
+    #[test]
+    fn computed_and_write_shapes() {
+        let agg = ResultSet::computed(vec![Value::Int(42)]);
+        assert_eq!(agg.len(), 1);
+        assert_eq!(agg.scalar(), Some(&Value::Int(42)));
+        let w = ResultSet::write(3);
+        assert_eq!(w.affected, 3);
+        assert!(w.is_empty());
+        assert!(w.scalar().is_none());
+    }
+
+    #[test]
+    fn equality_is_projection_aware() {
+        // A borrowed projection and a computed row with the same values
+        // compare equal.
+        let a = ResultSet::rows(vec![arc_row(&[5, 6])], Some(vec![1].into()));
+        let b = ResultSet::computed(vec![Value::Int(6)]);
+        assert_eq!(a, b);
+        let c = ResultSet::computed(vec![Value::Int(7)]);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn iteration_is_exact_size() {
+        let rs = ResultSet::rows(vec![arc_row(&[1]), arc_row(&[2]), arc_row(&[3])], None);
+        let it = rs.iter();
+        assert_eq!(it.len(), 3);
+        let vals: Vec<i64> = (&rs).into_iter().map(|r| r[0].as_int().unwrap()).collect();
+        assert_eq!(vals, vec![1, 2, 3]);
+    }
+}

@@ -17,7 +17,9 @@ use std::sync::Arc;
 ///   baseline runs with (paper §7.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum IsolationLevel {
+    /// Strict 2PL with table-level scan locks (full serializability).
     Serializable,
+    /// Lock-free reads of the latest committed state.
     ReadCommitted,
 }
 
@@ -27,8 +29,16 @@ pub enum TxnError {
     /// Wait-die abort or lock timeout; the caller should retry the whole
     /// transaction (the harness and Conveyor Belt servers do).
     Lock(LockError),
-    DuplicateKey { table: String, key: String },
+    /// INSERT collided with an existing primary key.
+    DuplicateKey {
+        /// Table name.
+        table: String,
+        /// Rendered key value.
+        key: String,
+    },
+    /// Semantic SQL error (unknown column, unbound parameter, ...).
     Sql(String),
+    /// The transaction handle was already committed or aborted.
     Finished,
 }
 

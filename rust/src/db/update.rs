@@ -52,14 +52,34 @@ impl ColOp {
 #[derive(Debug, Clone, PartialEq)]
 pub enum WriteRecord {
     /// Insert a full row into `table`.
-    Insert { table: usize, key: Key, row: Arc<Row> },
+    Insert {
+        /// Table index.
+        table: usize,
+        /// Primary key of the new row.
+        key: Key,
+        /// The inserted row, shared with overlay/storage.
+        row: Arc<Row>,
+    },
     /// Change columns `(col_idx, op)` of the row at `key`.
-    Update { table: usize, key: Key, cols: Vec<(usize, ColOp)> },
+    Update {
+        /// Table index.
+        table: usize,
+        /// Primary key of the updated row.
+        key: Key,
+        /// Per-column logical operations.
+        cols: Vec<(usize, ColOp)>,
+    },
     /// Delete the row at `key`.
-    Delete { table: usize, key: Key },
+    Delete {
+        /// Table index.
+        table: usize,
+        /// Primary key of the deleted row.
+        key: Key,
+    },
 }
 
 impl WriteRecord {
+    /// The table this record touches.
     pub fn table(&self) -> usize {
         match self {
             WriteRecord::Insert { table, .. }
@@ -68,6 +88,7 @@ impl WriteRecord {
         }
     }
 
+    /// The primary key this record touches.
     pub fn key(&self) -> &Key {
         match self {
             WriteRecord::Insert { key, .. }
@@ -82,22 +103,27 @@ impl WriteRecord {
 /// write a handful of rows.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct StateUpdate {
+    /// The mutations, in execution order.
     pub records: Vec<WriteRecord>,
 }
 
 impl StateUpdate {
+    /// An empty update.
     pub fn new() -> Self {
         StateUpdate { records: Vec::new() }
     }
 
+    /// Append one record (execution order).
     pub fn push(&mut self, rec: WriteRecord) {
         self.records.push(rec);
     }
 
+    /// True when the transaction wrote nothing.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
 
+    /// Number of write records.
     pub fn len(&self) -> usize {
         self.records.len()
     }

@@ -9,15 +9,59 @@ use std::hash::{Hash, Hasher};
 
 /// A runtime value. `Float` is hashable/orderable via its bit pattern
 /// after normalizing `-0.0` and NaN, so values can serve as map keys.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub enum Value {
+    /// 64-bit integer.
     Int(i64),
+    /// 64-bit float (bit-pattern hashable, see type docs).
     Float(f64),
+    /// UTF-8 string.
     Str(String),
+    /// SQL NULL: never compares equal, propagates through arithmetic.
     Null,
 }
 
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Per-thread count of `Value::clone` calls (debug builds only) —
+    /// the instrumentation behind the allocation-free read-path tests.
+    static VALUE_CLONES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of [`Value`] clones this thread has performed so far, or
+/// `None` when the counter is compiled out (release builds). Tests take
+/// a before/after delta around an operation to assert the read path
+/// clones no values (`rust/tests/prepared_equivalence.rs`); the counter
+/// is monotone and never reset.
+pub fn value_clone_count() -> Option<u64> {
+    #[cfg(debug_assertions)]
+    {
+        Some(VALUE_CLONES.with(|c| c.get()))
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        None
+    }
+}
+
+impl Clone for Value {
+    /// Identical to the derived impl, plus a debug-only thread-local
+    /// counter bump so tests can assert clone-freedom (zero overhead in
+    /// release builds).
+    fn clone(&self) -> Value {
+        #[cfg(debug_assertions)]
+        VALUE_CLONES.with(|c| c.set(c.get() + 1));
+        match self {
+            Value::Int(i) => Value::Int(*i),
+            Value::Float(x) => Value::Float(*x),
+            Value::Str(s) => Value::Str(s.clone()),
+            Value::Null => Value::Null,
+        }
+    }
+}
+
 impl Value {
+    /// Short type label for error messages.
     pub fn type_name(&self) -> &'static str {
         match self {
             Value::Int(_) => "int",
@@ -27,6 +71,7 @@ impl Value {
         }
     }
 
+    /// Convert a parsed SQL literal into a runtime value.
     pub fn from_literal(lit: &Literal) -> Value {
         match lit {
             Literal::Int(i) => Value::Int(*i),
@@ -57,6 +102,8 @@ impl Value {
         }
     }
 
+    /// The value as an integer (floats truncate), or `None` for
+    /// non-numeric values.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -65,6 +112,8 @@ impl Value {
         }
     }
 
+    /// The value as a float (ints widen), or `None` for non-numeric
+    /// values.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Int(i) => Some(*i as f64),
@@ -73,6 +122,7 @@ impl Value {
         }
     }
 
+    /// The value as a borrowed string, or `None` for non-string values.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -189,9 +239,13 @@ pub type Row = Vec<Value>;
 
 /// A primary-key value tuple.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
-pub struct Key(pub Vec<Value>);
+pub struct Key(
+    /// Key values in primary-key column order.
+    pub Vec<Value>,
+);
 
 impl Key {
+    /// A single-column key.
     pub fn single(v: Value) -> Key {
         Key(vec![v])
     }
@@ -257,8 +311,11 @@ pub fn eval_scalar(
 /// and compiled ([`crate::db::prepared`]) evaluators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ArithKind {
+    /// Addition.
     Add,
+    /// Subtraction.
     Sub,
+    /// Multiplication.
     Mul,
 }
 
@@ -297,6 +354,15 @@ mod tests {
         let mut s = DefaultHasher::new();
         v.hash(&mut s);
         s.finish()
+    }
+
+    #[test]
+    fn clone_counter_counts_in_debug_builds() {
+        if let Some(before) = value_clone_count() {
+            let v = Value::Str("x".into());
+            let _copies = [v.clone(), v.clone()];
+            assert_eq!(value_clone_count().unwrap(), before + 2);
+        }
     }
 
     #[test]

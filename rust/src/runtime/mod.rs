@@ -1,11 +1,12 @@
 //! PJRT runtime dispatch.
 //!
-//! The real implementation ([`pjrt`]) loads the AOT-compiled
-//! partition-cost artifact (HLO text produced by `python/compile/aot.py`)
+//! The real implementation (the private `pjrt` module) loads the
+//! AOT-compiled partition-cost artifact (HLO text produced by
+//! `python/compile/aot.py`)
 //! and executes it on the PJRT CPU client. It needs the `xla` and
 //! `anyhow` crates, which are not vendored in this offline build — so it
 //! is gated behind the `pjrt` cargo feature. The default build uses
-//! [`stub`], which exposes the same surface but reports the artifact as
+//! the `stub` module, which exposes the same surface but reports the artifact as
 //! unavailable; every caller already handles that case (the scalar
 //! scorer is the reference implementation).
 

@@ -7,6 +7,7 @@
 
 use crate::util::{Rng, VTime};
 
+/// Client-tier configuration.
 #[derive(Debug, Clone)]
 pub struct ClientsConfig {
     /// Number of clients.
@@ -17,6 +18,7 @@ pub struct ClientsConfig {
     /// Number of client sites; clients are assigned round-robin
     /// ("we equally distribute client threads across client nodes").
     pub sites: usize,
+    /// Seed for the per-client forked RNGs.
     pub seed: u64,
 }
 
@@ -26,6 +28,8 @@ impl Default for ClientsConfig {
     }
 }
 
+/// The closed-loop client pool: per-client forked RNGs plus issue
+/// counters.
 #[derive(Debug)]
 pub struct ClientPool {
     cfg: ClientsConfig,
@@ -34,6 +38,7 @@ pub struct ClientPool {
 }
 
 impl ClientPool {
+    /// Build the pool, forking one RNG per client from `cfg.seed`.
     pub fn new(cfg: ClientsConfig) -> Self {
         let mut meta = Rng::new(cfg.seed);
         let rngs = (0..cfg.n).map(|_| meta.fork()).collect();
@@ -41,6 +46,7 @@ impl ClientPool {
         ClientPool { cfg, rngs, issued }
     }
 
+    /// Number of clients.
     pub fn n(&self) -> usize {
         self.cfg.n
     }
@@ -66,10 +72,12 @@ impl ClientPool {
         VTime::from_millis_f64(ms)
     }
 
+    /// Operations issued by one client so far.
     pub fn issued(&self, client: usize) -> u64 {
         self.issued[client]
     }
 
+    /// Operations issued by all clients.
     pub fn total_issued(&self) -> u64 {
         self.issued.iter().sum()
     }

@@ -58,6 +58,7 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue at virtual time zero.
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
@@ -127,10 +128,12 @@ impl<E> EventQueue<E> {
         }
     }
 
+    /// True when no events are pending.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -145,6 +148,7 @@ impl<E> EventQueue<E> {
 
 /// Convenience trait for simulations: run until a time horizon.
 pub trait Schedulable {
+    /// The event payload type.
     type Event;
     /// Handle one event; may schedule more.
     fn handle(&mut self, at: VTime, ev: Self::Event, q: &mut EventQueue<Self::Event>);

@@ -6,17 +6,24 @@ use crate::util::VTime;
 /// ("We add these locations in the aforementioned order").
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Site {
+    /// EC2 eu-central (Frankfurt).
     Germany,
+    /// EC2 ap-northeast (Tokyo).
     Japan,
+    /// EC2 us-east (Virginia).
     UsEast,
+    /// EC2 sa-east (São Paulo).
     Brazil,
+    /// EC2 ap-southeast (Sydney).
     Australia,
 }
 
+/// The paper's five WAN sites in deployment order.
 pub const WAN_SITES: [Site; 5] =
     [Site::Germany, Site::Japan, Site::UsEast, Site::Brazil, Site::Australia];
 
 impl Site {
+    /// One/two-letter label used in topology names and figures.
     pub fn short(&self) -> &'static str {
         match self {
             Site::Germany => "G",
@@ -53,6 +60,7 @@ pub struct LatencyMatrix {
 }
 
 impl LatencyMatrix {
+    /// Build from a square RTT matrix in milliseconds (one-way = RTT/2).
     pub fn from_rtt_ms(rtt: &[Vec<f64>]) -> Self {
         let n = rtt.len();
         let mut one_way = vec![0u64; n * n];
@@ -70,6 +78,7 @@ impl LatencyMatrix {
         LatencyMatrix::from_rtt_ms(&vec![vec![rtt_ms; n]; n])
     }
 
+    /// Number of endpoints.
     pub fn n(&self) -> usize {
         self.n
     }
@@ -79,6 +88,7 @@ impl LatencyMatrix {
         VTime::from_micros(self.one_way[a * self.n + b])
     }
 
+    /// Round-trip latency between `a` and `b`.
     pub fn rtt(&self, a: usize, b: usize) -> VTime {
         VTime::from_micros(2 * self.one_way[a * self.n + b])
     }
@@ -100,6 +110,7 @@ impl LatencyMatrix {
 pub struct Topology {
     /// Human-readable site labels, one per server.
     pub labels: Vec<String>,
+    /// Server-to-server latency matrix.
     pub servers: LatencyMatrix,
     /// Intra-site client<->server RTT.
     pub client_rtt: VTime,
@@ -139,6 +150,7 @@ impl Topology {
         LatencyMatrix::from_rtt_ms(&rtt)
     }
 
+    /// Number of servers.
     pub fn n(&self) -> usize {
         self.servers.n()
     }

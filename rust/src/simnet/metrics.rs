@@ -12,15 +12,19 @@ pub struct SimMetrics {
     horizon: VTime,
     /// All completed operations.
     pub latency: Summary,
-    /// Broken out by operation class (the RQ3 figures need local vs
+    /// Local/commutative operations only (the RQ3 figures need local vs
     /// global separately).
     pub local_latency: Summary,
+    /// Global operations only.
     pub global_latency: Summary,
+    /// Operations completed after warm-up.
     pub completed: u64,
+    /// Operations that aborted (all retries exhausted).
     pub aborted: u64,
 }
 
 impl SimMetrics {
+    /// Metrics over `[warmup, horizon]` virtual time.
     pub fn new(warmup: VTime, horizon: VTime) -> Self {
         assert!(horizon > warmup);
         SimMetrics {
@@ -49,6 +53,7 @@ impl SimMetrics {
         self.completed += 1;
     }
 
+    /// Record an aborted operation.
     pub fn abort(&mut self) {
         self.aborted += 1;
     }
@@ -62,6 +67,7 @@ impl SimMetrics {
         self.completed as f64 / window
     }
 
+    /// Mean latency over all completed operations (ms).
     pub fn mean_latency_ms(&self) -> f64 {
         self.latency.mean()
     }

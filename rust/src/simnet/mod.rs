@@ -21,6 +21,7 @@
 //! [`crate::conveyor`] (Eliá), [`crate::cluster`] (MySQL-Cluster-like data
 //! partitioning + 2PC) and [`crate::baselines`] (centralized, read-only
 //! optimization).
+#![cfg_attr(doc, warn(missing_docs))]
 
 pub mod clients;
 pub mod events;

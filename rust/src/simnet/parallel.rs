@@ -78,8 +78,11 @@ pub const CLIENT_TIER: usize = usize::MAX;
 /// (emission time plus the network latency the message pays).
 #[derive(Debug)]
 pub struct CrossSend<E> {
+    /// Target group id (`0..n` = servers, [`CLIENT_TIER`] = client tier).
     pub target: usize,
+    /// Absolute arrival time at the target.
     pub at: VTime,
+    /// The event to deliver.
     pub ev: E,
 }
 
@@ -95,9 +98,11 @@ pub struct CrossSend<E> {
 ///
 /// [`handle`]: WindowGroup::handle
 pub trait WindowGroup<Ctx> {
+    /// The event payload type shared by every group of the simulation.
     type Ev: Send;
     /// The group's event queue.
     fn queue(&self) -> &EventQueue<Self::Ev>;
+    /// Mutable access to the group's event queue.
     fn queue_mut(&mut self) -> &mut EventQueue<Self::Ev>;
     /// The window's buffered cross-group sends, in emission order.
     fn out(&mut self) -> &mut Vec<CrossSend<Self::Ev>>;

@@ -15,11 +15,15 @@ use std::collections::VecDeque;
 /// A job accepted by the station, tagged with the caller's payload.
 #[derive(Debug, Clone)]
 pub struct Job<P> {
+    /// Caller-defined continuation data.
     pub payload: P,
+    /// Service demand of this job.
     pub service: VTime,
+    /// When the job was submitted (queueing-delay accounting).
     pub enqueued_at: VTime,
 }
 
+/// A `W`-worker FIFO queueing station (see module docs).
 #[derive(Debug)]
 pub struct Station<P> {
     workers: usize,
@@ -32,6 +36,7 @@ pub struct Station<P> {
 }
 
 impl<P> Station<P> {
+    /// A station with `workers` parallel workers (min 1).
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
         Station {
@@ -82,14 +87,17 @@ impl<P> Station<P> {
         }
     }
 
+    /// Number of queued (not yet started) jobs.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Number of busy workers.
     pub fn busy(&self) -> usize {
         self.busy
     }
 
+    /// Number of completed jobs.
     pub fn completed(&self) -> u64 {
         self.completed
     }

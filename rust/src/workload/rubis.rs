@@ -338,10 +338,13 @@ pub fn templates() -> Vec<TxnTemplate> {
         .with_weak_reads()
         .with_body(|ctx, args| {
             let bn = ctx.exec("bn", args)?;
-            let mut last = bn.clone();
-            for row in bn.rows.iter().take(5) {
+            // Collect the probe ids first: `bn` borrows row handles, so
+            // only the values actually needed are cloned.
+            let iids: Vec<_> = bn.iter().take(5).map(|row| row[0].clone()).collect();
+            let mut last = bn;
+            for iid in iids {
                 let mut b = args.clone();
-                b.insert("derived_iid".into(), row[0].clone());
+                b.insert("derived_iid".into(), iid);
                 last = ctx.exec("item", &b)?;
             }
             Ok(last)
@@ -685,11 +688,11 @@ mod tests {
             ]),
         );
         let hist = run("viewBidHistory", b(vec![("iid", Value::Int(7))]));
-        assert_eq!(hist.rows.len(), 1);
+        assert_eq!(hist.len(), 1);
         let user = run("viewUserInfo", b(vec![("uid", Value::Int(3))]));
-        assert_eq!(user.rows.len(), 1);
+        assert_eq!(user.len(), 1);
         let item = run("viewItem", b(vec![("iid", Value::Int(7))]));
-        assert_eq!(item.rows[0][4], Value::Float(42.0)); // I_MAX_BID
+        assert_eq!(item.row(0)[4], Value::Float(42.0)); // I_MAX_BID
         // Buy-now reduces quantity.
         run(
             "storeBuyNow",
@@ -701,7 +704,7 @@ mod tests {
             ]),
         );
         let item = run("viewItem", b(vec![("iid", Value::Int(7))]));
-        assert_eq!(item.rows[0][2], Value::Int(8)); // I_QTY
+        assert_eq!(item.row(0)[2], Value::Int(8)); // I_QTY
         let stats = run("dailyStats", Bindings::new());
         assert_eq!(stats.scalar(), Some(&Value::Int(1))); // one buy-now
     }

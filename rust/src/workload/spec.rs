@@ -8,7 +8,7 @@
 //! declared statements, so the analysis surface and the executed code
 //! cannot drift apart.
 
-use crate::db::{Bindings, Prepared, QueryResult, TxnError, TxnHandle};
+use crate::db::{Bindings, Prepared, ResultSet, TxnError, TxnHandle};
 use crate::sqlir::{parse_statement, Stmt};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -17,8 +17,10 @@ use std::sync::Arc;
 /// execute for the lifetime of the deployment/simulation).
 pub type PreparedStmts = HashMap<String, Prepared>;
 
-/// Reply returned to a client: the result of the operation.
-pub type Reply = QueryResult;
+/// Reply returned to a client: the result of the operation. Borrowed
+/// ([`ResultSet`] holds `Arc` row handles), so returning a read result
+/// to the client clones no values.
+pub type Reply = ResultSet;
 
 /// Execution context handed to a transaction body: it can only execute
 /// statements declared in its template, by name. Statements are
@@ -35,7 +37,7 @@ impl<'a, 'b> TxnCtx<'a, 'b> {
     }
 
     /// Execute a declared statement with the given bindings.
-    pub fn exec(&mut self, stmt_name: &str, binds: &Bindings) -> Result<QueryResult, TxnError> {
+    pub fn exec(&mut self, stmt_name: &str, binds: &Bindings) -> Result<ResultSet, TxnError> {
         let prepared = self
             .stmts
             .get(stmt_name)

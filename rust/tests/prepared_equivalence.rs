@@ -4,10 +4,19 @@
 //! NULL and type-coercion binds — and both must produce the semantics
 //! the interpreted engine had before the prepared pipeline landed
 //! (golden results asserted literally below).
+//!
+//! This file also pins the borrowed result path (PR 4):
+//! * the lazy [`ResultSet`](elia::db::ResultSet) accessors must agree
+//!   with the `to_owned()` materialization on every path,
+//! * a held `ResultSet` must keep reading the snapshot it matched, across
+//!   the transaction's own later writes (overlay/COW interaction — the
+//!   IndexEq-overlay class of bug PR 1 fixed) and across commit,
+//! * the read path must perform **zero `Value` clones per row returned**
+//!   (asserted with the debug-build clone counter, not eyeballed).
 
-use elia::catalog::{Schema, TableSchema, ValueType};
-use elia::db::{BindSlots, Bindings, Db, Key, Value};
+use elia::db::{value_clone_count, BindSlots, Bindings, Db, Key, ResultSet, Value};
 use elia::sqlir::parse_statement;
+use elia::catalog::{Schema, TableSchema, ValueType};
 
 fn test_db() -> Db {
     Db::new(Schema::new(vec![TableSchema::new(
@@ -48,7 +57,7 @@ fn named(pairs: &[(&str, Value)]) -> Bindings {
 
 /// Run the same SQL through the prepared path and the name-keyed compat
 /// path against identically-seeded databases; results must agree.
-fn both_paths(sql: &str, pairs: &[(&str, Value)], rows: i64) -> elia::db::QueryResult {
+fn both_paths(sql: &str, pairs: &[(&str, Value)], rows: i64) -> ResultSet {
     let db_a = test_db();
     let db_b = test_db();
     seed(&db_a, rows);
@@ -73,7 +82,7 @@ fn point_select_equivalence() {
         &[("id", Value::Int(2))],
         6,
     );
-    assert_eq!(r.rows, vec![vec![Value::Str("book2".into()), Value::Int(20)]]);
+    assert_eq!(r.to_owned(), vec![vec![Value::Str("book2".into()), Value::Int(20)]]);
 }
 
 #[test]
@@ -85,7 +94,7 @@ fn point_select_with_float_coercion_bind() {
         &[("id", Value::Float(3.0))],
         6,
     );
-    assert_eq!(r.rows, vec![vec![Value::Int(30)]]);
+    assert_eq!(r.to_owned(), vec![vec![Value::Int(30)]]);
 }
 
 #[test]
@@ -96,7 +105,7 @@ fn index_eq_select_equivalence() {
         8,
     );
     // ids 1 and 5 carry title book1; output is deterministically sorted.
-    assert_eq!(r.rows, vec![vec![Value::Int(1)], vec![Value::Int(5)]]);
+    assert_eq!(r.to_owned(), vec![vec![Value::Int(1)], vec![Value::Int(5)]]);
 }
 
 #[test]
@@ -107,7 +116,7 @@ fn scan_select_equivalence() {
         8,
     );
     assert_eq!(
-        r.rows,
+        r.to_owned(),
         vec![vec![Value::Int(7)], vec![Value::Int(6)], vec![Value::Int(5)]]
     );
 }
@@ -120,13 +129,13 @@ fn null_bind_matches_nothing() {
         &[("id", Value::Null)],
         4,
     );
-    assert!(r.rows.is_empty());
+    assert!(r.is_empty());
     let r = both_paths(
         "SELECT ID FROM ITEMS WHERE TITLE = ?t",
         &[("t", Value::Null)],
         4,
     );
-    assert!(r.rows.is_empty());
+    assert!(r.is_empty());
     let r = both_paths(
         "SELECT COUNT(*) FROM ITEMS WHERE STOCK > ?s",
         &[("s", Value::Null)],
@@ -165,7 +174,7 @@ fn aggregate_equivalence() {
         8,
     );
     assert_eq!(
-        r.rows,
+        r.to_owned(),
         vec![vec![
             Value::Int(2),
             Value::Int(40),
@@ -257,4 +266,241 @@ fn peek_sees_prepared_writes() {
     .unwrap();
     let row = db.peek("ITEMS", &Key::single(Value::Int(0))).unwrap();
     assert_eq!(row[1], Value::Str("zzz".into()));
+}
+
+// ---------------------------------------------------------------------------
+// Borrowed result materialization (PR 4): lazy accessors vs to_owned().
+// ---------------------------------------------------------------------------
+
+/// Every lazy read of the borrowed result must agree with the owned
+/// materialization — per value, per row, and in the convenience views.
+fn borrowed_agrees_with_owned(sql: &str, pairs: &[(&str, Value)], rows: i64) {
+    let db = test_db();
+    seed(&db, rows);
+    let p = db.prepare_sql(sql).unwrap();
+    let r = db.exec_auto_prepared(&p, &p.bind_pairs(pairs).unwrap()).unwrap();
+    let owned = r.to_owned();
+
+    assert_eq!(owned.len(), r.len(), "{sql}: len");
+    assert_eq!(owned.is_empty(), r.is_empty(), "{sql}: is_empty");
+    for (i, row) in r.iter().enumerate() {
+        assert_eq!(row.len(), owned[i].len(), "{sql}: width of row {i}");
+        for j in 0..row.len() {
+            assert_eq!(row[j], owned[i][j], "{sql}: value [{i}][{j}]");
+            assert_eq!(row.get(j), Some(&owned[i][j]), "{sql}: get [{i}][{j}]");
+        }
+        assert!(row.get(row.len()).is_none(), "{sql}: get past width");
+        assert_eq!(row.to_vec(), owned[i], "{sql}: to_vec of row {i}");
+        assert_eq!(r.row(i).to_vec(), owned[i], "{sql}: row({i})");
+    }
+    assert!(r.get(r.len()).is_none(), "{sql}: get past len");
+    assert_eq!(r.first().map(|row| row.to_vec()), owned.first().cloned(), "{sql}: first");
+    assert_eq!(r.scalar(), owned.first().and_then(|row| row.first()), "{sql}: scalar");
+}
+
+#[test]
+fn borrowed_and_owned_agree_on_every_access_path() {
+    let cases: &[(&str, &[(&str, Value)])] = &[
+        // Point, exact and missing, plus a coercion bind.
+        ("SELECT TITLE, STOCK FROM ITEMS WHERE ID = ?id", &[("id", Value::Int(2))]),
+        ("SELECT TITLE FROM ITEMS WHERE ID = ?id", &[("id", Value::Int(999))]),
+        ("SELECT STOCK FROM ITEMS WHERE ID = ?id", &[("id", Value::Float(3.0))]),
+        ("SELECT STOCK FROM ITEMS WHERE ID = ?id", &[("id", Value::Null)]),
+        // Index equality.
+        ("SELECT ID, COST FROM ITEMS WHERE TITLE = ?t", &[("t", Value::Str("book1".into()))]),
+        ("SELECT ID FROM ITEMS WHERE TITLE = ?t", &[("t", Value::Null)]),
+        // Scans, SELECT *, ORDER BY + LIMIT, reordered projection.
+        ("SELECT ID FROM ITEMS WHERE STOCK >= ?s", &[("s", Value::Int(20))]),
+        ("SELECT * FROM ITEMS WHERE STOCK >= ?s", &[("s", Value::Int(30))]),
+        ("SELECT COST, ID FROM ITEMS ORDER BY COST DESC LIMIT 3", &[]),
+        // Aggregates (the computed-row shape).
+        ("SELECT COUNT(*), SUM(STOCK) FROM ITEMS WHERE TITLE = ?t", &[("t", Value::Str("book0".into()))]),
+    ];
+    for (sql, pairs) in cases {
+        borrowed_agrees_with_owned(sql, pairs, 8);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot stability: a held ResultSet across later writes (overlay/COW).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn result_set_snapshot_survives_subsequent_txn_writes() {
+    use elia::util::qcheck::{check, Config};
+    check(
+        Config::default().cases(40).name("resultset-snapshot"),
+        |rng| {
+            let db = test_db();
+            let n = 4 + rng.range(0, 10) as i64;
+            seed(&db, n);
+
+            // Pick one of the three read paths.
+            let (sql, pairs): (&str, Vec<(&str, Value)>) = match rng.range(0, 3) {
+                0 => (
+                    "SELECT TITLE, STOCK FROM ITEMS WHERE ID = ?id",
+                    vec![("id", Value::Int(rng.range(0, n as usize) as i64))],
+                ),
+                1 => (
+                    "SELECT ID, STOCK FROM ITEMS WHERE TITLE = ?t",
+                    vec![("t", Value::Str(format!("book{}", rng.range(0, 4))))],
+                ),
+                _ => ("SELECT ID, TITLE, STOCK FROM ITEMS WHERE STOCK >= ?s",
+                    vec![("s", Value::Int(rng.range(0, 40) as i64))]),
+            };
+            let sel = db.prepare_sql(sql).unwrap();
+            let slots = sel.bind_pairs(&pairs).unwrap();
+
+            let upd_stock = db
+                .prepare_sql("UPDATE ITEMS SET STOCK = STOCK + ?d WHERE ID = ?id")
+                .unwrap();
+            // Updating the *indexed* column exercises the IndexEq-overlay
+            // interaction (rows leave/enter the probed bucket in-txn).
+            let upd_title =
+                db.prepare_sql("UPDATE ITEMS SET TITLE = ?t WHERE ID = ?id").unwrap();
+            let del = db.prepare_sql("DELETE FROM ITEMS WHERE ID = ?id").unwrap();
+            let ins = db
+                .prepare_sql(
+                    "INSERT INTO ITEMS (ID, TITLE, STOCK, COST) VALUES (?id, ?t, 0, 0.0)",
+                )
+                .unwrap();
+
+            let mut txn = db.begin();
+            let held = txn.exec_prepared(&sel, &slots).unwrap();
+            let snapshot = held.to_owned();
+
+            // Hammer the same table (often the same rows) inside the txn.
+            for w in 0..rng.range(1, 6) {
+                let id = Value::Int(rng.range(0, n as usize) as i64);
+                match rng.range(0, 4) {
+                    0 => {
+                        txn.exec_prepared(
+                            &upd_stock,
+                            &upd_stock
+                                .bind_pairs(&[("d", Value::Int(100)), ("id", id)])
+                                .unwrap(),
+                        )
+                        .unwrap();
+                    }
+                    1 => {
+                        txn.exec_prepared(
+                            &upd_title,
+                            &upd_title
+                                .bind_pairs(&[
+                                    ("t", Value::Str(format!("renamed{w}"))),
+                                    ("id", id),
+                                ])
+                                .unwrap(),
+                        )
+                        .unwrap();
+                    }
+                    2 => {
+                        txn.exec_prepared(&del, &del.bind_pairs(&[("id", id)]).unwrap())
+                            .unwrap();
+                    }
+                    _ => {
+                        // Fresh id: may collide with an earlier insert of
+                        // this loop — ignore the duplicate-key error.
+                        let fresh = Value::Int(n + rng.range(0, 8) as i64);
+                        let _ = txn.exec_prepared(
+                            &ins,
+                            &ins.bind_pairs(&[
+                                ("id", fresh),
+                                ("t", Value::Str("fresh".into())),
+                            ])
+                            .unwrap(),
+                        );
+                    }
+                }
+                // The held result still reads the values it matched.
+                assert_eq!(held.to_owned(), snapshot, "snapshot drifted mid-txn");
+            }
+
+            // ... and commit does not disturb it either (storage swaps
+            // in new Arcs; held handles keep the old images).
+            txn.commit().unwrap();
+            assert_eq!(held.to_owned(), snapshot, "snapshot drifted across commit");
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Zero value clones per row returned (debug-build clone counter).
+// ---------------------------------------------------------------------------
+
+/// Clones performed while running `f` on this thread. `None` in release
+/// builds (counter compiled out) — the callers skip their assertions.
+fn clones_during(f: impl FnOnce()) -> Option<u64> {
+    let before = value_clone_count()?;
+    f();
+    Some(value_clone_count().unwrap() - before)
+}
+
+#[test]
+fn scan_read_clones_no_values_at_all() {
+    if value_clone_count().is_none() {
+        return; // release build: counter compiled out
+    }
+    let db = test_db();
+    seed(&db, 32);
+    let sel = db.prepare_sql("SELECT TITLE, STOCK FROM ITEMS WHERE STOCK >= ?s").unwrap();
+    let slots = sel.bind_pairs(&[("s", Value::Int(0))]).unwrap();
+
+    let mut r = None;
+    let during_exec = clones_during(|| r = Some(db.exec_auto_prepared(&sel, &slots).unwrap()));
+    let r = r.unwrap();
+    assert_eq!(r.len(), 32, "all rows matched");
+    assert_eq!(
+        during_exec,
+        Some(0),
+        "a scan read must clone zero Values no matter how many rows match"
+    );
+
+    // Reading every projected value through the accessors clones nothing.
+    let mut values_seen = 0;
+    let during_read = clones_during(|| {
+        for row in &r {
+            for v in row.iter() {
+                values_seen += std::hint::black_box(v).type_name().len().min(1);
+            }
+        }
+    });
+    assert_eq!(values_seen, 64);
+    assert_eq!(during_read, Some(0), "accessor reads must clone zero Values");
+
+    // The explicit escape hatch is where clones happen: one per value.
+    let during_owned = clones_during(|| {
+        std::hint::black_box(r.to_owned());
+    });
+    assert_eq!(during_owned, Some(64), "to_owned clones exactly rows x width");
+}
+
+#[test]
+fn point_and_index_reads_clone_only_the_probe_key() {
+    if value_clone_count().is_none() {
+        return; // release build: counter compiled out
+    }
+    let db = test_db();
+    seed(&db, 16);
+
+    // Point: the only clone is the bind value copied into the lookup key
+    // (one per PK column, per execution — independent of rows returned).
+    let sel = db.prepare_sql("SELECT TITLE, STOCK, COST FROM ITEMS WHERE ID = ?id").unwrap();
+    let slots = sel.bind_pairs(&[("id", Value::Int(7))]).unwrap();
+    let mut r = None;
+    let d = clones_during(|| r = Some(db.exec_auto_prepared(&sel, &slots).unwrap()));
+    assert_eq!(r.as_ref().unwrap().len(), 1);
+    assert_eq!(d, Some(1), "point read: exactly the key-build clone");
+    let d = clones_during(|| {
+        assert_eq!(r.as_ref().unwrap().row(0)[1], Value::Int(70));
+    });
+    assert_eq!(d, Some(0), "value access is clone-free");
+
+    // Index-eq: the one clone is the probe value; matched rows add none.
+    let sel = db.prepare_sql("SELECT ID, STOCK FROM ITEMS WHERE TITLE = ?t").unwrap();
+    let slots = sel.bind_pairs(&[("t", Value::Str("book1".into()))]).unwrap();
+    let mut r = None;
+    let d = clones_during(|| r = Some(db.exec_auto_prepared(&sel, &slots).unwrap()));
+    assert_eq!(r.as_ref().unwrap().len(), 4, "ids 1, 5, 9, 13");
+    assert_eq!(d, Some(1), "index-eq read: exactly the probe clone");
 }

@@ -68,7 +68,7 @@ fn store_app() -> Arc<AnalyzedApp> {
         )
         .with_body(|ctx, args| {
             let lines = ctx.exec("read", args)?;
-            for line in &lines.rows {
+            for line in &lines {
                 let qty = line[1].as_int().unwrap_or(0);
                 let mut b = args.clone();
                 b.insert("derived_item".into(), line[0].clone());
@@ -192,8 +192,8 @@ fn local_reads_observe_local_writes() {
     for cart in 0..50i64 {
         dep.submit(op(&app, "add", &[("c", cart), ("t", 1), ("a", 2)])).unwrap();
         let r = dep.submit(op(&app, "readCart", &[("c", cart)])).unwrap();
-        assert_eq!(r.rows.len(), 1, "cart {cart} must see its own add");
-        assert_eq!(r.rows[0][1], Value::Int(2));
+        assert_eq!(r.len(), 1, "cart {cart} must see its own add");
+        assert_eq!(r.row(0)[1], Value::Int(2));
     }
     dep.shutdown();
 }
