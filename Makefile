@@ -12,15 +12,20 @@ build:
 test:
 	cd rust && cargo test -q
 
-# Tier-1 suite plus the 1-thread rung of the parallel-determinism
-# suite (Conveyor, Cluster and Baseline sims — all on the window
-# engine). The plain `test` run already exercises the suite's default
-# ladder (1-thread baseline vs 2 threads and vs all cores); the extra
-# ELIA_PAR_MAX=1 pass pins pure 1-thread run-to-run reproducibility,
-# completing the 1/2/max matrix without redundant reruns (see
+# Tier-1 suite plus extra rungs of the parallel-determinism suite
+# (Conveyor, Cluster and Baseline sims — all on the window engine with
+# the persistent worker pool). The plain `test` run exercises the
+# suite's default ladder (sequential 1-thread baseline — the pre-pool
+# path, no pool is ever constructed there — vs the pool at 2 threads
+# and at all cores); the ELIA_PAR_MAX=1 pass pins pure 1-thread
+# run-to-run reproducibility, and the ELIA_PAR_MAX=2 pass re-runs just
+# the three sims' signature tests so the minimal pool (one worker plus
+# the driver) stays byte-identical to the sequential baseline even if
+# the default ladder changes (see
 # tests/parallel_determinism.rs::alt_thread_counts).
 test-par: test
 	cd rust && ELIA_PAR_MAX=1 cargo test -q --test parallel_determinism
+	cd rust && ELIA_PAR_MAX=2 cargo test -q --test parallel_determinism thread_count_invariant
 
 clippy:
 	cd rust && cargo clippy -- -D warnings

@@ -132,6 +132,34 @@ fn baseline_point(threads: usize) -> (f64, u64) {
     (t0.elapsed().as_secs_f64(), r.metrics.completed)
 }
 
+/// Spawn-overhead probe (ISSUE 5): a modeled fig3-shaped Conveyor point
+/// (LAN, 6 servers, the Fig-3 workload mix). Modeled execution does
+/// almost no per-event work, so wall clock here is dominated by
+/// per-window coordination — exactly the cost the persistent worker
+/// pool moves from an OS thread spawn per window to a park/unpark.
+/// Reported as windows-per-second at 1 thread vs all cores.
+fn spawn_overhead_point(threads: usize) -> (f64, u64, u64) {
+    let app = micro::analyzed();
+    let cfg = ConveyorConfig {
+        service: ServiceModel::fixed(5.0),
+        warmup: VTime::from_secs(2),
+        horizon: VTime::from_secs(8),
+        parallel: threads,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = ConveyorSim::new(
+        &app,
+        Topology::lan(6),
+        ClientsConfig { n: 512, think_ms: 100.0, seed: 0xF16, ..Default::default() },
+        cfg,
+        Box::new(micro::MicroGenerator::new(&app, 0.7)),
+        |_| {},
+    )
+    .run();
+    (t0.elapsed().as_secs_f64(), r.windows, r.metrics.completed)
+}
+
 fn main() {
     let cores = available_threads();
     let mut results: Vec<(String, f64)> = Vec::new();
@@ -153,6 +181,23 @@ fn main() {
         results.push((format!("{name} (1T wall ns)"), w1 * 1e9));
         results.push((format!("{name} ({cores}T wall ns)"), wn * 1e9));
         results.push((format!("{name} (speedup x1000)"), w1 / wn * 1000.0));
+    }
+
+    // Spawn overhead: per-window coordination throughput of the engine,
+    // 1 thread (no pool) vs all cores (persistent pool dispatch).
+    {
+        let (w1, win1, c1) = spawn_overhead_point(1);
+        let (wn, winn, cn) = spawn_overhead_point(0);
+        assert_eq!((win1, c1), (winn, cn), "spawn overhead: results must not change");
+        println!(
+            "{:<34} {win1} windows   1T {:>9.0} win/s   {cores}T {:>9.0} win/s",
+            "sim: spawn overhead fig3 lan6",
+            win1 as f64 / w1,
+            winn as f64 / wn
+        );
+        results.push(("sim: spawn overhead fig3 lan6 (1T windows/s)".into(), win1 as f64 / w1));
+        results
+            .push((format!("sim: spawn overhead fig3 lan6 ({cores}T windows/s)"), winn as f64 / wn));
     }
 
     // A quick fig3 point through the harness (the `--parallel` plumbing

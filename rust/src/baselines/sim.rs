@@ -17,11 +17,10 @@
 //! messages (request, async replication, reply) — results are
 //! bit-identical at any thread count ([`BaselineConfig::parallel`]).
 
-use crate::simnet::clients::{ClientPool, ClientsConfig};
-use crate::simnet::events::EventQueue;
+use crate::simnet::clients::{ClientEv, ClientTier, ClientsConfig, IssueReply, IssueRouter};
 use crate::simnet::latency::LatencyMatrix;
 use crate::simnet::metrics::SimMetrics;
-use crate::simnet::parallel::{self, CrossSend, WindowGroup, CLIENT_TIER};
+use crate::simnet::parallel::{self, GroupCore, WindowGroup, CLIENT_TIER};
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
 use crate::workload::analyzed::AnalyzedApp;
@@ -123,23 +122,18 @@ struct ServerGroup {
     station: Station<Job>,
     /// Per-server RNG stream (service sampling) — see `Rng::stream`.
     rng: Rng,
-    q: EventQueue<Ev>,
-    out: Vec<CrossSend<Ev>>,
+    core: GroupCore<Ev>,
 }
 
 impl<'s> WindowGroup<Shared<'s>> for ServerGroup {
     type Ev = Ev;
 
-    fn queue(&self) -> &EventQueue<Ev> {
-        &self.q
+    fn core(&self) -> &GroupCore<Ev> {
+        &self.core
     }
 
-    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
-        &mut self.q
-    }
-
-    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
-        &mut self.out
+    fn core_mut(&mut self) -> &mut GroupCore<Ev> {
+        &mut self.core
     }
 
     fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
@@ -163,16 +157,16 @@ impl<'s> WindowGroup<Shared<'s>> for ServerGroup {
 
 impl ServerGroup {
     fn submit(&mut self, job: Job, service: VTime) {
-        let now = self.q.now();
+        let now = self.core.now();
         if let Some(j) = self.station.submit(now, job, service, false) {
-            self.q.schedule(j.service, Ev::JobDone { job: j.payload });
+            self.core.q.schedule(j.service, Ev::JobDone { job: j.payload });
         }
     }
 
     fn on_job_done(&mut self, job: Job, ctx: &Shared<'_>) {
-        let now = self.q.now();
+        let now = self.core.now();
         if let Some(next) = self.station.complete(now) {
-            self.q.schedule(next.service, Ev::JobDone { job: next.payload });
+            self.core.q.schedule(next.service, Ev::JobDone { job: next.payload });
         }
         if let Job::Op(op) = job {
             // Read-only mode: writes replicate asynchronously to replicas.
@@ -182,87 +176,63 @@ impl ServerGroup {
                         continue;
                     }
                     let d = ctx.sites.one_way(self.id, s);
-                    self.out.push(CrossSend { target: s, at: now + d, ev: Ev::ApplyArrive });
+                    self.core.send(s, now + d, Ev::ApplyArrive);
                 }
             }
             let d = ctx.sites.one_way(self.id, op.client_site);
-            self.out.push(CrossSend {
-                target: CLIENT_TIER,
-                at: now + d,
-                ev: Ev::Reply { client: op.client, issued: op.issued, write: op.write },
-            });
+            let ev = Ev::Reply { client: op.client, issued: op.issued, write: op.write };
+            self.core.send(CLIENT_TIER, now + d, ev);
         }
     }
 }
 
-/// The client tier: client pool, workload generator and metrics.
-struct ClientTier<'a> {
-    clients: ClientPool,
-    gen: Box<dyn OpGenerator + 'a>,
-    metrics: SimMetrics,
-    q: EventQueue<Ev>,
-    out: Vec<CrossSend<Ev>>,
-}
-
-impl<'a, 's> WindowGroup<Shared<'s>> for ClientTier<'a> {
-    type Ev = Ev;
-
-    fn queue(&self) -> &EventQueue<Ev> {
-        &self.q
-    }
-
-    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
-        &mut self.q
-    }
-
-    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
-        &mut self.out
-    }
-
-    fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
-        match ev {
-            Ev::Issue { client } => self.on_issue(client, ctx),
+impl IssueReply for Ev {
+    fn classify(self) -> ClientEv<Ev> {
+        match self {
+            Ev::Issue { client } => ClientEv::Issue { client },
             Ev::Reply { client, issued, write } => {
-                self.metrics.complete(issued, self.q.now(), write);
-                let think = self.clients.think(client);
-                self.q.schedule(think, Ev::Issue { client });
+                ClientEv::Reply { client, issued, flag: write }
             }
-            _ => unreachable!("server event delivered to the client tier"),
+            other => ClientEv::Other(other),
         }
+    }
+
+    fn issue(client: usize) -> Ev {
+        Ev::Issue { client }
     }
 }
 
-impl ClientTier<'_> {
-    fn on_issue(&mut self, client: usize, ctx: &Shared<'_>) {
-        let site = self.clients.site(client);
+/// The baseline half of the shared client tier: reads go to the nearest
+/// replica (read-only mode), writes and everything centralized to the
+/// primary.
+impl IssueRouter<Ev> for Shared<'_> {
+    fn route_issue(&self, tier: &mut ClientTier<'_, Ev>, client: usize) {
+        let site = tier.clients.site(client);
         let op = {
-            let mut r = self.clients.rng(client).fork();
-            self.gen.next_op(&mut r, site, ctx.n_servers)
+            let mut r = tier.clients.rng(client).fork();
+            tier.gen.next_op(&mut r, site, self.n_servers)
         };
-        let write = !ctx.app.spec.txns[op.txn].is_read_only();
-        let server = match ctx.cfg.mode {
+        let write = !self.app.spec.txns[op.txn].is_read_only();
+        let server = match self.cfg.mode {
             BaselineMode::Centralized => 0,
             BaselineMode::ReadOnly { .. } => {
                 if write {
                     0 // primary
                 } else {
-                    ctx.nearest_server(site)
+                    self.nearest_server(site)
                 }
             }
         };
+        let now = tier.core.now();
         let env = OpEnvelope {
             txn: op.txn,
             client,
             client_site: site,
-            issued: self.q.now(),
+            issued: now,
             write,
         };
-        let delay = ctx.sites.one_way(site, server);
-        self.out.push(CrossSend {
-            target: server,
-            at: self.q.now() + delay,
-            ev: Ev::Arrive { op: env },
-        });
+        let delay = self.sites.one_way(site, server);
+        tier.core.send(server, now + delay, Ev::Arrive { op: env });
     }
 }
 
@@ -271,7 +241,7 @@ pub struct BaselineSim<'a> {
     /// Latency matrix over *client sites*; servers occupy the first sites.
     sites: LatencyMatrix,
     cfg: BaselineConfig,
-    client: ClientTier<'a>,
+    client: ClientTier<'a, Ev>,
     servers: Vec<ServerGroup>,
 }
 
@@ -287,34 +257,20 @@ impl<'a> BaselineSim<'a> {
         gen: Box<dyn OpGenerator + 'a>,
     ) -> Self {
         let n_sites = sites.n();
-        let clients = ClientPool::new(ClientsConfig { sites: n_sites, ..clients_cfg });
         let n_servers = match cfg.mode {
             BaselineMode::Centralized => 1,
             BaselineMode::ReadOnly { n_servers } => n_servers.min(n_sites).max(1),
         };
-        let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
         let servers = (0..n_servers)
             .map(|id| ServerGroup {
                 id,
                 station: Station::new(cfg.workers),
                 rng: Rng::stream(cfg.seed, id as u64),
-                q: EventQueue::new(),
-                out: Vec::new(),
+                core: GroupCore::new(),
             })
             .collect();
-        BaselineSim {
-            app,
-            sites,
-            cfg,
-            client: ClientTier {
-                clients,
-                gen,
-                metrics,
-                q: EventQueue::new(),
-                out: Vec::new(),
-            },
-            servers,
-        }
+        let client = ClientTier::new(clients_cfg, n_sites, gen, cfg.warmup, cfg.horizon);
+        BaselineSim { app, sites, cfg, client, servers }
     }
 
     /// The conservative lookahead: requests, replies and async
@@ -327,27 +283,25 @@ impl<'a> BaselineSim<'a> {
     }
 
     pub fn run(mut self) -> BaselineReport {
-        for c in 0..self.client.clients.n() {
-            let jitter = VTime::from_micros((c as u64 % 97) * 13);
-            self.client.q.schedule_at(jitter, Ev::Issue { client: c });
-        }
+        self.client.boot();
         let lookahead = self.lookahead();
         let threads = parallel::resolve_threads(self.cfg.parallel);
         let horizon = self.cfg.horizon;
 
         let BaselineSim { app, sites, cfg, mut client, mut servers } = self;
-        {
+        let windows = {
             let ctx =
                 Shared { app, sites: &sites, cfg: &cfg, n_servers: servers.len() };
-            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client);
-        }
+            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client)
+        };
 
         let now = cfg.horizon;
         BaselineReport {
             metrics: client.metrics.clone(),
             utilization: servers.iter().map(|s| s.station.utilization(now)).collect(),
-            events: client.q.processed()
-                + servers.iter().map(|s| s.q.processed()).sum::<u64>(),
+            events: client.core.q.processed()
+                + servers.iter().map(|s| s.core.q.processed()).sum::<u64>(),
+            windows,
         }
     }
 }
@@ -357,6 +311,8 @@ pub struct BaselineReport {
     pub metrics: SimMetrics,
     pub utilization: Vec<f64>,
     pub events: u64,
+    /// Conservative windows the engine executed.
+    pub windows: u64,
 }
 
 impl BaselineReport {

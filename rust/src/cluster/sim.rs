@@ -38,11 +38,10 @@
 //! lookahead windows with the canonical cross-group merge — results are
 //! bit-identical at any thread count ([`ClusterConfig::parallel`]).
 
-use crate::simnet::clients::{ClientPool, ClientsConfig};
-use crate::simnet::events::EventQueue;
+use crate::simnet::clients::{ClientEv, ClientTier, ClientsConfig, IssueReply, IssueRouter};
 use crate::simnet::latency::Topology;
 use crate::simnet::metrics::SimMetrics;
-use crate::simnet::parallel::{self, CrossSend, WindowGroup, CLIENT_TIER};
+use crate::simnet::parallel::{self, GroupCore, WindowGroup, CLIENT_TIER};
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
 use crate::workload::analyzed::AnalyzedApp;
@@ -252,23 +251,18 @@ struct ServerGroup {
     /// cannot perturb another server's stream.
     rng: Rng,
     lock_waits: u64,
-    q: EventQueue<Ev>,
-    out: Vec<CrossSend<Ev>>,
+    core: GroupCore<Ev>,
 }
 
 impl<'s> WindowGroup<Shared<'s>> for ServerGroup {
     type Ev = Ev;
 
-    fn queue(&self) -> &EventQueue<Ev> {
-        &self.q
+    fn core(&self) -> &GroupCore<Ev> {
+        &self.core
     }
 
-    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
-        &mut self.q
-    }
-
-    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
-        &mut self.out
+    fn core_mut(&mut self) -> &mut GroupCore<Ev> {
+        &mut self.core
     }
 
     fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
@@ -301,9 +295,9 @@ impl<'s> WindowGroup<Shared<'s>> for ServerGroup {
 
 impl ServerGroup {
     fn submit(&mut self, job: Job, service: VTime, priority: bool) {
-        let now = self.q.now();
+        let now = self.core.now();
         if let Some(j) = self.station.submit(now, job, service, priority) {
-            self.q.schedule(j.service, Ev::JobDone { job: j.payload });
+            self.core.q.schedule(j.service, Ev::JobDone { job: j.payload });
         }
     }
 
@@ -347,7 +341,7 @@ impl ServerGroup {
         // Write transactions reserve their *coordinator-local* keys here;
         // keys owned by other shards are reserved where they live, when
         // the prepare round reaches them.
-        let now = self.q.now();
+        let now = self.core.now();
         let start = if op.local_keys.is_empty() {
             now
         } else {
@@ -368,7 +362,7 @@ impl ServerGroup {
                 self.ops.len() as u64 - 1
             }
         };
-        self.q.schedule_at(start, Ev::LockStart { op: op_id });
+        self.core.q.schedule_at(start, Ev::LockStart { op: op_id });
     }
 
     fn on_lock_start(&mut self, op_id: u64, ctx: &Shared<'_>) {
@@ -384,31 +378,23 @@ impl ServerGroup {
     }
 
     fn on_job_done(&mut self, job: Job, ctx: &Shared<'_>) {
-        let now = self.q.now();
+        let now = self.core.now();
         if let Some(next) = self.station.complete(now) {
-            self.q.schedule(next.service, Ev::JobDone { job: next.payload });
+            self.core.q.schedule(next.service, Ev::JobDone { job: next.payload });
         }
         match job {
             Job::Coord(op_id) => self.on_coord_done(op_id, ctx),
             Job::Remote { coord, op } => {
                 // Remote share done: the vote travels back.
                 let d = ctx.topo.servers.one_way(self.id, coord);
-                self.out.push(CrossSend {
-                    target: coord,
-                    at: now + d,
-                    ev: Ev::VoteArrive { op },
-                });
+                self.core.send(coord, now + d, Ev::VoteArrive { op });
             }
             Job::CommitApply { coord, op, keys } => {
                 // Commit applied: this shard's reservations end (entries
                 // evict) and the ack travels back to the coordinator.
                 self.locks.release(&keys);
                 let d = ctx.topo.servers.one_way(self.id, coord);
-                self.out.push(CrossSend {
-                    target: coord,
-                    at: now + d,
-                    ev: Ev::AckArrive { op },
-                });
+                self.core.send(coord, now + d, Ev::AckArrive { op });
             }
             Job::Ack(op_id) => {
                 let done = {
@@ -417,7 +403,7 @@ impl ServerGroup {
                     op.acks_pending == 0
                 };
                 if done {
-                    self.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
+                    self.core.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
                 }
             }
         }
@@ -426,20 +412,17 @@ impl ServerGroup {
     fn on_coord_done(&mut self, op_id: u64, ctx: &Shared<'_>) {
         let remotes = self.ops[op_id as usize].demand.remotes(self.id);
         if remotes.is_empty() {
-            self.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
+            self.core.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
             return;
         }
         self.ops[op_id as usize].votes_pending = remotes.len();
         let service = self.ops[op_id as usize].service;
-        let now = self.q.now();
+        let now = self.core.now();
         for shard in remotes {
             let keys = self.ops[op_id as usize].demand.keys_on(shard);
             let d = ctx.topo.servers.one_way(self.id, shard);
-            self.out.push(CrossSend {
-                target: shard,
-                at: now + d,
-                ev: Ev::PrepareArrive { coord: self.id, op: op_id, service, keys },
-            });
+            let ev = Ev::PrepareArrive { coord: self.id, op: op_id, service, keys };
+            self.core.send(shard, now + d, ev);
         }
     }
 
@@ -457,7 +440,7 @@ impl ServerGroup {
         let remote_service = VTime::from_millis_f64(
             service.as_millis_f64() * ctx.cfg.remote_exec_frac + ctx.cfg.msg_cpu_ms,
         );
-        let now = self.q.now();
+        let now = self.core.now();
         let start = if keys.is_empty() {
             now
         } else {
@@ -469,7 +452,7 @@ impl ServerGroup {
             }
             grant
         };
-        self.q.schedule_at(start, Ev::RemoteStart { coord, op, service: remote_service });
+        self.core.q.schedule_at(start, Ev::RemoteStart { coord, op, service: remote_service });
     }
 
     fn on_vote(&mut self, op_id: u64, ctx: &Shared<'_>) {
@@ -483,7 +466,7 @@ impl ServerGroup {
         }
         if self.ops[op_id as usize].demand.read_only {
             // Scatter-gather read: done once all results are in.
-            self.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
+            self.core.q.schedule(VTime::ZERO, Ev::Complete { op: op_id });
             return;
         }
         // 2PC commit round: decision to every participant; each applies
@@ -491,15 +474,11 @@ impl ServerGroup {
         // coordinator pays CPU per ack — symmetric with the prepare path.
         let remotes = self.ops[op_id as usize].demand.remotes(self.id);
         self.ops[op_id as usize].acks_pending = remotes.len();
-        let now = self.q.now();
+        let now = self.core.now();
         for shard in remotes {
             let keys = self.ops[op_id as usize].demand.keys_on(shard);
             let d = ctx.topo.servers.one_way(self.id, shard);
-            self.out.push(CrossSend {
-                target: shard,
-                at: now + d,
-                ev: Ev::CommitArrive { coord: self.id, op: op_id, keys },
-            });
+            self.core.send(shard, now + d, Ev::CommitArrive { coord: self.id, op: op_id, keys });
         }
     }
 
@@ -512,76 +491,51 @@ impl ServerGroup {
             (op.client, op.client_site, op.issued, op.distributed)
         };
         let d = ctx.topo.servers.one_way(self.id, client_site);
-        self.out.push(CrossSend {
-            target: CLIENT_TIER,
-            at: self.q.now() + d,
-            ev: Ev::Reply { client, issued, distributed },
-        });
+        let ev = Ev::Reply { client, issued, distributed };
+        self.core.send(CLIENT_TIER, self.core.now() + d, ev);
         // Nothing references this op id past its Complete (votes and
         // acks are all in): recycle the slot.
         self.free_ops.push(op_id);
     }
 }
 
-/// The client tier: client pool, workload generator and metrics.
-struct ClientTier<'a> {
-    clients: ClientPool,
-    gen: Box<dyn OpGenerator + 'a>,
-    metrics: SimMetrics,
-    q: EventQueue<Ev>,
-    out: Vec<CrossSend<Ev>>,
-}
-
-impl<'a, 's> WindowGroup<Shared<'s>> for ClientTier<'a> {
-    type Ev = Ev;
-
-    fn queue(&self) -> &EventQueue<Ev> {
-        &self.q
-    }
-
-    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
-        &mut self.q
-    }
-
-    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
-        &mut self.out
-    }
-
-    fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
-        match ev {
-            Ev::Issue { client } => self.on_issue(client, ctx),
+impl IssueReply for Ev {
+    fn classify(self) -> ClientEv<Ev> {
+        match self {
+            Ev::Issue { client } => ClientEv::Issue { client },
             Ev::Reply { client, issued, distributed } => {
-                self.metrics.complete(issued, self.q.now(), distributed);
-                let think = self.clients.think(client);
-                self.q.schedule(think, Ev::Issue { client });
+                ClientEv::Reply { client, issued, flag: distributed }
             }
-            _ => unreachable!("server event delivered to the client tier"),
+            other => ClientEv::Other(other),
         }
     }
+
+    fn issue(client: usize) -> Ev {
+        Ev::Issue { client }
+    }
 }
 
-impl ClientTier<'_> {
-    fn on_issue(&mut self, client: usize, ctx: &Shared<'_>) {
-        let n = ctx.topo.n();
-        let site = self.clients.site(client);
+/// The cluster half of the shared client tier: every operation goes to
+/// the client site's co-located coordinator shard.
+impl IssueRouter<Ev> for Shared<'_> {
+    fn route_issue(&self, tier: &mut ClientTier<'_, Ev>, client: usize) {
+        let n = self.topo.n();
+        let site = tier.clients.site(client);
         let op = {
-            let mut r = self.clients.rng(client).fork();
-            self.gen.next_op(&mut r, site, n)
+            let mut r = tier.clients.rng(client).fork();
+            tier.gen.next_op(&mut r, site, n)
         };
         let coordinator = site % n;
+        let now = tier.core.now();
         let env = OpEnvelope {
             txn: op.txn,
             args: op.args,
             client,
             client_site: site,
-            issued: self.q.now(),
+            issued: now,
         };
-        let delay = ctx.topo.servers.one_way(site, coordinator);
-        self.out.push(CrossSend {
-            target: coordinator,
-            at: self.q.now() + delay,
-            ev: Ev::Arrive { op: env },
-        });
+        let delay = self.topo.servers.one_way(site, coordinator);
+        tier.core.send(coordinator, now + delay, Ev::Arrive { op: env });
     }
 }
 
@@ -590,7 +544,7 @@ pub struct ClusterSim<'a> {
     topo: Topology,
     cfg: ClusterConfig,
     footprints: Vec<Footprint>,
-    client: ClientTier<'a>,
+    client: ClientTier<'a, Ev>,
     servers: Vec<ServerGroup>,
 }
 
@@ -603,10 +557,8 @@ impl<'a> ClusterSim<'a> {
         gen: Box<dyn OpGenerator + 'a>,
     ) -> Self {
         let n = topo.n();
-        let clients = ClientPool::new(ClientsConfig { sites: n, ..clients_cfg });
         let footprints =
             app.spec.txns.iter().map(|t| footprint(t, &app.spec.schema)).collect();
-        let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
         let servers = (0..n)
             .map(|id| ServerGroup {
                 id,
@@ -616,24 +568,11 @@ impl<'a> ClusterSim<'a> {
                 free_ops: Vec::new(),
                 rng: Rng::stream(cfg.seed, id as u64),
                 lock_waits: 0,
-                q: EventQueue::new(),
-                out: Vec::new(),
+                core: GroupCore::new(),
             })
             .collect();
-        ClusterSim {
-            app,
-            topo,
-            cfg,
-            footprints,
-            client: ClientTier {
-                clients,
-                gen,
-                metrics,
-                q: EventQueue::new(),
-                out: Vec::new(),
-            },
-            servers,
-        }
+        let client = ClientTier::new(clients_cfg, n, gen, cfg.warmup, cfg.horizon);
+        ClusterSim { app, topo, cfg, footprints, client, servers }
     }
 
     /// The conservative lookahead: every cross-group message — request,
@@ -645,19 +584,16 @@ impl<'a> ClusterSim<'a> {
     }
 
     pub fn run(mut self) -> ClusterReport {
-        for c in 0..self.client.clients.n() {
-            let jitter = VTime::from_micros((c as u64 % 97) * 13);
-            self.client.q.schedule_at(jitter, Ev::Issue { client: c });
-        }
+        self.client.boot();
         let lookahead = self.lookahead();
         let threads = parallel::resolve_threads(self.cfg.parallel);
         let horizon = self.cfg.horizon;
 
         let ClusterSim { app, topo, cfg, footprints, mut client, mut servers } = self;
-        {
+        let windows = {
             let ctx = Shared { app, topo: &topo, cfg: &cfg, footprints: &footprints };
-            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client);
-        }
+            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client)
+        };
 
         let now = cfg.horizon;
         ClusterReport {
@@ -666,8 +602,9 @@ impl<'a> ClusterSim<'a> {
             lock_waits: servers.iter().map(|s| s.lock_waits).sum(),
             lock_entries: servers.iter().map(|s| s.locks.len()).sum(),
             lock_entries_peak: servers.iter().map(|s| s.locks.peak).sum(),
-            events: client.q.processed()
-                + servers.iter().map(|s| s.q.processed()).sum::<u64>(),
+            events: client.core.q.processed()
+                + servers.iter().map(|s| s.core.q.processed()).sum::<u64>(),
+            windows,
         }
     }
 }
@@ -684,6 +621,8 @@ pub struct ClusterReport {
     /// (the leak regression metric).
     pub lock_entries_peak: usize,
     pub events: u64,
+    /// Conservative windows the engine executed.
+    pub windows: u64,
 }
 
 impl ClusterReport {

@@ -11,7 +11,8 @@
 //! # Parallel window engine
 //!
 //! The simulation is organized as `n + 1` *groups*, each owning its own
-//! [`EventQueue`], clock and state: one group per server (DB, station,
+//! [`EventQueue`](crate::simnet::EventQueue), clock and state (a
+//! [`GroupCore`]): one group per server (DB, station,
 //! token-wait queue, service-time RNG stream) plus one *client tier*
 //! (client pool, workload generator, metrics). Groups interact only by
 //! messages that pay a network latency — client→server requests,
@@ -39,11 +40,10 @@
 //! appends need no shared state.
 
 use crate::db::{Db, StateUpdate, TxnError};
-use crate::simnet::clients::{ClientPool, ClientsConfig};
-use crate::simnet::events::EventQueue;
+use crate::simnet::clients::{ClientEv, ClientTier, ClientsConfig, IssueReply, IssueRouter};
 use crate::simnet::latency::Topology;
 use crate::simnet::metrics::SimMetrics;
-use crate::simnet::parallel::{self, CrossSend, WindowGroup, CLIENT_TIER};
+use crate::simnet::parallel::{self, GroupCore, WindowGroup, CLIENT_TIER};
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
 use crate::workload::analyzed::{AnalyzedApp, Route};
@@ -203,8 +203,7 @@ struct ServerState {
     /// id (`Rng::stream`), so neither thread count nor event
     /// interleaving across servers can perturb any server's randomness.
     rng: Rng,
-    q: EventQueue<Ev>,
-    out: Vec<CrossSend<Ev>>,
+    core: GroupCore<Ev>,
     /// Token-order log of global updates (when `record_global_log`).
     log: Vec<(u64, StateUpdate)>,
 }
@@ -212,16 +211,12 @@ struct ServerState {
 impl<'s> WindowGroup<Shared<'s>> for ServerState {
     type Ev = Ev;
 
-    fn queue(&self) -> &EventQueue<Ev> {
-        &self.q
+    fn core(&self) -> &GroupCore<Ev> {
+        &self.core
     }
 
-    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
-        &mut self.q
-    }
-
-    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
-        &mut self.out
+    fn core_mut(&mut self) -> &mut GroupCore<Ev> {
+        &mut self.core
     }
 
     fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
@@ -251,17 +246,17 @@ impl ServerState {
     }
 
     fn submit_job(&mut self, job: JobKind, service: VTime, priority: bool) {
-        let now = self.q.now();
+        let now = self.core.now();
         if let Some(started) = self.station.submit(now, job, service, priority) {
-            self.q.schedule(started.service, Ev::JobDone { job: started.payload });
+            self.core.q.schedule(started.service, Ev::JobDone { job: started.payload });
         }
     }
 
     fn on_job_done(&mut self, job: JobKind, ctx: &Shared<'_>) {
         // Start whatever the station dequeues next.
-        let now = self.q.now();
+        let now = self.core.now();
         if let Some(next) = self.station.complete(now) {
-            self.q.schedule(next.service, Ev::JobDone { job: next.payload });
+            self.core.q.schedule(next.service, Ev::JobDone { job: next.payload });
         }
 
         match job {
@@ -324,11 +319,8 @@ impl ServerState {
 
     fn send_reply(&mut self, op: &OpEnvelope, ctx: &Shared<'_>) {
         let delay = ctx.client_server_latency(op.client_site, self.id);
-        self.out.push(CrossSend {
-            target: CLIENT_TIER,
-            at: self.q.now() + delay,
-            ev: Ev::Reply { client: op.client, issued: op.issued, global: op.global },
-        });
+        let ev = Ev::Reply { client: op.client, issued: op.issued, global: op.global };
+        self.core.send(CLIENT_TIER, self.core.now() + delay, ev);
     }
 
     fn on_token(&mut self, mut token: Token, ctx: &Shared<'_>) {
@@ -382,64 +374,42 @@ impl ServerState {
         let delay = hold
             + ctx.topo.servers.one_way(self.id, next)
             + VTime::from_millis_f64(ctx.cfg.hop_overhead_ms);
-        self.out.push(CrossSend {
-            target: next,
-            at: self.q.now() + delay,
-            ev: Ev::TokenArrive { token },
-        });
+        self.core.send(next, self.core.now() + delay, Ev::TokenArrive { token });
     }
 }
 
-/// The client tier: client pool, workload generator and metrics — the
-/// sequential "edge" of the simulation, processed as one group.
-struct ClientTier<'a> {
-    clients: ClientPool,
-    gen: Box<dyn OpGenerator + 'a>,
-    metrics: SimMetrics,
-    q: EventQueue<Ev>,
-    out: Vec<CrossSend<Ev>>,
-}
-
-impl<'a, 's> WindowGroup<Shared<'s>> for ClientTier<'a> {
-    type Ev = Ev;
-
-    fn queue(&self) -> &EventQueue<Ev> {
-        &self.q
-    }
-
-    fn queue_mut(&mut self) -> &mut EventQueue<Ev> {
-        &mut self.q
-    }
-
-    fn out(&mut self) -> &mut Vec<CrossSend<Ev>> {
-        &mut self.out
-    }
-
-    fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
-        match ev {
-            Ev::Issue { client } => self.on_issue(client, ctx),
-            Ev::Reply { client, issued, global } => self.on_reply(client, issued, global),
-            Ev::Arrive { .. } | Ev::JobDone { .. } | Ev::TokenArrive { .. } => {
-                unreachable!("server event delivered to the client tier")
+impl IssueReply for Ev {
+    fn classify(self) -> ClientEv<Ev> {
+        match self {
+            Ev::Issue { client } => ClientEv::Issue { client },
+            Ev::Reply { client, issued, global } => {
+                ClientEv::Reply { client, issued, flag: global }
             }
+            other => ClientEv::Other(other),
         }
     }
+
+    fn issue(client: usize) -> Ev {
+        Ev::Issue { client }
+    }
 }
 
-impl ClientTier<'_> {
-    fn on_issue(&mut self, client: usize, ctx: &Shared<'_>) {
-        let n = ctx.topo.n();
-        let site = self.clients.site(client);
+/// The conveyor half of the shared client tier: MAP-based routing (local
+/// vs global server choice, key affinity, misroute redirects).
+impl IssueRouter<Ev> for Shared<'_> {
+    fn route_issue(&self, tier: &mut ClientTier<'_, Ev>, client: usize) {
+        let n = self.topo.n();
+        let site = tier.clients.site(client);
         // Key affinity targets the nearest server site (clients at
         // server-less sites adopt the closest deployed server).
-        let affinity = ctx.nearest_server(site);
+        let affinity = self.nearest_server(site);
         let op = {
-            let rng = self.clients.rng(client);
+            let rng = tier.clients.rng(client);
             // Borrow juggling: generator needs its own &mut.
             let mut r = rng.fork();
-            self.gen.next_op(&mut r, affinity, n)
+            tier.gen.next_op(&mut r, affinity, n)
         };
-        let route = ctx.app.route(&op, n);
+        let route = self.app.route(&op, n);
         let (server, global) = match route {
             Route::Any => (affinity, false),
             Route::LocalAt(s) => (s, false),
@@ -448,35 +418,26 @@ impl ClientTier<'_> {
 
         // Misrouting: send to a wrong server which answers MAP; the client
         // then contacts the right one — two extra hops.
-        let mut delay = ctx.client_server_latency(site, server);
-        if ctx.cfg.misroute_prob > 0.0 {
-            let r = self.clients.rng(client).f64();
-            if r < ctx.cfg.misroute_prob {
+        let mut delay = self.client_server_latency(site, server);
+        if self.cfg.misroute_prob > 0.0 {
+            let r = tier.clients.rng(client).f64();
+            if r < self.cfg.misroute_prob {
                 let wrong = (server + 1) % n;
-                delay = ctx.client_server_latency(site, wrong)
-                    + ctx.client_server_latency(site, wrong)
-                    + ctx.client_server_latency(site, server);
+                delay = self.client_server_latency(site, wrong)
+                    + self.client_server_latency(site, wrong)
+                    + self.client_server_latency(site, server);
             }
         }
+        let now = tier.core.now();
         let env = OpEnvelope {
             txn: op.txn,
             args: op.args,
             client,
             client_site: site,
-            issued: self.q.now(),
+            issued: now,
             global,
         };
-        self.out.push(CrossSend {
-            target: server,
-            at: self.q.now() + delay,
-            ev: Ev::Arrive { op: env },
-        });
-    }
-
-    fn on_reply(&mut self, client: usize, issued: VTime, global: bool) {
-        self.metrics.complete(issued, self.q.now(), global);
-        let think = self.clients.think(client);
-        self.q.schedule(think, Ev::Issue { client });
+        tier.core.send(server, now + delay, Ev::Arrive { op: env });
     }
 }
 
@@ -488,7 +449,7 @@ pub struct ConveyorSim<'a> {
     stmt_maps: Vec<PreparedStmts>,
     topo: Topology,
     cfg: ConveyorConfig,
-    client: ClientTier<'a>,
+    client: ClientTier<'a, Ev>,
     servers: Vec<ServerState>,
 }
 
@@ -503,7 +464,6 @@ impl<'a> ConveyorSim<'a> {
     ) -> Self {
         let n = topo.n();
         let client_sites = cfg.client_matrix.as_ref().map(|m| m.n()).unwrap_or(n);
-        let clients = ClientPool::new(ClientsConfig { sites: client_sites, ..clients_cfg });
         let servers = (0..n)
             .map(|id| {
                 let db = if cfg.execute_real {
@@ -523,25 +483,18 @@ impl<'a> ConveyorSim<'a> {
                     rotations: 0,
                     aborts: 0,
                     rng: Rng::stream(cfg.seed ^ 0xF00D, id as u64),
-                    q: EventQueue::new(),
-                    out: Vec::new(),
+                    core: GroupCore::new(),
                     log: Vec::new(),
                 }
             })
             .collect();
-        let metrics = SimMetrics::new(cfg.warmup, cfg.horizon);
+        let client = ClientTier::new(clients_cfg, client_sites, gen, cfg.warmup, cfg.horizon);
         ConveyorSim {
             stmt_maps: app.spec.txns.iter().map(|t| t.prepared_map(&app.spec.schema)).collect(),
             app,
             topo,
             cfg,
-            client: ClientTier {
-                clients,
-                gen,
-                metrics,
-                q: EventQueue::new(),
-                out: Vec::new(),
-            },
+            client,
             servers,
         }
     }
@@ -588,23 +541,19 @@ impl<'a> ConveyorSim<'a> {
     pub fn run_keep_dbs(mut self) -> (ConveyorReport, Vec<Option<Db>>) {
         // Boot: token starts at server 0; all clients issue.
         let n = self.topo.n();
-        self.servers[0].q.schedule_at(VTime::ZERO, Ev::TokenArrive { token: Token::new(n) });
-        for c in 0..self.client.clients.n() {
-            // Stagger initial issues a little to avoid a thundering herd
-            // artifact at t=0.
-            let jitter = VTime::from_micros((c as u64 % 97) * 13);
-            self.client.q.schedule_at(jitter, Ev::Issue { client: c });
-        }
+        let token = Token::new(n);
+        self.servers[0].core.q.schedule_at(VTime::ZERO, Ev::TokenArrive { token });
+        self.client.boot();
 
         let lookahead = self.lookahead();
         let threads = parallel::resolve_threads(self.cfg.parallel);
         let horizon = self.cfg.horizon;
 
         let ConveyorSim { app, stmt_maps, topo, cfg, mut client, mut servers } = self;
-        {
+        let windows = {
             let ctx = Shared { app, stmt_maps: &stmt_maps, topo: &topo, cfg: &cfg };
-            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client);
-        }
+            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client)
+        };
 
         let now = cfg.horizon;
         let mut log: Vec<(u64, StateUpdate)> = Vec::new();
@@ -618,8 +567,9 @@ impl<'a> ConveyorSim<'a> {
             utilization: servers.iter().map(|s| s.station.utilization(now)).collect(),
             aborts: servers.iter().map(|s| s.aborts).sum(),
             db_hashes: servers.iter().map(|s| s.db.as_ref().map(|d| d.content_hash())).collect(),
-            events: client.q.processed()
-                + servers.iter().map(|s| s.q.processed()).sum::<u64>(),
+            events: client.core.q.processed()
+                + servers.iter().map(|s| s.core.q.processed()).sum::<u64>(),
+            windows,
             global_log: log.into_iter().map(|(_, u)| u).collect(),
         };
         let dbs = servers.into_iter().map(|s| s.db).collect();
@@ -638,6 +588,9 @@ pub struct ConveyorReport {
     /// tables must converge once quiesced.
     pub db_hashes: Vec<Option<u64>>,
     pub events: u64,
+    /// Conservative windows the engine executed (the worker-pool bench
+    /// divides wall clock by this to get windows/second).
+    pub windows: u64,
     /// The token's total order of global state updates (only populated
     /// with [`ConveyorConfig::record_global_log`]): the serial history
     /// every server's replicated state must be explainable by.

@@ -1,11 +1,23 @@
-//! Closed-loop client pools.
+//! Closed-loop client pools, and the one shared client tier every
+//! simulator's window engine runs.
 //!
 //! Each simulated client sits at a site, issues one operation, waits for
 //! the reply, thinks for an exponentially distributed time, and repeats —
 //! the standard closed-loop model matching the paper's "we intensify the
 //! workload by increasing the number of clients".
+//!
+//! [`ClientTier`] packages the closed loop as a [`WindowGroup`]: the
+//! pool, the workload generator, the metrics and the engine state live
+//! here once, together with the Reply → metrics → think → next-Issue arm
+//! that all three simulators used to duplicate verbatim. A simulator
+//! plugs in by mapping its event enum through [`IssueReply`] and routing
+//! freshly issued operations through [`IssueRouter`] on its shared
+//! context — which is also all a *fourth* simulator needs to do.
 
+use crate::simnet::metrics::SimMetrics;
+use crate::simnet::parallel::{GroupCore, WindowGroup};
 use crate::util::{Rng, VTime};
+use crate::workload::generator::OpGenerator;
 
 /// Client-tier configuration.
 #[derive(Debug, Clone)]
@@ -80,6 +92,122 @@ impl ClientPool {
     /// Operations issued by all clients.
     pub fn total_issued(&self) -> u64 {
         self.issued.iter().sum()
+    }
+}
+
+/// A simulator event decomposed into the client tier's view: the two
+/// arms the shared tier handles itself, or a server-side event (which a
+/// correctly wired simulation never delivers to the tier).
+#[derive(Debug)]
+pub enum ClientEv<E> {
+    /// A client (after thinking) issues its next operation.
+    Issue {
+        /// The issuing client.
+        client: usize,
+    },
+    /// A server's reply reached the client.
+    Reply {
+        /// The client the reply is for.
+        client: usize,
+        /// When the operation was issued (latency = now − issued).
+        issued: VTime,
+        /// Per-class metrics bucket: `true` = the simulator's expensive
+        /// class (global / distributed / write), `false` = the cheap one.
+        flag: bool,
+    },
+    /// Not a client-tier event.
+    Other(E),
+}
+
+/// How a simulator's event enum maps onto the client tier's two arms.
+/// Implemented by each simulation's `Ev` type; everything else about the
+/// closed loop is shared.
+pub trait IssueReply: Sized + Send {
+    /// Decompose an incoming event into the shared client-tier arms.
+    fn classify(self) -> ClientEv<Self>;
+    /// The Issue event for `client` (scheduled after the think delay).
+    fn issue(client: usize) -> Self;
+}
+
+/// The per-simulation half of the client tier, implemented on the
+/// simulation's shared window context: route one freshly issued
+/// operation — draw it from `tier.gen` with the client's RNG, pick the
+/// target server, and buffer the `Arrive` cross-send on `tier.core`.
+pub trait IssueRouter<E: IssueReply> {
+    /// Client `client` (who has finished thinking) issues its next
+    /// operation.
+    fn route_issue(&self, tier: &mut ClientTier<'_, E>, client: usize);
+}
+
+/// The client tier of a window-parallel simulation: client pool,
+/// workload generator, metrics and engine state — the sequential "edge"
+/// processed as one group on the driving thread. Shared by every
+/// simulator; see the module docs for how a simulation plugs in.
+pub struct ClientTier<'a, E> {
+    /// The closed-loop client pool (sites, per-client RNGs, think times).
+    pub clients: ClientPool,
+    /// The workload generator operations are drawn from.
+    pub gen: Box<dyn OpGenerator + 'a>,
+    /// Latency/throughput collection over the measurement window.
+    pub metrics: SimMetrics,
+    /// The tier's window-engine state (event queue + cross-send buffer).
+    pub core: GroupCore<E>,
+}
+
+impl<'a, E: IssueReply> ClientTier<'a, E> {
+    /// Build the tier: the pool is forked from `cfg` with its site count
+    /// overridden to `sites` (simulators derive it from the topology),
+    /// and metrics measure `[warmup, horizon]`.
+    pub fn new(
+        cfg: ClientsConfig,
+        sites: usize,
+        gen: Box<dyn OpGenerator + 'a>,
+        warmup: VTime,
+        horizon: VTime,
+    ) -> Self {
+        ClientTier {
+            clients: ClientPool::new(ClientsConfig { sites, ..cfg }),
+            gen,
+            metrics: SimMetrics::new(warmup, horizon),
+            core: GroupCore::new(),
+        }
+    }
+
+    /// Boot the closed loop: schedule every client's first Issue,
+    /// staggered a little to avoid a thundering-herd artifact at t=0.
+    pub fn boot(&mut self) {
+        for c in 0..self.clients.n() {
+            let jitter = VTime::from_micros((c as u64 % 97) * 13);
+            self.core.q.schedule_at(jitter, E::issue(c));
+        }
+    }
+}
+
+impl<Ctx, E> WindowGroup<Ctx> for ClientTier<'_, E>
+where
+    E: IssueReply,
+    Ctx: IssueRouter<E>,
+{
+    type Ev = E;
+
+    fn core(&self) -> &GroupCore<E> {
+        &self.core
+    }
+
+    fn core_mut(&mut self) -> &mut GroupCore<E> {
+        &mut self.core
+    }
+
+    fn handle(&mut self, ev: E, ctx: &Ctx) {
+        match ev.classify() {
+            ClientEv::Issue { client } => ctx.route_issue(self, client),
+            ClientEv::Reply { client, issued, flag } => {
+                self.metrics.complete(issued, self.core.q.now(), flag);
+                let think = self.clients.think(client);
+                self.core.q.schedule(think, E::issue(client));
+            }
+            ClientEv::Other(_) => unreachable!("server event delivered to the client tier"),
+        }
     }
 }
 

@@ -118,12 +118,25 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|Reverse(k)| k.at)
     }
 
-    /// Pop the next event only if it fires strictly before `cut` — the
-    /// drain primitive of the window-parallel engine: a group processes
-    /// its own events up to the window bound and no further.
+    /// Pop the next event only if it fires strictly before `cut`
+    /// (exclusive bound).
     pub fn pop_before(&mut self, cut: VTime) -> Option<(VTime, E)> {
         match self.peek_time() {
             Some(t) if t < cut => self.pop(),
+            _ => None,
+        }
+    }
+
+    /// Pop the next event only if it fires at or before `cut` (inclusive
+    /// bound) — the drain primitive of the window-parallel engine: a
+    /// group processes its own events up to the window bound and no
+    /// further. The inclusive form lets the engine express windows that
+    /// reach the very top of representable virtual time without
+    /// overflowing (an exclusive bound above [`VTime`]'s maximum does
+    /// not exist).
+    pub fn pop_through(&mut self, cut: VTime) -> Option<(VTime, E)> {
+        match self.peek_time() {
+            Some(t) if t <= cut => self.pop(),
             _ => None,
         }
     }
@@ -199,6 +212,21 @@ mod tests {
         assert!(q.pop_before(VTime::from_millis(5)).is_none());
         assert_eq!(q.pop_before(VTime::from_millis(6)).unwrap().1, "b");
         assert!(q.pop_before(VTime::from_secs(1)).is_none());
+    }
+
+    #[test]
+    fn pop_through_is_inclusive_and_overflow_free() {
+        let mut q = EventQueue::new();
+        q.schedule(VTime::from_millis(1), "a");
+        q.schedule(VTime::from_millis(5), "b");
+        assert_eq!(q.pop_through(VTime::from_millis(4)).unwrap().1, "a");
+        // Inclusive bound: an event *at* the cut pops.
+        assert_eq!(q.pop_through(VTime::from_millis(5)).unwrap().1, "b");
+        assert!(q.pop_through(VTime::from_secs(1)).is_none());
+        // The maximum representable time is a valid inclusive cut: it
+        // admits every event, including one at the maximum itself.
+        q.schedule_at(VTime::from_micros(u64::MAX), "z");
+        assert_eq!(q.pop_through(VTime::from_micros(u64::MAX)).unwrap().1, "z");
     }
 
     #[test]

@@ -39,8 +39,14 @@ impl SimMetrics {
     }
 
     /// Record a completed operation. `global` selects the per-class bucket.
+    ///
+    /// Samples outside the measurement window are ignored: warm-up on
+    /// the left, and anything completing *past the horizon* on the
+    /// right — [`throughput`](Self::throughput) divides by the fixed
+    /// `horizon − warmup` window, so a simulation that drove events
+    /// beyond the horizon would otherwise silently inflate ops/sec.
     pub fn complete(&mut self, issued_at: VTime, done_at: VTime, global: bool) {
-        if done_at < self.warmup {
+        if done_at < self.warmup || done_at > self.horizon {
             return;
         }
         let ms = (done_at - issued_at).as_millis_f64();
@@ -85,6 +91,27 @@ mod tests {
         assert_eq!(m.completed, 1);
         assert_eq!(m.latency.count(), 1);
         assert!((m.mean_latency_ms() - 500.0).abs() < 1e-9);
+    }
+
+    /// Satellite bugfix regression: the measurement window is inclusive
+    /// at both edges and closed on the right. A sample at exactly
+    /// `warmup` and one at exactly `horizon` count; a post-horizon
+    /// sample is ignored, so it can no longer inflate `throughput()`
+    /// (which divides by the fixed `horizon − warmup` window).
+    #[test]
+    fn window_boundaries_and_post_horizon_samples() {
+        let mut m = SimMetrics::new(VTime::from_secs(1), VTime::from_secs(3));
+        m.complete(VTime::ZERO, VTime::from_secs(1), false); // done_at == warmup
+        m.complete(VTime::from_secs(2), VTime::from_secs(3), true); // done_at == horizon
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.local_latency.count(), 1);
+        assert_eq!(m.global_latency.count(), 1);
+        let tput = m.throughput();
+        // A sample completing past the horizon must not count anywhere.
+        m.complete(VTime::from_secs(2), VTime::from_secs(3) + VTime::from_micros(1), false);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.latency.count(), 2);
+        assert!((m.throughput() - tput).abs() < 1e-12);
     }
 
     #[test]

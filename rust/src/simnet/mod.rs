@@ -11,11 +11,14 @@
 //! * [`events`] — the event queue and virtual clock,
 //! * [`latency`] — site topologies and the Table 2 matrix,
 //! * [`station`] — the W-worker server station model,
-//! * [`clients`] — closed-loop client pools with think times,
+//! * [`clients`] — closed-loop client pools with think times, plus the
+//!   shared [`clients::ClientTier`] window group every simulator's
+//!   closed loop runs on,
 //! * [`metrics`] — latency/throughput collection over a warm-up window,
 //! * [`parallel`] — the conservative-window parallel engine
-//!   ([`parallel::WindowGroup`] + [`parallel::run_windows`]) every
-//!   simulator executes on.
+//!   ([`parallel::WindowGroup`] + [`parallel::GroupCore`] +
+//!   [`parallel::run_windows`], fanned out over a persistent
+//!   [`parallel::WorkerPool`]) every simulator executes on.
 //!
 //! The system models built on top live in sibling modules:
 //! [`crate::conveyor`] (Eliá), [`crate::cluster`] (MySQL-Cluster-like data
@@ -30,11 +33,11 @@ pub mod metrics;
 pub mod parallel;
 pub mod station;
 
-pub use clients::{ClientPool, ClientsConfig};
+pub use clients::{ClientEv, ClientPool, ClientTier, ClientsConfig, IssueReply, IssueRouter};
 pub use events::{EventQueue, Schedulable};
 pub use latency::{LatencyMatrix, Site, Topology};
 pub use metrics::SimMetrics;
-pub use parallel::{run_windows, CrossSend, WindowGroup};
+pub use parallel::{run_windows, CrossSend, GroupCore, WindowGroup, WorkerPool};
 pub use station::Station;
 
 // The conservative-window parallel execution mode built from these

@@ -1,27 +1,37 @@
 //! The conservative-window parallel engine shared by every simulator.
 //!
-//! Two layers live here:
+//! Three layers live here:
 //!
 //! * [`fan_out_mut`] — scoped fan-out: "run f over every server's state,
 //!   using up to N OS threads, with no shared mutable state". The item
 //!   slice is split into one contiguous chunk per thread, each chunk is
 //!   processed sequentially on its thread, and the call returns once
-//!   every chunk is done.
-//! * [`run_windows`] — the window driver built on top of it: a set of
-//!   isolated [`WindowGroup`]s (one per server plus a client tier), each
-//!   owning its own event queue and state, advanced in conservative
-//!   lookahead windows with a canonical cross-group merge. This is the
-//!   engine `ConveyorSim`, `ClusterSim` and `BaselineSim` all run on;
-//!   the full determinism argument is in `simnet/README.md`.
+//!   every chunk is done. Retained as the spawn-per-call reference
+//!   implementation (and for one-shot fan-outs outside the window loop).
+//! * [`WorkerPool`] — the persistent variant: worker threads created
+//!   once, parked on a channel `recv` between dispatches, fed chunk
+//!   assignments over round-trip channels. Identical chunking, identical
+//!   results; per-dispatch cost is a park/unpark instead of an OS thread
+//!   spawn.
+//! * [`run_windows`] — the window driver built on top: a set of isolated
+//!   [`WindowGroup`]s (one per server plus a client tier), each owning
+//!   its own event queue and state (a [`GroupCore`]), advanced in
+//!   conservative lookahead windows with a canonical cross-group merge.
+//!   This is the engine `ConveyorSim`, `ClusterSim` and `BaselineSim`
+//!   all run on; the full determinism argument is in `simnet/README.md`.
 //!
 //! Determinism: `f` receives disjoint `&mut` items and (by the `Sync`
 //! bound) only shared immutable context, so the *result* of a fan-out is
 //! independent of the thread count and of OS scheduling — threads decide
 //! only *where* each item is processed, never in what order effects are
-//! observed (items do not observe each other at all).
+//! observed (items do not observe each other at all). The worker pool
+//! changes who runs a chunk, never what a chunk contains.
 
 use crate::simnet::events::EventQueue;
 use crate::util::VTime;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
 
 /// Number of worker threads a `parallel = 0` ("auto") knob resolves to.
 pub fn available_threads() -> usize {
@@ -36,6 +46,14 @@ pub fn resolve_threads(requested: usize) -> usize {
     } else {
         requested
     }
+}
+
+/// Split `len` items over at most `threads` workers the way both fan-out
+/// paths do: one contiguous chunk per worker, `ceil(len / workers)`
+/// items each. Returns the chunk size (callers derive the chunk count).
+fn chunk_size(threads: usize, len: usize) -> usize {
+    let threads = threads.min(len).max(1);
+    len.div_ceil(threads)
 }
 
 /// Apply `f` to every item of `items`, fanning out across at most
@@ -54,7 +72,7 @@ where
         }
         return;
     }
-    let chunk = items.len().div_ceil(threads);
+    let chunk = chunk_size(threads, items.len());
     let f = &f; // shared by reference; `move` below copies the reference
     std::thread::scope(|scope| {
         for slice in items.chunks_mut(chunk) {
@@ -65,6 +83,153 @@ where
             });
         }
     });
+}
+
+/// A type-erased chunk assignment executed by a parked worker. The boxed
+/// closure borrows the dispatching call's stack (its chunk and the
+/// shared `f`); the lifetime erasure is sound because every dispatch is
+/// joined over the round-trip channel before
+/// [`WorkerPool::fan_out_mut`] returns — on the panic path included.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent fan-out pool: `threads - 1` worker OS threads created
+/// once (the dispatching thread is the remaining worker), parked on a
+/// channel `recv` between dispatches. [`fan_out_mut`](Self::fan_out_mut)
+/// splits the item slice into the same contiguous chunks as the scoped
+/// [`fan_out_mut`](crate::simnet::parallel::fan_out_mut) free function
+/// and round-trips one message pair per chunk, so a window costs a
+/// park/unpark per busy worker instead of an OS thread spawn — the cost
+/// note in `simnet/README.md`.
+///
+/// Results are bit-identical to the scoped and sequential paths for any
+/// thread count: chunking is deterministic and chunks are disjoint
+/// `&mut` ranges that never observe each other.
+pub struct WorkerPool {
+    /// Upper bound on concurrent chunks (workers + the dispatcher).
+    threads: usize,
+    /// One task channel per parked worker.
+    senders: Vec<Sender<Task>>,
+    /// Round-trip completions (one message per dispatched task).
+    done_rx: Receiver<std::thread::Result<()>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool that fans out over at most `threads` concurrent
+    /// chunks: `threads - 1` parked workers plus the dispatching thread.
+    /// `threads <= 1` spawns nothing — every dispatch runs inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (done_tx, done_rx) = channel();
+        let mut senders = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        for _ in 1..threads {
+            let (tx, rx) = channel::<Task>();
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                // Parked here between windows; a task arrival unparks.
+                while let Ok(task) = rx.recv() {
+                    let r = catch_unwind(AssertUnwindSafe(task));
+                    if done.send(r).is_err() {
+                        break;
+                    }
+                }
+            }));
+            senders.push(tx);
+        }
+        WorkerPool { threads, senders, done_rx, handles }
+    }
+
+    /// Maximum number of concurrent chunks this pool fans out over.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every item of `items` using the parked workers, with
+    /// exactly the chunking of the scoped
+    /// [`fan_out_mut`](crate::simnet::parallel::fan_out_mut): the
+    /// dispatching thread runs the first chunk, workers run the rest.
+    /// Blocks until every chunk is done; a panic in any chunk is
+    /// re-raised here after all chunks have been joined.
+    ///
+    /// Takes `&mut self` deliberately: the lifetime-erased dispatch
+    /// below is sound only if completions on the shared `done_rx`
+    /// belong to *this* call, so re-entrant dispatch on one pool must
+    /// be unrepresentable, not merely unconventional.
+    pub fn fan_out_mut<T, F>(&mut self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(&mut T) + Sync,
+    {
+        let threads = self.threads.min(items.len()).max(1);
+        if threads <= 1 || self.senders.is_empty() {
+            for it in items.iter_mut() {
+                f(it);
+            }
+            return;
+        }
+        let chunk = chunk_size(threads, items.len());
+        let f = &f;
+        let mut chunks = items.chunks_mut(chunk);
+        let own = chunks.next();
+        let mut sent = 0usize;
+        for (i, slice) in chunks.enumerate() {
+            let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                for it in slice.iter_mut() {
+                    f(it);
+                }
+            });
+            // SAFETY: the task borrows `items` and `f` from this call's
+            // stack. We erase the lifetime to send it to a pool thread,
+            // and re-establish soundness by receiving exactly one `done`
+            // message per sent task below — on every path, including the
+            // own-chunk panic path — before returning. No borrow ever
+            // outlives this call, and `&mut self` guarantees no other
+            // dispatch can interleave on `done_rx` and steal this
+            // call's completions.
+            let task: Task = unsafe { std::mem::transmute(task) };
+            self.senders[i % self.senders.len()]
+                .send(task)
+                .expect("worker pool thread died");
+            sent += 1;
+        }
+        // The dispatcher works its own chunk while the workers run;
+        // unwinding is deferred until every outstanding chunk is joined
+        // (the borrows above must not outlive an unwound frame).
+        let own_result = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(slice) = own {
+                for it in slice.iter_mut() {
+                    f(it);
+                }
+            }
+        }));
+        let mut worker_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..sent {
+            match self.done_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(p)) => worker_panic = Some(p),
+                Err(_) => worker_panic = Some(Box::new("worker pool thread died")),
+            }
+        }
+        if let Err(p) = own_result {
+            resume_unwind(p);
+        }
+        if let Some(p) = worker_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Disconnect the task channels: parked workers' `recv` errors
+        // and their loops exit. No task can be in flight here — every
+        // dispatch joined before `fan_out_mut` returned.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Pseudo group id of the client tier in cross-send targets (servers are
@@ -86,45 +251,101 @@ pub struct CrossSend<E> {
     pub ev: E,
 }
 
+/// The window-engine state every group owns: its event queue (and with
+/// it the group's virtual clock) plus the per-window cross-send buffer.
+/// Embedding one of these and pointing [`WindowGroup::core`] /
+/// [`WindowGroup::core_mut`] at it is all a group supplies — the
+/// `queue()`/`queue_mut()`/`out()` accessors and the window mechanics
+/// (`peek`/`drain`/`deliver`) are provided once by the trait, instead of
+/// being repeated by every group struct of every simulator.
+#[derive(Debug)]
+pub struct GroupCore<E> {
+    /// The group's event queue.
+    pub q: EventQueue<E>,
+    /// Cross-group sends buffered during the current window, in emission
+    /// order (merged canonically by [`run_windows`] after the window).
+    pub out: Vec<CrossSend<E>>,
+}
+
+impl<E> Default for GroupCore<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> GroupCore<E> {
+    /// An empty core at virtual time zero.
+    pub fn new() -> Self {
+        GroupCore { q: EventQueue::new(), out: Vec::new() }
+    }
+
+    /// The group's current virtual time.
+    pub fn now(&self) -> VTime {
+        self.q.now()
+    }
+
+    /// Buffer a cross-group send: deliver `ev` to group `target`
+    /// (servers `0..n`, [`CLIENT_TIER`] = the client tier) at absolute
+    /// time `at`.
+    pub fn send(&mut self, target: usize, at: VTime, ev: E) {
+        self.out.push(CrossSend { target, at, ev });
+    }
+}
+
 /// One isolated group of a window-parallel simulation: it owns an event
 /// queue plus whatever mutable state its events touch, and interacts
 /// with other groups only through buffered [`CrossSend`]s. `Ctx` is the
 /// simulation's shared immutable context (config, topology, app), the
 /// same reference handed to every group of a window.
 ///
-/// Implementors supply the queue/out-buffer accessors and [`handle`]
-/// (the group's event semantics); the window mechanics — `peek`,
-/// `drain`, `deliver` — are provided once here.
+/// Implementors supply the [`GroupCore`] accessors and [`handle`] (the
+/// group's event semantics); the accessor boilerplate — `queue`,
+/// `queue_mut`, `out` — and the window mechanics — `peek`, `drain`,
+/// `deliver` — are provided once here.
 ///
 /// [`handle`]: WindowGroup::handle
 pub trait WindowGroup<Ctx> {
     /// The event payload type shared by every group of the simulation.
     type Ev: Send;
-    /// The group's event queue.
-    fn queue(&self) -> &EventQueue<Self::Ev>;
-    /// Mutable access to the group's event queue.
-    fn queue_mut(&mut self) -> &mut EventQueue<Self::Ev>;
-    /// The window's buffered cross-group sends, in emission order.
-    fn out(&mut self) -> &mut Vec<CrossSend<Self::Ev>>;
+    /// The group's engine state (queue + cross-send buffer).
+    fn core(&self) -> &GroupCore<Self::Ev>;
+    /// Mutable access to the group's engine state.
+    fn core_mut(&mut self) -> &mut GroupCore<Self::Ev>;
     /// Process one event: may schedule intra-group events and buffer
     /// cross-group sends, but must never touch another group's state.
     fn handle(&mut self, ev: Self::Ev, ctx: &Ctx);
 
-    /// Earliest pending event in this group's queue.
-    fn peek(&self) -> Option<VTime> {
-        self.queue().peek_time()
+    /// The group's event queue.
+    fn queue(&self) -> &EventQueue<Self::Ev> {
+        &self.core().q
     }
 
-    /// Process own events strictly before `cut` (the window bound).
+    /// Mutable access to the group's event queue.
+    fn queue_mut(&mut self) -> &mut EventQueue<Self::Ev> {
+        &mut self.core_mut().q
+    }
+
+    /// The window's buffered cross-group sends, in emission order.
+    fn out(&mut self) -> &mut Vec<CrossSend<Self::Ev>> {
+        &mut self.core_mut().out
+    }
+
+    /// Earliest pending event in this group's queue.
+    fn peek(&self) -> Option<VTime> {
+        self.core().q.peek_time()
+    }
+
+    /// Process own events at times up to and including `cut` (the
+    /// inclusive window bound).
     fn drain(&mut self, cut: VTime, ctx: &Ctx) {
-        while let Some((_, ev)) = self.queue_mut().pop_before(cut) {
+        while let Some((_, ev)) = self.core_mut().q.pop_through(cut) {
             self.handle(ev, ctx);
         }
     }
 
     /// Insert a merged cross-group event into this group's queue.
     fn deliver(&mut self, at: VTime, ev: Self::Ev) {
-        self.queue_mut().schedule_at(at, ev);
+        self.core_mut().q.schedule_at(at, ev);
     }
 }
 
@@ -142,9 +363,10 @@ struct MergeEntry<E> {
 /// Drive a set of window groups to `horizon`: repeatedly take the
 /// earliest pending event time `T` across all groups, drain every group
 /// independently over the window `[T, T + lookahead)` — servers fanned
-/// out over at most `threads` scoped threads, the client tier on the
-/// driving thread — then merge the buffered cross-group sends back in
-/// canonical `(arrival time, source rank, emission number)` order.
+/// out over a [`WorkerPool`] of at most `threads` parked workers, the
+/// client tier on the driving thread — then merge the buffered
+/// cross-group sends back in canonical `(arrival time, source rank,
+/// emission number)` order. Returns the number of windows executed.
 ///
 /// `lookahead` must be a lower bound on the latency any cross-group
 /// message pays; a zero lookahead (degenerate topology) falls back to
@@ -159,19 +381,30 @@ pub fn run_windows<Ctx, S, C>(
     ctx: &Ctx,
     servers: &mut [S],
     client: &mut C,
-) where
+) -> u64
+where
     Ctx: Sync,
     S: WindowGroup<Ctx> + Send,
     C: WindowGroup<Ctx, Ev = S::Ev>,
 {
     let n = servers.len();
+    // The pool outlives the whole run: workers are created once and
+    // parked between windows, so per-window coordination is a channel
+    // round-trip per busy worker, not an OS thread spawn.
+    let mut pool =
+        if threads > 1 && n > 1 { Some(WorkerPool::new(threads.min(n))) } else { None };
     // Reused across rounds: steady state allocates nothing per window.
     let mut merge_buf: Vec<MergeEntry<S::Ev>> = Vec::new();
+    let mut peeks: Vec<Option<VTime>> = vec![None; n];
+    let mut windows = 0u64;
     loop {
-        // T = earliest pending event anywhere; stop past the horizon.
+        // One pass over the heads of all queues: record every server's
+        // earliest pending time (reused below for the spawn heuristic)
+        // while deriving T = the earliest pending event anywhere.
         let mut t_min = client.peek();
-        for s in servers.iter() {
-            if let Some(t) = s.peek() {
+        for (p, s) in peeks.iter_mut().zip(servers.iter()) {
+            *p = s.peek();
+            if let Some(t) = *p {
                 t_min = Some(t_min.map_or(t, |m| m.min(t)));
             }
         }
@@ -179,31 +412,41 @@ pub fn run_windows<Ctx, S, C>(
         if t > horizon {
             break;
         }
-        // Exclusive processing cut: [T, T+L) ∩ [0, horizon].
+        windows += 1;
         let width = if lookahead == VTime::ZERO {
             VTime::from_micros(1)
         } else {
             lookahead
         };
-        let cut = VTime::from_micros((t + width).as_micros().min(horizon.as_micros() + 1));
+        // Inclusive processing cut: [T, T+L) ∩ [0, horizon], expressed
+        // as "events at times <= cut". `width >= 1`, so the exclusive
+        // bound `T + L` becomes the inclusive `T + (L-1)`; the
+        // saturating add keeps windows near VTime's maximum exact (the
+        // old exclusive `horizon + 1` bound overflowed in debug builds)
+        // — a sum clamped to u64::MAX covers all representable time,
+        // which is precisely the right window there.
+        let cut = VTime::from_micros(
+            t.as_micros()
+                .saturating_add(width.as_micros() - 1)
+                .min(horizon.as_micros()),
+        );
 
         // Client tier on the driving thread, then the servers fan out.
         // Groups cannot interact inside a window, so this order is a
         // scheduling choice, not a semantic one.
         client.drain(cut, ctx);
-        // Spawn when at least two servers have work *inside this window*
-        // (queued future events don't count): sparse windows stay on the
-        // driving thread. Both paths are identical, so this is purely a
-        // spawn-overhead heuristic.
-        let busy = servers
-            .iter()
-            .filter(|s| s.peek().is_some_and(|pt| pt < cut))
-            .count();
-        if threads > 1 && busy >= 2 {
-            fan_out_mut(threads, servers, |s| s.drain(cut, ctx));
-        } else {
-            for s in servers.iter_mut() {
-                s.drain(cut, ctx);
+        // Dispatch to the pool when at least two servers have work
+        // *inside this window* (queued future events don't count):
+        // sparse windows stay on the driving thread. Both paths are
+        // identical, so this is purely a coordination-overhead
+        // heuristic. `peeks` was filled above — no second heap sweep.
+        let busy = peeks.iter().filter(|p| p.is_some_and(|pt| pt <= cut)).count();
+        match &mut pool {
+            Some(pool) if busy >= 2 => pool.fan_out_mut(servers, |s| s.drain(cut, ctx)),
+            _ => {
+                for s in servers.iter_mut() {
+                    s.drain(cut, ctx);
+                }
             }
         }
 
@@ -239,6 +482,7 @@ pub fn run_windows<Ctx, S, C>(
             }
         }
     }
+    windows
 }
 
 #[cfg(test)]
@@ -262,18 +506,20 @@ mod tests {
         }
     }
 
+    fn scramble(x: &mut u64) {
+        let mut r = crate::util::Rng::new(*x);
+        for _ in 0..10 {
+            *x = x.wrapping_add(r.next_u64());
+        }
+    }
+
     #[test]
     fn fan_out_result_is_thread_count_independent() {
         // Each item's result depends only on the item itself, so any
         // thread count must produce bit-identical output.
         let run = |threads: usize| {
             let mut xs: Vec<u64> = (0..101).collect();
-            fan_out_mut(threads, &mut xs, |x| {
-                let mut r = crate::util::Rng::new(*x);
-                for _ in 0..10 {
-                    *x = x.wrapping_add(r.next_u64());
-                }
-            });
+            fan_out_mut(threads, &mut xs, scramble);
             xs
         };
         let base = run(1);
@@ -282,15 +528,55 @@ mod tests {
         }
     }
 
+    /// Satellite: the persistent pool is chunk-for-chunk equivalent to
+    /// the scoped fan-out (and hence to the sequential loop) at every
+    /// thread count, including pools wider than the item slice, reused
+    /// across many dispatches.
+    #[test]
+    fn pool_fan_out_matches_scoped_fan_out() {
+        let scoped = |threads: usize| {
+            let mut xs: Vec<u64> = (0..101).collect();
+            fan_out_mut(threads, &mut xs, scramble);
+            xs
+        };
+        for threads in [1usize, 2, 4, 7, 16, 128] {
+            let mut pool = WorkerPool::new(threads);
+            assert_eq!(pool.threads(), threads.max(1));
+            let expect = scoped(threads);
+            // Reuse the same pool for several rounds: parked workers
+            // must behave identically on every dispatch.
+            for round in 0..3 {
+                let mut xs: Vec<u64> = (0..101).collect();
+                pool.fan_out_mut(&mut xs, scramble);
+                assert_eq!(xs, expect, "threads={threads} round={round}");
+            }
+        }
+    }
+
     #[test]
     fn empty_slice_is_fine() {
         let mut xs: Vec<u32> = vec![];
         fan_out_mut(4, &mut xs, |_| unreachable!());
+        WorkerPool::new(4).fan_out_mut(&mut xs, |_: &mut u32| unreachable!());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn pool_propagates_worker_panics() {
+        let mut pool = WorkerPool::new(4);
+        let mut xs: Vec<u64> = (0..8).collect();
+        // Item 7 lands in a worker's chunk (the dispatcher runs chunk 0);
+        // the panic must re-raise on the dispatching thread — after all
+        // chunks joined, so no borrow outlives the unwound frame.
+        pool.fan_out_mut(&mut xs, |x| {
+            if *x == 7 {
+                panic!("boom");
+            }
+        });
     }
 
     // ---- generic window driver ----
 
-    use crate::simnet::events::EventQueue;
     use crate::util::Rng;
 
     /// Toy protocol: the client pings a random server; the server works
@@ -309,34 +595,26 @@ mod tests {
     struct TServer {
         rng: Rng,
         sum: u64,
-        q: EventQueue<TEv>,
-        out: Vec<CrossSend<TEv>>,
+        core: GroupCore<TEv>,
     }
 
     impl WindowGroup<()> for TServer {
         type Ev = TEv;
-        fn queue(&self) -> &EventQueue<TEv> {
-            &self.q
+        fn core(&self) -> &GroupCore<TEv> {
+            &self.core
         }
-        fn queue_mut(&mut self) -> &mut EventQueue<TEv> {
-            &mut self.q
-        }
-        fn out(&mut self) -> &mut Vec<CrossSend<TEv>> {
-            &mut self.out
+        fn core_mut(&mut self) -> &mut GroupCore<TEv> {
+            &mut self.core
         }
         fn handle(&mut self, ev: TEv, _ctx: &()) {
             match ev {
                 TEv::Ping(x) => {
                     let d = VTime::from_micros(self.rng.gen_range(2_000));
-                    self.q.schedule(d, TEv::Work(x));
+                    self.core.q.schedule(d, TEv::Work(x));
                 }
                 TEv::Work(x) => {
-                    self.sum = self.sum.wrapping_add(x as u64 ^ self.q.now().as_micros());
-                    self.out.push(CrossSend {
-                        target: CLIENT_TIER,
-                        at: self.q.now() + LAT,
-                        ev: TEv::Pong,
-                    });
+                    self.sum = self.sum.wrapping_add(x as u64 ^ self.core.q.now().as_micros());
+                    self.core.send(CLIENT_TIER, self.core.q.now() + LAT, TEv::Pong);
                 }
                 TEv::Pong => unreachable!(),
             }
@@ -347,69 +625,133 @@ mod tests {
         rng: Rng,
         n_servers: usize,
         pongs: u64,
-        q: EventQueue<TEv>,
-        out: Vec<CrossSend<TEv>>,
+        core: GroupCore<TEv>,
     }
 
     impl WindowGroup<()> for TClient {
         type Ev = TEv;
-        fn queue(&self) -> &EventQueue<TEv> {
-            &self.q
+        fn core(&self) -> &GroupCore<TEv> {
+            &self.core
         }
-        fn queue_mut(&mut self) -> &mut EventQueue<TEv> {
-            &mut self.q
-        }
-        fn out(&mut self) -> &mut Vec<CrossSend<TEv>> {
-            &mut self.out
+        fn core_mut(&mut self) -> &mut GroupCore<TEv> {
+            &mut self.core
         }
         fn handle(&mut self, ev: TEv, _ctx: &()) {
             match ev {
                 TEv::Pong => {
                     self.pongs += 1;
                     let t = self.rng.range(0, self.n_servers);
-                    self.out.push(CrossSend {
-                        target: t,
-                        at: self.q.now() + LAT,
-                        ev: TEv::Ping(self.pongs as u32),
-                    });
+                    self.core.send(t, self.core.q.now() + LAT, TEv::Ping(self.pongs as u32));
                 }
                 _ => unreachable!(),
             }
         }
     }
 
-    fn drive(threads: usize) -> (u64, Vec<u64>, u64) {
+    fn drive(threads: usize) -> (u64, Vec<u64>, u64, u64) {
         let n = 4;
         let mut servers: Vec<TServer> = (0..n)
             .map(|i| TServer {
                 rng: Rng::stream(9, i as u64),
                 sum: 0,
-                q: EventQueue::new(),
-                out: Vec::new(),
+                core: GroupCore::new(),
             })
             .collect();
         let mut client = TClient {
             rng: Rng::new(3),
             n_servers: n,
             pongs: 0,
-            q: EventQueue::new(),
-            out: Vec::new(),
+            core: GroupCore::new(),
         };
         for c in 0..8u64 {
-            client.q.schedule_at(VTime::from_micros(c * 7), TEv::Pong);
+            client.core.q.schedule_at(VTime::from_micros(c * 7), TEv::Pong);
         }
-        run_windows(threads, LAT, VTime::from_secs(2), &(), &mut servers, &mut client);
-        let events =
-            client.q.processed() + servers.iter().map(|s| s.q.processed()).sum::<u64>();
-        (client.pongs, servers.iter().map(|s| s.sum).collect(), events)
+        let windows =
+            run_windows(threads, LAT, VTime::from_secs(2), &(), &mut servers, &mut client);
+        let events = client.core.q.processed()
+            + servers.iter().map(|s| s.core.q.processed()).sum::<u64>();
+        (client.pongs, servers.iter().map(|s| s.sum).collect(), events, windows)
     }
 
+    /// Satellite: the toy ping-pong protocol driven through the worker
+    /// pool (threads >= 2) is bit-identical to the retained sequential
+    /// path (threads = 1, which never constructs a pool) — pongs, per
+    /// -server sums, event counts and window counts all match.
     #[test]
-    fn window_driver_is_thread_count_invariant() {
+    fn window_driver_pool_matches_sequential_path() {
         let base = drive(1);
         assert!(base.0 > 1000, "pongs={}", base.0);
+        assert!(base.3 > 100, "windows={}", base.3);
         for threads in [2usize, 3, 8] {
             assert_eq!(drive(threads), base, "threads={threads}");
         }
+    }
+
+    /// A group that only counts deliveries — for window-bound edge cases.
+    struct NullGroup {
+        seen: u64,
+        core: GroupCore<u8>,
+    }
+
+    impl NullGroup {
+        fn new() -> Self {
+            NullGroup { seen: 0, core: GroupCore::new() }
+        }
+    }
+
+    impl WindowGroup<()> for NullGroup {
+        type Ev = u8;
+        fn core(&self) -> &GroupCore<u8> {
+            &self.core
+        }
+        fn core_mut(&mut self) -> &mut GroupCore<u8> {
+            &mut self.core
+        }
+        fn handle(&mut self, _ev: u8, _ctx: &()) {
+            self.seen += 1;
+        }
+    }
+
+    /// Satellite bugfix regression: a horizon at (or next to) VTime's
+    /// maximum used to overflow the exclusive window cut
+    /// (`horizon + 1`), panicking in debug builds. The saturating
+    /// inclusive cut processes every event at or below the horizon and
+    /// terminates.
+    #[test]
+    fn max_horizon_window_does_not_overflow() {
+        let max = u64::MAX;
+        let mut s = NullGroup::new();
+        let mut c = NullGroup::new();
+        for dt in [2u64, 1, 0] {
+            s.core.q.schedule_at(VTime::from_micros(max - dt), 0);
+        }
+        c.core.q.schedule_at(VTime::from_micros(max), 0);
+        let w = run_windows(
+            1,
+            VTime::from_millis(10),
+            VTime::from_micros(max),
+            &(),
+            std::slice::from_mut(&mut s),
+            &mut c,
+        );
+        assert_eq!(w, 1, "one saturated window covers the top of the range");
+        assert_eq!(s.seen, 3);
+        assert_eq!(c.seen, 1);
+
+        // An event strictly past a near-max horizon still stays queued.
+        let mut s = NullGroup::new();
+        let mut c = NullGroup::new();
+        s.core.q.schedule_at(VTime::from_micros(max - 1), 0);
+        s.core.q.schedule_at(VTime::from_micros(max), 0);
+        run_windows(
+            1,
+            VTime::from_millis(10),
+            VTime::from_micros(max - 1),
+            &(),
+            std::slice::from_mut(&mut s),
+            &mut c,
+        );
+        assert_eq!(s.seen, 1, "the event at the horizon is processed");
+        assert_eq!(s.core.q.len(), 1, "the event past the horizon is not");
     }
 }
