@@ -22,10 +22,13 @@ test:
 # the three sims' signature tests so the minimal pool (one worker plus
 # the driver) stays byte-identical to the sequential baseline even if
 # the default ladder changes (see
-# tests/parallel_determinism.rs::alt_thread_counts).
+# tests/parallel_determinism.rs::alt_thread_counts). The final rung
+# re-runs the client-group invariants with the minimal pool: sharding
+# the client tier into K groups must stay byte-identical too.
 test-par: test
 	cd rust && ELIA_PAR_MAX=1 cargo test -q --test parallel_determinism
 	cd rust && ELIA_PAR_MAX=2 cargo test -q --test parallel_determinism thread_count_invariant
+	cd rust && ELIA_PAR_MAX=2 cargo test -q --test parallel_determinism client_group
 
 clippy:
 	cd rust && cargo clippy -- -D warnings

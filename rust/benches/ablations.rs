@@ -36,7 +36,7 @@ fn run_micro(misroute: f64) -> (f64, f64) {
         Topology::wan(3),
         ClientsConfig { n: 128, think_ms: 100.0, seed: 9, ..Default::default() },
         cfg,
-        Box::new(micro::MicroGenerator::new(&app, 0.8)),
+        |_| Box::new(micro::MicroGenerator::new(&app, 0.8)),
         |_| {},
     )
     .run();
@@ -45,8 +45,6 @@ fn run_micro(misroute: f64) -> (f64, f64) {
 
 fn run_rubis_colocate(p: f64) -> (f64, f64, f64) {
     let app = rubis::analyzed();
-    let mut gen = rubis::RubisGenerator::new(&app, rubis::RubisScale::default());
-    gen.colocate_prob = p;
     let cfg = ConveyorConfig {
         warmup: VTime::from_secs(2),
         horizon: VTime::from_secs(10),
@@ -57,7 +55,12 @@ fn run_rubis_colocate(p: f64) -> (f64, f64, f64) {
         Topology::wan(3),
         ClientsConfig { n: 512, think_ms: 1000.0, seed: 9, ..Default::default() },
         cfg,
-        Box::new(gen),
+        |g| {
+            let mut gen = rubis::RubisGenerator::new(&app, rubis::RubisScale::default())
+                .with_stream(g as u64);
+            gen.colocate_prob = p;
+            Box::new(gen)
+        },
         |_| {},
     )
     .run();

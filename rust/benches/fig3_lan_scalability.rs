@@ -17,10 +17,22 @@ fn main() {
     // Applies to *both* sides of the comparison: the Eliá Conveyor sim
     // and the MySQL-Cluster baseline now share the window engine.
     let par = args.get_parse("parallel", 0usize);
+    // Client groups for the sharded client tier (0 = one per core).
+    let groups = args.get_count("client-groups", 1);
     let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
-    let scale =
-        (if quick { ExpScale::quick() } else { ExpScale::full() }).with_parallel(par);
-    println!("[fig3 simulator threads: {}]", resolve_threads(par));
+    let mut scale = (if quick { ExpScale::quick() } else { ExpScale::full() })
+        .with_parallel(par)
+        .with_client_groups(groups);
+    // Top of the client ladder; underscore-tolerant so the scaling run
+    // reads naturally: `--clients 1_000_000`. Beyond ~128k clients the
+    // harness switches to flat bucketed metrics automatically.
+    scale.max_clients = args.get_count("clients", scale.max_clients);
+    println!(
+        "[fig3 simulator threads: {}, client groups: {}, max clients: {}]",
+        resolve_threads(par),
+        groups,
+        scale.max_clients
+    );
     let servers: Vec<usize> =
         if quick { vec![1, 2, 4] } else { vec![1, 2, 4, 6, 8, 10, 12, 14] };
 

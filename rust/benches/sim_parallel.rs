@@ -8,10 +8,21 @@
 //! results are identical (they must be — see
 //! `tests/parallel_determinism.rs`), and writes wall-clock numbers to
 //! `BENCH_sim.json`.
+//!
+//! Three scaling lines ride along:
+//! * a **million-client** Conveyor point (sharded client groups +
+//!   bucketed metrics), 1 thread vs all cores;
+//! * an **open-loop overload curve** (Poisson arrivals past a
+//!   centralized server's capacity — a regime the closed loop cannot
+//!   reach);
+//! * a **lock-shard sweep** over `LockManager::new(s)` (the
+//!   `ELIA_LOCK_SHARDS` tuning axis).
 
 use elia::baselines::{BaselineConfig, BaselineMode, BaselineSim};
 use elia::cluster::{ClusterConfig, ClusterSim};
 use elia::conveyor::{ConveyorConfig, ConveyorSim};
+use elia::db::lockmgr::{LockMode, LockTarget};
+use elia::db::LockManager;
 use elia::harness::experiments::{fig3, ExpScale, Workload};
 use elia::simnet::clients::ClientsConfig;
 use elia::simnet::latency::Topology;
@@ -19,6 +30,7 @@ use elia::simnet::parallel::available_threads;
 use elia::util::VTime;
 use elia::workload::generator::ServiceModel;
 use elia::workload::micro;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn write_json(results: &[(String, f64)], path: &str) {
@@ -50,7 +62,7 @@ fn micro_point(threads: usize) -> (f64, u64) {
         Topology::wan(3),
         ClientsConfig { n: 512, think_ms: 100.0, seed: 0xF16, ..Default::default() },
         cfg,
-        Box::new(micro::MicroGenerator::new(&app, 0.7)),
+        |_| Box::new(micro::MicroGenerator::new(&app, 0.7)),
         |_| {},
     )
     .run();
@@ -75,7 +87,7 @@ fn real_point(threads: usize) -> (f64, u64) {
         Topology::lan(4),
         ClientsConfig { n: 96, think_ms: 5.0, seed: 0xF16, ..Default::default() },
         cfg,
-        Box::new(micro::MicroGenerator::new(&app, 0.7)),
+        |_| Box::new(micro::MicroGenerator::new(&app, 0.7)),
         micro::seed,
     )
     .run();
@@ -100,7 +112,7 @@ fn cluster_point(threads: usize) -> (f64, u64) {
         Topology::lan(6),
         ClientsConfig { n: 512, think_ms: 100.0, seed: 0xF16, ..Default::default() },
         cfg,
-        Box::new(micro::MicroGenerator::new(&app, 0.7)),
+        |_| Box::new(micro::MicroGenerator::new(&app, 0.7)),
     )
     .run();
     // Checksum folds both counters injectively (lock_waits stays far
@@ -126,7 +138,7 @@ fn baseline_point(threads: usize) -> (f64, u64) {
         Topology::wan_full_client(5),
         ClientsConfig { n: 512, think_ms: 100.0, seed: 0xF16, ..Default::default() },
         cfg,
-        Box::new(micro::MicroGenerator::new(&app, 0.7)),
+        |_| Box::new(micro::MicroGenerator::new(&app, 0.7)),
     )
     .run();
     (t0.elapsed().as_secs_f64(), r.metrics.completed)
@@ -153,11 +165,104 @@ fn spawn_overhead_point(threads: usize) -> (f64, u64, u64) {
         Topology::lan(6),
         ClientsConfig { n: 512, think_ms: 100.0, seed: 0xF16, ..Default::default() },
         cfg,
-        Box::new(micro::MicroGenerator::new(&app, 0.7)),
+        |_| Box::new(micro::MicroGenerator::new(&app, 0.7)),
         |_| {},
     )
     .run();
     (t0.elapsed().as_secs_f64(), r.windows, r.metrics.completed)
+}
+
+/// Million-client Conveyor point (the tentpole scaling scenario): the
+/// client tier is sharded into 8 groups that drain over the worker
+/// pool, first issues are lazily released (no million-event boot
+/// backlog), issued accounting is O(1), and the bucketed histograms
+/// keep metrics memory flat. 8 groups at *both* thread counts, so the
+/// checksum comparison is exact even with the stateful-generator
+/// caveat out of play.
+fn million_point(threads: usize) -> (f64, u64) {
+    let app = micro::analyzed();
+    let cfg = ConveyorConfig {
+        service: ServiceModel::fixed(0.05),
+        warmup: VTime::from_secs(2),
+        horizon: VTime::from_secs(6),
+        parallel: threads,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = ConveyorSim::new(
+        &app,
+        Topology::lan(8),
+        ClientsConfig {
+            n: 1_000_000,
+            think_ms: 5000.0,
+            seed: 0xF16,
+            groups: 8,
+            bucketed: true,
+            ..Default::default()
+        },
+        cfg,
+        |_| Box::new(micro::MicroGenerator::new(&app, 0.7)),
+        |_| {},
+    )
+    .run();
+    (t0.elapsed().as_secs_f64(), r.metrics.completed)
+}
+
+/// Open-loop overload curve: Poisson arrivals at `rate` ops/s per
+/// client against a centralized WAN server (~1600 ops/s capacity at
+/// 5 ms/op × 8 workers). Returns (throughput, mean latency ms).
+fn open_loop_point(rate: Option<f64>) -> (f64, f64) {
+    let app = micro::analyzed();
+    let cfg = BaselineConfig {
+        service: ServiceModel::fixed(5.0),
+        warmup: VTime::from_secs(2),
+        horizon: VTime::from_secs(10),
+        ..BaselineConfig::centralized()
+    };
+    let r = BaselineSim::new(
+        &app,
+        Topology::wan_full_client(5),
+        ClientsConfig {
+            n: 100,
+            think_ms: 50.0,
+            seed: 0xF16,
+            arrival_rate: rate,
+            ..Default::default()
+        },
+        cfg,
+        |_| Box::new(micro::MicroGenerator::new(&app, 0.7)),
+    )
+    .run();
+    (r.throughput(), r.mean_latency_ms())
+}
+
+/// Lock-shard sweep (the `ELIA_LOCK_SHARDS` tuning axis): 8 threads
+/// hammer disjoint keys with X acquire/release pairs, so all measured
+/// contention is on the shard mutexes themselves. Returns pairs/s.
+fn lock_shard_point(shards: usize) -> f64 {
+    const THREADS: u64 = 8;
+    const PAIRS: u64 = 100_000;
+    let lm = Arc::new(LockManager::new(shards));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let lm = Arc::clone(&lm);
+            std::thread::spawn(move || {
+                for i in 0..PAIRS {
+                    // Disjoint per-thread key ranges: no lock conflicts.
+                    let target = LockTarget::Row(0, t * 1_000_000 + (i % 1024));
+                    let txn = t * 1_000_000_000 + i;
+                    lm.acquire(txn, target, LockMode::X).unwrap();
+                    lm.release(txn, &[target]);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(lm.entry_count(), 0);
+    (THREADS * PAIRS) as f64 / t0.elapsed().as_secs_f64()
 }
 
 fn main() {
@@ -198,6 +303,49 @@ fn main() {
         results.push(("sim: spawn overhead fig3 lan6 (1T windows/s)".into(), win1 as f64 / w1));
         results
             .push((format!("sim: spawn overhead fig3 lan6 ({cores}T windows/s)"), winn as f64 / wn));
+    }
+
+    // Million-client scaling point: sharded client groups over the
+    // worker pool, 1 thread vs all cores.
+    {
+        let (w1, c1) = million_point(1);
+        let (wn, cn) = million_point(0);
+        assert_eq!(c1, cn, "million-client: thread counts must not change results");
+        println!(
+            "{:<34} 1T {w1:>7.2}s   {cores}T {wn:>7.2}s   speedup {:.2}x   (check {c1})",
+            "sim: conveyor 1M clients lan8",
+            w1 / wn
+        );
+        results.push(("sim: conveyor 1M clients lan8 (1T wall ns)".into(), w1 * 1e9));
+        results.push((format!("sim: conveyor 1M clients lan8 ({cores}T wall ns)"), wn * 1e9));
+        results.push(("sim: conveyor 1M clients lan8 (speedup x1000)".into(), w1 / wn * 1000.0));
+    }
+
+    // Open-loop overload curve vs the closed-loop reference: past the
+    // server's ~1600 ops/s capacity, Poisson arrivals keep coming and
+    // latency grows with the standing queue — a curve the reply-gated
+    // closed loop cannot produce.
+    {
+        let (ct, cl) = open_loop_point(None);
+        println!("\nsim: open-loop overload (centralized wan5, 100 clients)");
+        println!("  closed loop (think 50ms)      {ct:>7.0} ops/s   mean {cl:>9.1} ms");
+        for rate in [10.0, 16.0, 20.0, 30.0] {
+            let (t, l) = open_loop_point(Some(rate));
+            println!("  open loop {rate:>4.0} ops/s/client   {t:>7.0} ops/s   mean {l:>9.1} ms");
+            results.push((format!("sim: open-loop rate {rate:.0} (mean latency us)"), l * 1e3));
+        }
+        results.push(("sim: closed-loop reference (mean latency us)".into(), cl * 1e3));
+    }
+
+    // Lock-shard sweep: how the ELIA_LOCK_SHARDS knob trades mutex
+    // contention for memory/footprint on the real lock table.
+    {
+        println!("\nsim: lock-shard sweep (8 threads, disjoint keys)");
+        for shards in [1usize, 8, 32, 128] {
+            let rate = lock_shard_point(shards);
+            println!("  shards {shards:>4}   {rate:>12.0} acquire+release/s");
+            results.push((format!("lockmgr: {shards} shards (pairs/s)"), rate));
+        }
     }
 
     // A quick fig3 point through the harness (the `--parallel` plumbing

@@ -13,14 +13,18 @@
 //! The simulation runs on the conservative window engine
 //! ([`crate::simnet::parallel::run_windows`], shared with `ConveyorSim`
 //! and `ClusterSim`): one group per deployed server (station + RNG
-//! stream) plus a client tier, interacting only through latency-paying
-//! messages (request, async replication, reply) — results are
-//! bit-identical at any thread count ([`BaselineConfig::parallel`]).
+//! stream) plus K client groups, interacting only through
+//! latency-paying messages (request, async replication, reply) —
+//! results are bit-identical at any thread count
+//! ([`BaselineConfig::parallel`]) and any client-group count
+//! ([`ClientsConfig::groups`]).
 
-use crate::simnet::clients::{ClientEv, ClientTier, ClientsConfig, IssueReply, IssueRouter};
+use crate::simnet::clients::{
+    ClientEv, ClientGroups, ClientTier, ClientsConfig, IssueReply, IssueRouter,
+};
 use crate::simnet::latency::LatencyMatrix;
 use crate::simnet::metrics::SimMetrics;
-use crate::simnet::parallel::{self, GroupCore, WindowGroup, CLIENT_TIER};
+use crate::simnet::parallel::{self, client_group_target, GroupCore, WindowGroup};
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
 use crate::workload::analyzed::AnalyzedApp;
@@ -107,6 +111,8 @@ struct Shared<'s> {
     sites: &'s LatencyMatrix,
     cfg: &'s BaselineConfig,
     n_servers: usize,
+    /// Number of client groups (for routing replies to the right one).
+    client_groups: usize,
 }
 
 impl Shared<'_> {
@@ -180,8 +186,9 @@ impl ServerGroup {
                 }
             }
             let d = ctx.sites.one_way(self.id, op.client_site);
+            let target = client_group_target(op.client, ctx.client_groups);
             let ev = Ev::Reply { client: op.client, issued: op.issued, write: op.write };
-            self.core.send(CLIENT_TIER, now + d, ev);
+            self.core.send(target, now + d, ev);
         }
     }
 }
@@ -232,7 +239,10 @@ impl IssueRouter<Ev> for Shared<'_> {
             write,
         };
         let delay = self.sites.one_way(site, server);
-        tier.core.send(server, now + delay, Ev::Arrive { op: env });
+        // Tag with the global client id: issues from every client group
+        // merge in one canonical `(time, source, client)` order, so the
+        // schedule is bit-identical at any group count.
+        tier.core.send_tagged(server, now + delay, client as u32, Ev::Arrive { op: env });
     }
 }
 
@@ -241,20 +251,22 @@ pub struct BaselineSim<'a> {
     /// Latency matrix over *client sites*; servers occupy the first sites.
     sites: LatencyMatrix,
     cfg: BaselineConfig,
-    client: ClientTier<'a, Ev>,
+    clients: ClientGroups<'a, Ev>,
     servers: Vec<ServerGroup>,
 }
 
 impl<'a> BaselineSim<'a> {
     /// `sites` is the full client-site latency matrix (all five paper
     /// sites in the WAN experiments); clients spread over all of them
-    /// regardless of how many servers the mode deploys.
+    /// regardless of how many servers the mode deploys. `gen` builds one
+    /// generator per client group (the argument is the group index);
+    /// rng-pure generators can ignore it.
     pub fn new(
         app: &'a AnalyzedApp,
         sites: LatencyMatrix,
         clients_cfg: ClientsConfig,
         cfg: BaselineConfig,
-        gen: Box<dyn OpGenerator + 'a>,
+        gen: impl FnMut(usize) -> Box<dyn OpGenerator + 'a>,
     ) -> Self {
         let n_sites = sites.n();
         let n_servers = match cfg.mode {
@@ -269,8 +281,8 @@ impl<'a> BaselineSim<'a> {
                 core: GroupCore::new(),
             })
             .collect();
-        let client = ClientTier::new(clients_cfg, n_sites, gen, cfg.warmup, cfg.horizon);
-        BaselineSim { app, sites, cfg, client, servers }
+        let clients = ClientGroups::new(clients_cfg, n_sites, cfg.warmup, cfg.horizon, gen);
+        BaselineSim { app, sites, cfg, clients, servers }
     }
 
     /// The conservative lookahead: requests, replies and async
@@ -283,23 +295,35 @@ impl<'a> BaselineSim<'a> {
     }
 
     pub fn run(mut self) -> BaselineReport {
-        self.client.boot();
+        self.clients.boot();
         let lookahead = self.lookahead();
         let threads = parallel::resolve_threads(self.cfg.parallel);
         let horizon = self.cfg.horizon;
 
-        let BaselineSim { app, sites, cfg, mut client, mut servers } = self;
+        let BaselineSim { app, sites, cfg, mut clients, mut servers } = self;
         let windows = {
-            let ctx =
-                Shared { app, sites: &sites, cfg: &cfg, n_servers: servers.len() };
-            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client)
+            let ctx = Shared {
+                app,
+                sites: &sites,
+                cfg: &cfg,
+                n_servers: servers.len(),
+                client_groups: clients.k(),
+            };
+            parallel::run_windows(
+                threads,
+                lookahead,
+                horizon,
+                &ctx,
+                &mut servers,
+                &mut clients.groups,
+            )
         };
 
         let now = cfg.horizon;
         BaselineReport {
-            metrics: client.metrics.clone(),
+            metrics: clients.metrics(),
             utilization: servers.iter().map(|s| s.station.utilization(now)).collect(),
-            events: client.core.q.processed()
+            events: clients.processed()
                 + servers.iter().map(|s| s.core.q.processed()).sum::<u64>(),
             windows,
         }
@@ -321,7 +345,9 @@ impl BaselineReport {
     }
 
     pub fn mean_latency_ms(&self) -> f64 {
-        self.metrics.latency.mean()
+        // Integer-sum mean: exact at any client-group count and defined
+        // in bucketed-only mode too.
+        self.metrics.mean_latency_ms()
     }
 }
 
@@ -384,7 +410,7 @@ mod tests {
             Topology::wan_full_client(5),
             ClientsConfig { n: clients, think_ms: 50.0, seed: 2, ..Default::default() },
             cfg,
-            Box::new(Gen { write_ratio }),
+            move |_| Box::new(Gen { write_ratio }),
         )
         .run()
     }
@@ -462,6 +488,104 @@ mod tests {
                 "threads={threads}"
             );
         }
+    }
+
+    /// The client-group property: sharding the client tier into K
+    /// groups (scheduled over any thread count) is bit-identical to the
+    /// single-group, single-thread run. Exhaustive matrix in
+    /// `tests/parallel_determinism.rs`.
+    #[test]
+    fn client_group_count_does_not_change_results() {
+        let run_k = |groups: usize, threads: usize| {
+            let app = app();
+            let cfg = BaselineConfig {
+                mode: BaselineMode::ReadOnly { n_servers: 5 },
+                warmup: VTime::from_secs(2),
+                horizon: VTime::from_secs(10),
+                service: ServiceModel::fixed(5.0),
+                parallel: threads,
+                ..BaselineConfig::centralized()
+            };
+            BaselineSim::new(
+                &app,
+                Topology::wan_full_client(5),
+                ClientsConfig { n: 20, think_ms: 50.0, seed: 2, groups, ..Default::default() },
+                cfg,
+                |_| Box::new(Gen { write_ratio: 0.3 }),
+            )
+            .run()
+        };
+        let base = run_k(1, 1);
+        assert!(base.metrics.completed > 100, "completed={}", base.metrics.completed);
+        for (groups, threads) in [(2, 1), (2, 2), (20, 0), (0, 0)] {
+            let r = run_k(groups, threads);
+            let tag = format!("groups={groups} threads={threads}");
+            assert_eq!(r.metrics.completed, base.metrics.completed, "{tag}");
+            assert_eq!(r.events, base.events, "{tag}");
+            assert_eq!(r.windows, base.windows, "{tag}");
+            assert_eq!(
+                r.mean_latency_ms().to_bits(),
+                base.mean_latency_ms().to_bits(),
+                "{tag}"
+            );
+            assert_eq!(
+                r.metrics.latency_hist.buckets(),
+                base.metrics.latency_hist.buckets(),
+                "{tag}"
+            );
+        }
+    }
+
+    /// Tentpole satellite: the open-loop client model produces an
+    /// overload curve the closed-loop model cannot. At the same nominal
+    /// per-client rate (1000/think = 20 ops/s), the closed loop
+    /// self-limits — each client waits for its reply — while Poisson
+    /// arrivals keep coming after the centralized server saturates, so
+    /// throughput pins at the service ceiling and latency grows with
+    /// the standing queue.
+    #[test]
+    fn open_loop_overload_is_distinct_from_closed_loop() {
+        let app = app();
+        let mk = |arrival_rate: Option<f64>| {
+            let cfg = BaselineConfig {
+                warmup: VTime::from_secs(2),
+                horizon: VTime::from_secs(10),
+                service: ServiceModel::fixed(5.0),
+                ..BaselineConfig::centralized()
+            };
+            BaselineSim::new(
+                &app,
+                Topology::wan_full_client(5),
+                ClientsConfig {
+                    n: 100,
+                    think_ms: 50.0,
+                    seed: 2,
+                    arrival_rate,
+                    ..Default::default()
+                },
+                cfg,
+                |_| Box::new(Gen { write_ratio: 0.3 }),
+            )
+            .run()
+        };
+        let closed = mk(None);
+        // 100 clients × 20 ops/s = 2000 ops/s offered against an
+        // 8-thread, 5 ms/op server (~1600 ops/s capacity).
+        let open = mk(Some(20.0));
+        // Closed loop self-limits well below capacity (WAN replies gate
+        // each client's next issue)...
+        assert!(closed.throughput() < 1000.0, "closed tput={}", closed.throughput());
+        // ...the open loop pins the server at its ceiling...
+        assert!(open.throughput() > 1400.0, "open tput={}", open.throughput());
+        assert!(open.throughput() < 1750.0, "open tput={}", open.throughput());
+        assert!(open.utilization[0] > 0.95, "util={:?}", open.utilization);
+        // ...and queueing delay dwarfs the closed-loop latency.
+        assert!(
+            open.mean_latency_ms() > 3.0 * closed.mean_latency_ms(),
+            "open={} closed={}",
+            open.mean_latency_ms(),
+            closed.mean_latency_ms()
+        );
     }
 
     /// Satellite guard: the documented defaults the benches assume. A

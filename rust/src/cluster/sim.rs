@@ -34,14 +34,17 @@
 //! With the lock table sharded, the simulation runs on the conservative
 //! window engine ([`crate::simnet::parallel::run_windows`], same as
 //! `ConveyorSim`): one group per server (station, lock shard, RNG
-//! stream, coordinated-op table) plus a client tier, advancing in
+//! stream, coordinated-op table) plus K client groups, advancing in
 //! lookahead windows with the canonical cross-group merge — results are
-//! bit-identical at any thread count ([`ClusterConfig::parallel`]).
+//! bit-identical at any thread count ([`ClusterConfig::parallel`]) and
+//! any client-group count ([`ClientsConfig::groups`]).
 
-use crate::simnet::clients::{ClientEv, ClientTier, ClientsConfig, IssueReply, IssueRouter};
+use crate::simnet::clients::{
+    ClientEv, ClientGroups, ClientTier, ClientsConfig, IssueReply, IssueRouter,
+};
 use crate::simnet::latency::Topology;
 use crate::simnet::metrics::SimMetrics;
-use crate::simnet::parallel::{self, GroupCore, WindowGroup, CLIENT_TIER};
+use crate::simnet::parallel::{self, client_group_target, GroupCore, WindowGroup};
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
 use crate::workload::analyzed::AnalyzedApp;
@@ -229,6 +232,8 @@ struct Shared<'s> {
     topo: &'s Topology,
     cfg: &'s ClusterConfig,
     footprints: &'s [Footprint],
+    /// Number of client groups (for routing replies to the right one).
+    client_groups: usize,
 }
 
 /// One server group: coordinator + 2PC participant + lock shard.
@@ -492,7 +497,8 @@ impl ServerGroup {
         };
         let d = ctx.topo.servers.one_way(self.id, client_site);
         let ev = Ev::Reply { client, issued, distributed };
-        self.core.send(CLIENT_TIER, self.core.now() + d, ev);
+        let target = client_group_target(client, ctx.client_groups);
+        self.core.send(target, self.core.now() + d, ev);
         // Nothing references this op id past its Complete (votes and
         // acks are all in): recycle the slot.
         self.free_ops.push(op_id);
@@ -535,7 +541,10 @@ impl IssueRouter<Ev> for Shared<'_> {
             issued: now,
         };
         let delay = self.topo.servers.one_way(site, coordinator);
-        tier.core.send(coordinator, now + delay, Ev::Arrive { op: env });
+        // Tag with the global client id: issues from every client group
+        // merge in one canonical `(time, source, client)` order, so the
+        // schedule is bit-identical at any group count.
+        tier.core.send_tagged(coordinator, now + delay, client as u32, Ev::Arrive { op: env });
     }
 }
 
@@ -544,17 +553,19 @@ pub struct ClusterSim<'a> {
     topo: Topology,
     cfg: ClusterConfig,
     footprints: Vec<Footprint>,
-    client: ClientTier<'a, Ev>,
+    clients: ClientGroups<'a, Ev>,
     servers: Vec<ServerGroup>,
 }
 
 impl<'a> ClusterSim<'a> {
+    /// `gen` builds one generator per client group (the argument is the
+    /// group index); rng-pure generators can ignore it.
     pub fn new(
         app: &'a AnalyzedApp,
         topo: Topology,
         clients_cfg: ClientsConfig,
         cfg: ClusterConfig,
-        gen: Box<dyn OpGenerator + 'a>,
+        gen: impl FnMut(usize) -> Box<dyn OpGenerator + 'a>,
     ) -> Self {
         let n = topo.n();
         let footprints =
@@ -571,8 +582,8 @@ impl<'a> ClusterSim<'a> {
                 core: GroupCore::new(),
             })
             .collect();
-        let client = ClientTier::new(clients_cfg, n, gen, cfg.warmup, cfg.horizon);
-        ClusterSim { app, topo, cfg, footprints, client, servers }
+        let clients = ClientGroups::new(clients_cfg, n, cfg.warmup, cfg.horizon, gen);
+        ClusterSim { app, topo, cfg, footprints, clients, servers }
     }
 
     /// The conservative lookahead: every cross-group message — request,
@@ -584,25 +595,38 @@ impl<'a> ClusterSim<'a> {
     }
 
     pub fn run(mut self) -> ClusterReport {
-        self.client.boot();
+        self.clients.boot();
         let lookahead = self.lookahead();
         let threads = parallel::resolve_threads(self.cfg.parallel);
         let horizon = self.cfg.horizon;
 
-        let ClusterSim { app, topo, cfg, footprints, mut client, mut servers } = self;
+        let ClusterSim { app, topo, cfg, footprints, mut clients, mut servers } = self;
         let windows = {
-            let ctx = Shared { app, topo: &topo, cfg: &cfg, footprints: &footprints };
-            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client)
+            let ctx = Shared {
+                app,
+                topo: &topo,
+                cfg: &cfg,
+                footprints: &footprints,
+                client_groups: clients.k(),
+            };
+            parallel::run_windows(
+                threads,
+                lookahead,
+                horizon,
+                &ctx,
+                &mut servers,
+                &mut clients.groups,
+            )
         };
 
         let now = cfg.horizon;
         ClusterReport {
-            metrics: client.metrics.clone(),
+            metrics: clients.metrics(),
             utilization: servers.iter().map(|s| s.station.utilization(now)).collect(),
             lock_waits: servers.iter().map(|s| s.lock_waits).sum(),
             lock_entries: servers.iter().map(|s| s.locks.len()).sum(),
             lock_entries_peak: servers.iter().map(|s| s.locks.peak).sum(),
-            events: client.core.q.processed()
+            events: clients.processed()
                 + servers.iter().map(|s| s.core.q.processed()).sum::<u64>(),
             windows,
         }
@@ -631,7 +655,9 @@ impl ClusterReport {
     }
 
     pub fn mean_latency_ms(&self) -> f64 {
-        self.metrics.latency.mean()
+        // Integer-sum mean: exact at any client-group count and defined
+        // in bucketed-only mode too.
+        self.metrics.mean_latency_ms()
     }
 }
 
@@ -715,7 +741,7 @@ mod tests {
             Topology::lan(n),
             ClientsConfig { n: clients, think_ms: 10.0, seed: 11, ..Default::default() },
             cfg,
-            Box::new(Gen { write_ratio }),
+            move |_| Box::new(Gen { write_ratio }),
         )
         .run()
     }
@@ -780,7 +806,7 @@ mod tests {
             Topology::lan(3),
             ClientsConfig { n: 30, think_ms: 0.0, seed: 5, ..Default::default() },
             cfg,
-            Box::new(HotGen),
+            |_| Box::new(HotGen),
         )
         .run();
         assert!(r.lock_waits > 100, "lock_waits={}", r.lock_waits);
@@ -822,7 +848,7 @@ mod tests {
                 Topology::lan(3),
                 ClientsConfig { n: 40, think_ms: 0.0, seed: 5, ..Default::default() },
                 cfg,
-                Box::new(HotColdGen),
+                |_| Box::new(HotColdGen),
             )
             .run()
         };
@@ -869,6 +895,52 @@ mod tests {
             assert!(
                 (r.mean_latency_ms() - base.mean_latency_ms()).abs() < 1e-12,
                 "threads={threads}"
+            );
+        }
+    }
+
+    /// The client-group property: sharding the client tier into K
+    /// groups (scheduled over any thread count) is bit-identical to the
+    /// single-group, single-thread run. Exhaustive matrix in
+    /// `tests/parallel_determinism.rs`.
+    #[test]
+    fn client_group_count_does_not_change_results() {
+        let run_k = |groups: usize, threads: usize| {
+            let app = app();
+            let cfg = ClusterConfig {
+                warmup: VTime::from_secs(2),
+                horizon: VTime::from_secs(10),
+                service: ServiceModel::fixed(5.0),
+                parallel: threads,
+                ..Default::default()
+            };
+            ClusterSim::new(
+                &app,
+                Topology::lan(4),
+                ClientsConfig { n: 24, think_ms: 10.0, seed: 11, groups, ..Default::default() },
+                cfg,
+                |_| Box::new(Gen { write_ratio: 0.5 }),
+            )
+            .run()
+        };
+        let base = run_k(1, 1);
+        assert!(base.metrics.completed > 200, "completed={}", base.metrics.completed);
+        for (groups, threads) in [(2, 1), (2, 2), (24, 0), (0, 0)] {
+            let r = run_k(groups, threads);
+            let tag = format!("groups={groups} threads={threads}");
+            assert_eq!(r.metrics.completed, base.metrics.completed, "{tag}");
+            assert_eq!(r.events, base.events, "{tag}");
+            assert_eq!(r.windows, base.windows, "{tag}");
+            assert_eq!(r.lock_waits, base.lock_waits, "{tag}");
+            assert_eq!(
+                r.mean_latency_ms().to_bits(),
+                base.mean_latency_ms().to_bits(),
+                "{tag}"
+            );
+            assert_eq!(
+                r.metrics.latency_hist.buckets(),
+                base.metrics.latency_hist.buckets(),
+                "{tag}"
             );
         }
     }

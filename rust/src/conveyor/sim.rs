@@ -10,15 +10,17 @@
 //!
 //! # Parallel window engine
 //!
-//! The simulation is organized as `n + 1` *groups*, each owning its own
+//! The simulation is organized as `n + K` *groups*, each owning its own
 //! [`EventQueue`](crate::simnet::EventQueue), clock and state (a
 //! [`GroupCore`]): one group per server (DB, station,
-//! token-wait queue, service-time RNG stream) plus one *client tier*
-//! (client pool, workload generator, metrics). Groups interact only by
-//! messages that pay a network latency — client→server requests,
-//! server→client replies, and the token hop — so any event emitted for
-//! another group lands at least `L` (the minimum such latency, the
-//! *lookahead*) into the future.
+//! token-wait queue, service-time RNG stream) plus K *client groups*
+//! (slices of the client pool with per-client RNG streams, workload
+//! generator, mergeable metrics — see
+//! [`ClientGroups`](crate::simnet::clients::ClientGroups)). Groups
+//! interact only by messages that pay a network latency —
+//! client→server requests, server→client replies, and the token hop —
+//! so any event emitted for another group lands at least `L` (the
+//! minimum such latency, the *lookahead*) into the future.
 //!
 //! The driver therefore advances in conservative windows `[T, T + L)`
 //! where `T` is the earliest pending event across all groups: inside a
@@ -40,10 +42,12 @@
 //! appends need no shared state.
 
 use crate::db::{Db, StateUpdate, TxnError};
-use crate::simnet::clients::{ClientEv, ClientTier, ClientsConfig, IssueReply, IssueRouter};
+use crate::simnet::clients::{
+    ClientEv, ClientGroups, ClientTier, ClientsConfig, IssueReply, IssueRouter,
+};
 use crate::simnet::latency::Topology;
 use crate::simnet::metrics::SimMetrics;
-use crate::simnet::parallel::{self, GroupCore, WindowGroup, CLIENT_TIER};
+use crate::simnet::parallel::{self, client_group_target, GroupCore, WindowGroup};
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
 use crate::workload::analyzed::{AnalyzedApp, Route};
@@ -158,6 +162,8 @@ struct Shared<'s> {
     stmt_maps: &'s [PreparedStmts],
     topo: &'s Topology,
     cfg: &'s ConveyorConfig,
+    /// Client-group count K (servers address reply targets with it).
+    client_groups: usize,
 }
 
 impl Shared<'_> {
@@ -320,7 +326,8 @@ impl ServerState {
     fn send_reply(&mut self, op: &OpEnvelope, ctx: &Shared<'_>) {
         let delay = ctx.client_server_latency(op.client_site, self.id);
         let ev = Ev::Reply { client: op.client, issued: op.issued, global: op.global };
-        self.core.send(CLIENT_TIER, self.core.now() + delay, ev);
+        let target = client_group_target(op.client, ctx.client_groups);
+        self.core.send(target, self.core.now() + delay, ev);
     }
 
     fn on_token(&mut self, mut token: Token, ctx: &Shared<'_>) {
@@ -437,7 +444,10 @@ impl IssueRouter<Ev> for Shared<'_> {
             issued: now,
             global,
         };
-        tier.core.send(server, now + delay, Ev::Arrive { op: env });
+        // Tagged with the client's global id: the engine merges client
+        // groups at one source rank, ordered by this tag, so delivery
+        // order is independent of the client-group count.
+        tier.core.send_tagged(server, now + delay, client as u32, Ev::Arrive { op: env });
     }
 }
 
@@ -449,17 +459,20 @@ pub struct ConveyorSim<'a> {
     stmt_maps: Vec<PreparedStmts>,
     topo: Topology,
     cfg: ConveyorConfig,
-    client: ClientTier<'a, Ev>,
+    clients: ClientGroups<'a, Ev>,
     servers: Vec<ServerState>,
 }
 
 impl<'a> ConveyorSim<'a> {
+    /// Build the simulation. `gen` supplies one generator instance per
+    /// client group (`ClientsConfig::groups` of them; stateless callers
+    /// just ignore the group index).
     pub fn new(
         app: &'a AnalyzedApp,
         topo: Topology,
         clients_cfg: ClientsConfig,
         cfg: ConveyorConfig,
-        gen: Box<dyn OpGenerator + 'a>,
+        gen: impl FnMut(usize) -> Box<dyn OpGenerator + 'a>,
         seed_db: impl Fn(&Db),
     ) -> Self {
         let n = topo.n();
@@ -488,13 +501,14 @@ impl<'a> ConveyorSim<'a> {
                 }
             })
             .collect();
-        let client = ClientTier::new(clients_cfg, client_sites, gen, cfg.warmup, cfg.horizon);
+        let clients =
+            ClientGroups::new(clients_cfg, client_sites, cfg.warmup, cfg.horizon, gen);
         ConveyorSim {
             stmt_maps: app.spec.txns.iter().map(|t| t.prepared_map(&app.spec.schema)).collect(),
             app,
             topo,
             cfg,
-            client,
+            clients,
             servers,
         }
     }
@@ -539,20 +553,34 @@ impl<'a> ConveyorSim<'a> {
     /// per-server DB instances (real-execution runs; `None` entries
     /// otherwise) so tests can inspect final state beyond the digest.
     pub fn run_keep_dbs(mut self) -> (ConveyorReport, Vec<Option<Db>>) {
-        // Boot: token starts at server 0; all clients issue.
+        // Boot: token starts at server 0; all client groups stage their
+        // first issues.
         let n = self.topo.n();
         let token = Token::new(n);
         self.servers[0].core.q.schedule_at(VTime::ZERO, Ev::TokenArrive { token });
-        self.client.boot();
+        self.clients.boot();
 
         let lookahead = self.lookahead();
         let threads = parallel::resolve_threads(self.cfg.parallel);
         let horizon = self.cfg.horizon;
 
-        let ConveyorSim { app, stmt_maps, topo, cfg, mut client, mut servers } = self;
+        let ConveyorSim { app, stmt_maps, topo, cfg, mut clients, mut servers } = self;
         let windows = {
-            let ctx = Shared { app, stmt_maps: &stmt_maps, topo: &topo, cfg: &cfg };
-            parallel::run_windows(threads, lookahead, horizon, &ctx, &mut servers, &mut client)
+            let ctx = Shared {
+                app,
+                stmt_maps: &stmt_maps,
+                topo: &topo,
+                cfg: &cfg,
+                client_groups: clients.k(),
+            };
+            parallel::run_windows(
+                threads,
+                lookahead,
+                horizon,
+                &ctx,
+                &mut servers,
+                &mut clients.groups,
+            )
         };
 
         let now = cfg.horizon;
@@ -562,12 +590,12 @@ impl<'a> ConveyorSim<'a> {
         }
         log.sort_by_key(|(seq, _)| *seq);
         let report = ConveyorReport {
-            metrics: client.metrics.clone(),
+            metrics: clients.metrics(),
             rotations: servers.iter().map(|s| s.rotations).sum(),
             utilization: servers.iter().map(|s| s.station.utilization(now)).collect(),
             aborts: servers.iter().map(|s| s.aborts).sum(),
             db_hashes: servers.iter().map(|s| s.db.as_ref().map(|d| d.content_hash())).collect(),
-            events: client.core.q.processed()
+            events: clients.processed()
                 + servers.iter().map(|s| s.core.q.processed()).sum::<u64>(),
             windows,
             global_log: log.into_iter().map(|(_, u)| u).collect(),
@@ -603,7 +631,10 @@ impl ConveyorReport {
     }
 
     pub fn mean_latency_ms(&self) -> f64 {
-        self.metrics.latency.mean()
+        // Integer-sum mean: bit-identical across client-group counts
+        // and available in bucketed (million-client) mode, where the
+        // per-sample Summary is intentionally empty.
+        self.metrics.mean_latency_ms()
     }
 }
 
@@ -717,7 +748,7 @@ mod tests {
             Topology::lan(n_servers),
             ClientsConfig { n: clients, think_ms: 10.0, seed: 7, ..Default::default() },
             cfg,
-            Box::new(MixGen { global_ratio }),
+            move |_| Box::new(MixGen { global_ratio }),
             seed,
         );
         sim.run()
@@ -793,7 +824,7 @@ mod tests {
                 Topology::lan(3),
                 ClientsConfig { n: 10, think_ms: 10.0, seed: 3, ..Default::default() },
                 cfg,
-                Box::new(MixGen { global_ratio: 0.0 }),
+                |_| Box::new(MixGen { global_ratio: 0.0 }),
                 |_db| {},
             )
             .run()
@@ -826,6 +857,53 @@ mod tests {
             assert!(
                 (r.mean_latency_ms() - base.mean_latency_ms()).abs() < 1e-12,
                 "threads={threads}"
+            );
+        }
+    }
+
+    /// Tentpole: sharding the client tier into K groups is invisible to
+    /// results — any group count, crossed with any thread count,
+    /// matches the single-group sequential run bit for bit (integer
+    /// latency stats included). Exhaustive matrix in
+    /// `tests/parallel_determinism.rs`.
+    #[test]
+    fn client_group_count_does_not_change_results() {
+        let run_k = |groups: usize, threads: usize| {
+            let app = app();
+            let cfg = ConveyorConfig {
+                warmup: VTime::from_secs(2),
+                horizon: VTime::from_secs(10),
+                service: ServiceModel::fixed(5.0),
+                parallel: threads,
+                ..Default::default()
+            };
+            ConveyorSim::new(
+                &app,
+                Topology::lan(3),
+                ClientsConfig { n: 24, think_ms: 10.0, seed: 7, groups, ..Default::default() },
+                cfg,
+                |_| Box::new(MixGen { global_ratio: 0.3 }),
+                seed,
+            )
+            .run()
+        };
+        let base = run_k(1, 1);
+        assert!(base.metrics.completed > 200);
+        for (groups, threads) in [(2usize, 1usize), (2, 2), (24, 0), (0, 0)] {
+            let r = run_k(groups, threads);
+            assert_eq!(r.metrics.completed, base.metrics.completed, "k={groups} t={threads}");
+            assert_eq!(r.events, base.events, "k={groups} t={threads}");
+            assert_eq!(r.windows, base.windows, "k={groups} t={threads}");
+            assert_eq!(r.rotations, base.rotations, "k={groups} t={threads}");
+            assert_eq!(
+                r.mean_latency_ms().to_bits(),
+                base.mean_latency_ms().to_bits(),
+                "k={groups} t={threads}"
+            );
+            assert_eq!(
+                r.metrics.latency_hist.buckets(),
+                base.metrics.latency_hist.buckets(),
+                "k={groups} t={threads}"
             );
         }
     }
@@ -867,7 +945,7 @@ mod tests {
             Topology::lan(3),
             ClientsConfig { n: 12, think_ms: 10.0, seed: 7, ..Default::default() },
             cfg,
-            Box::new(MixGen { global_ratio: 0.5 }),
+            |_| Box::new(MixGen { global_ratio: 0.5 }),
             seed,
         )
         .run_keep_dbs();

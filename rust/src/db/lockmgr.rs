@@ -167,9 +167,17 @@ impl std::fmt::Debug for LockManager {
 
 const DEFAULT_SHARDS: usize = 32;
 
+/// Shard count for [`LockManager::default`]: the `ELIA_LOCK_SHARDS`
+/// value when set and parseable, else 32. The knob exists for tuning —
+/// the `bench-sim` shard sweep measures exactly this axis — without
+/// recompiling every embedder of the default lock table.
+fn default_shards(env: Option<&str>) -> usize {
+    env.and_then(|v| v.parse().ok()).unwrap_or(DEFAULT_SHARDS)
+}
+
 impl Default for LockManager {
     fn default() -> Self {
-        Self::new(DEFAULT_SHARDS)
+        Self::new(default_shards(std::env::var("ELIA_LOCK_SHARDS").ok().as_deref()))
     }
 }
 
@@ -369,6 +377,16 @@ mod tests {
 
     fn row(k: i64) -> LockTarget {
         LockTarget::row(0, &Key::single(Value::Int(k)))
+    }
+
+    #[test]
+    fn default_shard_count_is_env_configurable() {
+        // Pure helper (no env mutation: other tests construct default
+        // lock tables concurrently).
+        assert_eq!(default_shards(None), 32);
+        assert_eq!(default_shards(Some("8")), 8);
+        assert_eq!(default_shards(Some("not-a-number")), 32);
+        assert_eq!(LockManager::new(0).shard_count(), 1, "min one shard");
     }
 
     #[test]

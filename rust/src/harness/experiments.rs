@@ -43,13 +43,31 @@ impl Workload {
     }
 
     pub fn generator(&self, app: &AnalyzedApp, max_sites: usize) -> Box<dyn OpGenerator> {
+        self.generator_for(app, max_sites, 0)
+    }
+
+    /// One generator per client group: group `g` gets id/RNG stream `g`
+    /// (stream 0 is the default, so group 0 matches
+    /// [`Workload::generator`]), keeping fresh-id ranges disjoint across
+    /// groups. These macro generators carry mutable id counters, so
+    /// their operation sequences are deterministic only at a *fixed*
+    /// group count — the bit-identical K-invariance guarantee holds for
+    /// rng-pure generators (see `simnet/README.md`).
+    pub fn generator_for(
+        &self,
+        app: &AnalyzedApp,
+        max_sites: usize,
+        group: usize,
+    ) -> Box<dyn OpGenerator> {
         match self {
-            Workload::Tpcw => {
-                Box::new(tpcw::TpcwGenerator::new(app, tpcw::TpcwScale::default(), max_sites))
-            }
-            Workload::Rubis => {
-                Box::new(rubis::RubisGenerator::new(app, rubis::RubisScale::default()))
-            }
+            Workload::Tpcw => Box::new(
+                tpcw::TpcwGenerator::new(app, tpcw::TpcwScale::default(), max_sites)
+                    .with_stream(group as u64),
+            ),
+            Workload::Rubis => Box::new(
+                rubis::RubisGenerator::new(app, rubis::RubisScale::default())
+                    .with_stream(group as u64),
+            ),
         }
     }
 }
@@ -74,6 +92,12 @@ pub struct ExpScale {
     /// `tests/parallel_determinism.rs`), so benches default to all
     /// cores via their `--parallel` flag.
     pub parallel: usize,
+    /// Client groups the client tier is sharded into (plumbed into
+    /// [`ClientsConfig::groups`]): 1 = single group (default), 0 = one
+    /// per available core. Groups are scheduled over the same worker
+    /// pool as the servers, so this is what lets million-client tiers
+    /// drain in parallel.
+    pub client_groups: usize,
 }
 
 impl ExpScale {
@@ -84,6 +108,7 @@ impl ExpScale {
             max_clients: 16384,
             think_ms: 1000.0,
             parallel: 1,
+            client_groups: 1,
         }
     }
 
@@ -94,6 +119,7 @@ impl ExpScale {
             max_clients: 4096,
             think_ms: 1000.0,
             parallel: 1,
+            client_groups: 1,
         }
     }
 
@@ -102,26 +128,47 @@ impl ExpScale {
         self.parallel = threads;
         self
     }
+
+    /// Set the client-group count (0 = one per available core).
+    pub fn with_client_groups(mut self, groups: usize) -> Self {
+        self.client_groups = groups;
+        self
+    }
+
+    /// Client-tier config shared by every experiment at this scale.
+    /// Beyond ~128k clients the per-sample `Summary`s are skipped in
+    /// favour of the fixed-size bucketed histograms, keeping metrics
+    /// memory flat on million-client runs.
+    fn clients_cfg(&self, clients: usize) -> ClientsConfig {
+        ClientsConfig {
+            n: clients,
+            think_ms: self.think_ms,
+            seed: 0xF16,
+            groups: self.client_groups,
+            bucketed: clients >= (1 << 17),
+            ..Default::default()
+        }
+    }
 }
 
-fn conveyor_point(
-    app: &AnalyzedApp,
+fn conveyor_point<'a>(
+    app: &'a AnalyzedApp,
     topo: Topology,
     clients: usize,
     scale: &ExpScale,
     service: ServiceModel,
-    gen: Box<dyn OpGenerator + '_>,
+    gen: impl FnMut(usize) -> Box<dyn OpGenerator + 'a>,
 ) -> LoadPoint {
     conveyor_point_with(app, topo, clients, scale, service, gen, None)
 }
 
-fn conveyor_point_with(
-    app: &AnalyzedApp,
+fn conveyor_point_with<'a>(
+    app: &'a AnalyzedApp,
     topo: Topology,
     clients: usize,
     scale: &ExpScale,
     service: ServiceModel,
-    gen: Box<dyn OpGenerator + '_>,
+    gen: impl FnMut(usize) -> Box<dyn OpGenerator + 'a>,
     client_matrix: Option<crate::simnet::latency::LatencyMatrix>,
 ) -> LoadPoint {
     let cfg = ConveyorConfig {
@@ -133,26 +180,18 @@ fn conveyor_point_with(
         parallel: scale.parallel,
         ..Default::default()
     };
-    let report = ConveyorSim::new(
-        app,
-        topo,
-        ClientsConfig { n: clients, think_ms: scale.think_ms, seed: 0xF16, ..Default::default() },
-        cfg,
-        gen,
-        |_| {},
-    )
-    .run();
-    let mut lat = report.metrics.latency.clone();
-    LoadPoint::from_summary(clients, report.throughput(), &mut lat, report.metrics.completed)
+    let report =
+        ConveyorSim::new(app, topo, scale.clients_cfg(clients), cfg, gen, |_| {}).run();
+    LoadPoint::from_metrics(clients, report.throughput(), &report.metrics)
 }
 
-fn cluster_point(
-    app: &AnalyzedApp,
+fn cluster_point<'a>(
+    app: &'a AnalyzedApp,
     topo: Topology,
     clients: usize,
     scale: &ExpScale,
     service: ServiceModel,
-    gen: Box<dyn OpGenerator + '_>,
+    gen: impl FnMut(usize) -> Box<dyn OpGenerator + 'a>,
 ) -> LoadPoint {
     let cfg = ClusterConfig {
         service,
@@ -161,26 +200,18 @@ fn cluster_point(
         parallel: scale.parallel,
         ..Default::default()
     };
-    let report = ClusterSim::new(
-        app,
-        topo,
-        ClientsConfig { n: clients, think_ms: scale.think_ms, seed: 0xF16, ..Default::default() },
-        cfg,
-        gen,
-    )
-    .run();
-    let mut lat = report.metrics.latency.clone();
-    LoadPoint::from_summary(clients, report.throughput(), &mut lat, report.metrics.completed)
+    let report = ClusterSim::new(app, topo, scale.clients_cfg(clients), cfg, gen).run();
+    LoadPoint::from_metrics(clients, report.throughput(), &report.metrics)
 }
 
-fn baseline_point(
-    app: &AnalyzedApp,
+fn baseline_point<'a>(
+    app: &'a AnalyzedApp,
     mode: BaselineMode,
     client_sites: usize,
     clients: usize,
     scale: &ExpScale,
     service: ServiceModel,
-    gen: Box<dyn OpGenerator + '_>,
+    gen: impl FnMut(usize) -> Box<dyn OpGenerator + 'a>,
 ) -> LoadPoint {
     let cfg = BaselineConfig {
         mode,
@@ -193,13 +224,12 @@ fn baseline_point(
     let report = BaselineSim::new(
         app,
         Topology::wan_full_client(client_sites),
-        ClientsConfig { n: clients, think_ms: scale.think_ms, seed: 0xF16, ..Default::default() },
+        scale.clients_cfg(clients),
         cfg,
         gen,
     )
     .run();
-    let mut lat = report.metrics.latency.clone();
-    LoadPoint::from_summary(clients, report.throughput(), &mut lat, report.metrics.completed)
+    LoadPoint::from_metrics(clients, report.throughput(), &report.metrics)
 }
 
 /// Figure 3 — LAN scalability: (system, servers, curve) for each server
@@ -211,11 +241,15 @@ pub fn fig3(workload: Workload, servers: &[usize], scale: &ExpScale) -> Vec<(Str
     for &n in servers {
         let clients = ladder(n * 16, 2.0, scale.max_clients);
         let elia = ramp(&format!("elia-{n}"), &clients, 4000.0, |c| {
-            conveyor_point(&app, Topology::lan(n), c, scale, service, workload.generator(&app, n))
+            conveyor_point(&app, Topology::lan(n), c, scale, service, |g| {
+                workload.generator_for(&app, n, g)
+            })
         });
         out.push(("elia".to_string(), n, elia));
         let cluster = ramp(&format!("mysql-cluster-{n}"), &clients, 4000.0, |c| {
-            cluster_point(&app, Topology::lan(n), c, scale, service, workload.generator(&app, n))
+            cluster_point(&app, Topology::lan(n), c, scale, service, |g| {
+                workload.generator_for(&app, n, g)
+            })
         });
         out.push(("mysql-cluster".to_string(), n, cluster));
     }
@@ -232,10 +266,14 @@ pub fn fig4(workload: Workload, n: usize, scale: &ExpScale) -> Vec<Curve> {
     let stop = 8000.0; // paper stresses until 5 s latency
     let mut curves = Vec::new();
     curves.push(ramp("centralized", &clients, stop, |c| {
-        baseline_point(&app, BaselineMode::Centralized, 5, c, scale, service, workload.generator(&app, 5))
+        baseline_point(&app, BaselineMode::Centralized, 5, c, scale, service, |g| {
+            workload.generator_for(&app, 5, g)
+        })
     }));
     curves.push(ramp(&format!("read-only-{n}"), &clients, stop, |c| {
-        baseline_point(&app, BaselineMode::ReadOnly { n_servers: n }, 5, c, scale, service, workload.generator(&app, 5))
+        baseline_point(&app, BaselineMode::ReadOnly { n_servers: n }, 5, c, scale, service, |g| {
+            workload.generator_for(&app, 5, g)
+        })
     }));
     curves.push(ramp(&format!("elia-{n}"), &clients, stop, |c| {
         conveyor_point_with(
@@ -244,7 +282,7 @@ pub fn fig4(workload: Workload, n: usize, scale: &ExpScale) -> Vec<Curve> {
             c,
             scale,
             service,
-            workload.generator(&app, n),
+            |g| workload.generator_for(&app, n, g),
             Some(Topology::wan_full_client(5)),
         )
     }));
@@ -263,15 +301,9 @@ pub fn table3(workload: Workload, scale: &ExpScale) -> Vec<(String, f64)> {
     // server). We use the lowest rung of the Fig 4 ramp.
     let light = 2048;
     let mut rows = Vec::new();
-    let p = baseline_point(
-        &app,
-        BaselineMode::Centralized,
-        5,
-        light,
-        scale,
-        service,
-        workload.generator(&app, 5),
-    );
+    let p = baseline_point(&app, BaselineMode::Centralized, 5, light, scale, service, |g| {
+        workload.generator_for(&app, 5, g)
+    });
     rows.push(("centralized".to_string(), p.mean_latency_ms));
     for n in [2usize, 3, 5] {
         let p = conveyor_point_with(
@@ -280,7 +312,7 @@ pub fn table3(workload: Workload, scale: &ExpScale) -> Vec<(String, f64)> {
             light,
             scale,
             service,
-            workload.generator(&app, n),
+            |g| workload.generator_for(&app, n, g),
             Some(Topology::wan_full_client(5)),
         );
         rows.push((format!("elia-{n}"), p.mean_latency_ms));
@@ -293,7 +325,7 @@ pub fn table3(workload: Workload, scale: &ExpScale) -> Vec<(String, f64)> {
             light,
             scale,
             service,
-            workload.generator(&app, 5),
+            |g| workload.generator_for(&app, 5, g),
         );
         rows.push((format!("read-only-{n}"), p.mean_latency_ms));
     }
@@ -313,14 +345,9 @@ pub fn fig5(ratios: &[f64], scale: &ExpScale) -> Vec<Curve> {
         .iter()
         .map(|&r| {
             ramp(&format!("local={:.0}%", r * 100.0), &clients, 8000.0, |c| {
-                conveyor_point(
-                    &app,
-                    Topology::wan(3),
-                    c,
-                    scale,
-                    service,
-                    Box::new(micro::MicroGenerator::new(&app, r)),
-                )
+                conveyor_point(&app, Topology::wan(3), c, scale, service, |_| {
+                    Box::new(micro::MicroGenerator::new(&app, r))
+                })
             })
         })
         .collect()
@@ -353,7 +380,7 @@ pub fn fig6(ratios: &[f64], clients: usize, scale: &ExpScale) -> Vec<(f64, f64, 
                     ..Default::default()
                 },
                 cfg,
-                Box::new(micro::MicroGenerator::new(&app, r)),
+                |_| Box::new(micro::MicroGenerator::new(&app, r)),
                 |_| {},
             )
             .run();

@@ -6,6 +6,7 @@
 pub mod experiments;
 pub mod report;
 
+use crate::simnet::metrics::SimMetrics;
 use crate::util::stats::Summary;
 
 /// One measured load point of a throughput/latency curve.
@@ -28,6 +29,22 @@ impl LoadPoint {
             p50_ms: lat.p50(),
             p99_ms: lat.p99(),
             completed,
+        }
+    }
+
+    /// Build a point from the mergeable bucketed histograms. Unlike
+    /// [`LoadPoint::from_summary`], this is defined in both metric
+    /// modes — the exact per-sample `Summary`s are skipped entirely at
+    /// [`crate::simnet::ClientsConfig::bucketed`] scale — at the
+    /// histogram's ~3% quantile resolution.
+    pub fn from_metrics(clients: usize, throughput: f64, m: &SimMetrics) -> Self {
+        LoadPoint {
+            clients,
+            throughput,
+            mean_latency_ms: m.latency_hist.mean_ms(),
+            p50_ms: m.latency_hist.p50_ms(),
+            p99_ms: m.latency_hist.p99_ms(),
+            completed: m.completed,
         }
     }
 }

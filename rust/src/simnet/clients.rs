@@ -1,18 +1,40 @@
-//! Closed-loop client pools, and the one shared client tier every
-//! simulator's window engine runs.
+//! Client pools (closed- and open-loop), and the shared client tier —
+//! sharded into K deterministic groups — that every simulator's window
+//! engine runs.
 //!
-//! Each simulated client sits at a site, issues one operation, waits for
-//! the reply, thinks for an exponentially distributed time, and repeats —
-//! the standard closed-loop model matching the paper's "we intensify the
-//! workload by increasing the number of clients".
+//! Each simulated client sits at a site and either runs the standard
+//! closed loop (issue one operation, wait for the reply, think for an
+//! exponentially distributed time, repeat — matching the paper's "we
+//! intensify the workload by increasing the number of clients") or, with
+//! [`ClientsConfig::arrival_rate`] set, an open loop: operations arrive
+//! by a per-client Poisson process regardless of replies, the model that
+//! exposes overload behaviour a closed loop can never reach (offered
+//! load past saturation → unbounded queueing delay).
 //!
-//! [`ClientTier`] packages the closed loop as a [`WindowGroup`]: the
-//! pool, the workload generator, the metrics and the engine state live
-//! here once, together with the Reply → metrics → think → next-Issue arm
-//! that all three simulators used to duplicate verbatim. A simulator
-//! plugs in by mapping its event enum through [`IssueReply`] and routing
-//! freshly issued operations through [`IssueRouter`] on its shared
-//! context — which is also all a *fourth* simulator needs to do.
+//! [`ClientTier`] packages one *group* of clients as a
+//! [`WindowGroup`]: pool, workload generator, metrics and engine state,
+//! together with the Reply → metrics → think → next-Issue arm all three
+//! simulators used to duplicate. [`ClientGroups`] shards the tier into K
+//! such groups (client `c` lives in group `c % K`) that fan out over the
+//! `WorkerPool` like server groups do. Determinism across K rests on
+//! three mechanisms, pinned by `tests/parallel_determinism.rs`:
+//!
+//! * **per-client RNG streams** — every client's RNG is
+//!   `Rng::stream(seed, client_id)`, so its draw sequence is identical
+//!   no matter which group executes it;
+//! * **canonical cross-send order** — groups tag their `Arrive` sends
+//!   with the issuing client's global id, and the engine merges all
+//!   client groups at one source rank, so the merged order is the
+//!   K-independent `(arrival time, client id)` order;
+//! * **exactly mergeable metrics** — each group's [`SimMetrics`] merge
+//!   by integer addition, bit-identical to a single-group run.
+//!
+//! A simulator plugs in by mapping its event enum through [`IssueReply`]
+//! and routing freshly issued operations through [`IssueRouter`] on its
+//! shared context — which is also all a *fourth* simulator needs to do.
+//! One constraint inherited by the routing half: per-client draws must
+//! come from the client's own RNG (`tier.clients.rng(client)`), never
+//! from group-level state, or results cease to be K-invariant.
 
 use crate::simnet::metrics::SimMetrics;
 use crate::simnet::parallel::{GroupCore, WindowGroup};
@@ -25,73 +47,173 @@ pub struct ClientsConfig {
     /// Number of clients.
     pub n: usize,
     /// Mean think time between reply and next request (ms). 0 = replay
-    /// as fast as possible (stress).
+    /// as fast as possible (stress). Ignored in open-loop mode.
     pub think_ms: f64,
     /// Number of client sites; clients are assigned round-robin
     /// ("we equally distribute client threads across client nodes").
     pub sites: usize,
-    /// Seed for the per-client forked RNGs.
+    /// Seed for the per-client RNG streams.
     pub seed: u64,
+    /// Number of client groups the tier is sharded into (each a
+    /// [`WindowGroup`] scheduled over the worker pool). `0` = one per
+    /// available core. Results are bit-identical for every value.
+    pub groups: usize,
+    /// Open-loop mode: mean per-client arrival rate in ops/sec (Poisson
+    /// arrivals, independent of replies). `None` = closed loop.
+    pub arrival_rate: Option<f64>,
+    /// Keep only the flat-memory bucketed latency aggregation (no
+    /// per-sample vectors) — the million-client scaling mode; see
+    /// [`SimMetrics::bucketed`].
+    pub bucketed: bool,
 }
 
 impl Default for ClientsConfig {
     fn default() -> Self {
-        ClientsConfig { n: 1, think_ms: 0.0, sites: 1, seed: 0xC11E }
+        ClientsConfig {
+            n: 1,
+            think_ms: 0.0,
+            sites: 1,
+            seed: 0xC11E,
+            groups: 1,
+            arrival_rate: None,
+            bucketed: false,
+        }
     }
 }
 
-/// The closed-loop client pool: per-client forked RNGs plus issue
-/// counters.
+impl ClientsConfig {
+    /// The effective group count: `0` resolves to the available cores,
+    /// and the count never exceeds the number of clients.
+    pub fn resolved_groups(&self) -> usize {
+        let k = if self.groups == 0 {
+            crate::simnet::parallel::available_threads()
+        } else {
+            self.groups
+        };
+        k.min(self.n.max(1)).max(1)
+    }
+}
+
+/// One group's slice of the client pool: the per-client RNG streams and
+/// issue accounting for every client `c` with `c % groups == group`.
+///
+/// RNGs are derived as `Rng::stream(cfg.seed, c)` — a pure function of
+/// the *global* client id — so a client's draw sequence does not depend
+/// on the group count. All client-facing accessors take global ids.
 #[derive(Debug)]
 pub struct ClientPool {
     cfg: ClientsConfig,
+    group: usize,
+    groups: usize,
+    /// Indexed by local position `c / groups`.
     rngs: Vec<Rng>,
-    issued: Vec<u64>,
+    /// Group-level running total (the per-client `issued` Vec of earlier
+    /// revisions is gone: per-client detail was unused, and the running
+    /// total makes [`total_issued`](Self::total_issued) O(1) instead of
+    /// an O(n) sum — at a million clients that sum was a real cost).
+    issued: u64,
 }
 
 impl ClientPool {
-    /// Build the pool, forking one RNG per client from `cfg.seed`.
+    /// A pool holding *all* clients as a single group.
     pub fn new(cfg: ClientsConfig) -> Self {
-        let mut meta = Rng::new(cfg.seed);
-        let rngs = (0..cfg.n).map(|_| meta.fork()).collect();
-        let issued = vec![0; cfg.n];
-        ClientPool { cfg, rngs, issued }
+        Self::for_group(cfg, 0, 1)
     }
 
-    /// Number of clients.
+    /// The pool slice for `group` of `groups` (clients `c` with
+    /// `c % groups == group`).
+    pub fn for_group(cfg: ClientsConfig, group: usize, groups: usize) -> Self {
+        assert!(groups >= 1 && group < groups, "group {group} of {groups}");
+        let rngs = (group..cfg.n)
+            .step_by(groups)
+            .map(|c| Rng::stream(cfg.seed, c as u64))
+            .collect();
+        ClientPool { cfg, group, groups, rngs, issued: 0 }
+    }
+
+    /// Total number of clients across all groups.
     pub fn n(&self) -> usize {
         self.cfg.n
     }
 
-    /// The site a client lives at (round-robin over sites).
+    /// Number of clients in *this* group.
+    pub fn members(&self) -> usize {
+        self.rngs.len()
+    }
+
+    /// This pool's group id.
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    /// The total group count this pool was sliced for.
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    /// Whether arrivals are open-loop (rate-driven) rather than
+    /// closed-loop (reply-driven).
+    pub fn is_open_loop(&self) -> bool {
+        self.cfg.arrival_rate.is_some()
+    }
+
+    /// The site a client lives at (round-robin over sites, by global id —
+    /// independent of the group count).
     pub fn site(&self, client: usize) -> usize {
         client % self.cfg.sites
     }
 
-    /// Per-client deterministic RNG (workload generation).
+    /// Per-client deterministic RNG (workload generation), by global id.
     pub fn rng(&mut self, client: usize) -> &mut Rng {
-        &mut self.rngs[client]
+        debug_assert_eq!(client % self.groups, self.group, "client {client} not in this group");
+        &mut self.rngs[client / self.groups]
     }
 
-    /// Record an issue and return the think delay to apply *before* it
-    /// (exponential; zero-mean collapses to zero).
+    /// Record one issued operation (O(1) group-level counter).
+    pub fn note_issue(&mut self) {
+        self.issued += 1;
+    }
+
+    /// The think delay before a client's next issue (exponential;
+    /// zero-mean collapses to zero).
     pub fn think(&mut self, client: usize) -> VTime {
-        self.issued[client] += 1;
         if self.cfg.think_ms <= 0.0 {
             return VTime::ZERO;
         }
-        let ms = self.rngs[client].exp(self.cfg.think_ms);
+        let ms = self.rng(client).exp(self.cfg.think_ms);
         VTime::from_millis_f64(ms)
     }
 
-    /// Operations issued by one client so far.
-    pub fn issued(&self, client: usize) -> u64 {
-        self.issued[client]
+    /// Open-loop inter-arrival delay for a client's next issue: `None`
+    /// in closed-loop mode, else an exponential draw with mean
+    /// `1000 / arrival_rate` ms, floored at 1 µs so one client's issue
+    /// times are strictly increasing.
+    pub fn next_arrival(&mut self, client: usize) -> Option<VTime> {
+        let rate = self.cfg.arrival_rate?;
+        let ms = self.rng(client).exp(1_000.0 / rate.max(f64::MIN_POSITIVE));
+        Some(VTime::from_millis_f64(ms).max(VTime::from_micros(1)))
     }
 
-    /// Operations issued by all clients.
+    /// A client's first issue time, drawn from *its own* RNG stream (the
+    /// first draw of the stream, so it is identical at any group count).
+    /// Closed loop: uniform over one think window (or 1 ms under zero
+    /// think time) — replacing the old `(c % 97) * 13` µs pattern that
+    /// landed ~n/97 clients on each of 97 distinct microseconds at large
+    /// n. Open loop: one exponential inter-arrival.
+    pub fn first_issue(&mut self, client: usize) -> VTime {
+        match self.next_arrival(client) {
+            Some(dt) => dt,
+            None => {
+                let span_ms = self.cfg.think_ms.max(1.0);
+                let ms = self.rng(client).f64() * span_ms;
+                VTime::from_millis_f64(ms)
+            }
+        }
+    }
+
+    /// Operations issued by this group's clients so far (O(1)).
     pub fn total_issued(&self) -> u64 {
-        self.issued.iter().sum()
+        self.issued
     }
 }
 
@@ -100,7 +222,8 @@ impl ClientPool {
 /// correctly wired simulation never delivers to the tier).
 #[derive(Debug)]
 pub enum ClientEv<E> {
-    /// A client (after thinking) issues its next operation.
+    /// A client issues its next operation (after thinking, in the closed
+    /// loop; by Poisson arrival, in the open loop).
     Issue {
         /// The issuing client.
         client: usize,
@@ -121,43 +244,58 @@ pub enum ClientEv<E> {
 
 /// How a simulator's event enum maps onto the client tier's two arms.
 /// Implemented by each simulation's `Ev` type; everything else about the
-/// closed loop is shared.
+/// client loop is shared.
 pub trait IssueReply: Sized + Send {
     /// Decompose an incoming event into the shared client-tier arms.
     fn classify(self) -> ClientEv<Self>;
-    /// The Issue event for `client` (scheduled after the think delay).
+    /// The Issue event for `client` (scheduled after the think delay or
+    /// inter-arrival gap).
     fn issue(client: usize) -> Self;
 }
 
 /// The per-simulation half of the client tier, implemented on the
 /// simulation's shared window context: route one freshly issued
 /// operation — draw it from `tier.gen` with the client's RNG, pick the
-/// target server, and buffer the `Arrive` cross-send on `tier.core`.
+/// target server, and buffer the `Arrive` cross-send on `tier.core`
+/// (via [`GroupCore::send_tagged`] with the client's global id, so the
+/// engine's merge order is group-count-independent).
 pub trait IssueRouter<E: IssueReply> {
-    /// Client `client` (who has finished thinking) issues its next
-    /// operation.
+    /// Client `client` issues its next operation.
     fn route_issue(&self, tier: &mut ClientTier<'_, E>, client: usize);
 }
 
-/// The client tier of a window-parallel simulation: client pool,
-/// workload generator, metrics and engine state — the sequential "edge"
-/// processed as one group on the driving thread. Shared by every
-/// simulator; see the module docs for how a simulation plugs in.
+/// One client group of a window-parallel simulation: a slice of the
+/// client pool, a workload generator, per-group metrics and engine
+/// state. Groups are first-class [`WindowGroup`]s, fanned out over the
+/// worker pool alongside server groups; [`ClientGroups`] owns the K of
+/// them. Shared by every simulator; see the module docs for how a
+/// simulation plugs in.
 pub struct ClientTier<'a, E> {
-    /// The closed-loop client pool (sites, per-client RNGs, think times).
+    /// This group's slice of the client pool (sites, per-client RNG
+    /// streams, think times).
     pub clients: ClientPool,
-    /// The workload generator operations are drawn from.
+    /// The workload generator operations are drawn from (one instance
+    /// per group; stateful generators should be constructed per-group
+    /// via the factory passed to [`ClientGroups::new`]).
     pub gen: Box<dyn OpGenerator + 'a>,
-    /// Latency/throughput collection over the measurement window.
+    /// Latency/throughput collection over the measurement window (merged
+    /// across groups by [`ClientGroups::metrics`]).
     pub metrics: SimMetrics,
-    /// The tier's window-engine state (event queue + cross-send buffer).
+    /// The group's window-engine state (event queue + cross-send buffer).
     pub core: GroupCore<E>,
+    /// Lazily released first-issue schedule: `(time µs, client)` sorted
+    /// ascending, drained into the event queue window by window — a
+    /// million-client boot allocates 12 B/client here instead of
+    /// pre-scheduling a million queue events.
+    boot: Vec<(u64, u32)>,
+    boot_next: usize,
 }
 
 impl<'a, E: IssueReply> ClientTier<'a, E> {
-    /// Build the tier: the pool is forked from `cfg` with its site count
-    /// overridden to `sites` (simulators derive it from the topology),
-    /// and metrics measure `[warmup, horizon]`.
+    /// Build a single-group tier over all clients: the pool is built
+    /// from `cfg` with its site count overridden to `sites` (simulators
+    /// derive it from the topology), and metrics measure
+    /// `[warmup, horizon]`.
     pub fn new(
         cfg: ClientsConfig,
         sites: usize,
@@ -165,21 +303,67 @@ impl<'a, E: IssueReply> ClientTier<'a, E> {
         warmup: VTime,
         horizon: VTime,
     ) -> Self {
+        Self::for_group(ClientsConfig { sites, ..cfg }, 0, 1, gen, warmup, horizon)
+    }
+
+    /// Build group `group` of `groups` (cfg's site count already set).
+    pub fn for_group(
+        cfg: ClientsConfig,
+        group: usize,
+        groups: usize,
+        gen: Box<dyn OpGenerator + 'a>,
+        warmup: VTime,
+        horizon: VTime,
+    ) -> Self {
+        let metrics = if cfg.bucketed {
+            SimMetrics::bucketed(warmup, horizon)
+        } else {
+            SimMetrics::new(warmup, horizon)
+        };
         ClientTier {
-            clients: ClientPool::new(ClientsConfig { sites, ..cfg }),
+            clients: ClientPool::for_group(cfg, group, groups),
             gen,
-            metrics: SimMetrics::new(warmup, horizon),
+            metrics,
             core: GroupCore::new(),
+            boot: Vec::new(),
+            boot_next: 0,
         }
     }
 
-    /// Boot the closed loop: schedule every client's first Issue,
-    /// staggered a little to avoid a thundering-herd artifact at t=0.
+    /// Boot this group's clients: draw every member's first-issue time
+    /// from its own RNG stream and stage the sorted list for lazy
+    /// release (entries enter the event queue only as the window
+    /// crosses them).
     pub fn boot(&mut self) {
-        for c in 0..self.clients.n() {
-            let jitter = VTime::from_micros((c as u64 % 97) * 13);
-            self.core.q.schedule_at(jitter, E::issue(c));
+        let (group, groups) = (self.clients.group(), self.clients.groups());
+        let mut entries = Vec::with_capacity(self.clients.members());
+        for local in 0..self.clients.members() {
+            let c = group + local * groups;
+            let at = self.clients.first_issue(c);
+            entries.push((at.as_micros(), c as u32));
         }
+        // Ties sort by client id: deterministic, group-independent.
+        entries.sort_unstable();
+        self.boot = entries;
+        self.boot_next = 0;
+    }
+
+    /// Release staged first issues at or before `cut` into the queue.
+    /// Sound w.r.t. the queue's "never schedule into the past" check:
+    /// entries beyond a window's cut stay staged, so anything released
+    /// later is above the previous cut ≥ the queue's clock.
+    fn release_boot(&mut self, cut: VTime) {
+        while let Some(&(at, c)) = self.boot.get(self.boot_next) {
+            let at = VTime::from_micros(at);
+            if at > cut {
+                return;
+            }
+            self.boot_next += 1;
+            self.core.q.schedule_at(at, E::issue(c as usize));
+        }
+        // Fully released: drop the staging list.
+        self.boot = Vec::new();
+        self.boot_next = 0;
     }
 }
 
@@ -200,20 +384,151 @@ where
 
     fn handle(&mut self, ev: E, ctx: &Ctx) {
         match ev.classify() {
-            ClientEv::Issue { client } => ctx.route_issue(self, client),
+            ClientEv::Issue { client } => {
+                self.clients.note_issue();
+                ctx.route_issue(self, client);
+                // Open loop: the next arrival is time-driven, scheduled
+                // at issue; the reply only records metrics.
+                if let Some(dt) = self.clients.next_arrival(client) {
+                    self.core.q.schedule(dt, E::issue(client));
+                }
+            }
             ClientEv::Reply { client, issued, flag } => {
                 self.metrics.complete(issued, self.core.q.now(), flag);
-                let think = self.clients.think(client);
-                self.core.q.schedule(think, E::issue(client));
+                if !self.clients.is_open_loop() {
+                    let think = self.clients.think(client);
+                    self.core.q.schedule(think, E::issue(client));
+                }
             }
             ClientEv::Other(_) => unreachable!("server event delivered to the client tier"),
         }
+    }
+
+    /// Earliest pending work: the queue head or the next staged boot
+    /// entry, whichever is sooner.
+    fn peek(&self) -> Option<VTime> {
+        let q = self.core.q.peek_time();
+        match self.boot.get(self.boot_next) {
+            Some(&(at, _)) => {
+                let b = VTime::from_micros(at);
+                Some(q.map_or(b, |t| t.min(b)))
+            }
+            None => q,
+        }
+    }
+
+    /// Release staged boot entries up to `cut`, then drain as usual.
+    fn drain(&mut self, cut: VTime, ctx: &Ctx) {
+        self.release_boot(cut);
+        while let Some((_, ev)) = self.core.q.pop_through(cut) {
+            self.handle(ev, ctx);
+        }
+    }
+}
+
+/// The sharded client tier: K [`ClientTier`] groups over one client
+/// population. Client `c` lives in group `c % K`; the engine schedules
+/// the groups over the worker pool alongside server groups and merges
+/// their cross-sends in a canonical order, so every observable result is
+/// bit-identical for any K (see the module docs).
+pub struct ClientGroups<'a, E> {
+    /// The groups, indexed by group id. Pass `&mut groups` straight to
+    /// [`run_windows`](crate::simnet::parallel::run_windows).
+    pub groups: Vec<ClientTier<'a, E>>,
+}
+
+impl<'a, E: IssueReply> ClientGroups<'a, E> {
+    /// Shard the tier: `cfg.groups` resolves via
+    /// [`ClientsConfig::resolved_groups`], the site count is overridden
+    /// to `sites`, and `gen_for(g)` supplies group `g`'s generator
+    /// instance (stateful generators get independent per-group state —
+    /// construct them with a per-group stream where available).
+    pub fn new(
+        cfg: ClientsConfig,
+        sites: usize,
+        warmup: VTime,
+        horizon: VTime,
+        mut gen_for: impl FnMut(usize) -> Box<dyn OpGenerator + 'a>,
+    ) -> Self {
+        let cfg = ClientsConfig { sites, ..cfg };
+        let k = cfg.resolved_groups();
+        let groups = (0..k)
+            .map(|g| ClientTier::for_group(cfg.clone(), g, k, gen_for(g), warmup, horizon))
+            .collect();
+        ClientGroups { groups }
+    }
+
+    /// The group count K.
+    pub fn k(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Boot every group (stage all first issues).
+    pub fn boot(&mut self) {
+        for g in &mut self.groups {
+            g.boot();
+        }
+    }
+
+    /// The tier's metrics, merged over groups in canonical group order
+    /// (integer stats are merge-order-insensitive; sample vectors
+    /// concatenate in group order).
+    pub fn metrics(&self) -> SimMetrics {
+        let mut m = self.groups[0].metrics.clone();
+        for g in &self.groups[1..] {
+            m.merge(&g.metrics);
+        }
+        m
+    }
+
+    /// Events processed across all groups.
+    pub fn processed(&self) -> u64 {
+        self.groups.iter().map(|g| g.core.q.processed()).sum()
+    }
+
+    /// Operations issued across all groups (O(K)).
+    pub fn total_issued(&self) -> u64 {
+        self.groups.iter().map(|g| g.clients.total_issued()).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::db::Bindings;
+    use crate::workload::spec::Operation;
+
+    fn null_gen<'a>() -> Box<dyn OpGenerator + 'a> {
+        Box::new(|_rng: &mut Rng, _site: usize, _n: usize| Operation {
+            txn: 0,
+            args: Bindings::new(),
+        })
+    }
+
+    /// Toy event enum exercising the tier without a simulator.
+    #[derive(Debug)]
+    enum TEv {
+        Issue(usize),
+        Reply(usize, VTime),
+    }
+
+    impl IssueReply for TEv {
+        fn classify(self) -> ClientEv<TEv> {
+            match self {
+                TEv::Issue(c) => ClientEv::Issue { client: c },
+                TEv::Reply(c, at) => ClientEv::Reply { client: c, issued: at, flag: false },
+            }
+        }
+        fn issue(client: usize) -> Self {
+            TEv::Issue(client)
+        }
+    }
+
+    /// Routing sink that drops every issued operation.
+    struct NullCtx;
+    impl IssueRouter<TEv> for NullCtx {
+        fn route_issue(&self, _tier: &mut ClientTier<'_, TEv>, _client: usize) {}
+    }
 
     #[test]
     fn round_robin_sites() {
@@ -229,7 +544,16 @@ mod tests {
     fn zero_think_time_is_zero() {
         let mut p = ClientPool::new(ClientsConfig { n: 2, think_ms: 0.0, ..Default::default() });
         assert_eq!(p.think(0), VTime::ZERO);
-        assert_eq!(p.issued(0), 1);
+    }
+
+    #[test]
+    fn issue_accounting_is_a_running_total() {
+        let mut p = ClientPool::new(ClientsConfig { n: 3, ..Default::default() });
+        assert_eq!(p.total_issued(), 0);
+        for _ in 0..5 {
+            p.note_issue();
+        }
+        assert_eq!(p.total_issued(), 5);
     }
 
     #[test]
@@ -247,5 +571,155 @@ mod tests {
         let mut b = ClientPool::new(ClientsConfig { n: 2, seed: 1, ..Default::default() });
         assert_eq!(a.rng(0).next_u64(), b.rng(0).next_u64());
         assert_ne!(a.rng(0).next_u64(), a.rng(1).next_u64());
+    }
+
+    /// The K-invariance cornerstone: a client's RNG stream is a pure
+    /// function of its global id, so group pools hand every member the
+    /// exact same stream the single-group pool does.
+    #[test]
+    fn group_pools_partition_clients_with_identical_streams() {
+        let cfg = ClientsConfig { n: 10, seed: 42, ..Default::default() };
+        for k in [2usize, 3, 10] {
+            let mut covered = 0;
+            for g in 0..k {
+                let mut part = ClientPool::for_group(cfg.clone(), g, k);
+                covered += part.members();
+                let mut whole = ClientPool::new(cfg.clone());
+                for c in (g..10).step_by(k) {
+                    assert_eq!(part.site(c), whole.site(c));
+                    assert_eq!(
+                        part.rng(c).next_u64(),
+                        whole.rng(c).next_u64(),
+                        "k={k} client={c}"
+                    );
+                }
+            }
+            assert_eq!(covered, 10, "groups must partition the population (k={k})");
+        }
+    }
+
+    #[test]
+    fn resolved_groups_caps_at_client_count() {
+        let cfg = ClientsConfig { n: 3, groups: 8, ..Default::default() };
+        assert_eq!(cfg.resolved_groups(), 3);
+        let auto = ClientsConfig { n: 1_000, groups: 0, ..Default::default() };
+        assert!(auto.resolved_groups() >= 1);
+        assert_eq!(ClientsConfig::default().resolved_groups(), 1);
+    }
+
+    /// Satellite bugfix: the boot stagger is RNG-derived per client —
+    /// spread over the think window with far more than the 97 distinct
+    /// instants of the old `(c % 97) * 13` pattern — and identical
+    /// whether a client boots in a single-group or a sharded tier.
+    #[test]
+    fn boot_stagger_is_rng_derived_and_partition_stable() {
+        let cfg =
+            ClientsConfig { n: 500, think_ms: 10.0, seed: 9, ..Default::default() };
+        let w = (VTime::from_secs(1), VTime::from_secs(2));
+        let mut single: ClientTier<'_, TEv> =
+            ClientTier::new(cfg.clone(), 1, null_gen(), w.0, w.1);
+        single.boot();
+        let mut by_client: Vec<u64> = vec![0; 500];
+        for &(at, c) in &single.boot {
+            assert!(VTime::from_micros(at) < VTime::from_millis(10), "within think window");
+            by_client[c as usize] = at;
+        }
+        let mut distinct: Vec<u64> = by_client.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert!(distinct.len() > 400, "only {} distinct boot instants", distinct.len());
+        // Sharded groups draw the same per-client times.
+        let mut tiers = ClientGroups::<TEv>::new(
+            ClientsConfig { groups: 3, ..cfg },
+            1,
+            w.0,
+            w.1,
+            |_| null_gen(),
+        );
+        tiers.boot();
+        for t in &tiers.groups {
+            for &(at, c) in &t.boot {
+                assert_eq!(at, by_client[c as usize], "client {c}");
+            }
+        }
+    }
+
+    /// Boot entries enter the event queue lazily, window by window.
+    #[test]
+    fn lazy_boot_releases_entries_through_the_cut() {
+        let cfg =
+            ClientsConfig { n: 200, think_ms: 10.0, seed: 4, ..Default::default() };
+        let mut tier: ClientTier<'_, TEv> =
+            ClientTier::new(cfg, 1, null_gen(), VTime::from_secs(1), VTime::from_secs(2));
+        tier.boot();
+        assert_eq!(tier.core.q.len(), 0, "boot stages, it does not schedule");
+        let first = tier.peek().expect("staged work is visible to peek");
+        let cut = VTime::from_millis(2);
+        tier.drain(cut, &NullCtx);
+        let released = tier.core.q.processed();
+        assert!(released > 0 && released < 200, "released={released}");
+        assert_eq!(released as usize, 200 - (tier.boot.len() - tier.boot_next));
+        let next = tier.peek().expect("remaining boot entries still pending");
+        assert!(next > cut && next >= first);
+        // Draining to the end releases everyone and drops the stage list.
+        tier.drain(VTime::from_millis(10), &NullCtx);
+        assert_eq!(tier.core.q.processed(), 200);
+        assert!(tier.boot.is_empty());
+        assert_eq!(tier.clients.total_issued(), 200);
+    }
+
+    /// Open loop: issues are time-driven (scheduled at issue, not at
+    /// reply), and replies only record metrics.
+    #[test]
+    fn open_loop_decouples_arrivals_from_replies() {
+        let cfg = ClientsConfig {
+            n: 1,
+            arrival_rate: Some(100.0),
+            ..Default::default()
+        };
+        let mut tier: ClientTier<'_, TEv> =
+            ClientTier::new(cfg, 1, null_gen(), VTime::ZERO, VTime::from_secs(1));
+        tier.handle(TEv::Issue(0), &NullCtx);
+        assert_eq!(tier.core.q.len(), 1, "the next arrival is already scheduled");
+        assert_eq!(tier.clients.total_issued(), 1);
+        tier.handle(TEv::Reply(0, VTime::ZERO), &NullCtx);
+        assert_eq!(tier.core.q.len(), 1, "a reply schedules nothing in open loop");
+        assert_eq!(tier.metrics.completed, 1);
+        // Closed loop for contrast: the reply drives the next issue.
+        let mut closed: ClientTier<'_, TEv> = ClientTier::new(
+            ClientsConfig { n: 1, ..Default::default() },
+            1,
+            null_gen(),
+            VTime::ZERO,
+            VTime::from_secs(1),
+        );
+        closed.handle(TEv::Reply(0, VTime::ZERO), &NullCtx);
+        assert_eq!(closed.core.q.len(), 1, "closed loop reissues on reply");
+        closed.handle(TEv::Issue(0), &NullCtx);
+        assert_eq!(closed.core.q.len(), 1, "issue schedules nothing further");
+    }
+
+    #[test]
+    fn group_metrics_merge_over_all_groups() {
+        let cfg = ClientsConfig { n: 6, ..Default::default() };
+        let mut tiers = ClientGroups::<TEv>::new(
+            ClientsConfig { groups: 3, ..cfg },
+            1,
+            VTime::ZERO,
+            VTime::from_secs(1),
+            |_| null_gen(),
+        );
+        for (g, t) in tiers.groups.iter_mut().enumerate() {
+            for local in 0..t.clients.members() {
+                let c = g + local * 3;
+                t.handle(TEv::Issue(c), &NullCtx);
+                t.handle(TEv::Reply(c, VTime::ZERO), &NullCtx);
+            }
+        }
+        assert_eq!(tiers.k(), 3);
+        assert_eq!(tiers.total_issued(), 6);
+        let m = tiers.metrics();
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.latency_hist.count(), 6);
     }
 }

@@ -1,7 +1,182 @@
 //! Measurement collection with a warm-up cutoff.
+//!
+//! Latency is aggregated twice: exact [`Summary`] samples (the harness
+//! sorts them for percentile tables) and a mergeable integer-microsecond
+//! [`LatencyStat`] — a count, a sum, min/max and a log-bucketed
+//! histogram. The integer stats merge *exactly*: element-wise `u64`
+//! addition is commutative and associative, so the per-group metrics of
+//! a sharded client tier combine into bit-identical totals no matter how
+//! many groups there are or in which order they merge. At million-client
+//! scale the sample vectors are the only per-operation state, so
+//! [`SimMetrics::bucketed`] turns them off and leaves the flat-memory
+//! histograms as the sole aggregation (~6 KB per class, independent of
+//! the operation count).
 
 use crate::util::stats::Summary;
 use crate::util::VTime;
+
+/// Sub-bucket resolution of the latency histogram: `2^SUB_BITS` linear
+/// sub-buckets per power-of-two range, bounding the relative error of a
+/// bucket's lower bound to `1 / 2^SUB_BITS` (~3%).
+const SUB_BITS: u32 = 5;
+const SUBS: u64 = 1 << SUB_BITS;
+/// Total bucket count: the linear range `[0, 32)` µs plus 22 octaves of
+/// 32 sub-buckets — covering latencies up to ~134 s before clamping into
+/// the last bucket (far past any simulated horizon).
+const BUCKETS: usize = 23 * SUBS as usize;
+
+/// Bucket index of a latency in integer microseconds (HDR-style
+/// log-linear: exact below 32 µs, ~3% resolution above).
+fn bucket_of(us: u64) -> usize {
+    if us < SUBS {
+        return us as usize;
+    }
+    let top = 63 - us.leading_zeros(); // floor(log2), >= SUB_BITS
+    let oct = (top - SUB_BITS + 1) as usize;
+    let sub = ((us >> (top - SUB_BITS)) - SUBS) as usize;
+    (oct * SUBS as usize + sub).min(BUCKETS - 1)
+}
+
+/// Lower bound (µs) of bucket `i` — the left inverse of [`bucket_of`].
+fn bucket_lo(i: usize) -> u64 {
+    if i < SUBS as usize {
+        return i as u64;
+    }
+    let oct = (i / SUBS as usize) as u32;
+    let sub = (i % SUBS as usize) as u64;
+    (SUBS + sub) << (oct - 1)
+}
+
+/// Mergeable latency aggregation over integer microseconds: count, sum,
+/// min/max and a log-bucketed histogram. Every field merges by exact
+/// integer arithmetic, so merging per-group stats is order-insensitive
+/// and bit-identical to recording into a single instance — the property
+/// the sharded client tier's determinism rests on (pinned by the merge
+/// tests below and by `tests/parallel_determinism.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStat {
+    count: u64,
+    sum_us: u64,
+    min_us: u64,
+    max_us: u64,
+    /// Lazily allocated on first record; empty means "no samples".
+    buckets: Vec<u64>,
+}
+
+impl LatencyStat {
+    /// An empty aggregation (allocates no buckets until the first
+    /// sample).
+    pub fn new() -> Self {
+        LatencyStat::default()
+    }
+
+    /// Record one latency sample in microseconds.
+    pub fn record(&mut self, us: u64) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; BUCKETS];
+            self.min_us = u64::MAX;
+        }
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+        self.buckets[bucket_of(us)] += 1;
+    }
+
+    /// Fold another aggregation into this one. Exact: recording a sample
+    /// set into one instance and merging per-group instances over any
+    /// partition of that set produce identical fields.
+    pub fn merge(&mut self, other: &LatencyStat) {
+        if other.count == 0 {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; BUCKETS];
+            self.min_us = u64::MAX;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += *o;
+        }
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Whether no sample has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Sum of all samples in microseconds (exact).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Mean latency in milliseconds (exact integer sum, one final
+    /// division — identical bits for any merge order).
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        (self.sum_us as f64 / self.count as f64) / 1_000.0
+    }
+
+    /// Smallest recorded sample in milliseconds.
+    pub fn min_ms(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.min_us as f64 / 1_000.0
+    }
+
+    /// Largest recorded sample in milliseconds.
+    pub fn max_ms(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.max_us as f64 / 1_000.0
+    }
+
+    /// Nearest-rank quantile estimate in milliseconds: the lower bound of
+    /// the bucket holding the ranked sample (≤3% below the exact value).
+    /// `p` in `[0, 100]`.
+    pub fn quantile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen > rank {
+                return bucket_lo(i) as f64 / 1_000.0;
+            }
+        }
+        self.max_ms()
+    }
+
+    /// Median estimate in milliseconds.
+    pub fn p50_ms(&self) -> f64 {
+        self.quantile_ms(50.0)
+    }
+
+    /// 99th-percentile estimate in milliseconds.
+    pub fn p99_ms(&self) -> f64 {
+        self.quantile_ms(99.0)
+    }
+
+    /// The raw histogram buckets (empty before the first sample) —
+    /// signature material for the determinism suite.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+}
 
 /// Operation latency/throughput metrics over a simulation run. Samples
 /// completed before `warmup` are discarded (cold caches, empty token
@@ -17,10 +192,19 @@ pub struct SimMetrics {
     pub local_latency: Summary,
     /// Global operations only.
     pub global_latency: Summary,
+    /// Mergeable integer-µs aggregation over all completed operations.
+    pub latency_hist: LatencyStat,
+    /// Mergeable aggregation over local/commutative operations.
+    pub local_hist: LatencyStat,
+    /// Mergeable aggregation over global operations.
+    pub global_hist: LatencyStat,
     /// Operations completed after warm-up.
     pub completed: u64,
     /// Operations that aborted (all retries exhausted).
     pub aborted: u64,
+    /// When set, per-sample `Summary` vectors are not populated — only
+    /// the flat-memory bucketed stats (million-client runs).
+    bucketed_only: bool,
 }
 
 impl SimMetrics {
@@ -33,9 +217,27 @@ impl SimMetrics {
             latency: Summary::new(),
             local_latency: Summary::new(),
             global_latency: Summary::new(),
+            latency_hist: LatencyStat::new(),
+            local_hist: LatencyStat::new(),
+            global_hist: LatencyStat::new(),
             completed: 0,
             aborted: 0,
+            bucketed_only: false,
         }
+    }
+
+    /// Metrics that keep only the bucketed aggregation: memory stays flat
+    /// (a few KB) no matter how many operations complete, at the price of
+    /// ~3% percentile resolution. The scaling mode for million-client
+    /// runs.
+    pub fn bucketed(warmup: VTime, horizon: VTime) -> Self {
+        SimMetrics { bucketed_only: true, ..Self::new(warmup, horizon) }
+    }
+
+    /// Whether per-sample collection is disabled (see
+    /// [`bucketed`](Self::bucketed)).
+    pub fn is_bucketed_only(&self) -> bool {
+        self.bucketed_only
     }
 
     /// Record a completed operation. `global` selects the per-class bucket.
@@ -49,12 +251,21 @@ impl SimMetrics {
         if done_at < self.warmup || done_at > self.horizon {
             return;
         }
-        let ms = (done_at - issued_at).as_millis_f64();
-        self.latency.add(ms);
+        let us = (done_at - issued_at).as_micros();
+        self.latency_hist.record(us);
         if global {
-            self.global_latency.add(ms);
+            self.global_hist.record(us);
         } else {
-            self.local_latency.add(ms);
+            self.local_hist.record(us);
+        }
+        if !self.bucketed_only {
+            let ms = us as f64 / 1_000.0;
+            self.latency.add(ms);
+            if global {
+                self.global_latency.add(ms);
+            } else {
+                self.local_latency.add(ms);
+            }
         }
         self.completed += 1;
     }
@@ -62,6 +273,27 @@ impl SimMetrics {
     /// Record an aborted operation.
     pub fn abort(&mut self) {
         self.aborted += 1;
+    }
+
+    /// Fold another group's metrics (same measurement window) into this
+    /// one. Counters and bucketed stats merge exactly (order-insensitive
+    /// integer adds); `Summary` samples concatenate, so callers merging
+    /// several groups should do so in a canonical group order.
+    pub fn merge(&mut self, other: &SimMetrics) {
+        assert_eq!(
+            (self.warmup, self.horizon),
+            (other.warmup, other.horizon),
+            "merging metrics over different measurement windows"
+        );
+        self.completed += other.completed;
+        self.aborted += other.aborted;
+        self.latency_hist.merge(&other.latency_hist);
+        self.local_hist.merge(&other.local_hist);
+        self.global_hist.merge(&other.global_hist);
+        self.latency.merge(&other.latency);
+        self.local_latency.merge(&other.local_latency);
+        self.global_latency.merge(&other.global_latency);
+        self.bucketed_only |= other.bucketed_only;
     }
 
     /// Throughput over the measurement window (ops/sec).
@@ -73,9 +305,11 @@ impl SimMetrics {
         self.completed as f64 / window
     }
 
-    /// Mean latency over all completed operations (ms).
+    /// Mean latency over all completed operations (ms), computed from
+    /// the exact integer sum — bit-identical however many group metrics
+    /// were merged in.
     pub fn mean_latency_ms(&self) -> f64 {
-        self.latency.mean()
+        self.latency_hist.mean_ms()
     }
 }
 
@@ -124,5 +358,136 @@ mod tests {
         assert!((m.throughput() - 50.0).abs() < 1e-9);
         assert_eq!(m.local_latency.count(), 50);
         assert_eq!(m.global_latency.count(), 50);
+    }
+
+    #[test]
+    fn bucket_addressing_round_trips() {
+        // bucket_lo is the left inverse of bucket_of over the covered
+        // range, and buckets tile the axis without gaps or overlaps.
+        for us in (0u64..4096).chain([10_000, 123_456, 5_000_000, 30_000_000]) {
+            let b = bucket_of(us);
+            assert!(bucket_lo(b) <= us, "us={us} b={b}");
+            if b + 1 < BUCKETS {
+                assert!(us < bucket_lo(b + 1), "us={us} b={b}");
+            }
+        }
+        for i in 1..BUCKETS {
+            assert!(bucket_lo(i) > bucket_lo(i - 1), "i={i}");
+            assert_eq!(bucket_of(bucket_lo(i)), i, "i={i}");
+        }
+        // Out-of-range latencies clamp into the last bucket.
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn latency_stat_basics_and_quantiles() {
+        let mut s = LatencyStat::new();
+        assert!(s.is_empty());
+        assert!(s.mean_ms().is_nan());
+        assert!(s.quantile_ms(50.0).is_nan());
+        for us in [1_000u64, 2_000, 3_000, 4_000, 1_000_000] {
+            s.record(us);
+        }
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.sum_us(), 1_010_000);
+        assert!((s.mean_ms() - 202.0).abs() < 1e-9);
+        assert!((s.min_ms() - 1.0).abs() < 1e-9);
+        assert!((s.max_ms() - 1_000.0).abs() < 1e-9);
+        // Nearest rank 2 of 5 at p50 is the 3000 µs sample; its bucket's
+        // lower bound is within the histogram's ~3% resolution.
+        let p50 = s.p50_ms();
+        assert!(p50 > 2.8 && p50 <= 3.0, "p50={p50}");
+        let p99 = s.quantile_ms(99.0);
+        assert!(p99 > 950.0 && p99 <= 1_000.0, "p99={p99}");
+        assert!(s.quantile_ms(0.0) <= s.quantile_ms(100.0));
+    }
+
+    /// The tentpole property: merging per-group stats over *any*
+    /// partition of a sample set is bit-identical to recording the set
+    /// into one instance — every field, including the histogram.
+    #[test]
+    fn merge_is_exact_over_any_partition() {
+        let samples: Vec<u64> =
+            (0..500u64).map(|i| (i * 7919) % 2_000_000).collect();
+        let mut whole = LatencyStat::new();
+        for &s in &samples {
+            whole.record(s);
+        }
+        for k in [1usize, 2, 3, 7] {
+            let mut parts: Vec<LatencyStat> = (0..k).map(|_| LatencyStat::new()).collect();
+            for (i, &s) in samples.iter().enumerate() {
+                parts[i % k].record(s);
+            }
+            // Merge in reverse order too: order must not matter.
+            let mut merged = LatencyStat::new();
+            for p in parts.iter().rev() {
+                merged.merge(p);
+            }
+            assert_eq!(merged.count(), whole.count(), "k={k}");
+            assert_eq!(merged.sum_us(), whole.sum_us(), "k={k}");
+            assert_eq!(merged.buckets(), whole.buckets(), "k={k}");
+            assert_eq!(merged.mean_ms().to_bits(), whole.mean_ms().to_bits(), "k={k}");
+            assert_eq!(merged.p50_ms().to_bits(), whole.p50_ms().to_bits(), "k={k}");
+            assert_eq!(merged.p99_ms().to_bits(), whole.p99_ms().to_bits(), "k={k}");
+        }
+    }
+
+    /// Merging per-group `SimMetrics` equals the single-group run: the
+    /// satellite unit test for the client-tier sharding.
+    #[test]
+    fn sim_metrics_merge_matches_single_instance() {
+        let window = (VTime::from_secs(1), VTime::from_secs(10));
+        let mut whole = SimMetrics::new(window.0, window.1);
+        let mut parts: Vec<SimMetrics> =
+            (0..3).map(|_| SimMetrics::new(window.0, window.1)).collect();
+        for i in 0..300u64 {
+            let issued = VTime::from_millis(1_000 + i * 20);
+            let done = issued + VTime::from_micros(500 + (i * 997) % 100_000);
+            let global = i % 3 == 0;
+            whole.complete(issued, done, global);
+            parts[(i % 3) as usize].complete(issued, done, global);
+            if i % 10 == 0 {
+                whole.abort();
+                parts[(i % 3) as usize].abort();
+            }
+        }
+        let mut merged = SimMetrics::new(window.0, window.1);
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.completed, whole.completed);
+        assert_eq!(merged.aborted, whole.aborted);
+        assert_eq!(merged.latency_hist.buckets(), whole.latency_hist.buckets());
+        assert_eq!(merged.local_hist.sum_us(), whole.local_hist.sum_us());
+        assert_eq!(merged.global_hist.sum_us(), whole.global_hist.sum_us());
+        assert_eq!(
+            merged.mean_latency_ms().to_bits(),
+            whole.mean_latency_ms().to_bits(),
+            "integer-derived mean must be bit-identical across merge shapes"
+        );
+        assert_eq!(merged.latency.count(), whole.latency.count());
+        // Sorted percentiles are canonical: same multiset, same bits.
+        let (mut a, mut b) = (merged.latency.clone(), whole.latency.clone());
+        assert_eq!(a.p99().to_bits(), b.p99().to_bits());
+    }
+
+    #[test]
+    fn bucketed_mode_skips_summaries_and_stays_flat() {
+        let mut m = SimMetrics::bucketed(VTime::from_secs(1), VTime::from_secs(3));
+        assert!(m.is_bucketed_only());
+        for i in 0..10_000u64 {
+            let t = VTime::from_millis(1_000 + i % 1_000);
+            m.complete(t, t + VTime::from_micros(1 + i % 50_000), i % 2 == 0);
+        }
+        assert_eq!(m.completed, 10_000);
+        assert_eq!(m.latency.count(), 0, "no per-sample state in bucketed mode");
+        assert_eq!(m.latency_hist.count(), 10_000);
+        assert!(m.mean_latency_ms() > 0.0);
+        assert!(m.latency_hist.p99_ms() >= m.latency_hist.p50_ms());
+        // Merging a bucketed group into a sampled one stays bucketed.
+        let mut all = SimMetrics::new(VTime::from_secs(1), VTime::from_secs(3));
+        all.merge(&m);
+        assert!(all.is_bucketed_only());
+        assert_eq!(all.completed, 10_000);
     }
 }

@@ -11,9 +11,9 @@
 //! * [`events`] — the event queue and virtual clock,
 //! * [`latency`] — site topologies and the Table 2 matrix,
 //! * [`station`] — the W-worker server station model,
-//! * [`clients`] — closed-loop client pools with think times, plus the
-//!   shared [`clients::ClientTier`] window group every simulator's
-//!   closed loop runs on,
+//! * [`clients`] — closed- and open-loop client pools with think times
+//!   and Poisson arrivals, plus the shared client tier — sharded into
+//!   deterministic [`clients::ClientGroups`] — every simulator runs on,
 //! * [`metrics`] — latency/throughput collection over a warm-up window,
 //! * [`parallel`] — the conservative-window parallel engine
 //!   ([`parallel::WindowGroup`] + [`parallel::GroupCore`] +
@@ -33,11 +33,15 @@ pub mod metrics;
 pub mod parallel;
 pub mod station;
 
-pub use clients::{ClientEv, ClientPool, ClientTier, ClientsConfig, IssueReply, IssueRouter};
+pub use clients::{
+    ClientEv, ClientGroups, ClientPool, ClientTier, ClientsConfig, IssueReply, IssueRouter,
+};
 pub use events::{EventQueue, Schedulable};
 pub use latency::{LatencyMatrix, Site, Topology};
-pub use metrics::SimMetrics;
-pub use parallel::{run_windows, CrossSend, GroupCore, WindowGroup, WorkerPool};
+pub use metrics::{LatencyStat, SimMetrics};
+pub use parallel::{
+    client_group_target, run_windows, CrossSend, GroupCore, WindowGroup, WorkerPool,
+};
 pub use station::Station;
 
 // The conservative-window parallel execution mode built from these

@@ -14,11 +14,12 @@
 //!   results; per-dispatch cost is a park/unpark instead of an OS thread
 //!   spawn.
 //! * [`run_windows`] — the window driver built on top: a set of isolated
-//!   [`WindowGroup`]s (one per server plus a client tier), each owning
+//!   [`WindowGroup`]s (one per server plus K client groups), each owning
 //!   its own event queue and state (a [`GroupCore`]), advanced in
 //!   conservative lookahead windows with a canonical cross-group merge.
-//!   This is the engine `ConveyorSim`, `ClusterSim` and `BaselineSim`
-//!   all run on; the full determinism argument is in `simnet/README.md`.
+//!   Both tiers fan out over the pool. This is the engine `ConveyorSim`,
+//!   `ClusterSim` and `BaselineSim` all run on; the full determinism
+//!   argument is in `simnet/README.md`.
 //!
 //! Determinism: `f` receives disjoint `&mut` items and (by the `Sync`
 //! bound) only shared immutable context, so the *result* of a fan-out is
@@ -232,10 +233,19 @@ impl Drop for WorkerPool {
     }
 }
 
-/// Pseudo group id of the client tier in cross-send targets (servers are
-/// `0..n`; in the canonical merge order the client tier ranks after all
-/// of them).
+/// Pseudo group id of client group 0 in cross-send targets (servers are
+/// `0..n`; in the canonical merge order client groups rank after all of
+/// them). Client group `g` is addressed as `CLIENT_TIER - g` — use
+/// [`client_group_target`] to compute the id for a client.
 pub const CLIENT_TIER: usize = usize::MAX;
+
+/// The cross-send target id for a reply to `client` in a tier sharded
+/// into `groups` client groups: client `c` lives in group `c % groups`,
+/// addressed as [`CLIENT_TIER`]` - group`. With `groups <= 1` this is
+/// exactly [`CLIENT_TIER`], so single-group callers are unchanged.
+pub fn client_group_target(client: usize, groups: usize) -> usize {
+    CLIENT_TIER - (client % groups.max(1))
+}
 
 /// A cross-group event emission, buffered in the source group's out
 /// vector during a window and merged into the target group's queue
@@ -243,10 +253,17 @@ pub const CLIENT_TIER: usize = usize::MAX;
 /// (emission time plus the network latency the message pays).
 #[derive(Debug)]
 pub struct CrossSend<E> {
-    /// Target group id (`0..n` = servers, [`CLIENT_TIER`] = client tier).
+    /// Target group id (`0..n` = servers, `CLIENT_TIER - g` = client
+    /// group `g`; see [`client_group_target`]).
     pub target: usize,
     /// Absolute arrival time at the target.
     pub at: VTime,
+    /// Canonical merge rank within `(time, source)` ties, overriding the
+    /// source group's emission counter. Client groups tag issue sends
+    /// with the client's global id so the merged order is independent of
+    /// how clients are sharded into groups; `None` (the default) falls
+    /// back to emission order.
+    pub tag: Option<u32>,
     /// The event to deliver.
     pub ev: E,
 }
@@ -285,10 +302,18 @@ impl<E> GroupCore<E> {
     }
 
     /// Buffer a cross-group send: deliver `ev` to group `target`
-    /// (servers `0..n`, [`CLIENT_TIER`] = the client tier) at absolute
-    /// time `at`.
+    /// (servers `0..n`, `CLIENT_TIER - g` = client group `g`) at
+    /// absolute time `at`, merge-ranked by emission order.
     pub fn send(&mut self, target: usize, at: VTime, ev: E) {
-        self.out.push(CrossSend { target, at, ev });
+        self.out.push(CrossSend { target, at, tag: None, ev });
+    }
+
+    /// Buffer a cross-group send with an explicit canonical merge rank
+    /// (see [`CrossSend::tag`]): client groups pass the issuing client's
+    /// global id, which makes the merged delivery order independent of
+    /// the client-group count.
+    pub fn send_tagged(&mut self, target: usize, at: VTime, tag: u32, ev: E) {
+        self.out.push(CrossSend { target, at, tag: Some(tag), ev });
     }
 }
 
@@ -352,9 +377,14 @@ pub trait WindowGroup<Ctx> {
 /// Buffered cross-send tagged with its canonical merge rank.
 struct MergeEntry<E> {
     at: VTime,
-    /// Source group rank: server id, or `n` for the client tier.
+    /// Source group rank: server id, or `n` for *every* client group —
+    /// client groups share one rank so the canonical order does not
+    /// depend on how clients are sharded; their sends disambiguate by
+    /// client-id tag instead.
     src: u32,
-    /// Emission number within the source group's window.
+    /// Emission rank: the send's [`CrossSend::tag`] if set (client
+    /// groups tag with the global client id), else the emission number
+    /// within the source group's window.
     idx: u32,
     target: usize,
     ev: E,
@@ -362,46 +392,69 @@ struct MergeEntry<E> {
 
 /// Drive a set of window groups to `horizon`: repeatedly take the
 /// earliest pending event time `T` across all groups, drain every group
-/// independently over the window `[T, T + lookahead)` — servers fanned
-/// out over a [`WorkerPool`] of at most `threads` parked workers, the
-/// client tier on the driving thread — then merge the buffered
-/// cross-group sends back in canonical `(arrival time, source rank,
-/// emission number)` order. Returns the number of windows executed.
+/// independently over the window `[T, T + lookahead)` — server groups
+/// *and* client groups fanned out over a [`WorkerPool`] of at most
+/// `threads` parked workers — then merge the buffered cross-group sends
+/// back in canonical `(arrival time, source rank, emission rank)` order.
+/// Returns the number of windows executed.
 ///
 /// `lookahead` must be a lower bound on the latency any cross-group
 /// message pays; a zero lookahead (degenerate topology) falls back to
 /// single-tick windows, which stay correct — zero-delay cross sends are
 /// merged after the round and processed at the same virtual time in the
-/// next one. Results are bit-identical for every thread count (see
-/// `simnet/README.md` for the induction).
+/// next one. Results are bit-identical for every thread count *and*
+/// every client-group count (see `simnet/README.md` for the induction;
+/// the group-count half additionally needs the client groups to tag
+/// their sends with client ids, which [`ClientTier`]'s router contract
+/// requires).
+///
+/// Ties `(at, src, idx)` can only arise within one source group — a
+/// client's issues have strictly increasing times and its id tags are
+/// unique — and the sort is stable, so such ties keep their emission
+/// order, which is itself deterministic.
+///
+/// [`ClientTier`]: crate::simnet::clients::ClientTier
 pub fn run_windows<Ctx, S, C>(
     threads: usize,
     lookahead: VTime,
     horizon: VTime,
     ctx: &Ctx,
     servers: &mut [S],
-    client: &mut C,
+    clients: &mut [C],
 ) -> u64
 where
     Ctx: Sync,
     S: WindowGroup<Ctx> + Send,
-    C: WindowGroup<Ctx, Ev = S::Ev>,
+    C: WindowGroup<Ctx, Ev = S::Ev> + Send,
 {
     let n = servers.len();
+    let k = clients.len();
     // The pool outlives the whole run: workers are created once and
     // parked between windows, so per-window coordination is a channel
-    // round-trip per busy worker, not an OS thread spawn.
-    let mut pool =
-        if threads > 1 && n > 1 { Some(WorkerPool::new(threads.min(n))) } else { None };
+    // round-trip per busy worker, not an OS thread spawn. Sized by the
+    // wider of the two tiers — each fans out separately.
+    let mut pool = if threads > 1 && n.max(k) > 1 {
+        Some(WorkerPool::new(threads.min(n.max(k))))
+    } else {
+        None
+    };
     // Reused across rounds: steady state allocates nothing per window.
     let mut merge_buf: Vec<MergeEntry<S::Ev>> = Vec::new();
     let mut peeks: Vec<Option<VTime>> = vec![None; n];
+    let mut cpeeks: Vec<Option<VTime>> = vec![None; k];
     let mut windows = 0u64;
     loop {
-        // One pass over the heads of all queues: record every server's
-        // earliest pending time (reused below for the spawn heuristic)
-        // while deriving T = the earliest pending event anywhere.
-        let mut t_min = client.peek();
+        // One pass over the heads of all queues: record every group's
+        // earliest pending time (reused below for the dispatch
+        // heuristics) while deriving T = the earliest pending event
+        // anywhere.
+        let mut t_min: Option<VTime> = None;
+        for (p, c) in cpeeks.iter_mut().zip(clients.iter()) {
+            *p = c.peek();
+            if let Some(t) = *p {
+                t_min = Some(t_min.map_or(t, |m| m.min(t)));
+            }
+        }
         for (p, s) in peeks.iter_mut().zip(servers.iter()) {
             *p = s.peek();
             if let Some(t) = *p {
@@ -431,15 +484,23 @@ where
                 .min(horizon.as_micros()),
         );
 
-        // Client tier on the driving thread, then the servers fan out.
-        // Groups cannot interact inside a window, so this order is a
-        // scheduling choice, not a semantic one.
-        client.drain(cut, ctx);
-        // Dispatch to the pool when at least two servers have work
-        // *inside this window* (queued future events don't count):
-        // sparse windows stay on the driving thread. Both paths are
-        // identical, so this is purely a coordination-overhead
-        // heuristic. `peeks` was filled above — no second heap sweep.
+        // Dispatch a tier to the pool when at least two of its groups
+        // have work *inside this window* (queued future events don't
+        // count): sparse windows stay on the driving thread. Both paths
+        // are identical, so this is purely a coordination-overhead
+        // heuristic. The peek vectors were filled above — no second
+        // heap sweep. Client groups first, then servers; groups cannot
+        // interact inside a window, so the order is a scheduling
+        // choice, not a semantic one.
+        let cbusy = cpeeks.iter().filter(|p| p.is_some_and(|pt| pt <= cut)).count();
+        match &mut pool {
+            Some(pool) if cbusy >= 2 => pool.fan_out_mut(clients, |c| c.drain(cut, ctx)),
+            _ => {
+                for c in clients.iter_mut() {
+                    c.drain(cut, ctx);
+                }
+            }
+        }
         let busy = peeks.iter().filter(|p| p.is_some_and(|pt| pt <= cut)).count();
         match &mut pool {
             Some(pool) if busy >= 2 => pool.fan_out_mut(servers, |s| s.drain(cut, ctx)),
@@ -452,31 +513,36 @@ where
 
         // Deterministic merge: the canonical order fixes the target
         // queues' FIFO tie-break sequence numbers independently of which
-        // thread produced what.
+        // thread produced what. All client groups enter at source rank
+        // `n` with client-id tags, so the order is also independent of
+        // the client-group count.
         for (src, s) in servers.iter_mut().enumerate() {
             for (idx, m) in s.out().drain(..).enumerate() {
                 merge_buf.push(MergeEntry {
                     at: m.at,
                     src: src as u32,
-                    idx: idx as u32,
+                    idx: m.tag.unwrap_or(idx as u32),
                     target: m.target,
                     ev: m.ev,
                 });
             }
         }
-        for (idx, m) in client.out().drain(..).enumerate() {
-            merge_buf.push(MergeEntry {
-                at: m.at,
-                src: n as u32,
-                idx: idx as u32,
-                target: m.target,
-                ev: m.ev,
-            });
+        for c in clients.iter_mut() {
+            for (idx, m) in c.out().drain(..).enumerate() {
+                merge_buf.push(MergeEntry {
+                    at: m.at,
+                    src: n as u32,
+                    idx: m.tag.unwrap_or(idx as u32),
+                    target: m.target,
+                    ev: m.ev,
+                });
+            }
         }
         merge_buf.sort_by_key(|e| (e.at, e.src, e.idx));
         for e in merge_buf.drain(..) {
-            if e.target == CLIENT_TIER {
-                client.deliver(e.at, e.ev);
+            let g = CLIENT_TIER - e.target;
+            if g < k {
+                clients[g].deliver(e.at, e.ev);
             } else {
                 servers[e.target].deliver(e.at, e.ev);
             }
@@ -579,17 +645,24 @@ mod tests {
 
     use crate::util::Rng;
 
-    /// Toy protocol: the client pings a random server; the server works
-    /// for an RNG-drawn local delay (intra-group events), then pongs
-    /// back; the client counts and pings again. Cross sends always pay
-    /// `LAT`, intra-group events may be sub-lookahead.
+    /// Toy protocol: 8 independent ping chains (stand-ins for clients,
+    /// sharded over K client groups by `chain % K`) each ping a random
+    /// server; the server works for an RNG-drawn local delay
+    /// (intra-group events), then pongs back; the chain counts and pings
+    /// again. Cross sends always pay `LAT`, intra-group events may be
+    /// sub-lookahead. Each chain draws from `Rng::stream(3, chain)` and
+    /// tags its pings with its chain id — the same discipline the real
+    /// client tier follows — so results must be bit-identical across
+    /// both thread count and group count. The shared context is the
+    /// group count K (servers need it to address reply targets).
     const LAT: VTime = VTime(5_000);
+    const CHAINS: u32 = 8;
 
     #[derive(Debug)]
     enum TEv {
-        Ping(u32),
-        Work(u32),
-        Pong,
+        Ping { chain: u32, x: u32 },
+        Work { chain: u32, x: u32 },
+        Pong { chain: u32 },
     }
 
     struct TServer {
@@ -598,7 +671,7 @@ mod tests {
         core: GroupCore<TEv>,
     }
 
-    impl WindowGroup<()> for TServer {
+    impl WindowGroup<usize> for TServer {
         type Ev = TEv;
         fn core(&self) -> &GroupCore<TEv> {
             &self.core
@@ -606,29 +679,35 @@ mod tests {
         fn core_mut(&mut self) -> &mut GroupCore<TEv> {
             &mut self.core
         }
-        fn handle(&mut self, ev: TEv, _ctx: &()) {
+        fn handle(&mut self, ev: TEv, k: &usize) {
             match ev {
-                TEv::Ping(x) => {
+                TEv::Ping { chain, x } => {
                     let d = VTime::from_micros(self.rng.gen_range(2_000));
-                    self.core.q.schedule(d, TEv::Work(x));
+                    self.core.q.schedule(d, TEv::Work { chain, x });
                 }
-                TEv::Work(x) => {
+                TEv::Work { chain, x } => {
                     self.sum = self.sum.wrapping_add(x as u64 ^ self.core.q.now().as_micros());
-                    self.core.send(CLIENT_TIER, self.core.q.now() + LAT, TEv::Pong);
+                    self.core.send(
+                        client_group_target(chain as usize, *k),
+                        self.core.q.now() + LAT,
+                        TEv::Pong { chain },
+                    );
                 }
-                TEv::Pong => unreachable!(),
+                TEv::Pong { .. } => unreachable!(),
             }
         }
     }
 
     struct TClient {
-        rng: Rng,
+        /// Chains `c` with `c % k == group`, indexed by `c / k`.
+        rngs: Vec<Rng>,
+        counts: Vec<u64>,
+        k: usize,
         n_servers: usize,
-        pongs: u64,
         core: GroupCore<TEv>,
     }
 
-    impl WindowGroup<()> for TClient {
+    impl WindowGroup<usize> for TClient {
         type Ev = TEv;
         fn core(&self) -> &GroupCore<TEv> {
             &self.core
@@ -636,19 +715,26 @@ mod tests {
         fn core_mut(&mut self) -> &mut GroupCore<TEv> {
             &mut self.core
         }
-        fn handle(&mut self, ev: TEv, _ctx: &()) {
+        fn handle(&mut self, ev: TEv, _k: &usize) {
             match ev {
-                TEv::Pong => {
-                    self.pongs += 1;
-                    let t = self.rng.range(0, self.n_servers);
-                    self.core.send(t, self.core.q.now() + LAT, TEv::Ping(self.pongs as u32));
+                TEv::Pong { chain } => {
+                    let local = chain as usize / self.k;
+                    self.counts[local] += 1;
+                    let x = self.counts[local] as u32;
+                    let t = self.rngs[local].range(0, self.n_servers);
+                    self.core.send_tagged(
+                        t,
+                        self.core.q.now() + LAT,
+                        chain,
+                        TEv::Ping { chain, x },
+                    );
                 }
                 _ => unreachable!(),
             }
         }
     }
 
-    fn drive(threads: usize) -> (u64, Vec<u64>, u64, u64) {
+    fn drive(threads: usize, k: usize) -> (u64, Vec<u64>, u64, u64) {
         let n = 4;
         let mut servers: Vec<TServer> = (0..n)
             .map(|i| TServer {
@@ -657,33 +743,54 @@ mod tests {
                 core: GroupCore::new(),
             })
             .collect();
-        let mut client = TClient {
-            rng: Rng::new(3),
-            n_servers: n,
-            pongs: 0,
-            core: GroupCore::new(),
-        };
-        for c in 0..8u64 {
-            client.core.q.schedule_at(VTime::from_micros(c * 7), TEv::Pong);
+        let mut clients: Vec<TClient> = (0..k)
+            .map(|g| {
+                let rngs: Vec<Rng> = (g as u32..CHAINS)
+                    .step_by(k)
+                    .map(|c| Rng::stream(3, c as u64))
+                    .collect();
+                let counts = vec![0; rngs.len()];
+                TClient { rngs, counts, k, n_servers: n, core: GroupCore::new() }
+            })
+            .collect();
+        for c in 0..CHAINS {
+            clients[c as usize % k]
+                .core
+                .q
+                .schedule_at(VTime::from_micros(c as u64 * 7), TEv::Pong { chain: c });
         }
         let windows =
-            run_windows(threads, LAT, VTime::from_secs(2), &(), &mut servers, &mut client);
-        let events = client.core.q.processed()
+            run_windows(threads, LAT, VTime::from_secs(2), &k, &mut servers, &mut clients);
+        let events = clients.iter().map(|c| c.core.q.processed()).sum::<u64>()
             + servers.iter().map(|s| s.core.q.processed()).sum::<u64>();
-        (client.pongs, servers.iter().map(|s| s.sum).collect(), events, windows)
+        let pongs = clients.iter().flat_map(|c| c.counts.iter()).sum::<u64>();
+        (pongs, servers.iter().map(|s| s.sum).collect(), events, windows)
     }
 
-    /// Satellite: the toy ping-pong protocol driven through the worker
-    /// pool (threads >= 2) is bit-identical to the retained sequential
-    /// path (threads = 1, which never constructs a pool) — pongs, per
-    /// -server sums, event counts and window counts all match.
+    /// Satellite: the toy protocol driven through the worker pool
+    /// (threads >= 2) is bit-identical to the retained sequential path
+    /// (threads = 1, which never constructs a pool) — pongs, per-server
+    /// sums, event counts and window counts all match.
     #[test]
     fn window_driver_pool_matches_sequential_path() {
-        let base = drive(1);
+        let base = drive(1, 1);
         assert!(base.0 > 1000, "pongs={}", base.0);
         assert!(base.3 > 100, "windows={}", base.3);
         for threads in [2usize, 3, 8] {
-            assert_eq!(drive(threads), base, "threads={threads}");
+            assert_eq!(drive(threads, 1), base, "threads={threads}");
+        }
+    }
+
+    /// Tentpole invariant at the engine level: sharding the chains over
+    /// K client groups — for any K, crossed with any thread count — is
+    /// bit-identical to the single-group run, because per-chain RNG
+    /// streams are keyed by global chain id and client sends merge at
+    /// one source rank ordered by chain tag.
+    #[test]
+    fn client_group_count_does_not_change_results() {
+        let base = drive(1, 1);
+        for (threads, k) in [(1usize, 2usize), (2, 2), (1, 3), (4, 4), (8, 8), (3, 5)] {
+            assert_eq!(drive(threads, k), base, "threads={threads} k={k}");
         }
     }
 
@@ -732,7 +839,7 @@ mod tests {
             VTime::from_micros(max),
             &(),
             std::slice::from_mut(&mut s),
-            &mut c,
+            std::slice::from_mut(&mut c),
         );
         assert_eq!(w, 1, "one saturated window covers the top of the range");
         assert_eq!(s.seen, 3);
@@ -749,7 +856,7 @@ mod tests {
             VTime::from_micros(max - 1),
             &(),
             std::slice::from_mut(&mut s),
-            &mut c,
+            std::slice::from_mut(&mut c),
         );
         assert_eq!(s.seen, 1, "the event at the horizon is processed");
         assert_eq!(s.core.q.len(), 1, "the event past the horizon is not");

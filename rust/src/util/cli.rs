@@ -71,6 +71,18 @@ impl Args {
         }
     }
 
+    /// Integer getter that tolerates `_` digit separators, so scaling
+    /// flags read naturally: `--clients 1_000_000`.
+    pub fn get_count(&self, key: &str, default: usize) -> usize {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {v:?} as a count")),
+        }
+    }
+
     /// Comma-separated list getter, e.g. `--servers 1,2,4,8`.
     pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
     where
@@ -115,6 +127,14 @@ mod tests {
         assert_eq!(a.get_parse("n", 0usize), 12);
         assert!((a.get_parse("ratio", 0.0f64) - 0.5).abs() < 1e-12);
         assert_eq!(a.get_parse("missing", 7u32), 7);
+    }
+
+    #[test]
+    fn count_getter_tolerates_underscores() {
+        let a = parse(&["--clients", "1_000_000", "--plain", "42"]);
+        assert_eq!(a.get_count("clients", 0), 1_000_000);
+        assert_eq!(a.get_count("plain", 0), 42);
+        assert_eq!(a.get_count("missing", 7), 7);
     }
 
     #[test]

@@ -64,7 +64,7 @@ fn rubis_on_simulator_with_real_execution() {
         Topology::lan(3),
         ClientsConfig { n: 24, think_ms: 20.0, seed: 5, ..Default::default() },
         cfg,
-        Box::new(rubis::RubisGenerator::new(&app, scale)),
+        |_| Box::new(rubis::RubisGenerator::new(&app, scale)),
         |db| rubis::seed(db, scale),
     )
     .run();

@@ -164,11 +164,18 @@ struct RunSpec {
     client_matrix: Option<LatencyMatrix>,
     seed: u64,
     threads: usize,
+    /// Client groups the tier is sharded into (1 = the classic single
+    /// tier; 0 = one group per available core, capped at the client
+    /// count).
+    groups: usize,
     real: bool,
     misroute: f64,
 }
 
-fn run_store(spec: RunSpec, gen: Box<dyn OpGenerator>) -> (ConveyorReport, Vec<Option<Db>>) {
+fn run_store(
+    spec: RunSpec,
+    gen: impl FnMut(usize) -> Box<dyn OpGenerator>,
+) -> (ConveyorReport, Vec<Option<Db>>) {
     let app = store_app();
     let cfg = ConveyorConfig {
         execute_real: spec.real,
@@ -185,7 +192,13 @@ fn run_store(spec: RunSpec, gen: Box<dyn OpGenerator>) -> (ConveyorReport, Vec<O
     ConveyorSim::new(
         &app,
         spec.topo,
-        ClientsConfig { n: 24, think_ms: 10.0, seed: spec.seed, ..Default::default() },
+        ClientsConfig {
+            n: 24,
+            think_ms: 10.0,
+            seed: spec.seed,
+            groups: spec.groups,
+            ..Default::default()
+        },
         cfg,
         gen,
         seed_store,
@@ -212,6 +225,34 @@ fn metrics_sig(m: &SimMetrics) -> Vec<u64> {
         loc.mean().to_bits(),
         glo.mean().to_bits(),
     ]
+}
+
+/// Client-group-insensitive metrics signature: integer-exact statistics
+/// only. The `Summary` means accumulate f64 samples in per-group
+/// arrival order, so their bits are *not* comparable across group
+/// counts; the bucketed histograms (element-wise u64 counters) and the
+/// integer counters are — exactly.
+fn ksig_metrics(m: &SimMetrics) -> Vec<u64> {
+    let mut v = vec![m.completed, m.aborted];
+    for h in [&m.latency_hist, &m.local_hist, &m.global_hist] {
+        v.push(h.count());
+        v.push(h.sum_us());
+        v.push(h.mean_ms().to_bits());
+        v.extend(h.buckets().iter().copied());
+    }
+    v
+}
+
+fn assert_identical_k(a: &ConveyorReport, b: &ConveyorReport, ctx: &str) {
+    assert_eq!(ksig_metrics(&a.metrics), ksig_metrics(&b.metrics), "metrics differ: {ctx}");
+    assert_eq!(a.events, b.events, "event counts differ: {ctx}");
+    assert_eq!(a.rotations, b.rotations, "rotations differ: {ctx}");
+    assert_eq!(a.aborts, b.aborts, "aborts differ: {ctx}");
+    assert_eq!(a.db_hashes, b.db_hashes, "DB digests differ: {ctx}");
+    assert_eq!(a.global_log, b.global_log, "token logs differ: {ctx}");
+    let ua: Vec<u64> = a.utilization.iter().map(|u| u.to_bits()).collect();
+    let ub: Vec<u64> = b.utilization.iter().map(|u| u.to_bits()).collect();
+    assert_eq!(ua, ub, "utilization differs: {ctx}");
 }
 
 fn assert_identical(a: &ConveyorReport, b: &ConveyorReport, ctx: &str) {
@@ -249,13 +290,14 @@ fn thread_count_invariant_modeled_execution() {
                 client_matrix: cm.clone(),
                 seed,
                 threads,
+                groups: 1,
                 real: false,
                 misroute: 0.0,
             };
-            let (base, _) = run_store(mk(1), Box::new(MixGen { global_ratio: 0.3 }));
+            let (base, _) = run_store(mk(1), |_| Box::new(MixGen { global_ratio: 0.3 }));
             assert!(base.metrics.completed > 100, "{name}/{seed}: too few completions");
             for threads in alt_thread_counts() {
-                let (r, _) = run_store(mk(threads), Box::new(MixGen { global_ratio: 0.3 }));
+                let (r, _) = run_store(mk(threads), |_| Box::new(MixGen { global_ratio: 0.3 }));
                 assert_identical(&base, &r, &format!("{name} seed={seed} threads={threads}"));
             }
         }
@@ -273,14 +315,15 @@ fn thread_count_invariant_real_execution_digests() {
                 client_matrix: cm.clone(),
                 seed,
                 threads,
+                groups: 1,
                 real: true,
                 misroute: 0.0,
             };
-            let (base, _) = run_store(mk(1), Box::new(MixGen { global_ratio: 0.4 }));
+            let (base, _) = run_store(mk(1), |_| Box::new(MixGen { global_ratio: 0.4 }));
             assert!(base.metrics.completed > 100, "{name}/{seed}: too few completions");
             assert!(base.db_hashes.iter().all(|h| h.is_some()));
             for threads in alt_thread_counts() {
-                let (r, _) = run_store(mk(threads), Box::new(MixGen { global_ratio: 0.4 }));
+                let (r, _) = run_store(mk(threads), |_| Box::new(MixGen { global_ratio: 0.4 }));
                 assert_identical(&base, &r, &format!("{name} seed={seed} threads={threads}"));
             }
         }
@@ -298,11 +341,12 @@ fn misroute_redirect_end_to_end() {
         client_matrix: None,
         seed: 9,
         threads,
+        groups: 1,
         real: true,
         misroute,
     };
-    let (clean, _) = run_store(spec(1, 0.0), Box::new(MixGen { global_ratio: 0.2 }));
-    let (dirty, _) = run_store(spec(1, 0.25), Box::new(MixGen { global_ratio: 0.2 }));
+    let (clean, _) = run_store(spec(1, 0.0), |_| Box::new(MixGen { global_ratio: 0.2 }));
+    let (dirty, _) = run_store(spec(1, 0.25), |_| Box::new(MixGen { global_ratio: 0.2 }));
     // Redirected operations still execute and commit.
     assert_eq!(dirty.aborts, 0, "redirected ops must still commit");
     assert!(
@@ -325,8 +369,81 @@ fn misroute_redirect_end_to_end() {
     assert!(dirty.db_hashes.iter().all(|h| h.is_some()));
     // And the redirect path is deterministic under parallelism.
     for threads in alt_thread_counts() {
-        let (r, _) = run_store(spec(threads, 0.25), Box::new(MixGen { global_ratio: 0.2 }));
+        let (r, _) = run_store(spec(threads, 0.25), |_| Box::new(MixGen { global_ratio: 0.2 }));
         assert_identical(&dirty, &r, &format!("misroute threads={threads}"));
+    }
+}
+
+// ---- client-group sharding (tentpole acceptance) ----
+
+/// Thread × group combinations compared against the (1 thread, 1 group)
+/// baseline. Groups: 2 and 0 ("one per core", the fan-out default);
+/// threads follow the `ELIA_PAR_MAX` ladder.
+fn k_combos() -> Vec<(usize, usize)> {
+    let mut v = vec![(1usize, 2usize), (1, 0)];
+    for t in alt_thread_counts() {
+        v.push((t, 2));
+        v.push((t, 0));
+    }
+    v
+}
+
+/// Tentpole acceptance: sharding the client tier into K groups changes
+/// nothing. K ∈ {1, 2, all-cores} × thread ladder, across seeds and
+/// topologies, compared bit-for-bit against the K=1 single-thread run.
+/// `MixGen` is rng-pure (it draws only from the per-client streams), so
+/// every client sees the identical random sequence at any K.
+#[test]
+fn client_group_count_invariant_modeled_execution() {
+    for (name, topo, cm) in topologies() {
+        for seed in [0x5EEDu64, 42] {
+            let mk = |threads, groups| RunSpec {
+                topo: topo.clone(),
+                client_matrix: cm.clone(),
+                seed,
+                threads,
+                groups,
+                real: false,
+                misroute: 0.0,
+            };
+            let (base, _) = run_store(mk(1, 1), |_| Box::new(MixGen { global_ratio: 0.3 }));
+            assert!(base.metrics.completed > 100, "{name}/{seed}: too few completions");
+            for (threads, groups) in k_combos() {
+                let (r, _) = run_store(mk(threads, groups), |_| {
+                    Box::new(MixGen { global_ratio: 0.3 })
+                });
+                assert_identical_k(
+                    &base,
+                    &r,
+                    &format!("{name} seed={seed} threads={threads} groups={groups}"),
+                );
+            }
+        }
+    }
+}
+
+/// Real-execution half of the group invariant: per-server DB digests and
+/// the token's total-order log are also unchanged by client sharding —
+/// including under misrouting, whose redirect draws come from the
+/// per-client streams too.
+#[test]
+fn client_group_count_invariant_real_execution_digests() {
+    let mk = |threads, groups| RunSpec {
+        topo: Topology::lan(3),
+        client_matrix: None,
+        seed: 7,
+        threads,
+        groups,
+        real: true,
+        misroute: 0.25,
+    };
+    let (base, _) = run_store(mk(1, 1), |_| Box::new(MixGen { global_ratio: 0.4 }));
+    assert!(base.metrics.completed > 100, "too few completions");
+    assert!(!base.global_log.is_empty());
+    assert!(base.db_hashes.iter().all(|h| h.is_some()));
+    for (threads, groups) in k_combos() {
+        let (r, _) = run_store(mk(threads, groups), |_| Box::new(MixGen { global_ratio: 0.4 }));
+        assert_identical_k(&base, &r, &format!("real threads={threads} groups={groups}"));
     }
 }
 
@@ -389,7 +506,7 @@ fn cluster_thread_count_invariant() {
                     topo.clone(),
                     ClientsConfig { n: 24, think_ms: 10.0, seed, ..Default::default() },
                     cfg,
-                    Box::new(ClusterMixGen),
+                    |_| Box::new(ClusterMixGen),
                 )
                 .run()
             };
@@ -440,7 +557,7 @@ fn baseline_thread_count_invariant() {
                     sites.clone(),
                     ClientsConfig { n: 24, think_ms: 10.0, seed, ..Default::default() },
                     cfg,
-                    Box::new(ClusterMixGen),
+                    |_| Box::new(ClusterMixGen),
                 )
                 .run()
             };
@@ -458,6 +575,103 @@ fn baseline_thread_count_invariant() {
                     "baseline differs: {name} seed={seed} threads={threads}"
                 );
             }
+        }
+    }
+}
+
+/// `ClusterSim` on the sharded client tier: 2PC replies land at
+/// per-group targets and issues merge by the global client tag, so a
+/// grouped run must match the single-tier run exactly (integer-exact
+/// signature; `ClusterMixGen` is rng-pure).
+#[test]
+fn cluster_client_group_invariant() {
+    let ksig = |r: &ClusterReport| {
+        let mut v = ksig_metrics(&r.metrics);
+        v.push(r.events);
+        v.push(r.lock_waits);
+        v.push(r.lock_entries as u64);
+        v.push(r.lock_entries_peak as u64);
+        v.extend(r.utilization.iter().map(|u| u.to_bits()));
+        v
+    };
+    for (name, topo) in [("lan4", Topology::lan(4)), ("wan3", Topology::wan(3))] {
+        let seed = 0xC1B5u64;
+        let run = |threads: usize, groups: usize| {
+            let app = store_app();
+            let cfg = ClusterConfig {
+                service: ServiceModel::default(),
+                warmup: VTime::from_secs(1),
+                horizon: VTime::from_secs(6),
+                seed,
+                parallel: threads,
+                ..Default::default()
+            };
+            ClusterSim::new(
+                &app,
+                topo.clone(),
+                ClientsConfig { n: 24, think_ms: 10.0, seed, groups, ..Default::default() },
+                cfg,
+                |_| Box::new(ClusterMixGen),
+            )
+            .run()
+        };
+        let base = run(1, 1);
+        assert!(base.metrics.completed > 100, "cluster {name}: too few completions");
+        for (threads, groups) in k_combos() {
+            let r = run(threads, groups);
+            assert_eq!(
+                ksig(&base),
+                ksig(&r),
+                "cluster differs: {name} threads={threads} groups={groups}"
+            );
+        }
+    }
+}
+
+/// `BaselineSim` on the sharded client tier, both modes.
+#[test]
+fn baseline_client_group_invariant() {
+    let ksig = |r: &BaselineReport| {
+        let mut v = ksig_metrics(&r.metrics);
+        v.push(r.events);
+        v.extend(r.utilization.iter().map(|u| u.to_bits()));
+        v
+    };
+    let topos = [
+        ("wan3", Topology::wan(3).servers, BaselineMode::ReadOnly { n_servers: 3 }),
+        ("wan5-central", Topology::wan_full_client(5), BaselineMode::Centralized),
+    ];
+    for (name, sites, mode) in topos {
+        let seed = 0xBA5Eu64;
+        let run = |threads: usize, groups: usize| {
+            let app = store_app();
+            let cfg = BaselineConfig {
+                mode,
+                service: ServiceModel::default(),
+                warmup: VTime::from_secs(1),
+                horizon: VTime::from_secs(6),
+                seed,
+                parallel: threads,
+                ..BaselineConfig::centralized()
+            };
+            BaselineSim::new(
+                &app,
+                sites.clone(),
+                ClientsConfig { n: 24, think_ms: 10.0, seed, groups, ..Default::default() },
+                cfg,
+                |_| Box::new(ClusterMixGen),
+            )
+            .run()
+        };
+        let base = run(1, 1);
+        assert!(base.metrics.completed > 100, "baseline {name}: too few completions");
+        for (threads, groups) in k_combos() {
+            let r = run(threads, groups);
+            assert_eq!(
+                ksig(&base),
+                ksig(&r),
+                "baseline differs: {name} threads={threads} groups={groups}"
+            );
         }
     }
 }
@@ -520,11 +734,14 @@ fn committed_state_converges_to_serial_token_order() {
                     client_matrix: None,
                     seed: 0xC0FFEE,
                     threads,
+                    // ScheduleGen is stateful (a shared cursor), so it is
+                    // only deterministic with the single client group.
+                    groups: 1,
                     real: true,
                     misroute: 0.0,
                 };
                 let (r, dbs) =
-                    run_store(spec, Box::new(ScheduleGen { ops: ops.clone(), next: 0 }));
+                    run_store(spec, |_| Box::new(ScheduleGen { ops: ops.clone(), next: 0 }));
                 assert_eq!(r.aborts, 0, "schedule must commit cleanly");
                 assert_eq!(r.global_log.len() as i64, globals, "every global is ordered once");
                 let replay = replay_serially(&app, &r.global_log);
