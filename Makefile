@@ -1,10 +1,11 @@
 # Developer entry points. `make check` is the pre-PR gate (see ROADMAP.md).
 
-.PHONY: check build test test-par clippy doc bench bench-sim artifacts
+.PHONY: check build test test-par test-crash clippy doc bench bench-sim artifacts
 
 # Pre-PR gate: release build + tests (incl. the parallel-determinism
-# ladder) + lint + the rustdoc gate, all from the rust crate.
-check: build test-par clippy doc
+# ladder and the crash-recovery seed matrix) + lint + the rustdoc gate,
+# all from the rust crate.
+check: build test-par test-crash clippy doc
 
 build:
 	cd rust && cargo build --release
@@ -29,6 +30,15 @@ test-par: test
 	cd rust && ELIA_PAR_MAX=1 cargo test -q --test parallel_determinism
 	cd rust && ELIA_PAR_MAX=2 cargo test -q --test parallel_determinism thread_count_invariant
 	cd rust && ELIA_PAR_MAX=2 cargo test -q --test parallel_determinism client_group
+
+# WAL crash-recovery suite under extra workload seeds. The plain `test`
+# run already covers the default seed (0xC4A5); these rungs redrive the
+# randomized crash/replay workloads (`ELIA_CRASH_SEED` steers the
+# driver in tests/crash_recovery.rs) so torn-tail truncation and
+# boundary replay hold beyond one transaction history.
+test-crash:
+	cd rust && ELIA_CRASH_SEED=1 cargo test -q --release --test crash_recovery
+	cd rust && ELIA_CRASH_SEED=2 cargo test -q --release --test crash_recovery
 
 clippy:
 	cd rust && cargo clippy -- -D warnings

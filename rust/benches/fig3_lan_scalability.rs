@@ -42,7 +42,11 @@ fn main() {
         let rows = fig3(workload, &servers, &scale);
         let table_rows: Vec<(String, usize, Option<elia::harness::LoadPoint>)> = rows
             .iter()
-            .map(|(sys, n, curve)| (sys.clone(), *n, curve.peak(2000.0).cloned()))
+            // An SLA-violating fallback renders as a missing point, not
+            // as a fake peak (Peak::met_sla).
+            .map(|(sys, n, curve)| {
+                (sys.clone(), *n, curve.peak(2000.0).and_then(|p| p.met_sla.then(|| p.point.clone())))
+            })
             .collect();
         println!("{}", report::scalability_table(&table_rows, 2000.0));
 
@@ -52,8 +56,9 @@ fn main() {
             rows.iter()
                 .filter(|(s, _, _)| s == sys)
                 .filter_map(|(_, _, c)| c.peak(2000.0))
-                .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
-                .cloned()
+                .filter(|p| p.met_sla)
+                .max_by(|a, b| a.point.throughput.partial_cmp(&b.point.throughput).unwrap())
+                .map(|p| p.point.clone())
         };
         if let (Some(e), Some(m)) = (best("elia"), best("mysql-cluster")) {
             println!(

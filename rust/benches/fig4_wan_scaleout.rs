@@ -33,7 +33,11 @@ fn main() {
             // Max sustained throughput per system (5s latency bound).
             for c in &curves {
                 if let Some(p) = c.peak(5000.0) {
-                    println!("  {}: max {:.0} ops/s @ {:.0} ms", c.label, p.throughput, p.mean_latency_ms);
+                    let note = if p.met_sla { "" } else { "  (SLA never met)" };
+                    println!(
+                        "  {}: max {:.0} ops/s @ {:.0} ms{note}",
+                        c.label, p.point.throughput, p.point.mean_latency_ms
+                    );
                 }
             }
             println!("[fig4 {} n={n} took {:.1}s]", workload.name(), t0.elapsed().as_secs_f64());

@@ -29,7 +29,8 @@ fn main() {
     println!("{}", report::curves_table(&curves));
     for c in &curves {
         if let Some(p) = c.peak(5000.0) {
-            println!("  {}: saturation ~{:.0} ops/s", c.label, p.throughput);
+            let note = if p.met_sla { "" } else { "  (SLA never met)" };
+            println!("  {}: saturation ~{:.0} ops/s{note}", c.label, p.point.throughput);
         }
     }
     for c in &curves {

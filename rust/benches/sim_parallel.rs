@@ -16,7 +16,11 @@
 //!   centralized server's capacity — a regime the closed loop cannot
 //!   reach);
 //! * a **lock-shard sweep** over `LockManager::new(s)` (the
-//!   `ELIA_LOCK_SHARDS` tuning axis).
+//!   `ELIA_LOCK_SHARDS` tuning axis);
+//! * a **recovery curve** (durability tier): kill one server at
+//!   increasing crash times — WAL replay makes downtime grow with
+//!   uptime; the 2PC baseline answers the same crash with an abort
+//!   storm.
 
 use elia::baselines::{BaselineConfig, BaselineMode, BaselineSim};
 use elia::cluster::{ClusterConfig, ClusterSim};
@@ -25,6 +29,7 @@ use elia::db::lockmgr::{LockMode, LockTarget};
 use elia::db::LockManager;
 use elia::harness::experiments::{fig3, ExpScale, Workload};
 use elia::simnet::clients::ClientsConfig;
+use elia::simnet::crash::CrashConfig;
 use elia::simnet::latency::Topology;
 use elia::simnet::parallel::available_threads;
 use elia::util::VTime;
@@ -236,6 +241,67 @@ fn open_loop_point(rate: Option<f64>) -> (f64, f64) {
     (r.throughput(), r.mean_latency_ms())
 }
 
+/// Recovery-time curve point: kill conveyor server 1 at `at_secs` into
+/// a LAN-4 run. The server's modeled WAL grows with uptime, so the
+/// replay charge — and with it the belt stall — grows with the crash
+/// time: the durability tier's recovery-cost curve. Returns (downtime
+/// ms, replayed records, completed ops).
+fn conveyor_crash_point(at_secs: u64) -> (f64, u64, u64) {
+    let app = micro::analyzed();
+    let cfg = ConveyorConfig {
+        service: ServiceModel::fixed(5.0),
+        warmup: VTime::from_secs(2),
+        horizon: VTime::from_secs(12),
+        crash: Some(CrashConfig {
+            server: 1,
+            at: VTime::from_secs(at_secs),
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let r = ConveyorSim::new(
+        &app,
+        Topology::lan(4),
+        ClientsConfig { n: 256, think_ms: 50.0, seed: 0xF16, ..Default::default() },
+        cfg,
+        |_| Box::new(micro::MicroGenerator::new(&app, 0.7)),
+        |_| {},
+    )
+    .run();
+    let o = r.crash.expect("crash outcome");
+    (o.downtime_ms(), o.replayed_records, r.metrics.completed)
+}
+
+/// The 2PC counterpart: the same crash against the cluster baseline
+/// with a prepare-round timeout. Where the conveyor stalls and resumes,
+/// the cluster coordinators time out — the failure shows up as an abort
+/// storm. Returns (downtime ms, aborts, completed ops).
+fn cluster_crash_point(at_secs: u64) -> (f64, u64, u64) {
+    let app = micro::analyzed();
+    let cfg = ClusterConfig {
+        service: ServiceModel::fixed(5.0),
+        warmup: VTime::from_secs(2),
+        horizon: VTime::from_secs(12),
+        crash: Some(CrashConfig {
+            server: 1,
+            at: VTime::from_secs(at_secs),
+            ..Default::default()
+        }),
+        txn_timeout_ms: Some(400.0),
+        ..Default::default()
+    };
+    let r = ClusterSim::new(
+        &app,
+        Topology::lan(4),
+        ClientsConfig { n: 256, think_ms: 50.0, seed: 0xF16, ..Default::default() },
+        cfg,
+        |_| Box::new(micro::MicroGenerator::new(&app, 0.7)),
+    )
+    .run();
+    let o = r.crash.expect("crash outcome");
+    (o.downtime_ms(), r.aborts, r.metrics.completed)
+}
+
 /// Lock-shard sweep (the `ELIA_LOCK_SHARDS` tuning axis): 8 threads
 /// hammer disjoint keys with X acquire/release pairs, so all measured
 /// contention is on the shard mutexes themselves. Returns pairs/s.
@@ -346,6 +412,27 @@ fn main() {
             println!("  shards {shards:>4}   {rate:>12.0} acquire+release/s");
             results.push((format!("lockmgr: {shards} shards (pairs/s)"), rate));
         }
+    }
+
+    // Recovery-time curve (durability tier): the crashed server's WAL
+    // grows with its uptime, so downtime grows with the crash time. The
+    // conveyor stalls and resumes; the cluster baseline's coordinators
+    // time out and abort instead.
+    {
+        println!("\nsim: recovery curve (kill server 1, lan4)");
+        for at in [3u64, 5, 7, 9] {
+            let (down, replayed, completed) = conveyor_crash_point(at);
+            println!(
+                "  conveyor crash @{at}s   down {down:>7.1} ms   replayed {replayed:>6}   completed {completed}"
+            );
+            results.push((format!("sim: conveyor crash @{at}s (downtime us)"), down * 1e3));
+        }
+        let (down, aborts, completed) = cluster_crash_point(5);
+        println!(
+            "  cluster  crash @5s   down {down:>7.1} ms   aborts {aborts:>6}   completed {completed}"
+        );
+        results.push(("sim: cluster crash @5s (downtime us)".into(), down * 1e3));
+        results.push(("sim: cluster crash @5s (aborts)".into(), aborts as f64));
     }
 
     // A quick fig3 point through the harness (the `--parallel` plumbing

@@ -42,6 +42,7 @@
 use crate::simnet::clients::{
     ClientEv, ClientGroups, ClientTier, ClientsConfig, IssueReply, IssueRouter,
 };
+use crate::simnet::crash::{CrashConfig, CrashOutcome};
 use crate::simnet::latency::Topology;
 use crate::simnet::metrics::SimMetrics;
 use crate::simnet::parallel::{self, client_group_target, GroupCore, WindowGroup};
@@ -67,6 +68,18 @@ pub struct ClusterConfig {
     /// (default), `0` all cores, `N` at most N threads. Results are
     /// bit-identical for every value.
     pub parallel: usize,
+    /// Kill one server mid-run (freeze-then-replay, see
+    /// [`crate::simnet::crash`]). Unlike the conveyor — where the token
+    /// stalls and everything waits — a crashed 2PC participant leaves
+    /// coordinators hanging in their prepare rounds, holding row locks.
+    pub crash: Option<CrashConfig>,
+    /// Coordinator-side timeout on the 2PC prepare round, in ms. When a
+    /// round is still missing votes this long after the prepare fan-out,
+    /// the coordinator aborts: it releases its local keys, tells every
+    /// participant to release theirs, and answers the client (aborted
+    /// operations complete the closed loop but are counted in
+    /// [`ClusterReport::aborts`]). `None` (default) = wait forever.
+    pub txn_timeout_ms: Option<f64>,
     pub warmup: VTime,
     pub horizon: VTime,
     pub seed: u64,
@@ -84,6 +97,8 @@ impl Default for ClusterConfig {
             remote_exec_frac: 0.8,
             msg_cpu_ms: 0.8,
             parallel: 1,
+            crash: None,
+            txn_timeout_ms: None,
             warmup: VTime::from_secs(5),
             horizon: VTime::from_secs(25),
             seed: 0xC1B5,
@@ -95,14 +110,15 @@ impl Default for ClusterConfig {
 enum Job {
     /// Coordinator's own execution share (plus per-remote message CPU).
     Coord(u64),
-    /// A participant's prepare/read share of `op` coordinated elsewhere.
-    Remote { coord: usize, op: u64 },
+    /// A participant's prepare/read share of `op` coordinated elsewhere;
+    /// `stamp` rides along so the vote can identify the op incarnation.
+    Remote { coord: usize, op: u64, stamp: u64 },
     /// Commit application at a participant; releases `keys` on this
     /// shard when done, then acks the coordinator.
-    CommitApply { coord: usize, op: u64, keys: Vec<u64> },
+    CommitApply { coord: usize, op: u64, stamp: u64, keys: Vec<u64> },
     /// Coordinator-side handling of one participant ack (the commit
     /// round costs CPU on *both* ends, like the prepare round).
-    Ack(u64),
+    Ack { op: u64, stamp: u64 },
 }
 
 #[derive(Debug, Clone)]
@@ -120,19 +136,32 @@ enum Ev {
     JobDone { job: Job },
     /// Prepare/read request lands at a participant shard, carrying the
     /// write keys that shard owns. [server]
-    PrepareArrive { coord: usize, op: u64, service: VTime, keys: Vec<u64> },
+    PrepareArrive { coord: usize, op: u64, stamp: u64, service: VTime, keys: Vec<u64> },
     /// Participant lock reservations granted; its share executes.
     /// [server]
-    RemoteStart { coord: usize, op: u64, service: VTime },
-    /// A participant's prepare vote reaches the coordinator. [server]
-    VoteArrive { op: u64 },
+    RemoteStart { coord: usize, op: u64, stamp: u64, service: VTime },
+    /// A participant's prepare vote reaches the coordinator; dropped if
+    /// `stamp` no longer matches (the op timed out and its slot was
+    /// recycled). [server]
+    VoteArrive { op: u64, stamp: u64 },
     /// Commit decision lands at a participant shard. [server]
-    CommitArrive { coord: usize, op: u64, keys: Vec<u64> },
+    CommitArrive { coord: usize, op: u64, stamp: u64, keys: Vec<u64> },
     /// A participant's commit ack reaches the coordinator. [server]
-    AckArrive { op: u64 },
+    AckArrive { op: u64, stamp: u64 },
     /// All rounds done: the transaction completes at the coordinator.
     /// [server]
     Complete { op: u64 },
+    /// The prepare round is still missing votes `txn_timeout_ms` after
+    /// fan-out: abort. Self-scheduled, stamped against recycling. [server]
+    Deadline { op: u64, stamp: u64 },
+    /// An aborting coordinator tells a participant to release the write
+    /// keys it reserved for the aborted transaction. [server]
+    AbortArrive { keys: Vec<u64> },
+    /// This server crashes now (scheduled at boot from
+    /// [`ClusterConfig::crash`]). [server]
+    Crash,
+    /// Restart + WAL replay finished; drain the held backlog. [server]
+    Recover,
 }
 
 /// An operation travelling from the client tier to its coordinator; the
@@ -161,6 +190,11 @@ struct OpState {
     votes_pending: usize,
     acks_pending: usize,
     distributed: bool,
+    /// Incarnation stamp of this op slot (slots are recycled; stale
+    /// votes/acks for a previous occupant are dropped by mismatch).
+    stamp: u64,
+    /// Completed or aborted: no further message may act on this slot.
+    done: bool,
 }
 
 /// One server's shard of the virtual row-lock table: only keys whose
@@ -257,6 +291,19 @@ struct ServerGroup {
     rng: Rng,
     lock_waits: u64,
     core: GroupCore<Ev>,
+    /// Monotonic op-incarnation counter (stamps).
+    op_stamps: u64,
+    /// Prepare rounds this coordinator timed out and aborted.
+    aborts: u64,
+    /// Crashed and not yet recovered: every event freezes in `held`.
+    down: bool,
+    /// Events that arrived during the outage, in arrival order.
+    held: Vec<Ev>,
+    /// Durable redo records logged here (one per committed write at the
+    /// coordinator, one per commit applied as a participant) — sizes
+    /// the WAL replay charge at recovery.
+    log_len: u64,
+    crash: Option<CrashOutcome>,
 }
 
 impl<'s> WindowGroup<Shared<'s>> for ServerGroup {
@@ -271,26 +318,40 @@ impl<'s> WindowGroup<Shared<'s>> for ServerGroup {
     }
 
     fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
+        if self.down {
+            // Frozen: peers cannot observe the crash, so prepares,
+            // commits and our own timers pile up until recovery.
+            if matches!(ev, Ev::Recover) {
+                self.on_recover(ctx);
+            } else {
+                self.held.push(ev);
+            }
+            return;
+        }
         match ev {
             Ev::Arrive { op } => self.on_arrive(op, ctx),
             Ev::LockStart { op } => self.on_lock_start(op, ctx),
             Ev::JobDone { job } => self.on_job_done(job, ctx),
-            Ev::PrepareArrive { coord, op, service, keys } => {
-                self.on_prepare(coord, op, service, keys, ctx)
+            Ev::PrepareArrive { coord, op, stamp, service, keys } => {
+                self.on_prepare(coord, op, stamp, service, keys, ctx)
             }
-            Ev::RemoteStart { coord, op, service } => {
-                self.submit(Job::Remote { coord, op }, service, false)
+            Ev::RemoteStart { coord, op, stamp, service } => {
+                self.submit(Job::Remote { coord, op, stamp }, service, false)
             }
-            Ev::CommitArrive { coord, op, keys } => {
+            Ev::CommitArrive { coord, op, stamp, keys } => {
                 let apply = VTime::from_millis_f64(ctx.cfg.msg_cpu_ms);
-                self.submit(Job::CommitApply { coord, op, keys }, apply, false);
+                self.submit(Job::CommitApply { coord, op, stamp, keys }, apply, false);
             }
-            Ev::AckArrive { op } => {
+            Ev::AckArrive { op, stamp } => {
                 let ack_cpu = VTime::from_millis_f64(ctx.cfg.msg_cpu_ms);
-                self.submit(Job::Ack(op), ack_cpu, false);
+                self.submit(Job::Ack { op, stamp }, ack_cpu, false);
             }
-            Ev::VoteArrive { op } => self.on_vote(op, ctx),
+            Ev::VoteArrive { op, stamp } => self.on_vote(op, stamp, ctx),
             Ev::Complete { op } => self.on_complete(op, ctx),
+            Ev::Deadline { op, stamp } => self.on_deadline(op, stamp, ctx),
+            Ev::AbortArrive { keys } => self.locks.release(&keys),
+            Ev::Crash => self.on_crash(ctx),
+            Ev::Recover => unreachable!("recovery while up"),
             Ev::Issue { .. } | Ev::Reply { .. } => {
                 unreachable!("client-tier event delivered to a server")
             }
@@ -331,6 +392,7 @@ impl ServerGroup {
         let service = ctx.cfg.service.sample(&ctx.app.spec.txns[env.txn], &mut self.rng);
         let distributed = demand.shards.iter().any(|&s| s != self.id);
         let local_keys = demand.keys_on(self.id);
+        self.op_stamps += 1;
         let op = OpState {
             client: env.client,
             client_site: env.client_site,
@@ -341,6 +403,8 @@ impl ServerGroup {
             votes_pending: 0,
             acks_pending: 0,
             distributed,
+            stamp: self.op_stamps,
+            done: false,
         };
         // Read-committed: read-only transactions take no row locks.
         // Write transactions reserve their *coordinator-local* keys here;
@@ -389,19 +453,24 @@ impl ServerGroup {
         }
         match job {
             Job::Coord(op_id) => self.on_coord_done(op_id, ctx),
-            Job::Remote { coord, op } => {
+            Job::Remote { coord, op, stamp } => {
                 // Remote share done: the vote travels back.
                 let d = ctx.topo.servers.one_way(self.id, coord);
-                self.core.send(coord, now + d, Ev::VoteArrive { op });
+                self.core.send(coord, now + d, Ev::VoteArrive { op, stamp });
             }
-            Job::CommitApply { coord, op, keys } => {
+            Job::CommitApply { coord, op, stamp, keys } => {
                 // Commit applied: this shard's reservations end (entries
-                // evict) and the ack travels back to the coordinator.
+                // evict), the redo record is logged, and the ack travels
+                // back to the coordinator.
                 self.locks.release(&keys);
+                self.log_len += 1;
                 let d = ctx.topo.servers.one_way(self.id, coord);
-                self.core.send(coord, now + d, Ev::AckArrive { op });
+                self.core.send(coord, now + d, Ev::AckArrive { op, stamp });
             }
-            Job::Ack(op_id) => {
+            Job::Ack { op: op_id, stamp } => {
+                if !self.op_live(op_id, stamp) {
+                    return;
+                }
                 let done = {
                     let op = &mut self.ops[op_id as usize];
                     op.acks_pending -= 1;
@@ -414,6 +483,13 @@ impl ServerGroup {
         }
     }
 
+    /// A message references a live incarnation of an op slot iff the
+    /// stamp matches and the op has neither completed nor aborted.
+    fn op_live(&self, op_id: u64, stamp: u64) -> bool {
+        let op = &self.ops[op_id as usize];
+        op.stamp == stamp && !op.done
+    }
+
     fn on_coord_done(&mut self, op_id: u64, ctx: &Shared<'_>) {
         let remotes = self.ops[op_id as usize].demand.remotes(self.id);
         if remotes.is_empty() {
@@ -422,12 +498,20 @@ impl ServerGroup {
         }
         self.ops[op_id as usize].votes_pending = remotes.len();
         let service = self.ops[op_id as usize].service;
+        let stamp = self.ops[op_id as usize].stamp;
         let now = self.core.now();
         for shard in remotes {
             let keys = self.ops[op_id as usize].demand.keys_on(shard);
             let d = ctx.topo.servers.one_way(self.id, shard);
-            let ev = Ev::PrepareArrive { coord: self.id, op: op_id, service, keys };
+            let ev = Ev::PrepareArrive { coord: self.id, op: op_id, stamp, service, keys };
             self.core.send(shard, now + d, ev);
+        }
+        // Arm the prepare-round timeout (the round a crashed participant
+        // leaves hanging). The commit round needs no deadline: every
+        // voted participant eventually applies the decision — at worst
+        // after its recovery — so acks always arrive.
+        if let Some(t) = ctx.cfg.txn_timeout_ms {
+            self.core.q.schedule(VTime::from_millis_f64(t), Ev::Deadline { op: op_id, stamp });
         }
     }
 
@@ -438,6 +522,7 @@ impl ServerGroup {
         &mut self,
         coord: usize,
         op: u64,
+        stamp: u64,
         service: VTime,
         keys: Vec<u64>,
         ctx: &Shared<'_>,
@@ -457,10 +542,18 @@ impl ServerGroup {
             }
             grant
         };
-        self.core.q.schedule_at(start, Ev::RemoteStart { coord, op, service: remote_service });
+        self.core.q.schedule_at(
+            start,
+            Ev::RemoteStart { coord, op, stamp, service: remote_service },
+        );
     }
 
-    fn on_vote(&mut self, op_id: u64, ctx: &Shared<'_>) {
+    fn on_vote(&mut self, op_id: u64, stamp: u64, ctx: &Shared<'_>) {
+        if !self.op_live(op_id, stamp) {
+            // The coordinator timed out and aborted this incarnation
+            // while the vote was in flight (or in our station queue).
+            return;
+        }
         let done = {
             let op = &mut self.ops[op_id as usize];
             op.votes_pending -= 1;
@@ -479,11 +572,13 @@ impl ServerGroup {
         // coordinator pays CPU per ack — symmetric with the prepare path.
         let remotes = self.ops[op_id as usize].demand.remotes(self.id);
         self.ops[op_id as usize].acks_pending = remotes.len();
+        let stamp = self.ops[op_id as usize].stamp;
         let now = self.core.now();
         for shard in remotes {
             let keys = self.ops[op_id as usize].demand.keys_on(shard);
             let d = ctx.topo.servers.one_way(self.id, shard);
-            self.core.send(shard, now + d, Ev::CommitArrive { coord: self.id, op: op_id, keys });
+            let ev = Ev::CommitArrive { coord: self.id, op: op_id, stamp, keys };
+            self.core.send(shard, now + d, ev);
         }
     }
 
@@ -491,17 +586,87 @@ impl ServerGroup {
         // The transaction is over: the coordinator's own reservations
         // end (strict 2PL release; entries evict when idle).
         self.locks.release(&self.ops[op_id as usize].local_keys);
+        if !self.ops[op_id as usize].demand.read_only {
+            // One redo record for the coordinator's own write share.
+            self.log_len += 1;
+        }
         let (client, client_site, issued, distributed) = {
-            let op = &self.ops[op_id as usize];
+            let op = &mut self.ops[op_id as usize];
+            op.done = true;
             (op.client, op.client_site, op.issued, op.distributed)
         };
         let d = ctx.topo.servers.one_way(self.id, client_site);
         let ev = Ev::Reply { client, issued, distributed };
         let target = client_group_target(client, ctx.client_groups);
         self.core.send(target, self.core.now() + d, ev);
-        // Nothing references this op id past its Complete (votes and
-        // acks are all in): recycle the slot.
+        // Nothing live references this incarnation past its Complete
+        // (votes and acks are all in): recycle the slot.
         self.free_ops.push(op_id);
+    }
+
+    /// The prepare-round timeout fired. If the round is still missing
+    /// votes, abort: release this coordinator's keys, send releases to
+    /// every participant, answer the client, recycle the slot. Stale
+    /// deadlines (the op completed, aborted, or the slot was recycled)
+    /// are dropped by the stamp/done check.
+    fn on_deadline(&mut self, op_id: u64, stamp: u64, ctx: &Shared<'_>) {
+        let waiting = self.op_live(op_id, stamp) && self.ops[op_id as usize].votes_pending > 0;
+        if !waiting {
+            return;
+        }
+        self.aborts += 1;
+        let now = self.core.now();
+        let remotes = self.ops[op_id as usize].demand.remotes(self.id);
+        for shard in remotes {
+            let keys = self.ops[op_id as usize].demand.keys_on(shard);
+            let d = ctx.topo.servers.one_way(self.id, shard);
+            // FIFO per pair: this lands after the prepare it cancels,
+            // even at a participant that buffers both through an outage.
+            self.core.send(shard, now + d, Ev::AbortArrive { keys });
+        }
+        let (client, client_site, issued, distributed, local_keys) = {
+            let op = &mut self.ops[op_id as usize];
+            op.done = true;
+            op.votes_pending = 0;
+            (op.client, op.client_site, op.issued, op.distributed, std::mem::take(&mut op.local_keys))
+        };
+        self.locks.release(&local_keys);
+        // The abort still answers the client — the closed loop stays
+        // closed; the failure is visible in `ClusterReport::aborts`.
+        let d = ctx.topo.servers.one_way(self.id, client_site);
+        let target = client_group_target(client, ctx.client_groups);
+        self.core.send(target, now + d, Ev::Reply { client, issued, distributed });
+        self.free_ops.push(op_id);
+    }
+
+    fn on_crash(&mut self, ctx: &Shared<'_>) {
+        let cc = ctx.cfg.crash.as_ref().expect("crash event without crash config");
+        let now = self.core.now();
+        let downtime = cc.downtime(self.log_len);
+        self.down = true;
+        self.crash = Some(CrashOutcome {
+            server: self.id,
+            crashed_at: now,
+            recovered_at: now + downtime,
+            replayed_records: self.log_len,
+            held_events: 0,
+        });
+        self.core.q.schedule(downtime, Ev::Recover);
+    }
+
+    fn on_recover(&mut self, ctx: &Shared<'_>) {
+        self.down = false;
+        let held = std::mem::take(&mut self.held);
+        if let Some(o) = self.crash.as_mut() {
+            o.held_events = held.len() as u64;
+            o.recovered_at = self.core.now();
+        }
+        // Drain the backlog in arrival order: buffered prepares execute
+        // (their coordinators may long since have timed out — the late
+        // votes are dropped by stamp), commits apply, timers fire.
+        for ev in held {
+            self.handle(ev, ctx);
+        }
     }
 }
 
@@ -580,6 +745,12 @@ impl<'a> ClusterSim<'a> {
                 rng: Rng::stream(cfg.seed, id as u64),
                 lock_waits: 0,
                 core: GroupCore::new(),
+                op_stamps: 0,
+                aborts: 0,
+                down: false,
+                held: Vec::new(),
+                log_len: 0,
+                crash: None,
             })
             .collect();
         let clients = ClientGroups::new(clients_cfg, n, cfg.warmup, cfg.horizon, gen);
@@ -595,6 +766,11 @@ impl<'a> ClusterSim<'a> {
     }
 
     pub fn run(mut self) -> ClusterReport {
+        if let Some(cc) = &self.cfg.crash {
+            let n = self.topo.n();
+            assert!(cc.server < n, "crash.server {} out of range (n={n})", cc.server);
+            self.servers[cc.server].core.q.schedule_at(cc.at, Ev::Crash);
+        }
         self.clients.boot();
         let lookahead = self.lookahead();
         let threads = parallel::resolve_threads(self.cfg.parallel);
@@ -629,6 +805,8 @@ impl<'a> ClusterSim<'a> {
             events: clients.processed()
                 + servers.iter().map(|s| s.core.q.processed()).sum::<u64>(),
             windows,
+            aborts: servers.iter().map(|s| s.aborts).sum(),
+            crash: servers.iter().find_map(|s| s.crash),
         }
     }
 }
@@ -647,6 +825,13 @@ pub struct ClusterReport {
     pub events: u64,
     /// Conservative windows the engine executed.
     pub windows: u64,
+    /// Prepare rounds aborted by [`ClusterConfig::txn_timeout_ms`]
+    /// (aborted operations answer their clients but are the 2PC failure
+    /// mode a crash provokes — the abort storm).
+    pub aborts: u64,
+    /// What the configured crash cost (`None` when no crash was
+    /// configured or it landed past the horizon).
+    pub crash: Option<CrashOutcome>,
 }
 
 impl ClusterReport {
@@ -945,6 +1130,71 @@ mod tests {
         }
     }
 
+    /// Tentpole: a participant crash mid-2PC. Without timeouts the
+    /// prepare rounds touching the dead shard freeze (coordinators hold
+    /// row locks across the whole outage); with a timeout every such
+    /// round aborts — the 2PC abort storm the conveyor's token protocol
+    /// does not have (there, the belt stalls but nothing aborts).
+    #[test]
+    fn participant_crash_with_timeouts_produces_abort_storm() {
+        let app = app();
+        let mk = |crash: Option<CrashConfig>, timeout: Option<f64>, threads: usize| {
+            let cfg = ClusterConfig {
+                crash,
+                txn_timeout_ms: timeout,
+                warmup: VTime::from_secs(2),
+                horizon: VTime::from_secs(10),
+                service: ServiceModel::fixed(5.0),
+                parallel: threads,
+                ..Default::default()
+            };
+            ClusterSim::new(
+                &app,
+                Topology::lan(4),
+                ClientsConfig { n: 32, think_ms: 10.0, seed: 11, ..Default::default() },
+                cfg,
+                |_| Box::new(Gen { write_ratio: 0.5 }),
+            )
+            .run()
+        };
+        // A healthy LAN cluster never comes close to a 400 ms prepare
+        // round: the timeout must be invisible.
+        let clean = mk(None, Some(400.0), 1);
+        assert_eq!(clean.aborts, 0, "timeouts fired on a healthy cluster");
+        assert!(clean.crash.is_none());
+
+        let cc = CrashConfig {
+            server: 1,
+            at: VTime::from_secs(4),
+            restart_ms: 800.0,
+            replay_per_record_ms: 0.05,
+        };
+        let crashed = mk(Some(cc.clone()), Some(400.0), 1);
+        let o = crashed.crash.expect("crash outcome");
+        assert_eq!(o.server, 1);
+        assert_eq!(o.crashed_at, VTime::from_secs(4));
+        assert!(o.replayed_records > 0, "shard 1 must have logged commits by 4s");
+        assert!(o.held_events > 0, "2PC traffic must pile up during the outage");
+        assert!(o.downtime_ms() >= 800.0);
+        assert!(crashed.aborts > 10, "expected an abort storm, got {}", crashed.aborts);
+        assert!(crashed.metrics.completed > 100);
+
+        // Without timeouts the same crash aborts nothing: the affected
+        // rounds (and their row locks) just wait out the outage.
+        let frozen = mk(Some(cc.clone()), None, 1);
+        assert_eq!(frozen.aborts, 0);
+        assert!(frozen.crash.is_some());
+
+        // Crash + abort handling is group-local: still bit-identical at
+        // any thread count.
+        let par = mk(Some(cc), Some(400.0), 2);
+        assert_eq!(par.metrics.completed, crashed.metrics.completed);
+        assert_eq!(par.events, crashed.events);
+        assert_eq!(par.aborts, crashed.aborts);
+        assert_eq!(par.crash, crashed.crash);
+        assert_eq!(par.mean_latency_ms().to_bits(), crashed.mean_latency_ms().to_bits());
+    }
+
     /// Satellite guard: the documented defaults the benches assume
     /// (`ClusterConfig::default()` inside `harness::experiments`). A
     /// silent retuning would skew every recorded Fig-3 baseline curve.
@@ -955,6 +1205,8 @@ mod tests {
         assert!((c.remote_exec_frac - 0.8).abs() < 1e-12);
         assert!((c.msg_cpu_ms - 0.8).abs() < 1e-12);
         assert_eq!(c.parallel, 1, "sequential by default; benches opt in");
+        assert!(c.crash.is_none(), "durability modeling is opt-in");
+        assert!(c.txn_timeout_ms.is_none(), "2PC waits forever unless opted in");
         assert_eq!(c.warmup, VTime::from_secs(5));
         assert_eq!(c.horizon, VTime::from_secs(25));
         assert_eq!(c.seed, 0xC1B5);

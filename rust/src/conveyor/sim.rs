@@ -45,6 +45,7 @@ use crate::db::{Db, StateUpdate, TxnError};
 use crate::simnet::clients::{
     ClientEv, ClientGroups, ClientTier, ClientsConfig, IssueReply, IssueRouter,
 };
+use crate::simnet::crash::{CrashConfig, CrashOutcome};
 use crate::simnet::latency::Topology;
 use crate::simnet::metrics::SimMetrics;
 use crate::simnet::parallel::{self, client_group_target, GroupCore, WindowGroup};
@@ -88,6 +89,13 @@ pub struct ConveyorConfig {
     /// serializability checks; off by default — it retains every update
     /// for the whole run).
     pub record_global_log: bool,
+    /// Kill one server mid-run (freeze-then-replay, see
+    /// [`crate::simnet::crash`]). The token freezes with the crashed
+    /// server, so the whole belt stalls for the downtime — the failure
+    /// mode the paper's §6 fault discussion predicts. `None` (default)
+    /// = no crash; the clean event stream is byte-identical to builds
+    /// without this field.
+    pub crash: Option<CrashConfig>,
     pub warmup: VTime,
     pub horizon: VTime,
     pub seed: u64,
@@ -112,6 +120,7 @@ impl Default for ConveyorConfig {
             client_matrix: None,
             parallel: 1,
             record_global_log: false,
+            crash: None,
             warmup: VTime::from_secs(5),
             horizon: VTime::from_secs(25),
             seed: 0x5EED,
@@ -145,6 +154,11 @@ enum Ev {
     /// The token arrives — the token state travels with the event, so
     /// exactly one group owns it at any virtual time. [server]
     TokenArrive { token: Token },
+    /// This server crashes now (scheduled at boot from
+    /// [`ConveyorConfig::crash`]). [server]
+    Crash,
+    /// Restart + WAL replay finished; drain the held backlog. [server]
+    Recover,
 }
 
 #[derive(Debug)]
@@ -212,6 +226,15 @@ struct ServerState {
     core: GroupCore<Ev>,
     /// Token-order log of global updates (when `record_global_log`).
     log: Vec<(u64, StateUpdate)>,
+    /// Crashed and not yet recovered: every event freezes in `held`.
+    down: bool,
+    /// Events that arrived during the outage, in arrival order.
+    held: Vec<Ev>,
+    /// Durable redo records this server has logged (one per committed
+    /// operation plus one per replicated update applied) — sizes the
+    /// WAL replay charge at recovery, mirroring `db::wal::recover_log`.
+    log_len: u64,
+    crash: Option<CrashOutcome>,
 }
 
 impl<'s> WindowGroup<Shared<'s>> for ServerState {
@@ -226,10 +249,22 @@ impl<'s> WindowGroup<Shared<'s>> for ServerState {
     }
 
     fn handle(&mut self, ev: Ev, ctx: &Shared<'s>) {
+        if self.down {
+            // Frozen: peers cannot observe the crash, so their messages
+            // (and our own in-flight timers) pile up until recovery.
+            if matches!(ev, Ev::Recover) {
+                self.on_recover(ctx);
+            } else {
+                self.held.push(ev);
+            }
+            return;
+        }
         match ev {
             Ev::Arrive { op } => self.on_arrive(op, ctx),
             Ev::JobDone { job } => self.on_job_done(job, ctx),
             Ev::TokenArrive { token } => self.on_token(token, ctx),
+            Ev::Crash => self.on_crash(ctx),
+            Ev::Recover => unreachable!("recovery while up"),
             Ev::Issue { .. } | Ev::Reply { .. } => {
                 unreachable!("client-tier event delivered to a server")
             }
@@ -268,6 +303,10 @@ impl ServerState {
         match job {
             JobKind::Op(op) => {
                 let update = self.execute_real(&op, ctx);
+                // One redo record per committed operation (modeled runs
+                // count every completion; the WAL skips empty updates,
+                // a second-order effect the replay charge absorbs).
+                self.log_len += 1;
                 if op.global {
                     // Append to the token in completion order (the DBMS
                     // commit order under strict 2PL).
@@ -347,6 +386,9 @@ impl ServerState {
             }
         }
         let n_updates = updates.len();
+        // Replicated updates hit the local WAL too (`try_apply_update`
+        // appends after a successful apply).
+        self.log_len += n_updates as u64;
         if n_updates > 0 {
             let service =
                 VTime::from_millis_f64(ctx.cfg.apply_per_update_ms * n_updates as f64);
@@ -372,6 +414,36 @@ impl ServerState {
             // the handling threads which run concurrently with new local
             // arrivals; priority keeps token hold times short.
             self.submit_job(JobKind::Op(op), service, true);
+        }
+    }
+
+    fn on_crash(&mut self, ctx: &Shared<'_>) {
+        let cc = ctx.cfg.crash.as_ref().expect("crash event without crash config");
+        let now = self.core.now();
+        let downtime = cc.downtime(self.log_len);
+        self.down = true;
+        self.crash = Some(CrashOutcome {
+            server: self.id,
+            crashed_at: now,
+            recovered_at: now + downtime,
+            replayed_records: self.log_len,
+            held_events: 0,
+        });
+        self.core.q.schedule(downtime, Ev::Recover);
+    }
+
+    fn on_recover(&mut self, ctx: &Shared<'_>) {
+        self.down = false;
+        let held = std::mem::take(&mut self.held);
+        if let Some(o) = self.crash.as_mut() {
+            o.held_events = held.len() as u64;
+            o.recovered_at = self.core.now();
+        }
+        // Drain the backlog in arrival order: job timers fire, buffered
+        // requests execute, and — if the token froze here — the belt
+        // starts moving again.
+        for ev in held {
+            self.handle(ev, ctx);
         }
     }
 
@@ -498,6 +570,10 @@ impl<'a> ConveyorSim<'a> {
                     rng: Rng::stream(cfg.seed ^ 0xF00D, id as u64),
                     core: GroupCore::new(),
                     log: Vec::new(),
+                    down: false,
+                    held: Vec::new(),
+                    log_len: 0,
+                    crash: None,
                 }
             })
             .collect();
@@ -558,6 +634,10 @@ impl<'a> ConveyorSim<'a> {
         let n = self.topo.n();
         let token = Token::new(n);
         self.servers[0].core.q.schedule_at(VTime::ZERO, Ev::TokenArrive { token });
+        if let Some(cc) = &self.cfg.crash {
+            assert!(cc.server < n, "crash.server {} out of range (n={n})", cc.server);
+            self.servers[cc.server].core.q.schedule_at(cc.at, Ev::Crash);
+        }
         self.clients.boot();
 
         let lookahead = self.lookahead();
@@ -599,6 +679,7 @@ impl<'a> ConveyorSim<'a> {
                 + servers.iter().map(|s| s.core.q.processed()).sum::<u64>(),
             windows,
             global_log: log.into_iter().map(|(_, u)| u).collect(),
+            crash: servers.iter().find_map(|s| s.crash),
         };
         let dbs = servers.into_iter().map(|s| s.db).collect();
         (report, dbs)
@@ -623,6 +704,9 @@ pub struct ConveyorReport {
     /// with [`ConveyorConfig::record_global_log`]): the serial history
     /// every server's replicated state must be explainable by.
     pub global_log: Vec<StateUpdate>,
+    /// What the configured crash cost (`None` when no crash was
+    /// configured or it landed past the horizon).
+    pub crash: Option<CrashOutcome>,
 }
 
 impl ConveyorReport {
@@ -921,10 +1005,70 @@ mod tests {
         assert!((c.misroute_prob - 0.0).abs() < 1e-12);
         assert_eq!(c.parallel, 1, "sequential by default; benches opt in");
         assert!(!c.record_global_log);
+        assert!(c.crash.is_none(), "durability modeling is opt-in");
         assert!(!c.execute_real);
         assert_eq!(c.warmup, VTime::from_secs(5));
         assert_eq!(c.horizon, VTime::from_secs(25));
         assert_eq!(c.seed, 0x5EED);
+    }
+
+    /// Tentpole: a server crash freezes the belt (the token stalls with
+    /// the crashed server), recovery replays the modeled WAL, and held
+    /// traffic drains — the run completes, just slower. Crash handling
+    /// is group-local, so thread count still cannot change a bit.
+    #[test]
+    fn crash_stalls_the_belt_then_recovers_deterministically() {
+        let app = app();
+        let mk = |crash: Option<CrashConfig>, threads: usize| {
+            let cfg = ConveyorConfig {
+                execute_real: true,
+                crash,
+                warmup: VTime::from_secs(1),
+                horizon: VTime::from_secs(10),
+                service: ServiceModel::fixed(5.0),
+                parallel: threads,
+                ..Default::default()
+            };
+            ConveyorSim::new(
+                &app,
+                Topology::lan(3),
+                ClientsConfig { n: 24, think_ms: 10.0, seed: 7, ..Default::default() },
+                cfg,
+                |_| Box::new(MixGen { global_ratio: 0.3 }),
+                seed,
+            )
+            .run()
+        };
+        let clean = mk(None, 1);
+        let cc = CrashConfig {
+            server: 1,
+            at: VTime::from_secs(4),
+            restart_ms: 800.0,
+            replay_per_record_ms: 0.05,
+        };
+        let crashed = mk(Some(cc.clone()), 1);
+        let o = crashed.crash.expect("crash outcome");
+        assert_eq!(o.server, 1);
+        assert_eq!(o.crashed_at, VTime::from_secs(4));
+        assert!(o.replayed_records > 0, "server 1 must have logged work by 4s");
+        assert!(o.held_events > 0, "belt traffic must pile up during the outage");
+        assert!(o.downtime_ms() >= 800.0, "downtime {} < restart cost", o.downtime_ms());
+        assert_eq!(o.recovered_at, o.crashed_at + cc.downtime(o.replayed_records));
+        // The stall is visible end to end: fewer rotations, higher
+        // latency — but every held request is eventually answered.
+        assert!(crashed.rotations < clean.rotations, "token did not stall");
+        assert!(crashed.metrics.completed > 100);
+        assert!(
+            crashed.mean_latency_ms() > clean.mean_latency_ms(),
+            "outage must show up as a latency spike: {} vs {}",
+            crashed.mean_latency_ms(),
+            clean.mean_latency_ms()
+        );
+        let par = mk(Some(cc), 2);
+        assert_eq!(par.metrics.completed, crashed.metrics.completed);
+        assert_eq!(par.events, crashed.events);
+        assert_eq!(par.crash, crashed.crash);
+        assert_eq!(par.mean_latency_ms().to_bits(), crashed.mean_latency_ms().to_bits());
     }
 
     /// The recorded token log is the serial history: replaying it on a

@@ -24,6 +24,7 @@ use super::result::ResultSet;
 use super::txn::{IsolationLevel, TxnError, TxnState};
 use super::update::{ColOp, StateUpdate, WriteRecord};
 use super::value::{numeric_arith, ArithKind, Bindings, Key, Row, Value};
+use super::wal::{self, DurabilityConfig, RecoveryReport, Wal};
 use crate::catalog::{Schema, TableSchema};
 use crate::sqlir::Stmt;
 use std::collections::{HashMap, HashSet};
@@ -94,6 +95,9 @@ pub struct Db {
     default_isolation: IsolationLevel,
     commits: AtomicU64,
     aborts: AtomicU64,
+    /// Write-ahead log; `None` (the default) keeps the engine purely
+    /// in-memory and byte-identical to the pre-WAL hot path.
+    wal: Option<Wal>,
 }
 
 impl std::fmt::Debug for Db {
@@ -116,7 +120,50 @@ impl Db {
             default_isolation: IsolationLevel::Serializable,
             commits: AtomicU64::new(0),
             aborts: AtomicU64::new(0),
+            wal: None,
         }
+    }
+
+    /// Attach a fresh write-ahead log: the file at `cfg.path` is
+    /// created (or truncated) and every commit from here on appends its
+    /// [`StateUpdate`] before acknowledging, per `cfg.policy`. Use
+    /// [`Db::recover`] instead when the file may hold a previous run's
+    /// committed state.
+    pub fn with_durability(mut self, cfg: &DurabilityConfig) -> Result<Self, TxnError> {
+        self.wal = Some(Wal::create(cfg)?);
+        Ok(self)
+    }
+
+    /// Recover a database from its write-ahead log: build an empty
+    /// database for `schema`, run `seed` to restore the snapshot the
+    /// log was started over (the same loader the original run used —
+    /// seeded data precedes every logged commit), replay the log's
+    /// committed records in commit order, truncate any torn tail, and
+    /// re-attach the log for appending. If no log file exists yet this
+    /// is [`Db::with_durability`] with an empty report.
+    pub fn recover(
+        schema: Schema,
+        cfg: &DurabilityConfig,
+        seed: impl FnOnce(&Db),
+    ) -> Result<(Db, RecoveryReport), TxnError> {
+        let mut db = Db::new(schema);
+        seed(&db);
+        if !cfg.path.exists() {
+            db.wal = Some(Wal::create(cfg)?);
+            return Ok((db, RecoveryReport::default()));
+        }
+        let (updates, report) = wal::recover_log(&cfg.path)?;
+        for u in &updates {
+            db.apply_update(u)?;
+        }
+        db.wal = Some(Wal::open_append(cfg)?);
+        Ok((db, report))
+    }
+
+    /// The attached write-ahead log, if any (tests and shutdown hooks;
+    /// e.g. [`Wal::flush`] before a clean exit under a batched policy).
+    pub fn wal(&self) -> Option<&Wal> {
+        self.wal.as_ref()
     }
 
     /// Set the default isolation level handed to [`begin`](Self::begin).
@@ -257,6 +304,14 @@ impl Db {
             }
             Ok(())
         })();
+        // Replicated updates are part of this server's durable history
+        // too: log them while the X locks are still held so the WAL
+        // order stays a serialization order across local commits and
+        // replayed remote ones.
+        let res = match (res, &self.wal) {
+            (Ok(()), Some(w)) if !update.is_empty() => w.append(update),
+            (res, _) => res,
+        };
         self.locks.release(id, &held);
         res
     }
@@ -756,6 +811,21 @@ impl<'a> TxnHandle<'a> {
         }
         self.done = true;
 
+        // Durability first: the commit acknowledges only after its redo
+        // records reach the log (group-committed per the sync policy).
+        // All 2PL locks are still held, so — by the same argument as the
+        // token hook below — the WAL order is a serialization order, and
+        // an append failure aborts cleanly before storage is touched.
+        if !self.state.update.is_empty() {
+            if let Some(w) = &self.db.wal {
+                if let Err(e) = w.append(&self.state.update) {
+                    self.release_locks();
+                    self.db.aborts.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            }
+        }
+
         // Apply per-table in table-id order under physical write locks.
         let mut touched: Vec<usize> = self.state.update.records.iter().map(|r| r.table()).collect();
         touched.sort_unstable();
@@ -1073,6 +1143,48 @@ mod tests {
         let update = txn.commit().unwrap();
         db2.apply_update(&update).unwrap();
         assert_eq!(db1.content_hash(), db2.content_hash());
+    }
+
+    #[test]
+    fn null_plus_delta_replays_identically_on_replicas() {
+        // Regression for the ColOp::Add NULL bug: a delta over a NULL
+        // cell must produce NULL on the primary's commit path *and* on
+        // the replica's replay path — it used to degrade to Set(delta)
+        // on replay, diverging the replica.
+        let db1 = test_db();
+        let db2 = test_db();
+        // Seed the row with a NULL STOCK through the replication path
+        // (the SQL loader has no NULL literal), identically on both.
+        let null_row = StateUpdate {
+            records: vec![WriteRecord::Insert {
+                table: 0,
+                key: Key::single(Value::Int(1)),
+                row: Arc::new(vec![
+                    Value::Int(1),
+                    Value::Str("b".into()),
+                    Value::Null,
+                    Value::Float(1.0),
+                ]),
+            }],
+        };
+        db1.apply_update(&null_row).unwrap();
+        db2.apply_update(&null_row).unwrap();
+
+        let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK + 5 WHERE ID = 1").unwrap();
+        let mut txn = db1.begin();
+        txn.exec(&u, &Bindings::new()).unwrap();
+        let update = txn.commit().unwrap();
+        assert_eq!(
+            db1.peek("ITEMS", &Key::single(Value::Int(1))).unwrap()[2],
+            Value::Null,
+            "primary: NULL + 5 must stay NULL"
+        );
+        db2.apply_update(&update).unwrap();
+        assert_eq!(
+            db1.content_hash(),
+            db2.content_hash(),
+            "replica must not diverge on a NULL + delta replay"
+        );
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub mod result;
 pub mod txn;
 pub mod update;
 pub mod value;
+pub mod wal;
 
 pub use engine::{Db, TxnHandle};
 pub use lockmgr::{LockManager, LockMode};
@@ -49,3 +50,4 @@ pub use result::{ResultSet, RowRef};
 pub use txn::{IsolationLevel, TxnError};
 pub use update::{StateUpdate, WriteRecord};
 pub use value::{value_clone_count, Bindings, Key, Row, Value};
+pub use wal::{DurabilityConfig, RecoveryReport, SyncPolicy, Wal};

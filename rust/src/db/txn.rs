@@ -40,6 +40,12 @@ pub enum TxnError {
     Sql(String),
     /// The transaction handle was already committed or aborted.
     Finished,
+    /// The write-ahead log could not persist or recover a commit record
+    /// (I/O error, corrupt log). Carries the rendered `io::Error` so the
+    /// variant stays `Clone`. Not retryable: once an append fails the
+    /// log is poisoned and every later commit fails too (see
+    /// [`crate::db::wal::Wal`]).
+    Durability(String),
 }
 
 impl fmt::Display for TxnError {
@@ -51,6 +57,7 @@ impl fmt::Display for TxnError {
             }
             TxnError::Sql(msg) => write!(f, "sql error: {msg}"),
             TxnError::Finished => write!(f, "transaction already finished"),
+            TxnError::Durability(msg) => write!(f, "durability error: {msg}"),
         }
     }
 }

@@ -31,14 +31,34 @@ pub enum ColOp {
 
 impl ColOp {
     /// Apply to the current value.
+    ///
+    /// `Add` mirrors [`crate::db::value::numeric_arith`] exactly — the
+    /// origin server computes the post-image through `numeric_arith`
+    /// while replicas re-derive it here from their own current value,
+    /// so any semantic gap between the two diverges replicas from the
+    /// primary:
+    /// * NULL propagates (SQL three-valued arithmetic) instead of the
+    ///   delta silently degrading to a `Set`;
+    /// * integer deltas saturate on overflow (with a debug assertion)
+    ///   instead of wrapping, so an overflowing replicated counter
+    ///   pins at the bound identically everywhere;
+    /// * a delta over a non-numeric non-NULL value (unreachable through
+    ///   the typed SQL path) leaves the current value untouched.
     pub fn apply(&self, current: &Value) -> Value {
         match self {
             ColOp::Set(v) => v.clone(),
             ColOp::Add(d) => match (current, d) {
-                (Value::Int(a), Value::Int(b)) => Value::Int(a.wrapping_add(*b)),
+                (Value::Null, _) | (_, Value::Null) => Value::Null,
+                (Value::Int(a), Value::Int(b)) => {
+                    debug_assert!(
+                        a.checked_add(*b).is_some(),
+                        "replicated integer delta overflows: {a} + {b} (saturating in release)"
+                    );
+                    Value::Int(a.saturating_add(*b))
+                }
                 (a, b) => match (a.as_f64(), b.as_f64()) {
                     (Some(x), Some(y)) => Value::Float(x + y),
-                    _ => d.clone(),
+                    _ => current.clone(),
                 },
             },
         }
@@ -178,6 +198,48 @@ mod tests {
         assert_eq!(u.len(), 2);
         assert!(matches!(u.records[0], WriteRecord::Insert { .. }));
         assert!(matches!(u.records[1], WriteRecord::Delete { .. }));
+    }
+
+    #[test]
+    fn add_over_null_propagates_null_like_sql() {
+        // Regression: this used to return the delta (a silent Set),
+        // diverging replicas from the primary's NULL post-image.
+        let op = ColOp::Add(Value::Int(5));
+        assert_eq!(op.apply(&Value::Null), Value::Null);
+        let null_delta = ColOp::Add(Value::Null);
+        assert_eq!(null_delta.apply(&Value::Int(7)), Value::Null);
+        // The same pair through the origin-side evaluator must agree.
+        use crate::db::value::{numeric_arith, ArithKind};
+        assert_eq!(
+            numeric_arith(ArithKind::Add, &Value::Null, &Value::Int(5)).unwrap(),
+            op.apply(&Value::Null)
+        );
+    }
+
+    #[test]
+    fn add_over_non_numeric_keeps_current_value() {
+        // Regression: this used to degrade to Set(delta), replacing a
+        // string cell with the numeric delta on replay.
+        let op = ColOp::Add(Value::Int(5));
+        let cur = Value::Str("not a number".into());
+        assert_eq!(op.apply(&cur), cur);
+    }
+
+    #[test]
+    fn add_saturates_instead_of_wrapping() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let op = ColOp::Add(Value::Int(1));
+        let r = catch_unwind(AssertUnwindSafe(|| op.apply(&Value::Int(i64::MAX))));
+        if cfg!(debug_assertions) {
+            // Debug builds surface the overflow loudly.
+            assert!(r.is_err(), "overflow must trip the debug assertion");
+        } else {
+            // Release builds pin at the bound — identically on every
+            // replica — instead of wrapping to i64::MIN.
+            assert_eq!(r.unwrap(), Value::Int(i64::MAX));
+        }
+        // Non-overflowing adds are untouched by the guard.
+        assert_eq!(op.apply(&Value::Int(41)), Value::Int(42));
     }
 
     #[test]

@@ -320,18 +320,25 @@ pub enum ArithKind {
 }
 
 /// SQL arithmetic: NULL propagates, integer ops stay integer, anything
-/// else goes through f64.
+/// else goes through f64. Integer overflow saturates (with a debug
+/// assertion) rather than wrapping — the same contract as
+/// [`crate::db::update::ColOp::apply`], which re-derives these results
+/// on replicas; the two must agree bit-for-bit or replay diverges.
 pub fn numeric_arith(kind: ArithKind, a: &Value, b: &Value) -> Result<Value, String> {
     if matches!(a, Value::Null) || matches!(b, Value::Null) {
         return Ok(Value::Null);
     }
     if let (Value::Int(x), Value::Int(y)) = (a, b) {
-        let r = match kind {
-            ArithKind::Add => x.wrapping_add(*y),
-            ArithKind::Sub => x.wrapping_sub(*y),
-            ArithKind::Mul => x.wrapping_mul(*y),
+        let (checked, saturated) = match kind {
+            ArithKind::Add => (x.checked_add(*y), x.saturating_add(*y)),
+            ArithKind::Sub => (x.checked_sub(*y), x.saturating_sub(*y)),
+            ArithKind::Mul => (x.checked_mul(*y), x.saturating_mul(*y)),
         };
-        return Ok(Value::Int(r));
+        debug_assert!(
+            checked.is_some(),
+            "integer arithmetic overflows: {x} {kind:?} {y} (saturating in release)"
+        );
+        return Ok(Value::Int(checked.unwrap_or(saturated)));
     }
     let (x, y) = match (a.as_f64(), b.as_f64()) {
         (Some(x), Some(y)) => (x, y),

@@ -1,0 +1,659 @@
+//! Write-ahead logging for the engine's logical redo stream.
+//!
+//! The engine already produces a replayable description of every commit
+//! — the [`StateUpdate`] the Conveyor Belt ships between servers (paper
+//! §5). Durability is the same stream pointed at a file: each commit
+//! appends one checksummed binary record *while the transaction still
+//! holds all its locks*, so the log order is a strict-2PL serialization
+//! order and recovery is exactly the replica replay path
+//! ([`crate::db::Db::apply_update`]) reading from disk instead of from
+//! the token.
+//!
+//! ## On-disk format
+//!
+//! ```text
+//! "ELIAWAL1"                                      8-byte magic
+//! repeated:  [len: u32 LE] [fnv1a64(payload): u64 LE] [payload]
+//! ```
+//!
+//! The payload encodes one [`StateUpdate`] (record count, then per
+//! [`WriteRecord`] a kind tag, table index, key values, and the
+//! row/column payload; values are tag-prefixed little-endian). A record
+//! is *committed* iff its length, checksum and payload are all intact;
+//! recovery replays the longest intact prefix and truncates the rest —
+//! a torn tail from a crash mid-write loses only commits that were
+//! never acknowledged under [`SyncPolicy::Always`].
+//!
+//! ## Group commit
+//!
+//! Under [`SyncPolicy::Always`] concurrent committers batch their
+//! fsyncs: every appender buffers its record under the mutex, then
+//! either becomes the *leader* (writes + fsyncs everything buffered so
+//! far, including records that arrived while the previous leader was
+//! syncing) or waits on a condvar until a leader's sync covers its
+//! record. One fsync thus acknowledges many commits under load while
+//! every acknowledged commit is on disk. [`SyncPolicy::Batch`] keeps
+//! records in user-space memory and only writes + syncs every n-th
+//! commit — an in-process crash genuinely loses the unflushed tail,
+//! which is what the kill-and-recover tests simulate. [`SyncPolicy::Os`]
+//! writes every record to the OS but never syncs.
+
+use super::txn::TxnError;
+use super::update::{ColOp, StateUpdate, WriteRecord};
+use super::value::{Key, Value};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// File header identifying an Eliá WAL (and its format version).
+const MAGIC: &[u8; 8] = b"ELIAWAL1";
+
+/// Bytes of per-record framing: u32 payload length + u64 checksum.
+const FRAME: usize = 12;
+
+fn io_err(e: std::io::Error) -> TxnError {
+    TxnError::Durability(e.to_string())
+}
+
+/// FNV-1a over the record payload. Not cryptographic — it guards
+/// against torn writes and bit rot, not adversaries — but it is
+/// dependency-free and byte-order independent.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// When appended records are made durable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPolicy {
+    /// fsync before every commit acknowledgment, amortized by group
+    /// commit: concurrent committers share one fsync. No acknowledged
+    /// commit is ever lost. The default.
+    Always,
+    /// Buffer records in user space and write + fsync every n-th
+    /// append. A crash loses at most `n - 1` of the latest acknowledged
+    /// commits — the classic throughput/durability trade.
+    Batch(usize),
+    /// Write every record to the OS page cache, never fsync. Survives
+    /// process death, not power loss.
+    Os,
+}
+
+impl SyncPolicy {
+    /// The policy selected by the `ELIA_WAL_BATCH` environment variable:
+    /// unset, `1` or garbage → [`SyncPolicy::Always`]; an integer
+    /// `n > 1` → [`SyncPolicy::Batch`]`(n)`; `os` → [`SyncPolicy::Os`].
+    pub fn from_env() -> SyncPolicy {
+        Self::parse(std::env::var("ELIA_WAL_BATCH").ok().as_deref())
+    }
+
+    fn parse(v: Option<&str>) -> SyncPolicy {
+        match v {
+            Some(s) if s.trim().eq_ignore_ascii_case("os") => SyncPolicy::Os,
+            Some(s) => match s.trim().parse::<usize>() {
+                Ok(n) if n > 1 => SyncPolicy::Batch(n),
+                _ => SyncPolicy::Always,
+            },
+            None => SyncPolicy::Always,
+        }
+    }
+}
+
+/// Where and how a [`crate::db::Db`] persists its redo stream. Off by
+/// default: a `Db` built without one of these never touches a file, so
+/// simulators and hot-path benches are byte-identical to the pre-WAL
+/// engine.
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    /// Log file path.
+    pub path: PathBuf,
+    /// Sync policy (see [`SyncPolicy::from_env`] for the env knob).
+    pub policy: SyncPolicy,
+}
+
+impl DurabilityConfig {
+    /// A config for `path` with the policy taken from `ELIA_WAL_BATCH`.
+    pub fn new(path: impl Into<PathBuf>) -> DurabilityConfig {
+        DurabilityConfig { path: path.into(), policy: SyncPolicy::from_env() }
+    }
+
+    /// Override the sync policy.
+    pub fn with_policy(mut self, policy: SyncPolicy) -> DurabilityConfig {
+        self.policy = policy;
+        self
+    }
+}
+
+/// Shared appender state behind the mutex.
+#[derive(Debug, Default)]
+struct WalState {
+    /// Encoded records accepted but not yet handed to the OS.
+    buf: Vec<u8>,
+    /// Records currently in `buf` (drives [`SyncPolicy::Batch`]).
+    buffered: usize,
+    /// Sequence number of the last accepted record.
+    next_seq: u64,
+    /// Sequence number through which records are flushed per the
+    /// policy's durability promise.
+    synced_seq: u64,
+    /// A group-commit leader is writing outside the mutex.
+    leader: bool,
+    /// Sticky first I/O failure; every later append fails with it.
+    failed: Option<String>,
+}
+
+/// An open write-ahead log. Appends are thread-safe (`&self`); the
+/// engine calls [`Wal::append`] from [`crate::db::TxnHandle::commit`]
+/// and from the replica replay path while the committing transaction
+/// still holds its locks.
+#[derive(Debug)]
+pub struct Wal {
+    file: File,
+    policy: SyncPolicy,
+    state: Mutex<WalState>,
+    synced: Condvar,
+}
+
+impl Wal {
+    /// Create (or truncate) the log at `cfg.path` and write the header.
+    pub fn create(cfg: &DurabilityConfig) -> Result<Wal, TxnError> {
+        let mut file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&cfg.path)
+            .map_err(io_err)?;
+        file.write_all(MAGIC).map_err(io_err)?;
+        file.sync_data().map_err(io_err)?;
+        Ok(Wal::with_file(file, cfg.policy))
+    }
+
+    /// Open an existing log for appending — the post-recovery path,
+    /// after [`recover_log`] has verified the contents and truncated
+    /// any torn tail.
+    pub fn open_append(cfg: &DurabilityConfig) -> Result<Wal, TxnError> {
+        let mut file =
+            OpenOptions::new().read(true).write(true).open(&cfg.path).map_err(io_err)?;
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic).map_err(io_err)?;
+        if &magic != MAGIC {
+            return Err(TxnError::Durability(format!(
+                "{}: not an Eliá WAL (bad magic)",
+                cfg.path.display()
+            )));
+        }
+        file.seek(SeekFrom::End(0)).map_err(io_err)?;
+        Ok(Wal::with_file(file, cfg.policy))
+    }
+
+    fn with_file(file: File, policy: SyncPolicy) -> Wal {
+        Wal {
+            file,
+            policy,
+            state: Mutex::new(WalState::default()),
+            synced: Condvar::new(),
+        }
+    }
+
+    /// Append one commit's records and return once the policy's
+    /// durability promise holds for them. Errors are sticky: after the
+    /// first I/O failure every append fails, so callers can't commit
+    /// past a dead disk.
+    pub fn append(&self, update: &StateUpdate) -> Result<(), TxnError> {
+        let mut payload = Vec::with_capacity(64);
+        encode_update(&mut payload, update);
+        let sum = fnv1a(&payload);
+
+        let mut st = self.state.lock().unwrap();
+        if let Some(m) = &st.failed {
+            return Err(TxnError::Durability(m.clone()));
+        }
+        st.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        st.buf.extend_from_slice(&sum.to_le_bytes());
+        st.buf.extend_from_slice(&payload);
+        st.next_seq += 1;
+        st.buffered += 1;
+        let my_seq = st.next_seq;
+
+        match self.policy {
+            SyncPolicy::Os => self.write_buffered(st, false).map(|_| ()),
+            SyncPolicy::Batch(n) => {
+                if st.buffered >= n {
+                    self.write_buffered(st, true).map(|_| ())
+                } else {
+                    Ok(())
+                }
+            }
+            SyncPolicy::Always => self.group_commit(st, my_seq),
+        }
+    }
+
+    /// Drain `buf` to the file under the mutex (the non-group-commit
+    /// policies; no leader can be in flight). Optionally fsync.
+    fn write_buffered(
+        &self,
+        mut st: MutexGuard<'_, WalState>,
+        sync: bool,
+    ) -> Result<u64, TxnError> {
+        debug_assert!(!st.leader, "write_buffered raced a group-commit leader");
+        let batch = std::mem::take(&mut st.buf);
+        st.buffered = 0;
+        let through = st.next_seq;
+        let res = (&self.file)
+            .write_all(&batch)
+            .and_then(|()| if sync { self.file.sync_data() } else { Ok(()) });
+        match res {
+            Ok(()) => {
+                st.synced_seq = st.synced_seq.max(through);
+                Ok(through)
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                st.failed = Some(msg.clone());
+                Err(TxnError::Durability(msg))
+            }
+        }
+    }
+
+    /// Group commit: become the leader (write + fsync everything
+    /// buffered) or wait until a leader's sync covers `my_seq`.
+    fn group_commit(
+        &self,
+        mut st: MutexGuard<'_, WalState>,
+        my_seq: u64,
+    ) -> Result<(), TxnError> {
+        loop {
+            if let Some(m) = &st.failed {
+                return Err(TxnError::Durability(m.clone()));
+            }
+            if st.synced_seq >= my_seq {
+                return Ok(());
+            }
+            if st.leader {
+                st = self.synced.wait(st).unwrap();
+                continue;
+            }
+            st.leader = true;
+            let batch = std::mem::take(&mut st.buf);
+            st.buffered = 0;
+            let through = st.next_seq;
+            drop(st);
+            let res = (&self.file).write_all(&batch).and_then(|()| self.file.sync_data());
+            st = self.state.lock().unwrap();
+            st.leader = false;
+            match res {
+                Ok(()) => st.synced_seq = st.synced_seq.max(through),
+                Err(e) => st.failed = Some(e.to_string()),
+            }
+            self.synced.notify_all();
+        }
+    }
+
+    /// Force everything appended so far to disk regardless of policy —
+    /// the clean-shutdown path for [`SyncPolicy::Batch`]/[`SyncPolicy::Os`].
+    pub fn flush(&self) -> Result<(), TxnError> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(m) = &st.failed {
+                return Err(TxnError::Durability(m.clone()));
+            }
+            if !st.leader {
+                break;
+            }
+            st = self.synced.wait(st).unwrap();
+        }
+        self.write_buffered(st, true).map(|_| ())
+    }
+
+    /// Records accepted by [`Wal::append`] so far.
+    pub fn appended(&self) -> u64 {
+        self.state.lock().unwrap().next_seq
+    }
+
+    /// Records covered by the policy's flush promise so far (equal to
+    /// [`Wal::appended`] under [`SyncPolicy::Always`]; lags by the
+    /// in-memory tail under [`SyncPolicy::Batch`]).
+    pub fn durable(&self) -> u64 {
+        self.state.lock().unwrap().synced_seq
+    }
+}
+
+/// What [`recover_log`] found and did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RecoveryReport {
+    /// Intact committed records decoded and returned for replay.
+    pub replayed: usize,
+    /// Torn-tail bytes discarded (0 for a cleanly closed log).
+    pub truncated_bytes: u64,
+    /// Bytes of intact log retained, including the magic header.
+    pub valid_bytes: u64,
+}
+
+/// Read a WAL, verify record framing and checksums, truncate any torn
+/// tail in place, and return the committed [`StateUpdate`]s in commit
+/// order for replay.
+///
+/// A record whose frame runs past end-of-file or whose checksum does
+/// not match its payload marks the torn tail: everything from it onward
+/// is an unacknowledged partial write and is dropped (the file is
+/// truncated so the next append starts at a clean boundary). A record
+/// whose checksum *matches* but which does not decode is real
+/// corruption, not a torn write, and is a hard error.
+pub fn recover_log(path: &Path) -> Result<(Vec<StateUpdate>, RecoveryReport), TxnError> {
+    let mut file = OpenOptions::new().read(true).write(true).open(path).map_err(io_err)?;
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes).map_err(io_err)?;
+    if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+        return Err(TxnError::Durability(format!(
+            "{}: not an Eliá WAL (bad magic)",
+            path.display()
+        )));
+    }
+
+    let mut pos = MAGIC.len();
+    let mut updates = Vec::new();
+    while bytes.len() - pos >= FRAME {
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(bytes[pos + 4..pos + FRAME].try_into().unwrap());
+        if bytes.len() - pos - FRAME < len {
+            break; // frame promises more bytes than exist: torn tail
+        }
+        let payload = &bytes[pos + FRAME..pos + FRAME + len];
+        if fnv1a(payload) != sum {
+            break; // partially written payload: torn tail
+        }
+        let update = decode_update(payload).map_err(|e| {
+            TxnError::Durability(format!("{}: corrupt record at byte {pos}: {e}", path.display()))
+        })?;
+        updates.push(update);
+        pos += FRAME + len;
+    }
+
+    let truncated = (bytes.len() - pos) as u64;
+    if truncated > 0 {
+        file.set_len(pos as u64).map_err(io_err)?;
+        file.sync_data().map_err(io_err)?;
+    }
+    let report = RecoveryReport {
+        replayed: updates.len(),
+        truncated_bytes: truncated,
+        valid_bytes: pos as u64,
+    };
+    Ok((updates, report))
+}
+
+// ---- binary encoding -------------------------------------------------
+
+const KIND_INSERT: u8 = 0;
+const KIND_UPDATE: u8 = 1;
+const KIND_DELETE: u8 = 2;
+const OP_SET: u8 = 0;
+const OP_ADD: u8 = 1;
+const VAL_NULL: u8 = 0;
+const VAL_INT: u8 = 1;
+const VAL_FLOAT: u8 = 2;
+const VAL_STR: u8 = 3;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_value(buf: &mut Vec<u8>, v: &Value) {
+    match v {
+        Value::Null => buf.push(VAL_NULL),
+        Value::Int(i) => {
+            buf.push(VAL_INT);
+            buf.extend_from_slice(&i.to_le_bytes());
+        }
+        Value::Float(x) => {
+            buf.push(VAL_FLOAT);
+            buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        Value::Str(s) => {
+            buf.push(VAL_STR);
+            put_u32(buf, s.len() as u32);
+            buf.extend_from_slice(s.as_bytes());
+        }
+    }
+}
+
+fn put_values(buf: &mut Vec<u8>, vs: &[Value]) {
+    put_u32(buf, vs.len() as u32);
+    for v in vs {
+        put_value(buf, v);
+    }
+}
+
+fn encode_update(buf: &mut Vec<u8>, u: &StateUpdate) {
+    put_u32(buf, u.records.len() as u32);
+    for rec in &u.records {
+        match rec {
+            WriteRecord::Insert { table, key, row } => {
+                buf.push(KIND_INSERT);
+                put_u32(buf, *table as u32);
+                put_values(buf, &key.0);
+                put_values(buf, row);
+            }
+            WriteRecord::Update { table, key, cols } => {
+                buf.push(KIND_UPDATE);
+                put_u32(buf, *table as u32);
+                put_values(buf, &key.0);
+                put_u32(buf, cols.len() as u32);
+                for (ci, op) in cols {
+                    put_u32(buf, *ci as u32);
+                    match op {
+                        ColOp::Set(v) => {
+                            buf.push(OP_SET);
+                            put_value(buf, v);
+                        }
+                        ColOp::Add(v) => {
+                            buf.push(OP_ADD);
+                            put_value(buf, v);
+                        }
+                    }
+                }
+            }
+            WriteRecord::Delete { table, key } => {
+                buf.push(KIND_DELETE);
+                put_u32(buf, *table as u32);
+                put_values(buf, &key.0);
+            }
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.buf.len() - self.pos < n {
+            return Err("payload ends mid-field".into());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        match self.u8()? {
+            VAL_NULL => Ok(Value::Null),
+            VAL_INT => Ok(Value::Int(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))),
+            VAL_FLOAT => {
+                Ok(Value::Float(f64::from_bits(u64::from_le_bytes(
+                    self.take(8)?.try_into().unwrap(),
+                ))))
+            }
+            VAL_STR => {
+                let n = self.u32()? as usize;
+                let s = std::str::from_utf8(self.take(n)?)
+                    .map_err(|_| "invalid utf-8 in string value".to_string())?;
+                Ok(Value::Str(s.to_string()))
+            }
+            t => Err(format!("unknown value tag {t}")),
+        }
+    }
+
+    fn values(&mut self) -> Result<Vec<Value>, String> {
+        let n = self.u32()? as usize;
+        // Cap the pre-allocation: `n` comes from disk.
+        let mut out = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            out.push(self.value()?);
+        }
+        Ok(out)
+    }
+}
+
+fn decode_update(payload: &[u8]) -> Result<StateUpdate, String> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let n = r.u32()? as usize;
+    let mut update = StateUpdate::new();
+    for _ in 0..n {
+        let kind = r.u8()?;
+        let table = r.u32()? as usize;
+        let key = Key(r.values()?);
+        let rec = match kind {
+            KIND_INSERT => WriteRecord::Insert {
+                table,
+                key,
+                row: std::sync::Arc::new(r.values()?),
+            },
+            KIND_UPDATE => {
+                let nc = r.u32()? as usize;
+                let mut cols = Vec::with_capacity(nc.min(1024));
+                for _ in 0..nc {
+                    let ci = r.u32()? as usize;
+                    let op = match r.u8()? {
+                        OP_SET => ColOp::Set(r.value()?),
+                        OP_ADD => ColOp::Add(r.value()?),
+                        t => return Err(format!("unknown column-op tag {t}")),
+                    };
+                    cols.push((ci, op));
+                }
+                WriteRecord::Update { table, key, cols }
+            }
+            KIND_DELETE => WriteRecord::Delete { table, key },
+            t => return Err(format!("unknown record kind {t}")),
+        };
+        update.push(rec);
+    }
+    if r.pos != payload.len() {
+        return Err(format!("{} trailing bytes after last record", payload.len() - r.pos));
+    }
+    Ok(update)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn sample() -> StateUpdate {
+        let mut u = StateUpdate::new();
+        u.push(WriteRecord::Insert {
+            table: 3,
+            key: Key(vec![Value::Int(42), Value::Str("ab".into())]),
+            row: Arc::new(vec![
+                Value::Int(-7),
+                Value::Float(1.5),
+                Value::Str("payload".into()),
+                Value::Null,
+            ]),
+        });
+        u.push(WriteRecord::Update {
+            table: 0,
+            key: Key::single(Value::Int(9)),
+            cols: vec![(1, ColOp::Set(Value::Str("x".into()))), (2, ColOp::Add(Value::Int(-3)))],
+        });
+        u.push(WriteRecord::Delete { table: 1, key: Key::single(Value::Str("gone".into())) });
+        u
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_all_record_kinds() {
+        let u = sample();
+        let mut buf = Vec::new();
+        encode_update(&mut buf, &u);
+        assert_eq!(decode_update(&buf).unwrap(), u);
+    }
+
+    #[test]
+    fn empty_update_roundtrips() {
+        let mut buf = Vec::new();
+        encode_update(&mut buf, &StateUpdate::new());
+        assert_eq!(decode_update(&buf).unwrap(), StateUpdate::new());
+    }
+
+    #[test]
+    fn float_bits_survive_exactly() {
+        let mut u = StateUpdate::new();
+        u.push(WriteRecord::Update {
+            table: 0,
+            key: Key::single(Value::Int(1)),
+            cols: vec![(0, ColOp::Set(Value::Float(0.1 + 0.2)))],
+        });
+        let mut buf = Vec::new();
+        encode_update(&mut buf, &u);
+        let back = decode_update(&buf).unwrap();
+        match &back.records[0] {
+            WriteRecord::Update { cols, .. } => match &cols[0].1 {
+                ColOp::Set(Value::Float(x)) => {
+                    assert_eq!(x.to_bits(), (0.1f64 + 0.2).to_bits())
+                }
+                other => panic!("unexpected op {other:?}"),
+            },
+            other => panic!("unexpected record {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncated_and_trailing_payloads() {
+        let u = sample();
+        let mut buf = Vec::new();
+        encode_update(&mut buf, &u);
+        assert!(decode_update(&buf[..buf.len() - 1]).is_err(), "truncated must fail");
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(decode_update(&long).is_err(), "trailing bytes must fail");
+    }
+
+    #[test]
+    fn checksum_flags_any_flipped_bit() {
+        let u = sample();
+        let mut buf = Vec::new();
+        encode_update(&mut buf, &u);
+        let clean = fnv1a(&buf);
+        for i in (0..buf.len()).step_by(7) {
+            buf[i] ^= 0x10;
+            assert_ne!(fnv1a(&buf), clean, "flip at byte {i} must change the checksum");
+            buf[i] ^= 0x10;
+        }
+        assert_eq!(fnv1a(&buf), clean);
+    }
+
+    #[test]
+    fn sync_policy_parses_the_env_knob_forms() {
+        assert_eq!(SyncPolicy::parse(None), SyncPolicy::Always);
+        assert_eq!(SyncPolicy::parse(Some("1")), SyncPolicy::Always);
+        assert_eq!(SyncPolicy::parse(Some("garbage")), SyncPolicy::Always);
+        assert_eq!(SyncPolicy::parse(Some("64")), SyncPolicy::Batch(64));
+        assert_eq!(SyncPolicy::parse(Some(" os ")), SyncPolicy::Os);
+        assert_eq!(SyncPolicy::parse(Some("OS")), SyncPolicy::Os);
+    }
+}

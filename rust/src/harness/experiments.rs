@@ -447,8 +447,8 @@ mod tests {
         let scale = ExpScale::quick();
         let rows = fig3(Workload::Rubis, &[3], &scale);
         assert_eq!(rows.len(), 2);
-        let elia_peak = rows[0].2.peak(2000.0).unwrap().throughput;
-        let cluster_peak = rows[1].2.peak(2000.0).unwrap().throughput;
+        let elia_peak = rows[0].2.peak(2000.0).unwrap().point.throughput;
+        let cluster_peak = rows[1].2.peak(2000.0).unwrap().point.throughput;
         assert!(
             elia_peak > cluster_peak,
             "elia {elia_peak} must beat cluster {cluster_peak} on RUBiS"

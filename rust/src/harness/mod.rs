@@ -49,6 +49,19 @@ impl LoadPoint {
     }
 }
 
+/// The result of a [`Curve::peak`] search: the selected point plus
+/// whether it actually met the SLA. `met_sla == false` means the curve
+/// never got under the SLA and `point` is merely its least-bad
+/// (lowest-latency) point — report it as overload, not as a peak.
+#[derive(Debug, Clone, Copy)]
+pub struct Peak<'a> {
+    /// The selected load point.
+    pub point: &'a LoadPoint,
+    /// True when `point` satisfies the SLA; false for the all-points-
+    /// violate fallback.
+    pub met_sla: bool,
+}
+
 /// A measured throughput/latency curve for one system configuration.
 #[derive(Debug, Clone, Default)]
 pub struct Curve {
@@ -62,19 +75,25 @@ impl Curve {
     }
 
     /// Peak throughput under the SLA: max throughput among points whose
-    /// mean latency stays below `sla_ms`; falls back to the lowest-latency
-    /// point when every point violates the SLA.
-    pub fn peak(&self, sla_ms: f64) -> Option<&LoadPoint> {
+    /// mean latency stays below `sla_ms`. When *every* point violates
+    /// the SLA, falls back to the lowest-latency point but says so via
+    /// [`Peak::met_sla`] — callers used to render that fallback as a
+    /// legitimate "peak throughput", silently reporting an overloaded
+    /// system as healthy.
+    pub fn peak(&self, sla_ms: f64) -> Option<Peak<'_>> {
         let ok = self
             .points
             .iter()
             .filter(|p| p.mean_latency_ms < sla_ms)
             .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap());
-        ok.or_else(|| {
-            self.points
+        match ok {
+            Some(point) => Some(Peak { point, met_sla: true }),
+            None => self
+                .points
                 .iter()
                 .min_by(|a, b| a.mean_latency_ms.partial_cmp(&b.mean_latency_ms).unwrap())
-        })
+                .map(|point| Peak { point, met_sla: false }),
+        }
     }
 
     /// Latency at the lightest measured load.
@@ -146,8 +165,9 @@ mod tests {
             point(80, 230.0, 2500.0), // violates 2000ms SLA
         ];
         let p = c.peak(2000.0).unwrap();
-        assert_eq!(p.clients, 40);
-        assert_eq!(p.throughput, 220.0);
+        assert_eq!(p.point.clients, 40);
+        assert_eq!(p.point.throughput, 220.0);
+        assert!(p.met_sla);
     }
 
     #[test]
@@ -155,7 +175,13 @@ mod tests {
         let mut c = Curve::new("x");
         c.points = vec![point(10, 10.0, 3000.0), point(20, 12.0, 5000.0)];
         let p = c.peak(2000.0).unwrap();
-        assert_eq!(p.clients, 10);
+        assert_eq!(p.point.clients, 10);
+        assert!(!p.met_sla, "the all-points-violate fallback must be flagged");
+    }
+
+    #[test]
+    fn peak_on_empty_curve_is_none() {
+        assert!(Curve::new("x").peak(2000.0).is_none());
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! Crash/recovery modeling shared by the simulators.
+//!
+//! The model is **freeze-then-replay**, matching what the WAL recovery
+//! path (`db::wal`) does on the real engine: a crashed server stops
+//! processing at the crash instant, buffers every event that arrives
+//! during the outage (network peers keep sending — they cannot observe
+//! the crash), and at recovery time — after a fixed restart cost plus a
+//! per-log-record replay charge — processes the backlog in arrival
+//! order. Buffering instead of dropping keeps the closed client loop
+//! live (every request is eventually answered; the outage shows up as a
+//! latency spike and a throughput dip, not a wedged simulation) and
+//! keeps the event stream deterministic at any thread count: the crash
+//! is group-local, introduces no new cross-group sends, and recovery
+//! ordering depends only on virtual time.
+//!
+//! `ConveyorSim` uses it to kill a server mid-rotation (the token
+//! freezes with it — the whole belt stalls until replay finishes);
+//! `ClusterSim` to kill a participant mid-2PC (remote coordinators
+//! time out and abort, the storm the conveyor never has).
+
+use crate::util::VTime;
+
+/// When and where a simulated server crash happens, and what recovery
+/// costs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrashConfig {
+    /// Index of the server (window group) to kill.
+    pub server: usize,
+    /// Virtual time of the kill. Must land before the horizon to have
+    /// any effect.
+    pub at: VTime,
+    /// Fixed restart cost in ms before replay begins (process start,
+    /// log open, snapshot load).
+    pub restart_ms: f64,
+    /// Replay cost in ms charged per durable log record at the crashed
+    /// server — the WAL recovery path, scaled by how much history the
+    /// server had committed (see `db::wal::recover_log`).
+    pub replay_per_record_ms: f64,
+}
+
+impl Default for CrashConfig {
+    fn default() -> Self {
+        CrashConfig {
+            server: 0,
+            at: VTime::from_secs(10),
+            restart_ms: 500.0,
+            replay_per_record_ms: 0.02,
+        }
+    }
+}
+
+impl CrashConfig {
+    /// Total downtime for a server whose durable log held `log_len`
+    /// records at the crash instant.
+    pub fn downtime(&self, log_len: u64) -> VTime {
+        VTime::from_millis_f64(self.restart_ms + log_len as f64 * self.replay_per_record_ms)
+    }
+}
+
+/// What a simulated crash cost, reported by the sims.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashOutcome {
+    /// The crashed server.
+    pub server: usize,
+    /// When it went down.
+    pub crashed_at: VTime,
+    /// When it finished restart + replay and resumed processing.
+    pub recovered_at: VTime,
+    /// Durable log records replayed during recovery.
+    pub replayed_records: u64,
+    /// Events that arrived during the outage and were processed (in
+    /// arrival order) at recovery time.
+    pub held_events: u64,
+}
+
+impl CrashOutcome {
+    /// Downtime in milliseconds.
+    pub fn downtime_ms(&self) -> f64 {
+        self.recovered_at.saturating_sub(self.crashed_at).as_millis_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downtime_scales_with_log_length() {
+        let c = CrashConfig { restart_ms: 100.0, replay_per_record_ms: 0.5, ..Default::default() };
+        assert_eq!(c.downtime(0), VTime::from_millis_f64(100.0));
+        assert_eq!(c.downtime(1000), VTime::from_millis_f64(600.0));
+        let o = CrashOutcome {
+            server: 1,
+            crashed_at: VTime::from_secs(4),
+            recovered_at: VTime::from_secs(4) + c.downtime(1000),
+            replayed_records: 1000,
+            held_events: 7,
+        };
+        assert!((o.downtime_ms() - 600.0).abs() < 1e-9);
+    }
+}

@@ -15,6 +15,8 @@
 //!   and Poisson arrivals, plus the shared client tier — sharded into
 //!   deterministic [`clients::ClientGroups`] — every simulator runs on,
 //! * [`metrics`] — latency/throughput collection over a warm-up window,
+//! * [`crash`] — freeze-then-replay server crash/recovery modeling
+//!   ([`crash::CrashConfig`]/[`crash::CrashOutcome`]) shared by the sims,
 //! * [`parallel`] — the conservative-window parallel engine
 //!   ([`parallel::WindowGroup`] + [`parallel::GroupCore`] +
 //!   [`parallel::run_windows`], fanned out over a persistent
@@ -27,6 +29,7 @@
 #![cfg_attr(doc, warn(missing_docs))]
 
 pub mod clients;
+pub mod crash;
 pub mod events;
 pub mod latency;
 pub mod metrics;
@@ -36,6 +39,7 @@ pub mod station;
 pub use clients::{
     ClientEv, ClientGroups, ClientPool, ClientTier, ClientsConfig, IssueReply, IssueRouter,
 };
+pub use crash::{CrashConfig, CrashOutcome};
 pub use events::{EventQueue, Schedulable};
 pub use latency::{LatencyMatrix, Site, Topology};
 pub use metrics::{LatencyStat, SimMetrics};

@@ -14,7 +14,7 @@ fn fig4_shape_elia_dominates_wan() {
             .iter()
             .find(|c| c.label.contains(label_part))
             .and_then(|c| c.peak(5000.0))
-            .map(|p| p.throughput)
+            .map(|p| p.point.throughput)
             .unwrap_or(0.0)
     };
     let cen = max_tput("centralized");
@@ -35,7 +35,7 @@ fn fig4_shape_elia_dominates_wan() {
 fn fig5_shape_saturation_grows_with_local_ratio() {
     let scale = ExpScale::quick();
     let curves = fig5(&[0.3, 0.9], &scale);
-    let knee = |i: usize| curves[i].peak(5000.0).map(|p| p.throughput).unwrap_or(0.0);
+    let knee = |i: usize| curves[i].peak(5000.0).map(|p| p.point.throughput).unwrap_or(0.0);
     let k30 = knee(0);
     let k90 = knee(1);
     assert!(
@@ -69,8 +69,8 @@ fn fig3_elia_beats_cluster_on_both_workloads() {
     // RUBiS at 4 (Eliá wins across the whole range).
     for (w, n) in [(Workload::Tpcw, 2usize), (Workload::Rubis, 4)] {
         let rows = fig3(w, &[n], &scale);
-        let elia = rows[0].2.peak(2000.0).map(|p| p.throughput).unwrap_or(0.0);
-        let cluster = rows[1].2.peak(2000.0).map(|p| p.throughput).unwrap_or(1.0);
+        let elia = rows[0].2.peak(2000.0).map(|p| p.point.throughput).unwrap_or(0.0);
+        let cluster = rows[1].2.peak(2000.0).map(|p| p.point.throughput).unwrap_or(1.0);
         assert!(
             elia > cluster,
             "{}: elia {elia:.0} must beat cluster {cluster:.0}",

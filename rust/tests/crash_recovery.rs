@@ -1,0 +1,408 @@
+//! Kill-and-recover tests for the write-ahead log (`db::wal`), plus the
+//! qcheck replay property behind it.
+//!
+//! The crash model: the engine is in-process, so "kill" means dropping
+//! the `Db` (losing all in-memory state, plus any user-space WAL buffer
+//! under `SyncPolicy::Batch`) and "power loss mid-write" means
+//! truncating a copy of the log file at an arbitrary byte offset.
+//! Recovery must replay to a state bit-identical (`content_hash`) to
+//! the committed state at the surviving record boundary — at *every*
+//! boundary, and at torn offsets in between.
+//!
+//! `ELIA_CRASH_SEED` reseeds the random workload (the `make test-crash`
+//! seed matrix); `QCHECK_SEED`/`QCHECK_CASES` drive the property test.
+
+use elia::catalog::{Schema, TableSchema, ValueType};
+use elia::db::{Bindings, Db, DurabilityConfig, Key, StateUpdate, SyncPolicy, Value, WriteRecord};
+use elia::sqlir::parse_statement;
+use elia::util::qcheck::{check, Config};
+use elia::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn schema() -> Schema {
+    Schema::new(vec![TableSchema::new(
+        "ITEMS",
+        &[
+            ("ID", ValueType::Int),
+            ("TITLE", ValueType::Str),
+            ("STOCK", ValueType::Int),
+            ("COST", ValueType::Float),
+        ],
+        &["ID"],
+    )])
+}
+
+fn seed(db: &Db) {
+    let ins = parse_statement("INSERT INTO ITEMS (ID, TITLE, STOCK, COST) VALUES (?id, ?t, ?s, ?c)")
+        .unwrap();
+    for i in 0..8i64 {
+        db.exec_auto(&ins, &b(&[
+            ("id", Value::Int(i)),
+            ("t", Value::Str(format!("seed{i}"))),
+            ("s", Value::Int(100)),
+            ("c", Value::Float(1.5 * i as f64)),
+        ]))
+        .unwrap();
+    }
+}
+
+fn b(pairs: &[(&str, Value)]) -> Bindings {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+/// A fresh per-test scratch file path (no tempfile crate in the
+/// zero-dependency build).
+fn scratch(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "elia_crash_{}_{tag}_{n}.wal",
+        std::process::id()
+    ))
+}
+
+fn crash_seed() -> u64 {
+    std::env::var("ELIA_CRASH_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC4A5)
+}
+
+/// Deterministic random workload: single- and multi-statement
+/// transactions over inserts, Set updates, Add deltas (Int and Float
+/// columns) and deletes. Every committed transaction writes at least
+/// one record. Returns the recorded `StateUpdate`s in commit order.
+struct Driver {
+    live: Vec<i64>,
+    next_id: i64,
+}
+
+impl Driver {
+    fn new() -> Driver {
+        // Fresh ids start above the seeded 0..8 range.
+        Driver { live: Vec::new(), next_id: 1000 }
+    }
+
+    fn run(&mut self, db: &Db, rng: &mut Rng, n_txns: usize) -> Vec<StateUpdate> {
+        let mut updates = Vec::with_capacity(n_txns);
+        for _ in 0..n_txns {
+            let mut txn = db.begin();
+            for _ in 0..1 + rng.range(0, 3) {
+                self.step(&mut txn, rng);
+            }
+            let u = txn.commit().unwrap();
+            if u.is_empty() {
+                // Every statement hit a row deleted earlier in the same
+                // txn; force one insert so the stream stays non-empty.
+                let mut txn = db.begin();
+                self.insert(&mut txn, rng);
+                let u = txn.commit().unwrap();
+                assert!(!u.is_empty());
+                updates.push(u);
+            } else {
+                updates.push(u);
+            }
+        }
+        updates
+    }
+
+    fn step(&mut self, txn: &mut elia::db::TxnHandle<'_>, rng: &mut Rng) {
+        match rng.range(0, 10) {
+            0..=2 => self.insert(txn, rng),
+            3..=5 => self.with_live(rng, |id, rng| {
+                let d = rng.range(0, 40) as i64 - 20;
+                let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK + ?d WHERE ID = ?id")
+                    .unwrap();
+                txn.exec(&u, &b(&[("d", Value::Int(d)), ("id", Value::Int(id))])).unwrap();
+            }),
+            6 => self.with_live(rng, |id, rng| {
+                let d = rng.f64() * 4.0 - 2.0;
+                let u = parse_statement("UPDATE ITEMS SET COST = COST + ?d WHERE ID = ?id")
+                    .unwrap();
+                txn.exec(&u, &b(&[("d", Value::Float(d)), ("id", Value::Int(id))])).unwrap();
+            }),
+            7..=8 => self.with_live(rng, |id, rng| {
+                let t = format!("t{}", rng.range(0, 1_000_000));
+                let u = parse_statement("UPDATE ITEMS SET TITLE = ?t WHERE ID = ?id").unwrap();
+                txn.exec(&u, &b(&[("t", Value::Str(t)), ("id", Value::Int(id))])).unwrap();
+            }),
+            _ => {
+                if self.live.is_empty() {
+                    self.insert(txn, rng);
+                } else {
+                    let i = rng.range(0, self.live.len());
+                    let id = self.live.swap_remove(i);
+                    let u = parse_statement("DELETE FROM ITEMS WHERE ID = ?id").unwrap();
+                    txn.exec(&u, &b(&[("id", Value::Int(id))])).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Run `f` with a random live id, inserting one first if none exist.
+    fn with_live(&mut self, rng: &mut Rng, f: impl FnOnce(i64, &mut Rng)) {
+        if self.live.is_empty() {
+            // No live row to mutate: mutate a seeded row instead.
+            f(rng.range(0, 8) as i64, rng);
+        } else {
+            let id = self.live[rng.range(0, self.live.len())];
+            f(id, rng);
+        }
+    }
+
+    fn insert(&mut self, txn: &mut elia::db::TxnHandle<'_>, rng: &mut Rng) {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.live.push(id);
+        let u = parse_statement("INSERT INTO ITEMS (ID, TITLE, STOCK, COST) VALUES (?id, ?t, ?s, ?c)")
+            .unwrap();
+        txn.exec(&u, &b(&[
+            ("id", Value::Int(id)),
+            ("t", Value::Str(format!("row{id}"))),
+            ("s", Value::Int(rng.range(0, 500) as i64)),
+            ("c", Value::Float(rng.f64() * 100.0)),
+        ]))
+        .unwrap();
+    }
+}
+
+/// Run `n_txns` against a WAL-attached Db and record, after each commit,
+/// the log length and the committed `content_hash` — the oracle for
+/// every crash point.
+fn committed_boundaries(path: &Path, policy: SyncPolicy, n_txns: usize) -> Vec<(u64, u64)> {
+    let cfg = DurabilityConfig::new(path).with_policy(policy);
+    let mut db = Db::new(schema());
+    seed(&db);
+    db = db.with_durability(&cfg).unwrap();
+    let mut rng = Rng::new(crash_seed());
+    let mut driver = Driver::new();
+    let mut boundaries = vec![(std::fs::metadata(path).unwrap().len(), db.content_hash())];
+    for _ in 0..n_txns {
+        driver.run(&db, &mut rng, 1);
+        boundaries.push((std::fs::metadata(path).unwrap().len(), db.content_hash()));
+    }
+    boundaries
+}
+
+#[test]
+fn recovery_replays_to_identical_state_at_every_record_boundary() {
+    let path = scratch("boundary");
+    let boundaries = committed_boundaries(&path, SyncPolicy::Always, 24);
+
+    // Under Always every commit is on disk when acknowledged: simulate
+    // a crash at each record boundary by truncating a copy there.
+    let copy = scratch("boundary_copy");
+    for (i, (len, hash)) in boundaries.iter().enumerate() {
+        std::fs::copy(&path, &copy).unwrap();
+        let f = std::fs::OpenOptions::new().write(true).open(&copy).unwrap();
+        f.set_len(*len).unwrap();
+        drop(f);
+        let cfg = DurabilityConfig::new(&copy).with_policy(SyncPolicy::Always);
+        let (db, report) = Db::recover(schema(), &cfg, seed).unwrap();
+        assert_eq!(report.replayed, i, "boundary {i}: wrong record count");
+        assert_eq!(report.truncated_bytes, 0, "boundary {i}: clean log has no torn tail");
+        assert_eq!(db.content_hash(), *hash, "boundary {i}: recovered state diverges");
+    }
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&copy);
+}
+
+#[test]
+fn torn_tail_is_truncated_to_the_last_committed_record() {
+    let path = scratch("torn");
+    let boundaries = committed_boundaries(&path, SyncPolicy::Always, 12);
+
+    let copy = scratch("torn_copy");
+    for i in 1..boundaries.len() {
+        let (prev_len, prev_hash) = boundaries[i - 1];
+        let (len, _) = boundaries[i];
+        // A torn offset strictly inside record i: part of its frame or
+        // payload made it to disk, the rest did not.
+        for torn in [prev_len + 1, prev_len + (len - prev_len) / 2, len - 1] {
+            if torn <= prev_len || torn >= len {
+                continue;
+            }
+            std::fs::copy(&path, &copy).unwrap();
+            let f = std::fs::OpenOptions::new().write(true).open(&copy).unwrap();
+            f.set_len(torn).unwrap();
+            drop(f);
+            let cfg = DurabilityConfig::new(&copy).with_policy(SyncPolicy::Always);
+            let (db, report) = Db::recover(schema(), &cfg, seed).unwrap();
+            assert_eq!(report.replayed, i - 1, "torn at {torn}: wrong record count");
+            assert_eq!(report.truncated_bytes, torn - prev_len, "torn at {torn}");
+            assert_eq!(db.content_hash(), prev_hash, "torn at {torn}: state diverges");
+            // The tail is gone from the file itself, so the next append
+            // starts at a clean boundary...
+            assert_eq!(std::fs::metadata(&copy).unwrap().len(), prev_len);
+            // ...and the recovered db keeps committing durably.
+            let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK + 1 WHERE ID = 0").unwrap();
+            db.exec_auto(&u, &Bindings::new()).unwrap();
+            let after = db.content_hash();
+            drop(db);
+            let (db2, r2) = Db::recover(schema(), &cfg, seed).unwrap();
+            assert_eq!(r2.replayed, i, "resume: the new commit must be in the log");
+            assert_eq!(db2.content_hash(), after, "resume: state diverges");
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&copy);
+}
+
+#[test]
+fn batch_policy_loses_only_the_unflushed_tail() {
+    let path = scratch("batch");
+    // 10 commits under Batch(4): flushes after commits 4 and 8; 9 and
+    // 10 live only in the user-space buffer.
+    let boundaries = committed_boundaries(&path, SyncPolicy::Batch(4), 10);
+    // committed_boundaries dropped the Db without flush: the in-process
+    // crash. Only the 8 flushed records survive.
+    let cfg = DurabilityConfig::new(&path).with_policy(SyncPolicy::Batch(4));
+    let (db, report) = Db::recover(schema(), &cfg, seed).unwrap();
+    assert_eq!(report.replayed, 8, "Batch(4) after 10 commits must have flushed 8");
+    assert_eq!(db.content_hash(), boundaries[8].1, "state must match flush boundary");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn batch_policy_flush_makes_the_tail_durable() {
+    let path = scratch("flush");
+    let cfg = DurabilityConfig::new(&path).with_policy(SyncPolicy::Batch(64));
+    let mut db = Db::new(schema());
+    seed(&db);
+    db = db.with_durability(&cfg).unwrap();
+    let mut rng = Rng::new(crash_seed());
+    Driver::new().run(&db, &mut rng, 7);
+    let wal = db.wal().unwrap();
+    assert_eq!(wal.appended(), 7);
+    assert_eq!(wal.durable(), 0, "Batch(64): nothing flushed after 7 commits");
+    wal.flush().unwrap();
+    assert_eq!(wal.durable(), 7, "flush covers the whole tail");
+    let hash = db.content_hash();
+    drop(db);
+    let (db2, report) = Db::recover(schema(), &cfg, seed).unwrap();
+    assert_eq!(report.replayed, 7);
+    assert_eq!(db2.content_hash(), hash);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn group_commit_survives_concurrent_committers() {
+    let path = scratch("group");
+    let cfg = DurabilityConfig::new(&path).with_policy(SyncPolicy::Always);
+    let mut db = Db::new(schema());
+    seed(&db);
+    db = db.with_durability(&cfg).unwrap();
+    let db = std::sync::Arc::new(db);
+
+    let threads: i64 = 8;
+    let per_thread: i64 = 25;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let db = std::sync::Arc::clone(&db);
+            std::thread::spawn(move || {
+                let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK + 1 WHERE ID = ?id")
+                    .unwrap();
+                for i in 0..per_thread {
+                    let binds = b(&[("id", Value::Int((t + i) % 8))]);
+                    loop {
+                        let mut txn = db.begin();
+                        match txn.exec(&u, &binds) {
+                            Ok(_) => {
+                                txn.commit().unwrap();
+                                break;
+                            }
+                            Err(e) if e.is_retryable() => continue,
+                            Err(e) => panic!("{e}"),
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let wal = db.wal().unwrap();
+    assert_eq!(wal.appended(), (threads * per_thread) as u64);
+    assert_eq!(wal.durable(), wal.appended(), "Always: every ack'd commit is on disk");
+    let hash = db.content_hash();
+    // Total increments conserved regardless of interleaving.
+    let total: i64 = (0..8)
+        .map(|i| db.peek("ITEMS", &Key::single(Value::Int(i))).unwrap()[2].as_int().unwrap())
+        .sum();
+    assert_eq!(total, 8 * 100 + threads * per_thread);
+    drop(db);
+
+    let (db2, report) = Db::recover(schema(), &cfg, seed).unwrap();
+    assert_eq!(report.replayed, (threads * per_thread) as usize);
+    assert_eq!(db2.content_hash(), hash, "recovery must replay the 2PL commit order");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn recover_on_a_missing_log_starts_fresh() {
+    let path = scratch("fresh");
+    let cfg = DurabilityConfig::new(&path).with_policy(SyncPolicy::Always);
+    let (db, report) = Db::recover(schema(), &cfg, seed).unwrap();
+    assert_eq!(report, elia::db::RecoveryReport::default());
+    let u = parse_statement("UPDATE ITEMS SET STOCK = STOCK + 1 WHERE ID = 0").unwrap();
+    db.exec_auto(&u, &Bindings::new()).unwrap();
+    assert_eq!(db.wal().unwrap().appended(), 1, "the fresh log accepts appends");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn qcheck_replay_stream_reproduces_content_hash() {
+    // The recovery invariant, with the file taken out of the picture:
+    // replaying a recorded StateUpdate stream over the seed snapshot —
+    // in full, or a partial prefix followed by a resume — reproduces
+    // the primary's committed content_hash exactly.
+    check(Config::default().cases(40).name("wal-replay"), |rng| {
+        let db1 = Db::new(schema());
+        seed(&db1);
+        let mut driver = Driver::new();
+        let updates = driver.run(&db1, rng, 12);
+        let want = db1.content_hash();
+
+        // Full replay.
+        let db2 = Db::new(schema());
+        seed(&db2);
+        for u in &updates {
+            db2.apply_update(u).unwrap();
+        }
+        assert_eq!(db2.content_hash(), want, "full replay diverged");
+
+        // Partial replay, then resume from the cut point.
+        let cut = rng.range(0, updates.len() + 1);
+        let db3 = Db::new(schema());
+        seed(&db3);
+        for u in &updates[..cut] {
+            db3.apply_update(u).unwrap();
+        }
+        for u in &updates[cut..] {
+            db3.apply_update(u).unwrap();
+        }
+        assert_eq!(db3.content_hash(), want, "partial-then-resume replay diverged at {cut}");
+    });
+}
+
+#[test]
+fn workload_exercises_all_three_record_kinds() {
+    // Guard for the property above: the generated streams must actually
+    // contain Insert, Update and Delete records, or the replay property
+    // silently weakens.
+    let db = Db::new(schema());
+    seed(&db);
+    let mut rng = Rng::new(crash_seed());
+    let updates = Driver::new().run(&db, &mut rng, 40);
+    let (mut ins, mut upd, mut del) = (0, 0, 0);
+    for u in &updates {
+        for r in &u.records {
+            match r {
+                WriteRecord::Insert { .. } => ins += 1,
+                WriteRecord::Update { .. } => upd += 1,
+                WriteRecord::Delete { .. } => del += 1,
+            }
+        }
+    }
+    assert!(ins > 0 && upd > 0 && del > 0, "kinds: ins={ins} upd={upd} del={del}");
+}
