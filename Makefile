@@ -1,11 +1,12 @@
 # Developer entry points. `make check` is the pre-PR gate (see ROADMAP.md).
 
-.PHONY: check build test test-par test-crash clippy doc bench bench-sim artifacts
+.PHONY: check build test test-par test-analysis test-crash clippy doc bench bench-sim bench-table1 artifacts
 
 # Pre-PR gate: release build + tests (incl. the parallel-determinism
-# ladder and the crash-recovery seed matrix) + lint + the rustdoc gate,
-# all from the rust crate.
-check: build test-par test-crash clippy doc
+# ladder, the analysis/confluence suites under two lock-shard settings
+# and the crash-recovery seed matrix) + lint + the rustdoc gate, all
+# from the rust crate.
+check: build test-par test-analysis test-crash clippy doc
 
 build:
 	cd rust && cargo build --release
@@ -30,6 +31,19 @@ test-par: test
 	cd rust && ELIA_PAR_MAX=1 cargo test -q --test parallel_determinism
 	cd rust && ELIA_PAR_MAX=2 cargo test -q --test parallel_determinism thread_count_invariant
 	cd rust && ELIA_PAR_MAX=2 cargo test -q --test parallel_determinism client_group
+
+# Analysis-pipeline suites: the rwsets/conflict/elim unit + qcheck
+# properties (Dnf truth table, coverage/satisfiability soundness,
+# components partition), the confluence-pass unit tests, and the
+# end-to-end confluent replay soundness suite (tests/confluence.rs).
+# The static analysis itself never takes a lock, but the confluence
+# suite drives the real storage engine, so both rungs pin that the
+# lock-manager shard count cannot change any result.
+test-analysis:
+	cd rust && ELIA_LOCK_SHARDS=1 cargo test -q --lib analysis::
+	cd rust && ELIA_LOCK_SHARDS=1 cargo test -q --test confluence
+	cd rust && ELIA_LOCK_SHARDS=32 cargo test -q --lib analysis::
+	cd rust && ELIA_LOCK_SHARDS=32 cargo test -q --test confluence
 
 # WAL crash-recovery suite under extra workload seeds. The plain `test`
 # run already covers the default seed (0xC4A5); these rungs redrive the
@@ -59,6 +73,11 @@ bench:
 # Cluster 2PC, Baseline read-only); writes BENCH_sim.json.
 bench-sim:
 	cd rust && cargo bench --bench sim_parallel
+
+# Table 1 classification summary — confluent vs conflict-only class
+# counts for both workloads; writes BENCH_table1.json.
+bench-table1:
+	cd rust && cargo bench --bench table1_classification
 
 # AOT-compile the Pallas partition-cost model to HLO text for the
 # (feature-gated) PJRT runtime. Needs jax; see python/compile/aot.py.

@@ -110,7 +110,7 @@ fn main() {
             &PartitionOptions::default(),
             ExtractOptions { strict_reads: strict },
         );
-        let (l, g, c, lg, _, _) = app.table1_row();
+        let (l, g, c, lg, _, _, _) = app.table1_row();
         println!("  {label:<28} TPC-W classes: L={l} G={g} C={c} L/G={lg}");
     }
 

@@ -19,6 +19,15 @@ pub enum OpClass {
     /// Local iff all routing parameters map to the same server, global
     /// otherwise (the paper's double-key scheme used for RUBiS).
     LocalGlobal,
+    /// Invariant-confluent: its remaining conflicts are all provably
+    /// mergeable delta compositions w.r.t. the declared schema
+    /// invariants (`analysis::confluence`), so it executes immediately
+    /// at its home server — bypassing the token queue like
+    /// `Commutative` — and its state update replicates as a merged
+    /// delta when the token next passes. The engine's bounded-apply
+    /// check enforces the invariant locally (abort instead of
+    /// coordinate).
+    Confluent,
 }
 
 /// The classification result for an application.
@@ -28,8 +37,13 @@ pub struct Classification {
     /// Parameters (indices into each template's param list) consulted by
     /// the deterministic routing function. Empty for commutative
     /// operations (any server may execute them); one entry for plain
-    /// local/global; several for LocalGlobal.
+    /// local/global/confluent; several for LocalGlobal.
     pub routing_params: Vec<Vec<usize>>,
+    /// The optimizer's primary partitioning parameter per transaction
+    /// (`Partitioning::choice`), kept so later demotions/promotions
+    /// (`force_global`, the confluence pass) can re-anchor
+    /// `routing_params` instead of inheriting a stale fixpoint result.
+    pub primary: Vec<Option<usize>>,
 }
 
 impl Classification {
@@ -48,15 +62,21 @@ impl Classification {
     /// operation frequencies.
     pub fn force_global(&mut self, txn: usize) {
         self.classes[txn] = OpClass::Global;
+        // Globals route by their primary partitioning parameter only;
+        // keeping a LocalGlobal's multi-key routing set (or a
+        // Commutative's empty one) here would leave the routing table
+        // inconsistent with the class.
+        self.routing_params[txn] = self.primary[txn].into_iter().collect();
     }
 
-    /// Table 1 row: (local, global, commutative, local/global).
-    pub fn summary(&self) -> (usize, usize, usize, usize) {
+    /// Table 1 row: (local, global, commutative, local/global, confluent).
+    pub fn summary(&self) -> (usize, usize, usize, usize, usize) {
         (
             self.count(&OpClass::Local),
             self.count(&OpClass::Global),
             self.count(&OpClass::Commutative),
             self.count(&OpClass::LocalGlobal),
+            self.count(&OpClass::Confluent),
         )
     }
 }
@@ -186,7 +206,7 @@ pub fn classify(
         routing_out.push(r);
     }
 
-    Classification { classes, routing_params: routing_out }
+    Classification { classes, routing_params: routing_out, primary: partitioning.choice.clone() }
 }
 
 #[cfg(test)]
@@ -367,8 +387,46 @@ mod tests {
     #[test]
     fn summary_counts() {
         let cls = run(store_templates(), store_schema());
-        let (l, g, c, lg) = cls.summary();
-        assert_eq!((l, g, c, lg), (2, 1, 1, 0));
+        let (l, g, c, lg, cf) = cls.summary();
+        assert_eq!((l, g, c, lg, cf), (2, 1, 1, 0, 0));
+    }
+
+    #[test]
+    fn force_global_resets_routing_to_primary() {
+        // Regression: force_global used to flip the class but leave the
+        // transaction's routing_params at the LocalGlobal multi-key set,
+        // so routing disagreed with the class it was routing for.
+        let schema = Schema::new(vec![
+            TableSchema::new(
+                "USERS",
+                &[("UID", ValueType::Int), ("NBIDS", ValueType::Int)],
+                &["UID"],
+            ),
+            TableSchema::new(
+                "ITEMS",
+                &[("IID", ValueType::Int), ("MAXBID", ValueType::Int)],
+                &["IID"],
+            ),
+        ]);
+        let bid = TxnTemplate::new(
+            "bid",
+            &["u", "i", "amt"],
+            &[
+                ("bu", "UPDATE USERS SET NBIDS = NBIDS + 1 WHERE UID = ?u"),
+                ("bi", "UPDATE ITEMS SET MAXBID = ?amt WHERE IID = ?i"),
+            ],
+            1.0,
+        );
+        let mut cls = run(vec![bid], schema);
+        assert_eq!(cls.classes[0], OpClass::LocalGlobal);
+        assert_eq!(cls.routing_params[0].len(), 2);
+
+        cls.force_global(0);
+        assert_eq!(cls.classes[0], OpClass::Global);
+        // Routing collapsed to the optimizer's primary parameter — the
+        // same set classify() gives a natural Global.
+        assert_eq!(cls.routing_params[0], cls.primary[0].into_iter().collect::<Vec<_>>());
+        assert_eq!(cls.routing_params[0].len(), 1);
     }
 
     #[test]

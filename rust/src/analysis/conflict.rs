@@ -218,8 +218,10 @@ fn side_atoms(cond: &Dnf, side: u8) -> Vec<SClause> {
 }
 
 /// Conjoin two entry conditions (side 0 and side 1), keeping only
-/// satisfiable clauses.
-fn pair_condition(e0: &AccessEntry, e1: &AccessEntry) -> SDnf {
+/// satisfiable clauses. Also used by `analysis::confluence`, which
+/// re-derives ww conditions per *entry pair* (the matrix only keeps the
+/// per-template union) to decide which statements caused each clause.
+pub(crate) fn pair_condition(e0: &AccessEntry, e1: &AccessEntry) -> SDnf {
     let c0 = side_atoms(&e0.cond, 0);
     let c1 = side_atoms(&e1.cond, 1);
     let mut out = Vec::new();
@@ -236,7 +238,7 @@ fn pair_condition(e0: &AccessEntry, e1: &AccessEntry) -> SDnf {
     SDnf(out)
 }
 
-fn attrs_intersect(a: &[AttrId], b: &[AttrId]) -> bool {
+pub(crate) fn attrs_intersect(a: &[AttrId], b: &[AttrId]) -> bool {
     a.iter().any(|x| b.contains(x))
 }
 
@@ -464,6 +466,116 @@ mod tests {
         let c = m.combined(1, 0);
         assert!(!c.is_false());
         assert!(!c.uncovered(Some("rid"), Some("wid")));
+    }
+
+    /// A small concrete world for brute-forcing sided clauses: values for
+    /// each of 3 attributes and for each sided parameter name.
+    struct World {
+        attrs: [i64; 3],
+        /// `params[side][p]` — the value of parameter `p` on `side`.
+        params: [[i64; 2]; 2],
+    }
+
+    const PNAMES: [&str; 2] = ["p", "q"];
+    const DOM: i64 = 3; // values range over 0..DOM
+
+    fn atom_holds(a: &SidedAtom, w: &World) -> bool {
+        let lhs = w.attrs[a.attr.col];
+        let rhs = match &a.rhs {
+            SidedRhs::Param { side, name } => {
+                let p = PNAMES.iter().position(|n| *n == name.as_str()).unwrap();
+                w.params[*side as usize][p]
+            }
+            SidedRhs::Const(Literal::Int(v)) => *v,
+            other => panic!("generator never emits {other:?}"),
+        };
+        match a.op {
+            CmpOp::Eq => lhs == rhs,
+            CmpOp::Lt => lhs < rhs,
+            other => panic!("generator never emits {other:?}"),
+        }
+    }
+
+    fn gen_sided_atom(rng: &mut crate::util::Rng) -> SidedAtom {
+        SidedAtom {
+            attr: AttrId { table: 0, col: rng.range(0, 3) },
+            op: if rng.chance(0.8) { CmpOp::Eq } else { CmpOp::Lt },
+            rhs: match rng.range(0, 3) {
+                0 => SidedRhs::Const(Literal::Int(rng.range(0, DOM as usize) as i64)),
+                s => SidedRhs::Param {
+                    side: (s - 1) as u8,
+                    name: PNAMES[rng.range(0, PNAMES.len())].to_string(),
+                },
+            },
+        }
+    }
+
+    /// Enumerate every world over the small domain, calling `f` on each
+    /// world that satisfies all atoms of `clause`.
+    fn for_each_model(clause: &SClause, mut f: impl FnMut(&World)) {
+        let n_worlds = DOM.pow(3 + 4);
+        for mut code in 0..n_worlds {
+            let mut next = || {
+                let v = code % DOM;
+                code /= DOM;
+                v
+            };
+            let w = World {
+                attrs: [next(), next(), next()],
+                params: [[next(), next()], [next(), next()]],
+            };
+            if clause.0.iter().all(|a| atom_holds(a, &w)) {
+                f(&w);
+            }
+        }
+    }
+
+    #[test]
+    fn qcheck_covered_clauses_force_equal_routing_values() {
+        use crate::util::qcheck::{check, Config};
+        // Soundness of the clause-removal rule: if `covered_by(k0, k1)`
+        // claims a conflict is made local by routing side 0 on `k0` and
+        // side 1 on `k1`, then EVERY concrete world satisfying the clause
+        // gives the two routing parameters equal values — the shared
+        // deterministic routing function then picks the same server.
+        check(Config::default().cases(200).name("sdnf-coverage-soundness"), |rng| {
+            let clause = SClause((0..rng.range(1, 6)).map(|_| gen_sided_atom(rng)).collect());
+            for k0 in PNAMES {
+                for k1 in PNAMES {
+                    if !clause.covered_by(k0, k1) {
+                        continue;
+                    }
+                    let p0 = PNAMES.iter().position(|n| *n == k0).unwrap();
+                    let p1 = PNAMES.iter().position(|n| *n == k1).unwrap();
+                    for_each_model(&clause, |w| {
+                        assert_eq!(
+                            w.params[0][p0], w.params[1][p1],
+                            "covered_by({k0}, {k1}) but a model routes the sides apart: {clause:?}"
+                        );
+                    });
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn qcheck_satisfiable_never_prunes_a_clause_with_a_model() {
+        use crate::util::qcheck::{check, Config};
+        // `satisfiable` is the pruning filter of `pair_condition`: it may
+        // keep an unsatisfiable clause (conservative), but it must NEVER
+        // report false for a clause that has a concrete model — that
+        // would silently drop a real conflict from the matrix.
+        check(Config::default().cases(300).name("sdnf-satisfiable-soundness"), |rng| {
+            let clause = SClause((0..rng.range(1, 7)).map(|_| gen_sided_atom(rng)).collect());
+            let mut has_model = false;
+            for_each_model(&clause, |_| has_model = true);
+            if has_model {
+                assert!(
+                    clause.satisfiable(),
+                    "clause with a model pruned as unsatisfiable: {clause:?}"
+                );
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! Invariant-confluence classification — the pass that widens the
+//! coordination-free class beyond conflict-set disjointness.
+//!
+//! The conflict-only classifier (`classify`) demotes a transaction to
+//! `Global` as soon as one write-write clause cannot be covered by
+//! routing. That is sound but pessimistic: many of those clauses are
+//! *mergeable* — both sides are delta-shaped writes whose worst-case
+//! composition provably preserves every invariant declared on the schema
+//! ([`crate::catalog::Invariant`]). Such operations need no token: they
+//! execute immediately at their home server, the engine's bounded-apply
+//! check enforces the invariant locally (abort instead of coordinate),
+//! and their state updates replicate as merged deltas when the token
+//! next passes ([`crate::db::update::ColOp::Add`] commutes).
+//!
+//! [`reclassify`] inspects every `Global` / `LocalGlobal` transaction and
+//! promotes it to [`OpClass::Confluent`] when **every clause of every
+//! pairwise ww condition** is either
+//!
+//! 1. **delta-mergeable** — both statements update the shared attributes
+//!    with row-free deltas (`SET c = c ± e`, [`SetOp::Delta`]); on a
+//!    column declared `NonNegative` the candidate's delta must also be
+//!    provably non-decreasing (non-negative literal, a parameter the
+//!    workload declares non-negative via
+//!    [`TxnTemplate::with_nonneg_param`], or sums/products of such).
+//!    The escrow argument: only non-decreasing deltas float belt-free,
+//!    decrementers stay token-serialized and validate their post-image
+//!    locally, so no interleaving drives the column below a validated
+//!    floor;
+//! 2. **fresh-key mergeable** — one side is an INSERT and the clause
+//!    pins, on both sides, an attribute declared `Unique`: uniqueness is
+//!    enforced structurally (duplicate keys abort), so no two committed
+//!    operations ever collide on the row; or
+//! 3. **covered by routing** — for *every* routing parameter of the
+//!    candidate there is a routing parameter of the peer covering the
+//!    clause, so the conflicting operations meet at one server and its
+//!    local locks serialize them (general assignments survive this way).
+//!
+//! Write-read conflicts never block confluence. This is a deliberate
+//! weakening with the same semantics as `weak_reads`: a reader of a
+//! confluent writer observes its server's **consistent prefix** of that
+//! writer's totally-ordered (per-origin) delta stream, rather than a
+//! globally up-to-date value. Applications that need read-your-writes
+//! across servers should not declare the enabling invariants.
+
+use super::classify::{Classification, OpClass};
+use super::conflict::{attrs_intersect, pair_condition, SClause, SidedRhs};
+use super::rwsets::{AttrId, RwSets};
+use crate::catalog::Schema;
+use crate::db::prepared::{CScalar, PreparedKind, SetOp};
+use crate::db::{Prepared, Value};
+use crate::sqlir::CmpOp;
+use crate::workload::spec::TxnTemplate;
+use std::collections::HashMap;
+
+/// Delta shape of one written column of an UPDATE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DKind {
+    /// `c = c + e` with `e` provably non-negative: safe against a
+    /// `NonNegative` invariant in any interleaving.
+    SafeDelta,
+    /// `c = c ± e`: commutes, but may decrease the column.
+    Delta,
+    /// General assignment: never ww-mergeable.
+    Assign,
+}
+
+/// Write shape of one statement, derived from its compiled form.
+#[derive(Debug, Clone)]
+enum WriteShape {
+    /// UPDATE: per written column index, its delta kind.
+    Update { cols: HashMap<usize, DKind> },
+    /// INSERT: row creation; mergeability argued via declared uniqueness.
+    Insert,
+    /// DELETE: row removal merges with nothing.
+    Delete,
+    /// Compilation failed — treat as unmergeable.
+    Unknown,
+}
+
+/// How a (write, write) entry pair may be discharged, decided once per
+/// pair; clause-level checks then pick the applicable rule.
+enum PairRule {
+    /// Delta-vs-delta on every shared attribute: every clause merges.
+    Mergeable,
+    /// An INSERT is involved: a clause merges iff it pins a `Unique`
+    /// attribute on both sides.
+    InsertFresh,
+    /// Deletes, assignments, unknown shapes: only routing coverage helps.
+    NeedsCoverage,
+}
+
+/// Is `expr` provably non-negative? Literals must be `>= 0`; a bind slot
+/// must name a parameter the template declares non-negative; sums and
+/// products of non-negatives are non-negative. Differences, column
+/// references and everything else are conservatively rejected.
+fn expr_nonneg(expr: &CScalar, slot_names: &[String], nonneg_params: &[String]) -> bool {
+    match expr {
+        CScalar::Lit(Value::Int(i)) => *i >= 0,
+        CScalar::Lit(Value::Float(x)) => *x >= 0.0,
+        CScalar::Lit(_) => false,
+        CScalar::Slot(i) => slot_names
+            .get(*i)
+            .map_or(false, |n| nonneg_params.iter().any(|p| p == n)),
+        CScalar::Add(a, b) | CScalar::Mul(a, b) => {
+            expr_nonneg(a, slot_names, nonneg_params)
+                && expr_nonneg(b, slot_names, nonneg_params)
+        }
+        _ => false,
+    }
+}
+
+/// Compile each statement of `tpl` and record its write shape, keyed by
+/// statement name (which is what [`AccessEntry::stmt`] carries).
+///
+/// [`AccessEntry::stmt`]: super::rwsets::AccessEntry
+fn profile(tpl: &TxnTemplate, schema: &Schema) -> HashMap<String, WriteShape> {
+    let mut out = HashMap::new();
+    for (name, stmt) in &tpl.stmts {
+        let shape = match Prepared::compile(stmt, schema) {
+            Ok(p) => match &p.kind {
+                PreparedKind::Select(_) => continue,
+                PreparedKind::Insert(_) => WriteShape::Insert,
+                PreparedKind::Delete(_) => WriteShape::Delete,
+                PreparedKind::Update(u) => {
+                    let cols = u
+                        .sets
+                        .iter()
+                        .map(|(ci, op)| {
+                            let kind = match op {
+                                SetOp::Delta { expr, negate } => {
+                                    if !negate
+                                        && expr_nonneg(expr, p.params(), &tpl.nonneg_params)
+                                    {
+                                        DKind::SafeDelta
+                                    } else {
+                                        DKind::Delta
+                                    }
+                                }
+                                SetOp::Assign(_) => DKind::Assign,
+                            };
+                            (*ci, kind)
+                        })
+                        .collect();
+                    WriteShape::Update { cols }
+                }
+            },
+            Err(_) => WriteShape::Unknown,
+        };
+        out.insert(name.clone(), shape);
+    }
+    out
+}
+
+/// Decide the discharge rule for one write-entry pair. `attrs0`/`attrs1`
+/// are the entries' written attributes; side 0 is the candidate.
+fn pair_rule(
+    shape0: Option<&WriteShape>,
+    shape1: Option<&WriteShape>,
+    attrs0: &[AttrId],
+    attrs1: &[AttrId],
+    schema: &Schema,
+) -> PairRule {
+    let (s0, s1) = match (shape0, shape1) {
+        (Some(a), Some(b)) => (a, b),
+        _ => return PairRule::NeedsCoverage,
+    };
+    if matches!(s0, WriteShape::Delete | WriteShape::Unknown)
+        || matches!(s1, WriteShape::Delete | WriteShape::Unknown)
+    {
+        return PairRule::NeedsCoverage;
+    }
+    if matches!(s0, WriteShape::Insert) || matches!(s1, WriteShape::Insert) {
+        return PairRule::InsertFresh;
+    }
+    let (WriteShape::Update { cols: c0 }, WriteShape::Update { cols: c1 }) = (s0, s1) else {
+        return PairRule::NeedsCoverage;
+    };
+    // Both UPDATEs: every shared attribute must be delta-vs-delta, and on
+    // a NonNegative column the candidate's delta must be non-decreasing.
+    for a in attrs0 {
+        if !attrs1.contains(a) {
+            continue;
+        }
+        let k0 = c0.get(&a.col);
+        let k1 = c1.get(&a.col);
+        let (Some(k0), Some(k1)) = (k0, k1) else {
+            return PairRule::NeedsCoverage;
+        };
+        if *k0 == DKind::Assign || *k1 == DKind::Assign {
+            return PairRule::NeedsCoverage;
+        }
+        if schema.table(a.table).nonneg(a.col) && *k0 != DKind::SafeDelta {
+            return PairRule::NeedsCoverage;
+        }
+    }
+    PairRule::Mergeable
+}
+
+/// Fresh-key rule: the clause pins the same `Unique` attribute on both
+/// sides with equality on an input parameter. Constants and opaque
+/// values do not qualify — freshness cannot be argued for them.
+fn clause_unique_pinned(clause: &SClause, schema: &Schema) -> bool {
+    clause.0.iter().any(|a| {
+        a.op == CmpOp::Eq
+            && matches!(&a.rhs, SidedRhs::Param { side: 0, .. })
+            && schema.table(a.attr.table).unique(a.attr.col)
+            && clause.0.iter().any(|b| {
+                b.attr == a.attr
+                    && b.op == CmpOp::Eq
+                    && matches!(&b.rhs, SidedRhs::Param { side: 1, .. })
+            })
+    })
+}
+
+/// Promote every `Global` / `LocalGlobal` transaction whose remaining
+/// write-write conflicts are all provably mergeable (or still covered by
+/// routing) to [`OpClass::Confluent`]. Routing parameters are left
+/// untouched: a confluent operation routes to its home server exactly
+/// like a local one (first routing parameter).
+///
+/// Must run *before* any [`Classification::force_global`] call — forcing
+/// expresses an application-level demand for total ordering that the
+/// pass must not undo (the workload constructors respect this ordering).
+pub fn reclassify(
+    templates: &[TxnTemplate],
+    schema: &Schema,
+    rwsets: &[RwSets],
+    cls: &mut Classification,
+) {
+    let n = templates.len();
+    let profiles: Vec<HashMap<String, WriteShape>> =
+        templates.iter().map(|t| profile(t, schema)).collect();
+
+    for t in 0..n {
+        if !matches!(cls.classes[t], OpClass::Global | OpClass::LocalGlobal) {
+            continue;
+        }
+        // Weak-read searches are forced global by the workloads; never
+        // candidates. A transaction with no writes or no routing anchor
+        // has nothing to merge or nowhere deterministic to live.
+        if templates[t].weak_reads
+            || rwsets[t].writes.is_empty()
+            || cls.routing_params[t].is_empty()
+        {
+            continue;
+        }
+
+        let confluent = (0..n).all(|t2| {
+            rwsets[t].writes.iter().all(|w0| {
+                rwsets[t2].writes.iter().all(|w1| {
+                    if !attrs_intersect(&w0.attrs, &w1.attrs) {
+                        return true;
+                    }
+                    let rule = pair_rule(
+                        profiles[t].get(&w0.stmt),
+                        profiles[t2].get(&w1.stmt),
+                        &w0.attrs,
+                        &w1.attrs,
+                        schema,
+                    );
+                    pair_condition(w0, w1).0.iter().all(|clause| match rule {
+                        PairRule::Mergeable => true,
+                        PairRule::InsertFresh => {
+                            clause_unique_pinned(clause, schema)
+                                || covered(clause, t, t2, templates, cls)
+                        }
+                        PairRule::NeedsCoverage => covered(clause, t, t2, templates, cls),
+                    })
+                })
+            })
+        });
+
+        if confluent {
+            cls.classes[t] = OpClass::Confluent;
+        }
+    }
+}
+
+/// Routing coverage, quantified over *every* routing parameter of the
+/// candidate (so the decision does not depend on which parameter the
+/// runtime happens to route by) paired with *some* parameter of the peer.
+fn covered(
+    clause: &SClause,
+    t: usize,
+    t2: usize,
+    templates: &[TxnTemplate],
+    cls: &Classification,
+) -> bool {
+    !cls.routing_params[t].is_empty()
+        && cls.routing_params[t].iter().all(|&k0| {
+            cls.routing_params[t2].iter().any(|&k1| {
+                clause.covered_by(&templates[t].params[k0], &templates[t2].params[k1])
+            })
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::conflict::ConflictMatrix;
+    use crate::analysis::elim::EliminationTensor;
+    use crate::analysis::partition::{optimize, PartitionOptions};
+    use crate::analysis::rwsets::{extract_rwsets, ExtractOptions};
+    use crate::catalog::{TableSchema, ValueType};
+
+    fn analyze(templates: Vec<TxnTemplate>, schema: Schema) -> (Classification, Vec<RwSets>) {
+        let rws: Vec<_> = templates
+            .iter()
+            .map(|t| extract_rwsets(t, &schema, ExtractOptions::default()))
+            .collect();
+        let matrix = ConflictMatrix::detect(&rws);
+        let tensor = EliminationTensor::build(&templates, &matrix);
+        let p = optimize(&tensor, &PartitionOptions::default());
+        let mut cls = crate::analysis::classify::classify(&templates, &matrix, &p);
+        reclassify(&templates, &schema, &rws, &mut cls);
+        (cls, rws)
+    }
+
+    fn stock_schema(nonneg: bool) -> Schema {
+        let mut t = TableSchema::new(
+            "STOCK",
+            &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int)],
+            &["ITEM"],
+        );
+        if nonneg {
+            t = t.with_nonnegative("LEVEL");
+        }
+        Schema::new(vec![t])
+    }
+
+    /// Restock through a derived (opaque) key: uncoverable ww, so the
+    /// conflict-only classifier says Global — but both sides are safe
+    /// deltas on a NonNegative column, so the pass proves it confluent.
+    fn restock() -> TxnTemplate {
+        TxnTemplate::new(
+            "restock",
+            &["q"],
+            &[("u", "UPDATE STOCK SET LEVEL = LEVEL + ?q WHERE ITEM = ?derived_item")],
+            1.0,
+        )
+        .with_nonneg_param("q")
+    }
+
+    #[test]
+    fn safe_delta_global_becomes_confluent() {
+        let (cls, _) = analyze(vec![restock()], stock_schema(true));
+        assert_eq!(cls.classes[0], OpClass::Confluent);
+    }
+
+    #[test]
+    fn undeclared_increment_param_blocks_promotion() {
+        // Same statement, but the workload does not promise q >= 0: the
+        // delta may decrease a NonNegative column, so it must coordinate.
+        let tpl = TxnTemplate::new(
+            "restock",
+            &["q"],
+            &[("u", "UPDATE STOCK SET LEVEL = LEVEL + ?q WHERE ITEM = ?derived_item")],
+            1.0,
+        );
+        let (cls, _) = analyze(vec![tpl], stock_schema(true));
+        assert_eq!(cls.classes[0], OpClass::Global);
+    }
+
+    #[test]
+    fn decrement_on_nonnegative_column_stays_global() {
+        let tpl = TxnTemplate::new(
+            "drain",
+            &["q"],
+            &[("u", "UPDATE STOCK SET LEVEL = LEVEL - ?q WHERE ITEM = ?derived_item")],
+            1.0,
+        )
+        .with_nonneg_param("q");
+        let (cls, _) = analyze(vec![tpl], stock_schema(true));
+        assert_eq!(cls.classes[0], OpClass::Global);
+    }
+
+    #[test]
+    fn unconstrained_column_merges_any_delta() {
+        // No invariant declared on LEVEL: plain deltas (either sign)
+        // commute and nothing can be violated.
+        let tpl = TxnTemplate::new(
+            "drain",
+            &["q"],
+            &[("u", "UPDATE STOCK SET LEVEL = LEVEL - ?q WHERE ITEM = ?derived_item")],
+            1.0,
+        );
+        let (cls, _) = analyze(vec![tpl], stock_schema(false));
+        assert_eq!(cls.classes[0], OpClass::Confluent);
+    }
+
+    #[test]
+    fn assignment_writer_stays_global() {
+        let tpl = TxnTemplate::new(
+            "reprice",
+            &["v"],
+            &[("u", "UPDATE STOCK SET LEVEL = ?v WHERE ITEM = ?derived_item")],
+            1.0,
+        );
+        let (cls, _) = analyze(vec![tpl], stock_schema(false));
+        assert_eq!(cls.classes[0], OpClass::Global);
+    }
+
+    fn reg_schema(unique: bool) -> Schema {
+        let mut items = TableSchema::new(
+            "ITEMS",
+            &[("I_ID", ValueType::Int), ("SELLER", ValueType::Int)],
+            &["I_ID"],
+        );
+        if unique {
+            items = items.with_unique("I_ID");
+        }
+        Schema::new(vec![
+            items,
+            TableSchema::new(
+                "USERS",
+                &[("U_ID", ValueType::Int), ("N_ITEMS", ValueType::Int)],
+                &["U_ID"],
+            ),
+        ])
+    }
+
+    /// RUBiS-style registerItem: a fresh-key INSERT keyed by item plus a
+    /// counter delta keyed by user — LocalGlobal under conflict-only
+    /// classification, confluent once I_ID is declared Unique.
+    fn register() -> TxnTemplate {
+        TxnTemplate::new(
+            "registerItem",
+            &["iid", "uid"],
+            &[
+                ("ins", "INSERT INTO ITEMS (I_ID, SELLER) VALUES (?iid, ?uid)"),
+                ("cnt", "UPDATE USERS SET N_ITEMS = N_ITEMS + 1 WHERE U_ID = ?uid"),
+            ],
+            1.0,
+        )
+    }
+
+    #[test]
+    fn unique_insert_turns_local_global_into_confluent() {
+        let (cls, _) = analyze(vec![register()], reg_schema(true));
+        assert_eq!(cls.classes[0], OpClass::Confluent);
+        // Routing is untouched: the double-key set survives, and the
+        // runtime routes by its first entry.
+        assert_eq!(cls.routing_params[0].len(), 2);
+    }
+
+    #[test]
+    fn without_unique_declaration_insert_needs_agreement() {
+        let (cls, _) = analyze(vec![register()], reg_schema(false));
+        assert_eq!(cls.classes[0], OpClass::LocalGlobal);
+    }
+
+    #[test]
+    fn local_and_commutative_are_never_touched() {
+        let schema = stock_schema(true);
+        let local = TxnTemplate::new(
+            "touch",
+            &["i", "q"],
+            &[("u", "UPDATE STOCK SET LEVEL = LEVEL + ?q WHERE ITEM = ?i")],
+            1.0,
+        )
+        .with_nonneg_param("q");
+        let (cls, _) = analyze(vec![local], schema);
+        assert_eq!(cls.classes[0], OpClass::Local);
+    }
+}

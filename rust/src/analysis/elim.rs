@@ -223,6 +223,98 @@ mod tests {
         assert!(comps.iter().any(|c| c == &vec![2]));
     }
 
+    /// A tensor with an arbitrary upper-triangular conflict relation and
+    /// no coverage information — all `components` looks at.
+    fn tensor_with_edges(n: usize, edges: &[(usize, usize)]) -> EliminationTensor {
+        let mut conflict = vec![vec![false; n]; n];
+        for &(a, b) in edges {
+            let (t, t2) = if a <= b { (a, b) } else { (b, a) };
+            conflict[t][t2] = true;
+        }
+        EliminationTensor {
+            n,
+            kdims: vec![1; n],
+            kmax: 1,
+            conflict,
+            w2: vec![vec![0.0; n]; n],
+            elim: vec![false; n * n],
+        }
+    }
+
+    #[test]
+    fn qcheck_components_partition_the_transaction_set() {
+        use crate::util::qcheck::{check, Config};
+        use crate::util::Rng;
+
+        fn gen_edges(rng: &mut Rng, n: usize) -> Vec<(usize, usize)> {
+            let mut edges = Vec::new();
+            for t in 0..n {
+                for t2 in t..n {
+                    if rng.chance(0.2) {
+                        edges.push((t, t2));
+                    }
+                }
+            }
+            edges
+        }
+
+        check(Config::default().cases(200).name("components-partition"), |rng| {
+            let n = rng.range(1, 12);
+            let edges = gen_edges(rng, n);
+            let tensor = tensor_with_edges(n, &edges);
+            let comps = tensor.components();
+
+            // (a) Exact partition: every transaction in exactly one part.
+            let mut owner = vec![None; n];
+            for (c, comp) in comps.iter().enumerate() {
+                assert!(!comp.is_empty(), "empty component emitted");
+                for &t in comp {
+                    assert!(owner[t].is_none(), "txn {t} appears in two components");
+                    owner[t] = Some(c);
+                }
+            }
+            assert!(owner.iter().all(|o| o.is_some()), "txn missing from all components");
+
+            // (b) No conflict edge crosses components.
+            for &(t, t2) in &edges {
+                assert_eq!(owner[t], owner[t2], "edge ({t},{t2}) crosses components");
+            }
+
+            // (c) Each part is internally connected: BFS over the edge
+            // list from its first member reaches every other member.
+            let neighbours = |t: usize| -> Vec<usize> {
+                edges
+                    .iter()
+                    .filter_map(|&(a, b)| {
+                        if a == t {
+                            Some(b)
+                        } else if b == t {
+                            Some(a)
+                        } else {
+                            None
+                        }
+                    })
+                    .collect()
+            };
+            for comp in &comps {
+                let mut seen = vec![false; n];
+                let mut queue = vec![comp[0]];
+                seen[comp[0]] = true;
+                while let Some(t) = queue.pop() {
+                    for t2 in neighbours(t) {
+                        if !seen[t2] {
+                            seen[t2] = true;
+                            queue.push(t2);
+                        }
+                    }
+                }
+                for &t in comp {
+                    assert!(seen[t], "component {comp:?} is not connected at {t}");
+                }
+            }
+        });
+    }
+
     #[test]
     fn f32_export_pads_and_matches() {
         let templates = cart_app();

@@ -11,6 +11,7 @@
 //!         ──elim──▶ EliminationTensor  elim[t,t',k,k']
 //!         ──partition──▶ Partitioning  P[t] = param index (cost-minimal)
 //!         ──classify──▶ Classification {C, L, G, L/G} + routing spec
+//!         ──confluence──▶ promotes mergeable G / L/G to Confluent (CF)
 //! ```
 //!
 //! The candidate scoring inside `partition` can run on the scalar Rust
@@ -19,12 +20,14 @@
 
 pub mod classify;
 pub mod conflict;
+pub mod confluence;
 pub mod elim;
 pub mod partition;
 pub mod rwsets;
 pub mod score;
 
 pub use classify::{classify, Classification, OpClass};
+pub use confluence::reclassify;
 pub use conflict::{ConflictKind, ConflictMatrix};
 pub use elim::EliminationTensor;
 pub use partition::{optimize, PartitionOptions, Partitioning};

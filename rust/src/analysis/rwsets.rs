@@ -398,4 +398,79 @@ mod tests {
         assert_eq!(a.and(&b).0.len(), 6);
         assert!(Dnf::false_().and(&b).is_false());
     }
+
+    /// Random boolean formula over a few abstract propositions.
+    enum Form {
+        Leaf(usize),
+        And(Box<Form>, Box<Form>),
+        Or(Box<Form>, Box<Form>),
+    }
+
+    const NPROPS: usize = 4;
+
+    fn gen_form(rng: &mut crate::util::Rng, depth: usize) -> Form {
+        if depth == 0 || rng.chance(0.35) {
+            Form::Leaf(rng.range(0, NPROPS))
+        } else if rng.chance(0.5) {
+            Form::And(Box::new(gen_form(rng, depth - 1)), Box::new(gen_form(rng, depth - 1)))
+        } else {
+            Form::Or(Box::new(gen_form(rng, depth - 1)), Box::new(gen_form(rng, depth - 1)))
+        }
+    }
+
+    fn eval_form(f: &Form, env: u32) -> bool {
+        match f {
+            Form::Leaf(i) => (env >> i) & 1 == 1,
+            Form::And(a, b) => eval_form(a, env) && eval_form(b, env),
+            Form::Or(a, b) => eval_form(a, env) || eval_form(b, env),
+        }
+    }
+
+    /// Proposition `i` encoded as an analysis atom (which proposition it
+    /// is lives in the column id; op/rhs are irrelevant to the algebra).
+    fn prop_atom(i: usize) -> Atom {
+        Atom {
+            attr: AttrId { table: 0, col: i },
+            op: CmpOp::Eq,
+            rhs: Rhs::Const(Literal::Int(1)),
+        }
+    }
+
+    fn form_to_dnf(f: &Form) -> Dnf {
+        match f {
+            Form::Leaf(i) => Dnf(vec![Clause(vec![prop_atom(*i)])]),
+            Form::And(a, b) => form_to_dnf(a).and(&form_to_dnf(b)),
+            Form::Or(a, b) => form_to_dnf(a).or(&form_to_dnf(b)),
+        }
+    }
+
+    fn eval_dnf(d: &Dnf, env: u32) -> bool {
+        d.0.iter().any(|c| c.0.iter().all(|a| (env >> a.attr.col) & 1 == 1))
+    }
+
+    #[test]
+    fn qcheck_dnf_algebra_matches_truth_table() {
+        use crate::util::qcheck::{check, Config};
+        // `and`/`or` must preserve the boolean function of the formula:
+        // the DNF normalization of a random formula agrees with direct
+        // evaluation on every assignment of the propositions.
+        check(Config::default().cases(300).name("dnf-truth-table"), |rng| {
+            let f = gen_form(rng, 4);
+            let d = form_to_dnf(&f);
+            for env in 0..(1u32 << NPROPS) {
+                assert_eq!(
+                    eval_dnf(&d, env),
+                    eval_form(&f, env),
+                    "DNF disagrees with formula at env {env:#06b}"
+                );
+            }
+            // Lattice identities: false is absorbing for AND, neutral
+            // for OR; true is neutral for AND.
+            assert!(Dnf::false_().and(&d).is_false());
+            for env in 0..(1u32 << NPROPS) {
+                assert_eq!(eval_dnf(&Dnf::true_().and(&d), env), eval_dnf(&d, env));
+                assert_eq!(eval_dnf(&Dnf::false_().or(&d), env), eval_dnf(&d, env));
+            }
+        });
+    }
 }

@@ -35,6 +35,14 @@ pub enum BaselineMode {
     Centralized,
     /// Read-only ops at the nearest of `n_servers` replicas.
     ReadOnly { n_servers: usize },
+    /// Warp-style acyclic commit over `n_servers` partitions:
+    /// single-partition operations execute at their partition without any
+    /// coordination; multi-partition ones traverse the servers in a fixed
+    /// global order (an acyclic validation chain, so distributed commits
+    /// cannot cycle), paying a one-way latency plus a validation step at
+    /// every hop and executing at the final one. No rotating token — the
+    /// comparison point for Eliá's fig3/fig4 curves.
+    Warp { n_servers: usize },
 }
 
 #[derive(Debug, Clone)]
@@ -70,6 +78,10 @@ impl BaselineConfig {
     pub fn read_only(n_servers: usize) -> Self {
         BaselineConfig { mode: BaselineMode::ReadOnly { n_servers }, ..Self::centralized() }
     }
+
+    pub fn warp(n_servers: usize) -> Self {
+        BaselineConfig { mode: BaselineMode::Warp { n_servers }, ..Self::centralized() }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -77,6 +89,9 @@ enum Job {
     Op(OpEnvelope),
     /// Replicated-write application at a replica.
     Apply,
+    /// One stop of a Warp validation chain; `hop` is this server's
+    /// position (== its id). The final hop runs the full operation.
+    Chain { op: OpEnvelope, hop: usize },
 }
 
 #[derive(Debug, Clone)]
@@ -89,6 +104,8 @@ enum Ev {
     Arrive { op: OpEnvelope },
     /// An async replicated write lands at a replica. [server]
     ApplyArrive,
+    /// A Warp chain reaches its next server. [server]
+    ChainArrive { op: OpEnvelope, hop: usize },
     /// A station job completed. [server]
     JobDone { job: Job },
 }
@@ -153,6 +170,16 @@ impl<'s> WindowGroup<Shared<'s>> for ServerGroup {
                 let apply = VTime::from_millis_f64(ctx.cfg.apply_ms);
                 self.submit(Job::Apply, apply);
             }
+            Ev::ChainArrive { op, hop } => {
+                // Intermediate hops pay a validation step; the final hop
+                // executes the operation in full and replies.
+                let service = if hop + 1 == ctx.n_servers {
+                    ctx.cfg.service.sample(&ctx.app.spec.txns[op.txn], &mut self.rng)
+                } else {
+                    VTime::from_millis_f64(ctx.cfg.apply_ms)
+                };
+                self.submit(Job::Chain { op, hop }, service);
+            }
             Ev::JobDone { job } => self.on_job_done(job, ctx),
             Ev::Issue { .. } | Ev::Reply { .. } => {
                 unreachable!("client-tier event delivered to a server")
@@ -174,21 +201,39 @@ impl ServerGroup {
         if let Some(next) = self.station.complete(now) {
             self.core.q.schedule(next.service, Ev::JobDone { job: next.payload });
         }
-        if let Job::Op(op) = job {
-            // Read-only mode: writes replicate asynchronously to replicas.
-            if op.write && matches!(ctx.cfg.mode, BaselineMode::ReadOnly { .. }) {
-                for s in 0..ctx.n_servers {
-                    if s == self.id {
-                        continue;
+        match job {
+            Job::Op(op) => {
+                // Read-only mode: writes replicate async to replicas.
+                if op.write && matches!(ctx.cfg.mode, BaselineMode::ReadOnly { .. }) {
+                    for s in 0..ctx.n_servers {
+                        if s == self.id {
+                            continue;
+                        }
+                        let d = ctx.sites.one_way(self.id, s);
+                        self.core.send(s, now + d, Ev::ApplyArrive);
                     }
-                    let d = ctx.sites.one_way(self.id, s);
-                    self.core.send(s, now + d, Ev::ApplyArrive);
+                }
+                let d = ctx.sites.one_way(self.id, op.client_site);
+                let target = client_group_target(op.client, ctx.client_groups);
+                let ev =
+                    Ev::Reply { client: op.client, issued: op.issued, write: op.write };
+                self.core.send(target, now + d, ev);
+            }
+            Job::Chain { op, hop } => {
+                if hop + 1 == ctx.n_servers {
+                    // Validated everywhere; executed here — reply.
+                    let d = ctx.sites.one_way(self.id, op.client_site);
+                    let target = client_group_target(op.client, ctx.client_groups);
+                    let ev =
+                        Ev::Reply { client: op.client, issued: op.issued, write: op.write };
+                    self.core.send(target, now + d, ev);
+                } else {
+                    let next = hop + 1;
+                    let d = ctx.sites.one_way(self.id, next);
+                    self.core.send(next, now + d, Ev::ChainArrive { op, hop: next });
                 }
             }
-            let d = ctx.sites.one_way(self.id, op.client_site);
-            let target = client_group_target(op.client, ctx.client_groups);
-            let ev = Ev::Reply { client: op.client, issued: op.issued, write: op.write };
-            self.core.send(target, now + d, ev);
+            Job::Apply => {}
         }
     }
 }
@@ -220,6 +265,14 @@ impl IssueRouter<Ev> for Shared<'_> {
             tier.gen.next_op(&mut r, site, self.n_servers)
         };
         let write = !self.app.spec.txns[op.txn].is_read_only();
+        let now = tier.core.now();
+        let env = OpEnvelope {
+            txn: op.txn,
+            client,
+            client_site: site,
+            issued: now,
+            write,
+        };
         let server = match self.cfg.mode {
             BaselineMode::Centralized => 0,
             BaselineMode::ReadOnly { .. } => {
@@ -229,14 +282,28 @@ impl IssueRouter<Ev> for Shared<'_> {
                     self.nearest_server(site)
                 }
             }
-        };
-        let now = tier.core.now();
-        let env = OpEnvelope {
-            txn: op.txn,
-            client,
-            client_site: site,
-            issued: now,
-            write,
+            BaselineMode::Warp { .. } => {
+                use crate::workload::analyzed::Route;
+                match self.app.route(&op, self.n_servers) {
+                    Route::GlobalAt(_) => {
+                        // Multi-partition: enter the acyclic chain at
+                        // server 0 and validate in global id order.
+                        let delay = self.sites.one_way(site, 0);
+                        tier.core.send_tagged(
+                            0,
+                            now + delay,
+                            client as u32,
+                            Ev::ChainArrive { op: env, hop: 0 },
+                        );
+                        return;
+                    }
+                    // Single-partition (confluent ops included: Warp has
+                    // no merge machinery, but one-partition commits need
+                    // none): execute at the owning partition.
+                    Route::LocalAt(s) | Route::ConfluentAt(s) => s,
+                    Route::Any => self.nearest_server(site),
+                }
+            }
         };
         let delay = self.sites.one_way(site, server);
         // Tag with the global client id: issues from every client group
@@ -271,7 +338,9 @@ impl<'a> BaselineSim<'a> {
         let n_sites = sites.n();
         let n_servers = match cfg.mode {
             BaselineMode::Centralized => 1,
-            BaselineMode::ReadOnly { n_servers } => n_servers.min(n_sites).max(1),
+            BaselineMode::ReadOnly { n_servers } | BaselineMode::Warp { n_servers } => {
+                n_servers.min(n_sites).max(1)
+            }
         };
         let servers = (0..n_servers)
             .map(|id| ServerGroup {
@@ -601,5 +670,76 @@ mod tests {
         assert_eq!(c.horizon, VTime::from_secs(25));
         assert_eq!(c.seed, 0xBA5E);
         assert_eq!(BaselineConfig::read_only(3).mode, BaselineMode::ReadOnly { n_servers: 3 });
+        assert_eq!(BaselineConfig::warp(3).mode, BaselineMode::Warp { n_servers: 3 });
+    }
+
+    /// Two tables so the read never conflicts with the global writer:
+    /// `read` stays coordination-free while `gwrite` (opaque write
+    /// target) is Global and must traverse Warp's validation chain.
+    fn chain_app() -> AnalyzedApp {
+        let schema = Schema::new(vec![
+            TableSchema::new("T", &[("K", ValueType::Int), ("V", ValueType::Int)], &["K"]),
+            TableSchema::new("S", &[("K", ValueType::Int), ("V", ValueType::Int)], &["K"]),
+        ]);
+        let txns = vec![
+            TxnTemplate::new("read", &["k"], &[("q", "SELECT V FROM T WHERE K = ?k")], 1.0),
+            TxnTemplate::new(
+                "gwrite",
+                &["k"],
+                &[("u", "UPDATE S SET V = V + 1 WHERE K = ?derived")],
+                1.0,
+            ),
+        ];
+        let app = AnalyzedApp::analyze(AppSpec { name: "chain".into(), schema, txns });
+        assert_eq!(*app.class(1), crate::analysis::OpClass::Global);
+        app
+    }
+
+    /// Tentpole satellite: the Warp-style baseline. Single-partition ops
+    /// never coordinate; multi-partition commits pay the acyclic chain —
+    /// so their latency grows with the chain length, unlike Eliá where
+    /// the token amortizes over every queued global.
+    #[test]
+    fn warp_chain_prices_multi_partition_commits() {
+        let app = chain_app();
+        let mk = |n: usize, write_ratio: f64| {
+            let cfg = BaselineConfig {
+                warmup: VTime::from_secs(2),
+                horizon: VTime::from_secs(10),
+                service: ServiceModel::fixed(5.0),
+                ..BaselineConfig::warp(n)
+            };
+            BaselineSim::new(
+                &app,
+                Topology::wan_full_client(5),
+                ClientsConfig { n: 20, think_ms: 50.0, seed: 2, ..Default::default() },
+                cfg,
+                move |_| Box::new(Gen { write_ratio }),
+            )
+            .run()
+        };
+        let w5 = mk(5, 0.3);
+        assert!(w5.metrics.completed > 100);
+        assert!(w5.metrics.global_latency.count() > 20, "chained commits must complete");
+        // Reads run at their own partition: far cheaper than the chain.
+        assert!(
+            w5.metrics.global_latency.mean() > 3.0 * w5.metrics.local_latency.mean(),
+            "chain={} local={}",
+            w5.metrics.global_latency.mean(),
+            w5.metrics.local_latency.mean()
+        );
+        // The chain cost scales with its length: a 1-server "chain" is
+        // just a local commit at site 0.
+        let w1 = mk(1, 0.3);
+        assert!(
+            w5.metrics.global_latency.mean() > w1.metrics.global_latency.mean() + 50.0,
+            "w5={} w1={}",
+            w5.metrics.global_latency.mean(),
+            w1.metrics.global_latency.mean()
+        );
+        // Determinism at 2 threads, like every other mode.
+        let again = mk(5, 0.3);
+        assert_eq!(again.metrics.completed, w5.metrics.completed);
+        assert_eq!(again.events, w5.events);
     }
 }

@@ -18,6 +18,30 @@ pub struct ColumnDef {
     pub ty: ValueType,
 }
 
+/// A declared data invariant on one table column. Invariants are the
+/// input to the coordination-avoidance pass (`analysis::confluence`):
+/// a pair of conflicting writes is mergeable without coordination only
+/// when their worst-case composition provably preserves every declared
+/// invariant (I-confluence, "Coordination Avoidance in Database
+/// Systems"). The engine also enforces `NonNegative` at commit time
+/// (bounded apply): a confluent decrement validates locally and aborts
+/// instead of coordinating.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Invariant {
+    /// The column value never drops below zero (escrow-style resource
+    /// counter, e.g. stock levels).
+    NonNegative { col: String },
+    /// No two rows share a value in this column (uniqueness is enforced
+    /// structurally when the column is the primary key / part of it:
+    /// duplicate inserts abort locally).
+    Unique { col: String },
+    /// Every value in this column references an existing key of the
+    /// `parent` table. Declared for completeness of the workload spec;
+    /// the confluence pass treats it conservatively (never a merge
+    /// licence on its own).
+    ForeignKey { col: String, parent: String },
+}
+
 /// Schema of one table: ordered columns, primary-key columns (a prefix of
 /// typical OLTP designs, but any subset is allowed), and secondary
 /// single-column hash indexes.
@@ -27,6 +51,10 @@ pub struct TableSchema {
     pub columns: Vec<ColumnDef>,
     pub primary_key: Vec<String>,
     pub indexes: Vec<String>,
+    /// Declared per-column invariants (see [`Invariant`]). Empty by
+    /// default: undeclared tables get the conservative (conflict-only)
+    /// classification and no engine-side validation.
+    pub invariants: Vec<Invariant>,
 }
 
 impl TableSchema {
@@ -39,6 +67,7 @@ impl TableSchema {
                 .collect(),
             primary_key: primary_key.iter().map(|s| s.to_string()).collect(),
             indexes: Vec::new(),
+            invariants: Vec::new(),
         }
     }
 
@@ -46,6 +75,51 @@ impl TableSchema {
         assert!(self.col_index(col).is_some(), "index on unknown column {col}");
         self.indexes.push(col.to_string());
         self
+    }
+
+    /// Declare that `col` must never go negative (escrow counter).
+    pub fn with_nonnegative(mut self, col: &str) -> Self {
+        assert!(self.col_index(col).is_some(), "invariant on unknown column {col}");
+        self.invariants.push(Invariant::NonNegative { col: col.to_string() });
+        self
+    }
+
+    /// Declare that `col` is unique across rows (duplicate inserts are
+    /// rejected structurally — `col` must belong to the primary key).
+    pub fn with_unique(mut self, col: &str) -> Self {
+        assert!(self.col_index(col).is_some(), "invariant on unknown column {col}");
+        assert!(
+            self.primary_key.iter().any(|p| p.eq_ignore_ascii_case(col)),
+            "Unique({col}) must be backed by the primary key — the engine only \
+             enforces uniqueness structurally via duplicate-key aborts"
+        );
+        self.invariants.push(Invariant::Unique { col: col.to_string() });
+        self
+    }
+
+    /// Declare a foreign key `col` → `parent` (documentary; the
+    /// confluence pass never treats it as a merge licence).
+    pub fn with_foreign_key(mut self, col: &str, parent: &str) -> Self {
+        assert!(self.col_index(col).is_some(), "invariant on unknown column {col}");
+        self.invariants
+            .push(Invariant::ForeignKey { col: col.to_string(), parent: parent.to_string() });
+        self
+    }
+
+    /// Is column `ci` covered by a `NonNegative` declaration?
+    pub fn nonneg(&self, ci: usize) -> bool {
+        self.invariants.iter().any(|inv| match inv {
+            Invariant::NonNegative { col } => self.col_index(col) == Some(ci),
+            _ => false,
+        })
+    }
+
+    /// Is column `ci` covered by a `Unique` declaration?
+    pub fn unique(&self, ci: usize) -> bool {
+        self.invariants.iter().any(|inv| match inv {
+            Invariant::Unique { col } => self.col_index(col) == Some(ci),
+            _ => false,
+        })
     }
 
     pub fn col_index(&self, name: &str) -> Option<usize> {
@@ -155,5 +229,33 @@ mod tests {
     #[should_panic(expected = "unknown column")]
     fn index_on_unknown_column_panics() {
         let _ = TableSchema::new("T", &[("A", ValueType::Int)], &["A"]).with_index("B");
+    }
+
+    #[test]
+    fn invariant_declarations_resolve_by_column_index() {
+        let t = TableSchema::new(
+            "T",
+            &[("ID", ValueType::Int), ("LEVEL", ValueType::Int), ("OWNER", ValueType::Int)],
+            &["ID"],
+        )
+        .with_nonnegative("LEVEL")
+        .with_unique("ID")
+        .with_foreign_key("OWNER", "USERS");
+        assert!(t.nonneg(1));
+        assert!(!t.nonneg(0));
+        assert!(t.unique(0));
+        assert!(!t.unique(1));
+        assert_eq!(t.invariants.len(), 3);
+        // Undeclared tables stay invariant-free (the conservative default).
+        let plain = TableSchema::new("U", &[("A", ValueType::Int)], &["A"]);
+        assert!(plain.invariants.is_empty());
+        assert!(!plain.nonneg(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "backed by the primary key")]
+    fn unique_off_primary_key_panics() {
+        let _ = TableSchema::new("T", &[("A", ValueType::Int), ("B", ValueType::Int)], &["A"])
+            .with_unique("B");
     }
 }

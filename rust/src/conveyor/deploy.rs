@@ -70,6 +70,10 @@ struct ServerNode {
     db: Db,
     pending: Mutex<Vec<Arc<Parked>>>,
     round: Mutex<Option<Arc<RoundShared>>>,
+    /// Commit-ordered updates of confluent operations executed here
+    /// since the token last stopped by; the token thread drains this at
+    /// every stop and appends the deltas for replication.
+    outbox: Mutex<Vec<StateUpdate>>,
 }
 
 /// A running multi-server Eliá deployment.
@@ -85,6 +89,9 @@ pub struct Deployment {
     token_thread: Mutex<Option<std::thread::JoinHandle<Token>>>,
     pub ops_local: AtomicU64,
     pub ops_global: AtomicU64,
+    /// Invariant-confluent operations: executed immediately like locals,
+    /// replicated like globals (delta merged on the next token stop).
+    pub ops_confluent: AtomicU64,
     pub retries: AtomicU64,
 }
 
@@ -104,6 +111,7 @@ impl Deployment {
                     db,
                     pending: Mutex::new(Vec::new()),
                     round: Mutex::new(None),
+                    outbox: Mutex::new(Vec::new()),
                 })
             })
             .collect();
@@ -118,6 +126,7 @@ impl Deployment {
             token_thread: Mutex::new(None),
             ops_local: AtomicU64::new(0),
             ops_global: AtomicU64::new(0),
+            ops_confluent: AtomicU64::new(0),
             retries: AtomicU64::new(0),
         });
         let dep2 = Arc::clone(&dep);
@@ -156,6 +165,54 @@ impl Deployment {
             Route::GlobalAt(s) => {
                 self.ops_global.fetch_add(1, Ordering::Relaxed);
                 self.submit_global(s, op)
+            }
+            Route::ConfluentAt(s) => {
+                self.ops_confluent.fetch_add(1, Ordering::Relaxed);
+                self.execute_confluent(s, &op)
+            }
+        }
+    }
+
+    /// Execute an invariant-confluent operation immediately — no token
+    /// wait — capturing its update in commit order into the server's
+    /// outbox for replication on the next token stop. A declared
+    /// invariant that would break aborts locally ([`TxnError::Invariant`]
+    /// from the engine's bounded-apply check) instead of coordinating.
+    fn execute_confluent(&self, server: usize, op: &Operation) -> Result<Reply, TxnError> {
+        let node = &self.servers[server];
+        let tpl = &self.app.spec.txns[op.txn];
+        let stmts = &self.stmt_maps[op.txn];
+        let body = tpl.body.as_ref().expect("template needs a body for execution");
+        let mut attempts = 0;
+        loop {
+            let mut handle = node.db.begin();
+            let mut ctx = TxnCtx::new(&mut handle, stmts);
+            match body(&mut ctx, &op.args) {
+                Ok(reply) => {
+                    match handle.commit_with(|u| {
+                        // Before lock release: outbox order equals the
+                        // DBMS serialization order, like the round queue.
+                        node.outbox.lock().unwrap().push(u.clone());
+                    }) {
+                        Ok(_) => return Ok(reply),
+                        Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
+                            attempts += 1;
+                            self.retries.fetch_add(1, Ordering::Relaxed);
+                            std::thread::yield_now();
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
+                    handle.abort();
+                    attempts += 1;
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::yield_now();
+                }
+                Err(e) => {
+                    handle.abort();
+                    return Err(e);
+                }
             }
         }
     }
@@ -287,6 +344,17 @@ impl Deployment {
                 }
                 any_work |= !updates.is_empty();
 
+                // Collect deltas of confluent ops committed here since
+                // the last stop (already executed — just replicate).
+                let staged: Vec<StateUpdate> = {
+                    let mut outbox = self.servers[p].outbox.lock().unwrap();
+                    std::mem::take(&mut *outbox)
+                };
+                any_work |= !staged.is_empty();
+                for u in staged {
+                    token.append(p, u);
+                }
+
                 // Atomic snapshot of the pending queue (line 16).
                 let snapshot: Vec<Arc<Parked>> = {
                     let mut pending = self.servers[p].pending.lock().unwrap();
@@ -335,8 +403,15 @@ impl Deployment {
                 idle_rounds = 0;
             }
         }
-        // Drain: one final rotation so every server applies outstanding
-        // updates (needed for convergence checks at shutdown).
+        // Drain: flush every outbox, then one final rotation so every
+        // server applies outstanding updates (needed for convergence
+        // checks at shutdown).
+        for p in 0..n {
+            let staged = std::mem::take(&mut *self.servers[p].outbox.lock().unwrap());
+            for u in staged {
+                token.append(p, u);
+            }
+        }
         for p in 0..n {
             let updates = token.on_receive(p);
             for u in &updates {
@@ -495,6 +570,88 @@ mod tests {
         let total = dep.ops_local.load(Ordering::Relaxed) + dep.ops_global.load(Ordering::Relaxed);
         assert_eq!(total, 400);
         dep.shutdown();
+    }
+
+    /// Tentpole: confluent ops execute without parking, their deltas
+    /// replicate through the token, and a delta that would break the
+    /// declared invariant aborts locally instead of coordinating.
+    #[test]
+    fn confluent_ops_replicate_and_validate_locally() {
+        let schema = Schema::new(vec![TableSchema::new(
+            "STOCK",
+            &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int)],
+            &["ITEM"],
+        )
+        .with_nonnegative("LEVEL")]);
+        let txns = vec![TxnTemplate::new(
+            "restock",
+            &["item", "q"],
+            &[("w", "UPDATE STOCK SET LEVEL = LEVEL + ?q WHERE ITEM = ?derived")],
+            1.0,
+        )
+        .with_nonneg_param("q")
+        .with_body(|ctx, args| {
+            let item = args.get("item").and_then(|v| v.as_int()).unwrap_or(0);
+            let mut b = args.clone();
+            b.insert("derived".to_string(), Value::Int(item.rem_euclid(4)));
+            ctx.exec("w", &b)
+        })];
+        let app = Arc::new(AnalyzedApp::analyze_confluent(AppSpec {
+            name: "restock".into(),
+            schema,
+            txns,
+        }));
+        assert_eq!(*app.class(0), crate::analysis::OpClass::Confluent);
+        let seed_stock = |db: &Db| {
+            use crate::db::BindSlots;
+            let ins = db.prepare_sql("INSERT INTO STOCK (ITEM, LEVEL) VALUES (?i, 5)").unwrap();
+            for i in 0..4i64 {
+                db.exec_auto_prepared(&ins, &BindSlots(vec![Value::Int(i)])).unwrap();
+            }
+        };
+        let dep = Deployment::start(Arc::clone(&app), DeployConfig::default(), seed_stock);
+        let op = |item: i64, q: i64| Operation {
+            txn: 0,
+            args: [
+                ("item".to_string(), Value::Int(item)),
+                ("q".to_string(), Value::Int(q)),
+            ]
+            .into_iter()
+            .collect(),
+        };
+        let mut handles = Vec::new();
+        for t in 0..4i64 {
+            let dep = Arc::clone(&dep);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25i64 {
+                    dep.submit(op(t * 100 + i, 1)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(dep.ops_confluent.load(Ordering::Relaxed), 100);
+        assert_eq!(dep.ops_global.load(Ordering::Relaxed), 0, "no op may park");
+        // A lying client whose "non-negative" delta would drive LEVEL
+        // below zero aborts locally — the engine's bounded-apply check —
+        // with no coordination and no partial effects.
+        let err = dep.submit(op(0, -1000)).unwrap_err();
+        assert!(matches!(err, TxnError::Invariant { .. }), "{err:?}");
+        dep.shutdown();
+        // Every replica converges on the full restock total.
+        let q = parse_statement("SELECT SUM(LEVEL) FROM STOCK").unwrap();
+        for s in 0..dep.n_servers() {
+            let total = dep
+                .db(s)
+                .exec_auto(&q, &Bindings::new())
+                .unwrap()
+                .scalar()
+                .unwrap()
+                .as_int()
+                .unwrap();
+            assert_eq!(total, 4 * 5 + 100, "server {s}");
+        }
     }
 
     #[test]

@@ -138,6 +138,10 @@ struct OpEnvelope {
     client_site: usize,
     issued: VTime,
     global: bool,
+    /// Invariant-confluent: executes immediately like a local op, but its
+    /// state update rides the token as a merged delta (see
+    /// [`crate::analysis::confluence`]).
+    confluent: bool,
 }
 
 #[derive(Debug)]
@@ -226,6 +230,10 @@ struct ServerState {
     core: GroupCore<Ev>,
     /// Token-order log of global updates (when `record_global_log`).
     log: Vec<(u64, StateUpdate)>,
+    /// Updates of confluent ops committed since the token last left:
+    /// flushed onto the token at the next `TokenArrive` (while holding
+    /// the token, confluent commits append directly instead).
+    outbox: Vec<StateUpdate>,
     /// Crashed and not yet recovered: every event freezes in `held`.
     down: bool,
     /// Events that arrived during the outage, in arrival order.
@@ -321,6 +329,10 @@ impl ServerState {
                     if self.outstanding == 0 {
                         self.pass_token(ctx, VTime::ZERO);
                     }
+                } else if op.confluent {
+                    // Confluent commit: replied immediately (no token
+                    // wait); the delta replicates on the next pass.
+                    self.stage_confluent(update.unwrap_or_default(), ctx);
                 }
                 self.send_reply(&op, ctx);
             }
@@ -362,6 +374,21 @@ impl ServerState {
         }
     }
 
+    /// Queue a confluent op's update for replication: append straight to
+    /// the token if it is here, otherwise hold it in the outbox until the
+    /// next `TokenArrive` flushes it.
+    fn stage_confluent(&mut self, u: StateUpdate, ctx: &Shared<'_>) {
+        match self.token.as_mut() {
+            Some(token) => {
+                if ctx.cfg.record_global_log {
+                    self.log.push((token.appended + 1, u.clone()));
+                }
+                token.append(self.id, u);
+            }
+            None => self.outbox.push(u),
+        }
+    }
+
     fn send_reply(&mut self, op: &OpEnvelope, ctx: &Shared<'_>) {
         let delay = ctx.client_server_latency(op.client_site, self.id);
         let ev = Ev::Reply { client: op.client, issued: op.issued, global: op.global };
@@ -375,6 +402,12 @@ impl ServerState {
         }
         let updates = token.on_receive(self.id);
         self.token = Some(token);
+
+        // Flush deltas of confluent ops committed since the last pass.
+        let outbox = std::mem::take(&mut self.outbox);
+        for u in outbox {
+            self.stage_confluent(u, ctx);
+        }
 
         // Apply replicated updates (Algorithm 2 lines 11-15) as one CPU
         // job; the pending snapshot executes after it.
@@ -489,10 +522,11 @@ impl IssueRouter<Ev> for Shared<'_> {
             tier.gen.next_op(&mut r, affinity, n)
         };
         let route = self.app.route(&op, n);
-        let (server, global) = match route {
-            Route::Any => (affinity, false),
-            Route::LocalAt(s) => (s, false),
-            Route::GlobalAt(s) => (s, true),
+        let (server, global, confluent) = match route {
+            Route::Any => (affinity, false, false),
+            Route::LocalAt(s) => (s, false, false),
+            Route::GlobalAt(s) => (s, true, false),
+            Route::ConfluentAt(s) => (s, false, true),
         };
 
         // Misrouting: send to a wrong server which answers MAP; the client
@@ -515,6 +549,7 @@ impl IssueRouter<Ev> for Shared<'_> {
             client_site: site,
             issued: now,
             global,
+            confluent,
         };
         // Tagged with the client's global id: the engine merges client
         // groups at one source rank, ordered by this tag, so delivery
@@ -570,6 +605,7 @@ impl<'a> ConveyorSim<'a> {
                     rng: Rng::stream(cfg.seed ^ 0xF00D, id as u64),
                     core: GroupCore::new(),
                     log: Vec::new(),
+                    outbox: Vec::new(),
                     down: false,
                     held: Vec::new(),
                     log_len: 0,
@@ -1069,6 +1105,175 @@ mod tests {
         assert_eq!(par.events, crashed.events);
         assert_eq!(par.crash, crashed.crash);
         assert_eq!(par.mean_latency_ms().to_bits(), crashed.mean_latency_ms().to_bits());
+    }
+
+    /// Satellite regression (carried from the WAL PR): crashing the
+    /// server where the token boots *and rotations are counted* (server
+    /// 0). The token freezes with it — either held at crash time or
+    /// parked in `held` when the next `TokenArrive` lands during the
+    /// outage — so the whole belt stalls, the rotation counter resumes
+    /// from its exact frozen value at recovery, and the run stays
+    /// bit-identical at 2 threads.
+    #[test]
+    fn token_holder_crash_freezes_the_belt_and_resumes() {
+        let app = app();
+        let mk = |crash: Option<CrashConfig>, threads: usize| {
+            let cfg = ConveyorConfig {
+                execute_real: true,
+                crash,
+                warmup: VTime::from_secs(1),
+                horizon: VTime::from_secs(10),
+                service: ServiceModel::fixed(5.0),
+                parallel: threads,
+                ..Default::default()
+            };
+            ConveyorSim::new(
+                &app,
+                Topology::lan(3),
+                ClientsConfig { n: 24, think_ms: 10.0, seed: 7, ..Default::default() },
+                cfg,
+                |_| Box::new(MixGen { global_ratio: 0.3 }),
+                seed,
+            )
+            .run()
+        };
+        let clean = mk(None, 1);
+        let cc = CrashConfig {
+            server: 0,
+            at: VTime::from_secs(4),
+            restart_ms: 800.0,
+            replay_per_record_ms: 0.05,
+        };
+        let crashed = mk(Some(cc.clone()), 1);
+        let o = crashed.crash.expect("crash outcome");
+        assert_eq!(o.server, 0);
+        assert!(o.held_events > 0, "the token (or belt traffic) must freeze here");
+        // The belt stalls for the downtime, then resumes: strictly fewer
+        // rotations than the clean run, but far more than zero — the
+        // counter picks up from its frozen value rather than resetting.
+        assert!(
+            crashed.rotations < clean.rotations,
+            "belt did not stall: {} vs {}",
+            crashed.rotations,
+            clean.rotations
+        );
+        assert!(
+            crashed.rotations > clean.rotations / 2,
+            "belt never resumed: {} vs {}",
+            crashed.rotations,
+            clean.rotations
+        );
+        assert!(crashed.metrics.completed > 100, "held requests must drain");
+        // Determinism: a rerun and a 2-thread run agree bit for bit —
+        // including the exact rotation count after resumption.
+        let again = mk(Some(cc.clone()), 1);
+        assert_eq!(again.rotations, crashed.rotations);
+        assert_eq!(again.events, crashed.events);
+        let par = mk(Some(cc), 2);
+        assert_eq!(par.rotations, crashed.rotations, "thread count changed rotations");
+        assert_eq!(par.events, crashed.events);
+        assert_eq!(par.crash, crashed.crash);
+        assert_eq!(par.mean_latency_ms().to_bits(), crashed.mean_latency_ms().to_bits());
+    }
+
+    /// Tentpole: confluent ops execute without the token and their deltas
+    /// replicate on the next pass — all replicas converge on the
+    /// replicated table exactly as for token-ordered globals.
+    #[test]
+    fn confluent_ops_bypass_the_token_and_still_replicate() {
+        // STOCK with a declared non-negative LEVEL and an increment-only
+        // writer: the confluence pass promotes `restock` to Confluent.
+        let schema = Schema::new(vec![TableSchema::new(
+            "STOCK",
+            &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int)],
+            &["ITEM"],
+        )
+        .with_nonnegative("LEVEL")]);
+        let txns = vec![TxnTemplate::new(
+            "restock",
+            &["item"],
+            &[("w", "UPDATE STOCK SET LEVEL = LEVEL + 1 WHERE ITEM = ?derived")],
+            1.0,
+        )
+        .with_body(|ctx, args| {
+            let item = args.get("item").and_then(|v| v.as_int()).unwrap_or(0);
+            let mut b = args.clone();
+            b.insert("derived".to_string(), Value::Int(item.rem_euclid(8)));
+            ctx.exec("w", &b)
+        })];
+        let app = AnalyzedApp::analyze_confluent(crate::workload::spec::AppSpec {
+            name: "restock".into(),
+            schema,
+            txns,
+        });
+        assert_eq!(*app.class(0), crate::analysis::OpClass::Confluent);
+
+        struct RestockGen;
+        impl OpGenerator for RestockGen {
+            fn next_op(&mut self, rng: &mut Rng, _site: usize, _n: usize) -> Operation {
+                let args: Bindings =
+                    [("item".to_string(), Value::Int(rng.range(0, 1000) as i64))]
+                        .into_iter()
+                        .collect();
+                Operation { txn: 0, args }
+            }
+        }
+        let seed_stock = |db: &Db| {
+            use crate::db::BindSlots;
+            let ins =
+                db.prepare_sql("INSERT INTO STOCK (ITEM, LEVEL) VALUES (?i, 0)").unwrap();
+            for i in 0..8i64 {
+                db.exec_auto_prepared(&ins, &BindSlots(vec![Value::Int(i)])).unwrap();
+            }
+        };
+        let cfg = ConveyorConfig {
+            execute_real: true,
+            record_global_log: true,
+            warmup: VTime::from_secs(1),
+            horizon: VTime::from_secs(8),
+            service: ServiceModel::fixed(5.0),
+            ..Default::default()
+        };
+        let (r, dbs) = ConveyorSim::new(
+            &app,
+            Topology::lan(3),
+            ClientsConfig { n: 12, think_ms: 10.0, seed: 7, ..Default::default() },
+            cfg,
+            |_| Box::new(RestockGen),
+            seed_stock,
+        )
+        .run_keep_dbs();
+        assert!(r.metrics.completed > 100);
+        assert_eq!(r.aborts, 0);
+        // No op ever waited for the token...
+        assert_eq!(r.metrics.global_latency.count(), 0, "confluent ops must not wait");
+        // ...yet their deltas rode it: the recorded token history is
+        // non-empty and replays to the total restock count.
+        assert!(!r.global_log.is_empty(), "confluent deltas must ride the token");
+        use crate::db::Key;
+        let total = |db: &Db| -> i64 {
+            (0..8i64)
+                .map(|item| {
+                    db.peek("STOCK", &Key::single(Value::Int(item))).unwrap()[1]
+                        .as_int()
+                        .unwrap()
+                })
+                .sum()
+        };
+        let replica = Db::new(app.spec.schema.clone());
+        seed_stock(&replica);
+        for u in &r.global_log {
+            replica.apply_update(u).unwrap();
+        }
+        assert_eq!(total(&replica), r.global_log.len() as i64);
+        // Every server applied a prefix of everyone's deltas on top of
+        // its own commits: strictly positive stock everywhere, bounded by
+        // the full history.
+        for (s, db) in dbs.iter().enumerate() {
+            let t = total(db.as_ref().expect("real-execution db"));
+            assert!(t > 0, "server {s} saw no restocks");
+            assert!(t <= r.global_log.len() as i64, "server {s} over-applied");
+        }
     }
 
     /// The recorded token log is the serial history: replaying it on a

@@ -774,6 +774,25 @@ impl<'a> TxnHandle<'a> {
                         cols.push((*ci, colop));
                     }
                 }
+                // Bounded apply: a declared NonNegative invariant is
+                // validated against the post-image before the write
+                // buffers. Confluent operations rely on this local check
+                // instead of coordinating — a violating decrement aborts
+                // here (semantic, non-retryable), never replicates.
+                if schema.nonneg(*ci) {
+                    let neg = match &new_row[*ci] {
+                        Value::Int(i) => *i < 0,
+                        Value::Float(x) => *x < 0.0,
+                        _ => false,
+                    };
+                    if neg {
+                        return Err(TxnError::Invariant {
+                            table: schema.name.clone(),
+                            column: schema.columns[*ci].name.clone(),
+                            value: format!("{:?}", new_row[*ci]),
+                        });
+                    }
+                }
             }
             self.state.overlay_put(p.ti, key.clone(), Some(Arc::new(new_row)));
             self.state.update.push(WriteRecord::Update { table: p.ti, key, cols });

@@ -446,6 +446,26 @@ impl Prepared {
         self.params.iter().position(|p| p == name)
     }
 
+    /// The compiled SET actions of an UPDATE — the per-column delta
+    /// shapes ([`SetOp::Delta`] vs [`SetOp::Assign`]) the confluence
+    /// pass (`analysis::confluence`) inspects to prove conflicting
+    /// writes mergeable. `None` for non-UPDATE statements.
+    pub fn update_sets(&self) -> Option<&[(usize, SetOp)]> {
+        match &self.kind {
+            PreparedKind::Update(u) => Some(&u.sets),
+            _ => None,
+        }
+    }
+
+    /// The compiled column expressions of an INSERT (row-free value
+    /// sources per column). `None` for non-INSERT statements.
+    pub fn insert_sets(&self) -> Option<&[(usize, CScalar)]> {
+        match &self.kind {
+            PreparedKind::Insert(i) => Some(&i.sets),
+            _ => None,
+        }
+    }
+
     /// Name-keyed binding constructor (tests / examples / transaction
     /// bodies): every referenced parameter must be present. Extra entries
     /// in `binds` are ignored.

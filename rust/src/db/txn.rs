@@ -46,6 +46,19 @@ pub enum TxnError {
     /// log is poisoned and every later commit fails too (see
     /// [`crate::db::wal::Wal`]).
     Durability(String),
+    /// A declared schema invariant would be violated by this write (the
+    /// bounded-apply check: e.g. a `NonNegative` column driven below
+    /// zero). Confluent operations rely on this local validation instead
+    /// of coordinating — the abort is semantic, not a concurrency
+    /// victim, so it is not retryable.
+    Invariant {
+        /// Table name.
+        table: String,
+        /// Violated column name.
+        column: String,
+        /// Rendered post-image value that failed validation.
+        value: String,
+    },
 }
 
 impl fmt::Display for TxnError {
@@ -58,6 +71,9 @@ impl fmt::Display for TxnError {
             TxnError::Sql(msg) => write!(f, "sql error: {msg}"),
             TxnError::Finished => write!(f, "transaction already finished"),
             TxnError::Durability(msg) => write!(f, "durability error: {msg}"),
+            TxnError::Invariant { table, column, value } => {
+                write!(f, "invariant violation: {table}.{column} = {value}")
+            }
         }
     }
 }

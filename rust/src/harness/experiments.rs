@@ -36,9 +36,18 @@ impl Workload {
     }
 
     pub fn analyzed(&self) -> AnalyzedApp {
-        match self {
-            Workload::Tpcw => tpcw::analyzed(),
-            Workload::Rubis => rubis::analyzed(),
+        self.analyzed_with(true)
+    }
+
+    /// `confluence = false` reproduces the conflict-only classification
+    /// (the paper's exact Table 1); `true` includes the
+    /// invariant-confluence pass.
+    pub fn analyzed_with(&self, confluence: bool) -> AnalyzedApp {
+        match (self, confluence) {
+            (Workload::Tpcw, true) => tpcw::analyzed(),
+            (Workload::Tpcw, false) => tpcw::analyzed_no_confluence(),
+            (Workload::Rubis, true) => rubis::analyzed(),
+            (Workload::Rubis, false) => rubis::analyzed_no_confluence(),
         }
     }
 
@@ -213,6 +222,29 @@ fn baseline_point<'a>(
     service: ServiceModel,
     gen: impl FnMut(usize) -> Box<dyn OpGenerator + 'a>,
 ) -> LoadPoint {
+    baseline_point_on(
+        app,
+        mode,
+        Topology::wan_full_client(client_sites),
+        clients,
+        scale,
+        service,
+        gen,
+    )
+}
+
+/// Like [`baseline_point`] but over an explicit client-site latency
+/// matrix — fig3 runs the Warp baseline on the LAN topology, where the
+/// WAN-only default would misprice every hop.
+fn baseline_point_on<'a>(
+    app: &'a AnalyzedApp,
+    mode: BaselineMode,
+    sites: crate::simnet::latency::LatencyMatrix,
+    clients: usize,
+    scale: &ExpScale,
+    service: ServiceModel,
+    gen: impl FnMut(usize) -> Box<dyn OpGenerator + 'a>,
+) -> LoadPoint {
     let cfg = BaselineConfig {
         mode,
         service,
@@ -221,14 +253,7 @@ fn baseline_point<'a>(
         parallel: scale.parallel,
         ..BaselineConfig::centralized()
     };
-    let report = BaselineSim::new(
-        app,
-        Topology::wan_full_client(client_sites),
-        scale.clients_cfg(clients),
-        cfg,
-        gen,
-    )
-    .run();
+    let report = BaselineSim::new(app, sites, scale.clients_cfg(clients), cfg, gen).run();
     LoadPoint::from_metrics(clients, report.throughput(), &report.metrics)
 }
 
@@ -252,13 +277,26 @@ pub fn fig3(workload: Workload, servers: &[usize], scale: &ExpScale) -> Vec<(Str
             })
         });
         out.push(("mysql-cluster".to_string(), n, cluster));
+        let warp = ramp(&format!("warp-{n}"), &clients, 4000.0, |c| {
+            baseline_point_on(
+                &app,
+                BaselineMode::Warp { n_servers: n },
+                Topology::lan(n).servers,
+                c,
+                scale,
+                service,
+                |g| workload.generator_for(&app, n, g),
+            )
+        });
+        out.push(("warp".to_string(), n, warp));
     }
     out
 }
 
 /// Figure 4 — WAN throughput/latency curves for Eliá vs centralized vs
-/// read-only, at `n` sites (clients always at 5 sites for the baselines,
-/// at `n` sites for Eliá — matching the paper's deployment).
+/// read-only vs Warp-style acyclic commit, at `n` sites (clients always
+/// at 5 sites for the baselines, at `n` sites for Eliá — matching the
+/// paper's deployment).
 pub fn fig4(workload: Workload, n: usize, scale: &ExpScale) -> Vec<Curve> {
     let app = workload.analyzed();
     let service = ServiceModel::default();
@@ -272,6 +310,11 @@ pub fn fig4(workload: Workload, n: usize, scale: &ExpScale) -> Vec<Curve> {
     }));
     curves.push(ramp(&format!("read-only-{n}"), &clients, stop, |c| {
         baseline_point(&app, BaselineMode::ReadOnly { n_servers: n }, 5, c, scale, service, |g| {
+            workload.generator_for(&app, 5, g)
+        })
+    }));
+    curves.push(ramp(&format!("warp-{n}"), &clients, stop, |c| {
+        baseline_point(&app, BaselineMode::Warp { n_servers: n }, 5, c, scale, service, |g| {
             workload.generator_for(&app, 5, g)
         })
     }));
@@ -394,13 +437,25 @@ pub fn fig6(ratios: &[f64], clients: usize, scale: &ExpScale) -> Vec<(f64, f64, 
         .collect()
 }
 
-/// Table 1 — classification and frequency summary for both benchmarks.
-pub fn table1() -> Vec<(String, usize, usize, usize, usize, usize, usize, f64, f64, f64, f64)> {
+/// One Table 1 row: name, class counts (the paper's columns plus the
+/// confluence pass's CF), read-only count, total, and class frequencies.
+pub type Table1Row =
+    (String, usize, usize, usize, usize, usize, usize, usize, f64, f64, f64, f64);
+
+/// Table 1 — classification and frequency summary for both benchmarks
+/// (invariant-confluence pass included; see [`table1_with`]).
+pub fn table1() -> Vec<Table1Row> {
+    table1_with(true)
+}
+
+/// Table 1 with the confluence pass on or off — `false` pins the
+/// paper's original conflict-only counts (the bench's `--no-confluence`).
+pub fn table1_with(confluence: bool) -> Vec<Table1Row> {
     [Workload::Tpcw, Workload::Rubis]
         .iter()
         .map(|w| {
-            let app = w.analyzed();
-            let (l, g, c, lg, ro, total) = app.table1_row();
+            let app = w.analyzed_with(confluence);
+            let (l, g, c, lg, cf, ro, total) = app.table1_row();
             let wsum: f64 = app.spec.txns.iter().map(|t| t.weight).sum();
             let freq = |class: crate::analysis::OpClass| -> f64 {
                 app.spec
@@ -426,10 +481,14 @@ pub fn table1() -> Vec<(String, usize, usize, usize, usize, usize, usize, f64, f
                 g,
                 c,
                 lg,
+                cf,
                 ro,
                 total,
+                // Confluent ops execute locally, so they count toward
+                // the local frequency alongside L and L/G.
                 freq(crate::analysis::OpClass::Local)
-                    + freq(crate::analysis::OpClass::LocalGlobal),
+                    + freq(crate::analysis::OpClass::LocalGlobal)
+                    + freq(crate::analysis::OpClass::Confluent),
                 freq(crate::analysis::OpClass::Global),
                 freq(crate::analysis::OpClass::Commutative),
                 ro_freq,
@@ -446,13 +505,24 @@ mod tests {
     fn quick_fig3_shape_elia_beats_cluster() {
         let scale = ExpScale::quick();
         let rows = fig3(Workload::Rubis, &[3], &scale);
-        assert_eq!(rows.len(), 2);
-        let elia_peak = rows[0].2.peak(2000.0).unwrap().point.throughput;
-        let cluster_peak = rows[1].2.peak(2000.0).unwrap().point.throughput;
+        assert_eq!(rows.len(), 3, "elia, mysql-cluster and warp per server count");
+        let peak = |name: &str| {
+            rows.iter()
+                .find(|(s, _, _)| s == name)
+                .unwrap_or_else(|| panic!("missing {name} curve"))
+                .2
+                .peak(2000.0)
+                .unwrap()
+                .point
+                .throughput
+        };
+        let elia_peak = peak("elia");
+        let cluster_peak = peak("mysql-cluster");
         assert!(
             elia_peak > cluster_peak,
             "elia {elia_peak} must beat cluster {cluster_peak} on RUBiS"
         );
+        assert!(peak("warp") > 0.0, "warp baseline curve must produce a peak");
     }
 
     #[test]
@@ -479,10 +549,26 @@ mod tests {
 
     #[test]
     fn table1_has_both_workloads() {
-        let rows = table1();
+        // Conflict-only mode pins the paper's exact Table 1 counts.
+        let rows = table1_with(false);
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].0, "TPC-W");
-        assert_eq!((rows[0].1, rows[0].2, rows[0].3, rows[0].4), (10, 5, 5, 0));
-        assert_eq!((rows[1].1, rows[1].2, rows[1].3, rows[1].4), (11, 4, 3, 8));
+        assert_eq!((rows[0].1, rows[0].2, rows[0].3, rows[0].4, rows[0].5), (10, 5, 5, 0, 0));
+        assert_eq!((rows[1].1, rows[1].2, rows[1].3, rows[1].4, rows[1].5), (11, 4, 3, 8, 0));
+        // The confluence pass widens the coordination-free class on both
+        // workloads — strictly more L+C+CF templates than conflict-only.
+        let wide = table1();
+        for (w, base) in wide.iter().zip(rows.iter()) {
+            let free = |r: &Table1Row| r.1 + r.3 + r.5;
+            assert!(
+                free(w) > free(base),
+                "{}: {} vs {} coordination-free",
+                w.0,
+                free(w),
+                free(base)
+            );
+        }
+        assert_eq!((wide[0].2, wide[0].5), (3, 2), "TPC-W: two globals turn confluent");
+        assert_eq!((wide[1].4, wide[1].5), (5, 3), "RUBiS: three L/G turn confluent");
     }
 }

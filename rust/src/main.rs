@@ -23,10 +23,12 @@ fn main() {
     match args.command() {
         Some("analyze") => {
             let w = workload_of(&args);
-            let app = w.analyzed();
-            let (l, g, c, lg, ro, total) = app.table1_row();
+            let app = w.analyzed_with(!args.has("no-confluence"));
+            let (l, g, c, lg, cf, ro, total) = app.table1_row();
             println!("{}: {total} transactions over {} tables", w.name(), app.spec.schema.ntables());
-            println!("classes: {l} local / {g} global / {c} commutative / {lg} local-global; {ro} read-only");
+            println!(
+                "classes: {l} local / {g} global / {c} commutative / {lg} local-global / {cf} confluent; {ro} read-only"
+            );
             println!("partitioning cost: {:.1} (exact: {})", app.partitioning.cost, app.partitioning.exact);
             for (t, tpl) in app.spec.txns.iter().enumerate() {
                 let routing: Vec<&str> = app.classification.routing_params[t]
@@ -41,7 +43,12 @@ fn main() {
             let w = workload_of(&args);
             match args.get_or("exp", "table1") {
                 "table1" => {
-                    for row in experiments::table1() {
+                    let rows = if args.has("no-confluence") {
+                        experiments::table1_with(false)
+                    } else {
+                        experiments::table1()
+                    };
+                    for row in rows {
                         println!("{row:?}");
                     }
                 }
@@ -90,7 +97,9 @@ fn main() {
             }
         }
         _ => {
-            eprintln!("usage: elia <analyze|bench|doctor> [--workload tpcw|rubis] [--exp fig3|...] [--quick]");
+            eprintln!(
+                "usage: elia <analyze|bench|doctor> [--workload tpcw|rubis] [--exp fig3|...] [--quick] [--no-confluence]"
+            );
             eprintln!("examples and bench binaries cover the full evaluation; see README.md");
         }
     }

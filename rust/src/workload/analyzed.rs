@@ -38,6 +38,10 @@ pub enum Route {
     /// Global operation assigned to this server's partition; execution
     /// waits for the token there.
     GlobalAt(usize),
+    /// Invariant-confluent operation owned by this server: executes
+    /// immediately (no token wait) like a local one, but its state
+    /// update is replicated as a merged delta on the next token pass.
+    ConfluentAt(usize),
 }
 
 impl Route {
@@ -61,6 +65,24 @@ impl AnalyzedApp {
     /// classification) on an application.
     pub fn analyze(spec: AppSpec) -> Self {
         Self::analyze_with(spec, &PartitionOptions::default(), ExtractOptions::default())
+    }
+
+    /// Like [`AnalyzedApp::analyze`], but additionally runs the
+    /// invariant-confluence pass ([`crate::analysis::confluence`]):
+    /// Global / LocalGlobal transactions whose residual ww conflicts are
+    /// all provably mergeable under the schema's declared invariants are
+    /// promoted to [`OpClass::Confluent`]. Call any
+    /// [`AnalyzedApp::force_global`] *after* this (forcing expresses an
+    /// ordering demand the pass must not undo).
+    pub fn analyze_confluent(spec: AppSpec) -> Self {
+        let mut app = Self::analyze(spec);
+        crate::analysis::confluence::reclassify(
+            &app.spec.txns,
+            &app.spec.schema,
+            &app.rwsets,
+            &mut app.classification,
+        );
+        app
     }
 
     pub fn analyze_with(
@@ -127,6 +149,17 @@ impl AnalyzedApp {
                     None => Route::GlobalAt(txn % n_servers),
                 }
             }
+            // Confluent ops route like locals — same home-server choice a
+            // Local/Global with this routing set would make — so peers
+            // that rely on routing coverage still co-locate with them.
+            OpClass::Confluent => {
+                let server = params
+                    .first()
+                    .and_then(|&k| value_of(k))
+                    .map(|v| self.route_value(v, n_servers))
+                    .unwrap_or(txn % n_servers);
+                Route::ConfluentAt(server)
+            }
         }
     }
 
@@ -153,11 +186,11 @@ impl AnalyzedApp {
     }
 
     /// Table 1 summary: (#local, #global, #commutative, #local-global,
-    /// #read-only, total).
-    pub fn table1_row(&self) -> (usize, usize, usize, usize, usize, usize) {
-        let (l, g, c, lg) = self.classification.summary();
+    /// #confluent, #read-only, total).
+    pub fn table1_row(&self) -> (usize, usize, usize, usize, usize, usize, usize) {
+        let (l, g, c, lg, cf) = self.classification.summary();
         let ro = self.spec.txns.iter().filter(|t| t.is_read_only()).count();
-        (l, g, c, lg, ro, self.spec.txns.len())
+        (l, g, c, lg, cf, ro, self.spec.txns.len())
     }
 }
 
@@ -246,7 +279,42 @@ mod tests {
     #[test]
     fn table1_row_counts() {
         let app = mini_app();
-        let (l, g, c, lg, ro, total) = app.table1_row();
-        assert_eq!((l, g, c, lg, ro, total), (1, 1, 0, 0, 0, 2));
+        let (l, g, c, lg, cf, ro, total) = app.table1_row();
+        assert_eq!((l, g, c, lg, cf, ro, total), (1, 1, 0, 0, 0, 0, 2));
+    }
+
+    #[test]
+    fn confluent_routes_like_local_without_waiting() {
+        // Declare LEVEL non-negative and promise the (derived) decrement
+        // away: make `order` increment instead, so the confluence pass
+        // promotes it and routing switches from GlobalAt to ConfluentAt.
+        let schema = Schema::new(vec![
+            TableSchema::new(
+                "CARTS",
+                &[("CID", ValueType::Int), ("QTY", ValueType::Int)],
+                &["CID"],
+            ),
+            TableSchema::new(
+                "STOCK",
+                &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int)],
+                &["ITEM"],
+            )
+            .with_nonnegative("LEVEL"),
+        ]);
+        let txns = vec![TxnTemplate::new(
+            "restock",
+            &["cid"],
+            &[("w", "UPDATE STOCK SET LEVEL = LEVEL + 1 WHERE ITEM = ?derived")],
+            1.0,
+        )];
+        let app = AnalyzedApp::analyze_confluent(AppSpec {
+            name: "mini".into(),
+            schema,
+            txns,
+        });
+        assert_eq!(*app.class(0), OpClass::Confluent);
+        let r = app.route(&op(0, 42), 4);
+        assert!(matches!(r, Route::ConfluentAt(s) if s < 4), "{r:?}");
+        assert!(!r.is_global(), "confluent ops never wait for the token");
     }
 }

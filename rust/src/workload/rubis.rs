@@ -12,6 +12,14 @@
 //! reads, forced global exactly as the paper treats them. The bidding-mix
 //! weights reproduce Table 1's frequencies: L ≈ 64%, G ≈ 8%, C ≈ 28%,
 //! ~15% writes.
+//!
+//! With declared invariants (`I_QTY` non-negative; `U_ID`, `I_ID`,
+//! `CM_SEQ`, `R_SEQ` unique) the invariant-confluence pass additionally
+//! promotes **storeComment, registerItem and rateUser** — pure
+//! counter-delta + fresh-unique-insert writers — from local/global to
+//! [`crate::analysis::OpClass::Confluent`]. storeBid stays local/global
+//! (it *assigns* `I_MAX_BID`), as do storeBuyNow (decrements the
+//! non-negative `I_QTY`) and the status/description assigners.
 
 use crate::catalog::{Schema, TableSchema, ValueType};
 use crate::db::{Bindings, Db, Value};
@@ -55,7 +63,8 @@ pub fn schema() -> Schema {
                 ("U_NB_RATINGS", Int),
             ],
             &["U_ID"],
-        ),
+        )
+        .with_unique("U_ID"),
         TableSchema::new(
             "ITEMS",
             &[
@@ -74,7 +83,9 @@ pub fn schema() -> Schema {
             &["I_ID"],
         )
         .with_index("I_SELLER")
-        .with_index("I_CATEGORY"),
+        .with_index("I_CATEGORY")
+        .with_nonnegative("I_QTY")
+        .with_unique("I_ID"),
         TableSchema::new("CATEGORIES", &[("C_ID", Int), ("C_NAME", Str)], &["C_ID"]),
         TableSchema::new("REGIONS", &[("R_ID", Int), ("R_NAME", Str)], &["R_ID"]),
         TableSchema::new(
@@ -94,7 +105,8 @@ pub fn schema() -> Schema {
             ],
             &["CM_TO", "CM_SEQ"],
         )
-        .with_index("CM_IID"),
+        .with_index("CM_IID")
+        .with_unique("CM_SEQ"),
         TableSchema::new(
             "BUY_NOW",
             &[("BN_IID", Int), ("BN_SEQ", Int), ("BN_UID", Int), ("BN_QTY", Int)],
@@ -105,7 +117,8 @@ pub fn schema() -> Schema {
             "RATINGS",
             &[("R_TO", Int), ("R_SEQ", Int), ("R_FROM", Int), ("R_VAL", Int)],
             &["R_TO", "R_SEQ"],
-        ),
+        )
+        .with_unique("R_SEQ"),
     ])
 }
 
@@ -388,8 +401,21 @@ pub fn templates() -> Vec<TxnTemplate> {
     ]
 }
 
-/// Analyze RUBiS and force the paper's four global searches.
+/// Analyze RUBiS — invariant-confluence pass included — and force the
+/// paper's four global searches.
 pub fn analyzed() -> AnalyzedApp {
+    let spec = AppSpec { name: "rubis".into(), schema: schema(), txns: templates() };
+    let mut app = AnalyzedApp::analyze_confluent(spec);
+    for t in ["searchItemsByCategory", "searchItemsByRegion", "viewBoughtItems", "dailyStats"] {
+        app.force_global(t);
+    }
+    app
+}
+
+/// The conflict-only classification (paper Table 1 exactly): same as
+/// [`analyzed`] but without the invariant-confluence pass. Kept for the
+/// paper-pinned comparisons and the `--no-confluence` bench mode.
+pub fn analyzed_no_confluence() -> AnalyzedApp {
     let spec = AppSpec { name: "rubis".into(), schema: schema(), txns: templates() };
     let mut app = AnalyzedApp::analyze(spec);
     for t in ["searchItemsByCategory", "searchItemsByRegion", "viewBoughtItems", "dailyStats"] {
@@ -580,8 +606,8 @@ mod tests {
 
     #[test]
     fn classification_matches_paper_table1() {
-        let app = analyzed();
-        let (l, g, c, lg, ro, total) = app.table1_row();
+        let app = analyzed_no_confluence();
+        let (l, g, c, lg, cf, ro, total) = app.table1_row();
         let names: Vec<(String, OpClass)> = app
             .spec
             .txns
@@ -594,7 +620,38 @@ mod tests {
         assert_eq!(g, 4, "4 global: {names:?}");
         assert_eq!(c, 3, "3 commutative: {names:?}");
         assert_eq!(l, 11, "11 local: {names:?}");
+        assert_eq!(cf, 0, "conflict-only analysis never emits Confluent");
         assert_eq!(ro, 17, "17 read-only templates");
+    }
+
+    #[test]
+    fn confluence_widens_the_coordination_free_class() {
+        let app = analyzed();
+        let (l, g, c, lg, cf, ro, total) = app.table1_row();
+        let names: Vec<(String, OpClass)> = app
+            .spec
+            .txns
+            .iter()
+            .zip(&app.classification.classes)
+            .map(|(t, cl)| (t.name.clone(), cl.clone()))
+            .collect();
+        assert_eq!(total, 26);
+        assert_eq!(ro, 17);
+        // Three of the eight double-key writers are pure counter deltas
+        // plus fresh unique-key inserts — provably mergeable.
+        assert_eq!((l, g, c, lg, cf), (11, 4, 3, 5, 3), "{names:?}");
+        for t in ["storeComment", "registerItem", "rateUser"] {
+            let i = app.spec.txn_index(t).unwrap();
+            assert_eq!(app.classification.classes[i], OpClass::Confluent, "{t}");
+        }
+        // Assignments and non-negative decrements cannot merge.
+        for t in ["storeBid", "storeBuyNow", "closeAuction", "relistItem", "updateItemDesc"] {
+            let i = app.spec.txn_index(t).unwrap();
+            assert_eq!(app.classification.classes[i], OpClass::LocalGlobal, "{t}");
+        }
+        // Strictly more coordination-free templates than conflict-only.
+        let (l0, _, c0, _, cf0, _, _) = analyzed_no_confluence().table1_row();
+        assert!(l + c + cf > l0 + c0 + cf0, "confluence must widen the class");
     }
 
     #[test]
@@ -632,7 +689,9 @@ mod tests {
 
     #[test]
     fn frequencies_match_paper() {
-        let app = analyzed();
+        // Conflict-only classification: the paper's Table 1 frequency
+        // split counts the three now-confluent writers as L/G.
+        let app = analyzed_no_confluence();
         let total: f64 = app.spec.txns.iter().map(|t| t.weight).sum();
         let freq = |class: OpClass| -> f64 {
             app.spec

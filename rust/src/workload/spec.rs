@@ -70,6 +70,12 @@ pub struct TxnTemplate {
     /// multi-partition searches (RUBiS §6); such templates are normally
     /// combined with `Classification::force_global`.
     pub weak_reads: bool,
+    /// Parameters the caller guarantees to bind to non-negative values
+    /// (workload contract). The confluence pass uses this to prove a
+    /// `SET c = c + ?p` delta safe against a declared `NonNegative{c}`
+    /// invariant; the engine still validates the post-image at commit,
+    /// so a violated promise aborts instead of corrupting state.
+    pub nonneg_params: Vec<String>,
 }
 
 impl std::fmt::Debug for TxnTemplate {
@@ -102,12 +108,24 @@ impl TxnTemplate {
             weight,
             body: None,
             weak_reads: false,
+            nonneg_params: Vec::new(),
         }
     }
 
     /// Mark this template's reads as weak (see the field docs).
     pub fn with_weak_reads(mut self) -> Self {
         self.weak_reads = true;
+        self
+    }
+
+    /// Declare that callers always bind `param` to a non-negative value
+    /// (see the `nonneg_params` field docs).
+    pub fn with_nonneg_param(mut self, param: &str) -> Self {
+        assert!(
+            self.params.iter().any(|p| p == param),
+            "nonneg declaration on unknown param {param}"
+        );
+        self.nonneg_params.push(param.to_string());
         self
     }
 

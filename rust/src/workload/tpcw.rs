@@ -81,7 +81,11 @@ pub fn schema() -> Schema {
             ],
             &["I_ID"],
         )
-        .with_index("I_SUBJECT"),
+        .with_index("I_SUBJECT")
+        // Stock can never go below zero (the bounded-apply check aborts a
+        // violating decrement locally); this is what lets the confluence
+        // pass prove adminRestock's increment coordination-free.
+        .with_nonnegative("I_STOCK"),
         TableSchema::new(
             "ORDERS",
             &[
@@ -279,6 +283,7 @@ pub fn templates() -> Vec<TxnTemplate> {
             &[("u", "UPDATE ITEM SET I_STOCK = I_STOCK + ?q WHERE I_ID = ?iid")],
             1.0,
         )
+        .with_nonneg_param("q")
         .with_body(|ctx, args| ctx.exec("u", args)),
         TxnTemplate::new(
             "adminUpdateItem",
@@ -341,9 +346,22 @@ pub fn templates() -> Vec<TxnTemplate> {
     ]
 }
 
-/// Analyze TPC-W: run Operation Partitioning and apply the paper's
-/// forced-global searches.
+/// Analyze TPC-W with the full pipeline, including the
+/// invariant-confluence pass: the administrative writers (restock,
+/// item update) become coordination-free, then the paper's forced-global
+/// searches apply.
 pub fn analyzed() -> AnalyzedApp {
+    let spec = AppSpec { name: "tpcw".into(), schema: full_schema(), txns: templates() };
+    let mut app = AnalyzedApp::analyze_confluent(spec);
+    app.force_global("getBestSellers");
+    app.force_global("getNewProducts");
+    app
+}
+
+/// The conflict-only classification — exactly the paper's Table 1 row
+/// (10 L / 5 G / 5 C). Kept for the paper pins and the bench's
+/// `--no-confluence` comparison.
+pub fn analyzed_no_confluence() -> AnalyzedApp {
     let spec = AppSpec { name: "tpcw".into(), schema: full_schema(), txns: templates() };
     let mut app = AnalyzedApp::analyze(spec);
     app.force_global("getBestSellers");
@@ -578,14 +596,45 @@ mod tests {
 
     #[test]
     fn classification_matches_paper_table1() {
-        let app = analyzed();
-        let (l, g, c, lg, ro, total) = app.table1_row();
+        let app = analyzed_no_confluence();
+        let (l, g, c, lg, cf, ro, total) = app.table1_row();
         assert_eq!(total, 20, "TPC-W has 20 transactions");
         assert_eq!(l, 10, "10 local (paper Table 1): {:?}", names_by_class(&app));
         assert_eq!(g, 5, "5 global: {:?}", names_by_class(&app));
         assert_eq!(c, 5, "5 commutative: {:?}", names_by_class(&app));
         assert_eq!(lg, 0, "TPC-W uses no double-key scheme");
+        assert_eq!(cf, 0, "conflict-only pipeline never emits Confluent");
         assert_eq!(ro, 13, "13 read-only templates");
+    }
+
+    #[test]
+    fn confluence_widens_the_coordination_free_class() {
+        let app = analyzed();
+        let (l, g, c, lg, cf, ro, total) = app.table1_row();
+        assert_eq!(total, 20);
+        assert_eq!(
+            (l, g, c, lg, cf),
+            (10, 3, 5, 0, 2),
+            "classes: {:?}",
+            names_by_class(&app)
+        );
+        assert_eq!(ro, 13);
+        // Strictly more coordination-free operations than conflict-only.
+        let (l0, _, c0, _, cf0, _, _) = analyzed_no_confluence().table1_row();
+        assert_eq!(cf0, 0);
+        assert!(l + c + cf > l0 + c0, "{} vs {}", l + c + cf, l0 + c0);
+        // The administrative writers are the promoted ones: restock is a
+        // safe delta against NonNegative(I_STOCK); the item update's
+        // assignments stay covered by iid routing and only its readers
+        // (consistent-prefix) made it global before.
+        for name in ["adminRestock", "adminUpdateItem"] {
+            let t = app.spec.txn_index(name).unwrap();
+            assert_eq!(app.classification.classes[t], OpClass::Confluent, "{name}");
+        }
+        // buyConfirm still coordinates: it deletes cart lines and
+        // decrements the NonNegative stock column.
+        let t = app.spec.txn_index("buyConfirm").unwrap();
+        assert_eq!(app.classification.classes[t], OpClass::Global);
     }
 
     fn names_by_class(app: &AnalyzedApp) -> Vec<(String, OpClass)> {
@@ -610,7 +659,7 @@ mod tests {
 
     #[test]
     fn frequencies_match_paper() {
-        let app = analyzed();
+        let app = analyzed_no_confluence();
         let total: f64 = app.spec.txns.iter().map(|t| t.weight).sum();
         let freq = |class: OpClass| -> f64 {
             app.spec
@@ -722,6 +771,11 @@ mod tests {
             assert!(op.txn < 20);
             match app.route(&op, 4) {
                 crate::workload::analyzed::Route::LocalAt(s) => {
+                    assert!(s < 4);
+                    class_counts[0] += 1;
+                }
+                // Confluent ops execute immediately like locals.
+                crate::workload::analyzed::Route::ConfluentAt(s) => {
                     assert!(s < 4);
                     class_counts[0] += 1;
                 }

@@ -8,7 +8,7 @@ use elia::harness::experiments::*;
 fn fig4_shape_elia_dominates_wan() {
     let scale = ExpScale::quick();
     let curves = fig4(Workload::Rubis, 5, &scale);
-    assert_eq!(curves.len(), 3);
+    assert_eq!(curves.len(), 4);
     let max_tput = |label_part: &str| {
         curves
             .iter()
@@ -19,8 +19,13 @@ fn fig4_shape_elia_dominates_wan() {
     };
     let cen = max_tput("centralized");
     let ro = max_tput("read-only");
+    let warp = max_tput("warp");
     let elia = max_tput("elia");
     assert!(ro > cen, "read-only ({ro:.0}) must beat centralized ({cen:.0})");
+    // Warp serves single-partition ops locally, so it clears the
+    // single-funnel baseline even while paying the acyclic chain for
+    // multi-partition commits.
+    assert!(warp > cen, "warp ({warp:.0}) must beat centralized ({cen:.0})");
     // At quick scale (client-limited) elia and read-only race closely on
     // the read-heavy RUBiS mix; the full-scale run in bench_output.txt
     // shows the separation. Smoke: elia must at least match read-only and

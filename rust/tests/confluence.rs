@@ -1,0 +1,228 @@
+//! Soundness of the confluent (coordination-free) commit path.
+//!
+//! The invariant-confluence pass only admits operation shapes whose
+//! captured state updates merge: non-negative counter deltas guarded by
+//! a declared `NonNegative` invariant, and inserts pinned on a declared
+//! `Unique` key. This suite checks the runtime contract those shapes
+//! rely on, end to end over the real storage engine:
+//!
+//! * executing confluent ops at their origin replicas and replaying the
+//!   captured [`StateUpdate`]s at every other replica in ANY
+//!   cross-origin interleaving (per-origin order preserved, as the
+//!   token guarantees) converges every replica to the same
+//!   `content_hash` as a serial token-order reference;
+//! * no declared invariant is ever violated, at the origin or at any
+//!   replica, under any interleaving;
+//! * an op that would break a declared invariant aborts locally with
+//!   [`TxnError::Invariant`] — no coordination, no state change.
+
+use elia::catalog::{Schema, TableSchema, ValueType};
+use elia::db::{Bindings, Db, StateUpdate, TxnError, Value};
+use elia::sqlir::parse_statement;
+use elia::util::qcheck::{check, Config};
+use elia::util::Rng;
+
+const N_SERVERS: usize = 3;
+const N_ITEMS: i64 = 8;
+const SEED_LEVEL: i64 = 5;
+
+fn schema() -> Schema {
+    Schema::new(vec![
+        TableSchema::new(
+            "STOCK",
+            &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int)],
+            &["ITEM"],
+        )
+        .with_nonnegative("LEVEL"),
+        TableSchema::new(
+            "EVENTS",
+            &[("E_ID", ValueType::Int), ("VAL", ValueType::Int)],
+            &["E_ID"],
+        )
+        .with_unique("E_ID"),
+    ])
+}
+
+fn binds(pairs: &[(&str, i64)]) -> Bindings {
+    pairs.iter().map(|(k, v)| (k.to_string(), Value::Int(*v))).collect()
+}
+
+fn seeded_db() -> Db {
+    let db = Db::new(schema());
+    let ins = parse_statement("INSERT INTO STOCK (ITEM, LEVEL) VALUES (?i, ?l)").unwrap();
+    for i in 0..N_ITEMS {
+        db.exec_auto(&ins, &binds(&[("i", i), ("l", SEED_LEVEL)])).unwrap();
+    }
+    db
+}
+
+/// One classifier-admitted confluent operation (plus the rejected
+/// decrement shape, which must abort locally).
+#[derive(Clone, Debug)]
+enum Op {
+    /// `LEVEL = LEVEL + q` with `q >= 0` — safe delta under NonNegative.
+    Restock { item: i64, q: i64 },
+    /// Insert pinned on the declared-unique `E_ID`.
+    Event { id: i64, val: i64 },
+    /// A decrement far past the floor: must abort with `Invariant`.
+    BadRestock { item: i64 },
+}
+
+/// Execute `op` at `db`, returning the captured update on commit.
+fn execute(db: &Db, op: &Op) -> Result<StateUpdate, TxnError> {
+    let (sql, b) = match op {
+        Op::Restock { item, q } => (
+            "UPDATE STOCK SET LEVEL = LEVEL + ?q WHERE ITEM = ?i",
+            binds(&[("q", *q), ("i", *item)]),
+        ),
+        Op::Event { id, val } => (
+            "INSERT INTO EVENTS (E_ID, VAL) VALUES (?id, ?val)",
+            binds(&[("id", *id), ("val", *val)]),
+        ),
+        Op::BadRestock { item } => (
+            "UPDATE STOCK SET LEVEL = LEVEL - ?q WHERE ITEM = ?i",
+            binds(&[("q", 1_000), ("i", *item)]),
+        ),
+    };
+    let stmt = parse_statement(sql).unwrap();
+    let mut txn = db.begin();
+    txn.exec(&stmt, &b)?;
+    let (u, ()) = txn.commit_with(|_| ())?;
+    Ok(u)
+}
+
+/// Every `STOCK.LEVEL` must satisfy the declared NonNegative invariant.
+fn assert_invariant_holds(db: &Db, who: &str) {
+    let q = parse_statement("SELECT LEVEL FROM STOCK WHERE ITEM = ?i").unwrap();
+    for i in 0..N_ITEMS {
+        let v = db.exec_auto(&q, &binds(&[("i", i)])).unwrap().scalar().unwrap().clone();
+        match v {
+            Value::Int(l) => assert!(l >= 0, "{who}: STOCK[{i}].LEVEL = {l} < 0"),
+            other => panic!("{who}: unexpected LEVEL value {other:?}"),
+        }
+    }
+}
+
+/// Merge the remote origins' update queues into one random interleaving
+/// that preserves each origin's internal order — exactly the set of
+/// orders a destination replica can observe across token rotations.
+fn random_interleave(
+    rng: &mut Rng,
+    queues: &[Vec<StateUpdate>],
+    skip: Option<usize>,
+) -> Vec<StateUpdate> {
+    let mut cursors = vec![0usize; queues.len()];
+    let mut out = Vec::new();
+    loop {
+        let live: Vec<usize> = (0..queues.len())
+            .filter(|&o| Some(o) != skip && cursors[o] < queues[o].len())
+            .collect();
+        if live.is_empty() {
+            return out;
+        }
+        let o = *rng.choose(&live);
+        out.push(queues[o][cursors[o]].clone());
+        cursors[o] += 1;
+    }
+}
+
+#[test]
+fn confluent_replay_is_order_independent_and_invariant_safe() {
+    check(
+        Config::default().cases(40).name("confluent-replay-soundness"),
+        |rng| {
+            // Generate a random multi-origin history of admitted ops
+            // (and a few local-abort attempts).
+            let n_ops = rng.range(5, 40);
+            let mut next_event = 0i64;
+            let history: Vec<(usize, Op)> = (0..n_ops)
+                .map(|_| {
+                    let origin = rng.range(0, N_SERVERS);
+                    let op = match rng.range(0, 10) {
+                        0 => Op::BadRestock { item: rng.range(0, N_ITEMS as usize) as i64 },
+                        1..=5 => Op::Restock {
+                            item: rng.range(0, N_ITEMS as usize) as i64,
+                            q: rng.range(0, 4) as i64,
+                        },
+                        _ => {
+                            next_event += 1;
+                            Op::Event { id: next_event, val: rng.range(0, 100) as i64 }
+                        }
+                    };
+                    (origin, op)
+                })
+                .collect();
+
+            // Execute each op at its origin replica, capturing the
+            // committed updates per origin (in commit order).
+            let dbs: Vec<Db> = (0..N_SERVERS).map(|_| seeded_db()).collect();
+            let mut queues: Vec<Vec<StateUpdate>> = vec![Vec::new(); N_SERVERS];
+            for (origin, op) in &history {
+                match execute(&dbs[*origin], op) {
+                    Ok(u) => {
+                        assert!(
+                            !matches!(op, Op::BadRestock { .. }),
+                            "invariant-breaking op committed at origin {origin}"
+                        );
+                        queues[*origin].push(u);
+                    }
+                    Err(e) => {
+                        assert!(
+                            matches!(op, Op::BadRestock { .. }),
+                            "admitted confluent op aborted at origin {origin}: {e}"
+                        );
+                        assert!(
+                            matches!(e, TxnError::Invariant { .. }),
+                            "local abort must be TxnError::Invariant, got {e}"
+                        );
+                    }
+                }
+                assert_invariant_holds(&dbs[*origin], "origin");
+            }
+
+            // Replicate: each destination applies the other origins'
+            // updates in its own random interleaving.
+            for (d, db) in dbs.iter().enumerate() {
+                for u in random_interleave(rng, &queues, Some(d)) {
+                    db.apply_update(&u).unwrap();
+                }
+            }
+
+            // Serial token-order reference: a fresh replica applying
+            // every update in one fixed origin-major order.
+            let reference = seeded_db();
+            for u in queues.iter().flatten() {
+                reference.apply_update(u).unwrap();
+            }
+
+            let want = reference.content_hash();
+            assert_invariant_holds(&reference, "reference");
+            for (s, db) in dbs.iter().enumerate() {
+                assert_invariant_holds(db, "replica");
+                assert_eq!(
+                    db.content_hash(),
+                    want,
+                    "replica {s} diverged from the serial token-order reference"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn invariant_violation_aborts_locally_without_state_change() {
+    let db = seeded_db();
+    let before = db.content_hash();
+    let err = execute(&db, &Op::BadRestock { item: 2 }).unwrap_err();
+    match err {
+        TxnError::Invariant { ref table, ref column, ref value } => {
+            assert_eq!(table, "STOCK");
+            assert_eq!(column, "LEVEL");
+            assert!(value.starts_with('-'), "reported post-image must be negative, got {value}");
+        }
+        other => panic!("expected TxnError::Invariant, got {other}"),
+    }
+    assert!(!err.is_retryable(), "an invariant abort must not be retried");
+    assert_eq!(db.content_hash(), before, "aborted op must leave no trace");
+    assert_invariant_holds(&db, "after-abort");
+}
