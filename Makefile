@@ -1,12 +1,12 @@
 # Developer entry points. `make check` is the pre-PR gate (see ROADMAP.md).
 
-.PHONY: check build test test-par test-analysis test-crash clippy doc bench bench-sim bench-table1 artifacts
+.PHONY: check build test test-par test-analysis test-crash test-net clippy doc bench bench-sim bench-table1 bench-live artifacts
 
 # Pre-PR gate: release build + tests (incl. the parallel-determinism
-# ladder, the analysis/confluence suites under two lock-shard settings
-# and the crash-recovery seed matrix) + lint + the rustdoc gate, all
-# from the rust crate.
-check: build test-par test-analysis test-crash clippy doc
+# ladder, the analysis/confluence suites under two lock-shard settings,
+# the crash-recovery seed matrix and the networked-belt suites) + lint
+# + the rustdoc gate, all from the rust crate.
+check: build test-par test-analysis test-crash test-net clippy doc
 
 build:
 	cd rust && cargo build --release
@@ -54,6 +54,17 @@ test-crash:
 	cd rust && ELIA_CRASH_SEED=1 cargo test -q --release --test crash_recovery
 	cd rust && ELIA_CRASH_SEED=2 cargo test -q --release --test crash_recovery
 
+# Served-system suites: frame-codec robustness properties (net_proto),
+# the wire-level serializability/retry suite and ring fault injection
+# over the deterministic loopback transport, and the real-TCP smoke
+# test on 127.0.0.1 ephemeral ports. The loopback suites drive the real
+# storage engine through handler threads, so both lock-shard settings
+# run, mirroring test-analysis.
+test-net:
+	cd rust && ELIA_LOCK_SHARDS=1 cargo test -q --test net_proto --test net_serializability --test net_belt_fault
+	cd rust && ELIA_LOCK_SHARDS=32 cargo test -q --test net_proto --test net_serializability --test net_belt_fault
+	cd rust && cargo test -q --test net_tcp
+
 clippy:
 	cd rust && cargo clippy -- -D warnings
 
@@ -78,6 +89,12 @@ bench-sim:
 # counts for both workloads; writes BENCH_table1.json.
 bench-table1:
 	cd rust && cargo bench --bench table1_classification
+
+# Live served-cluster counterpart of fig3: a real loopback cluster
+# (framed wire protocol, belt token as ring messages) under real client
+# threads; writes BENCH_live.json. CI passes --quick via BENCHFLAGS.
+bench-live:
+	cd rust && cargo bench --bench fig3_live -- $(BENCHFLAGS)
 
 # AOT-compile the Pallas partition-cost model to HLO text for the
 # (feature-gated) PJRT runtime. Needs jax; see python/compile/aot.py.

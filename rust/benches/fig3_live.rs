@@ -1,0 +1,89 @@
+//! Live counterpart of Figure 3 — a *served* cluster instead of a model.
+//!
+//! The `fig3` experiment models throughput from measured per-class
+//! service times. This bench stands up the real thing: a loopback
+//! [`Cluster`](elia::net::Cluster) of 3 servers (framed wire protocol,
+//! belt token as ring messages, per-server engines) driven by real
+//! client threads through [`NetClient`](elia::net::NetClient), and
+//! reports wall-clock throughput, client-observed latency, the
+//! local/global/confluent mix the servers actually saw, and the
+//! replica-convergence digest at shutdown.
+//!
+//! Results go to stdout and `BENCH_live.json`. Pass `--quick` for a
+//! shorter run (CI uses it).
+
+use elia::harness::experiments::{fig3_live, LivePoint};
+
+fn json_point(p: &LivePoint) -> String {
+    let hashes: Vec<String> = p.replica_hashes.iter().map(|h| format!("\"{h:016x}\"")).collect();
+    format!(
+        concat!(
+            "{{\"workload\": \"{}\", \"servers\": {}, \"clients\": {}, \"ops\": {}, ",
+            "\"errors\": {}, \"elapsed_s\": {:.4}, \"throughput\": {:.1}, ",
+            "\"mean_ms\": {:.4}, \"p99_ms\": {:.4}, \"ops_local\": {}, ",
+            "\"ops_global\": {}, \"ops_confluent\": {}, \"client_retries\": {}, ",
+            "\"replica_hashes\": [{}], \"converged\": {}}}"
+        ),
+        p.workload,
+        p.servers,
+        p.clients,
+        p.ops,
+        p.errors,
+        p.elapsed_s,
+        p.throughput,
+        p.mean_ms,
+        p.p99_ms,
+        p.ops_local,
+        p.ops_global,
+        p.ops_confluent,
+        p.client_retries,
+        hashes.join(", "),
+        p.converged
+    )
+}
+
+/// Write the measured points as JSON (no serde offline: every field is
+/// numeric or a plain identifier, nothing needs escaping).
+fn write_json(path: &str, points: &[LivePoint]) {
+    let mut s = String::from("{\n  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let sep = if i + 1 < points.len() { "," } else { "" };
+        s.push_str(&format!("    {}{sep}\n", json_point(p)));
+    }
+    s.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(path, s) {
+        eprintln!("warning: could not write {path}: {e}");
+    } else {
+        println!("[wrote {path}]");
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (clients_axis, ops): (&[usize], u64) =
+        if quick { (&[2, 4], 150) } else { (&[1, 2, 4, 8], 400) };
+    let t0 = std::time::Instant::now();
+    println!("\n=== Figure 3 (live) — served loopback cluster, TPC-W, 3 servers ===");
+    let mut points = Vec::new();
+    for &clients in clients_axis {
+        use elia::harness::experiments::Workload;
+        let p = fig3_live(Workload::Tpcw, 3, clients, ops);
+        assert!(p.converged, "replicas diverged: {:x?}", p.replica_hashes);
+        println!(
+            "clients {:>2}: {:>7.0} ops/s  mean {:.2}ms  p99 {:.2}ms  \
+             (L {} / G {} / CF {}; {} errors, {} retries, converged)",
+            p.clients,
+            p.throughput,
+            p.mean_ms,
+            p.p99_ms,
+            p.ops_local,
+            p.ops_global,
+            p.ops_confluent,
+            p.errors,
+            p.client_retries,
+        );
+        points.push(p);
+    }
+    write_json("BENCH_live.json", &points);
+    println!("[fig3_live took {:.2}s]", t0.elapsed().as_secs_f64());
+}

@@ -18,9 +18,17 @@
 //!   at each stop (lines 10-15), with optional injected per-hop latency
 //!   to emulate WAN deployments.
 
+//!
+//! The engine-facing half of a server — execute-with-retries, the
+//! pending queue, the confluent outbox and the per-stop token protocol —
+//! lives in [`ServerCore`], shared verbatim between this in-process
+//! runtime (one token thread walks all cores) and the networked runtime
+//! (`crate::net`: one process/thread per core, the token arrives as a
+//! framed message).
+
 use crate::db::{Db, StateUpdate, TxnError};
 use crate::workload::analyzed::{AnalyzedApp, Route};
-use crate::workload::spec::{Operation, Reply, TxnCtx};
+use crate::workload::spec::{Operation, PreparedStmts, Reply, TxnCtx, TxnTemplate};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -66,14 +74,251 @@ struct RoundShared {
     updates: Mutex<Vec<StateUpdate>>,
 }
 
-struct ServerNode {
+/// One server's engine-side state: the embedded DBMS plus everything
+/// Algorithm 2 keeps per server — the pending queue of parked globals,
+/// the in-flight round, and the confluent outbox. [`Deployment`] owns
+/// one per in-process server; the networked runtime (`crate::net`) owns
+/// exactly one per `elia serve` server and drives the same methods from
+/// its connection-handler and belt threads.
+pub struct ServerCore {
     db: Db,
     pending: Mutex<Vec<Arc<Parked>>>,
     round: Mutex<Option<Arc<RoundShared>>>,
     /// Commit-ordered updates of confluent operations executed here
-    /// since the token last stopped by; the token thread drains this at
-    /// every stop and appends the deltas for replication.
+    /// since the token last stopped by; [`ServerCore::token_stop`] drains
+    /// this at every stop and appends the deltas for replication.
     outbox: Mutex<Vec<StateUpdate>>,
+    max_retries: u32,
+    /// Lock-abort retries burned by this server's handling threads.
+    pub retries: AtomicU64,
+}
+
+impl ServerCore {
+    /// Wrap an engine instance (already seeded) for conveyor duty.
+    pub fn new(db: Db, max_retries: u32) -> ServerCore {
+        ServerCore {
+            db,
+            pending: Mutex::new(Vec::new()),
+            round: Mutex::new(None),
+            outbox: Mutex::new(Vec::new()),
+            max_retries,
+            retries: AtomicU64::new(0),
+        }
+    }
+
+    /// The server's DBMS (tests: seed checks, hashes).
+    pub fn db(&self) -> &Db {
+        &self.db
+    }
+
+    /// Run one operation body to commit with wait-die retries. `sink`,
+    /// when present, receives the commit's [`StateUpdate`] *before lock
+    /// release* (the `commit_with` hook), so the sink order equals the
+    /// DBMS serialization order.
+    fn run(
+        &self,
+        tpl: &TxnTemplate,
+        stmts: &PreparedStmts,
+        args: &crate::db::Bindings,
+        sink: Option<&dyn Fn(&StateUpdate)>,
+    ) -> Result<Reply, TxnError> {
+        let body = tpl.body.as_ref().expect("template needs a body for execution");
+        let mut attempts = 0;
+        loop {
+            let mut handle = self.db.begin();
+            let mut ctx = TxnCtx::new(&mut handle, stmts);
+            match body(&mut ctx, args) {
+                Ok(reply) => {
+                    let committed = match sink {
+                        Some(sink) => handle.commit_with(sink).map(|_| ()),
+                        None => handle.commit().map(|_| ()),
+                    };
+                    match committed {
+                        Ok(()) => return Ok(reply),
+                        Err(e) if e.is_retryable() && attempts < self.max_retries => {
+                            attempts += 1;
+                            self.retries.fetch_add(1, Ordering::Relaxed);
+                            std::thread::yield_now();
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                Err(e) if e.is_retryable() && attempts < self.max_retries => {
+                    handle.abort();
+                    attempts += 1;
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::yield_now();
+                }
+                Err(e) => {
+                    handle.abort();
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Execute a local/commutative operation immediately (with wait-die
+    /// retries), like Algorithm 2 lines 2-4.
+    pub fn execute_local(
+        &self,
+        tpl: &TxnTemplate,
+        stmts: &PreparedStmts,
+        op: &Operation,
+    ) -> Result<Reply, TxnError> {
+        self.run(tpl, stmts, &op.args, None)
+    }
+
+    /// Execute an invariant-confluent operation immediately — no token
+    /// wait — capturing its update in commit order into the server's
+    /// outbox for replication on the next token stop. A declared
+    /// invariant that would break aborts locally ([`TxnError::Invariant`]
+    /// from the engine's bounded-apply check) instead of coordinating.
+    pub fn execute_confluent(
+        &self,
+        tpl: &TxnTemplate,
+        stmts: &PreparedStmts,
+        op: &Operation,
+    ) -> Result<Reply, TxnError> {
+        self.run(
+            tpl,
+            stmts,
+            &op.args,
+            Some(&|u: &StateUpdate| {
+                // Before lock release: outbox order equals the DBMS
+                // serialization order, like the round queue.
+                self.outbox.lock().unwrap().push(u.clone());
+            }),
+        )
+    }
+
+    /// Park a global operation until the token arrives, then execute it
+    /// on this (handling) thread, appending the update in commit order
+    /// to the active round's U queue.
+    pub fn execute_global(
+        &self,
+        tpl: &TxnTemplate,
+        stmts: &PreparedStmts,
+        op: Operation,
+    ) -> Result<Reply, TxnError> {
+        let parked = Arc::new(Parked { op, go: Mutex::new(false), cv: Condvar::new() });
+        self.pending.lock().unwrap().push(Arc::clone(&parked));
+
+        // Wait for the token holder's wake-up (the initially-locked lock
+        // of the paper's §5).
+        {
+            let mut go = parked.go.lock().unwrap();
+            while !*go {
+                go = parked.cv.wait(go).unwrap();
+            }
+        }
+
+        let round = self
+            .round
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("round must be active when a parked op runs");
+        let result = self.run(
+            tpl,
+            stmts,
+            &parked.op.args,
+            Some(&|u: &StateUpdate| {
+                round.updates.lock().unwrap().push(u.clone());
+            }),
+        );
+
+        // Signal the token holder (the semaphore of §5).
+        {
+            let mut remaining = round.remaining.lock().unwrap();
+            *remaining -= 1;
+            if *remaining == 0 {
+                round.cv.notify_all();
+            }
+        }
+        result
+    }
+
+    /// One token stop at this server (Algorithm 2 lines 10-22): apply
+    /// remote updates in token order, stage confluent deltas, snapshot
+    /// the pending queue, run the round (waking the parked handling
+    /// threads and waiting on the countdown), and append the round's
+    /// updates in commit order. Returns whether the stop found any work.
+    pub fn token_stop(&self, p: usize, token: &mut Token) -> bool {
+        let mut any_work = false;
+        // Apply remote updates in token order (lines 11-15).
+        let updates = token.on_receive(p);
+        for u in &updates {
+            self.db.apply_update(u).expect("apply_update");
+        }
+        any_work |= !updates.is_empty();
+
+        // Collect deltas of confluent ops committed here since the last
+        // stop (already executed — just replicate).
+        let staged: Vec<StateUpdate> = {
+            let mut outbox = self.outbox.lock().unwrap();
+            std::mem::take(&mut *outbox)
+        };
+        any_work |= !staged.is_empty();
+        for u in staged {
+            token.append(p, u);
+        }
+
+        // Atomic snapshot of the pending queue (line 16).
+        let snapshot: Vec<Arc<Parked>> = {
+            let mut pending = self.pending.lock().unwrap();
+            std::mem::take(&mut *pending)
+        };
+        if snapshot.is_empty() {
+            return any_work;
+        }
+
+        let round = Arc::new(RoundShared {
+            remaining: Mutex::new(snapshot.len()),
+            cv: Condvar::new(),
+            updates: Mutex::new(Vec::new()),
+        });
+        *self.round.lock().unwrap() = Some(Arc::clone(&round));
+
+        // Wake all handling threads (they execute in parallel).
+        for parked in &snapshot {
+            let mut go = parked.go.lock().unwrap();
+            *go = true;
+            parked.cv.notify_all();
+        }
+        // Wait for the countdown (the paper's semaphore).
+        {
+            let mut remaining = round.remaining.lock().unwrap();
+            while *remaining > 0 {
+                remaining = round.cv.wait(remaining).unwrap();
+            }
+        }
+        *self.round.lock().unwrap() = None;
+
+        // Append updates to the token in commit order.
+        let updates = std::mem::take(&mut *round.updates.lock().unwrap());
+        for u in updates {
+            token.append(p, u);
+        }
+        true
+    }
+
+    /// Flush staged confluent deltas into the token without running a
+    /// round — the shutdown drain.
+    pub fn drain_outbox(&self, p: usize, token: &mut Token) {
+        let staged = std::mem::take(&mut *self.outbox.lock().unwrap());
+        for u in staged {
+            token.append(p, u);
+        }
+    }
+
+    /// Apply this server's outstanding remote updates — the final drain
+    /// rotation at shutdown (convergence checks read the DBs after this).
+    pub fn apply_remote(&self, p: usize, token: &mut Token) {
+        let updates = token.on_receive(p);
+        for u in &updates {
+            self.db.apply_update(u).expect("apply_update");
+        }
+    }
 }
 
 /// A running multi-server Eliá deployment.
@@ -84,7 +329,7 @@ pub struct Deployment {
     /// here, never on the request path).
     stmt_maps: Vec<crate::workload::spec::PreparedStmts>,
     cfg: DeployConfig,
-    servers: Vec<Arc<ServerNode>>,
+    servers: Vec<Arc<ServerCore>>,
     stop: Arc<AtomicBool>,
     token_thread: Mutex<Option<std::thread::JoinHandle<Token>>>,
     pub ops_local: AtomicU64,
@@ -92,7 +337,6 @@ pub struct Deployment {
     /// Invariant-confluent operations: executed immediately like locals,
     /// replicated like globals (delta merged on the next token stop).
     pub ops_confluent: AtomicU64,
-    pub retries: AtomicU64,
 }
 
 impl Deployment {
@@ -103,16 +347,11 @@ impl Deployment {
         cfg: DeployConfig,
         seed_db: impl Fn(&Db),
     ) -> Arc<Self> {
-        let servers: Vec<Arc<ServerNode>> = (0..cfg.n_servers)
+        let servers: Vec<Arc<ServerCore>> = (0..cfg.n_servers)
             .map(|_| {
                 let db = Db::new(app.spec.schema.clone());
                 seed_db(&db);
-                Arc::new(ServerNode {
-                    db,
-                    pending: Mutex::new(Vec::new()),
-                    round: Mutex::new(None),
-                    outbox: Mutex::new(Vec::new()),
-                })
+                Arc::new(ServerCore::new(db, cfg.max_retries))
             })
             .collect();
         let stop = Arc::new(AtomicBool::new(false));
@@ -127,7 +366,6 @@ impl Deployment {
             ops_local: AtomicU64::new(0),
             ops_global: AtomicU64::new(0),
             ops_confluent: AtomicU64::new(0),
-            retries: AtomicU64::new(0),
         });
         let dep2 = Arc::clone(&dep);
         let handle = std::thread::Builder::new()
@@ -144,254 +382,60 @@ impl Deployment {
 
     /// Direct access to a server's DBMS (tests: seed checks, hashes).
     pub fn db(&self, server: usize) -> &Db {
-        &self.servers[server].db
+        self.servers[server].db()
+    }
+
+    /// Lock-abort retries burned across all servers' handling threads.
+    pub fn retries(&self) -> u64 {
+        self.servers.iter().map(|s| s.retries.load(Ordering::Relaxed)).sum()
     }
 
     /// Submit one operation from a client thread and wait for its reply.
     /// This is Eliá's full request path: route, execute or park, reply.
     pub fn submit(&self, op: Operation) -> Result<Reply, TxnError> {
         let n = self.servers.len();
+        let tpl = &self.app.spec.txns[op.txn];
+        let stmts = &self.stmt_maps[op.txn];
         match self.app.route(&op, n) {
             Route::Any => {
                 self.ops_local.fetch_add(1, Ordering::Relaxed);
                 // Commutative: any server; pick by cheap hash for spread.
                 let s = (op.txn + op.args.len()) % n;
-                self.execute_local(s, &op)
+                self.servers[s].execute_local(tpl, stmts, &op)
             }
             Route::LocalAt(s) => {
                 self.ops_local.fetch_add(1, Ordering::Relaxed);
-                self.execute_local(s, &op)
+                self.servers[s].execute_local(tpl, stmts, &op)
             }
             Route::GlobalAt(s) => {
                 self.ops_global.fetch_add(1, Ordering::Relaxed);
-                self.submit_global(s, op)
+                self.servers[s].execute_global(tpl, stmts, op)
             }
             Route::ConfluentAt(s) => {
                 self.ops_confluent.fetch_add(1, Ordering::Relaxed);
-                self.execute_confluent(s, &op)
+                self.servers[s].execute_confluent(tpl, stmts, &op)
             }
         }
-    }
-
-    /// Execute an invariant-confluent operation immediately — no token
-    /// wait — capturing its update in commit order into the server's
-    /// outbox for replication on the next token stop. A declared
-    /// invariant that would break aborts locally ([`TxnError::Invariant`]
-    /// from the engine's bounded-apply check) instead of coordinating.
-    fn execute_confluent(&self, server: usize, op: &Operation) -> Result<Reply, TxnError> {
-        let node = &self.servers[server];
-        let tpl = &self.app.spec.txns[op.txn];
-        let stmts = &self.stmt_maps[op.txn];
-        let body = tpl.body.as_ref().expect("template needs a body for execution");
-        let mut attempts = 0;
-        loop {
-            let mut handle = node.db.begin();
-            let mut ctx = TxnCtx::new(&mut handle, stmts);
-            match body(&mut ctx, &op.args) {
-                Ok(reply) => {
-                    match handle.commit_with(|u| {
-                        // Before lock release: outbox order equals the
-                        // DBMS serialization order, like the round queue.
-                        node.outbox.lock().unwrap().push(u.clone());
-                    }) {
-                        Ok(_) => return Ok(reply),
-                        Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
-                            attempts += 1;
-                            self.retries.fetch_add(1, Ordering::Relaxed);
-                            std::thread::yield_now();
-                        }
-                        Err(e) => return Err(e),
-                    }
-                }
-                Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
-                    handle.abort();
-                    attempts += 1;
-                    self.retries.fetch_add(1, Ordering::Relaxed);
-                    std::thread::yield_now();
-                }
-                Err(e) => {
-                    handle.abort();
-                    return Err(e);
-                }
-            }
-        }
-    }
-
-    /// Execute a local/commutative operation immediately (with wait-die
-    /// retries), like Algorithm 2 lines 2-4.
-    fn execute_local(&self, server: usize, op: &Operation) -> Result<Reply, TxnError> {
-        let node = &self.servers[server];
-        let tpl = &self.app.spec.txns[op.txn];
-        let stmts = &self.stmt_maps[op.txn];
-        let body = tpl.body.as_ref().expect("template needs a body for execution");
-        let mut attempts = 0;
-        loop {
-            let mut handle = node.db.begin();
-            let mut ctx = TxnCtx::new(&mut handle, stmts);
-            match body(&mut ctx, &op.args) {
-                Ok(reply) => match handle.commit() {
-                    Ok(_update) => return Ok(reply),
-                    Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
-                        attempts += 1;
-                        self.retries.fetch_add(1, Ordering::Relaxed);
-                        std::thread::yield_now();
-                    }
-                    Err(e) => return Err(e),
-                },
-                Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
-                    handle.abort();
-                    attempts += 1;
-                    self.retries.fetch_add(1, Ordering::Relaxed);
-                    std::thread::yield_now();
-                }
-                Err(e) => {
-                    handle.abort();
-                    return Err(e);
-                }
-            }
-        }
-    }
-
-    /// Park a global operation until the token arrives, then execute it
-    /// on this (handling) thread, appending the update in commit order.
-    fn submit_global(&self, server: usize, op: Operation) -> Result<Reply, TxnError> {
-        let node = &self.servers[server];
-        let parked = Arc::new(Parked { op, go: Mutex::new(false), cv: Condvar::new() });
-        node.pending.lock().unwrap().push(Arc::clone(&parked));
-
-        // Wait for the token thread's wake-up (the initially-locked lock
-        // of the paper's §5).
-        {
-            let mut go = parked.go.lock().unwrap();
-            while !*go {
-                go = parked.cv.wait(go).unwrap();
-            }
-        }
-
-        // Execute with commit-order tracing into the round's U queue.
-        let round = self.servers[server]
-            .round
-            .lock()
-            .unwrap()
-            .clone()
-            .expect("round must be active when a parked op runs");
-        let tpl = &self.app.spec.txns[parked.op.txn];
-        let stmts = &self.stmt_maps[parked.op.txn];
-        let body = tpl.body.as_ref().expect("template needs a body");
-        let mut attempts = 0;
-        let result = loop {
-            let mut handle = node.db.begin();
-            let mut ctx = TxnCtx::new(&mut handle, stmts);
-            match body(&mut ctx, &parked.op.args) {
-                Ok(reply) => {
-                    match handle.commit_with(|u| {
-                        // Hook runs before lock release: the append order
-                        // equals the DBMS serialization order.
-                        round.updates.lock().unwrap().push(u.clone());
-                    }) {
-                        Ok(_) => break Ok(reply),
-                        Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
-                            attempts += 1;
-                            self.retries.fetch_add(1, Ordering::Relaxed);
-                            std::thread::yield_now();
-                        }
-                        Err(e) => break Err(e),
-                    }
-                }
-                Err(e) if e.is_retryable() && attempts < self.cfg.max_retries => {
-                    handle.abort();
-                    attempts += 1;
-                    self.retries.fetch_add(1, Ordering::Relaxed);
-                    std::thread::yield_now();
-                }
-                Err(e) => {
-                    handle.abort();
-                    break Err(e);
-                }
-            }
-        };
-
-        // Signal the token thread (the semaphore of §5).
-        {
-            let mut remaining = round.remaining.lock().unwrap();
-            *remaining -= 1;
-            if *remaining == 0 {
-                round.cv.notify_all();
-            }
-        }
-        result
     }
 
     /// The token thread: rotate, apply, wake, collect (Algorithm 2 lines
-    /// 10-22).
+    /// 10-22). Each stop is [`ServerCore::token_stop`]; the networked
+    /// runtime runs the same stop per server with the token arriving as
+    /// a framed message instead of a loop index.
     fn token_loop(&self) -> Token {
         let n = self.servers.len();
         let mut token = Token::new(n);
         let mut idle_rounds = 0;
         while !self.stop.load(Ordering::Relaxed) {
             let mut any_work = false;
-            for p in 0..n {
+            for (p, server) in self.servers.iter().enumerate() {
                 if self.stop.load(Ordering::Relaxed) {
                     break;
                 }
                 if !self.cfg.hop_delay.is_zero() {
                     std::thread::sleep(self.cfg.hop_delay);
                 }
-                // Apply remote updates in token order (lines 11-15).
-                let updates = token.on_receive(p);
-                for u in &updates {
-                    self.servers[p].db.apply_update(u).expect("apply_update");
-                }
-                any_work |= !updates.is_empty();
-
-                // Collect deltas of confluent ops committed here since
-                // the last stop (already executed — just replicate).
-                let staged: Vec<StateUpdate> = {
-                    let mut outbox = self.servers[p].outbox.lock().unwrap();
-                    std::mem::take(&mut *outbox)
-                };
-                any_work |= !staged.is_empty();
-                for u in staged {
-                    token.append(p, u);
-                }
-
-                // Atomic snapshot of the pending queue (line 16).
-                let snapshot: Vec<Arc<Parked>> = {
-                    let mut pending = self.servers[p].pending.lock().unwrap();
-                    std::mem::take(&mut *pending)
-                };
-                if snapshot.is_empty() {
-                    continue;
-                }
-                any_work = true;
-
-                let round = Arc::new(RoundShared {
-                    remaining: Mutex::new(snapshot.len()),
-                    cv: Condvar::new(),
-                    updates: Mutex::new(Vec::new()),
-                });
-                *self.servers[p].round.lock().unwrap() = Some(Arc::clone(&round));
-
-                // Wake all handling threads (they execute in parallel).
-                for parked in &snapshot {
-                    let mut go = parked.go.lock().unwrap();
-                    *go = true;
-                    parked.cv.notify_all();
-                }
-                // Wait for the countdown (the paper's semaphore).
-                {
-                    let mut remaining = round.remaining.lock().unwrap();
-                    while *remaining > 0 {
-                        remaining = round.cv.wait(remaining).unwrap();
-                    }
-                }
-                *self.servers[p].round.lock().unwrap() = None;
-
-                // Append updates to the token in commit order.
-                let updates = std::mem::take(&mut *round.updates.lock().unwrap());
-                for u in updates {
-                    token.append(p, u);
-                }
+                any_work |= server.token_stop(p, &mut token);
             }
             token.rotations += 1;
             if !any_work {
@@ -406,17 +450,11 @@ impl Deployment {
         // Drain: flush every outbox, then one final rotation so every
         // server applies outstanding updates (needed for convergence
         // checks at shutdown).
-        for p in 0..n {
-            let staged = std::mem::take(&mut *self.servers[p].outbox.lock().unwrap());
-            for u in staged {
-                token.append(p, u);
-            }
+        for (p, server) in self.servers.iter().enumerate() {
+            server.drain_outbox(p, &mut token);
         }
-        for p in 0..n {
-            let updates = token.on_receive(p);
-            for u in &updates {
-                self.servers[p].db.apply_update(u).expect("apply_update");
-            }
+        for (p, server) in self.servers.iter().enumerate() {
+            server.apply_remote(p, &mut token);
         }
         token
     }

@@ -9,6 +9,6 @@ pub mod deploy;
 pub mod sim;
 pub mod token;
 
-pub use deploy::{DeployConfig, Deployment};
+pub use deploy::{DeployConfig, Deployment, ServerCore};
 pub use sim::{ConveyorConfig, ConveyorReport, ConveyorSim};
 pub use token::{Token, TokenEntry};

@@ -14,7 +14,7 @@ use std::collections::VecDeque;
 
 /// One token entry: the update `u` produced at origin server `q`, with a
 /// global sequence number (the token total order).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TokenEntry {
     pub origin: usize,
     pub seq: u64,
@@ -28,7 +28,7 @@ pub struct TokenEntry {
 /// covers it — in the steady ring this coincides with Algorithm 2's
 /// "remove own entries after one rotation", and it additionally makes
 /// irregular receipt orders (the shutdown drain) safe.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Token {
     entries: VecDeque<TokenEntry>,
     /// Highest entry sequence each server has applied.
@@ -87,6 +87,30 @@ impl Token {
     /// Serialized size for latency modeling.
     pub fn wire_size(&self) -> usize {
         16 + self.entries.iter().map(|e| 8 + e.update.wire_size()).sum::<usize>()
+    }
+
+    /// Iterate the in-flight entries, oldest (lowest `seq`) first — the
+    /// wire encoder (`net::proto`) and the test oracles read these.
+    pub fn entries(&self) -> impl Iterator<Item = &TokenEntry> {
+        self.entries.iter()
+    }
+
+    /// Per-server applied watermarks (highest sequence each ring position
+    /// has applied). Index = server, in ring order.
+    pub fn watermarks(&self) -> &[u64] {
+        &self.applied_up_to
+    }
+
+    /// Rebuild a token from its wire parts — the decode side of the net
+    /// frame codec. Inverse of reading [`Token::entries`],
+    /// [`Token::watermarks`], `appended` and `rotations` off a token.
+    pub fn from_parts(
+        entries: Vec<TokenEntry>,
+        watermarks: Vec<u64>,
+        appended: u64,
+        rotations: u64,
+    ) -> Token {
+        Token { entries: entries.into(), applied_up_to: watermarks, appended, rotations }
     }
 }
 

@@ -337,6 +337,26 @@ impl Db {
         acc
     }
 
+    /// Deterministic hash of one table's committed data — replica
+    /// convergence checks over the *replicated* subset of the schema
+    /// (the tables global/confluent operations write), where the full
+    /// [`Db::content_hash`] would legitimately diverge across servers on
+    /// locally-partitioned tables.
+    pub fn table_hash(&self, table: &str) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let ti = self.schema.table_id(table).expect("unknown table");
+        let t = self.tables[ti].read().unwrap();
+        let mut table_acc: u64 = 0;
+        for (k, row) in &t.rows {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            ti.hash(&mut h);
+            k.hash(&mut h);
+            row.hash(&mut h);
+            table_acc ^= h.finish();
+        }
+        table_acc
+    }
+
     /// Number of committed rows in a table (tests / examples).
     pub fn row_count(&self, table: &str) -> usize {
         let ti = self.schema.table_id(table).expect("unknown table");

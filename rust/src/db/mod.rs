@@ -47,7 +47,7 @@ pub use engine::{Db, TxnHandle};
 pub use lockmgr::{LockManager, LockMode};
 pub use prepared::{BindSlots, Prepared};
 pub use result::{ResultSet, RowRef};
-pub use txn::{IsolationLevel, TxnError};
+pub use txn::{IsolationLevel, Retryable, TxnError};
 pub use update::{StateUpdate, WriteRecord};
 pub use value::{value_clone_count, Bindings, Key, Row, Value};
 pub use wal::{DurabilityConfig, RecoveryReport, SyncPolicy, Wal};

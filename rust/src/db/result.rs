@@ -76,6 +76,17 @@ impl ResultSet {
         ResultSet { repr: Repr::default(), affected: n }
     }
 
+    /// Build a result from owned rows — the wire-decode path
+    /// (`net::proto`): a reply decoded off a socket owns its values and
+    /// carries the identity projection. The encode side never uses this;
+    /// it iterates [`RowRef`]s and clones nothing.
+    pub fn from_owned_rows(rows: Vec<Row>, affected: usize) -> Self {
+        ResultSet {
+            repr: Repr::Rows { rows: rows.into_iter().map(Arc::new).collect(), cols: None },
+            affected,
+        }
+    }
+
     /// Number of result rows. Costs nothing — emptiness/length checks
     /// never touch values.
     pub fn len(&self) -> usize {

@@ -93,11 +93,42 @@ impl From<LockError> for TxnError {
     }
 }
 
+/// Coarse retryability classification of a [`TxnError`], carried over
+/// the wire (`net::proto`) so remote client stubs can auto-retry without
+/// matching on every variant. [`Deployment::submit`] callers get the
+/// same signal via [`TxnError::classify`].
+///
+/// [`Deployment::submit`]: crate::conveyor::Deployment::submit
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Retryable {
+    /// A concurrency victim (wait-die abort, lock timeout): retrying the
+    /// whole transaction may succeed — the Conveyor Belt servers and the
+    /// net client stub do, with capped backoff.
+    Transient,
+    /// A semantic or environmental failure (SQL error, duplicate key,
+    /// violated invariant, poisoned WAL): retrying cannot succeed and
+    /// must surface to the caller.
+    Fatal,
+}
+
 impl TxnError {
     /// True when retrying the transaction may succeed (concurrency
     /// victim), false for semantic errors.
     pub fn is_retryable(&self) -> bool {
         matches!(self, TxnError::Lock(_))
+    }
+
+    /// Classify this error for retry loops: [`Retryable::Transient`] iff
+    /// [`TxnError::is_retryable`], [`Retryable::Fatal`] otherwise
+    /// ([`TxnError::Invariant`], [`TxnError::Sql`],
+    /// [`TxnError::DuplicateKey`], [`TxnError::Durability`],
+    /// [`TxnError::Finished`]).
+    pub fn classify(&self) -> Retryable {
+        if self.is_retryable() {
+            Retryable::Transient
+        } else {
+            Retryable::Fatal
+        }
     }
 }
 
@@ -177,5 +208,21 @@ mod tests {
         use crate::db::lockmgr::LockError;
         assert!(TxnError::Lock(LockError::Aborted { txn: 1, target: "t".into() }).is_retryable());
         assert!(!TxnError::Sql("boom".into()).is_retryable());
+    }
+
+    #[test]
+    fn classification_matches_retryability() {
+        use crate::db::lockmgr::LockError;
+        let lock = TxnError::Lock(LockError::Aborted { txn: 1, target: "t".into() });
+        assert_eq!(lock.classify(), Retryable::Transient);
+        for fatal in [
+            TxnError::Sql("boom".into()),
+            TxnError::DuplicateKey { table: "T".into(), key: "1".into() },
+            TxnError::Finished,
+            TxnError::Durability("disk".into()),
+            TxnError::Invariant { table: "T".into(), column: "C".into(), value: "-1".into() },
+        ] {
+            assert_eq!(fatal.classify(), Retryable::Fatal, "{fatal:?}");
+        }
     }
 }

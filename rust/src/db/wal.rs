@@ -59,7 +59,7 @@ fn io_err(e: std::io::Error) -> TxnError {
 /// FNV-1a over the record payload. Not cryptographic — it guards
 /// against torn writes and bit rot, not adversaries — but it is
 /// dependency-free and byte-order independent.
-fn fnv1a(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= u64::from(b);
@@ -399,11 +399,11 @@ const VAL_INT: u8 = 1;
 const VAL_FLOAT: u8 = 2;
 const VAL_STR: u8 = 3;
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_value(buf: &mut Vec<u8>, v: &Value) {
+pub(crate) fn put_value(buf: &mut Vec<u8>, v: &Value) {
     match v {
         Value::Null => buf.push(VAL_NULL),
         Value::Int(i) => {
@@ -429,7 +429,7 @@ fn put_values(buf: &mut Vec<u8>, vs: &[Value]) {
     }
 }
 
-fn encode_update(buf: &mut Vec<u8>, u: &StateUpdate) {
+pub(crate) fn encode_update(buf: &mut Vec<u8>, u: &StateUpdate) {
     put_u32(buf, u.records.len() as u32);
     for rec in &u.records {
         match rec {
@@ -467,13 +467,44 @@ fn encode_update(buf: &mut Vec<u8>, u: &StateUpdate) {
     }
 }
 
-struct Reader<'a> {
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+    /// A cursor over `buf` starting at offset 0 (the net frame codec
+    /// reuses these primitives; inside this module the struct literal is
+    /// used directly).
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A u32-length-prefixed UTF-8 string (the net codec's string form;
+    /// WAL payloads encode strings only inside [`Value`]s).
+    pub(crate) fn string(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let s = std::str::from_utf8(self.take(n)?)
+            .map_err(|_| "invalid utf-8 in string".to_string())?;
+        Ok(s.to_string())
+    }
+
+    /// Error unless the cursor consumed the whole buffer.
+    pub(crate) fn done(&self) -> Result<(), String> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after message", self.buf.len() - self.pos))
+        }
+    }
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
         if self.buf.len() - self.pos < n {
             return Err("payload ends mid-field".into());
         }
@@ -482,15 +513,15 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, String> {
+    pub(crate) fn u8(&mut self) -> Result<u8, String> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32, String> {
+    pub(crate) fn u32(&mut self) -> Result<u32, String> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn value(&mut self) -> Result<Value, String> {
+    pub(crate) fn value(&mut self) -> Result<Value, String> {
         match self.u8()? {
             VAL_NULL => Ok(Value::Null),
             VAL_INT => Ok(Value::Int(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))),
@@ -509,7 +540,7 @@ impl<'a> Reader<'a> {
         }
     }
 
-    fn values(&mut self) -> Result<Vec<Value>, String> {
+    pub(crate) fn values(&mut self) -> Result<Vec<Value>, String> {
         let n = self.u32()? as usize;
         // Cap the pre-allocation: `n` comes from disk.
         let mut out = Vec::with_capacity(n.min(1024));
@@ -520,7 +551,7 @@ impl<'a> Reader<'a> {
     }
 }
 
-fn decode_update(payload: &[u8]) -> Result<StateUpdate, String> {
+pub(crate) fn decode_update(payload: &[u8]) -> Result<StateUpdate, String> {
     let mut r = Reader { buf: payload, pos: 0 };
     let n = r.u32()? as usize;
     let mut update = StateUpdate::new();

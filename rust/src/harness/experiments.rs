@@ -79,6 +79,16 @@ impl Workload {
             ),
         }
     }
+
+    /// Seed one server's database at the generators' default scale — the
+    /// live served runs ([`fig3_live`], `elia serve`); the simulators
+    /// seed through their own hooks.
+    pub fn seed_db(&self, db: &crate::db::Db) {
+        match self {
+            Workload::Tpcw => tpcw::seed(db, tpcw::TpcwScale::default()),
+            Workload::Rubis => rubis::seed(db, rubis::RubisScale::default()),
+        }
+    }
 }
 
 /// Global experiment scale knobs.
@@ -495,6 +505,183 @@ pub fn table1_with(confluence: bool) -> Vec<Table1Row> {
             )
         })
         .collect()
+}
+
+/// Names of the tables on which every replica must converge: tables
+/// written *only* by always-replicated operation classes (global /
+/// confluent), whose state updates ride the token to every server in
+/// one total order. A table also written by local, commutative, or
+/// local-global templates legitimately diverges — those writes stay at
+/// the routed server (a local/global template replicates only on its
+/// global paths), e.g. a cart table with local adds and a global
+/// order-time clear. Live convergence checks hash only the converging
+/// subset, via [`Db::table_hash`](crate::db::Db::table_hash).
+pub fn replicated_tables(app: &AnalyzedApp) -> Vec<String> {
+    use crate::analysis::OpClass;
+    let mut replicated: Vec<usize> = Vec::new();
+    let mut local_written: Vec<usize> = Vec::new();
+    for (t, rw) in app.rwsets.iter().enumerate() {
+        let dest = match app.class(t) {
+            OpClass::Global | OpClass::Confluent => &mut replicated,
+            _ => &mut local_written,
+        };
+        for w in &rw.writes {
+            for a in &w.attrs {
+                if !dest.contains(&a.table) {
+                    dest.push(a.table);
+                }
+            }
+        }
+    }
+    replicated.retain(|ti| !local_written.contains(ti));
+    replicated.sort_unstable();
+    replicated.iter().map(|&ti| app.spec.schema.table(ti).name.clone()).collect()
+}
+
+/// Fold one server's replicated-table hashes into a single digest
+/// (compare across servers for convergence).
+pub fn replica_hash(db: &crate::db::Db, tables: &[String]) -> u64 {
+    tables
+        .iter()
+        .fold(0xcbf29ce484222325u64, |acc, t| acc.wrapping_mul(0x100000001b3) ^ db.table_hash(t))
+}
+
+/// One live measurement point: a real served cluster (framed wire
+/// protocol, belt token as ring messages) driven by real client threads,
+/// as opposed to the modeled [`fig3`] points. Written to
+/// `BENCH_live.json` by the `fig3_live` bench.
+#[derive(Debug, Clone)]
+pub struct LivePoint {
+    /// Workload name.
+    pub workload: String,
+    /// Cluster size.
+    pub servers: usize,
+    /// Concurrent client threads.
+    pub clients: usize,
+    /// Operations completed successfully.
+    pub ops: u64,
+    /// Operations rejected with semantic errors (generated-id
+    /// collisions etc. — benign, matching the simulators' tolerance).
+    pub errors: u64,
+    /// Wall-clock duration of the client phase.
+    pub elapsed_s: f64,
+    /// Completed operations per wall-clock second.
+    pub throughput: f64,
+    /// Mean client-observed latency (ms).
+    pub mean_ms: f64,
+    /// 99th-percentile client-observed latency (ms).
+    pub p99_ms: f64,
+    /// Operations the servers classified local/commutative.
+    pub ops_local: u64,
+    /// Operations that parked for the token.
+    pub ops_global: u64,
+    /// Invariant-confluent operations.
+    pub ops_confluent: u64,
+    /// Retryable server errors absorbed by the client stubs.
+    pub client_retries: u64,
+    /// Per-server digest over the replicated tables after shutdown.
+    pub replica_hashes: Vec<u64>,
+    /// True when every server's digest matches.
+    pub converged: bool,
+}
+
+/// Run `clients` real client threads against a served loopback cluster
+/// of `n_servers` and measure wall-clock throughput/latency — the live
+/// counterpart of one [`fig3`] point, with a replica-convergence check
+/// at shutdown.
+pub fn fig3_live(
+    workload: Workload,
+    n_servers: usize,
+    clients: usize,
+    ops_per_client: u64,
+) -> LivePoint {
+    use crate::net::{ClientConfig, Cluster, Loopback, NetClient, NetError, ServeConfig, Transport};
+    use crate::util::Summary;
+    use std::sync::Arc;
+
+    let app = Arc::new(workload.analyzed());
+    let transport: Arc<dyn Transport> = Arc::new(Loopback::new());
+    let cluster = Cluster::start(
+        Arc::clone(&app),
+        ServeConfig::loopback(n_servers),
+        Arc::clone(&transport),
+        |db| workload.seed_db(db),
+    )
+    .expect("cluster start");
+    let addrs = cluster.client_addrs().to_vec();
+
+    let start = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for g in 0..clients {
+        let app = Arc::clone(&app);
+        let transport = Arc::clone(&transport);
+        let addrs = addrs.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client =
+                NetClient::connect(Arc::clone(&app), transport, addrs, ClientConfig::default())
+                    .expect("client connect");
+            let mut generator = workload.generator_for(&app, n_servers, g);
+            let mut rng = crate::util::Rng::stream(0xF16, g as u64);
+            let mut lat = Summary::new();
+            let (mut ops, mut errors) = (0u64, 0u64);
+            for _ in 0..ops_per_client {
+                let op = generator.next_op(&mut rng, g % n_servers, n_servers);
+                let t0 = std::time::Instant::now();
+                match client.submit(&op) {
+                    Ok(_) => {
+                        ops += 1;
+                        lat.add(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    // Benign semantic errors, same tolerance as the
+                    // simulators with real execution.
+                    Err(NetError::Server(_)) => errors += 1,
+                    Err(NetError::Transport(e)) => panic!("transport failure: {e}"),
+                }
+            }
+            (ops, errors, lat, client.retries)
+        }));
+    }
+    let mut lat = Summary::new();
+    let (mut ops, mut errors, mut client_retries) = (0u64, 0u64, 0u64);
+    for h in handles {
+        let (o, e, l, r) = h.join().expect("client thread");
+        ops += o;
+        errors += e;
+        lat.merge(&l);
+        client_retries += r;
+    }
+    let elapsed_s = start.elapsed().as_secs_f64();
+    cluster.shutdown();
+
+    let repl = replicated_tables(&app);
+    let replica_hashes: Vec<u64> =
+        (0..n_servers).map(|s| replica_hash(cluster.db(s), &repl)).collect();
+    let converged = replica_hashes.windows(2).all(|w| w[0] == w[1]);
+    use std::sync::atomic::Ordering;
+    let (mut ops_local, mut ops_global, mut ops_confluent) = (0u64, 0u64, 0u64);
+    for s in 0..n_servers {
+        let node = cluster.node(s);
+        ops_local += node.ops_local.load(Ordering::Relaxed);
+        ops_global += node.ops_global.load(Ordering::Relaxed);
+        ops_confluent += node.ops_confluent.load(Ordering::Relaxed);
+    }
+    LivePoint {
+        workload: workload.name().to_string(),
+        servers: n_servers,
+        clients,
+        ops,
+        errors,
+        elapsed_s,
+        throughput: if elapsed_s > 0.0 { ops as f64 / elapsed_s } else { 0.0 },
+        mean_ms: lat.mean(),
+        p99_ms: lat.p99(),
+        ops_local,
+        ops_global,
+        ops_confluent,
+        client_retries,
+        replica_hashes,
+        converged,
+    }
 }
 
 #[cfg(test)]

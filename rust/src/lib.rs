@@ -15,6 +15,7 @@ pub mod catalog;
 pub mod cluster;
 pub mod db;
 pub mod harness;
+pub mod net;
 pub mod runtime;
 pub mod simnet;
 pub mod sqlir;

@@ -2,14 +2,19 @@
 //!
 //! ```text
 //! elia analyze  --workload tpcw|rubis       static analysis report
-//! elia serve    --workload tpcw --servers 4 real-threads deployment demo
+//! elia serve    --workload tpcw --servers 3 [--port 7400] [--wal DIR]
+//!                                           run a served cluster (TCP)
+//! elia client   --workload tpcw --servers 3 [--port 7400] [--clients 4]
+//!                                           [--ops 200] drive a cluster
 //! elia bench    --exp fig3|fig4|fig5|fig6|table1|table3 [--quick]
 //! elia doctor                               check PJRT + artifact health
 //! ```
 
 use elia::harness::experiments::{self, ExpScale, Workload};
 use elia::harness::report;
+use elia::net::{ClientConfig, Cluster, NetClient, NetError, ServeConfig, Tcp, Transport};
 use elia::util::cli::Args;
+use std::sync::Arc;
 
 fn workload_of(args: &Args) -> Workload {
     match args.get_or("workload", "tpcw") {
@@ -86,6 +91,84 @@ fn main() {
                 other => eprintln!("unknown experiment {other}"),
             }
         }
+        Some("serve") => {
+            let w = workload_of(&args);
+            let n: usize = args.get_parse("servers", 3);
+            let port: u16 = args.get_parse("port", 7400);
+            let mut cfg = ServeConfig::tcp(n, port);
+            if let Some(dir) = args.get("wal") {
+                cfg.wal_dir = Some(std::path::PathBuf::from(dir));
+            }
+            let app = Arc::new(w.analyzed());
+            let transport: Arc<dyn Transport> = Arc::new(Tcp);
+            let cluster = match Cluster::start(app, cfg, transport, |db| w.seed_db(db)) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("serve failed: {e}");
+                    std::process::exit(1);
+                }
+            };
+            println!("serving {} on {} servers:", w.name(), n);
+            for (p, addr) in cluster.client_addrs().iter().enumerate() {
+                println!("  server {p}: {addr}");
+            }
+            println!("(ctrl-c to stop)");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Some("client") => {
+            let w = workload_of(&args);
+            let n: usize = args.get_parse("servers", 3);
+            let port: u16 = args.get_parse("port", 7400);
+            let clients: usize = args.get_parse("clients", 4);
+            let ops: u64 = args.get_parse("ops", 200);
+            let app = Arc::new(w.analyzed());
+            let addrs: Vec<String> =
+                (0..n).map(|p| format!("127.0.0.1:{}", port + 2 * p as u16)).collect();
+            let start = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for g in 0..clients {
+                let app = Arc::clone(&app);
+                let addrs = addrs.clone();
+                handles.push(std::thread::spawn(move || {
+                    let transport: Arc<dyn Transport> = Arc::new(Tcp);
+                    let mut client =
+                        NetClient::connect(Arc::clone(&app), transport, addrs, ClientConfig::default())
+                            .unwrap_or_else(|e| {
+                                eprintln!("connect failed: {e}");
+                                std::process::exit(1);
+                            });
+                    let mut generator = w.generator_for(&app, n, g);
+                    let mut rng = elia::util::Rng::stream(0xF16, g as u64);
+                    let (mut ok, mut errs) = (0u64, 0u64);
+                    for _ in 0..ops {
+                        let op = generator.next_op(&mut rng, g % n, n);
+                        match client.submit(&op) {
+                            Ok(_) => ok += 1,
+                            Err(NetError::Server(_)) => errs += 1,
+                            Err(NetError::Transport(e)) => {
+                                eprintln!("transport failure: {e}");
+                                std::process::exit(1);
+                            }
+                        }
+                    }
+                    (ok, errs, client.retries)
+                }));
+            }
+            let (mut ok, mut errs, mut retries) = (0u64, 0u64, 0u64);
+            for h in handles {
+                let (o, e, r) = h.join().expect("client thread");
+                ok += o;
+                errs += e;
+                retries += r;
+            }
+            let secs = start.elapsed().as_secs_f64();
+            println!(
+                "{ok} ops in {secs:.2}s ({:.0} ops/s), {errs} semantic errors, {retries} retries",
+                ok as f64 / secs.max(1e-9)
+            );
+        }
         Some("doctor") => {
             match elia::runtime::platform() {
                 Ok(p) => println!("PJRT CPU client: ok ({p})"),
@@ -98,7 +181,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: elia <analyze|bench|doctor> [--workload tpcw|rubis] [--exp fig3|...] [--quick] [--no-confluence]"
+                "usage: elia <analyze|serve|client|bench|doctor> [--workload tpcw|rubis] [--servers N] [--port P] [--exp fig3|...] [--quick] [--no-confluence]"
             );
             eprintln!("examples and bench binaries cover the full evaluation; see README.md");
         }

@@ -1,0 +1,198 @@
+//! The client stub: routes operations exactly like
+//! [`Deployment::submit`](crate::conveyor::Deployment::submit) and
+//! speaks the request/reply half of the wire protocol.
+//!
+//! Routing parity matters: the served cluster rejects misrouted
+//! operations instead of forwarding them, so the stub computes the same
+//! [`Route`] (including the commutative-spread hash) as the in-process
+//! deployment. This is what makes the net path and the in-process path
+//! bit-identical under a deterministic workload — the same operation
+//! lands on the same server either way.
+//!
+//! Retry discipline: a [`Msg::ReplyErr`] marked retryable (a wait-die
+//! victim on the server) is retried with capped exponential backoff. A
+//! *transport* error is different — the request may or may not have
+//! executed — so the stub reconnects and surfaces the error rather than
+//! silently re-executing a possibly-committed operation.
+
+use super::proto::{decode_msg, encode_msg, Msg, ProtoError, Role, WireError};
+use super::transport::{Conn, Transport};
+use crate::workload::analyzed::{AnalyzedApp, Route};
+use crate::workload::spec::{Operation, Reply};
+use std::fmt;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Client stub tuning.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Max automatic retries of a retryable server error.
+    pub max_retries: u32,
+    /// Initial backoff before the first retry; doubles per attempt.
+    pub backoff: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            max_retries: 50,
+            backoff: Duration::from_micros(200),
+            backoff_cap: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Everything a submit can fail with.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetError {
+    /// The connection failed (handshake, send, or receive). The
+    /// operation may or may not have executed on the server.
+    Transport(ProtoError),
+    /// The server executed (or refused) the operation and reported an
+    /// error; retryable ones were already retried `max_retries` times.
+    Server(WireError),
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::Transport(e) => write!(f, "transport: {e}"),
+            NetError::Server(e) => write!(f, "server: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<ProtoError> for NetError {
+    fn from(e: ProtoError) -> Self {
+        NetError::Transport(e)
+    }
+}
+
+/// A connected client: one lazily-established connection per server.
+pub struct NetClient {
+    app: Arc<AnalyzedApp>,
+    transport: Arc<dyn Transport>,
+    addrs: Vec<String>,
+    conns: Vec<Option<Box<dyn Conn>>>,
+    cfg: ClientConfig,
+    /// Retryable server errors absorbed by the automatic retry loop.
+    pub retries: u64,
+}
+
+impl NetClient {
+    /// Connect to every server eagerly (handshakes included), so a
+    /// misconfigured cluster fails at construction, not mid-workload.
+    pub fn connect(
+        app: Arc<AnalyzedApp>,
+        transport: Arc<dyn Transport>,
+        addrs: Vec<String>,
+        cfg: ClientConfig,
+    ) -> Result<NetClient, ProtoError> {
+        let mut client = NetClient {
+            conns: (0..addrs.len()).map(|_| None).collect(),
+            app,
+            transport,
+            addrs,
+            cfg,
+            retries: 0,
+        };
+        for s in 0..client.addrs.len() {
+            client.ensure(s)?;
+        }
+        Ok(client)
+    }
+
+    /// The server this operation routes to — the same decision
+    /// [`Deployment::submit`](crate::conveyor::Deployment::submit)
+    /// makes, including the commutative-spread hash for [`Route::Any`].
+    pub fn target(&self, op: &Operation) -> usize {
+        let n = self.addrs.len();
+        match self.app.route(op, n) {
+            Route::Any => (op.txn + op.args.len()) % n,
+            Route::LocalAt(s) | Route::GlobalAt(s) | Route::ConfluentAt(s) => s,
+        }
+    }
+
+    /// (Re)establish the connection to server `s`, handshake included.
+    fn ensure(&mut self, s: usize) -> Result<(), ProtoError> {
+        if self.conns[s].is_some() {
+            return Ok(());
+        }
+        let mut conn = self.transport.connect(&self.addrs[s])?;
+        let hello = Msg::Hello {
+            role: Role::Client,
+            app: self.app.spec.name.clone(),
+            n_servers: self.addrs.len() as u32,
+            sender: s as u32,
+        };
+        conn.send(&encode_msg(&hello))?;
+        match decode_msg(&conn.recv()?)? {
+            Msg::HelloOk { .. } => {}
+            Msg::ReplyErr(e) => return Err(ProtoError::Handshake(e.message)),
+            other => {
+                return Err(ProtoError::Handshake(format!("unexpected reply {other:?}")));
+            }
+        }
+        self.conns[s] = Some(conn);
+        Ok(())
+    }
+
+    /// Submit one operation: route, encode once, send, await the reply.
+    /// Retryable server errors are retried with capped exponential
+    /// backoff; transport errors drop the connection (it re-establishes
+    /// on the next submit) and surface immediately.
+    pub fn submit(&mut self, op: &Operation) -> Result<Reply, NetError> {
+        let s = self.target(op);
+        let request = Msg::Request {
+            txn: self.app.spec.txns[op.txn].name.clone(),
+            args: op
+                .canonical_args()
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect(),
+        };
+        let bytes = encode_msg(&request);
+        let mut attempt: u32 = 0;
+        loop {
+            let outcome = self.roundtrip(s, &bytes);
+            match outcome {
+                Ok(Msg::ReplyOk(reply)) => return Ok(reply),
+                Ok(Msg::ReplyErr(e)) => {
+                    if e.retryable && attempt < self.cfg.max_retries {
+                        attempt += 1;
+                        self.retries += 1;
+                        let backoff = self
+                            .cfg
+                            .backoff
+                            .saturating_mul(1u32 << attempt.min(8))
+                            .min(self.cfg.backoff_cap);
+                        std::thread::sleep(backoff);
+                    } else {
+                        return Err(NetError::Server(e));
+                    }
+                }
+                Ok(other) => {
+                    self.conns[s] = None;
+                    return Err(NetError::Transport(ProtoError::Decode(format!(
+                        "unexpected reply {other:?}"
+                    ))));
+                }
+                Err(e) => {
+                    self.conns[s] = None;
+                    return Err(NetError::Transport(e));
+                }
+            }
+        }
+    }
+
+    fn roundtrip(&mut self, s: usize, bytes: &[u8]) -> Result<Msg, ProtoError> {
+        self.ensure(s)?;
+        let conn = self.conns[s].as_mut().unwrap();
+        conn.send(bytes)?;
+        decode_msg(&conn.recv()?)
+    }
+}

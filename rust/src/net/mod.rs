@@ -1,0 +1,31 @@
+//! The served Eliá system: wire protocol, transports, servers, clients.
+//!
+//! Everything the in-process [`Deployment`](crate::conveyor::Deployment)
+//! does — routing, parked globals, the circulating token — promoted to
+//! a real networked system:
+//!
+//! * [`proto`] — the length-prefixed, checksummed frame codec and the
+//!   [`Msg`] set (requests, replies, token passes, acks);
+//! * [`transport`] — [`Transport`]/[`Listener`]/[`Conn`] traits with
+//!   real TCP/UDS implementations and a deterministic in-memory
+//!   [`Loopback`] for tests (with fault injection via
+//!   [`Loopback::cut`]);
+//! * [`server`] — [`Cluster`]: per-server accept/handler/belt threads,
+//!   the token as a framed ring message with exactly-once custody;
+//! * [`client`] — [`NetClient`]: routing-parity client stub with
+//!   automatic retry of retryable errors.
+//!
+//! See `src/net/README.md` for the frame layout and the token-message
+//! mapping onto [`crate::conveyor::token`].
+
+pub mod client;
+pub mod proto;
+pub mod server;
+pub mod transport;
+
+pub use client::{ClientConfig, NetClient, NetError};
+pub use proto::{Msg, ProtoError, Role, WireError, FRAME_HEADER, MAX_FRAME};
+pub use server::{Cluster, NetNode, ServeConfig};
+pub use transport::{Conn, Listener, Loopback, Tcp, Transport};
+#[cfg(unix)]
+pub use transport::Uds;

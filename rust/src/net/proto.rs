@@ -1,0 +1,527 @@
+//! The Eliá wire protocol: length-prefixed, checksummed binary frames.
+//!
+//! Framing mirrors the WAL's record discipline
+//! ([`crate::db::wal`]): every frame is
+//!
+//! ```text
+//! [len: u32 LE][fnv1a64(payload): u64 LE][payload: len bytes]
+//! ```
+//!
+//! and the decode side applies the same torn-tail rules — a frame cut
+//! short mid-header or mid-payload is [`ProtoError::Torn`], a checksum
+//! mismatch is [`ProtoError::Checksum`], and a checksum-valid payload
+//! that does not decode is [`ProtoError::Decode`] (corruption the
+//! checksum cannot explain away). Nothing in this module panics on
+//! hostile bytes: a declared length beyond [`MAX_FRAME`] is rejected
+//! *before* any allocation ([`ProtoError::Oversized`]).
+//!
+//! Message payloads ([`Msg`]) reuse the WAL's value/update codec
+//! (`put_value`, `encode_update`, the byte [`Reader`]) so the two wire
+//! formats cannot drift. Replies are encoded straight from borrowed
+//! [`RowRef`](crate::db::RowRef)s — the encode path clones no `Value`s,
+//! keeping the engine's allocation-free read path intact across the
+//! socket boundary.
+
+use crate::conveyor::token::{Token, TokenEntry};
+use crate::db::wal::{decode_update, encode_update, fnv1a, put_u32, put_value, Reader};
+use crate::db::{Row, Value};
+use crate::workload::spec::Reply;
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Hard cap on a frame's payload length: a hostile or corrupt length
+/// prefix is rejected before allocation.
+pub const MAX_FRAME: usize = 32 * 1024 * 1024;
+
+/// Bytes of frame header: `len: u32` + `fnv1a64: u64`.
+pub const FRAME_HEADER: usize = 12;
+
+/// Everything that can go wrong on the wire. Mirrors the WAL's recovery
+/// taxonomy: torn frames and bad checksums are distinguishable from
+/// clean closes and from semantic decode failures.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProtoError {
+    /// Underlying transport I/O failure (rendered `io::Error`).
+    Io(String),
+    /// The peer closed the connection cleanly (EOF at a frame boundary).
+    Closed,
+    /// The byte stream ended mid-frame (header or payload cut short).
+    Torn(String),
+    /// The length prefix exceeds [`MAX_FRAME`] — rejected before any
+    /// allocation.
+    Oversized {
+        /// Declared payload length.
+        len: usize,
+        /// The cap it exceeded ([`MAX_FRAME`]).
+        max: usize,
+    },
+    /// Frame checksum mismatch: the payload arrived complete but corrupt.
+    Checksum,
+    /// The payload passed the checksum but is not a valid message.
+    Decode(String),
+    /// A receive deadline elapsed (ack timeouts on the belt ring).
+    Timeout,
+    /// Handshake violation: wrong app, wrong cluster size, bad role.
+    Handshake(String),
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "i/o error: {e}"),
+            ProtoError::Closed => write!(f, "connection closed by peer"),
+            ProtoError::Torn(d) => write!(f, "torn frame: {d}"),
+            ProtoError::Oversized { len, max } => {
+                write!(f, "oversized frame: declared {len} bytes exceeds cap {max}")
+            }
+            ProtoError::Checksum => write!(f, "frame checksum mismatch"),
+            ProtoError::Decode(d) => write!(f, "undecodable message: {d}"),
+            ProtoError::Timeout => write!(f, "receive timed out"),
+            ProtoError::Handshake(d) => write!(f, "handshake rejected: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> Self {
+        match e.kind() {
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => ProtoError::Timeout,
+            _ => ProtoError::Io(e.to_string()),
+        }
+    }
+}
+
+/// Wrap a payload in a frame (length + checksum header).
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME, "frame payload exceeds MAX_FRAME");
+    let mut buf = Vec::with_capacity(FRAME_HEADER + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Decode one frame from the front of `bytes`: returns the payload slice
+/// and the total bytes consumed. Errors follow the WAL's torn-tail
+/// discipline (see the [module docs](self)); never panics on corrupt
+/// input.
+pub fn deframe(bytes: &[u8]) -> Result<(&[u8], usize), ProtoError> {
+    if bytes.len() < FRAME_HEADER {
+        return Err(ProtoError::Torn(format!(
+            "header truncated: {} of {FRAME_HEADER} bytes",
+            bytes.len()
+        )));
+    }
+    let len = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        return Err(ProtoError::Oversized { len, max: MAX_FRAME });
+    }
+    let expect = u64::from_le_bytes(bytes[4..12].try_into().unwrap());
+    let end = FRAME_HEADER + len;
+    if bytes.len() < end {
+        return Err(ProtoError::Torn(format!(
+            "payload truncated: {} of {len} bytes",
+            bytes.len() - FRAME_HEADER
+        )));
+    }
+    let payload = &bytes[FRAME_HEADER..end];
+    if fnv1a(payload) != expect {
+        return Err(ProtoError::Checksum);
+    }
+    Ok((payload, end))
+}
+
+/// Write one frame to a byte stream (the TCP/UDS path).
+pub fn write_frame(w: &mut dyn Write, payload: &[u8]) -> Result<(), ProtoError> {
+    if payload.len() > MAX_FRAME {
+        return Err(ProtoError::Oversized { len: payload.len(), max: MAX_FRAME });
+    }
+    let mut header = [0u8; FRAME_HEADER];
+    header[0..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[4..12].copy_from_slice(&fnv1a(payload).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from a byte stream. EOF *at* a frame boundary is a
+/// clean [`ProtoError::Closed`]; EOF *inside* a frame is
+/// [`ProtoError::Torn`]; a read deadline maps to [`ProtoError::Timeout`].
+pub fn read_frame(r: &mut dyn Read) -> Result<Vec<u8>, ProtoError> {
+    let mut header = [0u8; FRAME_HEADER];
+    read_full(r, &mut header, true)?;
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        return Err(ProtoError::Oversized { len, max: MAX_FRAME });
+    }
+    let expect = u64::from_le_bytes(header[4..12].try_into().unwrap());
+    let mut payload = vec![0u8; len];
+    read_full(r, &mut payload, false)?;
+    if fnv1a(&payload) != expect {
+        return Err(ProtoError::Checksum);
+    }
+    Ok(payload)
+}
+
+/// `read_exact` with the protocol's EOF semantics: a clean EOF before the
+/// first byte is [`ProtoError::Closed`] when `clean_eof_ok` (frame
+/// boundary), anything else mid-buffer is [`ProtoError::Torn`].
+fn read_full(r: &mut dyn Read, buf: &mut [u8], clean_eof_ok: bool) -> Result<(), ProtoError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 && clean_eof_ok {
+                    Err(ProtoError::Closed)
+                } else {
+                    Err(ProtoError::Torn(format!("eof after {filled} of {} bytes", buf.len())))
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Who is connecting: a request/reply client or the predecessor server
+/// on the belt ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Submits operations, receives replies.
+    Client,
+    /// The ring predecessor; forwards [`Msg::TokenPass`] frames.
+    Ring,
+}
+
+/// A transaction error crossing the wire: the retryability classification
+/// ([`crate::db::Retryable`]) plus the rendered message. The client stub
+/// auto-retries `retryable` errors with capped backoff and surfaces the
+/// rest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    /// True for concurrency victims (wait-die aborts): retry may succeed.
+    pub retryable: bool,
+    /// Rendered [`TxnError`](crate::db::TxnError) text.
+    pub message: String,
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", if self.retryable { "[retryable] " } else { "" }, self.message)
+    }
+}
+
+/// Every message the protocol speaks. One frame carries exactly one
+/// message; the first byte of the payload is the variant tag.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Connection opener (both roles): names the app and the expected
+    /// cluster size so mismatched deployments fail fast.
+    Hello {
+        /// Client or ring predecessor.
+        role: Role,
+        /// Application name ([`AppSpec::name`](crate::workload::spec::AppSpec)).
+        app: String,
+        /// Cluster size the sender expects.
+        n_servers: u32,
+        /// Sender's server index (ring role) or client id.
+        sender: u32,
+    },
+    /// Handshake accepted; carries the receiving server's index.
+    HelloOk {
+        /// The server index the client actually reached.
+        server: u32,
+    },
+    /// One operation: template name plus bound parameters in canonical
+    /// (name-sorted) order.
+    Request {
+        /// Transaction template name.
+        txn: String,
+        /// Bound parameters, name-sorted
+        /// ([`Operation::canonical_args`](crate::workload::spec::Operation::canonical_args)).
+        args: Vec<(String, Value)>,
+    },
+    /// Successful reply: the operation's [`ResultSet`](crate::db::ResultSet),
+    /// encoded row-by-row from borrowed [`RowRef`](crate::db::RowRef)s.
+    ReplyOk(Reply),
+    /// Failed reply: the classified error.
+    ReplyErr(WireError),
+    /// The belt token in flight, wrapped in the ring's exactly-once
+    /// envelope: `hop` increments on every forward and the receiver
+    /// dedupes stale retransmits by it; `idle` carries the no-work streak
+    /// that drives idle pauses (the networked form of
+    /// [`Deployment`](crate::conveyor::Deployment)'s `idle_rounds`).
+    TokenPass {
+        /// Monotone forward count; the retransmit dedupe key.
+        hop: u64,
+        /// Consecutive no-work stops preceding this hop.
+        idle: u32,
+        /// The [`Token`] itself: pending entries + per-server watermarks.
+        token: Token,
+    },
+    /// Receipt acknowledgement for [`Msg::TokenPass`] — sent *before*
+    /// processing, so the sender can release the token as soon as custody
+    /// transfers.
+    TokenAck {
+        /// Echo of the acknowledged hop.
+        hop: u64,
+    },
+}
+
+const TAG_HELLO: u8 = 0;
+const TAG_HELLO_OK: u8 = 1;
+const TAG_REQUEST: u8 = 2;
+const TAG_REPLY_OK: u8 = 3;
+const TAG_REPLY_ERR: u8 = 4;
+const TAG_TOKEN_PASS: u8 = 5;
+const TAG_TOKEN_ACK: u8 = 6;
+
+const ROLE_CLIENT: u8 = 0;
+const ROLE_RING: u8 = 1;
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_string(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Encode one message into an unframed payload (pair with [`frame`] /
+/// [`write_frame`]). The [`Msg::ReplyOk`] arm iterates the result's
+/// borrowed rows and clones no values.
+pub fn encode_msg(msg: &Msg) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    match msg {
+        Msg::Hello { role, app, n_servers, sender } => {
+            buf.push(TAG_HELLO);
+            buf.push(match role {
+                Role::Client => ROLE_CLIENT,
+                Role::Ring => ROLE_RING,
+            });
+            put_string(&mut buf, app);
+            put_u32(&mut buf, *n_servers);
+            put_u32(&mut buf, *sender);
+        }
+        Msg::HelloOk { server } => {
+            buf.push(TAG_HELLO_OK);
+            put_u32(&mut buf, *server);
+        }
+        Msg::Request { txn, args } => {
+            buf.push(TAG_REQUEST);
+            put_string(&mut buf, txn);
+            put_u32(&mut buf, args.len() as u32);
+            for (name, v) in args {
+                put_string(&mut buf, name);
+                put_value(&mut buf, v);
+            }
+        }
+        Msg::ReplyOk(rs) => {
+            buf.push(TAG_REPLY_OK);
+            put_u64(&mut buf, rs.affected as u64);
+            put_u32(&mut buf, rs.len() as u32);
+            for row in rs.iter() {
+                put_u32(&mut buf, row.len() as u32);
+                for v in row.iter() {
+                    put_value(&mut buf, v);
+                }
+            }
+        }
+        Msg::ReplyErr(e) => {
+            buf.push(TAG_REPLY_ERR);
+            buf.push(e.retryable as u8);
+            put_string(&mut buf, &e.message);
+        }
+        Msg::TokenPass { hop, idle, token } => {
+            buf.push(TAG_TOKEN_PASS);
+            put_u64(&mut buf, *hop);
+            put_u32(&mut buf, *idle);
+            let entries: Vec<&TokenEntry> = token.entries().collect();
+            put_u32(&mut buf, entries.len() as u32);
+            for e in entries {
+                put_u32(&mut buf, e.origin as u32);
+                put_u64(&mut buf, e.seq);
+                let mut ubuf = Vec::with_capacity(e.update.wire_size());
+                encode_update(&mut ubuf, &e.update);
+                put_u32(&mut buf, ubuf.len() as u32);
+                buf.extend_from_slice(&ubuf);
+            }
+            let wms = token.watermarks();
+            put_u32(&mut buf, wms.len() as u32);
+            for &w in wms {
+                put_u64(&mut buf, w);
+            }
+            put_u64(&mut buf, token.appended);
+            put_u64(&mut buf, token.rotations);
+        }
+        Msg::TokenAck { hop } => {
+            buf.push(TAG_TOKEN_ACK);
+            put_u64(&mut buf, *hop);
+        }
+    }
+    buf
+}
+
+/// Decode one message from an unframed payload. Trailing bytes, unknown
+/// tags, and truncated fields are [`ProtoError::Decode`] — never a
+/// panic, mirroring the WAL's "checksum ok but undecodable" hard error.
+pub fn decode_msg(payload: &[u8]) -> Result<Msg, ProtoError> {
+    decode_msg_inner(payload).map_err(ProtoError::Decode)
+}
+
+fn decode_msg_inner(payload: &[u8]) -> Result<Msg, String> {
+    let mut r = Reader::new(payload);
+    let msg = match r.u8()? {
+        TAG_HELLO => {
+            let role = match r.u8()? {
+                ROLE_CLIENT => Role::Client,
+                ROLE_RING => Role::Ring,
+                t => return Err(format!("unknown role tag {t}")),
+            };
+            let app = r.string()?;
+            let n_servers = r.u32()?;
+            let sender = r.u32()?;
+            Msg::Hello { role, app, n_servers, sender }
+        }
+        TAG_HELLO_OK => Msg::HelloOk { server: r.u32()? },
+        TAG_REQUEST => {
+            let txn = r.string()?;
+            let n = r.u32()? as usize;
+            let mut args = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                let name = r.string()?;
+                let v = r.value()?;
+                args.push((name, v));
+            }
+            Msg::Request { txn, args }
+        }
+        TAG_REPLY_OK => {
+            let affected = r.u64()? as usize;
+            let n = r.u32()? as usize;
+            let mut rows: Vec<Row> = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                let w = r.u32()? as usize;
+                let mut row = Vec::with_capacity(w.min(1024));
+                for _ in 0..w {
+                    row.push(r.value()?);
+                }
+                rows.push(row);
+            }
+            Msg::ReplyOk(Reply::from_owned_rows(rows, affected))
+        }
+        TAG_REPLY_ERR => {
+            let retryable = match r.u8()? {
+                0 => false,
+                1 => true,
+                t => return Err(format!("bad bool tag {t}")),
+            };
+            let message = r.string()?;
+            Msg::ReplyErr(WireError { retryable, message })
+        }
+        TAG_TOKEN_PASS => {
+            let hop = r.u64()?;
+            let idle = r.u32()?;
+            let n = r.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                let origin = r.u32()? as usize;
+                let seq = r.u64()?;
+                let ulen = r.u32()? as usize;
+                let update = decode_update(r.take(ulen)?)?;
+                entries.push(TokenEntry { origin, seq, update });
+            }
+            let nw = r.u32()? as usize;
+            let mut wms = Vec::with_capacity(nw.min(1024));
+            for _ in 0..nw {
+                wms.push(r.u64()?);
+            }
+            let appended = r.u64()?;
+            let rotations = r.u64()?;
+            Msg::TokenPass { hop, idle, token: Token::from_parts(entries, wms, appended, rotations) }
+        }
+        TAG_TOKEN_ACK => Msg::TokenAck { hop: r.u64()? },
+        t => return Err(format!("unknown message tag {t}")),
+    };
+    r.done()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = b"hello elia";
+        let framed = frame(payload);
+        assert_eq!(framed.len(), FRAME_HEADER + payload.len());
+        let (got, consumed) = deframe(&framed).unwrap();
+        assert_eq!(got, payload);
+        assert_eq!(consumed, framed.len());
+    }
+
+    #[test]
+    fn torn_and_corrupt_frames_error_cleanly() {
+        let framed = frame(b"payload");
+        // Torn header.
+        assert!(matches!(deframe(&framed[..5]), Err(ProtoError::Torn(_))));
+        // Torn payload.
+        assert!(matches!(deframe(&framed[..FRAME_HEADER + 3]), Err(ProtoError::Torn(_))));
+        // Flipped payload bit.
+        let mut corrupt = framed.clone();
+        *corrupt.last_mut().unwrap() ^= 1;
+        assert_eq!(deframe(&corrupt), Err(ProtoError::Checksum));
+        // Hostile length prefix: rejected before allocation.
+        let mut oversized = framed;
+        oversized[0..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(deframe(&oversized), Err(ProtoError::Oversized { .. })));
+    }
+
+    #[test]
+    fn message_roundtrip() {
+        let msgs = vec![
+            Msg::Hello { role: Role::Ring, app: "tpcw".into(), n_servers: 3, sender: 2 },
+            Msg::HelloOk { server: 1 },
+            Msg::Request {
+                txn: "createCart".into(),
+                args: vec![
+                    ("cid".into(), Value::Int(7)),
+                    ("name".into(), Value::Str("x".into())),
+                ],
+            },
+            Msg::ReplyErr(WireError { retryable: true, message: "lock conflict".into() }),
+            Msg::TokenAck { hop: 42 },
+        ];
+        for msg in msgs {
+            let bytes = encode_msg(&msg);
+            assert_eq!(decode_msg(&bytes).unwrap(), msg, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn reply_roundtrip_preserves_rows() {
+        let reply = Reply::from_owned_rows(
+            vec![
+                vec![Value::Int(1), Value::Str("a".into()), Value::Null],
+                vec![Value::Int(2), Value::Float(0.5), Value::Int(-3)],
+            ],
+            0,
+        );
+        let msg = Msg::ReplyOk(reply);
+        let bytes = encode_msg(&msg);
+        assert_eq!(decode_msg(&bytes).unwrap(), msg);
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut bytes = encode_msg(&Msg::HelloOk { server: 0 });
+        bytes.push(0xFF);
+        assert!(matches!(decode_msg(&bytes), Err(ProtoError::Decode(_))));
+    }
+}

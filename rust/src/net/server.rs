@@ -1,0 +1,782 @@
+//! The served deployment: one [`ServerCore`] per server, clients over
+//! framed request/reply connections, and the conveyor belt token
+//! travelling the ring as a real [`Msg::TokenPass`] frame.
+//!
+//! Per server there are three kinds of thread, exactly the networked
+//! split of [`Deployment`](crate::conveyor::Deployment):
+//!
+//! * an **accept thread** takes client connections and spawns a handler
+//!   per connection;
+//! * **handler threads** decode [`Msg::Request`]s, route them
+//!   ([`Route`]) and drive the shared [`ServerCore`] — local and
+//!   confluent operations execute immediately, globals park until the
+//!   belt thread's next stop;
+//! * a **belt thread** owns the ring: it receives the token from its
+//!   predecessor, runs [`ServerCore::token_stop`] (apply remotes, drain
+//!   the confluent outbox, run the parked round), and forwards the token
+//!   to its successor.
+//!
+//! ## Exactly-once token custody
+//!
+//! The ring must survive cut connections without duplicating or losing
+//! a token (and with it, committed [`StateUpdate`](crate::db::StateUpdate)s).
+//! The envelope carries a monotone `hop` counter:
+//!
+//! * the **receiver acks immediately on receipt** — before processing —
+//!   so custody transfers as soon as the frame lands;
+//! * the **sender holds its copy until acked**; on timeout or a broken
+//!   connection it reconnects and resends the *same* frame;
+//! * the receiver **dedupes** by hop (`hop <= last_hop` is a stale
+//!   retransmit: ack again, process nothing).
+//!
+//! A cut before receipt loses the frame → no ack → the sender's copy is
+//! retransmitted; a cut after receipt loses only the ack → the
+//! retransmit is deduped. Either way each hop is processed exactly once,
+//! and the token's per-server watermarks make update application
+//! idempotent on top of that.
+//!
+//! ## Shutdown
+//!
+//! [`Cluster::shutdown`] sets a stop flag; the belt keeps rotating until
+//! some server observes a fully drained system (empty token and a full
+//! ring of no-work stops). That server records the final token, raises
+//! the `halted` flag, and simply exits — its dropped connections cascade
+//! a clean close around the ring, so no in-band halt message (which
+//! would itself need acking) exists.
+
+use super::client::NetClient;
+use super::proto::{decode_msg, encode_msg, Msg, ProtoError, Role, WireError};
+use super::transport::{Conn, Listener, Transport};
+use crate::conveyor::token::{Token, TokenEntry};
+use crate::conveyor::ServerCore;
+use crate::db::{Db, DurabilityConfig, Retryable, Value};
+use crate::workload::analyzed::{AnalyzedApp, Route};
+use crate::workload::spec::{Operation, PreparedStmts};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Configuration of a served cluster.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Per-server client-facing listen addresses.
+    pub client_addrs: Vec<String>,
+    /// Per-server ring listen addresses (server `p` listens here for its
+    /// predecessor; `p`'s successor is `(p + 1) % n`).
+    pub ring_addrs: Vec<String>,
+    /// Max wait-die retries per operation (as [`DeployConfig`](crate::conveyor::DeployConfig)).
+    pub max_retries: u32,
+    /// Pause when the ring has been idle for over two full rotations.
+    pub idle_pause: Duration,
+    /// Token-ack deadline; an unacked pass is retransmitted after this.
+    pub ack_timeout: Duration,
+    /// When set, each server runs a write-ahead log at
+    /// `<dir>/server<p>.wal` (and replays it at start).
+    pub wal_dir: Option<PathBuf>,
+    /// Record every token entry the belt threads observe (the
+    /// fault-injection tests' no-dup/no-loss oracle; off by default).
+    pub record_history: bool,
+}
+
+impl ServeConfig {
+    fn base(client_addrs: Vec<String>, ring_addrs: Vec<String>) -> ServeConfig {
+        ServeConfig {
+            client_addrs,
+            ring_addrs,
+            max_retries: 1000,
+            idle_pause: Duration::from_micros(200),
+            ack_timeout: Duration::from_millis(50),
+            wal_dir: None,
+            record_history: false,
+        }
+    }
+
+    /// An `n`-server cluster on the in-memory [`Loopback`]
+    /// (`crate::net::Loopback`) transport: `server<p>` / `ring<p>`
+    /// addresses.
+    pub fn loopback(n: usize) -> ServeConfig {
+        ServeConfig::base(
+            (0..n).map(|p| format!("server{p}")).collect(),
+            (0..n).map(|p| format!("ring{p}")).collect(),
+        )
+    }
+
+    /// An `n`-server cluster on 127.0.0.1. `base_port == 0` requests
+    /// ephemeral ports — the resolved addresses come back from
+    /// [`Cluster::client_addrs`], so tests never collide.
+    pub fn tcp(n: usize, base_port: u16) -> ServeConfig {
+        let port = |i: usize| if base_port == 0 { 0 } else { base_port + i as u16 };
+        ServeConfig::base(
+            (0..n).map(|p| format!("127.0.0.1:{}", port(2 * p))).collect(),
+            (0..n).map(|p| format!("127.0.0.1:{}", port(2 * p + 1))).collect(),
+        )
+    }
+
+    /// Number of servers this configuration describes.
+    pub fn n_servers(&self) -> usize {
+        self.client_addrs.len()
+    }
+}
+
+/// Cross-thread flags and results of one cluster.
+struct Shared {
+    stop: AtomicBool,
+    /// Raised by the server that drained the system; every other belt
+    /// thread exits when it observes this after a connection error.
+    halted: AtomicBool,
+    done: Mutex<Option<Token>>,
+    done_cv: Condvar,
+    /// Token entries observed by the belt, for the no-dup/no-loss
+    /// oracle (only filled when [`ServeConfig::record_history`]).
+    history: Mutex<Vec<TokenEntry>>,
+}
+
+/// One served Eliá server: the shared [`ServerCore`] plus routing state
+/// and per-class counters (mirrors [`Deployment`](crate::conveyor::Deployment)'s).
+pub struct NetNode {
+    index: usize,
+    n: usize,
+    app: Arc<AnalyzedApp>,
+    stmt_maps: Arc<Vec<PreparedStmts>>,
+    core: Arc<ServerCore>,
+    /// Local + commutative operations handled here.
+    pub ops_local: AtomicU64,
+    /// Global operations parked and run here.
+    pub ops_global: AtomicU64,
+    /// Confluent operations executed here.
+    pub ops_confluent: AtomicU64,
+}
+
+impl NetNode {
+    /// This server's DBMS.
+    pub fn db(&self) -> &Db {
+        self.core.db()
+    }
+
+    /// Wait-die retries burned by this server's handler threads.
+    pub fn retries(&self) -> u64 {
+        self.core.retries.load(Ordering::Relaxed)
+    }
+
+    /// Execute one decoded request: resolve the template, route, run.
+    /// Misrouted operations (the client's routing disagrees with ours)
+    /// are rejected rather than silently executed on the wrong server —
+    /// the routing function is deterministic, so this only fires on a
+    /// buggy or malicious client.
+    pub fn handle_request(&self, txn: &str, args: Vec<(String, Value)>) -> Msg {
+        let Some(ti) = self.app.spec.txn_index(txn) else {
+            return Msg::ReplyErr(WireError {
+                retryable: false,
+                message: format!("unknown transaction '{txn}'"),
+            });
+        };
+        let op = Operation { txn: ti, args: args.into_iter().collect() };
+        let tpl = &self.app.spec.txns[ti];
+        let stmts = &self.stmt_maps[ti];
+        let misroute = |s: usize| {
+            Msg::ReplyErr(WireError {
+                retryable: false,
+                message: format!(
+                    "misrouted: '{txn}' belongs to server {s}, this is server {}",
+                    self.index
+                ),
+            })
+        };
+        let result = match self.app.route(&op, self.n) {
+            Route::Any => {
+                self.ops_local.fetch_add(1, Ordering::Relaxed);
+                self.core.execute_local(tpl, stmts, &op)
+            }
+            Route::LocalAt(s) => {
+                if s != self.index {
+                    return misroute(s);
+                }
+                self.ops_local.fetch_add(1, Ordering::Relaxed);
+                self.core.execute_local(tpl, stmts, &op)
+            }
+            Route::GlobalAt(s) => {
+                if s != self.index {
+                    return misroute(s);
+                }
+                self.ops_global.fetch_add(1, Ordering::Relaxed);
+                self.core.execute_global(tpl, stmts, op)
+            }
+            Route::ConfluentAt(s) => {
+                if s != self.index {
+                    return misroute(s);
+                }
+                self.ops_confluent.fetch_add(1, Ordering::Relaxed);
+                self.core.execute_confluent(tpl, stmts, &op)
+            }
+        };
+        match result {
+            Ok(reply) => Msg::ReplyOk(reply),
+            Err(e) => Msg::ReplyErr(WireError {
+                retryable: e.classify() == Retryable::Transient,
+                message: e.to_string(),
+            }),
+        }
+    }
+}
+
+/// A running served cluster (all servers in this process, one thread
+/// set per server). Real deployments run one [`Cluster`] of size 1 per
+/// machine via `elia serve`; tests run size-`n` clusters over
+/// [`Loopback`](crate::net::Loopback) or 127.0.0.1 TCP.
+pub struct Cluster {
+    transport: Arc<dyn Transport>,
+    nodes: Vec<Arc<NetNode>>,
+    shared: Arc<Shared>,
+    client_addrs: Vec<String>,
+    ring_addrs: Vec<String>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Cluster {
+    /// Start a cluster: bind every listener (client and ring) up front —
+    /// so ring connects cannot race the ring accepts — then spawn each
+    /// server's accept and belt threads. `seed_db` runs against every
+    /// server's fresh DB before its WAL (if any) replays.
+    pub fn start(
+        app: Arc<AnalyzedApp>,
+        cfg: ServeConfig,
+        transport: Arc<dyn Transport>,
+        seed_db: impl Fn(&Db),
+    ) -> Result<Cluster, ProtoError> {
+        let n = cfg.n_servers();
+        assert!(n >= 1, "cluster needs at least one server");
+        assert_eq!(cfg.ring_addrs.len(), n, "one ring address per server");
+
+        // Bind everything before any thread runs: a connect() to any
+        // ring/client address is guaranteed to land in a live backlog.
+        let mut client_listeners = Vec::with_capacity(n);
+        let mut ring_listeners = Vec::with_capacity(n);
+        for addr in &cfg.client_addrs {
+            client_listeners.push(transport.listen(addr)?);
+        }
+        if n >= 2 {
+            for addr in &cfg.ring_addrs {
+                ring_listeners.push(transport.listen(addr)?);
+            }
+        }
+        let client_addrs: Vec<String> =
+            client_listeners.iter().map(|l| l.addr().to_string()).collect();
+        let ring_addrs: Vec<String> = if n >= 2 {
+            ring_listeners.iter().map(|l| l.addr().to_string()).collect()
+        } else {
+            cfg.ring_addrs.clone()
+        };
+
+        let stmt_maps: Arc<Vec<PreparedStmts>> =
+            Arc::new(app.spec.txns.iter().map(|t| t.prepared_map(&app.spec.schema)).collect());
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            halted: AtomicBool::new(false),
+            done: Mutex::new(None),
+            done_cv: Condvar::new(),
+            history: Mutex::new(Vec::new()),
+        });
+
+        let mut nodes = Vec::with_capacity(n);
+        for p in 0..n {
+            let db = Db::new(app.spec.schema.clone());
+            seed_db(&db);
+            let db = match &cfg.wal_dir {
+                Some(dir) => db
+                    .with_durability(&DurabilityConfig::new(dir.join(format!("server{p}.wal"))))
+                    .map_err(|e| ProtoError::Io(e.to_string()))?,
+                None => db,
+            };
+            nodes.push(Arc::new(NetNode {
+                index: p,
+                n,
+                app: Arc::clone(&app),
+                stmt_maps: Arc::clone(&stmt_maps),
+                core: Arc::new(ServerCore::new(db, cfg.max_retries)),
+                ops_local: AtomicU64::new(0),
+                ops_global: AtomicU64::new(0),
+                ops_confluent: AtomicU64::new(0),
+            }));
+        }
+
+        let mut threads = Vec::new();
+        for (p, listener) in client_listeners.into_iter().enumerate() {
+            let node = Arc::clone(&nodes[p]);
+            let shared2 = Arc::clone(&shared);
+            let app_name = app.spec.name.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("elia-accept-{p}"))
+                    .spawn(move || accept_loop(node, shared2, listener, app_name))
+                    .expect("spawn accept thread"),
+            );
+        }
+        if n == 1 {
+            let belt = Belt {
+                node: Arc::clone(&nodes[0]),
+                shared: Arc::clone(&shared),
+                transport: Arc::clone(&transport),
+                succ_addr: String::new(),
+                app_name: app.spec.name.clone(),
+                n,
+                ack_timeout: cfg.ack_timeout,
+                idle_pause: cfg.idle_pause,
+                record_history: cfg.record_history,
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name("elia-belt-0".into())
+                    .spawn(move || belt.run_single())
+                    .expect("spawn belt thread"),
+            );
+        } else {
+            for (p, listener) in ring_listeners.into_iter().enumerate() {
+                let belt = Belt {
+                    node: Arc::clone(&nodes[p]),
+                    shared: Arc::clone(&shared),
+                    transport: Arc::clone(&transport),
+                    succ_addr: ring_addrs[(p + 1) % n].clone(),
+                    app_name: app.spec.name.clone(),
+                    n,
+                    ack_timeout: cfg.ack_timeout,
+                    idle_pause: cfg.idle_pause,
+                    record_history: cfg.record_history,
+                };
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("elia-belt-{p}"))
+                        .spawn(move || belt.run(listener))
+                        .expect("spawn belt thread"),
+                );
+            }
+        }
+
+        Ok(Cluster {
+            transport,
+            nodes,
+            shared,
+            client_addrs,
+            ring_addrs,
+            threads: Mutex::new(threads),
+        })
+    }
+
+    /// Resolved client-facing addresses (differ from the configured ones
+    /// when ephemeral ports were requested).
+    pub fn client_addrs(&self) -> &[String] {
+        &self.client_addrs
+    }
+
+    /// Resolved ring addresses (fault tests `cut` these).
+    pub fn ring_addrs(&self) -> &[String] {
+        &self.ring_addrs
+    }
+
+    /// Number of servers.
+    pub fn n_servers(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// One server's state (counters, DB).
+    pub fn node(&self, p: usize) -> &NetNode {
+        &self.nodes[p]
+    }
+
+    /// One server's DBMS (convergence checks).
+    pub fn db(&self, p: usize) -> &Db {
+        self.nodes[p].db()
+    }
+
+    /// A connected client stub for this cluster (tests).
+    pub fn client(&self, app: Arc<AnalyzedApp>) -> Result<NetClient, ProtoError> {
+        NetClient::connect(
+            app,
+            Arc::clone(&self.transport),
+            self.client_addrs.clone(),
+            super::client::ClientConfig::default(),
+        )
+    }
+
+    /// Stop the belt, wait for the drain to complete, join every server
+    /// thread, and return the final token. All client connections must
+    /// be dropped before calling this (handler threads exit on client
+    /// disconnect; parked globals would otherwise never finish).
+    pub fn shutdown(&self) -> Token {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let token = {
+            let mut done = self.shared.done.lock().unwrap();
+            while done.is_none() {
+                done = self.shared.done_cv.wait(done).unwrap();
+            }
+            done.take().unwrap()
+        };
+        // Unblock accept loops (client and ring): a dummy connection
+        // wakes each blocked accept, which then observes `halted`.
+        for addr in self.client_addrs.iter().chain(self.ring_addrs.iter()) {
+            let _ = self.transport.connect(addr);
+        }
+        for h in self.threads.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        token
+    }
+
+    /// All token entries the belt observed, in global sequence order
+    /// (requires [`ServeConfig::record_history`]). Sequence numbers are
+    /// assigned contiguously by [`Token::append`], so the no-dup/no-loss
+    /// oracle is `seqs == 1..=appended`.
+    pub fn global_history(&self) -> Vec<TokenEntry> {
+        let mut h = self.shared.history.lock().unwrap().clone();
+        h.sort_by_key(|e| e.seq);
+        h
+    }
+}
+
+/// Accept client connections for one server until halt.
+fn accept_loop(
+    node: Arc<NetNode>,
+    shared: Arc<Shared>,
+    mut listener: Box<dyn Listener>,
+    app_name: String,
+) {
+    loop {
+        let conn = listener.accept();
+        if shared.halted.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(conn) = conn else { continue };
+        let node = Arc::clone(&node);
+        let app_name = app_name.clone();
+        std::thread::Builder::new()
+            .name(format!("elia-conn-{}", node.index))
+            .spawn(move || client_conn(node, conn, app_name))
+            .expect("spawn handler thread");
+    }
+}
+
+/// Serve one client connection: handshake, then request/reply until the
+/// client disconnects.
+fn client_conn(node: Arc<NetNode>, mut conn: Box<dyn Conn>, app_name: String) {
+    let Ok(payload) = conn.recv() else { return };
+    match decode_msg(&payload) {
+        Ok(Msg::Hello { role: Role::Client, app, n_servers, .. }) => {
+            if app != app_name || n_servers as usize != node.n {
+                let err = Msg::ReplyErr(WireError {
+                    retryable: false,
+                    message: format!(
+                        "handshake mismatch: got app '{app}' x{n_servers}, serving '{app_name}' x{}",
+                        node.n
+                    ),
+                });
+                let _ = conn.send(&encode_msg(&err));
+                return;
+            }
+            if conn.send(&encode_msg(&Msg::HelloOk { server: node.index as u32 })).is_err() {
+                return;
+            }
+        }
+        _ => {
+            let err = Msg::ReplyErr(WireError {
+                retryable: false,
+                message: "protocol violation: expected Hello".into(),
+            });
+            let _ = conn.send(&encode_msg(&err));
+            return;
+        }
+    }
+    loop {
+        let Ok(payload) = conn.recv() else { return };
+        let reply = match decode_msg(&payload) {
+            Ok(Msg::Request { txn, args }) => node.handle_request(&txn, args),
+            Ok(_) => Msg::ReplyErr(WireError {
+                retryable: false,
+                message: "protocol violation: expected Request".into(),
+            }),
+            Err(e) => Msg::ReplyErr(WireError {
+                retryable: false,
+                message: format!("bad request: {e}"),
+            }),
+        };
+        if conn.send(&encode_msg(&reply)).is_err() {
+            return;
+        }
+    }
+}
+
+/// One server's belt thread: ring I/O plus the per-stop protocol.
+struct Belt {
+    node: Arc<NetNode>,
+    shared: Arc<Shared>,
+    transport: Arc<dyn Transport>,
+    succ_addr: String,
+    app_name: String,
+    n: usize,
+    ack_timeout: Duration,
+    idle_pause: Duration,
+    record_history: bool,
+}
+
+impl Belt {
+    fn halted(&self) -> bool {
+        self.shared.halted.load(Ordering::SeqCst)
+    }
+
+    /// Record this server's halt decision and let the connection-close
+    /// cascade take the rest of the ring down.
+    fn halt(&self, token: Token) {
+        self.shared.halted.store(true, Ordering::SeqCst);
+        let mut done = self.shared.done.lock().unwrap();
+        *done = Some(token);
+        self.shared.done_cv.notify_all();
+    }
+
+    fn record(&self, token: &Token, before: u64) {
+        if !self.record_history {
+            return;
+        }
+        let mut h = self.shared.history.lock().unwrap();
+        for e in token.entries() {
+            if e.seq > before {
+                h.push(e.clone());
+            }
+        }
+    }
+
+    /// Run one stop of this server. Returns the halt decision.
+    fn stop_here(&self, token: &mut Token, idle: u32) -> StopOutcome {
+        let before = token.appended;
+        let any_work = self.node.core.token_stop(self.node.index, token);
+        self.record(token, before);
+        let streak = if any_work { 0 } else { idle.saturating_add(1) };
+        if self.shared.stop.load(Ordering::SeqCst)
+            && token.is_empty()
+            && streak as usize >= self.n
+        {
+            return StopOutcome::Drained;
+        }
+        if streak as usize > 2 * self.n {
+            std::thread::sleep(self.idle_pause);
+        }
+        StopOutcome::Forward(streak)
+    }
+
+    /// The single-server degenerate case: no ring connections; the belt
+    /// is an in-process loop exactly like
+    /// [`Deployment`](crate::conveyor::Deployment)'s token thread.
+    fn run_single(self) {
+        let mut token = Token::new(1);
+        let mut idle: u32 = 0;
+        loop {
+            token.rotations += 1;
+            match self.stop_here(&mut token, idle) {
+                StopOutcome::Drained => {
+                    self.halt(token);
+                    return;
+                }
+                StopOutcome::Forward(streak) => idle = streak,
+            }
+        }
+    }
+
+    /// The ring case: receive from the predecessor, stop, forward to the
+    /// successor — with the exactly-once custody envelope described in
+    /// the [module docs](self).
+    fn run(self, mut listener: Box<dyn Listener>) {
+        // Connect out first (every listener already exists, so this
+        // lands in a live backlog), then accept our predecessor.
+        let mut out = self.ring_connect();
+        if out.is_none() {
+            return;
+        }
+        let mut inn = match self.ring_accept(&mut listener) {
+            Some(c) => c,
+            None => return,
+        };
+        let mut last_hop: u64 = 0;
+        // Server 0 mints the token.
+        let mut pending: Option<(u64, u32, Token)> =
+            (self.node.index == 0).then(|| (0, 0, Token::new(self.n)));
+        loop {
+            let (hop, idle, mut token) = match pending.take() {
+                Some(t) => t,
+                None => {
+                    let payload = match inn.recv() {
+                        Ok(p) => p,
+                        Err(_) => {
+                            if self.halted() {
+                                return;
+                            }
+                            // Predecessor died or was cut: wait for its
+                            // reconnect and retransmit.
+                            inn = match self.ring_accept(&mut listener) {
+                                Some(c) => c,
+                                None => return,
+                            };
+                            continue;
+                        }
+                    };
+                    match decode_msg(&payload) {
+                        Ok(Msg::TokenPass { hop, idle, token }) => {
+                            // Ack first: custody transfers on receipt,
+                            // and the sender releases its copy.
+                            let _ = inn.send(&encode_msg(&Msg::TokenAck { hop }));
+                            if hop <= last_hop {
+                                continue; // stale retransmit, already processed
+                            }
+                            last_hop = hop;
+                            (hop, idle, token)
+                        }
+                        _ => continue,
+                    }
+                }
+            };
+            if self.node.index == 0 && hop > 0 {
+                token.rotations += 1;
+            }
+            match self.stop_here(&mut token, idle) {
+                StopOutcome::Drained => {
+                    // Dropping `inn`/`out`/`listener` closes our ring
+                    // connections; the cascade shuts the others down.
+                    self.halt(token);
+                    return;
+                }
+                StopOutcome::Forward(streak) => {
+                    let msg = Msg::TokenPass { hop: hop + 1, idle: streak, token };
+                    if !self.send_token(&mut out, &msg, hop + 1) {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dial the successor's ring listener and handshake, retrying until
+    /// success or halt.
+    fn ring_connect(&self) -> Option<Box<dyn Conn>> {
+        let hello = Msg::Hello {
+            role: Role::Ring,
+            app: self.app_name.clone(),
+            n_servers: self.n as u32,
+            sender: self.node.index as u32,
+        };
+        let hello_bytes = encode_msg(&hello);
+        loop {
+            if self.halted() {
+                return None;
+            }
+            let mut conn = match self.transport.connect(&self.succ_addr) {
+                Ok(c) => c,
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+            };
+            // The ack deadline doubles as the handshake deadline and
+            // stays armed for the lifetime of the out-connection.
+            if conn.set_recv_timeout(Some(self.ack_timeout)).is_err() {
+                continue;
+            }
+            if conn.send(&hello_bytes).is_err() {
+                continue;
+            }
+            match conn.recv() {
+                Ok(p) => match decode_msg(&p) {
+                    Ok(Msg::HelloOk { .. }) => return Some(conn),
+                    _ => continue,
+                },
+                Err(_) => continue,
+            }
+        }
+    }
+
+    /// Accept the predecessor's ring connection (validating its Hello),
+    /// skipping stale or foreign connections, until success or halt.
+    fn ring_accept(&self, listener: &mut Box<dyn Listener>) -> Option<Box<dyn Conn>> {
+        loop {
+            if self.halted() {
+                return None;
+            }
+            let Ok(mut conn) = listener.accept() else { continue };
+            if self.halted() {
+                return None;
+            }
+            // Deadline on the handshake so an abandoned half-open
+            // connection (or shutdown's dummy wake-up) can't wedge us.
+            if conn.set_recv_timeout(Some(self.ack_timeout)).is_err() {
+                continue;
+            }
+            let Ok(p) = conn.recv() else { continue };
+            match decode_msg(&p) {
+                Ok(Msg::Hello { role: Role::Ring, app, n_servers, .. })
+                    if app == self.app_name && n_servers as usize == self.n =>
+                {
+                    if conn.send(&encode_msg(&Msg::HelloOk { server: self.node.index as u32 }))
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    // Token receipt has no deadline: idle rings are
+                    // legitimately quiet.
+                    if conn.set_recv_timeout(None).is_err() {
+                        continue;
+                    }
+                    return Some(conn);
+                }
+                _ => continue,
+            }
+        }
+    }
+
+    /// Send a token pass and hold it until the successor acks `hop`.
+    /// Retransmits on timeout; reconnects and retransmits on a broken
+    /// connection. Returns false only when the cluster halted.
+    fn send_token(&self, out: &mut Option<Box<dyn Conn>>, msg: &Msg, hop: u64) -> bool {
+        let bytes = encode_msg(msg);
+        loop {
+            if self.halted() {
+                return false;
+            }
+            if out.is_none() {
+                *out = match self.ring_connect() {
+                    Some(c) => Some(c),
+                    None => return false,
+                };
+            }
+            let conn = out.as_mut().unwrap();
+            if conn.send(&bytes).is_err() {
+                *out = None;
+                continue;
+            }
+            // Await the ack (the out-connection's recv deadline is the
+            // ack timeout).
+            loop {
+                match conn.recv() {
+                    Ok(p) => match decode_msg(&p) {
+                        Ok(Msg::TokenAck { hop: h }) if h == hop => return true,
+                        // A stale ack from an earlier retransmit round:
+                        // keep waiting for ours.
+                        Ok(Msg::TokenAck { .. }) => continue,
+                        _ => continue,
+                    },
+                    // Deadline passed unacked: retransmit on the same
+                    // connection (the receiver dedupes).
+                    Err(ProtoError::Timeout) => break,
+                    // Broken: reconnect and retransmit.
+                    Err(_) => {
+                        *out = None;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Outcome of one token stop.
+enum StopOutcome {
+    /// Keep rotating; carries the updated idle streak.
+    Forward(u32),
+    /// Stop flag set and the system is drained: halt here.
+    Drained,
+}

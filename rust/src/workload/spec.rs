@@ -199,6 +199,17 @@ pub struct Operation {
     pub args: Bindings,
 }
 
+impl Operation {
+    /// The bound arguments in a canonical (name-sorted) order — the wire
+    /// codec (`net::proto`) needs a deterministic parameter sequence, and
+    /// `Bindings` is a hash map with no stable iteration order.
+    pub fn canonical_args(&self) -> Vec<(&str, &crate::db::Value)> {
+        let mut args: Vec<_> = self.args.iter().map(|(k, v)| (k.as_str(), v)).collect();
+        args.sort_by_key(|&(k, _)| k);
+        args
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

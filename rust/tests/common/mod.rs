@@ -1,0 +1,139 @@
+//! Shared fixture for the wire-level (`net_*`) integration tests: the
+//! Figure-1 store app extended with a confluent `rate` template, its
+//! seed data, and an operation builder. Not itself a test crate —
+//! `cargo` only builds files directly under `tests/`.
+#![allow(dead_code)] // each test crate uses a subset of the fixture
+
+use elia::analysis::OpClass;
+use elia::catalog::{Schema, TableSchema, ValueType};
+use elia::db::{Bindings, Db, Value};
+use elia::sqlir::parse_statement;
+use elia::workload::analyzed::AnalyzedApp;
+use elia::workload::spec::{AppSpec, Operation, TxnTemplate};
+use std::sync::Arc;
+
+pub const N_ITEMS: i64 = 6;
+pub const INIT_STOCK: i64 = 50;
+
+/// The Figure-1 store (guarded global order, local cart ops) plus a
+/// confluent `rate` template: a non-negative score delta whose target
+/// row is only known inside the body, so conflict analysis makes it
+/// global and the invariant-confluence pass promotes it to
+/// coordination-free.
+pub fn store_app() -> Arc<AnalyzedApp> {
+    let schema = Schema::new(vec![
+        TableSchema::new(
+            "CARTS",
+            &[("CID", ValueType::Int), ("ITEM", ValueType::Int), ("QTY", ValueType::Int)],
+            &["CID", "ITEM"],
+        ),
+        TableSchema::new(
+            "STOCK",
+            &[("ITEM", ValueType::Int), ("LEVEL", ValueType::Int), ("SOLD", ValueType::Int)],
+            &["ITEM"],
+        ),
+        TableSchema::new(
+            "RATING",
+            &[("ITEM", ValueType::Int), ("SCORE", ValueType::Int)],
+            &["ITEM"],
+        )
+        .with_nonnegative("SCORE"),
+    ]);
+    let txns = vec![
+        TxnTemplate::new(
+            "add",
+            &["c", "t", "a"],
+            &[
+                ("upd", "UPDATE CARTS SET QTY = QTY + ?a WHERE CID = ?c AND ITEM = ?t"),
+                ("ins", "INSERT INTO CARTS (CID, ITEM, QTY) VALUES (?c, ?t, ?a)"),
+            ],
+            1.0,
+        )
+        .with_body(|ctx, args| {
+            let r = ctx.exec("upd", args)?;
+            if r.affected == 0 {
+                return ctx.exec("ins", args);
+            }
+            Ok(r)
+        }),
+        TxnTemplate::new(
+            "order",
+            &["c"],
+            &[
+                ("read", "SELECT ITEM, QTY FROM CARTS WHERE CID = ?c"),
+                ("check", "SELECT LEVEL FROM STOCK WHERE ITEM = ?derived_item"),
+                ("dec", "UPDATE STOCK SET LEVEL = LEVEL - ?q, SOLD = SOLD + ?q WHERE ITEM = ?derived_item"),
+                ("clear", "DELETE FROM CARTS WHERE CID = ?c"),
+            ],
+            1.0,
+        )
+        .with_body(|ctx, args| {
+            let lines = ctx.exec("read", args)?;
+            for line in &lines {
+                let qty = line[1].as_int().unwrap_or(0);
+                let mut b = args.clone();
+                b.insert("derived_item".into(), line[0].clone());
+                b.insert("q".into(), Value::Int(qty));
+                // Guard: only sell what is in stock (the serializable
+                // check-then-act the paper's example relies on).
+                let level = ctx
+                    .exec("check", &b)?
+                    .scalar()
+                    .and_then(|v| v.as_int())
+                    .unwrap_or(0);
+                if level >= qty {
+                    ctx.exec("dec", &b)?;
+                }
+            }
+            ctx.exec("clear", args)
+        }),
+        TxnTemplate::new(
+            "readCart",
+            &["c"],
+            &[("q", "SELECT ITEM, QTY FROM CARTS WHERE CID = ?c")],
+            1.0,
+        )
+        .with_body(|ctx, args| ctx.exec("q", args)),
+        TxnTemplate::new(
+            "rate",
+            &["t", "q"],
+            &[("u", "UPDATE RATING SET SCORE = SCORE + ?q WHERE ITEM = ?derived_t")],
+            1.0,
+        )
+        .with_nonneg_param("q")
+        .with_body(|ctx, args| {
+            let mut b = args.clone();
+            b.insert("derived_t".into(), args["t"].clone());
+            ctx.exec("u", &b)
+        }),
+    ];
+    let app = AnalyzedApp::analyze_confluent(AppSpec { name: "store".into(), schema, txns });
+    assert_eq!(*app.class(0), OpClass::Local);
+    assert_eq!(*app.class(1), OpClass::Global);
+    assert_eq!(*app.class(2), OpClass::Local);
+    assert_eq!(*app.class(3), OpClass::Confluent);
+    Arc::new(app)
+}
+
+/// Seed `N_ITEMS` stock rows (level `INIT_STOCK`) and zeroed ratings.
+pub fn seed(db: &Db) {
+    let stock =
+        parse_statement("INSERT INTO STOCK (ITEM, LEVEL, SOLD) VALUES (?i, ?l, 0)").unwrap();
+    let rating = parse_statement("INSERT INTO RATING (ITEM, SCORE) VALUES (?i, 0)").unwrap();
+    for i in 0..N_ITEMS {
+        let b: Bindings =
+            [("i".to_string(), Value::Int(i)), ("l".to_string(), Value::Int(INIT_STOCK))]
+                .into_iter()
+                .collect();
+        db.exec_auto(&stock, &b).unwrap();
+        db.exec_auto(&rating, &b).unwrap();
+    }
+}
+
+/// Build a concrete operation with integer-bound params.
+pub fn op(app: &AnalyzedApp, name: &str, pairs: &[(&str, i64)]) -> Operation {
+    Operation {
+        txn: app.spec.txn_index(name).unwrap(),
+        args: pairs.iter().map(|(k, v)| (k.to_string(), Value::Int(*v))).collect(),
+    }
+}

@@ -1,0 +1,261 @@
+//! Protocol robustness (satellite of the served-system PR): property
+//! round-trips of the frame codec and the full message set, plus
+//! torn-frame / short-read / oversized-length / bit-flip fuzz that must
+//! error *cleanly* — a `ProtoError`, never a panic — mirroring the
+//! torn-tail discipline of `db::wal` recovery.
+
+use elia::conveyor::{Token, TokenEntry};
+use elia::db::{Key, StateUpdate, Value};
+use elia::db::update::{ColOp, WriteRecord};
+use elia::net::proto::{decode_msg, deframe, encode_msg, frame, read_frame, Msg, Role, WireError};
+use elia::net::{ProtoError, FRAME_HEADER, MAX_FRAME};
+use elia::util::qcheck::{check, Config};
+use elia::util::Rng;
+use elia::workload::spec::Reply;
+use std::sync::Arc;
+
+fn arb_value(rng: &mut Rng) -> Value {
+    match rng.range(0, 4) {
+        0 => Value::Int(rng.next_u64() as i64),
+        1 => Value::Float((rng.next_u64() as i64 % 10_000) as f64 / 8.0),
+        2 => {
+            let len = rng.range(0, 12);
+            Value::Str((0..len).map(|_| (b'a' + rng.range(0, 26) as u8) as char).collect())
+        }
+        _ => Value::Null,
+    }
+}
+
+fn arb_key(rng: &mut Rng) -> Key {
+    let cols = 1 + rng.range(0, 2);
+    Key((0..cols)
+        .map(|_| {
+            if rng.chance(0.5) {
+                Value::Int(rng.next_u64() as i64)
+            } else {
+                Value::Str(format!("k{}", rng.range(0, 1000)))
+            }
+        })
+        .collect())
+}
+
+fn arb_update(rng: &mut Rng) -> StateUpdate {
+    let n = rng.range(0, 4);
+    let mut u = StateUpdate::new();
+    for _ in 0..n {
+        let rec = match rng.range(0, 3) {
+            0 => WriteRecord::Insert {
+                table: rng.range(0, 8),
+                key: arb_key(rng),
+                row: Arc::new((0..rng.range(1, 5)).map(|_| arb_value(rng)).collect()),
+            },
+            1 => WriteRecord::Update {
+                table: rng.range(0, 8),
+                key: arb_key(rng),
+                cols: (0..rng.range(1, 4))
+                    .map(|_| {
+                        let op = if rng.chance(0.5) {
+                            ColOp::Set(arb_value(rng))
+                        } else {
+                            ColOp::Add(Value::Int(rng.range(0, 100) as i64))
+                        };
+                        (rng.range(0, 6), op)
+                    })
+                    .collect(),
+            },
+            _ => WriteRecord::Delete { table: rng.range(0, 8), key: arb_key(rng) },
+        };
+        u.push(rec);
+    }
+    u
+}
+
+fn arb_token(rng: &mut Rng) -> Token {
+    let n = 1 + rng.range(0, 5);
+    let mut t = Token::new(n);
+    for _ in 0..rng.range(0, 6) {
+        t.append(rng.range(0, n), arb_update(rng));
+    }
+    // Advance some watermarks / rotation counters through the real API.
+    for p in 0..n {
+        if rng.chance(0.5) {
+            let _ = t.on_receive(p);
+        }
+    }
+    t.rotations = rng.range(0, 40) as u64;
+    t
+}
+
+fn arb_msg(rng: &mut Rng) -> Msg {
+    match rng.range(0, 7) {
+        0 => Msg::Hello {
+            role: if rng.chance(0.5) { Role::Client } else { Role::Ring },
+            app: format!("app{}", rng.range(0, 10)),
+            n_servers: rng.range(1, 16) as u32,
+            sender: rng.range(0, 16) as u32,
+        },
+        1 => Msg::HelloOk { server: rng.range(0, 16) as u32 },
+        2 => Msg::Request {
+            txn: format!("txn{}", rng.range(0, 20)),
+            args: (0..rng.range(0, 5))
+                .map(|i| (format!("p{i}"), arb_value(rng)))
+                .collect(),
+        },
+        3 => {
+            let rows: Vec<Vec<Value>> = (0..rng.range(0, 5))
+                .map(|_| (0..rng.range(1, 4)).map(|_| arb_value(rng)).collect())
+                .collect();
+            let affected = rng.range(0, 9);
+            Msg::ReplyOk(Reply::from_owned_rows(rows, affected))
+        }
+        4 => Msg::ReplyErr(WireError {
+            retryable: rng.chance(0.5),
+            message: format!("err{}", rng.range(0, 1000)),
+        }),
+        5 => Msg::TokenPass {
+            hop: rng.next_u64() >> 1,
+            idle: rng.range(0, 64) as u32,
+            token: arb_token(rng),
+        },
+        _ => Msg::TokenAck { hop: rng.next_u64() >> 1 },
+    }
+}
+
+#[test]
+fn frame_roundtrip_property() {
+    check(Config::default().cases(300).name("frame-roundtrip"), |rng| {
+        let len = rng.range(0, 2048);
+        let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let framed = frame(&payload);
+        assert_eq!(framed.len(), FRAME_HEADER + payload.len());
+        let (got, consumed) = deframe(&framed).expect("clean deframe");
+        assert_eq!(consumed, framed.len());
+        assert_eq!(got, &payload[..]);
+        // The streaming reader agrees with the slice reader.
+        let mut cursor = std::io::Cursor::new(&framed);
+        assert_eq!(read_frame(&mut cursor).expect("read_frame"), payload);
+    });
+}
+
+#[test]
+fn message_roundtrip_property() {
+    check(Config::default().cases(300).name("msg-roundtrip"), |rng| {
+        let msg = arb_msg(rng);
+        let bytes = encode_msg(&msg);
+        let back = decode_msg(&bytes).expect("decode of a clean encode");
+        assert_eq!(back, msg);
+        // And through the frame layer too.
+        let (payload, _) = deframe(&frame(&bytes)).unwrap();
+        assert_eq!(decode_msg(payload).expect("deframed decode"), msg);
+    });
+}
+
+/// Any mutation of a valid frame — truncation, bit flips, garbage
+/// prefixes — must produce `Err(ProtoError)`, never a panic and never a
+/// silently wrong success.
+#[test]
+fn mutated_frames_error_cleanly() {
+    check(Config::default().cases(400).name("frame-fuzz"), |rng| {
+        let msg = arb_msg(rng);
+        let framed = frame(&encode_msg(&msg));
+        let mut bytes = framed.clone();
+        match rng.range(0, 3) {
+            0 => {
+                // Truncate: short read / torn tail.
+                let cut = rng.range(0, bytes.len());
+                bytes.truncate(cut);
+            }
+            1 => {
+                // Flip a bit somewhere.
+                let i = rng.range(0, bytes.len());
+                bytes[i] ^= 1 << rng.range(0, 8);
+            }
+            _ => {
+                // Random garbage of arbitrary length.
+                let len = rng.range(0, 64);
+                bytes = (0..len).map(|_| rng.next_u64() as u8).collect();
+            }
+        }
+        if bytes == framed {
+            return; // mutation was a no-op (e.g. truncate at full length)
+        }
+        // deframe over the mutated slice: must be Ok (a valid reframe
+        // of *different* bytes is impossible thanks to the checksum —
+        // except a benign same-payload parse) or a clean error.
+        match deframe(&bytes) {
+            Ok((payload, _)) => {
+                // Checksum held, so decode must not panic either way.
+                let _ = decode_msg(payload);
+            }
+            Err(e) => {
+                assert!(
+                    matches!(
+                        e,
+                        ProtoError::Torn(_)
+                            | ProtoError::Checksum
+                            | ProtoError::Oversized { .. }
+                            | ProtoError::Closed
+                    ),
+                    "unexpected error class: {e:?}"
+                );
+            }
+        }
+        // The streaming path must agree (and also never panic).
+        let mut cursor = std::io::Cursor::new(&bytes);
+        let _ = read_frame(&mut cursor);
+    });
+}
+
+/// Checksum-valid payloads with mutated bodies: `decode_msg` must return
+/// `ProtoError::Decode` (or a different valid message on a benign
+/// mutation), never panic — the "corrupt body is a hard error" half of
+/// the WAL taxonomy.
+#[test]
+fn mutated_payloads_never_panic() {
+    check(Config::default().cases(400).name("payload-fuzz"), |rng| {
+        let msg = arb_msg(rng);
+        let mut payload = encode_msg(&msg);
+        for _ in 0..1 + rng.range(0, 4) {
+            if payload.is_empty() {
+                break;
+            }
+            let i = rng.range(0, payload.len());
+            payload[i] = rng.next_u64() as u8;
+        }
+        let _ = decode_msg(&payload); // must not panic
+        // Truncations of the payload must not panic either.
+        let cut = rng.range(0, payload.len() + 1);
+        let _ = decode_msg(&payload[..cut]);
+    });
+}
+
+#[test]
+fn oversized_length_is_rejected_before_allocation() {
+    // A hostile 4 GiB length prefix must be rejected from the header
+    // alone — deframe and read_frame both refuse before any allocation.
+    let mut bytes = vec![0u8; FRAME_HEADER];
+    bytes[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+    match deframe(&bytes) {
+        Err(ProtoError::Oversized { len, max }) => {
+            assert_eq!(len, u32::MAX as usize);
+            assert_eq!(max, MAX_FRAME);
+        }
+        other => panic!("expected Oversized, got {other:?}"),
+    }
+    let mut cursor = std::io::Cursor::new(&bytes);
+    assert!(matches!(read_frame(&mut cursor), Err(ProtoError::Oversized { .. })));
+}
+
+#[test]
+fn torn_header_and_torn_payload_are_distinguished_from_clean_eof() {
+    let framed = frame(&encode_msg(&Msg::TokenAck { hop: 7 }));
+    // Clean EOF at a frame boundary.
+    let mut empty = std::io::Cursor::new(&[][..]);
+    assert!(matches!(read_frame(&mut empty), Err(ProtoError::Closed)));
+    // EOF mid-header.
+    let mut torn_header = std::io::Cursor::new(&framed[..FRAME_HEADER / 2]);
+    assert!(matches!(read_frame(&mut torn_header), Err(ProtoError::Torn(_))));
+    // EOF mid-payload.
+    let mut torn_payload = std::io::Cursor::new(&framed[..framed.len() - 1]);
+    assert!(matches!(read_frame(&mut torn_payload), Err(ProtoError::Torn(_))));
+}

@@ -1,0 +1,227 @@
+//! Wire-level serializability: the `tests/serializability.rs` witness
+//! invariants re-run through the *served* system — real framed messages
+//! over the deterministic loopback transport, three servers, a mix of
+//! local, global, and confluent operations.
+//!
+//! Checks:
+//! 1. **Runtime equivalence** — a fixed single-client history driven
+//!    through the network produces bit-identical per-server
+//!    `content_hash` to the same history on the in-process
+//!    [`Deployment`] (same routing, same token order, same replay).
+//! 2. **Invariants under concurrency** — no oversell, conservation, and
+//!    replicated-table convergence with 8 racing wire clients.
+//! 3. **Token history oracle** — every replicated update appears in the
+//!    belt history exactly once (sequence numbers contiguous).
+//! 4. **Retry classification** — lock conflicts come back retryable and
+//!    are absorbed by the client stub; invariant violations come back
+//!    non-retryable and surface immediately.
+
+mod common;
+
+use common::{op, seed, store_app, INIT_STOCK, N_ITEMS};
+use elia::conveyor::{DeployConfig, Deployment};
+use elia::db::{Key, Value};
+use elia::harness::experiments::{replica_hash, replicated_tables};
+use elia::net::{Cluster, Loopback, NetError, ServeConfig, Transport};
+use elia::util::Rng;
+use elia::workload::analyzed::AnalyzedApp;
+use elia::workload::spec::Operation;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// The fixed mixed history used by the equivalence test: local adds and
+/// reads, global orders, confluent rates.
+fn fixed_history(app: &AnalyzedApp) -> Vec<Operation> {
+    let mut ops = Vec::new();
+    for c in 0..30i64 {
+        ops.push(op(app, "add", &[("c", c), ("t", c % N_ITEMS), ("a", 1 + c % 3)]));
+        ops.push(op(app, "rate", &[("t", c % N_ITEMS), ("q", c % 5)]));
+        if c % 3 == 0 {
+            ops.push(op(app, "add", &[("c", c), ("t", (c + 1) % N_ITEMS), ("a", 2)]));
+        }
+        ops.push(op(app, "readCart", &[("c", c)]));
+        if c % 2 == 0 {
+            ops.push(op(app, "order", &[("c", c)]));
+        }
+    }
+    ops
+}
+
+/// (1) Runtime equivalence: the served system and the in-process
+/// deployment execute a fixed history to bit-identical per-server state
+/// — full `content_hash`, every table, every server.
+#[test]
+fn wire_history_matches_in_process_deployment() {
+    let n = 3;
+    let app = store_app();
+    let history = fixed_history(&app);
+
+    // In-process reference.
+    let dep = Deployment::start(
+        Arc::clone(&app),
+        DeployConfig { n_servers: n, ..Default::default() },
+        seed,
+    );
+    for o in &history {
+        dep.submit(o.clone()).unwrap();
+    }
+    dep.shutdown();
+
+    // The same history over the wire.
+    let transport: Arc<dyn Transport> = Arc::new(Loopback::new());
+    let cluster =
+        Cluster::start(Arc::clone(&app), ServeConfig::loopback(n), transport, seed).unwrap();
+    let mut client = cluster.client(Arc::clone(&app)).unwrap();
+    for o in &history {
+        client.submit(o).unwrap();
+    }
+    cluster.shutdown();
+
+    for s in 0..n {
+        assert_eq!(
+            cluster.db(s).content_hash(),
+            dep.db(s).content_hash(),
+            "server {s}: served state diverged from in-process deployment"
+        );
+    }
+}
+
+/// (2) + (3) Concurrency invariants and the token-history oracle over
+/// the wire: 8 racing clients, then no oversell, conservation,
+/// replicated-table convergence, rating-sum accounting, and a
+/// no-dup/no-loss check on the recorded belt history.
+#[test]
+fn wire_invariants_hold_under_concurrent_clients() {
+    let n = 3;
+    let app = store_app();
+    let transport: Arc<dyn Transport> = Arc::new(Loopback::new());
+    let cfg = ServeConfig { record_history: true, ..ServeConfig::loopback(n) };
+    let cluster = Arc::new(Cluster::start(Arc::clone(&app), cfg, transport, seed).unwrap());
+
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let cluster = Arc::clone(&cluster);
+        let app = Arc::clone(&app);
+        handles.push(std::thread::spawn(move || {
+            let mut client = cluster.client(Arc::clone(&app)).unwrap();
+            let mut rng = Rng::new(t + 1);
+            let mut rated = 0i64;
+            for i in 0..40 {
+                let cart = (t * 1000 + i) as i64;
+                let item = rng.range(0, N_ITEMS as usize) as i64;
+                let qty = 1 + rng.range(0, 3) as i64;
+                client.submit(&op(&app, "add", &[("c", cart), ("t", item), ("a", qty)])).unwrap();
+                let q = rng.range(0, 4) as i64;
+                client.submit(&op(&app, "rate", &[("t", item), ("q", q)])).unwrap();
+                rated += q;
+                client.submit(&op(&app, "order", &[("c", cart)])).unwrap();
+            }
+            rated
+        }));
+    }
+    let total_rated: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    cluster.shutdown();
+
+    // Replicated tables converge (and are exactly the ones the analysis
+    // says ride the token: STOCK via global orders, RATING via confluent
+    // rates; CARTS has local writers, so it may diverge).
+    let tables = replicated_tables(&app);
+    assert_eq!(tables, ["STOCK", "RATING"], "schema-order names of token-replicated tables");
+    let h0 = replica_hash(cluster.db(0), &tables);
+    for s in 1..n {
+        assert_eq!(replica_hash(cluster.db(s), &tables), h0, "server {s} replica digest");
+    }
+
+    // No oversell + conservation at every server; rating sums match the
+    // client-side account at every server.
+    for s in 0..n {
+        let mut score_sum = 0i64;
+        for i in 0..N_ITEMS {
+            let r = cluster.db(s).peek("STOCK", &Key::single(Value::Int(i))).unwrap();
+            let (level, sold) = (r[1].as_int().unwrap(), r[2].as_int().unwrap());
+            assert!(level >= 0, "item {i} oversold at server {s}: level={level}");
+            assert_eq!(level + sold, INIT_STOCK, "conservation broken for item {i}");
+            let rr = cluster.db(s).peek("RATING", &Key::single(Value::Int(i))).unwrap();
+            score_sum += rr[1].as_int().unwrap();
+        }
+        assert_eq!(score_sum, total_rated, "server {s} rating mass");
+    }
+
+    // History oracle: the belt saw every replicated update exactly once.
+    let history = cluster.global_history();
+    let expected: u64 = (0..n)
+        .map(|s| {
+            cluster.node(s).ops_global.load(Ordering::Relaxed)
+                + cluster.node(s).ops_confluent.load(Ordering::Relaxed)
+        })
+        .sum();
+    assert_eq!(history.len() as u64, expected, "token entries vs executed replicated ops");
+    for (i, e) in history.iter().enumerate() {
+        assert_eq!(e.seq, i as u64 + 1, "belt history has a gap or duplicate");
+    }
+}
+
+/// (4a) Lock conflicts are retryable over the wire and the client stub
+/// absorbs them: with server-side wait-die retries disabled, racing
+/// writers on one hot row must still all complete, via client retries.
+#[test]
+fn lock_conflicts_are_retried_by_the_client_stub() {
+    let app = store_app();
+    let transport: Arc<dyn Transport> = Arc::new(Loopback::new());
+    let cfg = ServeConfig { max_retries: 0, ..ServeConfig::loopback(1) };
+    let cluster = Arc::new(Cluster::start(Arc::clone(&app), cfg, transport, seed).unwrap());
+
+    // Materialize the hot row first so every racing add takes the pure
+    // UPDATE path (write-lock conflicts, not insert races).
+    let mut seeder = cluster.client(Arc::clone(&app)).unwrap();
+    seeder.submit(&op(&app, "add", &[("c", 1), ("t", 1), ("a", 1)])).unwrap();
+
+    let mut handles = Vec::new();
+    for _ in 0..4u64 {
+        let cluster = Arc::clone(&cluster);
+        let app = Arc::clone(&app);
+        handles.push(std::thread::spawn(move || {
+            let mut client = cluster.client(Arc::clone(&app)).unwrap();
+            for _ in 0..150 {
+                // Everyone updates the same (cart, item) row.
+                client.submit(&op(&app, "add", &[("c", 1), ("t", 1), ("a", 1)])).unwrap();
+            }
+            client.retries
+        }));
+    }
+    let retries: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    cluster.shutdown();
+
+    assert!(retries > 0, "4 x 150 same-row updates with wait-die disabled must conflict");
+    let r = cluster.db(0).peek("CARTS", &Key(vec![Value::Int(1), Value::Int(1)])).unwrap();
+    assert_eq!(r[2], Value::Int(601), "every conflicted op must have landed exactly once");
+}
+
+/// (4b) Invariant violations are non-retryable: they surface immediately
+/// as `NetError::Server { retryable: false }`, with zero client retries.
+#[test]
+fn invariant_violations_surface_as_non_retryable() {
+    let app = store_app();
+    let transport: Arc<dyn Transport> = Arc::new(Loopback::new());
+    let cluster =
+        Cluster::start(Arc::clone(&app), ServeConfig::loopback(2), transport, seed).unwrap();
+    let mut client = cluster.client(Arc::clone(&app)).unwrap();
+
+    // A lying non-negative param: SCORE starts at 0, so a negative delta
+    // violates RATING's declared non-negativity at execution time.
+    match client.submit(&op(&app, "rate", &[("t", 2), ("q", -100)])) {
+        Err(NetError::Server(e)) => {
+            assert!(!e.retryable, "invariant violations must not be retried: {e}");
+        }
+        other => panic!("expected a server-side invariant error, got {other:?}"),
+    }
+    assert_eq!(client.retries, 0, "non-retryable errors must not burn retries");
+
+    // The cluster is still healthy afterwards.
+    client.submit(&op(&app, "rate", &[("t", 2), ("q", 5)])).unwrap();
+    cluster.shutdown();
+    for s in 0..2 {
+        let r = cluster.db(s).peek("RATING", &Key::single(Value::Int(2))).unwrap();
+        assert_eq!(r[1], Value::Int(5), "server {s}: only the valid delta may survive");
+    }
+}
