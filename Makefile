@@ -1,12 +1,13 @@
 # Developer entry points. `make check` is the pre-PR gate (see ROADMAP.md).
 
-.PHONY: check build test test-par test-analysis test-crash test-net clippy doc bench bench-sim bench-table1 bench-live artifacts
+.PHONY: check build test test-par test-analysis test-crash test-net test-drift clippy doc bench bench-sim bench-table1 bench-live bench-drift artifacts
 
 # Pre-PR gate: release build + tests (incl. the parallel-determinism
 # ladder, the analysis/confluence suites under two lock-shard settings,
-# the crash-recovery seed matrix and the networked-belt suites) + lint
-# + the rustdoc gate, all from the rust crate.
-check: build test-par test-analysis test-crash test-net clippy doc
+# the crash-recovery seed matrix, the networked-belt suites and the
+# live-routing-epoch suite) + lint + the rustdoc gate, all from the
+# rust crate.
+check: build test-par test-analysis test-crash test-net test-drift clippy doc
 
 build:
 	cd rust && cargo build --release
@@ -65,6 +66,14 @@ test-net:
 	cd rust && ELIA_LOCK_SHARDS=32 cargo test -q --test net_proto --test net_serializability --test net_belt_fault
 	cd rust && cargo test -q --test net_tcp
 
+# Live routing epochs (adaptive operation partitioning under drift):
+# the static-vs-adaptive belted-fraction shape, epoch-switch soundness
+# (contiguous token seqs, prefix-exact replicas across a switch) and
+# the real-threads deployment's controller; release because the sim
+# arms execute ~100k real operations each.
+test-drift:
+	cd rust && cargo test -q --release --test drift_adaptive
+
 clippy:
 	cd rust && cargo clippy -- -D warnings
 
@@ -95,6 +104,12 @@ bench-table1:
 # threads; writes BENCH_live.json. CI passes --quick via BENCHFLAGS.
 bench-live:
 	cd rust && cargo bench --bench fig3_live -- $(BENCHFLAGS)
+
+# Static vs adaptive routing under workload drift (the live-routing-
+# epoch figure): per-second belted-fraction curves for both arms;
+# writes BENCH_drift.json. ELIA_BENCH_QUICK=1 shrinks the scale on CI.
+bench-drift:
+	cd rust && cargo bench --bench drift_adaptive
 
 # AOT-compile the Pallas partition-cost model to HLO text for the
 # (feature-gated) PJRT runtime. Needs jax; see python/compile/aot.py.

@@ -90,3 +90,39 @@ def partition_cost(cand, cw, elim, *, block_b=DEFAULT_BLOCK_B):
     total = jnp.sum(cw)
     q = _quadratic_form(c, w, block_b=min(block_b, max(b, 1)))
     return total - q
+
+
+@jax.jit
+def hypergraph_cost(cand, w, conflict, elim):
+    """Batched hypergraph-cut cost, mirroring the Rust drift scorer.
+
+    The pairwise ``partition_cost`` charges every surviving conflicting
+    *pair*; this charges each *template* hyperedge once, as soon as any
+    incident conflict survives the assignment — the cost the epoch
+    controller minimizes (``HypergraphScorer::cut`` in
+    ``rust/src/analysis/hypergraph.rs``):
+
+        cost[b] = sum_t w[t] * [exists t': conflict(t,t') and not
+                                covered under (cand[b,t], cand[b,t'])]
+
+    ``conflict`` and ``elim`` are populated on the upper triangle only
+    (like ``cw``); access is normalized onto it, and an all-zero
+    candidate row ("no parameter") never covers anything.
+
+    Args:
+      cand:     f32[B, T, K] one-hot candidate partitioning arrays.
+      w:        f32[T] per-template hyperedge weights (observed rates).
+      conflict: f32[T, T] 0/1 conflict adjacency (upper triangle).
+      elim:     f32[T, T, K, K] coverage bits (upper triangle).
+
+    Returns:
+      f32[B] costs.
+    """
+    _, t, _ = cand.shape
+    covered = jnp.einsum("btk,bsl,tskl->bts", cand, cand, elim)
+    iu = jnp.triu(jnp.ones((t, t), cand.dtype))
+    cov = iu[None] * covered + (1.0 - iu)[None] * jnp.swapaxes(covered, 1, 2)
+    link = iu * conflict + (1.0 - iu) * conflict.T
+    # broken[b,t] = 1 iff any incident conflict survives (bits, so max = any).
+    broken = jnp.max(link[None] * (1.0 - cov), axis=2)
+    return jnp.sum(w[None, :] * broken, axis=1)

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from compile.kernels.partition_cost import partition_cost
+from compile.kernels.partition_cost import hypergraph_cost, partition_cost
 from compile.kernels.ref import partition_cost_ref
 
 
@@ -131,3 +131,70 @@ def test_block_size_invariance(block):
     base = np.asarray(partition_cost(cand, cw, elim, block_b=128))
     got = np.asarray(partition_cost(cand, cw, elim, block_b=block))
     np.testing.assert_allclose(got, base, rtol=1e-6)
+
+
+def hypergraph_cost_oracle(cand, w, conflict, elim):
+    """Loop transcription of HypergraphScorer::cut (rust hypergraph.rs)."""
+    b, t, k = cand.shape
+    out = np.zeros(b, np.float32)
+    for bi in range(b):
+        for ti in range(t):
+            broken = False
+            for si in range(t):
+                a, c = (ti, si) if ti <= si else (si, ti)
+                if not conflict[a, c]:
+                    continue
+                ka, kc = np.argmax(cand[bi, a]), np.argmax(cand[bi, c])
+                covered = (
+                    cand[bi, a].any()
+                    and cand[bi, c].any()
+                    and elim[a, c, ka, kc] > 0.0
+                )
+                if not covered:
+                    broken = True
+                    break
+            if broken:
+                out[bi] += w[ti]
+    return out
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 24),
+    t=st.integers(1, 8),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_hypergraph_matches_rust_oracle(b, t, k, seed):
+    rng = np.random.default_rng(seed)
+    cand, cw, elim = make_instance(rng, b, t, k)
+    conflict = (np.asarray(cw) > 0).astype(np.float32)
+    w = rng.integers(1, 10, t).astype(np.float32)
+    got = np.asarray(hypergraph_cost(cand, jnp.asarray(w), jnp.asarray(conflict), elim))
+    want = hypergraph_cost_oracle(np.asarray(cand), w, conflict, np.asarray(elim))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+def test_hypergraph_cart_example():
+    # Mirrors hypergraph.rs::each_broken_template_pays_once: both on sid
+    # covers everything; doCart on iid breaks the cross pair, so BOTH
+    # hyperedges pay — but each exactly once (3.0, not the pairwise 3.0+).
+    t, k = 2, 3
+    conflict = np.zeros((t, t), np.float32)
+    conflict[0, 0] = conflict[0, 1] = conflict[1, 1] = 1.0
+    elim = np.zeros((t, t, k, k), np.float32)
+    elim[0, 0, 0, 0] = 1.0
+    elim[0, 1, 0, 0] = 1.0
+    elim[1, 1, 0, 0] = 1.0
+    elim[1, 1, 1, 1] = 1.0
+    w = np.array([1.0, 2.0], np.float32)
+    cand = np.zeros((3, t, k), np.float32)
+    cand[0, 0, 0] = cand[0, 1, 0] = 1.0  # both sid   -> 0.0
+    cand[1, 0, 0] = cand[1, 1, 1] = 1.0  # doCart=iid -> 1.0 + 2.0
+    # candidate 2: no params at all      -> 3.0
+    out = np.asarray(
+        hypergraph_cost(
+            jnp.asarray(cand), jnp.asarray(w), jnp.asarray(conflict), jnp.asarray(elim)
+        )
+    )
+    np.testing.assert_allclose(out, [0.0, 3.0, 3.0])

@@ -1,0 +1,96 @@
+//! Drift figure — static vs adaptive operation partitioning under a
+//! flash-crowd workload shift (live routing epochs, `analysis::drift`).
+//!
+//! Expected shape: the two arms are indistinguishable before the drift
+//! point (both run epoch 0). At t=10s the traffic mix flips from the
+//! A-side to the B-side template; the static arm's belted fraction
+//! jumps (the still-local template is now the cold one) and stays high,
+//! while the adaptive arm's controller observes the new mix, re-runs
+//! the partitioner over the token, and installs an epoch that makes the
+//! hot template local again — its steady-state belted fraction returns
+//! to the pre-drift level. Writes `BENCH_drift.json`.
+
+use elia::harness::experiments::{fig_drift, DriftArm, ExpScale};
+use elia::harness::report;
+use elia::simnet::parallel::resolve_threads;
+use elia::util::cli::Args;
+
+fn write_json(results: &[(String, f64)], path: &str) {
+    let mut s = String::from("{\n");
+    for (i, (name, v)) in results.iter().enumerate() {
+        let sep = if i + 1 < results.len() { "," } else { "" };
+        s.push_str(&format!("  \"{}\": {:.4}{}\n", name.replace('"', "'"), v, sep));
+    }
+    s.push_str("}\n");
+    match std::fs::write(path, &s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nwarning: could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    // Simulator worker threads; 0 (the default) = all available cores.
+    let par = args.get_parse("parallel", 0usize);
+    let quick = std::env::var("ELIA_BENCH_QUICK").is_ok();
+    let scale =
+        (if quick { ExpScale::quick() } else { ExpScale::full() }).with_parallel(par);
+    println!("[drift simulator threads: {}]", resolve_threads(par));
+
+    let t0 = std::time::Instant::now();
+    let (fixed, adaptive) = fig_drift(&scale);
+
+    println!("\n=== Drift — belted fraction, static vs adaptive (LAN, 3 servers) ===");
+    let row = |a: &DriftArm| {
+        vec![
+            a.label.clone(),
+            format!("{:.3}", a.belted_pre),
+            format!("{:.3}", a.belted_post),
+            format!("{}", a.epoch_switches),
+            format!("{}", a.final_epoch),
+            format!("{}", a.redirects),
+            format!("{:.0}", a.throughput),
+            format!("{:.1}", a.mean_latency_ms),
+        ]
+    };
+    println!(
+        "{}",
+        report::table(
+            &["arm", "belted pre", "belted post", "switches", "epoch", "redirects", "ops/s", "mean ms"],
+            &[row(&fixed), row(&adaptive)],
+        )
+    );
+
+    // Per-second curves (belted/total), the figure's raw series.
+    println!("\nper-second belted fraction (static | adaptive):");
+    let frac = |c: &[(u64, u64)], s: usize| -> f64 {
+        match c.get(s) {
+            Some(&(g, l)) if g + l > 0 => g as f64 / (g + l) as f64,
+            _ => 0.0,
+        }
+    };
+    let secs = fixed.curve.len().max(adaptive.curve.len());
+    for s in 0..secs {
+        println!(
+            "  t={s:>2}s  {:.3} | {:.3}",
+            frac(&fixed.curve, s),
+            frac(&adaptive.curve, s)
+        );
+    }
+
+    let results = vec![
+        ("static_belted_pre".to_string(), fixed.belted_pre),
+        ("static_belted_post".to_string(), fixed.belted_post),
+        ("adaptive_belted_pre".to_string(), adaptive.belted_pre),
+        ("adaptive_belted_post".to_string(), adaptive.belted_post),
+        ("adaptive_epoch_switches".to_string(), adaptive.epoch_switches as f64),
+        ("adaptive_final_epoch".to_string(), adaptive.final_epoch as f64),
+        ("adaptive_redirects".to_string(), adaptive.redirects as f64),
+        ("static_throughput".to_string(), fixed.throughput),
+        ("adaptive_throughput".to_string(), adaptive.throughput),
+        ("static_mean_ms".to_string(), fixed.mean_latency_ms),
+        ("adaptive_mean_ms".to_string(), adaptive.mean_latency_ms),
+    ];
+    write_json(&results, "BENCH_drift.json");
+    println!("[drift took {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,458 @@
+//! Live routing epochs: re-partitioning under workload drift.
+//!
+//! The paper runs Algorithm 1 once, offline. This module makes the
+//! pipeline *live*:
+//!
+//! ```text
+//!  servers count ops per template        (DriftCollector, rides the token)
+//!        │
+//!        ▼  every `window_rotations` belt rotations, at server 0
+//!  EpochController::evaluate(obs, installed)
+//!        │   reweight the elimination tensor by observed rates,
+//!        │   re-run partition::optimize under the HypergraphScorer,
+//!        │   switch iff observed_cost > best_cost × threshold
+//!        ▼
+//!  new RoutingEpoch { version+1, assignment }   (classes via pin_classes)
+//!        │
+//!        ▼  version + assignment ride the belt token
+//!  every server installs at token receipt  →  total-order barrier
+//! ```
+//!
+//! **Pinned classification.** The static classifier
+//! ([`super::classify::classify`]) *grows* routing sets to cover any
+//! coverable clause, which makes its final classes independent of the
+//! partitioning choice — correct for the offline one-shot, useless for
+//! comparing two candidate assignments. Epochs instead pin each template
+//! to exactly its chosen parameter ([`pin_classes`]): a template is
+//! Local iff *every* conflict it participates in is eliminated under the
+//! pinned pair, else Global. This is the §3.2 definition evaluated at a
+//! point, and it is exactly what the cost function counts — so the
+//! controller's "observed cost" equals the belted traffic fraction the
+//! installed epoch actually produces. Pinned epochs never emit
+//! `LocalGlobal` (that class *is* the growth the pin removes) or
+//! `Confluent` (invariant confluence is workload-static; it neither
+//! appears nor disappears with the assignment, and epoch-routed apps
+//! keep their static confluent set by construction — see
+//! `AnalyzedApp::epoch_from`).
+//!
+//! **Static vs. adaptive.** "Static routing" in the drift experiments is
+//! the same machinery with `threshold = ∞` (epoch 0 pinned forever), so
+//! the comparison isolates the re-partitioning decision, not the
+//! classifier.
+
+use std::sync::Arc;
+
+use super::classify::{Classification, OpClass};
+use super::elim::EliminationTensor;
+use super::hypergraph::{template_covered, HypergraphScorer};
+use super::partition::{optimize, PartitionOptions};
+use super::score::{Assignment, BatchScorer, ScalarScorer};
+use crate::workload::analyzed::AnalyzedApp;
+
+/// Knobs for the live-epoch controller.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Evaluate the controller every this many belt rotations (the
+    /// sliding observation window, measured in token laps).
+    pub window_rotations: u64,
+    /// Switch epochs only when `observed > best × threshold`. Values
+    /// close to 1.0 chase noise; `f64::INFINITY` freezes epoch 0
+    /// (the "static" arm of the drift experiments).
+    pub threshold: f64,
+    /// Score candidates with the [`HypergraphScorer`] (per-template
+    /// hyperedge cut, weights = observed rates) instead of the scalar
+    /// pairwise reference.
+    pub hypergraph: bool,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig { window_rotations: 64, threshold: 1.5, hypergraph: true }
+    }
+}
+
+impl AdaptiveConfig {
+    /// The static arm: epochs exist (epoch 0 is pinned) but the
+    /// controller never switches.
+    pub fn frozen() -> Self {
+        AdaptiveConfig { threshold: f64::INFINITY, ..AdaptiveConfig::default() }
+    }
+}
+
+/// Pin every template to its assigned partitioning parameter and
+/// classify at that point: Local iff every conflict the template
+/// participates in is eliminated under the pinned pair, Global
+/// otherwise, Commutative when it has no conflicts at all.
+///
+/// Unlike the growth classifier this is *choice-sensitive*: flipping the
+/// assignment flips classes, which is the whole point of an epoch.
+pub fn pin_classes(tensor: &EliminationTensor, assignment: &Assignment) -> Classification {
+    debug_assert_eq!(assignment.len(), tensor.n);
+    let n = tensor.n;
+    let mut classes = Vec::with_capacity(n);
+    for t in 0..n {
+        let has_conflict = (0..n).any(|t2| {
+            if t <= t2 { tensor.conflict[t][t2] } else { tensor.conflict[t2][t] }
+        });
+        classes.push(if !has_conflict {
+            OpClass::Commutative
+        } else if template_covered(tensor, t, assignment) {
+            OpClass::Local
+        } else {
+            OpClass::Global
+        });
+    }
+    Classification {
+        classes,
+        routing_params: assignment.iter().map(|a| a.iter().copied().collect()).collect(),
+        primary: assignment.clone(),
+    }
+}
+
+/// Per-server sliding-window counter of operations per template. Counts
+/// are flushed onto the belt token at each receipt, so the controller at
+/// server 0 sees a consistent, totally-ordered global window.
+#[derive(Debug, Clone, Default)]
+pub struct DriftCollector {
+    counts: Vec<u64>,
+}
+
+impl DriftCollector {
+    pub fn new(n_templates: usize) -> Self {
+        DriftCollector { counts: vec![0; n_templates] }
+    }
+
+    /// Record one executed (or parked-for-token) operation.
+    pub fn note(&mut self, txn: usize) {
+        if txn < self.counts.len() {
+            self.counts[txn] += 1;
+        }
+    }
+
+    /// Add the local counts into `sink` (growing it if needed) and reset.
+    pub fn flush_into(&mut self, sink: &mut Vec<u64>) {
+        if sink.len() < self.counts.len() {
+            sink.resize(self.counts.len(), 0);
+        }
+        for (s, c) in sink.iter_mut().zip(self.counts.iter_mut()) {
+            *s += *c;
+            *c = 0;
+        }
+    }
+
+    /// The counts accumulated since the last flush.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+/// The re-partitioning decision procedure. Pure: the same observation
+/// window and installed assignment always produce the same decision,
+/// which is what lets the decision ride the token without breaking
+/// bit-identical determinism.
+pub struct EpochController {
+    tensor: EliminationTensor,
+    cfg: AdaptiveConfig,
+}
+
+impl EpochController {
+    /// Rebuild the elimination tensor from the analyzed app (the app
+    /// discards it after the offline run) and capture the knobs.
+    pub fn new(app: &AnalyzedApp, cfg: AdaptiveConfig) -> Self {
+        let tensor = EliminationTensor::build(&app.spec.txns, &app.matrix);
+        EpochController { tensor, cfg }
+    }
+
+    /// Evaluate one observation window against the installed assignment.
+    /// Returns the replacement assignment when the observed cost exceeds
+    /// the achievable best by the configured threshold, `None` otherwise.
+    ///
+    /// Both costs come from the *same* scorer over the *same*
+    /// rate-reweighted tensor, so the comparison is apples to apples:
+    /// with the hypergraph scorer, "cost" is precisely the fraction of
+    /// observed traffic the pinned classes would send over the belt.
+    pub fn evaluate(&self, obs: &[u64], installed: &Assignment) -> Option<Assignment> {
+        let total: u64 = obs.iter().sum();
+        if total == 0 || obs.len() != self.tensor.n {
+            return None;
+        }
+        let rates: Vec<f64> = obs.iter().map(|&c| c as f64 / total as f64).collect();
+        let mut tensor = self.tensor.clone();
+        for t in 0..tensor.n {
+            for t2 in t..tensor.n {
+                if tensor.conflict[t][t2] {
+                    tensor.w2[t][t2] = rates[t] + rates[t2];
+                }
+            }
+        }
+        let scorer: Arc<dyn BatchScorer> = if self.cfg.hypergraph {
+            Arc::new(HypergraphScorer::new(rates))
+        } else {
+            Arc::new(ScalarScorer)
+        };
+        let observed = scorer.score(&tensor, std::slice::from_ref(installed))[0];
+        let opts = PartitionOptions { scorer, ..PartitionOptions::default() };
+        let best = optimize(&tensor, &opts);
+        // NaN-safe by construction: with threshold = ∞ and best.cost = 0
+        // the product is NaN and the comparison is false — frozen mode
+        // never switches.
+        if best.choice != *installed && observed > best.cost * self.cfg.threshold {
+            Some(best.choice)
+        } else {
+            None
+        }
+    }
+
+    /// The observation window length, in belt rotations.
+    pub fn window_rotations(&self) -> u64 {
+        self.cfg.window_rotations
+    }
+}
+
+/// Which deterministic drift scenario a workload generator plays.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftKind {
+    /// Smooth sinusoidal swing of the hot side with the given period —
+    /// "daytime traffic moves from region A's table to region B's".
+    Diurnal { period_s: f64 },
+    /// Step change at `at_s`: one item suddenly goes viral — traffic
+    /// jumps to the hot side *and* concentrates on a single key.
+    FlashCrowd { at_s: f64 },
+    /// Staircase: every `period_s` the hot key band rotates and the hot
+    /// side share steps from `lo` toward `hi`.
+    HotKey { period_s: f64 },
+}
+
+/// A deterministic drift schedule: a pure function of virtual time, so
+/// the generated workload is bit-identical at any thread or
+/// client-group count.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    pub kind: DriftKind,
+    /// Share of traffic on the pivot template (the cross-table coupling
+    /// op that forces the partitioning trade-off); constant over time.
+    pub pivot_share: f64,
+    /// B-side share of the remaining traffic before the drift…
+    pub lo: f64,
+    /// …and after it.
+    pub hi: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            kind: DriftKind::FlashCrowd { at_s: 10.0 },
+            pivot_share: 0.10,
+            lo: 0.2,
+            hi: 0.8,
+        }
+    }
+}
+
+impl DriftConfig {
+    /// B-side share of non-pivot traffic at virtual time `t_s` seconds.
+    pub fn b_share(&self, t_s: f64) -> f64 {
+        match self.kind {
+            DriftKind::Diurnal { period_s } => {
+                let s = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * t_s / period_s).cos());
+                self.lo + (self.hi - self.lo) * s
+            }
+            DriftKind::FlashCrowd { at_s } => {
+                if t_s < at_s {
+                    self.lo
+                } else {
+                    self.hi
+                }
+            }
+            DriftKind::HotKey { period_s } => {
+                let phase = (t_s / period_s).floor().max(0.0);
+                let ramp = (phase / 3.0).min(1.0);
+                self.lo + (self.hi - self.lo) * ramp
+            }
+        }
+    }
+
+    /// Key band `[lo, hi)` the B-side draws from at time `t_s`, out of
+    /// `keys` total keys. Flash crowds collapse to a single hot item;
+    /// hot-key drift rotates a narrow band around the keyspace.
+    pub fn key_band(&self, t_s: f64, keys: i64) -> (i64, i64) {
+        match self.kind {
+            DriftKind::Diurnal { .. } => (0, keys),
+            DriftKind::FlashCrowd { at_s } => {
+                if t_s < at_s {
+                    (0, keys)
+                } else {
+                    (0, 1)
+                }
+            }
+            DriftKind::HotKey { period_s } => {
+                let bw = (keys / 8).max(1);
+                let idx = ((t_s / period_s).floor().max(0.0) as i64) % 8;
+                (idx * bw, (idx * bw + bw).min(keys))
+            }
+        }
+    }
+}
+
+/// Encode an assignment for the token / wire: `-1` marks `None`.
+pub fn assignment_to_wire(a: &Assignment) -> Vec<i64> {
+    a.iter().map(|x| x.map(|k| k as i64).unwrap_or(-1)).collect()
+}
+
+/// Decode a wire assignment (negative = `None`).
+pub fn assignment_from_wire(w: &[i64]) -> Assignment {
+    w.iter().map(|&v| if v < 0 { None } else { Some(v as usize) }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::conflict::ConflictMatrix;
+    use crate::analysis::rwsets::{extract_rwsets, ExtractOptions};
+    use crate::catalog::{Schema, TableSchema, ValueType};
+    use crate::workload::spec::{AppSpec, TxnTemplate};
+
+    fn cart_templates() -> (Schema, Vec<TxnTemplate>) {
+        let schema = Schema::new(vec![TableSchema::new(
+            "SC",
+            &[("ID", ValueType::Int), ("I_ID", ValueType::Int), ("QTY", ValueType::Int)],
+            &["ID", "I_ID"],
+        )]);
+        let templates = vec![
+            TxnTemplate::new(
+                "createCart",
+                &["sid"],
+                &[("i", "INSERT INTO SC (ID, I_ID, QTY) VALUES (?sid, 0, 0)")],
+                1.0,
+            ),
+            TxnTemplate::new(
+                "doCart",
+                &["sid", "iid", "q"],
+                &[("u", "UPDATE SC SET QTY = ?q WHERE ID = ?sid AND I_ID = ?iid")],
+                2.0,
+            ),
+        ];
+        (schema, templates)
+    }
+
+    fn cart_tensor() -> EliminationTensor {
+        let (schema, templates) = cart_templates();
+        let rws: Vec<_> = templates
+            .iter()
+            .map(|t| extract_rwsets(t, &schema, ExtractOptions::default()))
+            .collect();
+        EliminationTensor::build(&templates, &ConflictMatrix::detect(&rws))
+    }
+
+    #[test]
+    fn pinning_is_choice_sensitive() {
+        let t = cart_tensor();
+        // Both on sid: every conflict covered, both Local.
+        let good = pin_classes(&t, &vec![Some(0), Some(0)]);
+        assert_eq!(good.classes, vec![OpClass::Local, OpClass::Local]);
+        assert_eq!(good.routing_params, vec![vec![0], vec![0]]);
+        // doCart pinned on iid: the cross pair survives — both Global.
+        // (The growth classifier would still call these Local; the pin
+        // is what makes epochs comparable by cost.)
+        let bad = pin_classes(&t, &vec![Some(0), Some(1)]);
+        assert_eq!(bad.classes, vec![OpClass::Global, OpClass::Global]);
+        assert_eq!(bad.primary, vec![Some(0), Some(1)]);
+    }
+
+    #[test]
+    fn pinned_classes_never_grow() {
+        let t = cart_tensor();
+        for a in [vec![Some(0), Some(0)], vec![Some(0), Some(1)], vec![None, None]] {
+            let c = pin_classes(&t, &a);
+            assert!(c
+                .classes
+                .iter()
+                .all(|cl| *cl != OpClass::LocalGlobal && *cl != OpClass::Confluent));
+        }
+    }
+
+    #[test]
+    fn collector_flushes_and_resets() {
+        let mut col = DriftCollector::new(3);
+        col.note(0);
+        col.note(2);
+        col.note(2);
+        let mut sink = Vec::new();
+        col.flush_into(&mut sink);
+        assert_eq!(sink, vec![1, 0, 2]);
+        assert_eq!(col.counts(), &[0, 0, 0]);
+        col.note(1);
+        col.flush_into(&mut sink);
+        assert_eq!(sink, vec![1, 1, 2]);
+    }
+
+    fn cart_app() -> AnalyzedApp {
+        let (schema, templates) = cart_templates();
+        AnalyzedApp::analyze(AppSpec { name: "cart".into(), schema, txns: templates })
+    }
+
+    #[test]
+    fn controller_switches_away_from_a_broken_epoch() {
+        let app = cart_app();
+        let ctl = EpochController::new(&app, AdaptiveConfig::default());
+        // Installed: doCart pinned on iid — every op pays the belt.
+        let installed = vec![Some(0), Some(1)];
+        let next = ctl.evaluate(&[100, 200], &installed);
+        assert_eq!(next, Some(vec![Some(0), Some(0)]));
+        // Already optimal: no switch.
+        assert_eq!(ctl.evaluate(&[100, 200], &vec![Some(0), Some(0)]), None);
+        // Empty window: no evidence, no switch.
+        assert_eq!(ctl.evaluate(&[0, 0], &installed), None);
+    }
+
+    #[test]
+    fn frozen_controller_never_switches() {
+        let app = cart_app();
+        let ctl = EpochController::new(&app, AdaptiveConfig::frozen());
+        assert_eq!(ctl.evaluate(&[100, 200], &vec![Some(0), Some(1)]), None);
+    }
+
+    #[test]
+    fn scalar_fallback_agrees_here() {
+        let app = cart_app();
+        let cfg = AdaptiveConfig { hypergraph: false, ..AdaptiveConfig::default() };
+        let ctl = EpochController::new(&app, cfg);
+        assert_eq!(
+            ctl.evaluate(&[100, 200], &vec![Some(0), Some(1)]),
+            Some(vec![Some(0), Some(0)])
+        );
+    }
+
+    #[test]
+    fn drift_schedules_are_pure_and_bounded() {
+        let flash = DriftConfig::default();
+        assert_eq!(flash.b_share(0.0), 0.2);
+        assert_eq!(flash.b_share(9.99), 0.2);
+        assert_eq!(flash.b_share(10.0), 0.8);
+        assert_eq!(flash.key_band(12.0, 1000), (0, 1));
+
+        let diurnal =
+            DriftConfig { kind: DriftKind::Diurnal { period_s: 20.0 }, ..DriftConfig::default() };
+        assert!((diurnal.b_share(0.0) - 0.2).abs() < 1e-9);
+        assert!((diurnal.b_share(10.0) - 0.8).abs() < 1e-9);
+        for i in 0..200 {
+            let s = diurnal.b_share(i as f64 * 0.37);
+            assert!((0.2..=0.8).contains(&s));
+        }
+
+        let hot =
+            DriftConfig { kind: DriftKind::HotKey { period_s: 5.0 }, ..DriftConfig::default() };
+        assert_eq!(hot.b_share(0.0), 0.2);
+        assert_eq!(hot.b_share(16.0), 0.8);
+        let (lo, hi) = hot.key_band(7.0, 800);
+        assert_eq!(hi - lo, 100);
+        assert_ne!(hot.key_band(0.0, 800), hot.key_band(7.0, 800));
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_none() {
+        let a: Assignment = vec![Some(3), None, Some(0)];
+        assert_eq!(assignment_from_wire(&assignment_to_wire(&a)), a);
+        assert_eq!(assignment_to_wire(&a), vec![3, -1, 0]);
+    }
+}

@@ -1,0 +1,176 @@
+//! Hypergraph-cut scorer: the per-*template* objective behind live
+//! routing epochs.
+//!
+//! The scalar reference ([`super::score`]) charges every surviving
+//! conflicting *pair* — Algorithm 1's quadratic objective. Hypergraph
+//! partitioners ("Hyper-Graph Based Database Partitioning for
+//! Transactional Workloads") charge each *transaction* hyperedge once,
+//! as soon as any of its conflicts crosses the cut. That matches how the
+//! runtime actually pays: a template with *any* uncovered conflict under
+//! assignment `P` executes under the token (Global) and pays its full
+//! traffic share, no matter how many distinct pairs break it.
+//!
+//! `cost_H(P) = Σ_t w(t) · [∃ t' : conflict(t,t') not eliminated under
+//! (P[t], P[t'])]`
+//!
+//! With `w(t)` set to a template's observed operation rate, `cost_H(P)`
+//! is exactly the belted traffic fraction the pinned epoch classifier
+//! ([`super::drift::pin_classes`]) would produce under `P` — so the
+//! epoch controller's observed-vs-optimal comparison is apples to
+//! apples.
+
+use super::elim::EliminationTensor;
+use super::score::{Assignment, BatchScorer};
+use crate::workload::spec::TxnTemplate;
+
+/// Is the `(t, t2)` conflict eliminated under `assign`? Symmetric access
+/// normalized onto the tensor's upper triangle; `None` choices never
+/// eliminate.
+pub fn pair_eliminated(
+    tensor: &EliminationTensor,
+    t: usize,
+    t2: usize,
+    assign: &Assignment,
+) -> bool {
+    let (a, b) = if t <= t2 { (t, t2) } else { (t2, t) };
+    match (assign[a], assign[b]) {
+        (Some(k), Some(k2)) => tensor.eliminated(a, b, k, k2),
+        _ => false,
+    }
+}
+
+/// Does template `t` survive assignment `assign` with *every* one of its
+/// conflicts eliminated? (Templates without conflicts trivially do.)
+pub fn template_covered(tensor: &EliminationTensor, t: usize, assign: &Assignment) -> bool {
+    (0..tensor.n).all(|t2| {
+        let linked = if t <= t2 { tensor.conflict[t][t2] } else { tensor.conflict[t2][t] };
+        !linked || pair_eliminated(tensor, t, t2, assign)
+    })
+}
+
+/// The hypergraph scorer: per-template all-or-nothing hyperedge cost.
+///
+/// Unlike [`super::score::ScalarScorer`] this does *not* equal
+/// [`super::score::cost_batch`] — it is the refined objective the epoch
+/// controller optimizes (see the module docs).
+pub struct HypergraphScorer {
+    /// Per-template hyperedge weight (typically the observed operation
+    /// rate, or the static template weight).
+    pub weights: Vec<f64>,
+}
+
+impl HypergraphScorer {
+    pub fn new(weights: Vec<f64>) -> Self {
+        HypergraphScorer { weights }
+    }
+
+    /// Static-analysis construction: hyperedge weights from the declared
+    /// template weights.
+    pub fn from_templates(templates: &[TxnTemplate]) -> Self {
+        HypergraphScorer { weights: templates.iter().map(|t| t.weight).collect() }
+    }
+
+    /// Score a single assignment.
+    pub fn cut(&self, tensor: &EliminationTensor, assign: &Assignment) -> f64 {
+        debug_assert_eq!(self.weights.len(), tensor.n);
+        debug_assert_eq!(assign.len(), tensor.n);
+        (0..tensor.n)
+            .filter(|&t| !template_covered(tensor, t, assign))
+            .map(|t| self.weights[t])
+            .sum()
+    }
+}
+
+impl BatchScorer for HypergraphScorer {
+    fn score(&self, tensor: &EliminationTensor, batch: &[Assignment]) -> Vec<f64> {
+        batch.iter().map(|a| self.cut(tensor, a)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "hypergraph"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::conflict::ConflictMatrix;
+    use crate::analysis::partition::{optimize, PartitionOptions};
+    use crate::analysis::rwsets::{extract_rwsets, ExtractOptions};
+    use crate::catalog::{Schema, TableSchema, ValueType};
+    use std::sync::Arc;
+
+    fn cart() -> (Vec<TxnTemplate>, EliminationTensor) {
+        let schema = Schema::new(vec![TableSchema::new(
+            "SC",
+            &[("ID", ValueType::Int), ("I_ID", ValueType::Int), ("QTY", ValueType::Int)],
+            &["ID", "I_ID"],
+        )]);
+        let templates = vec![
+            TxnTemplate::new(
+                "createCart",
+                &["sid"],
+                &[("i", "INSERT INTO SC (ID, I_ID, QTY) VALUES (?sid, 0, 0)")],
+                1.0,
+            ),
+            TxnTemplate::new(
+                "doCart",
+                &["sid", "iid", "q"],
+                &[("u", "UPDATE SC SET QTY = ?q WHERE ID = ?sid AND I_ID = ?iid")],
+                2.0,
+            ),
+        ];
+        let rws: Vec<_> = templates
+            .iter()
+            .map(|t| extract_rwsets(t, &schema, ExtractOptions::default()))
+            .collect();
+        let tensor = EliminationTensor::build(&templates, &ConflictMatrix::detect(&rws));
+        (templates, tensor)
+    }
+
+    #[test]
+    fn fully_covered_assignment_costs_zero() {
+        let (tpls, t) = cart();
+        let s = HypergraphScorer::from_templates(&tpls);
+        assert_eq!(s.cut(&t, &vec![Some(0), Some(0)]), 0.0);
+    }
+
+    #[test]
+    fn each_broken_template_pays_once() {
+        let (tpls, t) = cart();
+        let s = HypergraphScorer::from_templates(&tpls);
+        // doCart on iid: the (createCart, doCart) pair survives, breaking
+        // BOTH hyperedges — but each pays its own weight exactly once.
+        assert_eq!(s.cut(&t, &vec![Some(0), Some(1)]), 3.0);
+        // No assignment at all: every conflicting template pays.
+        assert_eq!(s.cut(&t, &vec![None, None]), 3.0);
+    }
+
+    #[test]
+    fn optimizer_accepts_the_hypergraph_objective() {
+        let (tpls, t) = cart();
+        let opts = PartitionOptions {
+            scorer: Arc::new(HypergraphScorer::from_templates(&tpls)),
+            ..Default::default()
+        };
+        let p = optimize(&t, &opts);
+        assert_eq!(p.cost, 0.0);
+        assert_eq!(p.choice, vec![Some(0), Some(0)]); // both on sid
+    }
+
+    #[test]
+    fn covered_matches_pairwise_structure() {
+        let (_, t) = cart();
+        // Both on sid: every conflict eliminated, both templates covered.
+        let good = vec![Some(0), Some(0)];
+        assert!(template_covered(&t, 0, &good));
+        assert!(template_covered(&t, 1, &good));
+        // doCart pinned on iid: its self-conflict is covered (iid=iid'
+        // appears in the clause) but the cross pair with createCart
+        // survives — so BOTH templates lose coverage.
+        let mixed = vec![Some(0), Some(1)];
+        assert!(pair_eliminated(&t, 1, 1, &mixed));
+        assert!(!template_covered(&t, 0, &mixed));
+        assert!(!template_covered(&t, 1, &mixed));
+    }
+}

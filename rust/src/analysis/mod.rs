@@ -21,7 +21,9 @@
 pub mod classify;
 pub mod conflict;
 pub mod confluence;
+pub mod drift;
 pub mod elim;
+pub mod hypergraph;
 pub mod partition;
 pub mod rwsets;
 pub mod score;
@@ -29,6 +31,11 @@ pub mod score;
 pub use classify::{classify, Classification, OpClass};
 pub use confluence::reclassify;
 pub use conflict::{ConflictKind, ConflictMatrix};
+pub use drift::{
+    assignment_from_wire, assignment_to_wire, pin_classes, AdaptiveConfig, DriftCollector,
+    DriftConfig, DriftKind, EpochController,
+};
 pub use elim::EliminationTensor;
+pub use hypergraph::HypergraphScorer;
 pub use partition::{optimize, PartitionOptions, Partitioning};
 pub use rwsets::{extract_rwsets, AccessEntry, AttrId, Atom, Clause, Dnf, Rhs, RwSets};

@@ -14,7 +14,7 @@
 //!   paper's "more sophisticated search strategies" escape hatch).
 
 use super::elim::EliminationTensor;
-use super::score::{cost, Assignment, BatchScorer, ScalarScorer};
+use super::score::{Assignment, BatchScorer, ScalarScorer};
 use crate::util::Rng;
 use std::sync::Arc;
 
@@ -92,7 +92,7 @@ pub fn optimize(tensor: &EliminationTensor, opts: &PartitionOptions) -> Partitio
         }
     }
 
-    let final_cost = cost(tensor, &assign);
+    let final_cost = opts.scorer.score(tensor, std::slice::from_ref(&assign))[0];
     Partitioning { choice: assign, cost: final_cost, exact }
 }
 
@@ -170,7 +170,7 @@ fn greedy(
         for &t in vars {
             cur[t] = Some(rng.range(0, tensor.kdims[t]));
         }
-        let mut cur_cost = cost(tensor, &cur);
+        let mut cur_cost = opts.scorer.score(tensor, std::slice::from_ref(&cur))[0];
         loop {
             let mut improved = false;
             for &t in vars {
@@ -180,7 +180,7 @@ fn greedy(
                         continue;
                     }
                     cur[t] = Some(k);
-                    let c = cost(tensor, &cur);
+                    let c = opts.scorer.score(tensor, std::slice::from_ref(&cur))[0];
                     if c < cur_cost {
                         cur_cost = c;
                         improved = true;

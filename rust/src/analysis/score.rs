@@ -40,9 +40,14 @@ pub fn cost_batch(tensor: &EliminationTensor, batch: &[Assignment]) -> Vec<f64> 
     batch.iter().map(|a| cost(tensor, a)).collect()
 }
 
-/// Trait for pluggable batch scorers (scalar or PJRT-accelerated).
+/// Trait for pluggable batch scorers.
 pub trait BatchScorer: Send + Sync {
-    /// Score `batch`; must equal [`cost_batch`] on every input.
+    /// Score `batch`. Implementations that *evaluate* Algorithm 1's
+    /// objective (the scalar reference here, the AOT Pallas kernel) must
+    /// equal [`cost_batch`] on every input; implementations may instead
+    /// *refine* the objective (e.g. the per-template hyperedge cut of
+    /// [`crate::analysis::hypergraph::HypergraphScorer`]) — the
+    /// optimizer minimizes whatever the scorer reports.
     fn score(&self, tensor: &EliminationTensor, batch: &[Assignment]) -> Vec<f64>;
     fn name(&self) -> &'static str;
 }

@@ -26,11 +26,12 @@
 //! (`crate::net`: one process/thread per core, the token arrives as a
 //! framed message).
 
+use crate::analysis::drift::{assignment_to_wire, AdaptiveConfig, EpochController};
 use crate::db::{Db, StateUpdate, TxnError};
-use crate::workload::analyzed::{AnalyzedApp, Route};
+use crate::workload::analyzed::{AnalyzedApp, Route, RoutingEpoch};
 use crate::workload::spec::{Operation, PreparedStmts, Reply, TxnCtx, TxnTemplate};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
 use super::token::Token;
@@ -47,6 +48,13 @@ pub struct DeployConfig {
     pub idle_pause: Duration,
     /// Max retries for lock-aborted operations before giving up.
     pub max_retries: u32,
+    /// Live routing epochs (`analysis::drift`): submits count
+    /// per-template traffic, the token thread re-runs the partitioner
+    /// every `window_rotations` rotations and installs a better
+    /// [`RoutingEpoch`]; subsequent submits route under it. In-flight
+    /// operations complete under their issue epoch (the route is
+    /// resolved at submit). `None` (default) = static routing.
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl Default for DeployConfig {
@@ -56,6 +64,7 @@ impl Default for DeployConfig {
             hop_delay: Duration::ZERO,
             idle_pause: Duration::from_micros(200),
             max_retries: 1000,
+            adaptive: None,
         }
     }
 }
@@ -337,6 +346,14 @@ pub struct Deployment {
     /// Invariant-confluent operations: executed immediately like locals,
     /// replicated like globals (delta merged on the next token stop).
     pub ops_confluent: AtomicU64,
+    /// The installed routing epoch (`Some` iff `cfg.adaptive`); submits
+    /// read it, the token thread installs successors.
+    epoch: RwLock<Option<Arc<RoutingEpoch>>>,
+    /// Per-template operation counts since the last controller window
+    /// (sized iff adaptive). Submit threads bump, the token thread
+    /// drains onto the token's observation vector.
+    obs: Vec<AtomicU64>,
+    epoch_switches: AtomicU64,
 }
 
 impl Deployment {
@@ -356,7 +373,16 @@ impl Deployment {
             .collect();
         let stop = Arc::new(AtomicBool::new(false));
         let stmt_maps = app.spec.txns.iter().map(|t| t.prepared_map(&app.spec.schema)).collect();
+        let epoch0 = cfg.adaptive.as_ref().map(|_| Arc::new(app.epoch0()));
+        let n_templates = app.spec.txns.len();
         let dep = Arc::new(Deployment {
+            epoch: RwLock::new(epoch0),
+            obs: if cfg.adaptive.is_some() {
+                (0..n_templates).map(|_| AtomicU64::new(0)).collect()
+            } else {
+                Vec::new()
+            },
+            epoch_switches: AtomicU64::new(0),
             app,
             stmt_maps,
             cfg: cfg.clone(),
@@ -390,13 +416,40 @@ impl Deployment {
         self.servers.iter().map(|s| s.retries.load(Ordering::Relaxed)).sum()
     }
 
+    /// The installed routing-epoch version (0 when static or before any
+    /// switch).
+    pub fn epoch_version(&self) -> u64 {
+        self.epoch.read().unwrap().as_ref().map(|e| e.version).unwrap_or(0)
+    }
+
+    /// Routing epochs installed by the token thread's controller.
+    pub fn epoch_switches(&self) -> u64 {
+        self.epoch_switches.load(Ordering::Relaxed)
+    }
+
     /// Submit one operation from a client thread and wait for its reply.
     /// This is Eliá's full request path: route, execute or park, reply.
+    /// Under adaptive routing the route is resolved against the epoch
+    /// installed *now* — the in-process deployment has no misroute
+    /// window (there is no stale client-side router), so an epoch switch
+    /// simply changes where the next submit lands.
     pub fn submit(&self, op: Operation) -> Result<Reply, TxnError> {
         let n = self.servers.len();
         let tpl = &self.app.spec.txns[op.txn];
         let stmts = &self.stmt_maps[op.txn];
-        match self.app.route(&op, n) {
+        if !self.obs.is_empty() {
+            self.obs[op.txn].fetch_add(1, Ordering::Relaxed);
+        }
+        let installed = if self.cfg.adaptive.is_some() {
+            self.epoch.read().unwrap().clone()
+        } else {
+            None
+        };
+        let route = match &installed {
+            Some(e) => e.route_op(&self.app, &op, n),
+            None => self.app.route(&op, n),
+        };
+        match route {
             Route::Any => {
                 self.ops_local.fetch_add(1, Ordering::Relaxed);
                 // Commutative: any server; pick by cheap hash for spread.
@@ -426,6 +479,13 @@ impl Deployment {
         let n = self.servers.len();
         let mut token = Token::new(n);
         let mut idle_rounds = 0;
+        // The controller rides the token thread: re-partitioning
+        // decisions are serialized by the same total order that
+        // serializes global operations, so an epoch install needs no
+        // extra coordination (the networked runtime does the same at
+        // server 0's belt stop).
+        let mut controller =
+            self.cfg.adaptive.as_ref().map(|ac| EpochController::new(&self.app, ac.clone()));
         while !self.stop.load(Ordering::Relaxed) {
             let mut any_work = false;
             for (p, server) in self.servers.iter().enumerate() {
@@ -438,6 +498,28 @@ impl Deployment {
                 any_work |= server.token_stop(p, &mut token);
             }
             token.rotations += 1;
+            if let (Some(acfg), Some(ctl)) = (&self.cfg.adaptive, controller.as_mut()) {
+                token.ensure_obs(self.obs.len());
+                for (t, c) in self.obs.iter().enumerate() {
+                    token.obs[t] += c.swap(0, Ordering::Relaxed);
+                }
+                if token.rotations % acfg.window_rotations == 0 {
+                    let installed = self.epoch.read().unwrap().clone();
+                    if let Some(cur) = installed {
+                        if let Some(next) = ctl.evaluate(&token.obs, &cur.assignment) {
+                            let version = cur.version + 1;
+                            token.epoch = version;
+                            token.epoch_assignment = assignment_to_wire(&next);
+                            let epoch = Arc::new(self.app.epoch_from(version, next));
+                            *self.epoch.write().unwrap() = Some(epoch);
+                            self.epoch_switches.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    for c in token.obs.iter_mut() {
+                        *c = 0;
+                    }
+                }
+            }
             if !any_work {
                 idle_rounds += 1;
                 if idle_rounds > 2 {

@@ -41,6 +41,7 @@
 //! like the real protocol: exactly one group ever owns it, so global-op
 //! appends need no shared state.
 
+use crate::analysis::drift::{assignment_from_wire, assignment_to_wire, AdaptiveConfig, DriftCollector, EpochController};
 use crate::db::{Db, StateUpdate, TxnError};
 use crate::simnet::clients::{
     ClientEv, ClientGroups, ClientTier, ClientsConfig, IssueReply, IssueRouter,
@@ -51,9 +52,11 @@ use crate::simnet::metrics::SimMetrics;
 use crate::simnet::parallel::{self, client_group_target, GroupCore, WindowGroup};
 use crate::simnet::station::Station;
 use crate::util::{Rng, VTime};
-use crate::workload::analyzed::{AnalyzedApp, Route};
+use crate::workload::analyzed::{AnalyzedApp, Route, RoutingEpoch};
 use crate::workload::generator::{OpGenerator, ServiceModel};
 use crate::workload::spec::{PreparedStmts, TxnCtx};
+
+use std::sync::Arc;
 
 use super::token::Token;
 
@@ -96,6 +99,19 @@ pub struct ConveyorConfig {
     /// = no crash; the clean event stream is byte-identical to builds
     /// without this field.
     pub crash: Option<CrashConfig>,
+    /// Live routing epochs (`analysis::drift`): servers collect
+    /// per-template operation counts in a token-borne sliding window, the
+    /// controller at server 0 re-runs the partitioner every
+    /// `window_rotations`, and a better assignment installs as a new
+    /// [`RoutingEpoch`] *via the token* — a total-order barrier with no
+    /// extra coordination. Clients keep routing under the immutable epoch
+    /// 0 (so the client tier stays bit-identical across K and thread
+    /// counts); servers re-route arrivals under the installed epoch and
+    /// forward at most one server-to-server hop. `None` (default) =
+    /// static routing, event stream byte-identical to builds without this
+    /// field. `Some(AdaptiveConfig::frozen())` = epoch machinery on but
+    /// pinned to epoch 0 forever — the "static" arm of drift experiments.
+    pub adaptive: Option<AdaptiveConfig>,
     pub warmup: VTime,
     pub horizon: VTime,
     pub seed: u64,
@@ -121,6 +137,7 @@ impl Default for ConveyorConfig {
             parallel: 1,
             record_global_log: false,
             crash: None,
+            adaptive: None,
             warmup: VTime::from_secs(5),
             horizon: VTime::from_secs(25),
             seed: 0x5EED,
@@ -142,6 +159,11 @@ struct OpEnvelope {
     /// state update rides the token as a merged delta (see
     /// [`crate::analysis::confluence`]).
     confluent: bool,
+    /// Server-to-server forwards already paid (adaptive routing: a server
+    /// whose installed epoch homes the op elsewhere forwards it once;
+    /// the receiver executes unconditionally, which is sound because only
+    /// token-ordered globals ever change home across epochs).
+    hops: u8,
 }
 
 #[derive(Debug)]
@@ -182,6 +204,9 @@ struct Shared<'s> {
     cfg: &'s ConveyorConfig,
     /// Client-group count K (servers address reply targets with it).
     client_groups: usize,
+    /// The immutable boot epoch clients route under when adaptivity is
+    /// on (`None` = static routing via [`AnalyzedApp::route`]).
+    epoch0: Option<Arc<RoutingEpoch>>,
 }
 
 impl Shared<'_> {
@@ -243,6 +268,23 @@ struct ServerState {
     /// WAL replay charge at recovery, mirroring `db::wal::recover_log`.
     log_len: u64,
     crash: Option<CrashOutcome>,
+    /// The installed routing epoch (`Some` iff adaptivity is on).
+    /// Arrivals are re-routed and re-classified under this, not the
+    /// client's issue-time epoch 0.
+    epoch: Option<Arc<RoutingEpoch>>,
+    /// Per-template operation counts since this server last held the
+    /// token (flushed into [`Token::obs`] at receipt).
+    collector: DriftCollector,
+    /// The re-partitioning controller; `Some` only at server 0 when
+    /// adaptivity is on.
+    controller: Option<EpochController>,
+    /// Epoch installations this server initiated (server 0 only).
+    epoch_switches: u64,
+    /// Arrivals forwarded to their installed-epoch home.
+    redirects: u64,
+    /// Per-virtual-second (belted, unbelted) execution counts — merged
+    /// across servers into [`ConveyorReport::drift_curve`].
+    curve: Vec<(u64, u64)>,
 }
 
 impl<'s> WindowGroup<Shared<'s>> for ServerState {
@@ -281,7 +323,44 @@ impl<'s> WindowGroup<Shared<'s>> for ServerState {
 }
 
 impl ServerState {
-    fn on_arrive(&mut self, op: OpEnvelope, ctx: &Shared<'_>) {
+    fn on_arrive(&mut self, mut op: OpEnvelope, ctx: &Shared<'_>) {
+        if let Some(epoch) = self.epoch.as_ref() {
+            // Re-route under the *installed* epoch (the client issued
+            // under epoch 0). At most one forward hop: a second
+            // disagreement (epoch moved again mid-flight) executes here —
+            // sound, because the only ops whose home can move across
+            // epochs are token-ordered globals, and a pinned Local's home
+            // is a pure function of its own routing parameter.
+            let route = epoch.route(ctx.app, op.txn, &op.args, ctx.topo.n());
+            let (target, global, confluent) = match route {
+                Route::Any => (self.id, false, false),
+                Route::LocalAt(s) => (s, false, false),
+                Route::GlobalAt(s) => (s, true, false),
+                Route::ConfluentAt(s) => (s, false, true),
+            };
+            op.global = global;
+            op.confluent = confluent;
+            if target != self.id && op.hops == 0 {
+                op.hops = 1;
+                self.redirects += 1;
+                let delay = ctx.topo.servers.one_way(self.id, target);
+                self.core.send(target, self.core.now() + delay, Ev::Arrive { op });
+                return;
+            }
+            // Observe at the executing server: the sliding-window counts
+            // the controller re-partitions from, and the per-second
+            // belted/unbelted curve the drift experiments plot.
+            self.collector.note(op.txn);
+            let sec = (self.core.now().as_micros() / 1_000_000) as usize;
+            if self.curve.len() <= sec {
+                self.curve.resize(sec + 1, (0, 0));
+            }
+            if op.global {
+                self.curve[sec].0 += 1;
+            } else {
+                self.curve[sec].1 += 1;
+            }
+        }
         if op.global {
             // Algorithm 2 line 6: hold until the token arrives. If this
             // server currently holds the token and has not yet passed it,
@@ -400,6 +479,39 @@ impl ServerState {
         if self.id == 0 {
             self.rotations += 1;
         }
+        if let Some(acfg) = &ctx.cfg.adaptive {
+            // Flush this server's window counts onto the token, then
+            // install any newer epoch it carries — every server switches
+            // at its own receipt, so the install is totally ordered with
+            // all global updates without extra coordination.
+            token.ensure_obs(ctx.app.spec.txns.len());
+            self.collector.flush_into(&mut token.obs);
+            let installed_v = self.epoch.as_ref().map(|e| e.version).unwrap_or(0);
+            if token.epoch > installed_v {
+                let assign = assignment_from_wire(&token.epoch_assignment);
+                self.epoch = Some(Arc::new(ctx.app.epoch_from(token.epoch, assign)));
+            }
+            if let Some(controller) = &self.controller {
+                if self.rotations % acfg.window_rotations == 0 {
+                    let (cur_version, better) = {
+                        let installed =
+                            self.epoch.as_ref().expect("adaptive server without an epoch");
+                        (installed.version, controller.evaluate(&token.obs, &installed.assignment))
+                    };
+                    if let Some(next) = better {
+                        let version = cur_version + 1;
+                        token.epoch = version;
+                        token.epoch_assignment = assignment_to_wire(&next);
+                        self.epoch = Some(Arc::new(ctx.app.epoch_from(version, next)));
+                        self.epoch_switches += 1;
+                    }
+                    // The window is consumed either way.
+                    for c in token.obs.iter_mut() {
+                        *c = 0;
+                    }
+                }
+            }
+        }
         let updates = token.on_receive(self.id);
         self.token = Some(token);
 
@@ -515,13 +627,21 @@ impl IssueRouter<Ev> for Shared<'_> {
         // Key affinity targets the nearest server site (clients at
         // server-less sites adopt the closest deployed server).
         let affinity = self.nearest_server(site);
+        let now = tier.core.now();
         let op = {
             let rng = tier.clients.rng(client);
             // Borrow juggling: generator needs its own &mut.
             let mut r = rng.fork();
-            tier.gen.next_op(&mut r, affinity, n)
+            tier.gen.next_op_at(&mut r, affinity, n, now)
         };
-        let route = self.app.route(&op, n);
+        // Clients always route under the immutable epoch 0: the client
+        // tier stays a pure function of (rng stream, time), so sharding
+        // it into K groups stays invisible to results even while servers
+        // re-route under later epochs.
+        let route = match &self.epoch0 {
+            Some(e0) => e0.route_op(self.app, &op, n),
+            None => self.app.route(&op, n),
+        };
         let (server, global, confluent) = match route {
             Route::Any => (affinity, false, false),
             Route::LocalAt(s) => (s, false, false),
@@ -541,7 +661,6 @@ impl IssueRouter<Ev> for Shared<'_> {
                     + self.client_server_latency(site, server);
             }
         }
-        let now = tier.core.now();
         let env = OpEnvelope {
             txn: op.txn,
             args: op.args,
@@ -550,6 +669,7 @@ impl IssueRouter<Ev> for Shared<'_> {
             issued: now,
             global,
             confluent,
+            hops: 0,
         };
         // Tagged with the client's global id: the engine merges client
         // groups at one source rank, ordered by this tag, so delivery
@@ -568,6 +688,9 @@ pub struct ConveyorSim<'a> {
     cfg: ConveyorConfig,
     clients: ClientGroups<'a, Ev>,
     servers: Vec<ServerState>,
+    /// Epoch 0 (the offline analysis pinned), shared by the client tier
+    /// and the servers' initial install. `Some` iff adaptivity is on.
+    epoch0: Option<Arc<RoutingEpoch>>,
 }
 
 impl<'a> ConveyorSim<'a> {
@@ -584,6 +707,8 @@ impl<'a> ConveyorSim<'a> {
     ) -> Self {
         let n = topo.n();
         let client_sites = cfg.client_matrix.as_ref().map(|m| m.n()).unwrap_or(n);
+        let epoch0 = cfg.adaptive.as_ref().map(|_| Arc::new(app.epoch0()));
+        let n_templates = app.spec.txns.len();
         let servers = (0..n)
             .map(|id| {
                 let db = if cfg.execute_real {
@@ -610,6 +735,16 @@ impl<'a> ConveyorSim<'a> {
                     held: Vec::new(),
                     log_len: 0,
                     crash: None,
+                    epoch: epoch0.clone(),
+                    collector: DriftCollector::new(n_templates),
+                    controller: cfg
+                        .adaptive
+                        .as_ref()
+                        .filter(|_| id == 0)
+                        .map(|ac| EpochController::new(app, ac.clone())),
+                    epoch_switches: 0,
+                    redirects: 0,
+                    curve: Vec::new(),
                 }
             })
             .collect();
@@ -622,6 +757,7 @@ impl<'a> ConveyorSim<'a> {
             cfg,
             clients,
             servers,
+            epoch0,
         }
     }
 
@@ -652,6 +788,17 @@ impl<'a> ConveyorSim<'a> {
             let b = (a + 1) % n;
             l = l.min(self.topo.servers.one_way(a, b) + hop);
         }
+        // Adaptive routing forwards arrivals between *arbitrary* server
+        // pairs (no hop overhead), so the lookahead must cover them all.
+        if self.cfg.adaptive.is_some() {
+            for a in 0..n {
+                for b in 0..n {
+                    if a != b {
+                        l = l.min(self.topo.servers.one_way(a, b));
+                    }
+                }
+            }
+        }
         l
     }
 
@@ -680,7 +827,7 @@ impl<'a> ConveyorSim<'a> {
         let threads = parallel::resolve_threads(self.cfg.parallel);
         let horizon = self.cfg.horizon;
 
-        let ConveyorSim { app, stmt_maps, topo, cfg, mut clients, mut servers } = self;
+        let ConveyorSim { app, stmt_maps, topo, cfg, mut clients, mut servers, epoch0 } = self;
         let windows = {
             let ctx = Shared {
                 app,
@@ -688,6 +835,7 @@ impl<'a> ConveyorSim<'a> {
                 topo: &topo,
                 cfg: &cfg,
                 client_groups: clients.k(),
+                epoch0,
             };
             parallel::run_windows(
                 threads,
@@ -714,8 +862,29 @@ impl<'a> ConveyorSim<'a> {
             events: clients.processed()
                 + servers.iter().map(|s| s.core.q.processed()).sum::<u64>(),
             windows,
+            global_log_seqs: log.iter().map(|(seq, _)| *seq).collect(),
             global_log: log.into_iter().map(|(_, u)| u).collect(),
             crash: servers.iter().find_map(|s| s.crash),
+            epoch_switches: servers.iter().map(|s| s.epoch_switches).sum(),
+            final_epoch: servers
+                .iter()
+                .map(|s| s.epoch.as_ref().map(|e| e.version).unwrap_or(0))
+                .max()
+                .unwrap_or(0),
+            redirects: servers.iter().map(|s| s.redirects).sum(),
+            drift_curve: {
+                let mut curve: Vec<(u64, u64)> = Vec::new();
+                for s in servers.iter() {
+                    if curve.len() < s.curve.len() {
+                        curve.resize(s.curve.len(), (0, 0));
+                    }
+                    for (sec, &(belted, local)) in s.curve.iter().enumerate() {
+                        curve[sec].0 += belted;
+                        curve[sec].1 += local;
+                    }
+                }
+                curve
+            },
         };
         let dbs = servers.into_iter().map(|s| s.db).collect();
         (report, dbs)
@@ -740,9 +909,42 @@ pub struct ConveyorReport {
     /// with [`ConveyorConfig::record_global_log`]): the serial history
     /// every server's replicated state must be explainable by.
     pub global_log: Vec<StateUpdate>,
+    /// Token sequence numbers of [`ConveyorReport::global_log`], in log
+    /// order. Must be contiguous from 1 — a gap means a lost update, a
+    /// duplicate means one applied twice (the epoch-switch soundness
+    /// oracle).
+    pub global_log_seqs: Vec<u64>,
     /// What the configured crash cost (`None` when no crash was
     /// configured or it landed past the horizon).
     pub crash: Option<CrashOutcome>,
+    /// Routing-epoch installations the controller initiated (0 when
+    /// adaptivity is off or frozen).
+    pub epoch_switches: u64,
+    /// Highest epoch version installed anywhere by the horizon.
+    pub final_epoch: u64,
+    /// Arrivals a server forwarded to their installed-epoch home.
+    pub redirects: u64,
+    /// Per-virtual-second `(belted, unbelted)` executed-op counts summed
+    /// across servers (populated only under [`ConveyorConfig::adaptive`]) —
+    /// the static-vs-adaptive drift figure plots the belted fraction of
+    /// this curve.
+    pub drift_curve: Vec<(u64, u64)>,
+}
+
+impl ConveyorReport {
+    /// Belted fraction over seconds `[from, to)` of the drift curve.
+    pub fn belted_fraction(&self, from: usize, to: usize) -> f64 {
+        let mut belted = 0u64;
+        let mut total = 0u64;
+        for &(b, l) in self.drift_curve.iter().take(to).skip(from) {
+            belted += b;
+            total += b + l;
+        }
+        if total == 0 {
+            return 0.0;
+        }
+        belted as f64 / total as f64
+    }
 }
 
 impl ConveyorReport {
@@ -1042,6 +1244,7 @@ mod tests {
         assert_eq!(c.parallel, 1, "sequential by default; benches opt in");
         assert!(!c.record_global_log);
         assert!(c.crash.is_none(), "durability modeling is opt-in");
+        assert!(c.adaptive.is_none(), "adaptive routing epochs are opt-in");
         assert!(!c.execute_real);
         assert_eq!(c.warmup, VTime::from_secs(5));
         assert_eq!(c.horizon, VTime::from_secs(25));
@@ -1274,6 +1477,71 @@ mod tests {
             assert!(t > 0, "server {s} saw no restocks");
             assert!(t <= r.global_log.len() as i64, "server {s} over-applied");
         }
+    }
+
+    /// Tentpole: under the drift workload (flash crowd at 10 s flips the
+    /// dominant update stream from `aupd` to `bupd`) the controller
+    /// re-partitions from the token-borne observation window and installs
+    /// a new epoch over the token. The frozen arm keeps paying the belt
+    /// for the now-dominant stream; the adaptive arm sheds it — its
+    /// steady-state belted fraction after the drift point is strictly
+    /// lower. Redirects are exercised too: `move`'s pinned routing
+    /// parameter flips from `a` to `b`, so epoch-0-routed arrivals get
+    /// forwarded to their new home.
+    #[test]
+    fn adaptive_epochs_shed_belt_traffic_after_drift() {
+        use crate::analysis::drift::DriftConfig;
+        use crate::workload::micro::{drift_analyzed, DriftGen};
+        let app = drift_analyzed();
+        let run = |adaptive: AdaptiveConfig, threads: usize| {
+            let cfg = ConveyorConfig {
+                adaptive: Some(adaptive),
+                warmup: VTime::from_secs(1),
+                horizon: VTime::from_secs(20),
+                service: ServiceModel::fixed(1.0),
+                parallel: threads,
+                ..Default::default()
+            };
+            ConveyorSim::new(
+                &app,
+                Topology::lan(3),
+                ClientsConfig { n: 24, think_ms: 10.0, seed: 7, ..Default::default() },
+                cfg,
+                |_| Box::new(DriftGen::new(DriftConfig::default())),
+                |_db| {},
+            )
+            .run()
+        };
+        let frozen = run(AdaptiveConfig::frozen(), 1);
+        assert!(frozen.metrics.completed > 1000);
+        assert_eq!(frozen.epoch_switches, 0, "frozen arm must never switch");
+        assert_eq!(frozen.final_epoch, 0);
+        let adaptive = run(AdaptiveConfig { window_rotations: 32, ..Default::default() }, 1);
+        assert!(adaptive.epoch_switches >= 1, "controller must re-partition after the drift");
+        assert!(adaptive.final_epoch >= 1);
+        assert!(adaptive.redirects > 0, "move's home flips; epoch-0 arrivals must forward");
+        let f = frozen.belted_fraction(14, 20);
+        let a = adaptive.belted_fraction(14, 20);
+        assert!(
+            a < f,
+            "adaptive steady-state belted fraction ({a:.3}) must beat static ({f:.3})"
+        );
+        // Before the drift both arms route identically.
+        let f0 = frozen.belted_fraction(2, 9);
+        let a0 = adaptive.belted_fraction(2, 9);
+        assert!((f0 - a0).abs() < 1e-12, "pre-drift arms diverged: {f0} vs {a0}");
+
+        // Adaptivity preserves the engine's headline property: thread
+        // count cannot change a bit — epoch switches, redirects and the
+        // curve included.
+        let par = run(AdaptiveConfig { window_rotations: 32, ..Default::default() }, 2);
+        assert_eq!(par.metrics.completed, adaptive.metrics.completed);
+        assert_eq!(par.events, adaptive.events);
+        assert_eq!(par.epoch_switches, adaptive.epoch_switches);
+        assert_eq!(par.final_epoch, adaptive.final_epoch);
+        assert_eq!(par.redirects, adaptive.redirects);
+        assert_eq!(par.drift_curve, adaptive.drift_curve);
+        assert_eq!(par.mean_latency_ms().to_bits(), adaptive.mean_latency_ms().to_bits());
     }
 
     /// The recorded token log is the serial history: replaying it on a

@@ -37,6 +37,21 @@ pub struct Token {
     pub appended: u64,
     /// Completed ring rotations (diagnostics).
     pub rotations: u64,
+    /// Installed routing-epoch version (live re-partitioning,
+    /// `analysis::drift`). The token is the installation vehicle: server 0
+    /// bumps this with a fresh [`Token::epoch_assignment`], every server
+    /// installs at receipt — a total-order barrier with no extra
+    /// coordination protocol. `0` = epoch 0 / adaptivity off.
+    pub epoch: u64,
+    /// Wire form of the epoch's partitioning assignment (`-1` = `None`,
+    /// see `analysis::drift::assignment_to_wire`). Empty when adaptivity
+    /// is off.
+    pub epoch_assignment: Vec<i64>,
+    /// Sliding-window per-template operation counts (the drift
+    /// collector's transport): each server flushes its local counts into
+    /// this at receipt; the controller at server 0 reads and resets it
+    /// every observation window. Empty when adaptivity is off.
+    pub obs: Vec<u64>,
 }
 
 impl Token {
@@ -87,6 +102,16 @@ impl Token {
     /// Serialized size for latency modeling.
     pub fn wire_size(&self) -> usize {
         16 + self.entries.iter().map(|e| 8 + e.update.wire_size()).sum::<usize>()
+            + 8
+            + 8 * self.epoch_assignment.len()
+            + 8 * self.obs.len()
+    }
+
+    /// Ensure the observation vector covers `n` templates (idempotent).
+    pub fn ensure_obs(&mut self, n: usize) {
+        if self.obs.len() < n {
+            self.obs.resize(n, 0);
+        }
     }
 
     /// Iterate the in-flight entries, oldest (lowest `seq`) first — the
@@ -103,14 +128,27 @@ impl Token {
 
     /// Rebuild a token from its wire parts — the decode side of the net
     /// frame codec. Inverse of reading [`Token::entries`],
-    /// [`Token::watermarks`], `appended` and `rotations` off a token.
+    /// [`Token::watermarks`], `appended`, `rotations`, and the epoch /
+    /// observation fields off a token.
+    #[allow(clippy::too_many_arguments)]
     pub fn from_parts(
         entries: Vec<TokenEntry>,
         watermarks: Vec<u64>,
         appended: u64,
         rotations: u64,
+        epoch: u64,
+        epoch_assignment: Vec<i64>,
+        obs: Vec<u64>,
     ) -> Token {
-        Token { entries: entries.into(), applied_up_to: watermarks, appended, rotations }
+        Token {
+            entries: entries.into(),
+            applied_up_to: watermarks,
+            appended,
+            rotations,
+            epoch,
+            epoch_assignment,
+            obs,
+        }
     }
 }
 
@@ -174,5 +212,31 @@ mod tests {
         let empty = t.wire_size();
         t.append(0, upd(1));
         assert!(t.wire_size() > empty);
+    }
+
+    #[test]
+    fn epoch_fields_ride_and_roundtrip() {
+        let mut t = Token::new(2);
+        t.ensure_obs(3);
+        t.ensure_obs(2); // idempotent, never shrinks
+        t.obs[1] += 5;
+        t.epoch = 2;
+        t.epoch_assignment = vec![0, -1, 1];
+        t.append(0, upd(1));
+        let _ = t.on_receive(1);
+        // Receipt applies/prunes entries but never touches epoch state.
+        assert_eq!(t.epoch, 2);
+        assert_eq!(t.obs, vec![0, 5, 0]);
+        let t2 = Token::from_parts(
+            t.entries().cloned().collect(),
+            t.watermarks().to_vec(),
+            t.appended,
+            t.rotations,
+            t.epoch,
+            t.epoch_assignment.clone(),
+            t.obs.clone(),
+        );
+        assert_eq!(t2, t);
+        assert!(t.wire_size() > Token::new(2).wire_size());
     }
 }

@@ -59,6 +59,15 @@ pub enum TxnError {
         /// Rendered post-image value that failed validation.
         value: String,
     },
+    /// The request was routed under a superseded routing epoch (live
+    /// re-partitioning, `analysis::drift`): the server's installed epoch
+    /// homes the operation elsewhere. Retryable — the client refreshes
+    /// its epoch (re-handshake) and re-routes; the operation was not
+    /// executed.
+    StaleEpoch {
+        /// The epoch version installed at the rejecting server.
+        installed: u64,
+    },
 }
 
 impl fmt::Display for TxnError {
@@ -73,6 +82,9 @@ impl fmt::Display for TxnError {
             TxnError::Durability(msg) => write!(f, "durability error: {msg}"),
             TxnError::Invariant { table, column, value } => {
                 write!(f, "invariant violation: {table}.{column} = {value}")
+            }
+            TxnError::StaleEpoch { installed } => {
+                write!(f, "stale routing epoch: server is on epoch {installed}")
             }
         }
     }
@@ -115,11 +127,12 @@ impl TxnError {
     /// True when retrying the transaction may succeed (concurrency
     /// victim), false for semantic errors.
     pub fn is_retryable(&self) -> bool {
-        matches!(self, TxnError::Lock(_))
+        matches!(self, TxnError::Lock(_) | TxnError::StaleEpoch { .. })
     }
 
     /// Classify this error for retry loops: [`Retryable::Transient`] iff
-    /// [`TxnError::is_retryable`], [`Retryable::Fatal`] otherwise
+    /// [`TxnError::is_retryable`] ([`TxnError::Lock`],
+    /// [`TxnError::StaleEpoch`]), [`Retryable::Fatal`] otherwise
     /// ([`TxnError::Invariant`], [`TxnError::Sql`],
     /// [`TxnError::DuplicateKey`], [`TxnError::Durability`],
     /// [`TxnError::Finished`]).
@@ -207,6 +220,7 @@ mod tests {
     fn retryability() {
         use crate::db::lockmgr::LockError;
         assert!(TxnError::Lock(LockError::Aborted { txn: 1, target: "t".into() }).is_retryable());
+        assert!(TxnError::StaleEpoch { installed: 3 }.is_retryable());
         assert!(!TxnError::Sql("boom".into()).is_retryable());
     }
 
@@ -215,6 +229,9 @@ mod tests {
         use crate::db::lockmgr::LockError;
         let lock = TxnError::Lock(LockError::Aborted { txn: 1, target: "t".into() });
         assert_eq!(lock.classify(), Retryable::Transient);
+        // An epoch misroute is a routing race, not a semantic failure:
+        // the client re-handshakes and retries under the new epoch.
+        assert_eq!(TxnError::StaleEpoch { installed: 1 }.classify(), Retryable::Transient);
         for fatal in [
             TxnError::Sql("boom".into()),
             TxnError::DuplicateKey { table: "T".into(), key: "1".into() },

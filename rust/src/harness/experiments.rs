@@ -8,6 +8,7 @@
 //! differ from the authors' testbed; the *shapes* — who wins, by what
 //! factor, where the knees sit — are the reproduction target.
 
+use crate::analysis::drift::{AdaptiveConfig, DriftConfig, DriftKind};
 use crate::baselines::{BaselineConfig, BaselineMode, BaselineSim};
 use crate::cluster::{ClusterConfig, ClusterSim};
 use crate::conveyor::{ConveyorConfig, ConveyorSim};
@@ -544,6 +545,91 @@ pub fn replica_hash(db: &crate::db::Db, tables: &[String]) -> u64 {
     tables
         .iter()
         .fold(0xcbf29ce484222325u64, |acc, t| acc.wrapping_mul(0x100000001b3) ^ db.table_hash(t))
+}
+
+/// One arm of the drift experiment ([`fig_drift`]): the per-second
+/// belted-fraction curve plus its summary statistics.
+#[derive(Debug, Clone)]
+pub struct DriftArm {
+    /// `"static"` (frozen controller) or `"adaptive"`.
+    pub label: String,
+    /// Per-second `(belted, coordination-free)` completion counts.
+    pub curve: Vec<(u64, u64)>,
+    /// Belted fraction before the drift point (steady state of epoch 0).
+    pub belted_pre: f64,
+    /// Belted fraction over the post-drift steady-state window.
+    pub belted_post: f64,
+    /// Routing epochs installed by the controller.
+    pub epoch_switches: u64,
+    /// Version of the last installed epoch (0 = never switched).
+    pub final_epoch: u64,
+    /// Server-to-server forwards of ops issued under a stale epoch.
+    pub redirects: u64,
+    /// Completed operations per simulated second.
+    pub throughput: f64,
+    /// Mean request latency (ms).
+    pub mean_latency_ms: f64,
+}
+
+fn drift_arm(label: &str, adaptive: AdaptiveConfig, drift: DriftConfig, scale: &ExpScale) -> DriftArm {
+    let app = micro::drift_analyzed();
+    let horizon_s = scale.horizon_s.max(20);
+    let cfg = ConveyorConfig {
+        service: ServiceModel::fixed(1.0),
+        warmup: VTime::from_secs(1),
+        horizon: VTime::from_secs(horizon_s),
+        parallel: scale.parallel,
+        adaptive: Some(adaptive),
+        ..Default::default()
+    };
+    let report = ConveyorSim::new(
+        &app,
+        Topology::lan(3),
+        ClientsConfig { n: 32, think_ms: 10.0, seed: 0xD21F, ..Default::default() },
+        cfg,
+        |_| Box::new(micro::DriftGen::new(drift)),
+        |_| {},
+    )
+    .run();
+    // Steady-state windows on either side of the drift point: skip the
+    // first seconds (warmup / belt fill) and the switch transient.
+    let drift_s = match drift.kind {
+        DriftKind::FlashCrowd { at_s } => at_s.ceil() as usize,
+        DriftKind::Diurnal { period_s } | DriftKind::HotKey { period_s } => {
+            (period_s / 2.0).ceil() as usize
+        }
+    };
+    DriftArm {
+        label: label.to_string(),
+        belted_pre: report.belted_fraction(2, drift_s.saturating_sub(1)),
+        belted_post: report.belted_fraction(drift_s + 4, horizon_s as usize),
+        curve: report.drift_curve.clone(),
+        epoch_switches: report.epoch_switches,
+        final_epoch: report.final_epoch,
+        redirects: report.redirects,
+        throughput: report.throughput(),
+        mean_latency_ms: report.mean_latency_ms(),
+    }
+}
+
+/// The drift figure: the same flash-crowd workload (`micro::DriftGen`)
+/// run once with a frozen controller (static routing — the offline
+/// partitioning of the original paper) and once with live routing
+/// epochs (`analysis::drift`). The reproduction target is the shape:
+/// both arms agree before the drift point; after it the static arm's
+/// belted fraction jumps (the formerly-local template turned global)
+/// while the adaptive arm re-partitions back down. Written to
+/// `BENCH_drift.json` by the `drift_adaptive` bench.
+pub fn fig_drift(scale: &ExpScale) -> (DriftArm, DriftArm) {
+    let drift = DriftConfig::default();
+    let frozen = drift_arm("static", AdaptiveConfig::frozen(), drift, scale);
+    let adaptive = drift_arm(
+        "adaptive",
+        AdaptiveConfig { window_rotations: 32, ..Default::default() },
+        drift,
+        scale,
+    );
+    (frozen, adaptive)
 }
 
 /// One live measurement point: a real served cluster (framed wire

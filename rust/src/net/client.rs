@@ -17,7 +17,8 @@
 
 use super::proto::{decode_msg, encode_msg, Msg, ProtoError, Role, WireError};
 use super::transport::{Conn, Transport};
-use crate::workload::analyzed::{AnalyzedApp, Route};
+use crate::analysis::drift::assignment_from_wire;
+use crate::workload::analyzed::{AnalyzedApp, Route, RoutingEpoch};
 use crate::workload::spec::{Operation, Reply};
 use std::fmt;
 use std::sync::Arc;
@@ -26,12 +27,19 @@ use std::time::Duration;
 /// Client stub tuning.
 #[derive(Debug, Clone)]
 pub struct ClientConfig {
-    /// Max automatic retries of a retryable server error.
+    /// Max automatic retries of a retryable server error (the retry
+    /// budget: stale-epoch re-routes and wait-die victims both draw
+    /// from it).
     pub max_retries: u32,
     /// Initial backoff before the first retry; doubles per attempt.
     pub backoff: Duration,
     /// Backoff ceiling.
     pub backoff_cap: Duration,
+    /// Exponent ceiling of the doubling schedule: the multiplier is
+    /// `2^min(attempt, backoff_exp_cap)` (then clamped to
+    /// [`ClientConfig::backoff_cap`]). Keeps `backoff << attempt` from
+    /// overflowing on long retry runs.
+    pub backoff_exp_cap: u32,
 }
 
 impl Default for ClientConfig {
@@ -40,6 +48,7 @@ impl Default for ClientConfig {
             max_retries: 50,
             backoff: Duration::from_micros(200),
             backoff_cap: Duration::from_millis(20),
+            backoff_exp_cap: 8,
         }
     }
 }
@@ -81,6 +90,10 @@ pub struct NetClient {
     cfg: ClientConfig,
     /// Retryable server errors absorbed by the automatic retry loop.
     pub retries: u64,
+    /// The routing epoch learned at handshake (`None` against a static
+    /// cluster). A stale-epoch rejection triggers a re-handshake, which
+    /// refreshes this and re-routes the operation.
+    epoch: Option<RoutingEpoch>,
 }
 
 impl NetClient {
@@ -99,6 +112,7 @@ impl NetClient {
             addrs,
             cfg,
             retries: 0,
+            epoch: None,
         };
         for s in 0..client.addrs.len() {
             client.ensure(s)?;
@@ -111,10 +125,20 @@ impl NetClient {
     /// makes, including the commutative-spread hash for [`Route::Any`].
     pub fn target(&self, op: &Operation) -> usize {
         let n = self.addrs.len();
-        match self.app.route(op, n) {
+        let route = match &self.epoch {
+            Some(e) => e.route_op(&self.app, op, n),
+            None => self.app.route(op, n),
+        };
+        match route {
             Route::Any => (op.txn + op.args.len()) % n,
             Route::LocalAt(s) | Route::GlobalAt(s) | Route::ConfluentAt(s) => s,
         }
+    }
+
+    /// The routing-epoch version this stub currently issues under (0
+    /// against a static cluster or before any handshake).
+    pub fn epoch_version(&self) -> u64 {
+        self.epoch.as_ref().map(|e| e.version).unwrap_or(0)
     }
 
     /// (Re)establish the connection to server `s`, handshake included.
@@ -131,7 +155,17 @@ impl NetClient {
         };
         conn.send(&encode_msg(&hello))?;
         match decode_msg(&conn.recv()?)? {
-            Msg::HelloOk { .. } => {}
+            Msg::HelloOk { epoch, assignment, .. } => {
+                // Adaptive clusters advertise their installed epoch in
+                // the handshake; adopt it when it is news (a re-ensure
+                // after a stale-epoch rejection lands here).
+                if !assignment.is_empty()
+                    && (self.epoch.is_none() || epoch > self.epoch_version())
+                {
+                    self.epoch =
+                        Some(self.app.epoch_from(epoch, assignment_from_wire(&assignment)));
+                }
+            }
             Msg::ReplyErr(e) => return Err(ProtoError::Handshake(e.message)),
             other => {
                 return Err(ProtoError::Handshake(format!("unexpected reply {other:?}")));
@@ -141,23 +175,30 @@ impl NetClient {
         Ok(())
     }
 
-    /// Submit one operation: route, encode once, send, await the reply.
+    /// Submit one operation: route, encode, send, await the reply.
     /// Retryable server errors are retried with capped exponential
-    /// backoff; transport errors drop the connection (it re-establishes
-    /// on the next submit) and surface immediately.
+    /// backoff (ceilings from [`ClientConfig`]); a stale-epoch rejection
+    /// re-handshakes to learn the new epoch and re-routes without
+    /// backoff (it is a routing race, not contention). Transport errors
+    /// drop the connection (it re-establishes on the next submit) and
+    /// surface immediately.
     pub fn submit(&mut self, op: &Operation) -> Result<Reply, NetError> {
-        let s = self.target(op);
-        let request = Msg::Request {
-            txn: self.app.spec.txns[op.txn].name.clone(),
-            args: op
-                .canonical_args()
-                .into_iter()
-                .map(|(k, v)| (k.to_string(), v.clone()))
-                .collect(),
-        };
-        let bytes = encode_msg(&request);
         let mut attempt: u32 = 0;
         loop {
+            // Route and encode per attempt: an epoch refresh between
+            // attempts can change both the target and the version the
+            // request must carry.
+            let s = self.target(op);
+            let request = Msg::Request {
+                txn: self.app.spec.txns[op.txn].name.clone(),
+                args: op
+                    .canonical_args()
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), v.clone()))
+                    .collect(),
+                epoch: self.epoch_version(),
+            };
+            let bytes = encode_msg(&request);
             let outcome = self.roundtrip(s, &bytes);
             match outcome {
                 Ok(Msg::ReplyOk(reply)) => return Ok(reply),
@@ -165,10 +206,22 @@ impl NetClient {
                     if e.retryable && attempt < self.cfg.max_retries {
                         attempt += 1;
                         self.retries += 1;
+                        if let Some(v) = e.epoch {
+                            // Stale-epoch misroute: refresh via a fresh
+                            // handshake (it carries the installed epoch),
+                            // then re-route immediately.
+                            if v > self.epoch_version() {
+                                self.conns[s] = None;
+                                if let Err(err) = self.ensure(s) {
+                                    return Err(NetError::Transport(err));
+                                }
+                            }
+                            continue;
+                        }
                         let backoff = self
                             .cfg
                             .backoff
-                            .saturating_mul(1u32 << attempt.min(8))
+                            .saturating_mul(1u32 << attempt.min(self.cfg.backoff_exp_cap))
                             .min(self.cfg.backoff_cap);
                         std::thread::sleep(backoff);
                     } else {

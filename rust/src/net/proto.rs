@@ -208,6 +208,18 @@ pub struct WireError {
     pub retryable: bool,
     /// Rendered [`TxnError`](crate::db::TxnError) text.
     pub message: String,
+    /// On an epoch misroute (the request was routed under a routing
+    /// epoch older than the server's installed one): the installed
+    /// version. The client re-handshakes to fetch the new epoch's
+    /// assignment and re-routes instead of failing.
+    pub epoch: Option<u64>,
+}
+
+impl WireError {
+    /// A plain wire error with no epoch payload.
+    pub fn plain(retryable: bool, message: impl Into<String>) -> WireError {
+        WireError { retryable, message: message.into(), epoch: None }
+    }
 }
 
 impl fmt::Display for WireError {
@@ -232,10 +244,18 @@ pub enum Msg {
         /// Sender's server index (ring role) or client id.
         sender: u32,
     },
-    /// Handshake accepted; carries the receiving server's index.
+    /// Handshake accepted; carries the receiving server's index and the
+    /// installed routing epoch, so (re)connecting is also how a client
+    /// refreshes its routing view after an epoch misroute.
     HelloOk {
         /// The server index the client actually reached.
         server: u32,
+        /// Installed routing-epoch version (0 = static / adaptivity off).
+        epoch: u64,
+        /// The epoch's partitioning assignment in wire form (`-1` =
+        /// `None`; see `analysis::drift::assignment_to_wire`). Empty when
+        /// the server routes statically.
+        assignment: Vec<i64>,
     },
     /// One operation: template name plus bound parameters in canonical
     /// (name-sorted) order.
@@ -245,6 +265,11 @@ pub enum Msg {
         /// Bound parameters, name-sorted
         /// ([`Operation::canonical_args`](crate::workload::spec::Operation::canonical_args)).
         args: Vec<(String, Value)>,
+        /// Routing-epoch version the client routed this request under
+        /// (0 = static). A server on a newer epoch that disagrees with
+        /// the client's target answers with a retryable epoch-misroute
+        /// [`WireError`] instead of a fatal misroute.
+        epoch: u64,
     },
     /// Successful reply: the operation's [`ResultSet`](crate::db::ResultSet),
     /// encoded row-by-row from borrowed [`RowRef`](crate::db::RowRef)s.
@@ -309,11 +334,16 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
             put_u32(&mut buf, *n_servers);
             put_u32(&mut buf, *sender);
         }
-        Msg::HelloOk { server } => {
+        Msg::HelloOk { server, epoch, assignment } => {
             buf.push(TAG_HELLO_OK);
             put_u32(&mut buf, *server);
+            put_u64(&mut buf, *epoch);
+            put_u32(&mut buf, assignment.len() as u32);
+            for &a in assignment {
+                put_u64(&mut buf, a as u64);
+            }
         }
-        Msg::Request { txn, args } => {
+        Msg::Request { txn, args, epoch } => {
             buf.push(TAG_REQUEST);
             put_string(&mut buf, txn);
             put_u32(&mut buf, args.len() as u32);
@@ -321,6 +351,7 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
                 put_string(&mut buf, name);
                 put_value(&mut buf, v);
             }
+            put_u64(&mut buf, *epoch);
         }
         Msg::ReplyOk(rs) => {
             buf.push(TAG_REPLY_OK);
@@ -337,6 +368,13 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
             buf.push(TAG_REPLY_ERR);
             buf.push(e.retryable as u8);
             put_string(&mut buf, &e.message);
+            match e.epoch {
+                Some(v) => {
+                    buf.push(1);
+                    put_u64(&mut buf, v);
+                }
+                None => buf.push(0),
+            }
         }
         Msg::TokenPass { hop, idle, token } => {
             buf.push(TAG_TOKEN_PASS);
@@ -359,6 +397,15 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
             }
             put_u64(&mut buf, token.appended);
             put_u64(&mut buf, token.rotations);
+            put_u64(&mut buf, token.epoch);
+            put_u32(&mut buf, token.epoch_assignment.len() as u32);
+            for &a in &token.epoch_assignment {
+                put_u64(&mut buf, a as u64);
+            }
+            put_u32(&mut buf, token.obs.len() as u32);
+            for &c in &token.obs {
+                put_u64(&mut buf, c);
+            }
         }
         Msg::TokenAck { hop } => {
             buf.push(TAG_TOKEN_ACK);
@@ -389,7 +436,16 @@ fn decode_msg_inner(payload: &[u8]) -> Result<Msg, String> {
             let sender = r.u32()?;
             Msg::Hello { role, app, n_servers, sender }
         }
-        TAG_HELLO_OK => Msg::HelloOk { server: r.u32()? },
+        TAG_HELLO_OK => {
+            let server = r.u32()?;
+            let epoch = r.u64()?;
+            let na = r.u32()? as usize;
+            let mut assignment = Vec::with_capacity(na.min(1024));
+            for _ in 0..na {
+                assignment.push(r.u64()? as i64);
+            }
+            Msg::HelloOk { server, epoch, assignment }
+        }
         TAG_REQUEST => {
             let txn = r.string()?;
             let n = r.u32()? as usize;
@@ -399,7 +455,8 @@ fn decode_msg_inner(payload: &[u8]) -> Result<Msg, String> {
                 let v = r.value()?;
                 args.push((name, v));
             }
-            Msg::Request { txn, args }
+            let epoch = r.u64()?;
+            Msg::Request { txn, args, epoch }
         }
         TAG_REPLY_OK => {
             let affected = r.u64()? as usize;
@@ -422,7 +479,12 @@ fn decode_msg_inner(payload: &[u8]) -> Result<Msg, String> {
                 t => return Err(format!("bad bool tag {t}")),
             };
             let message = r.string()?;
-            Msg::ReplyErr(WireError { retryable, message })
+            let epoch = match r.u8()? {
+                0 => None,
+                1 => Some(r.u64()?),
+                t => return Err(format!("bad option tag {t}")),
+            };
+            Msg::ReplyErr(WireError { retryable, message, epoch })
         }
         TAG_TOKEN_PASS => {
             let hop = r.u64()?;
@@ -443,7 +505,30 @@ fn decode_msg_inner(payload: &[u8]) -> Result<Msg, String> {
             }
             let appended = r.u64()?;
             let rotations = r.u64()?;
-            Msg::TokenPass { hop, idle, token: Token::from_parts(entries, wms, appended, rotations) }
+            let epoch = r.u64()?;
+            let na = r.u32()? as usize;
+            let mut epoch_assignment = Vec::with_capacity(na.min(1024));
+            for _ in 0..na {
+                epoch_assignment.push(r.u64()? as i64);
+            }
+            let no = r.u32()? as usize;
+            let mut obs = Vec::with_capacity(no.min(1024));
+            for _ in 0..no {
+                obs.push(r.u64()?);
+            }
+            Msg::TokenPass {
+                hop,
+                idle,
+                token: Token::from_parts(
+                    entries,
+                    wms,
+                    appended,
+                    rotations,
+                    epoch,
+                    epoch_assignment,
+                    obs,
+                ),
+            }
         }
         TAG_TOKEN_ACK => Msg::TokenAck { hop: r.u64()? },
         t => return Err(format!("unknown message tag {t}")),
@@ -487,15 +572,23 @@ mod tests {
     fn message_roundtrip() {
         let msgs = vec![
             Msg::Hello { role: Role::Ring, app: "tpcw".into(), n_servers: 3, sender: 2 },
-            Msg::HelloOk { server: 1 },
+            Msg::HelloOk { server: 1, epoch: 0, assignment: vec![] },
+            Msg::HelloOk { server: 1, epoch: 3, assignment: vec![0, -1, 1] },
             Msg::Request {
                 txn: "createCart".into(),
                 args: vec![
                     ("cid".into(), Value::Int(7)),
                     ("name".into(), Value::Str("x".into())),
                 ],
+                epoch: 0,
             },
-            Msg::ReplyErr(WireError { retryable: true, message: "lock conflict".into() }),
+            Msg::Request { txn: "move".into(), args: vec![], epoch: 7 },
+            Msg::ReplyErr(WireError::plain(true, "lock conflict")),
+            Msg::ReplyErr(WireError {
+                retryable: true,
+                message: "stale routing epoch".into(),
+                epoch: Some(4),
+            }),
             Msg::TokenAck { hop: 42 },
         ];
         for msg in msgs {
@@ -520,8 +613,20 @@ mod tests {
 
     #[test]
     fn trailing_bytes_are_rejected() {
-        let mut bytes = encode_msg(&Msg::HelloOk { server: 0 });
+        let mut bytes = encode_msg(&Msg::HelloOk { server: 0, epoch: 0, assignment: vec![] });
         bytes.push(0xFF);
         assert!(matches!(decode_msg(&bytes), Err(ProtoError::Decode(_))));
+    }
+
+    #[test]
+    fn token_pass_roundtrips_epoch_fields() {
+        let mut token = Token::new(3);
+        token.epoch = 2;
+        token.epoch_assignment = vec![1, -1, 0];
+        token.ensure_obs(3);
+        token.obs[2] = 99;
+        let msg = Msg::TokenPass { hop: 5, idle: 1, token };
+        let bytes = encode_msg(&msg);
+        assert_eq!(decode_msg(&bytes).unwrap(), msg);
     }
 }

@@ -47,14 +47,17 @@
 use super::client::NetClient;
 use super::proto::{decode_msg, encode_msg, Msg, ProtoError, Role, WireError};
 use super::transport::{Conn, Listener, Transport};
+use crate::analysis::drift::{
+    assignment_from_wire, assignment_to_wire, AdaptiveConfig, EpochController,
+};
 use crate::conveyor::token::{Token, TokenEntry};
 use crate::conveyor::ServerCore;
-use crate::db::{Db, DurabilityConfig, Retryable, Value};
-use crate::workload::analyzed::{AnalyzedApp, Route};
+use crate::db::{Db, DurabilityConfig, Retryable, TxnError, Value};
+use crate::workload::analyzed::{AnalyzedApp, Route, RoutingEpoch};
 use crate::workload::spec::{Operation, PreparedStmts};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
 /// Configuration of a served cluster.
@@ -77,6 +80,15 @@ pub struct ServeConfig {
     /// Record every token entry the belt threads observe (the
     /// fault-injection tests' no-dup/no-loss oracle; off by default).
     pub record_history: bool,
+    /// Live routing epochs (`analysis::drift`): handlers count
+    /// per-template arrivals, the belt flushes the counts onto the
+    /// token, and the controller at server 0 installs a better
+    /// [`RoutingEpoch`] over the token when the observed mix drifts.
+    /// Misroutes from clients on an older epoch come back as retryable
+    /// [`WireError`]s carrying the installed version, so
+    /// [`NetClient`] re-handshakes and re-routes. `None` (default) =
+    /// static routing.
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl ServeConfig {
@@ -89,6 +101,7 @@ impl ServeConfig {
             ack_timeout: Duration::from_millis(50),
             wal_dir: None,
             record_history: false,
+            adaptive: None,
         }
     }
 
@@ -146,6 +159,15 @@ pub struct NetNode {
     pub ops_global: AtomicU64,
     /// Confluent operations executed here.
     pub ops_confluent: AtomicU64,
+    /// The installed routing epoch (`Some` iff [`ServeConfig::adaptive`]).
+    /// Handlers route under this; the belt thread swaps in newer epochs
+    /// carried by the token.
+    epoch: RwLock<Option<Arc<RoutingEpoch>>>,
+    /// Per-template operation counts since the belt last flushed them
+    /// onto the token (empty when adaptivity is off).
+    obs: Vec<AtomicU64>,
+    /// Epoch installations this server's controller initiated.
+    epoch_switches: AtomicU64,
 }
 
 impl NetNode {
@@ -159,31 +181,76 @@ impl NetNode {
         self.core.retries.load(Ordering::Relaxed)
     }
 
+    /// The installed routing epoch's version (0 when adaptivity is off
+    /// or no switch has happened yet).
+    pub fn epoch_version(&self) -> u64 {
+        self.epoch.read().unwrap().as_ref().map(|e| e.version).unwrap_or(0)
+    }
+
+    /// Epoch installations initiated by this server's controller
+    /// (non-zero only at server 0).
+    pub fn epoch_switches(&self) -> u64 {
+        self.epoch_switches.load(Ordering::Relaxed)
+    }
+
+    /// `(version, wire assignment)` of the installed epoch, for the
+    /// client handshake.
+    fn epoch_wire(&self) -> (u64, Vec<i64>) {
+        match self.epoch.read().unwrap().as_ref() {
+            Some(e) => (e.version, assignment_to_wire(&e.assignment)),
+            None => (0, Vec::new()),
+        }
+    }
+
     /// Execute one decoded request: resolve the template, route, run.
-    /// Misrouted operations (the client's routing disagrees with ours)
-    /// are rejected rather than silently executed on the wrong server —
-    /// the routing function is deterministic, so this only fires on a
-    /// buggy or malicious client.
-    pub fn handle_request(&self, txn: &str, args: Vec<(String, Value)>) -> Msg {
+    /// `client_epoch` is the routing-epoch version the client issued
+    /// under (0 without adaptivity). Misrouted operations are rejected
+    /// rather than silently executed on the wrong server; under
+    /// adaptivity the rejection is *retryable* when the client's epoch is
+    /// simply stale — it carries the installed version so the stub
+    /// re-handshakes and re-routes — and fatal only when client and
+    /// server disagree within the same epoch (a buggy or malicious
+    /// client: the routing function is deterministic).
+    pub fn handle_request(&self, txn: &str, args: Vec<(String, Value)>, client_epoch: u64) -> Msg {
         let Some(ti) = self.app.spec.txn_index(txn) else {
-            return Msg::ReplyErr(WireError {
-                retryable: false,
-                message: format!("unknown transaction '{txn}'"),
-            });
+            return Msg::ReplyErr(WireError::plain(
+                false,
+                format!("unknown transaction '{txn}'"),
+            ));
         };
         let op = Operation { txn: ti, args: args.into_iter().collect() };
         let tpl = &self.app.spec.txns[ti];
         let stmts = &self.stmt_maps[ti];
-        let misroute = |s: usize| {
-            Msg::ReplyErr(WireError {
-                retryable: false,
-                message: format!(
+        let installed = self.epoch.read().unwrap().clone();
+        let misroute = |s: usize| match &installed {
+            Some(e) if client_epoch != e.version => {
+                let err = TxnError::StaleEpoch { installed: e.version };
+                Msg::ReplyErr(WireError {
+                    retryable: err.classify() == Retryable::Transient,
+                    message: format!("{err}: '{txn}' belongs to server {s}"),
+                    epoch: Some(e.version),
+                })
+            }
+            _ => Msg::ReplyErr(WireError::plain(
+                false,
+                format!(
                     "misrouted: '{txn}' belongs to server {s}, this is server {}",
                     self.index
                 ),
-            })
+            )),
         };
-        let result = match self.app.route(&op, self.n) {
+        let route = match &installed {
+            Some(e) => e.route_op(&self.app, &op, self.n),
+            None => self.app.route(&op, self.n),
+        };
+        let executing = match route {
+            Route::Any => true,
+            Route::LocalAt(s) | Route::GlobalAt(s) | Route::ConfluentAt(s) => s == self.index,
+        };
+        if executing && !self.obs.is_empty() {
+            self.obs[ti].fetch_add(1, Ordering::Relaxed);
+        }
+        let result = match route {
             Route::Any => {
                 self.ops_local.fetch_add(1, Ordering::Relaxed);
                 self.core.execute_local(tpl, stmts, &op)
@@ -212,10 +279,10 @@ impl NetNode {
         };
         match result {
             Ok(reply) => Msg::ReplyOk(reply),
-            Err(e) => Msg::ReplyErr(WireError {
-                retryable: e.classify() == Retryable::Transient,
-                message: e.to_string(),
-            }),
+            Err(e) => Msg::ReplyErr(WireError::plain(
+                e.classify() == Retryable::Transient,
+                e.to_string(),
+            )),
         }
     }
 }
@@ -278,6 +345,10 @@ impl Cluster {
             history: Mutex::new(Vec::new()),
         });
 
+        // Epoch 0 is computed once and installed everywhere at boot;
+        // later epochs install via the token.
+        let epoch0 = cfg.adaptive.as_ref().map(|_| Arc::new(app.epoch0()));
+        let n_templates = app.spec.txns.len();
         let mut nodes = Vec::with_capacity(n);
         for p in 0..n {
             let db = Db::new(app.spec.schema.clone());
@@ -297,6 +368,13 @@ impl Cluster {
                 ops_local: AtomicU64::new(0),
                 ops_global: AtomicU64::new(0),
                 ops_confluent: AtomicU64::new(0),
+                epoch: RwLock::new(epoch0.clone()),
+                obs: if cfg.adaptive.is_some() {
+                    (0..n_templates).map(|_| AtomicU64::new(0)).collect()
+                } else {
+                    Vec::new()
+                },
+                epoch_switches: AtomicU64::new(0),
             }));
         }
 
@@ -323,6 +401,11 @@ impl Cluster {
                 ack_timeout: cfg.ack_timeout,
                 idle_pause: cfg.idle_pause,
                 record_history: cfg.record_history,
+                adaptive: cfg.adaptive.clone(),
+                controller: cfg
+                    .adaptive
+                    .as_ref()
+                    .map(|ac| EpochController::new(&app, ac.clone())),
             };
             threads.push(
                 std::thread::Builder::new()
@@ -342,6 +425,13 @@ impl Cluster {
                     ack_timeout: cfg.ack_timeout,
                     idle_pause: cfg.idle_pause,
                     record_history: cfg.record_history,
+                    adaptive: cfg.adaptive.clone(),
+                    // The controller runs where rotations are counted.
+                    controller: cfg
+                        .adaptive
+                        .as_ref()
+                        .filter(|_| p == 0)
+                        .map(|ac| EpochController::new(&app, ac.clone())),
                 };
                 threads.push(
                     std::thread::Builder::new()
@@ -462,25 +552,30 @@ fn client_conn(node: Arc<NetNode>, mut conn: Box<dyn Conn>, app_name: String) {
     match decode_msg(&payload) {
         Ok(Msg::Hello { role: Role::Client, app, n_servers, .. }) => {
             if app != app_name || n_servers as usize != node.n {
-                let err = Msg::ReplyErr(WireError {
-                    retryable: false,
-                    message: format!(
+                let err = Msg::ReplyErr(WireError::plain(
+                    false,
+                    format!(
                         "handshake mismatch: got app '{app}' x{n_servers}, serving '{app_name}' x{}",
                         node.n
                     ),
-                });
+                ));
                 let _ = conn.send(&encode_msg(&err));
                 return;
             }
-            if conn.send(&encode_msg(&Msg::HelloOk { server: node.index as u32 })).is_err() {
+            // The handshake doubles as the epoch refresh: a client that
+            // was told its epoch is stale reconnects and learns the
+            // installed version + assignment here.
+            let (epoch, assignment) = node.epoch_wire();
+            let ok = Msg::HelloOk { server: node.index as u32, epoch, assignment };
+            if conn.send(&encode_msg(&ok)).is_err() {
                 return;
             }
         }
         _ => {
-            let err = Msg::ReplyErr(WireError {
-                retryable: false,
-                message: "protocol violation: expected Hello".into(),
-            });
+            let err = Msg::ReplyErr(WireError::plain(
+                false,
+                "protocol violation: expected Hello".into(),
+            ));
             let _ = conn.send(&encode_msg(&err));
             return;
         }
@@ -488,15 +583,12 @@ fn client_conn(node: Arc<NetNode>, mut conn: Box<dyn Conn>, app_name: String) {
     loop {
         let Ok(payload) = conn.recv() else { return };
         let reply = match decode_msg(&payload) {
-            Ok(Msg::Request { txn, args }) => node.handle_request(&txn, args),
-            Ok(_) => Msg::ReplyErr(WireError {
-                retryable: false,
-                message: "protocol violation: expected Request".into(),
-            }),
-            Err(e) => Msg::ReplyErr(WireError {
-                retryable: false,
-                message: format!("bad request: {e}"),
-            }),
+            Ok(Msg::Request { txn, args, epoch }) => node.handle_request(&txn, args, epoch),
+            Ok(_) => Msg::ReplyErr(WireError::plain(
+                false,
+                "protocol violation: expected Request".into(),
+            )),
+            Err(e) => Msg::ReplyErr(WireError::plain(false, format!("bad request: {e}"))),
         };
         if conn.send(&encode_msg(&reply)).is_err() {
             return;
@@ -515,6 +607,10 @@ struct Belt {
     ack_timeout: Duration,
     idle_pause: Duration,
     record_history: bool,
+    adaptive: Option<AdaptiveConfig>,
+    /// Re-partitioning controller; `Some` only at server 0 under
+    /// adaptivity.
+    controller: Option<EpochController>,
 }
 
 impl Belt {
@@ -545,6 +641,43 @@ impl Belt {
 
     /// Run one stop of this server. Returns the halt decision.
     fn stop_here(&self, token: &mut Token, idle: u32) -> StopOutcome {
+        if let Some(acfg) = &self.adaptive {
+            // Flush this server's observation counts onto the token and
+            // install any newer epoch it carries — the install rides the
+            // token's total order, so no extra coordination is needed.
+            token.ensure_obs(self.node.app.spec.txns.len());
+            for (t, c) in self.node.obs.iter().enumerate() {
+                token.obs[t] += c.swap(0, Ordering::Relaxed);
+            }
+            if token.epoch > self.node.epoch_version() {
+                let assign = assignment_from_wire(&token.epoch_assignment);
+                let e = Arc::new(self.node.app.epoch_from(token.epoch, assign));
+                *self.node.epoch.write().unwrap() = Some(e);
+            }
+            if let Some(controller) = &self.controller {
+                if token.rotations > 0 && token.rotations % acfg.window_rotations == 0 {
+                    let installed = self
+                        .node
+                        .epoch
+                        .read()
+                        .unwrap()
+                        .clone()
+                        .expect("adaptive node without an epoch");
+                    if let Some(next) = controller.evaluate(&token.obs, &installed.assignment) {
+                        let version = installed.version + 1;
+                        token.epoch = version;
+                        token.epoch_assignment = assignment_to_wire(&next);
+                        *self.node.epoch.write().unwrap() =
+                            Some(Arc::new(self.node.app.epoch_from(version, next)));
+                        self.node.epoch_switches.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // The observation window is consumed either way.
+                    for c in token.obs.iter_mut() {
+                        *c = 0;
+                    }
+                }
+            }
+        }
         let before = token.appended;
         let any_work = self.node.core.token_stop(self.node.index, token);
         self.record(token, before);
@@ -711,9 +844,12 @@ impl Belt {
                 Ok(Msg::Hello { role: Role::Ring, app, n_servers, .. })
                     if app == self.app_name && n_servers as usize == self.n =>
                 {
-                    if conn.send(&encode_msg(&Msg::HelloOk { server: self.node.index as u32 }))
-                        .is_err()
-                    {
+                    // Ring peers don't consume epoch state from the
+                    // handshake (it rides the token); send the current
+                    // view anyway for symmetry.
+                    let (epoch, assignment) = self.node.epoch_wire();
+                    let ok = Msg::HelloOk { server: self.node.index as u32, epoch, assignment };
+                    if conn.send(&encode_msg(&ok)).is_err() {
                         continue;
                     }
                     // Token receipt has no deadline: idle rings are

@@ -6,7 +6,8 @@ use crate::analysis::conflict::ConflictMatrix;
 use crate::analysis::elim::EliminationTensor;
 use crate::analysis::partition::{optimize, PartitionOptions, Partitioning};
 use crate::analysis::rwsets::{extract_rwsets, ExtractOptions, RwSets};
-use crate::db::Value;
+use crate::analysis::score::Assignment;
+use crate::db::{Bindings, Value};
 use crate::workload::spec::{AppSpec, Operation};
 
 /// Deterministic value hash shared by every server and client — routing
@@ -47,6 +48,105 @@ pub enum Route {
 impl Route {
     pub fn is_global(&self) -> bool {
         matches!(self, Route::GlobalAt(_))
+    }
+}
+
+/// The routing function, parameterized over *which* classification is in
+/// force — the static one baked into an [`AnalyzedApp`], or the pinned
+/// classification of an installed [`RoutingEpoch`]. Every layer (client,
+/// server, simulators) routes through this one function, so an epoch
+/// switch changes routing everywhere by swapping one argument.
+pub fn route_with(
+    spec: &AppSpec,
+    classification: &Classification,
+    txn: usize,
+    args: &Bindings,
+    n_servers: usize,
+) -> Route {
+    let params = &classification.routing_params[txn];
+    let value_of = |k: usize| -> Option<&Value> {
+        let name = &spec.txns[txn].params[k];
+        args.get(name)
+    };
+    let route_value = |v: &Value| (route_hash(v) % n_servers as u64) as usize;
+    match &classification.classes[txn] {
+        OpClass::Commutative => Route::Any,
+        OpClass::Local => match params.first().and_then(|&k| value_of(k)) {
+            Some(v) => Route::LocalAt(route_value(v)),
+            // Local op with no routing parameter: reads only global
+            // (fully replicated) state — any server works.
+            None => Route::Any,
+        },
+        OpClass::Global => {
+            let server = params
+                .first()
+                .and_then(|&k| value_of(k))
+                .map(route_value)
+                // Unpartitionable global: a fixed home per template.
+                .unwrap_or(txn % n_servers);
+            Route::GlobalAt(server)
+        }
+        OpClass::LocalGlobal => {
+            let routes: Vec<usize> =
+                params.iter().filter_map(|&k| value_of(k)).map(route_value).collect();
+            match routes.split_first() {
+                Some((first, rest)) if rest.iter().all(|r| r == first) => Route::LocalAt(*first),
+                Some((first, _)) => Route::GlobalAt(*first),
+                None => Route::GlobalAt(txn % n_servers),
+            }
+        }
+        // Confluent ops route like locals — same home-server choice a
+        // Local/Global with this routing set would make — so peers
+        // that rely on routing coverage still co-locate with them.
+        OpClass::Confluent => {
+            let server = params
+                .first()
+                .and_then(|&k| value_of(k))
+                .map(route_value)
+                .unwrap_or(txn % n_servers);
+            Route::ConfluentAt(server)
+        }
+    }
+}
+
+/// A versioned routing view: one partitioning assignment plus the
+/// classification it pins (see [`crate::analysis::drift`] — epochs
+/// classify by *pinning*, so their classes are exactly what the cost
+/// function counts). Installed via the conveyor-belt token: the token
+/// carries `(version, assignment)`, every server installs at token
+/// receipt, so installation is a total-order barrier.
+///
+/// Transition semantics: in-flight operations complete under their issue
+/// epoch. That is sound here because a pinned *Local* template routes by
+/// the value of its own pinned parameter — and a template whose Local
+/// coverage survives a switch keeps the same parameter, so Local homes
+/// never move; only *Global* templates (token-ordered wherever they
+/// execute) change home or class across a switch. A workload whose
+/// optimum moved a Local template between two different covering
+/// parameters would need state migration, which the belt deliberately
+/// does not do — the controller's candidates never produce that for the
+/// shipped workloads, and token-ordered execution keeps even a misrouted
+/// global correct.
+#[derive(Debug, Clone)]
+pub struct RoutingEpoch {
+    /// Monotonic version; epoch 0 is the offline analysis result.
+    pub version: u64,
+    /// Per-template partitioning parameter choice this epoch pins.
+    pub assignment: Assignment,
+    /// The pinned classification (never `LocalGlobal`; statically
+    /// Confluent templates stay Confluent — see `epoch_from`).
+    pub classification: Classification,
+}
+
+impl RoutingEpoch {
+    /// Route under this epoch instead of the app's static classification.
+    pub fn route(&self, app: &AnalyzedApp, txn: usize, args: &Bindings, n_servers: usize) -> Route {
+        route_with(&app.spec, &self.classification, txn, args, n_servers)
+    }
+
+    /// Convenience wrapper over [`RoutingEpoch::route`].
+    pub fn route_op(&self, app: &AnalyzedApp, op: &Operation, n_servers: usize) -> Route {
+        self.route(app, op.txn, &op.args, n_servers)
     }
 }
 
@@ -112,55 +212,7 @@ impl AnalyzedApp {
 
     /// Route an operation to a server, per its classification.
     pub fn route(&self, op: &Operation, n_servers: usize) -> Route {
-        let txn = op.txn;
-        let params = &self.classification.routing_params[txn];
-        let value_of = |k: usize| -> Option<&Value> {
-            let name = &self.spec.txns[txn].params[k];
-            op.args.get(name)
-        };
-        match self.class(txn) {
-            OpClass::Commutative => Route::Any,
-            OpClass::Local => match params.first().and_then(|&k| value_of(k)) {
-                Some(v) => Route::LocalAt(self.route_value(v, n_servers)),
-                // Local op with no routing parameter: reads only global
-                // (fully replicated) state — any server works.
-                None => Route::Any,
-            },
-            OpClass::Global => {
-                let server = params
-                    .first()
-                    .and_then(|&k| value_of(k))
-                    .map(|v| self.route_value(v, n_servers))
-                    // Unpartitionable global: a fixed home per template.
-                    .unwrap_or(txn % n_servers);
-                Route::GlobalAt(server)
-            }
-            OpClass::LocalGlobal => {
-                let routes: Vec<usize> = params
-                    .iter()
-                    .filter_map(|&k| value_of(k))
-                    .map(|v| self.route_value(v, n_servers))
-                    .collect();
-                match routes.split_first() {
-                    Some((first, rest)) if rest.iter().all(|r| r == first) => {
-                        Route::LocalAt(*first)
-                    }
-                    Some((first, _)) => Route::GlobalAt(*first),
-                    None => Route::GlobalAt(txn % n_servers),
-                }
-            }
-            // Confluent ops route like locals — same home-server choice a
-            // Local/Global with this routing set would make — so peers
-            // that rely on routing coverage still co-locate with them.
-            OpClass::Confluent => {
-                let server = params
-                    .first()
-                    .and_then(|&k| value_of(k))
-                    .map(|v| self.route_value(v, n_servers))
-                    .unwrap_or(txn % n_servers);
-                Route::ConfluentAt(server)
-            }
-        }
+        route_with(&self.spec, &self.classification, op.txn, &op.args, n_servers)
     }
 
     /// Generate a value for parameter `param` of `txn` that routes to
@@ -176,6 +228,33 @@ impl AnalyzedApp {
             }
         }
         Value::Int(base)
+    }
+
+    /// The initial routing epoch: version 0, the offline partitioning
+    /// choice, classified by *pinning* (see [`crate::analysis::drift`]).
+    /// Pinned coverage is a subset of the growth classifier's, so epoch 0
+    /// may belt more than the static classification would — which is
+    /// exactly what makes epochs comparable by cost. Runtimes with
+    /// adaptivity off never construct epochs and keep today's behavior.
+    pub fn epoch0(&self) -> RoutingEpoch {
+        self.epoch_from(0, self.partitioning.choice.clone())
+    }
+
+    /// Build the epoch that pins `assignment` at `version`: rebuild the
+    /// elimination tensor (the offline run discards it) and classify by
+    /// pinning. Statically Confluent templates stay Confluent — invariant
+    /// confluence is proven against the schema, independent of the
+    /// assignment, and keeping the class stable keeps the replicated
+    /// table set stable across switches.
+    pub fn epoch_from(&self, version: u64, assignment: Assignment) -> RoutingEpoch {
+        let tensor = EliminationTensor::build(&self.spec.txns, &self.matrix);
+        let mut classification = crate::analysis::drift::pin_classes(&tensor, &assignment);
+        for (t, c) in self.classification.classes.iter().enumerate() {
+            if *c == OpClass::Confluent {
+                classification.classes[t] = OpClass::Confluent;
+            }
+        }
+        RoutingEpoch { version, assignment, classification }
     }
 
     /// Force a named transaction to Global (see
@@ -281,6 +360,23 @@ mod tests {
         let app = mini_app();
         let (l, g, c, lg, cf, ro, total) = app.table1_row();
         assert_eq!((l, g, c, lg, cf, ro, total), (1, 1, 0, 0, 0, 0, 2));
+    }
+
+    #[test]
+    fn epoch0_pins_the_offline_choice() {
+        let app = mini_app();
+        let e = app.epoch0();
+        assert_eq!(e.version, 0);
+        assert_eq!(e.assignment, app.partitioning.choice);
+        // In mini_app the pinned classes coincide with the grown ones
+        // (addCart fully covered on cid, order's self-conflict on the
+        // derived item is uncoverable), so epoch-0 routing agrees with
+        // the static route for both templates.
+        for (txn, cid) in [(0, 42), (1, 42), (0, 7), (1, 9)] {
+            let o = op(txn, cid);
+            assert_eq!(e.route_op(&app, &o, 4), app.route(&o, 4));
+        }
+        assert_eq!(e.classification.classes, vec![OpClass::Local, OpClass::Global]);
     }
 
     #[test]

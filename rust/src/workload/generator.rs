@@ -13,6 +13,23 @@ use crate::workload::spec::{Operation, TxnTemplate};
 /// size the routing function hashes into.
 pub trait OpGenerator: Send {
     fn next_op(&mut self, rng: &mut Rng, client_site: usize, n_servers: usize) -> Operation;
+
+    /// Time-aware generation hook: like [`OpGenerator::next_op`] but
+    /// handed the issuing client's virtual clock, so a generator can play
+    /// a deterministic drift schedule (`analysis::drift::DriftConfig`) —
+    /// the mix is a pure function of `(rng stream, now)`, which keeps
+    /// simulation results bit-identical at any thread or client-group
+    /// count. The default ignores time and delegates, so existing
+    /// generators (including plain closures) are unaffected.
+    fn next_op_at(
+        &mut self,
+        rng: &mut Rng,
+        client_site: usize,
+        n_servers: usize,
+        _now: VTime,
+    ) -> Operation {
+        self.next_op(rng, client_site, n_servers)
+    }
 }
 
 impl<F> OpGenerator for F

@@ -1,10 +1,14 @@
 //! The RQ3 microbenchmark (paper §7.3): a synthetic workload with a
 //! precisely controllable fraction of local operations and a fixed 5 ms
-//! execution time per operation (local or global).
+//! execution time per operation (local or global) — plus the *drift*
+//! microbenchmark behind the live-routing-epoch experiments
+//! ([`drift_analyzed`], [`DriftGen`]): a workload whose optimal
+//! partitioning parameter flips as the hot side moves between tables.
 
+use crate::analysis::drift::DriftConfig;
 use crate::catalog::{Schema, TableSchema, ValueType};
 use crate::db::{Db, Value};
-use crate::util::Rng;
+use crate::util::{Rng, VTime};
 use crate::workload::analyzed::AnalyzedApp;
 use crate::workload::generator::OpGenerator;
 use crate::workload::spec::{AppSpec, Operation, TxnTemplate};
@@ -111,6 +115,145 @@ impl OpGenerator for MicroGenerator {
     }
 }
 
+// ---------------------------------------------------------------------
+// The drift microbenchmark: adaptive-vs-static routing under a moving
+// hot set.
+// ---------------------------------------------------------------------
+
+/// Keys per drift table.
+pub const DRIFT_KEYS: i64 = 2048;
+
+/// Three single-key tables. `A_TAB` and `B_TAB` take independent update
+/// streams; `C_TAB` is written *only* by the coupling `move` template
+/// (always token-ordered in every epoch), so its replicas must converge
+/// bit-identically — the convergence witness for epoch-switch tests.
+pub fn drift_schema() -> Schema {
+    Schema::new(vec![
+        TableSchema::new("A_TAB", &[("K", ValueType::Int), ("V", ValueType::Int)], &["K"]),
+        TableSchema::new("B_TAB", &[("K", ValueType::Int), ("V", ValueType::Int)], &["K"]),
+        TableSchema::new("C_TAB", &[("K", ValueType::Int), ("V", ValueType::Int)], &["K"]),
+    ])
+}
+
+/// The trade-off the controller navigates:
+///
+/// * `move(a, b)` writes both tables (plus the witness) — its self
+///   conflict needs `a` *and* `b` covered at once, so it is Global under
+///   every pinned assignment; its *choice* decides who else gets to be
+///   local.
+/// * `aupd(a)` is Local iff `move` pins on `a`; `bupd(b)` is Local iff
+///   `move` pins on `b`. Static weights (5:1 toward `aupd`) make epoch 0
+///   pin `a`; when the observed mix drifts toward `bupd`, the optimal
+///   pin flips to `b`.
+pub fn drift_templates() -> Vec<TxnTemplate> {
+    vec![
+        TxnTemplate::new(
+            "move",
+            &["a", "b"],
+            &[
+                ("ua", "UPDATE A_TAB SET V = V + 1 WHERE K = ?a"),
+                ("ub", "UPDATE B_TAB SET V = V + 1 WHERE K = ?b"),
+                ("uc", "UPDATE C_TAB SET V = V + 1 WHERE K = ?a"),
+            ],
+            1.0,
+        )
+        .with_body(|ctx, args| {
+            ctx.exec("ua", args)?;
+            ctx.exec("ub", args)?;
+            ctx.exec("uc", args)
+        }),
+        TxnTemplate::new(
+            "aupd",
+            &["a"],
+            &[("u", "UPDATE A_TAB SET V = V + 1 WHERE K = ?a")],
+            5.0,
+        )
+        .with_body(|ctx, args| ctx.exec("u", args)),
+        TxnTemplate::new(
+            "bupd",
+            &["b"],
+            &[("u", "UPDATE B_TAB SET V = V + 1 WHERE K = ?b")],
+            1.0,
+        )
+        .with_body(|ctx, args| ctx.exec("u", args)),
+    ]
+}
+
+/// Analyze the drift app. `move` is forced Global so the static
+/// classification agrees with what every pinned epoch says about it
+/// (the growth classifier would call it LocalGlobal), keeping the
+/// replicated-table set identical across epochs.
+pub fn drift_analyzed() -> AnalyzedApp {
+    let mut app = AnalyzedApp::analyze(AppSpec {
+        name: "drift".into(),
+        schema: drift_schema(),
+        txns: drift_templates(),
+    });
+    app.force_global("move");
+    debug_assert_eq!(*app.class(0), crate::analysis::OpClass::Global);
+    debug_assert_eq!(app.partitioning.choice[0], Some(0), "epoch 0 must pin `move` on a");
+    app
+}
+
+/// Seed all three drift tables with zeroed counters.
+pub fn drift_seed(db: &Db) {
+    use crate::db::BindSlots;
+    for table in ["A_TAB", "B_TAB", "C_TAB"] {
+        let ins = db.prepare_sql(&format!("INSERT INTO {table} (K, V) VALUES (?k, 0)")).unwrap();
+        for k in 0..DRIFT_KEYS {
+            db.exec_auto_prepared(&ins, &BindSlots(vec![Value::Int(k)])).unwrap();
+        }
+    }
+}
+
+/// Plays a [`DriftConfig`] schedule: the template mix (and the B-side
+/// key band) is a pure function of the issuing client's rng stream and
+/// virtual clock, so runs stay bit-identical at any thread or
+/// client-group count.
+pub struct DriftGen {
+    pub cfg: DriftConfig,
+}
+
+impl DriftGen {
+    pub fn new(cfg: DriftConfig) -> Self {
+        DriftGen { cfg }
+    }
+
+    fn gen_at(&mut self, rng: &mut Rng, now: VTime) -> Operation {
+        let t_s = now.as_secs_f64();
+        if rng.chance(self.cfg.pivot_share) {
+            let a = rng.range(0, DRIFT_KEYS as usize) as i64;
+            let b = rng.range(0, DRIFT_KEYS as usize) as i64;
+            Operation {
+                txn: 0,
+                args: [
+                    ("a".to_string(), Value::Int(a)),
+                    ("b".to_string(), Value::Int(b)),
+                ]
+                .into_iter()
+                .collect(),
+            }
+        } else if rng.chance(self.cfg.b_share(t_s)) {
+            let (lo, hi) = self.cfg.key_band(t_s, DRIFT_KEYS);
+            let b = lo + rng.range(0, (hi - lo).max(1) as usize) as i64;
+            Operation { txn: 2, args: [("b".to_string(), Value::Int(b))].into_iter().collect() }
+        } else {
+            let a = rng.range(0, DRIFT_KEYS as usize) as i64;
+            Operation { txn: 1, args: [("a".to_string(), Value::Int(a))].into_iter().collect() }
+        }
+    }
+}
+
+impl OpGenerator for DriftGen {
+    fn next_op(&mut self, rng: &mut Rng, _site: usize, _n: usize) -> Operation {
+        self.gen_at(rng, VTime::ZERO)
+    }
+
+    fn next_op_at(&mut self, rng: &mut Rng, _site: usize, _n: usize, now: VTime) -> Operation {
+        self.gen_at(rng, now)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +295,92 @@ mod tests {
                 let op = g.next_op(&mut rng, site, 3);
                 assert_eq!(app.route(&op, 3), Route::LocalAt(site));
             }
+        }
+    }
+
+    #[test]
+    fn drift_app_pins_flip_the_local_class() {
+        let app = drift_analyzed();
+        // Epoch 0 pins `move` on a: aupd local, bupd global.
+        let e0 = app.epoch0();
+        assert_eq!(e0.assignment[0], Some(0));
+        assert_eq!(
+            e0.classification.classes,
+            vec![OpClass::Global, OpClass::Local, OpClass::Global]
+        );
+        // Repinning `move` on b flips which neighbour is local.
+        let e1 = app.epoch_from(1, vec![Some(1), Some(0), Some(0)]);
+        assert_eq!(
+            e1.classification.classes,
+            vec![OpClass::Global, OpClass::Global, OpClass::Local]
+        );
+        // Local homes never move across the switch: aupd routes by its
+        // own key under both epochs (only its *class* changes).
+        let op = Operation {
+            txn: 1,
+            args: [("a".to_string(), Value::Int(77))].into_iter().collect(),
+        };
+        let (r0, r1) = (e0.route_op(&app, &op, 3), e1.route_op(&app, &op, 3));
+        let server_of = |r: Route| match r {
+            Route::LocalAt(s) | Route::GlobalAt(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(server_of(r0), server_of(r1));
+    }
+
+    #[test]
+    fn drift_gen_follows_the_schedule() {
+        let cfg = DriftConfig::default(); // flash crowd at 10 s
+        let mut g = DriftGen::new(cfg);
+        let mut rng = Rng::new(7);
+        let count = |g: &mut DriftGen, rng: &mut Rng, t_ms: u64| -> [f64; 3] {
+            let mut c = [0usize; 3];
+            for _ in 0..20_000 {
+                let op = g.next_op_at(rng, 0, 3, VTime::from_millis(t_ms));
+                c[op.txn] += 1;
+            }
+            [0, 1, 2].map(|i| c[i] as f64 / 20_000.0)
+        };
+        let before = count(&mut g, &mut rng, 1_000);
+        assert!((before[0] - 0.10).abs() < 0.02, "{before:?}");
+        assert!((before[1] - 0.72).abs() < 0.02, "{before:?}");
+        assert!((before[2] - 0.18).abs() < 0.02, "{before:?}");
+        let after = count(&mut g, &mut rng, 15_000);
+        assert!((after[1] - 0.18).abs() < 0.02, "{after:?}");
+        assert!((after[2] - 0.72).abs() < 0.02, "{after:?}");
+        // The flash crowd concentrates every bupd on one key.
+        for _ in 0..50 {
+            let op = g.next_op_at(&mut rng, 0, 3, VTime::from_millis(15_000));
+            if op.txn == 2 {
+                assert_eq!(op.args.get("b"), Some(&Value::Int(0)));
+            }
+        }
+    }
+
+    #[test]
+    fn drift_bodies_execute() {
+        let app = drift_analyzed();
+        let db = Db::new(app.spec.schema.clone());
+        drift_seed(&db);
+        let args: Bindings = [
+            ("a".to_string(), Value::Int(3)),
+            ("b".to_string(), Value::Int(4)),
+        ]
+        .into_iter()
+        .collect();
+        for txn in 0..3 {
+            let tpl = &app.spec.txns[txn];
+            let stmts = tpl.prepared_map(&app.spec.schema);
+            let mut h = db.begin();
+            let mut ctx = crate::workload::spec::TxnCtx::new(&mut h, &stmts);
+            (tpl.body.as_ref().unwrap())(&mut ctx, &args).unwrap();
+            h.commit().unwrap();
+        }
+        // move + aupd touched A(3); move + bupd touched B(4); only move
+        // touched the witness C(3).
+        for (table, k, v) in [("A_TAB", 3, 2), ("B_TAB", 4, 2), ("C_TAB", 3, 1)] {
+            let q = parse_statement(&format!("SELECT V FROM {table} WHERE K = {k}")).unwrap();
+            assert_eq!(db.exec_auto(&q, &Bindings::new()).unwrap().scalar(), Some(&Value::Int(v)));
         }
     }
 

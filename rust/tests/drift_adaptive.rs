@@ -1,0 +1,165 @@
+//! Live routing epochs (tentpole): static vs adaptive operation
+//! partitioning under workload drift, across both runtimes.
+//!
+//! * **Shape** — on the flash-crowd drift workload the adaptive arm's
+//!   steady-state belted fraction returns to the pre-drift level while
+//!   the static arm's stays high ([`fig_drift`]).
+//! * **Soundness** — an epoch switch must not lose or duplicate a
+//!   single replicated `StateUpdate`: the token-log sequence numbers
+//!   stay contiguous from 1 across the switch, and every server's
+//!   witness table (`C_TAB`, written only by the always-global `move`)
+//!   is a bit-identical prefix of the serial token history.
+//! * **Real threads** — the in-process deployment's token thread
+//!   observes the drifted mix, installs a new epoch, and the drained
+//!   replicas still converge.
+
+use elia::analysis::drift::{AdaptiveConfig, DriftConfig};
+use elia::conveyor::{ConveyorConfig, ConveyorSim, DeployConfig, Deployment};
+use elia::db::Db;
+use elia::harness::experiments::{fig_drift, ExpScale};
+use elia::simnet::clients::ClientsConfig;
+use elia::simnet::latency::Topology;
+use elia::util::{Rng, VTime};
+use elia::workload::generator::{OpGenerator, ServiceModel};
+use elia::workload::micro;
+use std::sync::Arc;
+
+/// The drift figure's reproduction target: identical arms before the
+/// drift point, a strictly lower belted fraction for the adaptive arm
+/// after it (the controller made the newly-hot template local again).
+#[test]
+fn adaptive_belted_fraction_drops_below_static_after_drift() {
+    let scale = ExpScale::quick();
+    let (fixed, adaptive) = fig_drift(&scale);
+    assert_eq!(fixed.epoch_switches, 0, "frozen controller must never switch");
+    assert_eq!(fixed.final_epoch, 0);
+    assert!(adaptive.epoch_switches >= 1, "controller must react to the drift");
+    assert!(adaptive.final_epoch >= 1);
+    // Pre-drift both arms run epoch 0 on the same deterministic
+    // workload: identical curves.
+    assert!(
+        (fixed.belted_pre - adaptive.belted_pre).abs() < 1e-12,
+        "pre-drift arms must agree: {} vs {}",
+        fixed.belted_pre,
+        adaptive.belted_pre
+    );
+    assert!(
+        adaptive.belted_post < fixed.belted_post,
+        "adaptive post-drift belted fraction {} must be strictly below static {}",
+        adaptive.belted_post,
+        fixed.belted_post
+    );
+    // And not marginally: re-partitioning should roughly restore the
+    // pre-drift coordination profile.
+    assert!(
+        adaptive.belted_post < fixed.belted_post * 0.7,
+        "adaptive {} vs static {}: expected a decisive drop",
+        adaptive.belted_post,
+        fixed.belted_post
+    );
+}
+
+/// Epoch installation rides the conveyor-belt token, so it must
+/// serialize cleanly with the replicated updates around it: sequence
+/// numbers contiguous from 1 (nothing lost, nothing applied twice) and
+/// every server's witness table explainable as a prefix of the one
+/// serial history — including across the switch.
+#[test]
+fn epoch_switch_loses_and_duplicates_nothing() {
+    let app = micro::drift_analyzed();
+    let cfg = ConveyorConfig {
+        execute_real: true,
+        record_global_log: true,
+        service: ServiceModel::fixed(1.0),
+        warmup: VTime::from_secs(1),
+        horizon: VTime::from_secs(20),
+        adaptive: Some(AdaptiveConfig { window_rotations: 32, ..Default::default() }),
+        ..Default::default()
+    };
+    let (r, dbs) = ConveyorSim::new(
+        &app,
+        Topology::lan(3),
+        ClientsConfig { n: 24, think_ms: 10.0, seed: 7, ..Default::default() },
+        cfg,
+        |_| Box::new(micro::DriftGen::new(DriftConfig::default())),
+        micro::drift_seed,
+    )
+    .run_keep_dbs();
+    assert!(r.epoch_switches >= 1, "the drift must trigger a switch");
+    assert!(r.metrics.completed > 1000);
+    assert!(!r.global_log.is_empty());
+
+    // Token seqs: exactly 1..=len, no gap, no duplicate.
+    assert_eq!(r.global_log_seqs.len(), r.global_log.len());
+    for (i, &seq) in r.global_log_seqs.iter().enumerate() {
+        assert_eq!(seq, i as u64 + 1, "token history must be gap- and duplicate-free");
+    }
+
+    // Serial replay: hash the witness table after every log entry. A
+    // server that lost or double-applied an update across the switch
+    // could not match any prefix.
+    let replica = Db::new(app.spec.schema.clone());
+    micro::drift_seed(&replica);
+    let mut prefix_hashes = vec![replica.table_hash("C_TAB")];
+    for u in &r.global_log {
+        replica.apply_update(u).unwrap();
+        prefix_hashes.push(replica.table_hash("C_TAB"));
+    }
+    for (s, db) in dbs.iter().enumerate() {
+        let h = db.as_ref().expect("real-execution db").table_hash("C_TAB");
+        assert!(
+            prefix_hashes.contains(&h),
+            "server {s}: C_TAB state is not a prefix of the token history"
+        );
+    }
+}
+
+/// The real-threads deployment: drive the drift schedule through
+/// [`Deployment::submit`] (virtual timestamps, wall-clock token
+/// thread), require at least one installed epoch, and check the drained
+/// replicas converge on the witness table.
+#[test]
+fn deployment_installs_epochs_and_converges() {
+    let app = Arc::new(micro::drift_analyzed());
+    let dep = Deployment::start(
+        Arc::clone(&app),
+        DeployConfig {
+            n_servers: 3,
+            adaptive: Some(AdaptiveConfig { window_rotations: 8, ..Default::default() }),
+            ..Default::default()
+        },
+        micro::drift_seed,
+    );
+    assert_eq!(dep.epoch_version(), 0);
+    let drift = DriftConfig::default();
+    let mut gen = micro::DriftGen::new(drift);
+    let mut rng = Rng::new(42);
+    let submit_at = |gen: &mut micro::DriftGen, rng: &mut Rng, t_s: f64| {
+        let op = gen.next_op_at(rng, 0, 3, VTime::from_millis_f64(t_s * 1000.0));
+        dep.submit(op).expect("drift ops update existing keys");
+    };
+    // Pre-drift phase: the mix matches epoch 0's pin, so the controller
+    // has no reason to move.
+    for i in 0..1200 {
+        submit_at(&mut gen, &mut rng, 9.0 * (i as f64) / 1200.0);
+    }
+    // Post-drift phase: keep offering the flipped mix until the token
+    // thread's controller reacts (wall-clock bounded).
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while dep.epoch_switches() == 0 && std::time::Instant::now() < deadline {
+        for i in 0..400 {
+            submit_at(&mut gen, &mut rng, 11.0 + (i as f64) / 400.0);
+        }
+    }
+    assert!(dep.epoch_switches() >= 1, "deployment controller never switched");
+    assert!(dep.epoch_version() >= 1);
+    let token = dep.shutdown();
+    assert_eq!(token.epoch, dep.epoch_version(), "token must carry the installed epoch");
+    // After the shutdown drain every server has applied the full token
+    // history: the witness table converges bit-identically even though
+    // an epoch switched mid-run.
+    let h0 = dep.db(0).table_hash("C_TAB");
+    for s in 1..3 {
+        assert_eq!(dep.db(s).table_hash("C_TAB"), h0, "server {s} diverged on C_TAB");
+    }
+}

@@ -118,6 +118,84 @@ fn token_survives_ring_cuts_without_duplication_or_loss() {
     assert_eq!(executed, 100);
 }
 
+/// Sustained fault load: eight deterministic rounds of burst-then-sever,
+/// each round cutting *every* ring link (including server 0's and links
+/// freshly redialed after the previous round). This is the regression
+/// shape for token loss under repeated crashes: a single custody bug —
+/// one retransmission dropped or double-applied anywhere in the run —
+/// shows up as a gap or duplicate in the belt history, a broken
+/// conservation sum, or diverged replicas.
+#[test]
+fn token_survives_sustained_multi_cut_load() {
+    let n = 3;
+    let app = store_app();
+    let loopback = Arc::new(Loopback::new());
+    let transport: Arc<dyn Transport> = Arc::clone(&loopback) as Arc<dyn Transport>;
+    let cfg = ServeConfig {
+        record_history: true,
+        ack_timeout: Duration::from_millis(5),
+        ..ServeConfig::loopback(n)
+    };
+    let cluster = Cluster::start(Arc::clone(&app), cfg, transport, seed).unwrap();
+    let mut client = cluster.client(Arc::clone(&app)).unwrap();
+
+    let rounds = 8;
+    let per_round = 8i64;
+    let mut rated = 0;
+    for round in 0..rounds {
+        // Distinct cart ids per round so every order clears a fresh cart.
+        rated += burst(&mut client, &app, (round as i64) * 1000, per_round);
+        // Sever everything that is live; later rounds hit reconnected
+        // links, exercising retransmission over fresh connections again
+        // and again.
+        let severed: usize = cluster.ring_addrs().iter().map(|a| loopback.cut(a)).sum();
+        if round == 0 {
+            assert!(severed >= 1, "expected live ring connections to sever");
+        }
+    }
+    cluster.shutdown();
+
+    // Replicas converge despite eight generations of cuts.
+    let tables = replicated_tables(&app);
+    let h0 = replica_hash(cluster.db(0), &tables);
+    for s in 1..n {
+        assert_eq!(replica_hash(cluster.db(s), &tables), h0, "server {s} replica digest");
+    }
+    // Conservation and rating mass at every server.
+    for s in 0..n {
+        let mut score_sum = 0;
+        for i in 0..N_ITEMS {
+            let r = cluster
+                .db(s)
+                .peek("STOCK", &elia::db::Key::single(elia::db::Value::Int(i)))
+                .unwrap();
+            let (level, sold) = (r[1].as_int().unwrap(), r[2].as_int().unwrap());
+            assert!(level >= 0, "item {i} oversold at server {s}");
+            assert_eq!(level + sold, INIT_STOCK, "conservation broken for item {i} at {s}");
+            let rr = cluster
+                .db(s)
+                .peek("RATING", &elia::db::Key::single(elia::db::Value::Int(i)))
+                .unwrap();
+            score_sum += rr[1].as_int().unwrap();
+        }
+        assert_eq!(score_sum, rated, "server {s}: rating mass lost or duplicated");
+    }
+    // Belt history: one entry per executed replicated op (an order and a
+    // rate per burst iteration), seqs contiguous from 1 across all cuts.
+    let history = cluster.global_history();
+    let executed: u64 = (0..n)
+        .map(|s| {
+            cluster.node(s).ops_global.load(Ordering::Relaxed)
+                + cluster.node(s).ops_confluent.load(Ordering::Relaxed)
+        })
+        .sum();
+    assert_eq!(executed, (rounds as u64) * (per_round as u64) * 2);
+    assert_eq!(history.len() as u64, executed, "belt history vs executed replicated ops");
+    for (i, e) in history.iter().enumerate() {
+        assert_eq!(e.seq, i as u64 + 1, "belt history has a gap or duplicate");
+    }
+}
+
 /// Cutting a *client* connection surfaces a transport error on the stub
 /// (at-most-once: the client does not silently re-execute), and a fresh
 /// connection works — the server side survives the disconnect.

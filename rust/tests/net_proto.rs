@@ -83,6 +83,13 @@ fn arb_token(rng: &mut Rng) -> Token {
         }
     }
     t.rotations = rng.range(0, 40) as u64;
+    // Exercise the routing-epoch fields too (live re-partitioning).
+    if rng.chance(0.5) {
+        t.epoch = rng.range(0, 9) as u64;
+        t.epoch_assignment =
+            (0..rng.range(0, 5)).map(|_| rng.range(0, 5) as i64 - 1).collect();
+        t.obs = (0..rng.range(0, 5)).map(|_| rng.range(0, 1000) as u64).collect();
+    }
     t
 }
 
@@ -94,12 +101,17 @@ fn arb_msg(rng: &mut Rng) -> Msg {
             n_servers: rng.range(1, 16) as u32,
             sender: rng.range(0, 16) as u32,
         },
-        1 => Msg::HelloOk { server: rng.range(0, 16) as u32 },
+        1 => Msg::HelloOk {
+            server: rng.range(0, 16) as u32,
+            epoch: rng.range(0, 9) as u64,
+            assignment: (0..rng.range(0, 5)).map(|_| rng.range(0, 5) as i64 - 1).collect(),
+        },
         2 => Msg::Request {
             txn: format!("txn{}", rng.range(0, 20)),
             args: (0..rng.range(0, 5))
                 .map(|i| (format!("p{i}"), arb_value(rng)))
                 .collect(),
+            epoch: rng.range(0, 9) as u64,
         },
         3 => {
             let rows: Vec<Vec<Value>> = (0..rng.range(0, 5))
@@ -111,6 +123,7 @@ fn arb_msg(rng: &mut Rng) -> Msg {
         4 => Msg::ReplyErr(WireError {
             retryable: rng.chance(0.5),
             message: format!("err{}", rng.range(0, 1000)),
+            epoch: if rng.chance(0.5) { Some(rng.range(0, 9) as u64) } else { None },
         }),
         5 => Msg::TokenPass {
             hop: rng.next_u64() >> 1,

@@ -250,6 +250,8 @@ fn assert_identical_k(a: &ConveyorReport, b: &ConveyorReport, ctx: &str) {
     assert_eq!(a.aborts, b.aborts, "aborts differ: {ctx}");
     assert_eq!(a.db_hashes, b.db_hashes, "DB digests differ: {ctx}");
     assert_eq!(a.global_log, b.global_log, "token logs differ: {ctx}");
+    assert_eq!(a.global_log_seqs, b.global_log_seqs, "token log seqs differ: {ctx}");
+    assert_adaptive_identical(a, b, ctx);
     let ua: Vec<u64> = a.utilization.iter().map(|u| u.to_bits()).collect();
     let ub: Vec<u64> = b.utilization.iter().map(|u| u.to_bits()).collect();
     assert_eq!(ua, ub, "utilization differs: {ctx}");
@@ -262,9 +264,21 @@ fn assert_identical(a: &ConveyorReport, b: &ConveyorReport, ctx: &str) {
     assert_eq!(a.aborts, b.aborts, "aborts differ: {ctx}");
     assert_eq!(a.db_hashes, b.db_hashes, "DB digests differ: {ctx}");
     assert_eq!(a.global_log, b.global_log, "token logs differ: {ctx}");
+    assert_eq!(a.global_log_seqs, b.global_log_seqs, "token log seqs differ: {ctx}");
+    assert_adaptive_identical(a, b, ctx);
     let ua: Vec<u64> = a.utilization.iter().map(|u| u.to_bits()).collect();
     let ub: Vec<u64> = b.utilization.iter().map(|u| u.to_bits()).collect();
     assert_eq!(ua, ub, "utilization differs: {ctx}");
+}
+
+/// The adaptive-routing telemetry must be bit-identical too: same
+/// switches, same final epoch, same redirect count, same per-second
+/// drift curve.
+fn assert_adaptive_identical(a: &ConveyorReport, b: &ConveyorReport, ctx: &str) {
+    assert_eq!(a.epoch_switches, b.epoch_switches, "epoch switches differ: {ctx}");
+    assert_eq!(a.final_epoch, b.final_epoch, "final epochs differ: {ctx}");
+    assert_eq!(a.redirects, b.redirects, "redirect counts differ: {ctx}");
+    assert_eq!(a.drift_curve, b.drift_curve, "drift curves differ: {ctx}");
 }
 
 /// Thread counts compared against the 1-thread baseline. `ELIA_PAR_MAX`
@@ -444,6 +458,58 @@ fn client_group_count_invariant_real_execution_digests() {
     for (threads, groups) in k_combos() {
         let (r, _) = run_store(mk(threads, groups), |_| Box::new(MixGen { global_ratio: 0.4 }));
         assert_identical_k(&base, &r, &format!("real threads={threads} groups={groups}"));
+    }
+}
+
+// ---- adaptive routing epochs (drift-schedule invariant) ----
+
+/// Satellite: live routing epochs are deterministic by construction —
+/// clients issue under the immutable epoch 0 while servers re-route at
+/// arrival under the installed epoch, so the *entire* adaptive run
+/// (epoch switches, redirects, drift curve, token log, DB digests) must
+/// be bit-identical across thread and client-group counts. `DriftGen`
+/// is rng- and time-pure, which is what makes the client tier a pure
+/// function of its streams.
+#[test]
+fn adaptive_drift_thread_and_group_invariant() {
+    use elia::analysis::drift::{AdaptiveConfig, DriftConfig};
+    use elia::workload::micro;
+    let run = |threads: usize, groups: usize| {
+        let app = micro::drift_analyzed();
+        let cfg = ConveyorConfig {
+            execute_real: true,
+            record_global_log: true,
+            service: ServiceModel::fixed(1.0),
+            warmup: VTime::from_secs(1),
+            horizon: VTime::from_secs(16),
+            parallel: threads,
+            adaptive: Some(AdaptiveConfig { window_rotations: 32, ..Default::default() }),
+            ..Default::default()
+        };
+        ConveyorSim::new(
+            &app,
+            Topology::lan(3),
+            ClientsConfig {
+                n: 24,
+                think_ms: 10.0,
+                seed: 0xD21F,
+                groups,
+                ..Default::default()
+            },
+            cfg,
+            |_| Box::new(micro::DriftGen::new(DriftConfig::default())),
+            micro::drift_seed,
+        )
+        .run()
+    };
+    let base = run(1, 1);
+    assert!(base.metrics.completed > 1000, "too few completions");
+    assert!(base.epoch_switches >= 1, "the drift must trigger a switch");
+    assert!(base.redirects > 0, "the flipped pin must redirect stale-routed ops");
+    assert!(!base.global_log.is_empty());
+    for (threads, groups) in k_combos() {
+        let r = run(threads, groups);
+        assert_identical_k(&base, &r, &format!("adaptive threads={threads} groups={groups}"));
     }
 }
 
